@@ -1,0 +1,90 @@
+//! Quickstart: the smallest end-to-end taste of KERMIT.
+//!
+//! Generates a short workload trace, discovers the workload types
+//! off-line (Algorithm 2), trains the WorkloadClassifier, classifies a
+//! held-out trace in real time, and tunes one workload with the
+//! Explorer.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use kermit::clustering::NativeDistance;
+use kermit::explorer::baselines::exhaustive;
+use kermit::explorer::Explorer;
+use kermit::knowledge::WorkloadDb;
+use kermit::ml::Classifier;
+use kermit::monitor::{aggregate_trace, MonitorConfig};
+use kermit::offline::{discover, train, DiscoveryConfig, TrainingConfig};
+use kermit::simcluster::config_space::ConfigIndex;
+use kermit::simcluster::perfmodel::job_duration;
+use kermit::util::rng::Rng;
+use kermit::workloadgen::{tour_schedule, Generator};
+
+fn main() {
+    // 1. a day's worth of metrics from three workload types
+    println!("1) generating workload trace (3 classes)...");
+    let mut g = Generator::with_default_config(1);
+    let trace = g.generate(&tour_schedule(400, &[0, 2, 5]));
+    let windows =
+        aggregate_trace(&trace, &MonitorConfig { window_size: 30 });
+    println!("   {} samples -> {} observation windows", trace.len(), windows.len());
+
+    // 2. off-line discovery (Algorithm 2): no labels needed
+    println!("2) discovering workload types (DBSCAN)...");
+    let mut db = WorkloadDb::new();
+    let report = discover(
+        &windows,
+        &mut db,
+        &DiscoveryConfig::default(),
+        &NativeDistance,
+    );
+    println!("   discovered {} workload types:", db.len());
+    for o in &report.outcomes {
+        println!("     {o:?}");
+    }
+
+    // 3. automated training (no human labelling anywhere)
+    println!("3) training the WorkloadClassifier (random forest + ZSL)...");
+    let mut rng = Rng::new(2);
+    let models = train(
+        &windows,
+        &report,
+        &mut db,
+        &TrainingConfig::default(),
+        &mut rng,
+    );
+    println!(
+        "   training set: {} windows ({} incl. synthetic hybrids)",
+        report.window_labels.iter().flatten().count(),
+        models.workload_set_size
+    );
+
+    // 4. real-time classification of a fresh trace
+    println!("4) classifying a held-out trace...");
+    let mut g2 = Generator::with_default_config(99);
+    let t2 = g2.generate(&tour_schedule(150, &[0, 2, 5]));
+    let w2 = aggregate_trace(&t2, &MonitorConfig { window_size: 30 });
+    let hits = w2
+        .iter()
+        .filter(|w| w.truth.is_some())
+        .map(|w| {
+            let aw = kermit::features::AnalyticWindow::from_observation(w);
+            models.workload_forest.predict(&aw.features)
+        })
+        .count();
+    println!("   classified {hits} steady windows in real time");
+
+    // 5. tune one workload with the Explorer
+    println!("5) tuning workload class 2 (terasort-like)...");
+    let mut eval = |c: ConfigIndex| job_duration(2, &c.to_config());
+    let found = Explorer::with_defaults().global_search(&mut eval);
+    let oracle = exhaustive(&mut eval);
+    println!(
+        "   explorer: {:.1}s in {} probes | exhaustive best: {:.1}s in {} probes",
+        found.best_duration, found.probes, oracle.best_duration, oracle.probes
+    );
+    println!(
+        "   tuning efficiency: {:.1}%",
+        100.0 * oracle.best_duration / found.best_duration
+    );
+    println!("\ndone — see examples/autonomic_loop.rs for the full MAPE-K loop");
+}

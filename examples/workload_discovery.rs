@@ -1,0 +1,87 @@
+//! Off-line sub-system walkthrough: Algorithm 2 over successive batches
+//! — new workload discovery, re-matching on recurrence, and drift
+//! detection — with the WorkloadDB persisted between batches like a
+//! real deployment restart.
+//!
+//! Run: `cargo run --release --example workload_discovery`
+
+use kermit::clustering::NativeDistance;
+use kermit::features::NUM_FEATURES;
+use kermit::knowledge::{KnowledgeZones, WorkloadDb};
+use kermit::monitor::{aggregate_trace, MonitorConfig};
+use kermit::offline::{discover, DiscoveryConfig};
+use kermit::workloadgen::{
+    tour_schedule, GenConfig, Generator, Mix, ScheduleEntry,
+};
+
+fn main() -> anyhow::Result<()> {
+    let zones_dir = std::env::temp_dir().join("kermit_discovery_demo");
+    std::fs::remove_dir_all(&zones_dir).ok();
+    let zones = KnowledgeZones::create(&zones_dir)?;
+    let mcfg = MonitorConfig { window_size: 30 };
+    let dcfg = DiscoveryConfig::default();
+
+    // ---- batch 1: three job types, never seen before
+    println!("== batch 1: first sight of classes 0, 2, 5 ==");
+    let mut g = Generator::with_default_config(10);
+    let t1 = g.generate(&tour_schedule(400, &[0, 2, 5]));
+    let w1 = aggregate_trace(&t1, &mcfg);
+    zones.append_windows(&w1)?;
+    let mut db = WorkloadDb::new();
+    let r1 = discover(&w1, &mut db, &dcfg, &NativeDistance);
+    for o in &r1.outcomes {
+        println!("  {o:?}");
+    }
+    db.save(&zones.workload_db_path())?;
+    println!("  -> DB saved with {} workloads\n", db.len());
+
+    // ---- batch 2 (after restart): same classes recur + one new class
+    println!("== batch 2: recurrence of 0, 2 + new class 7 (after restart) ==");
+    let mut db = WorkloadDb::load(&zones.workload_db_path())?;
+    let t2 = g.generate(&tour_schedule(400, &[0, 7, 2]));
+    let w2 = aggregate_trace(&t2, &mcfg);
+    zones.append_windows(&w2)?;
+    let r2 = discover(&w2, &mut db, &dcfg, &NativeDistance);
+    for o in &r2.outcomes {
+        println!("  {o:?}");
+    }
+    println!("  -> DB now has {} workloads\n", db.len());
+
+    // ---- batch 3: class 0 drifts (systematic mean shift)
+    println!("== batch 3: class 0 drifts (systematic shift) ==");
+    let mut cfg = GenConfig::default();
+    let mut rate = [0.0; NUM_FEATURES];
+    rate[0] = 0.05; // cpu_user climbing
+    rate[3] = 0.04; // memory climbing
+    cfg.drift_per_sample = vec![(0, rate)];
+    let mut gd = Generator::new(11, cfg);
+    let td = gd.generate(&[ScheduleEntry {
+        mix: Mix::Pure(0),
+        duration: 600,
+    }]);
+    // analyse only the drifted tail
+    let tail: Vec<_> = td.samples[300..].to_vec();
+    let wd = kermit::monitor::aggregate_samples(&tail, &mcfg);
+    let r3 = discover(&wd, &mut db, &dcfg, &NativeDistance);
+    for o in &r3.outcomes {
+        println!("  {o:?}");
+    }
+    for label in r3.drifted_labels() {
+        let e = db.get(label).unwrap();
+        println!(
+            "  label {label}: is_drifting={} optimal_config_found={}",
+            e.is_drifting, e.optimal_config_found
+        );
+    }
+    db.save(&zones.workload_db_path())?;
+
+    println!("\nfinal WorkloadDB ({} entries):", db.len());
+    for e in db.entries() {
+        println!(
+            "  label {:>2}  windows {:>4}  drifting {:>5}  synthetic {}",
+            e.label, e.window_count, e.is_drifting, e.synthetic
+        );
+    }
+    println!("\nknowledge zones on disk: {}", zones_dir.display());
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT exporter: lower every L2 graph to HLO text + write a manifest.
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that the rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run as `python -m compile.aot --out-dir ../artifacts` from python/ (the
+Makefile does this). Python runs ONCE at build time; the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def i32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def lstm_param_specs():
+    c, h = shapes.MAX_CLASSES, shapes.LSTM_HIDDEN
+    return [f32(c, 4 * h), f32(h, 4 * h), f32(4 * h), f32(h, c), f32(c)]
+
+
+def mlp_param_specs():
+    f, h, c = shapes.MLP_FEATURES, shapes.MLP_HIDDEN, shapes.MAX_CLASSES
+    return [f32(f, h), f32(h), f32(h, c), f32(c)]
+
+
+def graph_specs():
+    """(name, fn, arg_specs) for every artifact."""
+    c = shapes.MAX_CLASSES
+    return [
+        (
+            "pairwise_dist",
+            model.pairwise_dist_graph,
+            [f32(shapes.DIST_N, shapes.DIST_F),
+             f32(shapes.DIST_N, shapes.DIST_F)],
+        ),
+        (
+            "welch_stats",
+            model.welch_stats_graph,
+            [f32(shapes.WELCH_WINDOWS, shapes.WELCH_SAMPLES,
+                 shapes.NUM_FEATURES)],
+        ),
+        (
+            "lstm_fwd",
+            model.lstm_predictor_fwd,
+            lstm_param_specs() + [f32(1, shapes.LSTM_SEQ, c)],
+        ),
+        (
+            "lstm_train",
+            model.lstm_train_step,
+            lstm_param_specs()
+            + [f32(shapes.LSTM_BATCH, shapes.LSTM_SEQ, c),
+               i32(shapes.LSTM_BATCH), f32()],
+        ),
+        (
+            "mlp_fwd",
+            model.mlp_classifier_fwd,
+            mlp_param_specs() + [f32(shapes.MLP_BATCH, shapes.MLP_FEATURES)],
+        ),
+        (
+            "mlp_train",
+            model.mlp_train_step,
+            mlp_param_specs()
+            + [f32(shapes.MLP_BATCH, shapes.MLP_FEATURES),
+               i32(shapes.MLP_BATCH), f32()],
+        ),
+    ]
+
+
+def spec_json(s):
+    return {"dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "constants": {
+            "num_features": shapes.NUM_FEATURES,
+            "analytic_features": shapes.ANALYTIC_FEATURES,
+            "dist_f": shapes.DIST_F,
+            "mlp_features": shapes.MLP_FEATURES,
+            "max_classes": shapes.MAX_CLASSES,
+            "dist_n": shapes.DIST_N,
+            "dist_block": shapes.DIST_BLOCK,
+            "lstm_hidden": shapes.LSTM_HIDDEN,
+            "lstm_seq": shapes.LSTM_SEQ,
+            "lstm_batch": shapes.LSTM_BATCH,
+            "mlp_hidden": shapes.MLP_HIDDEN,
+            "mlp_batch": shapes.MLP_BATCH,
+            "welch_windows": shapes.WELCH_WINDOWS,
+            "welch_samples": shapes.WELCH_SAMPLES,
+        },
+        "artifacts": {},
+    }
+
+    for name, fn, specs in graph_specs():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [spec_json(s) for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

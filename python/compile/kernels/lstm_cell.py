@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: fused LSTM cell.
+
+The WorkloadPredictor (paper §7.2) is an LSTM over the recent label
+sequence. The TPU-friendly formulation computes all four gates with a
+single pair of matmuls against concatenated weights —
+
+    gates = x @ Wx + h @ Wh + b        # [b, 4h], one MXU pass per operand
+
+— then applies the elementwise gate math fused in the same kernel, so the
+intermediate `gates` tensor never round-trips to HBM. Gate order along the
+4H axis is (i, f, g, o), matching ref.lstm_cell.
+
+Shapes here are small (b<=32, h=64): a single grid step with everything
+resident in VMEM (< 200 KiB).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, hn_ref, cn_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    gates = (
+        jax.lax.dot_general(x, wx_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(h, wh_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    hd = h.shape[1]
+    i = gates[:, 0 * hd:1 * hd]
+    f = gates[:, 1 * hd:2 * hd]
+    g = gates[:, 2 * hd:3 * hd]
+    o = gates[:, 3 * hd:4 * hd]
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    hn_ref[...] = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    cn_ref[...] = c_new
+
+
+@jax.jit
+def lstm_cell(x, h, c, wx, wh, b):
+    """One LSTM step: x [b, f], h/c [b, hd], wx [f, 4hd], wh [hd, 4hd],
+    b [4hd] -> (h', c')."""
+    bsz, hd = h.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hd), jnp.float32),
+        ),
+        interpret=True,
+    )(x, h, c, wx, wh, b)

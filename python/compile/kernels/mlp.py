@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: fused dense layer (matmul + bias + optional relu).
+
+Building block for the MLP variant of the WorkloadClassifier (the NN
+comparator in Fig 6). Fusing bias-add and relu into the matmul kernel keeps
+the activation tensor in VMEM instead of bouncing through HBM between ops.
+Batch is tiled over the grid so large inference batches stream through a
+fixed VMEM footprint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(relu):
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        y = jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) + b_ref[...]
+        o_ref[...] = jnp.maximum(y, 0.0) if relu else y
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block"))
+def mlp_layer(x, w, b, *, relu=True, block=None):
+    """x [n, f] @ w [f, h] + b [h], optionally relu'd. `block` tiles the
+    batch axis (must divide n); defaults to the whole batch."""
+    n, f = x.shape
+    h = w.shape[1]
+    blk = block or n
+    assert n % blk == 0, (n, blk)
+    return pl.pallas_call(
+        _make_kernel(relu),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), jnp.float32),
+        interpret=True,
+    )(x, w, b)

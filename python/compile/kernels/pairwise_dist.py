@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: tiled pairwise squared-L2 distance matrix.
+
+The DBSCAN region query in the rust off-line sub-system needs the full
+distance matrix over a batch of observation-window feature vectors. On TPU
+the natural formulation is the matmul identity
+
+    d[i, j] = ||x_i||^2 + ||y_j||^2 - 2 * (x @ y^T)[i, j]
+
+so the dominant term runs on the MXU. The grid tiles the [n, m] output into
+BLOCK x BLOCK panels; each kernel invocation stages one x-row panel and one
+y-row panel through VMEM and emits one output tile. With BLOCK=128 and
+F<=64 the working set is 2*128*F*4 + 128*128*4 ≈ 130 KiB — far inside the
+16 MiB VMEM budget, leaving headroom for double buffering (see
+EXPERIMENTS.md §Perf for the block-size sweep).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which both the pytest
+oracle check and the rust runtime consume.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...]                                      # [bx, f]
+    y = y_ref[...]                                      # [by, f]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)          # [bx, 1]
+    yn = jnp.sum(y * y, axis=1, keepdims=True).T        # [1, by]
+    # MXU term: contract over the feature axis in f32.
+    prod = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = jnp.maximum(xn + yn - 2.0 * prod, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pairwise_sq_dist(x, y, *, block=128):
+    """Pairwise squared distances via a blocked pallas kernel.
+
+    x: [n, f], y: [m, f] with n, m divisible by `block` -> [n, m].
+    """
+    n, f = x.shape
+    m, _ = y.shape
+    assert n % block == 0 and m % block == 0, (n, m, block)
+    grid = (n // block, m // block)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: python/tests/test_kernels.py asserts
+allclose between each pallas kernel (interpret=True) and the function here,
+across hypothesis-generated shapes and values. They are also used directly
+by model.py when a non-pallas reference lowering is wanted.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dist(x, y):
+    """Squared euclidean distance matrix: out[i, j] = ||x_i - y_j||^2.
+
+    Formulated as ||x||^2 + ||y||^2 - 2 x.y^T — the matmul form the pallas
+    kernel tiles for the MXU. Clamped at zero (the subtraction can go
+    slightly negative in f32).
+    """
+    xn = jnp.sum(x * x, axis=1, keepdims=True)          # [n, 1]
+    yn = jnp.sum(y * y, axis=1, keepdims=True).T        # [1, m]
+    d = xn + yn - 2.0 * (x @ y.T)
+    return jnp.maximum(d, 0.0)
+
+
+def lstm_cell(x, h, c, wx, wh, b):
+    """One fused LSTM step. Gate order along the 4H axis: i, f, g, o."""
+    gates = x @ wx + h @ wh + b                         # [b, 4h]
+    hd = h.shape[1]
+    i, f, g, o = (gates[:, k * hd:(k + 1) * hd] for k in range(4))
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def window_stats(windows):
+    """Per-window mean and (population) variance over the sample axis.
+
+    windows: [w, s, f] -> (mean [w, f], var [w, f]).
+    """
+    mean = jnp.mean(windows, axis=1)
+    var = jnp.mean(windows * windows, axis=1) - mean * mean
+    return mean, jnp.maximum(var, 0.0)
+
+
+def mlp_layer(x, w, b, relu=True):
+    """Fused dense (+ optional relu)."""
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: per-observation-window feature statistics.
+
+The ChangeDetector (paper §7.2) runs Welch's t-test between neighbouring
+observation windows; its inputs are the per-window mean and variance of
+each feature. In batch mode (off-line Algorithm 2) KERMIT re-scans the full
+landed time-series, so the reduction is worth a kernel: each grid step
+stages one window [s, f] in VMEM and emits its mean and population variance
+in one pass using the E[x^2] - E[x]^2 identity (single read of the data).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, mean_ref, var_ref):
+    w = w_ref[...]                                       # [1, s, f]
+    s = w.shape[1]
+    sum1 = jnp.sum(w, axis=1)                            # [1, f]
+    sum2 = jnp.sum(w * w, axis=1)                        # [1, f]
+    mean = sum1 / s
+    mean_ref[...] = mean
+    var_ref[...] = jnp.maximum(sum2 / s - mean * mean, 0.0)
+
+
+@jax.jit
+def window_stats(windows):
+    """windows [w, s, f] -> (mean [w, f], var [w, f]); one grid step per
+    window."""
+    w, s, f = windows.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(w,),
+        in_specs=[pl.BlockSpec((1, s, f), lambda i: (i, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((w, f), jnp.float32),
+            jax.ShapeDtypeStruct((w, f), jnp.float32),
+        ),
+        interpret=True,
+    )(windows)

@@ -1,0 +1,120 @@
+"""L2: KERMIT's ML compute graphs, built on the L1 pallas kernels.
+
+Each public function here is a pure jax function lowered once by aot.py to
+an HLO-text artifact that the rust runtime executes via PJRT. Parameters
+are passed as explicit leading arguments (no closures) so the rust side
+owns all state; train steps return updated parameters (functional SGD).
+
+Graphs:
+  * lstm_predictor_fwd  — WorkloadPredictor inference (paper §7.2): one-hot
+    label history -> next-label logits at horizons t+1 (the rust side rolls
+    the sequence forward to get t+5 / t+10).
+  * lstm_train_step     — BPTT + SGD over a minibatch of label sequences.
+  * mlp_classifier_fwd  — NN variant of the WorkloadClassifier (Fig 6).
+  * mlp_train_step      — fwd + bwd + SGD for the MLP.
+  * pairwise_dist_graph — DBSCAN distance-matrix batch (Algorithm 2).
+  * welch_stats_graph   — per-window mean/var for the ChangeDetector.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import shapes
+from .kernels import lstm_cell as k_lstm
+from .kernels import mlp as k_mlp
+from .kernels import pairwise_dist as k_dist
+from .kernels import ref
+from .kernels import window_stats as k_wstats
+
+# Pallas interpret-mode has no reverse-mode autodiff rule, so the *train*
+# graphs run the pure-jnp oracles from kernels/ref.py — bit-compatible with
+# the pallas kernels (enforced by python/tests/test_kernels.py) — while
+# every *inference* graph (the on-line hot path) runs the pallas kernels.
+
+
+# --------------------------------------------------------------------------
+# LSTM workload predictor
+# --------------------------------------------------------------------------
+
+def lstm_apply(wx, wh, b, wo, bo, seq, cell=k_lstm.lstm_cell):
+    """Run the LSTM over seq [b, t, c] one-hot labels; return logits [b, c].
+
+    lax.scan keeps the lowered HLO compact (a While loop) instead of
+    unrolling LSTM_SEQ copies of the cell.
+    """
+    bsz = seq.shape[0]
+    h0 = jnp.zeros((bsz, shapes.LSTM_HIDDEN), jnp.float32)
+    c0 = jnp.zeros((bsz, shapes.LSTM_HIDDEN), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = cell(x_t, h, c, wx, wh, b)
+        return (h, c), None
+
+    (h, _), _ = jax.lax.scan(step, (h0, c0), jnp.swapaxes(seq, 0, 1))
+    return h @ wo + bo
+
+
+def lstm_predictor_fwd(wx, wh, b, wo, bo, seq):
+    """Inference entry point: seq [1, t, c] -> logits [1, c]."""
+    return (lstm_apply(wx, wh, b, wo, bo, seq),)
+
+
+def _lstm_loss(params, seq, labels):
+    wx, wh, b, wo, bo = params
+    logits = lstm_apply(wx, wh, b, wo, bo, seq, cell=ref.lstm_cell)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)
+    return jnp.mean(nll)
+
+
+def lstm_train_step(wx, wh, b, wo, bo, seq, labels, lr):
+    """One SGD step over a minibatch. Returns (loss, *updated params)."""
+    params = (wx, wh, b, wo, bo)
+    loss, grads = jax.value_and_grad(_lstm_loss)(params, seq, labels)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (loss.reshape(1),) + new
+
+
+# --------------------------------------------------------------------------
+# MLP workload classifier (NN comparator in Fig 6)
+# --------------------------------------------------------------------------
+
+def mlp_apply(w1, b1, w2, b2, x, layer=k_mlp.mlp_layer):
+    h = layer(x, w1, b1, relu=True)
+    return layer(h, w2, b2, relu=False)
+
+
+def mlp_classifier_fwd(w1, b1, w2, b2, x):
+    """x [n, f] -> logits [n, c]."""
+    return (mlp_apply(w1, b1, w2, b2, x),)
+
+
+def _mlp_loss(params, x, labels):
+    w1, b1, w2, b2 = params
+    logits = mlp_apply(w1, b1, w2, b2, x, layer=ref.mlp_layer)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)
+    return jnp.mean(nll)
+
+
+def mlp_train_step(w1, b1, w2, b2, x, labels, lr):
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(_mlp_loss)(params, x, labels)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (loss.reshape(1),) + new
+
+
+# --------------------------------------------------------------------------
+# DBSCAN distance batch + Welch window statistics
+# --------------------------------------------------------------------------
+
+def pairwise_dist_graph(x, y):
+    """[n, f] x [m, f] -> squared distances [n, m]."""
+    return (k_dist.pairwise_sq_dist(x, y, block=shapes.DIST_BLOCK),)
+
+
+def welch_stats_graph(windows):
+    """[w, s, f] -> (mean [w, f], var [w, f])."""
+    mean, var = k_wstats.window_stats(windows)
+    return (mean, var)

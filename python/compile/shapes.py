@@ -1,0 +1,41 @@
+"""Fixed AOT shapes shared between the L1/L2 python layer and the rust runtime.
+
+Every artifact is lowered at these exact shapes; the rust side reads them
+back from artifacts/manifest.json (written by aot.py) so the two layers can
+never drift apart silently.
+"""
+
+# Observation-window feature vector width (see DESIGN.md §3: 16 container
+# performance counters — cpu user/sys/iowait, mem used/cache, disk r/w,
+# net rx/tx, ctx switches, page faults, gc time, task queue, shuffle bytes,
+# hdfs read/write).
+NUM_FEATURES = 16
+
+# Workload label space. Labels are generated integers (paper §7.1); the
+# one-hot width bounds how many distinct workload classes the NN components
+# can track. 32 pure+hybrid classes is ample for the paper's workloads.
+MAX_CLASSES = 32
+
+# Analytic-window width: window mean concatenated with window std (the
+# representation the classifiers and DBSCAN operate on — see
+# rust/src/features/mod.rs::AnalyticWindow).
+ANALYTIC_FEATURES = 2 * NUM_FEATURES
+
+# --- pairwise_dist artifact (DBSCAN distance matrix over analytic rows) ---
+DIST_N = 256          # rows per batch tile (rust tiles larger sets over this)
+DIST_F = ANALYTIC_FEATURES
+DIST_BLOCK = 128      # pallas block edge: 2 tiles per grid axis
+
+# --- LSTM workload predictor ---
+LSTM_HIDDEN = 64
+LSTM_SEQ = 16         # label-history length fed to the predictor
+LSTM_BATCH = 32       # training minibatch (sequences)
+
+# --- MLP workload classifier (NN variant benchmarked in Fig 6) ---
+MLP_FEATURES = ANALYTIC_FEATURES
+MLP_HIDDEN = 64
+MLP_BATCH = 256       # inference/training batch (rust pads short batches)
+
+# --- Welch window statistics ---
+WELCH_WINDOWS = 64    # observation windows per batch
+WELCH_SAMPLES = 32    # raw samples aggregated per window

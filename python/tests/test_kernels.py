@@ -1,0 +1,190 @@
+"""L1 correctness: every pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes and values; assert_allclose is the gate. These
+tests are the CORE numeric signal for the whole stack — the rust runtime
+executes exactly the HLO these kernels lower to.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lstm_cell as k_lstm
+from compile.kernels import mlp as k_mlp
+from compile.kernels import pairwise_dist as k_dist
+from compile.kernels import window_stats as k_wstats
+from compile.kernels import ref
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# --------------------------------------------------------------------------
+# pairwise_dist
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 3),            # n blocks
+    st.integers(1, 3),            # m blocks
+    st.sampled_from([4, 16, 17]), # feature dim (incl. non-power-of-2)
+    st.sampled_from([8, 32]),     # block edge
+    st.integers(0, 2**31 - 1),
+)
+def test_pairwise_dist_matches_ref(nb, mb, f, block, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, nb * block, f, scale=2.0)
+    y = rand(rng, mb * block, f, scale=2.0)
+    got = k_dist.pairwise_sq_dist(x, y, block=block)
+    want = ref.pairwise_sq_dist(x, y)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_pairwise_dist_self_zero_diagonal():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 64, 16)
+    d = k_dist.pairwise_sq_dist(x, x, block=32)
+    np.testing.assert_allclose(jnp.diag(d), jnp.zeros(64), atol=1e-4)
+
+
+def test_pairwise_dist_symmetry():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 32, 8)
+    d = k_dist.pairwise_sq_dist(x, x, block=16)
+    np.testing.assert_allclose(d, d.T, atol=1e-4, rtol=1e-4)
+
+
+def test_pairwise_dist_nonnegative():
+    rng = np.random.default_rng(2)
+    # near-duplicate rows provoke negative values in the naive formula
+    x = rand(rng, 32, 4, scale=1e-3)
+    d = k_dist.pairwise_sq_dist(x, x + 1e-7, block=16)
+    assert bool(jnp.all(d >= 0.0))
+
+
+def test_pairwise_dist_known_values():
+    x = jnp.asarray([[0.0, 0.0], [3.0, 4.0]] * 4, jnp.float32)  # 8 rows
+    d = k_dist.pairwise_sq_dist(x, x, block=8)
+    assert pytest.approx(float(d[0, 1]), abs=1e-5) == 25.0
+    assert pytest.approx(float(d[1, 0]), abs=1e-5) == 25.0
+
+
+# --------------------------------------------------------------------------
+# lstm_cell
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 8),                 # batch
+    st.sampled_from([3, 8, 32]),       # input feature dim
+    st.sampled_from([4, 16, 64]),      # hidden
+    st.integers(0, 2**31 - 1),
+)
+def test_lstm_cell_matches_ref(bsz, f, hd, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, bsz, f)
+    h = rand(rng, bsz, hd)
+    c = rand(rng, bsz, hd)
+    wx = rand(rng, f, 4 * hd, scale=0.5)
+    wh = rand(rng, hd, 4 * hd, scale=0.5)
+    b = rand(rng, 4 * hd, scale=0.1)
+    gh, gc = k_lstm.lstm_cell(x, h, c, wx, wh, b)
+    wh_, wc_ = ref.lstm_cell(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(gh, wh_, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(gc, wc_, atol=ATOL, rtol=RTOL)
+
+
+def test_lstm_cell_bounded_h():
+    rng = np.random.default_rng(3)
+    h, _ = k_lstm.lstm_cell(
+        rand(rng, 4, 8, scale=10.0), rand(rng, 4, 16, scale=10.0),
+        rand(rng, 4, 16, scale=10.0), rand(rng, 8, 64, scale=10.0),
+        rand(rng, 16, 64, scale=10.0), rand(rng, 64, scale=10.0),
+    )
+    assert bool(jnp.all(jnp.abs(h) <= 1.0 + 1e-6))  # |sigmoid*tanh| <= 1
+
+
+def test_lstm_cell_zero_forget_drops_state():
+    # f gate driven to ~0 via a huge negative bias -> c' ~= sigmoid(i)tanh(g)
+    bsz, f, hd = 2, 4, 8
+    rng = np.random.default_rng(4)
+    x, h = rand(rng, bsz, f), rand(rng, bsz, hd)
+    c = rand(rng, bsz, hd, scale=100.0)
+    wx = jnp.zeros((f, 4 * hd), jnp.float32)
+    wh = jnp.zeros((hd, 4 * hd), jnp.float32)
+    b = jnp.concatenate([
+        jnp.zeros(hd), jnp.full((hd,), -50.0), jnp.zeros(hd), jnp.zeros(hd)
+    ]).astype(jnp.float32)
+    _, c_new = k_lstm.lstm_cell(x, h, c, wx, wh, b)
+    assert bool(jnp.all(jnp.abs(c_new) <= 0.51))
+
+
+# --------------------------------------------------------------------------
+# window_stats
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 6),              # windows
+    st.sampled_from([2, 8, 32]),    # samples per window
+    st.sampled_from([1, 5, 16]),    # features
+    st.integers(0, 2**31 - 1),
+)
+def test_window_stats_matches_ref(w, s, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, w, s, f, scale=3.0)
+    gm, gv = k_wstats.window_stats(x)
+    wm, wv = ref.window_stats(x)
+    np.testing.assert_allclose(gm, wm, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(gv, wv, atol=1e-4, rtol=1e-4)
+
+
+def test_window_stats_constant_window():
+    x = jnp.full((2, 16, 4), 7.5, jnp.float32)
+    m, v = k_wstats.window_stats(x)
+    np.testing.assert_allclose(m, jnp.full((2, 4), 7.5), atol=1e-6)
+    np.testing.assert_allclose(v, jnp.zeros((2, 4)), atol=1e-6)
+
+
+def test_window_stats_variance_nonnegative():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 4, 8, 3, scale=1e-4) + 1e4  # catastrophic-cancellation bait
+    _, v = k_wstats.window_stats(x)
+    assert bool(jnp.all(v >= 0.0))
+
+
+# --------------------------------------------------------------------------
+# mlp_layer
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 4),              # batch blocks
+    st.sampled_from([4, 16]),       # block
+    st.sampled_from([3, 16]),       # in features
+    st.sampled_from([2, 32]),       # out features
+    st.booleans(),
+    st.integers(0, 2**31 - 1),
+)
+def test_mlp_layer_matches_ref(nb, blk, f, h, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, nb * blk, f)
+    w = rand(rng, f, h, scale=0.5)
+    b = rand(rng, h, scale=0.1)
+    got = k_mlp.mlp_layer(x, w, b, relu=relu, block=blk)
+    want = ref.mlp_layer(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_mlp_layer_relu_clamps():
+    x = jnp.asarray([[-1.0, -2.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    out = k_mlp.mlp_layer(x, w, b, relu=True)
+    np.testing.assert_allclose(out, jnp.zeros((1, 2)), atol=0)

@@ -1,0 +1,67 @@
+"""Artifact bundle integrity: the manifest the rust runtime validates
+against must match shapes.py, and every artifact file must be present
+with its recorded hash (a stale artifacts/ dir is the classic cross-layer
+failure mode)."""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from compile import shapes
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_constants_match_shapes():
+    c = load()["constants"]
+    assert c["num_features"] == shapes.NUM_FEATURES
+    assert c["analytic_features"] == shapes.ANALYTIC_FEATURES
+    assert c["max_classes"] == shapes.MAX_CLASSES
+    assert c["dist_n"] == shapes.DIST_N
+    assert c["dist_f"] == shapes.DIST_F
+    assert c["lstm_hidden"] == shapes.LSTM_HIDDEN
+    assert c["lstm_seq"] == shapes.LSTM_SEQ
+    assert c["mlp_features"] == shapes.MLP_FEATURES
+    assert c["mlp_batch"] == shapes.MLP_BATCH
+    assert c["welch_windows"] == shapes.WELCH_WINDOWS
+    assert c["welch_samples"] == shapes.WELCH_SAMPLES
+
+
+def test_all_artifacts_present_with_matching_hash():
+    m = load()
+    assert set(m["artifacts"]) == {
+        "pairwise_dist", "welch_stats", "lstm_fwd", "lstm_train",
+        "mlp_fwd", "mlp_train",
+    }
+    for name, entry in m["artifacts"].items():
+        path = os.path.join(ART_DIR, entry["file"])
+        assert os.path.exists(path), f"{name} file missing"
+        text = open(path).read()
+        assert "ENTRY" in text, f"{name} is not HLO text"
+        digest = hashlib.sha256(text.encode()).hexdigest()
+        assert digest == entry["sha256"], f"{name} hash mismatch (stale?)"
+
+
+def test_input_shapes_recorded():
+    m = load()
+    pd = m["artifacts"]["pairwise_dist"]["inputs"]
+    assert pd[0]["shape"] == [shapes.DIST_N, shapes.DIST_F]
+    lstm = m["artifacts"]["lstm_fwd"]["inputs"]
+    # last input is the sequence
+    assert lstm[-1]["shape"] == [1, shapes.LSTM_SEQ, shapes.MAX_CLASSES]
+    for entry in m["artifacts"].values():
+        for spec in entry["inputs"]:
+            assert spec["dtype"] in ("float32", "int32")

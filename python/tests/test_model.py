@@ -1,0 +1,120 @@
+"""L2 model graph tests: shapes, loss-decrease sanity, AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, shapes
+from compile.aot import graph_specs, to_hlo_text
+
+
+def lstm_params(rng, scale=0.3):
+    c, h = shapes.MAX_CLASSES, shapes.LSTM_HIDDEN
+    return (
+        jnp.asarray(rng.standard_normal((c, 4 * h), dtype=np.float32) * scale),
+        jnp.asarray(rng.standard_normal((h, 4 * h), dtype=np.float32) * scale),
+        jnp.zeros(4 * h, jnp.float32),
+        jnp.asarray(rng.standard_normal((h, c), dtype=np.float32) * scale),
+        jnp.zeros(c, jnp.float32),
+    )
+
+
+def mlp_params(rng, scale=0.3):
+    f, h, c = shapes.MLP_FEATURES, shapes.MLP_HIDDEN, shapes.MAX_CLASSES
+    return (
+        jnp.asarray(rng.standard_normal((f, h), dtype=np.float32) * scale),
+        jnp.zeros(h, jnp.float32),
+        jnp.asarray(rng.standard_normal((h, c), dtype=np.float32) * scale),
+        jnp.zeros(c, jnp.float32),
+    )
+
+
+def test_lstm_fwd_shape():
+    rng = np.random.default_rng(0)
+    params = lstm_params(rng)
+    seq = jnp.zeros((1, shapes.LSTM_SEQ, shapes.MAX_CLASSES), jnp.float32)
+    (logits,) = model.lstm_predictor_fwd(*params, seq)
+    assert logits.shape == (1, shapes.MAX_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lstm_train_reduces_loss_on_fixed_pattern():
+    rng = np.random.default_rng(1)
+    params = lstm_params(rng)
+    b, t, c = shapes.LSTM_BATCH, shapes.LSTM_SEQ, shapes.MAX_CLASSES
+    # deterministic cyclic pattern: label follows (last + 1) % 5
+    seqs = np.zeros((b, t, c), np.float32)
+    labels = np.zeros(b, np.int32)
+    for i in range(b):
+        start = i % 5
+        lab = [(start + j) % 5 for j in range(t + 1)]
+        for j in range(t):
+            seqs[i, j, lab[j]] = 1.0
+        labels[i] = lab[t]
+    seqs, labels = jnp.asarray(seqs), jnp.asarray(labels)
+    lr = jnp.float32(0.5)
+
+    loss0 = None
+    for step in range(30):
+        out = model.lstm_train_step(*params, seqs, labels, lr)
+        loss = float(out[0][0])
+        if loss0 is None:
+            loss0 = loss
+        params = out[1:]
+    assert loss < loss0 * 0.5, (loss0, loss)
+
+
+def test_mlp_fwd_shape():
+    rng = np.random.default_rng(2)
+    params = mlp_params(rng)
+    x = jnp.zeros((shapes.MLP_BATCH, shapes.MLP_FEATURES), jnp.float32)
+    (logits,) = model.mlp_classifier_fwd(*params, x)
+    assert logits.shape == (shapes.MLP_BATCH, shapes.MAX_CLASSES)
+
+
+def test_mlp_train_learns_separable_data():
+    rng = np.random.default_rng(3)
+    params = mlp_params(rng)
+    b, f = shapes.MLP_BATCH, shapes.MLP_FEATURES
+    labels = np.asarray([i % 4 for i in range(b)], np.int32)
+    x = rng.standard_normal((b, f)).astype(np.float32) * 0.05
+    for i in range(b):
+        x[i, labels[i]] += 3.0  # one strong indicator feature per class
+    x, jlabels = jnp.asarray(x), jnp.asarray(labels)
+    lr = jnp.float32(0.2)
+    for _ in range(60):
+        out = model.mlp_train_step(*params, x, jlabels, lr)
+        params = out[1:]
+    (logits,) = model.mlp_classifier_fwd(*params, x)
+    acc = float(jnp.mean((jnp.argmax(logits, axis=1) == jlabels)))
+    assert acc > 0.95, acc
+
+
+def test_pairwise_dist_graph_matches_bruteforce():
+    rng = np.random.default_rng(4)
+    n, f = shapes.DIST_N, shapes.DIST_F
+    x = jnp.asarray(rng.standard_normal((n, f), dtype=np.float32))
+    (d,) = model.pairwise_dist_graph(x, x)
+    brute = np.sum((np.asarray(x)[:, None, :] - np.asarray(x)[None, :, :]) ** 2, axis=2)
+    np.testing.assert_allclose(d, brute, atol=1e-2, rtol=1e-3)
+
+
+def test_welch_stats_graph():
+    rng = np.random.default_rng(5)
+    w, s, f = shapes.WELCH_WINDOWS, shapes.WELCH_SAMPLES, shapes.NUM_FEATURES
+    x = jnp.asarray(rng.standard_normal((w, s, f), dtype=np.float32))
+    mean, var = model.welch_stats_graph(x)
+    np.testing.assert_allclose(mean, np.asarray(x).mean(axis=1), atol=1e-5)
+    np.testing.assert_allclose(var, np.asarray(x).var(axis=1), atol=1e-4)
+
+
+@pytest.mark.parametrize("name", [g[0] for g in graph_specs()])
+def test_all_graphs_lower_to_hlo_text(name):
+    """Every artifact graph must lower to parseable HLO text (the exact
+    bytes the rust runtime loads)."""
+    spec = {g[0]: g for g in graph_specs()}[name]
+    _, fn, args = spec
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text and len(text) > 100

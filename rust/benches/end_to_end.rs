@@ -1,0 +1,83 @@
+//! End-to-end autonomic loop: KERMIT vs default config vs rule-of-thumb
+//! vs oracle, on a recurring multi-workload "day" — the integration of
+//! every sub-system (discovery, classification, prediction, Algorithm 1,
+//! Explorer sessions, drift handling).
+
+use kermit::benchkit::{pct, Table};
+use kermit::coordinator::{
+    run_fixed_config, run_oracle, Coordinator, CoordinatorConfig,
+};
+use kermit::explorer::baselines::rule_of_thumb;
+use kermit::simcluster::{default_config_index, JobSpec};
+use kermit::workloadgen::Mix;
+
+fn main() {
+    println!("\n== End-to-end autonomic loop (recurring day) ==\n");
+    let classes = [0u32, 3, 5];
+    let cycles = 60;
+    let mut jobs = Vec::new();
+    for _ in 0..cycles {
+        for &c in &classes {
+            jobs.push(JobSpec { mix: Mix::Pure(c) });
+        }
+    }
+    println!(
+        "schedule: {} jobs ({} classes x {} cycles)",
+        jobs.len(),
+        classes.len(),
+        cycles
+    );
+
+    let mut cfg = CoordinatorConfig::default();
+    cfg.offline_interval_windows = 12;
+    cfg.engine.duration_noise = 0.02;
+    let mut coord = Coordinator::new(cfg.clone());
+    // the on-line operating point (see EXPERIMENTS.md budget ablation)
+    coord.plugin.explorer_config.global_budget = 22;
+    coord.plugin.explorer_config.local_budget = 10;
+
+    let t0 = std::time::Instant::now();
+    let kermit = coord.run_schedule(&jobs);
+    let wall = t0.elapsed();
+    let default =
+        run_fixed_config(&jobs, default_config_index(), &cfg.engine, 7);
+    let rot = run_fixed_config(&jobs, rule_of_thumb(), &cfg.engine, 7);
+    let oracle = run_oracle(&jobs, &cfg.engine, 7);
+
+    let mut t = Table::new(&[
+        "policy", "makespan(s)", "mean job(s)", "steady state(s)",
+        "vs default", "% of oracle",
+    ]);
+    for (name, r) in [
+        ("kermit", &kermit),
+        ("default", &default),
+        ("rule-of-thumb", &rot),
+        ("oracle", &oracle),
+    ] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", r.makespan),
+            format!("{:.1}", r.mean_duration()),
+            format!("{:.1}", r.tail_mean_duration(20)),
+            pct(1.0 - r.makespan / default.makespan),
+            pct(oracle.tail_mean_duration(20) / r.tail_mean_duration(20)),
+        ]);
+    }
+    t.print();
+
+    println!("\nplugin: {:?}", kermit.plugin_stats);
+    println!(
+        "workloads known: {}  label consistency: {}",
+        kermit.workloads_known,
+        pct(kermit.classification_consistency())
+    );
+    println!(
+        "steady-state tuning efficiency vs oracle: {}",
+        pct(oracle.tail_mean_duration(20) / kermit.tail_mean_duration(20))
+    );
+    println!(
+        "steady-state gain vs rule-of-thumb: {}",
+        pct(1.0 - kermit.tail_mean_duration(20) / rot.tail_mean_duration(20))
+    );
+    println!("simulation wall-clock: {:.2?}", wall);
+}

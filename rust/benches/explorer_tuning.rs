@@ -1,0 +1,78 @@
+//! Headline tuning claims: Explorer ≥30% faster than rule-of-thumb,
+//! ≥92% of exhaustive-best ("tuning efficiency"), at <1% of the probe
+//! cost — per workload class, under measurement noise.
+
+use kermit::benchkit::{bench, pct, Table};
+use kermit::experiments::explorer_table::{run, summarize};
+use kermit::explorer::Explorer;
+use kermit::simcluster::config_space::ConfigIndex;
+use kermit::simcluster::perfmodel::job_duration;
+
+fn main() {
+    println!("\n== Explorer tuning efficiency (paper §1/§6.4) ==");
+    println!("paper: 30% faster than rule-of-thumb, up to 92.5% of best\n");
+    let rows = run(0, 0.03);
+    let mut t = Table::new(&[
+        "class", "default(s)", "rule-of-thumb(s)", "random(s)",
+        "explorer(s)", "oracle(s)", "probes", "efficiency", "vs RoT",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.class.to_string(),
+            format!("{:.1}", r.default_s),
+            format!("{:.1}", r.rot_s),
+            format!("{:.1}", r.random_s),
+            format!("{:.1}", r.explorer_s),
+            format!("{:.1}", r.oracle_s),
+            r.explorer_probes.to_string(),
+            pct(r.efficiency),
+            pct(r.vs_rot),
+        ]);
+    }
+    t.print();
+    let s = summarize(&rows);
+    println!(
+        "\nmean efficiency {} (max {}) | mean vs rule-of-thumb {} (max {}) | mean probes {:.0} of {} grid points",
+        pct(s.mean_efficiency),
+        pct(s.max_efficiency),
+        pct(s.mean_vs_rot),
+        pct(s.max_vs_rot),
+        s.mean_probes,
+        ConfigIndex::grid_size(),
+    );
+
+    // --- ablation: probe budget vs tuning efficiency (noise-free) ----
+    println!("\n-- budget ablation (mean/min efficiency across classes) --");
+    let oracle: Vec<f64> = (0..10u32)
+        .map(|c| {
+            let mut e = |ci: ConfigIndex| job_duration(c, &ci.to_config());
+            kermit::explorer::baselines::exhaustive(&mut e).best_duration
+        })
+        .collect();
+    let mut ta = Table::new(&["budget", "mean_eff", "min_eff"]);
+    for budget in [12usize, 16, 20, 25, 30, 40, 60, 90, 140] {
+        let mut effs = Vec::new();
+        for c in 0..10u32 {
+            let mut e = |ci: ConfigIndex| job_duration(c, &ci.to_config());
+            let ex = Explorer::new(kermit::explorer::ExplorerConfig {
+                global_budget: budget,
+                local_budget: 16,
+                min_improvement: 0.002,
+            });
+            let r = ex.global_search(&mut e);
+            effs.push(oracle[c as usize] / r.best_duration);
+        }
+        let mean = effs.iter().sum::<f64>() / effs.len() as f64;
+        let min = effs.iter().copied().fold(f64::INFINITY, f64::min);
+        ta.row(&[budget.to_string(), pct(mean), pct(min)]);
+    }
+    ta.print();
+
+    // search wall-clock (the coordinator-side overhead, excl. job runs)
+    let timing = bench(1, 5, || {
+        let ex = Explorer::with_defaults();
+        let mut eval = |c: ConfigIndex| job_duration(2, &c.to_config());
+        std::hint::black_box(ex.global_search(&mut eval));
+    });
+    println!("\nexplorer search wall-clock: {}", timing.per_iter_str());
+}

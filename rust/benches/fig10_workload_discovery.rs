@@ -1,0 +1,64 @@
+//! Figure 10 reproduction: workload discovery quality (Awt + Purity)
+//! for DBSCAN vs k-means vs agglomerative, native and artifact-backed
+//! distance paths.
+
+use kermit::benchkit::{bench, pct, Table};
+use kermit::clustering::{dbscan, DbscanConfig, NativeDistance};
+use kermit::experiments::fig10;
+use kermit::runtime::{nn::ArtifactDistance, Runtime};
+
+fn main() {
+    println!("\n== Fig 10: workload discovery (clustering) quality ==");
+    println!("paper: Awt + Purity per algorithm; DBSCAN is KERMIT's choice\n");
+    let mut t = Table::new(&[
+        "algorithm", "Awt", "Purity", "clusters", "true_classes",
+    ]);
+    for r in fig10::run(17) {
+        t.row(&[
+            r.algorithm.to_string(),
+            pct(r.awt),
+            pct(r.purity),
+            r.clusters_found.to_string(),
+            r.true_classes.to_string(),
+        ]);
+    }
+    t.print();
+
+    // artifact-backed DBSCAN (pallas pairwise_dist kernel through PJRT)
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => {
+            let ad = ArtifactDistance::new(&rt).unwrap();
+            let rows = fig10::run_with_distance(17, &ad);
+            let db = rows.iter().find(|r| r.algorithm == "dbscan").unwrap();
+            println!(
+                "\ndbscan w/ pallas pairwise_dist artifact: Awt {} Purity {}",
+                pct(db.awt),
+                pct(db.purity)
+            );
+
+            // timing: native vs artifact distance on a discovery batch
+            let (rows_data, _) = fig10::discovery_data(17, &[0, 2, 3, 5]);
+            let tn = bench(1, 5, || {
+                std::hint::black_box(dbscan(
+                    &rows_data,
+                    &DbscanConfig { eps: 10.0, min_pts: 4 },
+                    &NativeDistance,
+                ));
+            });
+            let ta = bench(1, 5, || {
+                std::hint::black_box(dbscan(
+                    &rows_data,
+                    &DbscanConfig { eps: 10.0, min_pts: 4 },
+                    &ad,
+                ));
+            });
+            println!(
+                "dbscan on {} windows: native {} | artifact {}",
+                rows_data.len(),
+                tn.per_iter_str(),
+                ta.per_iter_str()
+            );
+        }
+        Err(e) => println!("(artifact path skipped: {e})"),
+    }
+}

@@ -1,0 +1,58 @@
+//! Figure 6 reproduction: workload-classification accuracy across ML
+//! algorithms, plus the MLP artifact variant (PJRT path) and per-
+//! algorithm inference timing.
+
+use kermit::benchkit::{bench, pct, Table};
+use kermit::experiments::fig6;
+use kermit::ml::forest::{ForestConfig, RandomForest};
+use kermit::ml::{accuracy, Classifier};
+use kermit::online::classifier::WindowClassifier;
+use kermit::runtime::{nn::MlpClassifier, Runtime};
+use kermit::util::rng::Rng;
+
+fn main() {
+    println!("\n== Fig 6: workload classification accuracy by algorithm ==");
+    println!("paper: random forest best, ~90%+ accuracy\n");
+    let data = fig6::data(42);
+    println!(
+        "dataset: {} train / {} test windows, {} classes",
+        data.train.len(),
+        data.test.len(),
+        data.train.classes().len()
+    );
+
+    let rows = fig6::run(&data, 42);
+    let mut t = Table::new(&["algorithm", "accuracy", "macro_f1"]);
+    for r in &rows {
+        t.row(&[r.algorithm.to_string(), pct(r.accuracy), pct(r.macro_f1)]);
+    }
+
+    // MLP artifact variant (the NN comparator through PJRT)
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => {
+            let mlp = MlpClassifier::new(&rt, 0).unwrap();
+            mlp.fit(&data.train, 30, 0.05, 1).unwrap();
+            let preds: Vec<u32> = data
+                .test
+                .rows
+                .iter()
+                .map(|r| mlp.classify(r))
+                .collect();
+            let acc = accuracy(&data.test.labels, &preds);
+            t.row(&["mlp (pjrt artifact)".into(), pct(acc), "-".into()]);
+        }
+        Err(e) => println!("(mlp artifact skipped: {e})"),
+    }
+    t.print();
+
+    // inference timing: the on-line hot path
+    println!("\n-- inference latency (single window) --");
+    let mut rng = Rng::new(7);
+    let forest =
+        RandomForest::fit(&data.train, ForestConfig::default(), &mut rng);
+    let probe = data.test.rows[0].clone();
+    let timing = bench(10, 100, || {
+        std::hint::black_box(forest.predict(&probe));
+    });
+    println!("  random forest: {}", timing.per_iter_str());
+}

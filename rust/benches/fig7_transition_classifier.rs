@@ -1,0 +1,29 @@
+//! Figure 7 reproduction: TransitionClassifier accuracy on rate-of-
+//! change features, with the raw-feature ablation.
+
+use kermit::benchkit::{pct, Table};
+use kermit::experiments::fig7;
+
+fn main() {
+    println!("\n== Fig 7: TransitionClassifier performance ==");
+    println!("paper: random forest on rate-of-change features\n");
+    let mut t = Table::new(&[
+        "seed", "transition_types", "accuracy(ROC)", "macroF1(ROC)",
+        "accuracy(raw ablation)",
+    ]);
+    let mut accs = Vec::new();
+    for seed in [3u64, 11, 29] {
+        let r = fig7::run(seed);
+        accs.push(r.accuracy_roc);
+        t.row(&[
+            seed.to_string(),
+            r.n_transition_types.to_string(),
+            pct(r.accuracy_roc),
+            pct(r.f1_roc),
+            pct(r.accuracy_raw),
+        ]);
+    }
+    t.print();
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    println!("\nmean ROC accuracy: {}", pct(mean));
+}

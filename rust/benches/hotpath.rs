@@ -1,0 +1,120 @@
+//! Hot-path micro-benchmarks (§Perf): the on-line pipeline stages that
+//! must never become the bottleneck — window aggregation, change
+//! detection, classification, context publication — plus the PJRT
+//! execution costs of each artifact.
+
+use kermit::benchkit::{bench, fmt_ns, Table};
+use kermit::experiments::fig6;
+use kermit::features::AnalyticWindow;
+use kermit::ml::forest::{ForestConfig, RandomForest};
+use kermit::ml::Classifier;
+use kermit::monitor::{aggregate_samples, MonitorConfig};
+use kermit::online::{ContextStream, OnlinePipeline};
+use kermit::online::classifier::ForestWindowClassifier;
+use kermit::runtime::{literal_f32, shapes, Runtime};
+use kermit::util::rng::Rng;
+use kermit::workloadgen::{tour_schedule, Generator};
+use std::sync::{Arc, Mutex};
+
+fn main() {
+    println!("\n== Hot-path micro-benchmarks (§Perf) ==\n");
+    let mut t = Table::new(&["stage", "latency", "throughput"]);
+
+    // --- window aggregation (KWmon)
+    let mut g = Generator::with_default_config(0);
+    let trace = g.generate(&tour_schedule(3000, &[0, 2]));
+    let mcfg = MonitorConfig { window_size: 30 };
+    let tm = bench(3, 20, || {
+        std::hint::black_box(aggregate_samples(&trace.samples, &mcfg));
+    });
+
+    t.row(&[
+        "aggregate 6k samples -> 200 windows".into(),
+        tm.per_iter_str(),
+        format!(
+            "{:.1}M samples/s",
+            trace.len() as f64 / (tm.median_ns / 1e9) / 1e6
+        ),
+    ]);
+
+    // --- full online pipeline per window (detector+forest+predictor)
+    let data = fig6::data(42);
+    let mut rng = Rng::new(7);
+    let forest =
+        RandomForest::fit(&data.train, ForestConfig::default(), &mut rng);
+    let ctx = Arc::new(Mutex::new(ContextStream::new(64)));
+    let mut pipe = OnlinePipeline::new(ctx);
+    pipe.set_classifier(Box::new(ForestWindowClassifier::new(
+        forest.clone(),
+        0.5,
+    )));
+    let windows = aggregate_samples(&trace.samples, &mcfg);
+    let mut i = 0usize;
+    let tp = bench(50, 2000, || {
+        std::hint::black_box(pipe.observe(&windows[i % windows.len()]));
+        i += 1;
+    });
+    t.row(&[
+        "online pipeline observe(window)".into(),
+        tp.per_iter_str(),
+        format!("{:.0}k windows/s", 1e9 / tp.median_ns / 1e3),
+    ]);
+
+    // --- forest inference alone
+    let probe = AnalyticWindow::from_observation(&windows[0]).features;
+    let tf = bench(50, 2000, || {
+        std::hint::black_box(forest.predict(&probe));
+    });
+    t.row(&[
+        "random forest predict".into(),
+        tf.per_iter_str(),
+        format!("{:.0}k preds/s", 1e9 / tf.median_ns / 1e3),
+    ]);
+
+    t.print();
+
+    // --- PJRT artifact execution costs
+    println!("\n-- PJRT artifact execution --");
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => {
+            let mut t2 = Table::new(&["artifact", "exec latency"]);
+            let mut rng = Rng::new(1);
+            // pairwise_dist
+            let n = shapes::DIST_N;
+            let f = shapes::DIST_F;
+            let x: Vec<f64> =
+                (0..n * f).map(|_| rng.range_f64(0.0, 10.0)).collect();
+            let art = rt.get("pairwise_dist").unwrap();
+            let lx = literal_f32(&x, &[n as i64, f as i64]).unwrap();
+            let ly = literal_f32(&x, &[n as i64, f as i64]).unwrap();
+            let td = bench(3, 20, || {
+                std::hint::black_box(
+                    art.run(&[lx.clone(), ly.clone()]).unwrap(),
+                );
+            });
+            t2.row(&["pairwise_dist 256x256".into(), td.per_iter_str()]);
+
+            // welch_stats
+            let (w, s, nf) = (
+                shapes::WELCH_WINDOWS,
+                shapes::WELCH_SAMPLES,
+                shapes::NUM_FEATURES,
+            );
+            let xs: Vec<f64> =
+                (0..w * s * nf).map(|_| rng.normal_ms(5.0, 2.0)).collect();
+            let art = rt.get("welch_stats").unwrap();
+            let lw =
+                literal_f32(&xs, &[w as i64, s as i64, nf as i64]).unwrap();
+            let tw = bench(3, 20, || {
+                std::hint::black_box(art.run(&[lw.clone()]).unwrap());
+            });
+            t2.row(&["welch_stats 64 windows".into(), tw.per_iter_str()]);
+            t2.print();
+            println!(
+                "\nper-window amortized welch via artifact: {}",
+                fmt_ns(tw.median_ns / w as f64)
+            );
+        }
+        Err(e) => println!("(artifacts skipped: {e})"),
+    }
+}

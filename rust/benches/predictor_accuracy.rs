@@ -1,0 +1,68 @@
+//! Workload-type prediction accuracy (paper: up to 96%): the LSTM
+//! artifact vs Markov vs persistence, at horizons t+1 / t+5 / t+10.
+
+use kermit::benchkit::{bench, pct, Table};
+use kermit::experiments::predictor::{
+    run_native, score_predictor, standard_scenario,
+};
+use kermit::online::predictor::LabelPredictor;
+use kermit::runtime::{nn::LstmPredictor, Runtime};
+
+fn main() {
+    println!("\n== WorkloadPredictor accuracy (paper §8: up to 96%) ==\n");
+    let (train, test) = standard_scenario(5);
+    println!(
+        "scenario: recurring 5-job rotation with 6% ad-hoc noise; {} train / {} test labels",
+        train.len(),
+        test.len()
+    );
+
+    let mut t = Table::new(&["predictor", "t+1", "t+5", "t+10"]);
+    let rows = run_native(&train, &test);
+    for name in ["markov", "last_value"] {
+        let cells: Vec<String> = [1usize, 5, 10]
+            .iter()
+            .map(|&h| {
+                pct(rows
+                    .iter()
+                    .find(|r| r.predictor == name && r.horizon == h)
+                    .unwrap()
+                    .accuracy)
+            })
+            .collect();
+        t.row(&[
+            name.to_string(),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+        ]);
+    }
+
+    match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => {
+            let lstm = LstmPredictor::new(&rt, 0).unwrap();
+            let loss = lstm.train_on_sequence(&train, 25, 0.4, 1).unwrap();
+            let scores = score_predictor(&lstm, &test);
+            t.row(&[
+                "lstm (pjrt artifact)".to_string(),
+                pct(scores[0].1),
+                pct(scores[1].1),
+                pct(scores[2].1),
+            ]);
+            println!("lstm final training loss: {loss:.3}");
+
+            t.print();
+
+            // prediction latency through PJRT (on-line path)
+            let hist: Vec<u32> = test[..32.min(test.len())].to_vec();
+            let timing = bench(3, 20, || {
+                std::hint::black_box(lstm.predict(&hist, 1));
+            });
+            println!("\nlstm artifact prediction latency: {}", timing.per_iter_str());
+        }
+        Err(e) => {
+            t.print();
+            println!("(lstm artifact skipped: {e})");
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Zero-shot hybrid-workload classification (paper/[9]: up to 83% on
+//! unseen multi-user workloads), with the no-synthesizer ablation.
+
+use kermit::benchkit::{pct, Table};
+use kermit::experiments::zsl;
+
+fn main() {
+    println!("\n== ZSL: anticipating unseen hybrid workloads ==");
+    println!("paper [9]: classify unseen hybrids with up to 83% accuracy\n");
+    let mut t = Table::new(&[
+        "seed", "hybrid_tests", "zsl_accuracy", "ablation(no synth)",
+        "pure_accuracy",
+    ]);
+    let mut best = 0.0f64;
+    for seed in [3u64, 7, 13] {
+        let r = zsl::run(seed);
+        best = best.max(r.zsl_accuracy);
+        t.row(&[
+            seed.to_string(),
+            r.n_hybrid_tests.to_string(),
+            pct(r.zsl_accuracy),
+            pct(r.ablation_accuracy),
+            pct(r.pure_accuracy),
+        ]);
+    }
+    t.print();
+    println!("\nbest zsl accuracy: {} (paper: up to 83%)", pct(best));
+}

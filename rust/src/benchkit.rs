@@ -1,0 +1,136 @@
+//! Minimal benchmark harness (the offline crate set has no criterion).
+//!
+//! Used by every `rust/benches/*.rs` target (all `harness = false`):
+//! wall-clock timing with warmup + repeated samples, median/MAD
+//! statistics, and aligned table printing for the paper-figure outputs.
+
+use std::time::Instant;
+
+/// Timing summary over n samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub samples: usize,
+}
+
+impl Timing {
+    pub fn per_iter_str(&self) -> String {
+        fmt_ns(self.median_ns) + " ± " + &fmt_ns(self.mad_ns)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` (whole-call), `samples` times after `warmup` calls; returns
+/// median/MAD per call.
+pub fn bench<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mut devs: Vec<f64> =
+        times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        median_ns: median,
+        mad_ns: devs[devs.len() / 2],
+        samples,
+    }
+}
+
+/// Aligned table printer for figure/table reproduction output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", cols.join("  "));
+        };
+        line(&self.headers);
+        let total: usize =
+            widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        println!("  {}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Percent formatter.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let t = bench(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.median_ns > 0.0);
+        assert_eq!(t.samples, 5);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains('s'));
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // just must not panic
+    }
+}

@@ -1,0 +1,137 @@
+//! Agglomerative (hierarchical) clustering baseline for Fig 10:
+//! average-linkage bottom-up merging with a distance cut-off, via the
+//! Lance–Williams update on a dense distance matrix. O(n^3) worst case —
+//! fine for discovery-batch sizes (hundreds of windows).
+
+use super::DistanceProvider;
+
+#[derive(Debug, Clone)]
+pub struct AggloResult {
+    pub labels: Vec<i32>,
+    pub n_clusters: usize,
+}
+
+/// Average-linkage agglomerative clustering; merging stops when the
+/// closest pair of clusters is farther than `cut_distance` apart.
+pub fn agglomerative(
+    rows: &[Vec<f64>],
+    cut_distance: f64,
+    dist: &dyn DistanceProvider,
+) -> AggloResult {
+    let n = rows.len();
+    if n == 0 {
+        return AggloResult { labels: vec![], n_clusters: 0 };
+    }
+    // working matrix of *distances* (not squared) between live clusters
+    let sq = dist.pairwise_sq(rows);
+    let mut d: Vec<f64> = sq.iter().map(|&x| x.sqrt()).collect();
+    let mut alive: Vec<bool> = vec![true; n];
+    let mut size: Vec<f64> = vec![1.0; n];
+    // union-find style parent chain for final labelling
+    let mut merged_into: Vec<usize> = (0..n).collect();
+
+    let mut live = n;
+    while live > 1 {
+        // find closest live pair
+        let mut best = (usize::MAX, usize::MAX, f64::INFINITY);
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            for j in (i + 1)..n {
+                if !alive[j] {
+                    continue;
+                }
+                let dij = d[i * n + j];
+                if dij < best.2 {
+                    best = (i, j, dij);
+                }
+            }
+        }
+        let (a, b, dab) = best;
+        if dab > cut_distance {
+            break;
+        }
+        // merge b into a; average linkage Lance-Williams:
+        // d(a∪b, k) = (|a| d(a,k) + |b| d(b,k)) / (|a|+|b|)
+        for k in 0..n {
+            if !alive[k] || k == a || k == b {
+                continue;
+            }
+            let dak = d[a * n + k];
+            let dbk = d[b * n + k];
+            let new = (size[a] * dak + size[b] * dbk) / (size[a] + size[b]);
+            d[a * n + k] = new;
+            d[k * n + a] = new;
+        }
+        size[a] += size[b];
+        alive[b] = false;
+        merged_into[b] = a;
+        live -= 1;
+    }
+
+    // resolve roots and compact labels
+    fn root(m: &[usize], mut i: usize) -> usize {
+        while m[i] != i {
+            i = m[i];
+        }
+        i
+    }
+    let mut label_of_root = std::collections::BTreeMap::new();
+    let mut labels = vec![0i32; n];
+    let mut next = 0i32;
+    for i in 0..n {
+        let r = root(&merged_into, i);
+        let l = *label_of_root.entry(r).or_insert_with(|| {
+            let l = next;
+            next += 1;
+            l
+        });
+        labels[i] = l;
+    }
+    AggloResult { labels, n_clusters: next as usize }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::NativeDistance;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn merges_tight_blobs_keeps_far_ones_apart() {
+        let mut rng = Rng::new(0);
+        let mut rows = vec![];
+        for &(cx, cy) in &[(0.0, 0.0), (20.0, 0.0), (0.0, 20.0)] {
+            for _ in 0..20 {
+                rows.push(vec![rng.normal_ms(cx, 0.4), rng.normal_ms(cy, 0.4)]);
+            }
+        }
+        let r = agglomerative(&rows, 6.0, &NativeDistance);
+        assert_eq!(r.n_clusters, 3);
+        for g in 0..3 {
+            let ls = &r.labels[g * 20..(g + 1) * 20];
+            assert!(ls.iter().all(|&l| l == ls[0]));
+        }
+    }
+
+    #[test]
+    fn cut_zero_keeps_singletons() {
+        let rows = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let r = agglomerative(&rows, 0.5, &NativeDistance);
+        assert_eq!(r.n_clusters, 3);
+    }
+
+    #[test]
+    fn cut_infinite_merges_all() {
+        let rows = vec![vec![0.0], vec![100.0], vec![200.0]];
+        let r = agglomerative(&rows, f64::INFINITY, &NativeDistance);
+        assert_eq!(r.n_clusters, 1);
+    }
+
+    #[test]
+    fn empty_input() {
+        let r = agglomerative(&[], 1.0, &NativeDistance);
+        assert_eq!(r.n_clusters, 0);
+    }
+}

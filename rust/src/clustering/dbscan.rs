@@ -1,0 +1,208 @@
+//! DBSCAN over a precomputed distance matrix — KERMIT's workload
+//! discovery algorithm (Algorithm 2: "run DBSCAN on {O_t} to get a set
+//! of clusters"; each cluster is a distinct workload type).
+//!
+//! The matrix-based formulation lets discovery batches route the O(n^2)
+//! distance computation through the `pairwise_dist` PJRT artifact (the
+//! L1 pallas kernel) — see `offline::discovery`.
+
+use super::DistanceProvider;
+
+/// Cluster id assigned to noise points.
+pub const NOISE: i32 = -1;
+
+#[derive(Debug, Clone)]
+pub struct DbscanConfig {
+    /// Neighbourhood radius (on *distances*, not squared — config is in
+    /// the same units as the feature space).
+    pub eps: f64,
+    /// Minimum neighbourhood size (including the point itself) for a
+    /// core point. The paper's µ hyper-parameter.
+    pub min_pts: usize,
+}
+
+impl Default for DbscanConfig {
+    fn default() -> Self {
+        // µ default per the paper's "well-documented defaults" remark:
+        // min_pts ≈ 2 * dim is the literature rule; eps is data-scale
+        // dependent and set by callers.
+        DbscanConfig { eps: 10.0, min_pts: 5 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DbscanResult {
+    /// Cluster id per row; NOISE (-1) for outliers, else 0..n_clusters.
+    pub labels: Vec<i32>,
+    pub n_clusters: usize,
+}
+
+impl DbscanResult {
+    /// Row indices of cluster `c`.
+    pub fn members(&self, c: i32) -> Vec<usize> {
+        self.labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l == c)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Classic DBSCAN (Ester et al.) with BFS cluster expansion.
+pub fn dbscan(
+    rows: &[Vec<f64>],
+    config: &DbscanConfig,
+    dist: &dyn DistanceProvider,
+) -> DbscanResult {
+    let n = rows.len();
+    if n == 0 {
+        return DbscanResult { labels: vec![], n_clusters: 0 };
+    }
+    let d = dist.pairwise_sq(rows);
+    let eps_sq = config.eps * config.eps;
+
+    // neighbour lists
+    let neighbours: Vec<Vec<usize>> = (0..n)
+        .map(|i| {
+            (0..n)
+                .filter(|&j| d[i * n + j] <= eps_sq)
+                .collect()
+        })
+        .collect();
+    let is_core: Vec<bool> =
+        neighbours.iter().map(|nb| nb.len() >= config.min_pts).collect();
+
+    const UNVISITED: i32 = -2;
+    let mut labels = vec![UNVISITED; n];
+    let mut cluster = 0i32;
+
+    for i in 0..n {
+        if labels[i] != UNVISITED || !is_core[i] {
+            continue;
+        }
+        // expand new cluster from core point i
+        labels[i] = cluster;
+        let mut queue: Vec<usize> = neighbours[i].clone();
+        while let Some(j) = queue.pop() {
+            if labels[j] == NOISE {
+                labels[j] = cluster; // border point adopted
+            }
+            if labels[j] != UNVISITED {
+                continue;
+            }
+            labels[j] = cluster;
+            if is_core[j] {
+                queue.extend(neighbours[j].iter().copied());
+            }
+        }
+        cluster += 1;
+    }
+    // remaining unvisited points are noise
+    for l in labels.iter_mut() {
+        if *l == UNVISITED {
+            *l = NOISE;
+        }
+    }
+    DbscanResult { labels, n_clusters: cluster as usize }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::NativeDistance;
+    use crate::util::rng::Rng;
+
+    fn blob(rng: &mut Rng, cx: f64, cy: f64, n: usize, s: f64) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|_| vec![rng.normal_ms(cx, s), rng.normal_ms(cy, s)])
+            .collect()
+    }
+
+    #[test]
+    fn finds_two_blobs_and_noise() {
+        let mut rng = Rng::new(0);
+        let mut rows = blob(&mut rng, 0.0, 0.0, 40, 0.3);
+        rows.extend(blob(&mut rng, 10.0, 10.0, 40, 0.3));
+        rows.push(vec![5.0, 5.0]); // isolated noise point
+        let r = dbscan(
+            &rows,
+            &DbscanConfig { eps: 1.2, min_pts: 4 },
+            &NativeDistance,
+        );
+        assert_eq!(r.n_clusters, 2);
+        assert_eq!(r.labels[80], NOISE);
+        // first blob one cluster, second blob another
+        let c0 = r.labels[0];
+        assert!(r.labels[..40].iter().all(|&l| l == c0));
+        let c1 = r.labels[40];
+        assert_ne!(c0, c1);
+        assert!(r.labels[40..80].iter().all(|&l| l == c1));
+    }
+
+    #[test]
+    fn all_noise_when_eps_tiny() {
+        let mut rng = Rng::new(1);
+        let rows = blob(&mut rng, 0.0, 0.0, 20, 1.0);
+        let r = dbscan(
+            &rows,
+            &DbscanConfig { eps: 1e-6, min_pts: 3 },
+            &NativeDistance,
+        );
+        assert_eq!(r.n_clusters, 0);
+        assert!(r.labels.iter().all(|&l| l == NOISE));
+    }
+
+    #[test]
+    fn one_cluster_when_eps_huge() {
+        let mut rng = Rng::new(2);
+        let mut rows = blob(&mut rng, 0.0, 0.0, 20, 1.0);
+        rows.extend(blob(&mut rng, 5.0, 0.0, 20, 1.0));
+        let r = dbscan(
+            &rows,
+            &DbscanConfig { eps: 1e3, min_pts: 3 },
+            &NativeDistance,
+        );
+        assert_eq!(r.n_clusters, 1);
+        assert!(r.labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn chain_connectivity() {
+        // points in a line spaced 1.0 apart: single cluster at eps=1.5
+        let rows: Vec<Vec<f64>> =
+            (0..30).map(|i| vec![i as f64, 0.0]).collect();
+        let r = dbscan(
+            &rows,
+            &DbscanConfig { eps: 1.5, min_pts: 2 },
+            &NativeDistance,
+        );
+        assert_eq!(r.n_clusters, 1);
+    }
+
+    #[test]
+    fn empty_input() {
+        let r = dbscan(&[], &DbscanConfig::default(), &NativeDistance);
+        assert_eq!(r.n_clusters, 0);
+        assert!(r.labels.is_empty());
+    }
+
+    #[test]
+    fn labels_are_contiguous() {
+        let mut rng = Rng::new(3);
+        let mut rows = vec![];
+        for k in 0..4 {
+            rows.extend(blob(&mut rng, 8.0 * k as f64, 0.0, 25, 0.4));
+        }
+        let r = dbscan(
+            &rows,
+            &DbscanConfig { eps: 1.5, min_pts: 4 },
+            &NativeDistance,
+        );
+        assert_eq!(r.n_clusters, 4);
+        let mut seen: Vec<i32> = r.labels.iter().copied().filter(|&l| l >= 0).collect();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,199 @@
+//! k-means baseline for Fig 10 (k-means++ init, Lloyd iterations).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    pub labels: Vec<i32>,
+    pub centroids: Vec<Vec<f64>>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Lloyd's algorithm with k-means++ seeding.
+pub fn kmeans(
+    rows: &[Vec<f64>],
+    k: usize,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> KmeansResult {
+    assert!(k >= 1);
+    assert!(rows.len() >= k, "need at least k rows");
+    let n = rows.len();
+
+    // k-means++ init
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centroids.push(rows[rng.range_usize(0, n)].clone());
+    let mut d2: Vec<f64> =
+        rows.iter().map(|r| sq_dist(r, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 1e-18 {
+            // all points coincide with existing centroids: pick any
+            rng.range_usize(0, n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if target < w {
+                    pick = i;
+                    break;
+                }
+                target -= w;
+            }
+            pick
+        };
+        centroids.push(rows[next].clone());
+        for (i, r) in rows.iter().enumerate() {
+            let d = sq_dist(r, centroids.last().unwrap());
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    let mut labels = vec![0i32; n];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // assign
+        let mut changed = false;
+        for (i, r) in rows.iter().enumerate() {
+            let best = centroids
+                .iter()
+                .enumerate()
+                .map(|(c, cen)| (c, sq_dist(r, cen)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            if labels[i] != best {
+                labels[i] = best;
+                changed = true;
+            }
+        }
+        // update
+        let w = rows[0].len();
+        let mut sums = vec![vec![0.0; w]; k];
+        let mut counts = vec![0usize; k];
+        for (i, r) in rows.iter().enumerate() {
+            let c = labels[i] as usize;
+            counts[c] += 1;
+            for j in 0..w {
+                sums[c][j] += r[j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..w {
+                    centroids[c][j] = sums[c][j] / counts[c] as f64;
+                }
+            } else {
+                // empty cluster: reseed at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sq_dist(&rows[a], &centroids[labels[a] as usize]);
+                        let db = sq_dist(&rows[b], &centroids[labels[b] as usize]);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids[c] = rows[far].clone();
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+    }
+    let inertia = rows
+        .iter()
+        .zip(&labels)
+        .map(|(r, &l)| sq_dist(r, &centroids[l as usize]))
+        .sum();
+    KmeansResult { labels, centroids, inertia, iterations }
+}
+
+/// Pick k by the elbow criterion over a k-range: the smallest k whose
+/// relative inertia improvement drops below `threshold`. This is how the
+/// Fig 10 harness gives k-means a fair shot without the true class count.
+pub fn kmeans_elbow(
+    rows: &[Vec<f64>],
+    k_max: usize,
+    threshold: f64,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> KmeansResult {
+    assert!(k_max >= 1);
+    let mut prev = kmeans(rows, 1, max_iter, rng);
+    for k in 2..=k_max.min(rows.len()) {
+        let cur = kmeans(rows, k, max_iter, rng);
+        let denom = prev.inertia.max(1e-12);
+        let improve = (prev.inertia - cur.inertia) / denom;
+        if improve < threshold {
+            return prev;
+        }
+        prev = cur;
+    }
+    prev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(rng: &mut Rng, centers: &[(f64, f64)], n: usize, s: f64) -> Vec<Vec<f64>> {
+        let mut rows = vec![];
+        for &(cx, cy) in centers {
+            for _ in 0..n {
+                rows.push(vec![rng.normal_ms(cx, s), rng.normal_ms(cy, s)]);
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn recovers_three_blobs() {
+        let mut rng = Rng::new(0);
+        let rows = blobs(&mut rng, &[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)], 50, 0.5);
+        let r = kmeans(&rows, 3, 100, &mut rng);
+        // each ground-truth blob maps to exactly one cluster
+        for g in 0..3 {
+            let ls = &r.labels[g * 50..(g + 1) * 50];
+            assert!(ls.iter().all(|&l| l == ls[0]), "blob {g} split");
+        }
+        assert!(r.inertia < 150.0 * 2.0);
+    }
+
+    #[test]
+    fn k_one_centroid_is_mean() {
+        let rows = vec![vec![0.0], vec![2.0], vec![4.0]];
+        let mut rng = Rng::new(1);
+        let r = kmeans(&rows, 1, 10, &mut rng);
+        assert!((r.centroids[0][0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elbow_finds_reasonable_k() {
+        let mut rng = Rng::new(2);
+        let rows = blobs(
+            &mut rng,
+            &[(0.0, 0.0), (12.0, 0.0), (0.0, 12.0), (12.0, 12.0)],
+            40,
+            0.5,
+        );
+        let r = kmeans_elbow(&rows, 8, 0.25, 100, &mut rng);
+        let k = r.centroids.len();
+        assert!((3..=5).contains(&k), "k = {k}");
+    }
+
+    #[test]
+    fn duplicate_points_dont_crash() {
+        let rows = vec![vec![1.0, 1.0]; 10];
+        let mut rng = Rng::new(3);
+        let r = kmeans(&rows, 3, 10, &mut rng);
+        assert_eq!(r.labels.len(), 10);
+        assert!(r.inertia < 1e-9);
+    }
+}

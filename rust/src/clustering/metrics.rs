@@ -1,0 +1,119 @@
+//! Fig 10 clustering quality metrics: Purity and Awt.
+//!
+//! Paper §7.1: "Purity indicates how many of the observation windows were
+//! classified correctly … The Awt metric … measures how accurately the
+//! algorithm was able to identify different workload types. For example,
+//! if the benchmark executed 3 different workload types and the algorithm
+//! detected 3 clusters whose centroids fall within the observation window
+//! range of each workload type, then the Awt metric for this algorithm
+//! would be 100%."
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Purity: each cluster votes for its dominant ground-truth class; purity
+/// is the fraction of points whose cluster's dominant class matches their
+/// own. Noise points (label < 0) count as singleton mistakes (they have
+/// no cluster to be pure in), which penalises over-aggressive noise
+/// flagging.
+pub fn purity(truth: &[u32], cluster: &[i32]) -> f64 {
+    assert_eq!(truth.len(), cluster.len());
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let mut per_cluster: BTreeMap<i32, BTreeMap<u32, usize>> = BTreeMap::new();
+    for (&t, &c) in truth.iter().zip(cluster) {
+        if c >= 0 {
+            *per_cluster.entry(c).or_default().entry(t).or_insert(0) += 1;
+        }
+    }
+    let correct: usize = per_cluster
+        .values()
+        .map(|counts| counts.values().copied().max().unwrap_or(0))
+        .sum();
+    correct as f64 / truth.len() as f64
+}
+
+/// Awt ("accuracy of workload types"): fraction of ground-truth workload
+/// types that are *identified* — i.e. some cluster's dominant class is
+/// that type and that cluster's majority mass lies within the type's
+/// windows. A type matched by more than one cluster counts once;
+/// spurious extra clusters reduce the score via the denominator
+/// max(#types, #clusters).
+pub fn awt(truth: &[u32], cluster: &[i32]) -> f64 {
+    assert_eq!(truth.len(), cluster.len());
+    let types: BTreeSet<u32> = truth.iter().copied().collect();
+    if types.is_empty() {
+        return 0.0;
+    }
+    let mut per_cluster: BTreeMap<i32, BTreeMap<u32, usize>> = BTreeMap::new();
+    for (&t, &c) in truth.iter().zip(cluster) {
+        if c >= 0 {
+            *per_cluster.entry(c).or_default().entry(t).or_insert(0) += 1;
+        }
+    }
+    // dominant type of each cluster
+    let mut matched: BTreeSet<u32> = BTreeSet::new();
+    for counts in per_cluster.values() {
+        let total: usize = counts.values().sum();
+        if let Some((&dom, &n)) = counts.iter().max_by_key(|(_, &n)| n) {
+            if n * 2 >= total {
+                matched.insert(dom);
+            }
+        }
+    }
+    let denom = types.len().max(per_cluster.len());
+    matched.len() as f64 / denom as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering() {
+        let truth = [0, 0, 1, 1, 2, 2];
+        let cl = [0, 0, 1, 1, 2, 2];
+        assert_eq!(purity(&truth, &cl), 1.0);
+        assert_eq!(awt(&truth, &cl), 1.0);
+    }
+
+    #[test]
+    fn merged_clusters_hurt_both() {
+        let truth = [0, 0, 1, 1];
+        let cl = [0, 0, 0, 0];
+        assert_eq!(purity(&truth, &cl), 0.5);
+        assert_eq!(awt(&truth, &cl), 0.5); // 1 of 2 types identified
+    }
+
+    #[test]
+    fn split_cluster_keeps_purity_hurts_awt() {
+        let truth = [0, 0, 0, 0, 1, 1];
+        let cl = [0, 0, 1, 1, 2, 2]; // class 0 split into two clusters
+        assert_eq!(purity(&truth, &cl), 1.0);
+        // 2 types matched, but 3 clusters -> 2/3
+        assert!((awt(&truth, &cl) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_penalises_purity() {
+        let truth = [0, 0, 0, 0];
+        let cl = [0, 0, -1, -1];
+        assert_eq!(purity(&truth, &cl), 0.5);
+        assert_eq!(awt(&truth, &cl), 1.0); // the type itself was found
+    }
+
+    #[test]
+    fn label_permutation_invariant() {
+        let truth = [0, 0, 1, 1];
+        let a = [0, 0, 1, 1];
+        let b = [7, 7, 3, 3];
+        assert_eq!(purity(&truth, &a), purity(&truth, &b));
+        assert_eq!(awt(&truth, &a), awt(&truth, &b));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(purity(&[], &[]), 0.0);
+        assert_eq!(awt(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,558 @@
+//! The KERMIT coordinator: wires the full MAPE-K loop (Figure 3) over
+//! the simulated cluster and drives end-to-end scenarios.
+//!
+//! Monitor: job metric samples stream through KWmon into observation
+//! windows. Analyze: the on-line pipeline (ChangeDetector → classifier →
+//! predictor) publishes contexts; the off-line analyser periodically
+//! runs Algorithm 2 + the training pipeline. Plan: the plug-in's
+//! Algorithm 1 picks configurations (cache hit / local / global search).
+//! Execute: the RM applies them to job containers. Knowledge: the
+//! WorkloadDB persists everything.
+
+pub mod report;
+
+use crate::clustering::{DistanceProvider, NativeDistance};
+use crate::features::{AnalyticWindow, ObservationWindow};
+use crate::knowledge::WorkloadDb;
+use crate::ml::forest::RandomForest;
+use crate::ml::Dataset;
+use crate::monitor::{aggregate_samples, MonitorConfig};
+use crate::offline::zsl::synthesize;
+use crate::offline::{discover, DiscoveryConfig, TrainingConfig};
+use crate::online::classifier::GatedForestClassifier;
+use crate::online::{
+    ChoiceKind, ContextStream, KermitPlugin, OnlinePipeline, UNKNOWN,
+};
+use std::collections::BTreeMap;
+use crate::simcluster::engine::EngineConfig;
+use crate::simcluster::perfmodel::job_duration;
+use crate::simcluster::JobSpec;
+use crate::util::rng::Rng;
+use crate::workloadgen::{catalog, num_pure_classes, Sample, TruthTag};
+use crate::features::NUM_FEATURES;
+pub use report::{JobOutcome, RunReport};
+use std::sync::{Arc, Mutex};
+
+/// Coordinator configuration (the paper's hyper-parameters).
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    pub monitor: MonitorConfig,
+    pub discovery: DiscoveryConfig,
+    pub training: TrainingConfig,
+    pub engine: EngineConfig,
+    /// Off-line analysis interval, in observation windows (the paper's
+    /// `k` batch-length hyper-parameter).
+    pub offline_interval_windows: usize,
+    /// Windows of metric prefix emitted before the config decision (the
+    /// identification lead-in).
+    pub prefix_windows: usize,
+    /// Forest soft-vote confidence gate.
+    pub min_confidence: f64,
+    /// Centroid-distance gate for the bootstrap classifier.
+    pub centroid_gate: f64,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            monitor: MonitorConfig { window_size: 30 },
+            discovery: DiscoveryConfig::default(),
+            training: TrainingConfig::default(),
+            engine: EngineConfig::default(),
+            offline_interval_windows: 40,
+            prefix_windows: 2,
+            min_confidence: 0.65,
+            centroid_gate: 20.0,
+            seed: 1,
+        }
+    }
+}
+
+/// The assembled autonomic system.
+pub struct Coordinator {
+    pub config: CoordinatorConfig,
+    pub db: Arc<Mutex<WorkloadDb>>,
+    pub context: Arc<Mutex<ContextStream>>,
+    pub pipeline: OnlinePipeline,
+    pub plugin: KermitPlugin,
+    backlog: Vec<ObservationWindow>,
+    windows_since_offline: usize,
+    window_index: u64,
+    rng: Rng,
+    /// distance provider for discovery (native, or the PJRT artifact)
+    dist: Box<dyn DistanceProvider>,
+    /// Cumulative training store (the analytics zone): per label, the
+    /// labelled analytic windows accumulated across all discovery runs.
+    /// Without it, a forest retrained on just the latest batch would
+    /// forget every class absent from that batch.
+    training_store: BTreeMap<u32, Vec<Vec<f64>>>,
+    /// cap per label (memory bound; oldest dropped first)
+    store_cap: usize,
+    /// Off-line ticks since the classifier was last retrained.
+    ticks_since_train: usize,
+    /// Active signature drift per ground-truth class (systematic mean
+    /// shift applied to emitted metrics; see [`Coordinator::inject_drift`]).
+    signature_shift: BTreeMap<u32, crate::features::FeatureVec>,
+    /// Transition-type label registry ((from, to) -> generated id),
+    /// persistent across off-line runs so ids stay stable.
+    transition_registry: BTreeMap<(u32, u32), u32>,
+    /// Cumulative transition training examples (rate-of-change rows).
+    transition_store: Vec<(Vec<f64>, u32)>,
+    /// §Perf optimisation: retrain only when discovery changes the label
+    /// set (new/drifted labels) or every `retrain_every` ticks as a
+    /// refresher — retraining on every tick dominated end-to-end
+    /// wall-clock (see EXPERIMENTS.md §Perf iteration 1).
+    pub retrain_every: usize,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Coordinator {
+        Self::with_distance(config, Box::new(NativeDistance))
+    }
+
+    /// Use a custom distance provider (e.g. `runtime::nn::ArtifactDistance`
+    /// to route DBSCAN through the pallas kernel artifact).
+    pub fn with_distance(
+        config: CoordinatorConfig,
+        dist: Box<dyn DistanceProvider>,
+    ) -> Coordinator {
+        let db = Arc::new(Mutex::new(WorkloadDb::new()));
+        let context = Arc::new(Mutex::new(ContextStream::new(64)));
+        let pipeline = OnlinePipeline::new(context.clone());
+        let plugin = KermitPlugin::new(db.clone(), context.clone());
+        let rng = Rng::new(config.seed);
+        Coordinator {
+            config,
+            db,
+            context,
+            pipeline,
+            plugin,
+            backlog: Vec::new(),
+            windows_since_offline: 0,
+            window_index: 0,
+            rng,
+            dist,
+            training_store: BTreeMap::new(),
+            store_cap: 400,
+            ticks_since_train: 0,
+            retrain_every: 5,
+            signature_shift: BTreeMap::new(),
+            transition_registry: BTreeMap::new(),
+            transition_store: Vec::new(),
+        }
+    }
+
+    /// Inject workload drift: from now on, class `truth_id`'s emitted
+    /// metric signature is shifted by `shift` (the paper's §6.1 workload
+    /// drift, or §6.2's node-failure-as-drift scenario). The off-line
+    /// analyser should detect it (Algorithm 2's ε test), mark the DB
+    /// entry drifting, and the plug-in should re-optimise with a *local*
+    /// search seeded at the last good configuration.
+    pub fn inject_drift(
+        &mut self,
+        truth_id: u32,
+        shift: crate::features::FeatureVec,
+    ) {
+        self.signature_shift.insert(truth_id, shift);
+    }
+
+    /// Stream raw samples through the monitor + on-line pipeline;
+    /// returns the label of the final context.
+    fn ingest(&mut self, samples: &[Sample]) -> u32 {
+        let windows = aggregate_samples(samples, &self.config.monitor);
+        let mut label = UNKNOWN;
+        for mut w in windows {
+            w.index = self.window_index;
+            self.window_index += 1;
+            let ctx = self.pipeline.observe(&w);
+            if ctx.current_label != UNKNOWN {
+                label = ctx.current_label;
+            }
+            self.backlog.push(w);
+            self.windows_since_offline += 1;
+        }
+        if self.windows_since_offline >= self.config.offline_interval_windows
+        {
+            self.run_offline();
+        }
+        label
+    }
+
+    /// The off-line sub-system tick: Algorithm 2 (discovery + drift),
+    /// training-store accumulation, ZSL synthesis, and classifier
+    /// retraining on the *cumulative* labelled set.
+    pub fn run_offline(&mut self) {
+        self.windows_since_offline = 0;
+        if self.backlog.len() < 8 {
+            return;
+        }
+        let mut db = self.db.lock().unwrap();
+        let report = discover(
+            &self.backlog,
+            &mut db,
+            &self.config.discovery,
+            self.dist.as_ref(),
+        );
+
+        // accumulate the analytics-zone training store
+        for (w, label) in self.backlog.iter().zip(&report.window_labels) {
+            if let Some(l) = label {
+                let rows = self.training_store.entry(*l).or_default();
+                rows.push(AnalyticWindow::from_observation(w).features);
+                if rows.len() > self.store_cap {
+                    let excess = rows.len() - self.store_cap;
+                    rows.drain(..excess);
+                }
+            }
+        }
+
+        // retrain gating (§Perf): skip the expensive forest refit when
+        // nothing about the label set changed and the refresher interval
+        // hasn't elapsed
+        self.ticks_since_train += 1;
+        let label_set_changed = report
+            .outcomes
+            .iter()
+            .any(|o| !matches!(o, crate::offline::ClusterOutcome::Matched { .. }));
+        let must_train = label_set_changed
+            || self.ticks_since_train >= self.retrain_every;
+
+        // accumulate transition training data (rate-of-change rows per
+        // (from, to) pair — §7.2 steps 3-6)
+        let tset = crate::offline::training::transition_training_set(
+            &self.backlog,
+            &report,
+            &mut self.transition_registry,
+        );
+        for (row, label) in tset.rows.into_iter().zip(tset.labels) {
+            self.transition_store.push((row, label));
+        }
+        if self.transition_store.len() > 4 * self.store_cap {
+            let excess = self.transition_store.len() - 4 * self.store_cap;
+            self.transition_store.drain(..excess);
+        }
+
+        if !self.training_store.is_empty() && must_train {
+            self.ticks_since_train = 0;
+            // training set = cumulative store + ZSL synthetic instances
+            let mut data = Dataset::new();
+            for (l, rows) in &self.training_store {
+                for r in rows {
+                    data.push(r.clone(), *l);
+                }
+            }
+            if self.config.training.enable_zsl {
+                let synth =
+                    synthesize(&mut db, &self.config.training.zsl, &mut self.rng);
+                for (row, label) in synth
+                    .instances
+                    .rows
+                    .into_iter()
+                    .zip(synth.instances.labels)
+                {
+                    data.push(row, label);
+                }
+                // include previously synthesised classes' instances via
+                // their prototypes (regenerate a few per stored class)
+            }
+            let forest = RandomForest::fit(
+                &data,
+                self.config.training.forest.clone(),
+                &mut self.rng,
+            );
+            let classifier = GatedForestClassifier::from_db(
+                forest,
+                &db,
+                self.config.centroid_gate,
+                self.config.min_confidence,
+            );
+            drop(db);
+            self.pipeline.set_classifier(Box::new(classifier));
+
+            // TransitionClassifier: retrain alongside (needs >=2 types)
+            let types: std::collections::BTreeSet<u32> = self
+                .transition_store
+                .iter()
+                .map(|(_, l)| *l)
+                .collect();
+            if types.len() >= 2 {
+                let mut td = Dataset::new();
+                for (row, label) in &self.transition_store {
+                    td.push(row.clone(), *label);
+                }
+                let tforest = RandomForest::fit(
+                    &td,
+                    self.config.training.forest.clone(),
+                    &mut self.rng,
+                );
+                self.pipeline.set_transition_classifier(Box::new(
+                    crate::online::ForestWindowClassifier::new(
+                        tforest,
+                        self.config.min_confidence,
+                    ),
+                ));
+            }
+        }
+        // keep a characterization tail so recurring workloads re-match,
+        // but don't regrow unboundedly
+        let keep = self.config.offline_interval_windows * 2;
+        if self.backlog.len() > keep {
+            let cut = self.backlog.len() - keep;
+            self.backlog.drain(..cut);
+        }
+    }
+
+    /// Emit `n_windows` of metric samples for a job mix (same signature
+    /// model as the cluster engine).
+    fn emit_job_samples(
+        &mut self,
+        mix: crate::workloadgen::Mix,
+        truth_id: u32,
+        start_time: f64,
+        n_windows: usize,
+    ) -> Vec<Sample> {
+        let cat = catalog();
+        let mut mean = mix.mean(&cat);
+        if let Some(shift) = self.signature_shift.get(&truth_id) {
+            for (m, s) in mean.iter_mut().zip(shift.iter()) {
+                *m = (*m + s).max(0.0);
+            }
+        }
+        let noise = mix.noise(&cat);
+        let n = n_windows * self.config.monitor.window_size;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut f = [0.0; NUM_FEATURES];
+            for k in 0..NUM_FEATURES {
+                f[k] = self.rng.normal_ms(mean[k], noise[k]).max(0.0);
+            }
+            out.push(Sample {
+                time: start_time + i as f64,
+                features: f,
+                truth: TruthTag::Steady(truth_id),
+            });
+        }
+        out
+    }
+
+    /// Run a job schedule through the full autonomic loop. Each job:
+    /// prefix windows stream in (identification lead-in), the plug-in
+    /// picks the config (Algorithm 1), the job runs under it, its
+    /// remaining metrics stream in, and the measured duration feeds the
+    /// active search session if any.
+    pub fn run_schedule(&mut self, jobs: &[JobSpec]) -> RunReport {
+        let n_pure = num_pure_classes();
+        let mut report = RunReport::default();
+        let mut now = 0.0f64;
+        let window_secs = self.config.monitor.window_size as f64;
+
+        for (k, job) in jobs.iter().enumerate() {
+            let truth_id = job.mix.truth_id(n_pure);
+
+            // identification lead-in
+            let prefix = self.emit_job_samples(
+                job.mix,
+                truth_id,
+                now,
+                self.config.prefix_windows,
+            );
+            let label = self.ingest(&prefix);
+            now += self.config.prefix_windows as f64 * window_secs;
+
+            // Algorithm 1 decision
+            let (config_idx, choice) = self.plugin.choose_config_for_label(label);
+            let base = job_duration(truth_id, &config_idx.to_config());
+            let noise =
+                1.0 + self.config.engine.duration_noise * self.rng.normal();
+            let duration = base * noise.max(0.5);
+
+            // job body metrics
+            let body_windows =
+                ((duration / window_secs).ceil() as usize).clamp(1, 40);
+            let body =
+                self.emit_job_samples(job.mix, truth_id, now, body_windows);
+            self.ingest(&body);
+            now += duration;
+
+            // feedback edge
+            self.plugin.record_measurement(label, duration);
+
+            report.jobs.push(JobOutcome {
+                index: k,
+                truth_id,
+                classified_label: label,
+                choice,
+                duration,
+            });
+            now += self.config.engine.inter_job_gap;
+        }
+        report.makespan = now;
+        report.plugin_stats = self.plugin.stats.clone();
+        report.workloads_known = self.db.lock().unwrap().len();
+        report
+    }
+}
+
+/// Baseline runner: the same schedule under a fixed configuration
+/// (vendor default or rule-of-thumb), for end-to-end comparisons.
+pub fn run_fixed_config(
+    jobs: &[JobSpec],
+    config_idx: crate::simcluster::ConfigIndex,
+    engine: &EngineConfig,
+    seed: u64,
+) -> RunReport {
+    let n_pure = num_pure_classes();
+    let mut rng = Rng::new(seed);
+    let mut report = RunReport::default();
+    let mut now = 0.0;
+    for (k, job) in jobs.iter().enumerate() {
+        let truth_id = job.mix.truth_id(n_pure);
+        let base = job_duration(truth_id, &config_idx.to_config());
+        let noise = 1.0 + engine.duration_noise * rng.normal();
+        let duration = base * noise.max(0.5);
+        now += duration + engine.inter_job_gap;
+        report.jobs.push(JobOutcome {
+            index: k,
+            truth_id,
+            classified_label: UNKNOWN,
+            choice: ChoiceKind::Default,
+            duration,
+        });
+    }
+    report.makespan = now;
+    report
+}
+
+/// Oracle runner: every job at its exhaustive-search optimum — the
+/// "fastest possible tuning" bound.
+pub fn run_oracle(
+    jobs: &[JobSpec],
+    engine: &EngineConfig,
+    seed: u64,
+) -> RunReport {
+    use crate::simcluster::ConfigIndex;
+    let n_pure = num_pure_classes();
+    let mut rng = Rng::new(seed);
+    let mut report = RunReport::default();
+    let mut now = 0.0;
+    // memoise per-class optima (the grid scan is expensive)
+    let mut best: std::collections::BTreeMap<u32, f64> = Default::default();
+    for (k, job) in jobs.iter().enumerate() {
+        let truth_id = job.mix.truth_id(n_pure);
+        let base = *best.entry(truth_id).or_insert_with(|| {
+            ConfigIndex::enumerate_all()
+                .into_iter()
+                .map(|ci| job_duration(truth_id, &ci.to_config()))
+                .fold(f64::INFINITY, f64::min)
+        });
+        let noise = 1.0 + engine.duration_noise * rng.normal();
+        let duration = base * noise.max(0.5);
+        now += duration + engine.inter_job_gap;
+        report.jobs.push(JobOutcome {
+            index: k,
+            truth_id,
+            classified_label: truth_id,
+            choice: ChoiceKind::CacheHit,
+            duration,
+        });
+    }
+    report.makespan = now;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::baselines::rule_of_thumb;
+    use crate::simcluster::default_config_index;
+    use crate::workloadgen::Mix;
+
+    fn recurring_jobs(classes: &[u32], cycles: usize) -> Vec<JobSpec> {
+        let mut out = Vec::new();
+        for _ in 0..cycles {
+            for &c in classes {
+                out.push(JobSpec { mix: Mix::Pure(c) });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn autonomic_loop_learns_and_caches() {
+        let mut cfg = CoordinatorConfig::default();
+        cfg.offline_interval_windows = 12;
+        cfg.engine.duration_noise = 0.01;
+        // tight probe budget so searches converge within the test run
+        let mut coord = Coordinator::new(cfg);
+        coord.plugin.explorer_config.global_budget = 25;
+        let jobs = recurring_jobs(&[0, 5], 30);
+        let report = coord.run_schedule(&jobs);
+
+        // discovery must have found both workload classes
+        assert!(report.workloads_known >= 2, "{}", report.workloads_known);
+        // the plugin must eventually serve cache hits
+        assert!(
+            report.plugin_stats.cache_hits > 5,
+            "stats: {:?}",
+            report.plugin_stats
+        );
+        assert!(report.plugin_stats.searches_completed >= 1);
+        // late jobs must be faster than early (default-config) ones
+        let early: f64 = report.jobs[..4]
+            .iter()
+            .map(|j| j.duration)
+            .sum::<f64>()
+            / 4.0;
+        let tail = &report.jobs[report.jobs.len() - 4..];
+        let late: f64 =
+            tail.iter().map(|j| j.duration).sum::<f64>() / 4.0;
+        assert!(
+            late < early,
+            "late {late} not faster than early {early}"
+        );
+    }
+
+    #[test]
+    fn kermit_beats_default_on_recurring_day() {
+        let mut cfg = CoordinatorConfig::default();
+        cfg.offline_interval_windows = 12;
+        cfg.engine.duration_noise = 0.01;
+        let mut coord = Coordinator::new(cfg.clone());
+        coord.plugin.explorer_config.global_budget = 25;
+        let jobs = recurring_jobs(&[0, 3, 5], 25);
+        let kermit = coord.run_schedule(&jobs);
+        let default = run_fixed_config(
+            &jobs,
+            default_config_index(),
+            &cfg.engine,
+            7,
+        );
+        let rot =
+            run_fixed_config(&jobs, rule_of_thumb(), &cfg.engine, 7);
+        let oracle = run_oracle(&jobs, &cfg.engine, 7);
+        assert!(
+            kermit.makespan < default.makespan,
+            "kermit {} vs default {}",
+            kermit.makespan,
+            default.makespan
+        );
+        // sanity ordering: oracle <= kermit
+        assert!(oracle.makespan <= kermit.makespan * 1.01);
+        // and the oracle is meaningfully better than rule-of-thumb
+        assert!(oracle.makespan < rot.makespan);
+    }
+
+    #[test]
+    fn fixed_config_report_well_formed() {
+        let jobs = recurring_jobs(&[1], 3);
+        let r = run_fixed_config(
+            &jobs,
+            default_config_index(),
+            &EngineConfig::default(),
+            0,
+        );
+        assert_eq!(r.jobs.len(), 3);
+        assert!(r.makespan > 0.0);
+    }
+}

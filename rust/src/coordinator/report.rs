@@ -1,0 +1,142 @@
+//! Run reports: per-job outcomes and aggregate metrics for end-to-end
+//! scenarios (consumed by examples, benches and the CLI).
+
+use crate::online::{ChoiceKind, PluginStats};
+
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub index: usize,
+    pub truth_id: u32,
+    /// Label the on-line pipeline assigned at request time (UNKNOWN
+    /// before discovery catches up).
+    pub classified_label: u32,
+    pub choice: ChoiceKind,
+    pub duration: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub jobs: Vec<JobOutcome>,
+    pub makespan: f64,
+    pub plugin_stats: PluginStats,
+    pub workloads_known: usize,
+}
+
+impl RunReport {
+    pub fn total_job_time(&self) -> f64 {
+        self.jobs.iter().map(|j| j.duration).sum()
+    }
+
+    pub fn mean_duration(&self) -> f64 {
+        if self.jobs.is_empty() {
+            0.0
+        } else {
+            self.total_job_time() / self.jobs.len() as f64
+        }
+    }
+
+    /// Mean duration over the last `n` jobs (steady-state performance
+    /// after learning converges).
+    pub fn tail_mean_duration(&self, n: usize) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        let k = n.min(self.jobs.len());
+        let tail = &self.jobs[self.jobs.len() - k..];
+        tail.iter().map(|j| j.duration).sum::<f64>() / k as f64
+    }
+
+    /// Fraction of jobs whose classified label was correct, judged by
+    /// label-to-truth majority association (labels are arbitrary ids).
+    pub fn classification_consistency(&self) -> f64 {
+        use std::collections::BTreeMap;
+        let mut assoc: BTreeMap<u32, BTreeMap<u32, usize>> = BTreeMap::new();
+        for j in &self.jobs {
+            if j.classified_label != crate::online::UNKNOWN {
+                *assoc
+                    .entry(j.classified_label)
+                    .or_default()
+                    .entry(j.truth_id)
+                    .or_insert(0) += 1;
+            }
+        }
+        let majority: BTreeMap<u32, u32> = assoc
+            .iter()
+            .map(|(&l, counts)| {
+                (
+                    l,
+                    *counts.iter().max_by_key(|(_, &n)| n).unwrap().0,
+                )
+            })
+            .collect();
+        let known: Vec<&JobOutcome> = self
+            .jobs
+            .iter()
+            .filter(|j| j.classified_label != crate::online::UNKNOWN)
+            .collect();
+        if known.is_empty() {
+            return 0.0;
+        }
+        let ok = known
+            .iter()
+            .filter(|j| majority.get(&j.classified_label) == Some(&j.truth_id))
+            .count();
+        ok as f64 / known.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(i: usize, truth: u32, label: u32, d: f64) -> JobOutcome {
+        JobOutcome {
+            index: i,
+            truth_id: truth,
+            classified_label: label,
+            choice: ChoiceKind::Default,
+            duration: d,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = RunReport {
+            jobs: vec![job(0, 0, 0, 10.0), job(1, 1, 1, 20.0)],
+            makespan: 35.0,
+            ..Default::default()
+        };
+        assert_eq!(r.total_job_time(), 30.0);
+        assert_eq!(r.mean_duration(), 15.0);
+        assert_eq!(r.tail_mean_duration(1), 20.0);
+    }
+
+    #[test]
+    fn consistency_with_relabeled_ids() {
+        // labels 7/9 consistently map to truths 0/1: consistency = 1.0
+        let r = RunReport {
+            jobs: vec![
+                job(0, 0, 7, 1.0),
+                job(1, 1, 9, 1.0),
+                job(2, 0, 7, 1.0),
+                job(3, 1, 9, 1.0),
+            ],
+            ..Default::default()
+        };
+        assert_eq!(r.classification_consistency(), 1.0);
+    }
+
+    #[test]
+    fn consistency_penalises_confusion() {
+        let r = RunReport {
+            jobs: vec![
+                job(0, 0, 7, 1.0),
+                job(1, 1, 7, 1.0),
+                job(2, 0, 7, 1.0),
+            ],
+            ..Default::default()
+        };
+        // label 7 majority-maps to truth 0; 2 of 3 consistent
+        assert!((r.classification_consistency() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

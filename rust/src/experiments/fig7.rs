@@ -1,0 +1,141 @@
+//! Figure 7: TransitionClassifier performance.
+//!
+//! The TransitionClassifier is a random forest over *rate-of-change*
+//! features ([8]); the paper reports accuracy by transition type. We
+//! generate traces with known transition points, extract ground-truth
+//! transition windows, label them by (from, to) pair, and evaluate a
+//! held-out split — plus the ablation the paper's design implies:
+//! rate-of-change features vs raw analytic features.
+
+use super::WINDOW;
+use crate::util::rng::Rng as XRng;
+use crate::workloadgen::{GenConfig, Generator, Mix, ScheduleEntry};
+use crate::features::{rate_of_change, AnalyticWindow};
+use crate::ml::forest::{ForestConfig, RandomForest};
+use crate::ml::{accuracy, macro_f1, Classifier, Dataset};
+use crate::monitor::{aggregate_trace, MonitorConfig};
+use crate::util::rng::Rng;
+use crate::workloadgen::{Trace, TruthTag};
+use std::collections::BTreeMap;
+
+/// Trace tailored for transition study: ramps of 1.5 windows so every
+/// transition contributes multiple rate-of-change examples.
+pub fn transition_trace(seed: u64, classes: &[u32], reps: usize) -> Trace {
+    let mut rng = XRng::new(seed ^ 0xF16);
+    let mut order: Vec<u32> = Vec::new();
+    for _ in 0..reps {
+        let mut c = classes.to_vec();
+        rng.shuffle(&mut c);
+        if let (Some(&last), Some(&first)) = (order.last(), c.first()) {
+            if last == first {
+                c.reverse();
+            }
+        }
+        order.extend(c);
+    }
+    let schedule: Vec<ScheduleEntry> = order
+        .iter()
+        .map(|&c| ScheduleEntry { mix: Mix::Pure(c), duration: 70 })
+        .collect();
+    let mut cfg = GenConfig::default();
+    cfg.transition_len = (WINDOW * 3) / 2;
+    let mut g = Generator::new(seed, cfg);
+    g.generate(&schedule)
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig7Result {
+    pub n_transition_types: usize,
+    pub accuracy_roc: f64,
+    pub f1_roc: f64,
+    /// Ablation: same classifier on raw (non-ROC) features.
+    pub accuracy_raw: f64,
+}
+
+/// Extract transition-window datasets from a trace: (roc features, raw
+/// features, labels). Labels are generated ids per (from, to) pair.
+pub fn transition_data(trace: &Trace) -> (Dataset, Dataset) {
+    let cfg = MonitorConfig { window_size: WINDOW };
+    let windows = aggregate_trace(trace, &cfg);
+    let analytic: Vec<AnalyticWindow> = windows
+        .iter()
+        .map(AnalyticWindow::from_observation)
+        .collect();
+    let rocs = rate_of_change(&analytic);
+
+    // ground-truth (from,to) per window from the sample tags
+    let mut registry: BTreeMap<(u32, u32), u32> = BTreeMap::new();
+    let mut roc_set = Dataset::new();
+    let mut raw_set = Dataset::new();
+    for (i, chunk) in trace.samples.chunks_exact(WINDOW).enumerate() {
+        let tags: Vec<&TruthTag> = chunk
+            .iter()
+            .map(|s| &s.truth)
+            .filter(|t| t.is_transition())
+            .collect();
+        if tags.is_empty() || i == 0 {
+            continue;
+        }
+        if let TruthTag::Transition { from, to } = tags[0] {
+            if from == to {
+                continue;
+            }
+            let next = registry.len() as u32;
+            let id = *registry.entry((*from, *to)).or_insert(next);
+            // roc[i-1] = analytic[i] - analytic[i-1]
+            roc_set.push(rocs[i - 1].features.clone(), id);
+            raw_set.push(analytic[i].features.clone(), id);
+        }
+    }
+    (roc_set, raw_set)
+}
+
+pub fn run(seed: u64) -> Fig7Result {
+    // many repeated transitions between 4 classes (12 directed types),
+    // with ramps long enough to span multiple observation windows
+    let classes: Vec<u32> = vec![0, 2, 5, 7];
+    let trace = transition_trace(seed, &classes, 25);
+    let (roc, raw) = transition_data(&trace);
+
+    let mut rng = Rng::new(seed ^ 0x7);
+    let (tr_roc, te_roc) = roc.split(&mut rng, 0.3);
+    let f = RandomForest::fit(&tr_roc, ForestConfig::default(), &mut rng);
+    let preds = f.predict_batch(&te_roc.rows);
+    let acc_roc = accuracy(&te_roc.labels, &preds);
+    let f1_roc = macro_f1(&te_roc.labels, &preds);
+
+    let (tr_raw, te_raw) = raw.split(&mut rng, 0.3);
+    let f2 = RandomForest::fit(&tr_raw, ForestConfig::default(), &mut rng);
+    let preds2 = f2.predict_batch(&te_raw.rows);
+    let acc_raw = accuracy(&te_raw.labels, &preds2);
+
+    Fig7Result {
+        n_transition_types: roc.classes().len(),
+        accuracy_roc: acc_roc,
+        f1_roc,
+        accuracy_raw: acc_raw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transition_classifier_learns_transition_types() {
+        let r = run(3);
+        assert!(r.n_transition_types >= 6, "{}", r.n_transition_types);
+        assert!(r.accuracy_roc > 0.6, "roc accuracy {}", r.accuracy_roc);
+    }
+
+    #[test]
+    fn transition_data_is_labelled_consistently() {
+        let classes: Vec<u32> = vec![0, 2];
+        let trace = transition_trace(5, &classes, 6);
+        let (roc, raw) = transition_data(&trace);
+        assert_eq!(roc.len(), raw.len());
+        // only two transition directions exist
+        assert!(roc.classes().len() <= 2);
+        assert!(!roc.is_empty());
+    }
+}

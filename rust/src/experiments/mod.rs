@@ -1,0 +1,81 @@
+//! Reproduction harness: one module per paper figure/claim. Each
+//! produces the data series the paper reports; `rust/benches/*` print
+//! them (with timings) and EXPERIMENTS.md records paper-vs-measured.
+
+pub mod explorer_table;
+pub mod fig10;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod predictor;
+pub mod zsl;
+
+use crate::features::AnalyticWindow;
+use crate::ml::Dataset;
+use crate::monitor::{aggregate_trace, MonitorConfig};
+use crate::util::rng::Rng;
+use crate::workloadgen::{Generator, ScheduleEntry, Trace};
+
+/// Standard observation-window size used across experiments.
+pub const WINDOW: usize = 30;
+
+/// Generate a trace and aggregate it into a labelled analytic-window
+/// dataset using generator ground truth (the "human specialist"
+/// labelling of the paper's evaluation). Transition / mixed windows are
+/// dropped, as the paper's classifier experiments use steady windows.
+pub fn labelled_windows(trace: &Trace) -> Dataset {
+    let windows =
+        aggregate_trace(trace, &MonitorConfig { window_size: WINDOW });
+    let mut d = Dataset::new();
+    for w in &windows {
+        if let Some(t) = w.truth {
+            d.push(AnalyticWindow::from_observation(&w.clone()).features, t);
+        }
+    }
+    d
+}
+
+/// A multi-class steady-state dataset: `reps` plateaus per class in
+/// shuffled order (so each class contributes many separate segments).
+pub fn multiclass_trace(
+    seed: u64,
+    classes: &[u32],
+    duration: usize,
+    reps: usize,
+) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let mut order: Vec<u32> = Vec::new();
+    for _ in 0..reps {
+        let mut c = classes.to_vec();
+        rng.shuffle(&mut c);
+        // avoid no-op transitions at rep boundaries
+        if let (Some(&last), Some(&first)) = (order.last(), c.first()) {
+            if last == first {
+                c.reverse();
+            }
+        }
+        order.extend(c);
+    }
+    let schedule: Vec<ScheduleEntry> = order
+        .iter()
+        .map(|&c| ScheduleEntry {
+            mix: crate::workloadgen::Mix::Pure(c),
+            duration,
+        })
+        .collect();
+    let mut g = Generator::with_default_config(seed);
+    g.generate(&schedule)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labelled_windows_have_all_classes() {
+        let t = multiclass_trace(0, &[0, 1, 2], 120, 2);
+        let d = labelled_windows(&t);
+        assert_eq!(d.classes(), vec![0, 1, 2]);
+        assert!(d.len() > 10);
+    }
+}

@@ -1,0 +1,118 @@
+//! Workload-type prediction accuracy (paper §8: "Predict workload type
+//! with up to 96% accuracy" [8]) — the LSTM WorkloadPredictor against
+//! the Markov and persistence baselines, on realistic recurring
+//! schedules with noise.
+
+use crate::online::predictor::{
+    sequence_accuracy, LabelPredictor, LastValuePredictor, MarkovPredictor,
+};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct PredictorRow {
+    pub predictor: &'static str,
+    pub horizon: usize,
+    pub accuracy: f64,
+}
+
+/// A "business day" label sequence: a fixed rotation with occasional
+/// ad-hoc jobs injected (noise fraction). This is the recurring pattern
+/// §6.4 argues KERMIT exploits.
+pub fn daily_label_sequence(
+    seed: u64,
+    len: usize,
+    rotation: &[u32],
+    noise_frac: f64,
+    ad_hoc: &[u32],
+) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(len);
+    let mut i = 0usize;
+    while out.len() < len {
+        if rng.chance(noise_frac) && !ad_hoc.is_empty() {
+            out.push(*rng.choice(ad_hoc));
+        } else {
+            out.push(rotation[i % rotation.len()]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Evaluate native predictors on train/test splits of the sequence.
+/// (The LSTM artifact variant is evaluated in the bench, which has the
+/// PJRT runtime; it implements the same `LabelPredictor` trait and is
+/// scored by the same `sequence_accuracy`.)
+pub fn run_native(seq_train: &[u32], seq_test: &[u32]) -> Vec<PredictorRow> {
+    let mut rows = Vec::new();
+    let markov = MarkovPredictor::fit(seq_train);
+    for &h in &[1usize, 5, 10] {
+        rows.push(PredictorRow {
+            predictor: "markov",
+            horizon: h,
+            accuracy: sequence_accuracy(&markov, seq_test, h, 2),
+        });
+    }
+    let lv = LastValuePredictor;
+    for &h in &[1usize, 5, 10] {
+        rows.push(PredictorRow {
+            predictor: "last_value",
+            horizon: h,
+            accuracy: sequence_accuracy(&lv, seq_test, h, 2),
+        });
+    }
+    rows
+}
+
+/// Score any predictor implementation on the standard scenario.
+pub fn score_predictor(
+    p: &dyn LabelPredictor,
+    seq_test: &[u32],
+) -> Vec<(usize, f64)> {
+    [1usize, 5, 10]
+        .iter()
+        .map(|&h| (h, sequence_accuracy(p, seq_test, h, 2)))
+        .collect()
+}
+
+/// Standard scenario: rotation of 5 job types, 6% ad-hoc noise.
+pub fn standard_scenario(seed: u64) -> (Vec<u32>, Vec<u32>) {
+    let rotation = [3u32, 0, 7, 5, 2];
+    let ad_hoc = [8u32, 9];
+    let train =
+        daily_label_sequence(seed, 400, &rotation, 0.06, &ad_hoc);
+    let test =
+        daily_label_sequence(seed ^ 77, 200, &rotation, 0.06, &ad_hoc);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markov_hits_90s_on_recurring_pattern() {
+        let (train, test) = standard_scenario(5);
+        let rows = run_native(&train, &test);
+        let m1 = rows
+            .iter()
+            .find(|r| r.predictor == "markov" && r.horizon == 1)
+            .unwrap();
+        // with 6% injected noise the ceiling is ~94%; the paper's 96%
+        // claim is "up to" — we require >85% here
+        assert!(m1.accuracy > 0.85, "markov@1 {}", m1.accuracy);
+        // markov beats persistence on a rotating pattern
+        let lv1 = rows
+            .iter()
+            .find(|r| r.predictor == "last_value" && r.horizon == 1)
+            .unwrap();
+        assert!(m1.accuracy > lv1.accuracy + 0.3);
+    }
+
+    #[test]
+    fn sequence_has_requested_noise() {
+        let seq = daily_label_sequence(0, 1000, &[1, 2, 3], 0.1, &[9]);
+        let noise = seq.iter().filter(|&&l| l == 9).count();
+        assert!((50..200).contains(&noise), "{noise}");
+    }
+}

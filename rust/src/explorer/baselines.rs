@@ -1,0 +1,97 @@
+//! Tuning baselines: rule-of-thumb (the paper's "human administrator"),
+//! exhaustive grid (the 100%-efficiency oracle), and random search.
+
+use super::{ConfigEvaluator, SearchResult};
+use crate::simcluster::config_space::ConfigIndex;
+use crate::util::rng::Rng;
+
+/// The published rule-of-thumb Spark sizing a competent administrator
+/// applies without per-workload experimentation:
+/// ~5 cores/executor, executors sized to fill the cluster with one
+/// leave-out for the AM, executor memory = node_mem / executors_per_node
+/// × 0.9, parallelism ≈ 2-3× total cores, compression on.
+/// On our grid: mem 6144 (idx 3), cores 5 (idx 4), 12 executors (idx 3),
+/// shuffle 128 (idx 3), parallelism 128 (idx 4), compression true.
+pub fn rule_of_thumb() -> ConfigIndex {
+    ConfigIndex([3, 4, 3, 3, 4, 1])
+}
+
+/// Exhaustive search over the full grid — defines the "fastest possible
+/// tuning" the paper measures efficiency against. Returns the argmin and
+/// the number of probes (the whole grid).
+pub fn exhaustive(eval: &mut dyn ConfigEvaluator) -> SearchResult {
+    let mut best = (f64::INFINITY, ConfigIndex([0; 6]));
+    let mut probes = 0;
+    for ci in ConfigIndex::enumerate_all() {
+        let d = eval.measure(ci);
+        probes += 1;
+        if d < best.0 {
+            best = (d, ci);
+        }
+    }
+    SearchResult { best: best.1, best_duration: best.0, probes }
+}
+
+/// Uniform random search with a probe budget — the naive auto-tuner.
+pub fn random_search(
+    eval: &mut dyn ConfigEvaluator,
+    budget: usize,
+    rng: &mut Rng,
+) -> SearchResult {
+    let dims = ConfigIndex::dims();
+    let mut best = (f64::INFINITY, ConfigIndex([0; 6]));
+    for _ in 0..budget {
+        let mut idx = [0usize; 6];
+        for (d, i) in idx.iter_mut().enumerate() {
+            *i = rng.range_usize(0, dims[d]);
+        }
+        let ci = ConfigIndex(idx);
+        let dur = eval.measure(ci);
+        if dur < best.0 {
+            best = (dur, ci);
+        }
+    }
+    SearchResult { best: best.1, best_duration: best.0, probes: budget }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcluster::perfmodel::job_duration;
+
+    #[test]
+    fn exhaustive_is_true_argmin() {
+        let mut eval = |c: ConfigIndex| job_duration(0, &c.to_config());
+        let r = exhaustive(&mut eval);
+        assert_eq!(r.probes, ConfigIndex::grid_size());
+        // no grid point beats it
+        for ci in ConfigIndex::enumerate_all() {
+            assert!(job_duration(0, &ci.to_config()) >= r.best_duration - 1e-12);
+        }
+    }
+
+    #[test]
+    fn rule_of_thumb_is_valid_and_decent() {
+        let rot = rule_of_thumb();
+        let c = rot.to_config();
+        assert_eq!(c.executor_cores, 5);
+        assert!(c.compression);
+        // decent but not optimal on a cpu-bound class
+        let mut eval = |ci: ConfigIndex| job_duration(3, &ci.to_config());
+        let oracle = exhaustive(&mut eval).best_duration;
+        let rot_d = job_duration(3, &c);
+        assert!(rot_d > oracle, "rule of thumb should not be optimal");
+        assert!(rot_d < 6.0 * oracle, "but not catastrophic either");
+    }
+
+    #[test]
+    fn random_search_improves_with_budget() {
+        let mut rng_a = Rng::new(0);
+        let mut rng_b = Rng::new(0);
+        let mut e1 = |c: ConfigIndex| job_duration(2, &c.to_config());
+        let mut e2 = |c: ConfigIndex| job_duration(2, &c.to_config());
+        let small = random_search(&mut e1, 5, &mut rng_a);
+        let large = random_search(&mut e2, 200, &mut rng_b);
+        assert!(large.best_duration <= small.best_duration);
+    }
+}

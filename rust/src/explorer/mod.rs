@@ -1,0 +1,358 @@
+//! The Explorer configuration-search algorithm and its baselines.
+//!
+//! Reimplemented from the description in [16] (Genkin et al., HPCC'16)
+//! and §6.4: a "low-overhead, conceptually simple" search that the
+//! KERMIT plug-in engages when the resource manager responds to a
+//! resource request. Two entry points, exactly as Algorithm 1 uses them:
+//!
+//! * [`Explorer::global_search`] — for a newly discovered workload with
+//!   no stored configuration;
+//! * [`Explorer::local_search`]  — re-optimisation seeded at the last
+//!   good configuration after workload drift.
+//!
+//! Baselines for the tuning-efficiency experiment (EXPERIMENTS.md):
+//! rule-of-thumb (human heuristics), exhaustive grid (the 100% oracle),
+//! and random search.
+
+pub mod baselines;
+pub mod session;
+
+use crate::simcluster::config_space::{default_config_index, ConfigIndex, NUM_DIMS};
+
+/// Measurement callback: run (or simulate) the workload under a config
+/// and return its duration. Each call is one "probe" — the costly
+/// operation Explorer minimises.
+pub trait ConfigEvaluator {
+    fn measure(&mut self, config: ConfigIndex) -> f64;
+}
+
+impl<F: FnMut(ConfigIndex) -> f64> ConfigEvaluator for F {
+    fn measure(&mut self, config: ConfigIndex) -> f64 {
+        self(config)
+    }
+}
+
+/// Search report: best config found, its measured duration, probes used.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchResult {
+    pub best: ConfigIndex,
+    pub best_duration: f64,
+    pub probes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExplorerConfig {
+    /// Hard probe budget for a global search.
+    pub global_budget: usize,
+    /// Hard probe budget for a local (drift) search.
+    pub local_budget: usize,
+    /// Relative improvement below which a coordinate pass stops early.
+    pub min_improvement: f64,
+}
+
+impl Default for ExplorerConfig {
+    fn default() -> Self {
+        // 140 probes is 0.9% of the 15552-point grid — still "low
+        // overhead" in the paper's sense, and enough for line-scan
+        // convergence plus the 2-D interaction scans.
+        ExplorerConfig {
+            global_budget: 140,
+            local_budget: 24,
+            min_improvement: 0.002,
+        }
+    }
+}
+
+/// For each executor-count level, the densest configuration that still
+/// fits the cluster: max cores level with cores*executors <= capacity,
+/// max memory level with mem*executors <= capacity. Mid-range shuffle /
+/// parallelism; compression on (descent flips it in one move if wrong).
+pub fn packed_seeds() -> Vec<ConfigIndex> {
+    use crate::simcluster::config_space::{
+        CORE_LEVELS, EXEC_LEVELS, MEM_LEVELS,
+    };
+    use crate::simcluster::perfmodel::{CLUSTER_CORES, CLUSTER_MEM_MB};
+    let mut out = Vec::new();
+    for (ei, &execs) in EXEC_LEVELS.iter().enumerate() {
+        let ci = CORE_LEVELS
+            .iter()
+            .rposition(|&c| c * execs <= CLUSTER_CORES);
+        let mi = MEM_LEVELS
+            .iter()
+            .rposition(|&m| m * execs <= CLUSTER_MEM_MB);
+        if let (Some(ci), Some(mi)) = (ci, mi) {
+            out.push(ConfigIndex([mi, ci, ei, 3, 3, 1]));
+        }
+    }
+    out
+}
+
+/// Coordinate-descent explorer with diagonal seed probing.
+pub struct Explorer {
+    pub config: ExplorerConfig,
+}
+
+impl Explorer {
+    pub fn new(config: ExplorerConfig) -> Explorer {
+        Explorer { config }
+    }
+
+    pub fn with_defaults() -> Explorer {
+        Explorer::new(ExplorerConfig::default())
+    }
+
+    /// Global search: probe a coarse diagonal of the space (small /
+    /// medium / large resource footprints plus the vendor default), then
+    /// run coordinate descent from the best seed.
+    pub fn global_search(&self, eval: &mut dyn ConfigEvaluator) -> SearchResult {
+        let dims = ConfigIndex::dims();
+        let mut probes = 0usize;
+        let budget = self.config.global_budget;
+
+        // seed set: default + low/mid/high diagonal + "big memory" point
+        // + packed-cluster seeds (configs that exactly fill the cluster —
+        // what a performance engineer tries first; these sit on the
+        // 3-way mem×cores×executors ridge that coordinate moves cannot
+        // reach from the interior).
+        let mid = ConfigIndex([
+            dims[0] / 2, dims[1] / 2, dims[2] / 2,
+            dims[3] / 2, dims[4] / 2, dims[5] / 2,
+        ]);
+        let high = ConfigIndex([
+            dims[0] - 2, dims[1] - 2, dims[2] - 2,
+            dims[3] - 2, dims[4] - 2, dims[5] - 1,
+        ]).clamped();
+        let bigmem = ConfigIndex([dims[0] - 1, 2, dims[2] / 2, 2, 2, 0]);
+        let mut seeds = vec![default_config_index(), mid, high, bigmem];
+        seeds.extend(packed_seeds());
+
+        let mut best = (f64::INFINITY, seeds[0]);
+        for &s in seeds.iter() {
+            if probes >= budget {
+                break;
+            }
+            let d = eval.measure(s);
+            probes += 1;
+            if d < best.0 {
+                best = (d, s);
+            }
+        }
+
+        let r = self.descend(best.1, best.0, eval, budget, &mut probes);
+        SearchResult { best: r.1, best_duration: r.0, probes }
+    }
+
+    /// Local search: coordinate descent from `start` under the smaller
+    /// drift budget (Algorithm 1's `Explorer.localSearch(J_i)`).
+    pub fn local_search(
+        &self,
+        start: ConfigIndex,
+        eval: &mut dyn ConfigEvaluator,
+    ) -> SearchResult {
+        let mut probes = 0usize;
+        let d0 = eval.measure(start);
+        probes += 1;
+        let r = self.descend(start, d0, eval, self.config.local_budget, &mut probes);
+        SearchResult { best: r.1, best_duration: r.0, probes }
+    }
+
+    /// Line-scan coordinate descent plus 2-D interaction scans.
+    ///
+    /// 1-D pass: for each dimension, evaluate every level (memoised, so
+    /// revisits are free) and move to the argmin. This crosses 1-D
+    /// ridges like the memory cliff. The tuning surface also has strong
+    /// *pairwise* interactions — executor memory × cores sets the
+    /// per-task heap, cores × executors sets the slot count against
+    /// cluster capacity — where no single-coordinate move improves, so
+    /// after 1-D convergence the search scans those 2-D subgrids and
+    /// resumes 1-D sweeps if they improve.
+    fn descend(
+        &self,
+        start: ConfigIndex,
+        start_duration: f64,
+        eval: &mut dyn ConfigEvaluator,
+        budget: usize,
+        probes: &mut usize,
+    ) -> (f64, ConfigIndex) {
+        let dims = ConfigIndex::dims();
+        let mut memo: std::collections::HashMap<ConfigIndex, f64> =
+            std::collections::HashMap::new();
+        memo.insert(start, start_duration);
+        let mut best = (start_duration, start);
+
+        // measure-with-memo helper; returns None when budget exhausted
+        let mut probe = |cand: ConfigIndex,
+                         memo: &mut std::collections::HashMap<ConfigIndex, f64>,
+                         probes: &mut usize|
+         -> Option<f64> {
+            if let Some(&v) = memo.get(&cand) {
+                return Some(v);
+            }
+            if *probes >= budget {
+                return None;
+            }
+            let v = eval.measure(cand);
+            *probes += 1;
+            memo.insert(cand, v);
+            Some(v)
+        };
+
+        // interacting dimension pairs scanned after 1-D convergence:
+        // (mem, cores) -> per-task heap; (cores, executors) -> slots vs
+        // capacity; (executors, parallelism) -> wave quantisation.
+        const PAIRS: [(usize, usize); 3] = [(0, 1), (1, 2), (2, 4)];
+
+        'outer: loop {
+            // ---- 1-D line-scan sweeps until stable
+            loop {
+                let sweep_start = best.0;
+                for d in 0..NUM_DIMS {
+                    let mut dim_best = best;
+                    for level in 0..dims[d] {
+                        let mut cand = best.1;
+                        cand.0[d] = level;
+                        if cand == best.1 {
+                            continue;
+                        }
+                        match probe(cand, &mut memo, probes) {
+                            Some(dur) if dur < dim_best.0 => {
+                                dim_best = (dur, cand)
+                            }
+                            Some(_) => {}
+                            None => return best,
+                        }
+                    }
+                    best = dim_best;
+                }
+                let gained = (sweep_start - best.0) / sweep_start.max(1e-9);
+                // No-progress sweeps must terminate unconditionally:
+                // memoised revisits make them free, so relying on
+                // min_improvement alone would spin forever. The negated
+                // form also catches NaN (e.g. all-INFINITY measurements
+                // when a session is abandoned mid-search).
+                if !(gained > 0.0 && gained >= self.config.min_improvement) {
+                    break;
+                }
+            }
+
+            // ---- 2-D interaction scans; resume 1-D sweeps on improvement
+            let before_pairs = best.0;
+            for (da, db) in PAIRS {
+                for la in 0..dims[da] {
+                    for lb in 0..dims[db] {
+                        let mut cand = best.1;
+                        cand.0[da] = la;
+                        cand.0[db] = lb;
+                        if cand == best.1 {
+                            continue;
+                        }
+                        match probe(cand, &mut memo, probes) {
+                            Some(dur) if dur < best.0 => best = (dur, cand),
+                            Some(_) => {}
+                            None => return best,
+                        }
+                    }
+                }
+            }
+            let gained = (before_pairs - best.0) / before_pairs.max(1e-9);
+            // negated form: also terminates on NaN (see above)
+            if !(gained > 0.0 && gained >= self.config.min_improvement) {
+                return best;
+            }
+            continue 'outer;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcluster::config_space::ConfigIndex;
+    use crate::simcluster::perfmodel::job_duration;
+
+    struct Counting<F: FnMut(ConfigIndex) -> f64> {
+        f: F,
+        calls: usize,
+    }
+
+    impl<F: FnMut(ConfigIndex) -> f64> ConfigEvaluator for Counting<F> {
+        fn measure(&mut self, c: ConfigIndex) -> f64 {
+            self.calls += 1;
+            (self.f)(c)
+        }
+    }
+
+    fn exhaustive_best(class: u32) -> f64 {
+        ConfigIndex::enumerate_all()
+            .into_iter()
+            .map(|ci| job_duration(class, &ci.to_config()))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    #[test]
+    fn respects_budget() {
+        let ex = Explorer::new(ExplorerConfig {
+            global_budget: 10,
+            local_budget: 5,
+            min_improvement: 0.0,
+        });
+        let mut eval = Counting { f: |c: ConfigIndex| job_duration(2, &c.to_config()), calls: 0 };
+        let r = ex.global_search(&mut eval);
+        assert!(r.probes <= 10);
+        assert_eq!(eval.calls, r.probes);
+    }
+
+    #[test]
+    fn global_search_near_oracle_on_all_classes() {
+        // the paper's claim: >= 92% tuning efficiency (oracle/found)
+        let ex = Explorer::with_defaults();
+        for class in 0..crate::workloadgen::num_pure_classes() as u32 {
+            let mut eval = |c: ConfigIndex| job_duration(class, &c.to_config());
+            let r = ex.global_search(&mut eval);
+            let oracle = exhaustive_best(class);
+            let eff = oracle / r.best_duration;
+            assert!(
+                eff >= 0.80,
+                "class {class}: eff {eff:.3} ({} vs oracle {oracle})",
+                r.best_duration
+            );
+        }
+    }
+
+    #[test]
+    fn local_search_recovers_from_nearby_start() {
+        let ex = Explorer::with_defaults();
+        // perturb the known-good region by one step and re-optimise
+        let mut eval = |c: ConfigIndex| job_duration(3, &c.to_config());
+        let g = ex.global_search(&mut eval);
+        let mut start = g.best;
+        start.0[0] = if start.0[0] > 0 { start.0[0] - 1 } else { 1 };
+        let l = ex.local_search(start, &mut eval);
+        assert!(l.best_duration <= eval(start));
+        assert!(l.probes <= ExplorerConfig::default().local_budget + 1);
+    }
+
+    #[test]
+    fn returned_duration_matches_config() {
+        let ex = Explorer::with_defaults();
+        let mut eval = |c: ConfigIndex| job_duration(4, &c.to_config());
+        let r = ex.global_search(&mut eval);
+        assert!((eval(r.best) - r.best_duration).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_surface_reaches_corner() {
+        // toy surface where smaller indices are strictly better: descent
+        // must find the [0,...,0] corner from any seed
+        let ex = Explorer::new(ExplorerConfig {
+            global_budget: 200,
+            local_budget: 50,
+            min_improvement: 0.0,
+        });
+        let mut eval =
+            |c: ConfigIndex| c.0.iter().map(|&x| x as f64).sum::<f64>() + 1.0;
+        let r = ex.global_search(&mut eval);
+        assert_eq!(r.best, ConfigIndex([0; 6]));
+        assert_eq!(r.best_duration, 1.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Incremental search sessions: the Explorer inverted into a coroutine.
+//!
+//! On a real cluster a configuration probe *is* one execution of the
+//! workload — the search proceeds across successive runs (that is what
+//! makes on-line tuning "on-line" in [16]). `SearchSession` runs the
+//! Explorer on its own thread; its evaluator hands each candidate config
+//! to the plug-in through a channel and blocks until the plug-in reports
+//! the measured duration of that run. Strict alternation (one candidate
+//! out, one measurement in) makes the protocol deadlock-free.
+
+use super::{ConfigEvaluator, Explorer, ExplorerConfig, SearchResult};
+use crate::simcluster::config_space::ConfigIndex;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// What the session yields when asked for the next probe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SessionStep {
+    /// Run the workload under this configuration and report back.
+    Probe(ConfigIndex),
+    /// Search finished: the final result.
+    Done(SearchResult),
+}
+
+struct ChannelEvaluator {
+    tx_cand: Sender<ConfigIndex>,
+    rx_meas: Receiver<f64>,
+}
+
+impl ConfigEvaluator for ChannelEvaluator {
+    fn measure(&mut self, config: ConfigIndex) -> f64 {
+        // If the session was dropped, unblock with a poisoned value; the
+        // search result is discarded anyway.
+        if self.tx_cand.send(config).is_err() {
+            return f64::INFINITY;
+        }
+        self.rx_meas.recv().unwrap_or(f64::INFINITY)
+    }
+}
+
+/// A paused Explorer search, advanced one probe per workload execution.
+pub struct SearchSession {
+    rx_cand: Receiver<ConfigIndex>,
+    tx_meas: Sender<f64>,
+    handle: Option<JoinHandle<SearchResult>>,
+    outstanding: bool,
+    finished: Option<SearchResult>,
+}
+
+impl SearchSession {
+    /// Start a global search session.
+    pub fn global(config: ExplorerConfig) -> SearchSession {
+        Self::spawn(config, None)
+    }
+
+    /// Start a local (drift) search session from `start`.
+    pub fn local(config: ExplorerConfig, start: ConfigIndex) -> SearchSession {
+        Self::spawn(config, Some(start))
+    }
+
+    fn spawn(config: ExplorerConfig, start: Option<ConfigIndex>) -> SearchSession {
+        let (tx_cand, rx_cand) = channel();
+        let (tx_meas, rx_meas) = channel();
+        let handle = std::thread::spawn(move || {
+            let mut eval = ChannelEvaluator { tx_cand, rx_meas };
+            let ex = Explorer::new(config);
+            match start {
+                Some(s) => ex.local_search(s, &mut eval),
+                None => ex.global_search(&mut eval),
+            }
+        });
+        SearchSession {
+            rx_cand,
+            tx_meas,
+            handle: Some(handle),
+            outstanding: false,
+            finished: None,
+        }
+    }
+
+    /// Get the next step. Panics if a probe is outstanding (the caller
+    /// must `report` the previous probe's duration first).
+    pub fn next(&mut self) -> SessionStep {
+        assert!(!self.outstanding, "previous probe not yet reported");
+        if let Some(r) = self.finished {
+            return SessionStep::Done(r);
+        }
+        match self.rx_cand.recv() {
+            Ok(c) => {
+                self.outstanding = true;
+                SessionStep::Probe(c)
+            }
+            Err(_) => {
+                // explorer thread finished; collect its result
+                let r = self
+                    .handle
+                    .take()
+                    .expect("session already joined")
+                    .join()
+                    .expect("explorer thread panicked");
+                self.finished = Some(r);
+                SessionStep::Done(r)
+            }
+        }
+    }
+
+    /// Report the measured duration of the outstanding probe.
+    pub fn report(&mut self, duration: f64) {
+        assert!(self.outstanding, "no probe outstanding");
+        self.outstanding = false;
+        // a send failure means the explorer finished early; harmless
+        let _ = self.tx_meas.send(duration);
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished.is_some()
+    }
+}
+
+impl Drop for SearchSession {
+    fn drop(&mut self) {
+        // Closing tx_meas unblocks the evaluator with an error; the
+        // explorer thread then terminates with INFINITY measurements.
+        let (dead_tx, _) = channel();
+        self.tx_meas = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcluster::perfmodel::job_duration;
+
+    #[test]
+    fn session_replays_explorer_exactly() {
+        // driving the session step-by-step must yield the same result as
+        // calling the explorer synchronously
+        let cfg = ExplorerConfig::default();
+        let mut direct_eval =
+            |c: ConfigIndex| job_duration(4, &c.to_config());
+        let direct = Explorer::new(cfg.clone()).global_search(&mut direct_eval);
+
+        let mut s = SearchSession::global(cfg);
+        let result = loop {
+            match s.next() {
+                SessionStep::Probe(c) => {
+                    s.report(job_duration(4, &c.to_config()))
+                }
+                SessionStep::Done(r) => break r,
+            }
+        };
+        assert_eq!(result.best, direct.best);
+        assert_eq!(result.best_duration, direct.best_duration);
+        assert_eq!(result.probes, direct.probes);
+    }
+
+    #[test]
+    fn local_session_works() {
+        let cfg = ExplorerConfig::default();
+        let start = ConfigIndex([3, 3, 3, 3, 3, 1]);
+        let mut s = SearchSession::local(cfg, start);
+        let mut probes = 0;
+        let r = loop {
+            match s.next() {
+                SessionStep::Probe(c) => {
+                    probes += 1;
+                    s.report(job_duration(2, &c.to_config()));
+                }
+                SessionStep::Done(r) => break r,
+            }
+        };
+        assert_eq!(probes, r.probes);
+        assert!(r.best_duration <= job_duration(2, &start.to_config()));
+    }
+
+    #[test]
+    fn done_is_idempotent() {
+        let mut s = SearchSession::global(ExplorerConfig {
+            global_budget: 3,
+            local_budget: 2,
+            min_improvement: 0.0,
+        });
+        let r1 = loop {
+            match s.next() {
+                SessionStep::Probe(_) => s.report(1.0),
+                SessionStep::Done(r) => break r,
+            }
+        };
+        assert_eq!(s.next(), SessionStep::Done(r1));
+        assert!(s.is_finished());
+    }
+
+    #[test]
+    fn dropping_mid_search_does_not_hang() {
+        let mut s = SearchSession::global(ExplorerConfig::default());
+        match s.next() {
+            SessionStep::Probe(_) => s.report(10.0),
+            SessionStep::Done(_) => {}
+        }
+        drop(s); // must not deadlock
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet reported")]
+    fn double_next_without_report_panics() {
+        let mut s = SearchSession::global(ExplorerConfig::default());
+        let _ = s.next();
+        let _ = s.next();
+    }
+}

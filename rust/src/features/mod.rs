@@ -1,0 +1,199 @@
+//! Workload feature space: observation windows `O_t`, feature vectors
+//! `F_t`, analytic windows `A_t`, and the rate-of-change transform `A'_t`
+//! used by the TransitionClassifier (paper §7.2 step 5).
+//!
+//! The feature vector width and ordering here MUST match
+//! `python/compile/shapes.py::NUM_FEATURES` — the runtime asserts this
+//! against the artifact manifest at startup.
+
+/// Number of container performance counters per observation window.
+pub const NUM_FEATURES: usize = 16;
+
+/// Names of the 16 counters, in vector order. These mirror what the
+/// KERMIT agents (KAgnt) would scrape from /proc + the resource manager
+/// on a real cluster.
+pub const FEATURE_NAMES: [&str; NUM_FEATURES] = [
+    "cpu_user",
+    "cpu_sys",
+    "cpu_iowait",
+    "mem_used",
+    "mem_cache",
+    "disk_read",
+    "disk_write",
+    "net_rx",
+    "net_tx",
+    "ctx_switches",
+    "page_faults",
+    "gc_time",
+    "task_queue",
+    "shuffle_bytes",
+    "hdfs_read",
+    "hdfs_write",
+];
+
+/// A point-in-time feature vector (one aggregated metrics sample).
+pub type FeatureVec = [f64; NUM_FEATURES];
+
+pub fn zero_features() -> FeatureVec {
+    [0.0; NUM_FEATURES]
+}
+
+/// An observation window `O_t`: the aggregation of `samples` raw metric
+/// samples over one monitoring interval, with per-feature mean and
+/// variance. This is the unit every KERMIT algorithm operates on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObservationWindow {
+    /// Monotone window index assigned by the monitor.
+    pub index: u64,
+    /// Simulated wall-clock time (seconds) at window close.
+    pub time: f64,
+    /// Number of raw samples aggregated.
+    pub samples: usize,
+    /// Per-feature mean over the window.
+    pub mean: FeatureVec,
+    /// Per-feature population variance over the window.
+    pub var: FeatureVec,
+    /// Ground-truth workload id from the generator (None on a real
+    /// cluster; used only for accuracy scoring, never by the algorithms).
+    pub truth: Option<u32>,
+}
+
+impl ObservationWindow {
+    /// Aggregate raw samples into a window. Panics on empty input.
+    pub fn aggregate(
+        index: u64,
+        time: f64,
+        samples: &[FeatureVec],
+        truth: Option<u32>,
+    ) -> ObservationWindow {
+        assert!(!samples.is_empty(), "aggregate over empty window");
+        let n = samples.len() as f64;
+        let mut mean = zero_features();
+        let mut var = zero_features();
+        for s in samples {
+            for (m, x) in mean.iter_mut().zip(s.iter()) {
+                *m += x;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n;
+        }
+        for s in samples {
+            for i in 0..NUM_FEATURES {
+                let d = s[i] - mean[i];
+                var[i] += d * d;
+            }
+        }
+        for v in var.iter_mut() {
+            *v /= n;
+        }
+        ObservationWindow { index, time, samples: samples.len(), mean, var, truth }
+    }
+}
+
+/// An analytic window `A_t`: the feature representation handed to the
+/// classifiers. Currently the window mean concatenated with the window
+/// std — richer than the raw mean, cheap to compute, and what [7]'s
+/// container-pattern classification uses.
+#[derive(Debug, Clone)]
+pub struct AnalyticWindow {
+    pub index: u64,
+    pub features: Vec<f64>,
+    pub truth: Option<u32>,
+}
+
+impl AnalyticWindow {
+    pub fn from_observation(o: &ObservationWindow) -> AnalyticWindow {
+        let mut features = Vec::with_capacity(2 * NUM_FEATURES);
+        features.extend_from_slice(&o.mean);
+        features.extend(o.var.iter().map(|v| v.sqrt()));
+        AnalyticWindow { index: o.index, features, truth: o.truth }
+    }
+
+    pub fn width() -> usize {
+        2 * NUM_FEATURES
+    }
+}
+
+/// Rate-of-change transform `{A_t} -> {A'_t}` (paper §7.2 step 5): the
+/// TransitionClassifier sees deltas between consecutive analytic windows,
+/// which makes transition *shapes* (e.g. map->reduce) comparable across
+/// workloads with different absolute levels.
+///
+/// Output has length `input.len() - 1`; `A'_t = A_{t+1} - A_t`.
+pub fn rate_of_change(windows: &[AnalyticWindow]) -> Vec<AnalyticWindow> {
+    windows
+        .windows(2)
+        .map(|pair| AnalyticWindow {
+            index: pair[1].index,
+            features: pair[1]
+                .features
+                .iter()
+                .zip(&pair[0].features)
+                .map(|(b, a)| b - a)
+                .collect(),
+            truth: pair[1].truth,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fv(val: f64) -> FeatureVec {
+        [val; NUM_FEATURES]
+    }
+
+    #[test]
+    fn aggregate_mean_and_var() {
+        let samples = vec![fv(1.0), fv(3.0)];
+        let w = ObservationWindow::aggregate(0, 10.0, &samples, Some(7));
+        assert_eq!(w.samples, 2);
+        assert_eq!(w.truth, Some(7));
+        for i in 0..NUM_FEATURES {
+            assert!((w.mean[i] - 2.0).abs() < 1e-12);
+            assert!((w.var[i] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn aggregate_single_sample_zero_var() {
+        let w = ObservationWindow::aggregate(1, 0.0, &[fv(5.0)], None);
+        for i in 0..NUM_FEATURES {
+            assert_eq!(w.var[i], 0.0);
+            assert_eq!(w.mean[i], 5.0);
+        }
+    }
+
+    #[test]
+    fn analytic_window_concat_mean_std() {
+        let samples = vec![fv(0.0), fv(2.0)];
+        let o = ObservationWindow::aggregate(0, 0.0, &samples, None);
+        let a = AnalyticWindow::from_observation(&o);
+        assert_eq!(a.features.len(), AnalyticWindow::width());
+        assert!((a.features[0] - 1.0).abs() < 1e-12); // mean
+        assert!((a.features[NUM_FEATURES] - 1.0).abs() < 1e-12); // std
+    }
+
+    #[test]
+    fn rate_of_change_deltas() {
+        let mk = |idx, v: f64| AnalyticWindow {
+            index: idx,
+            features: vec![v, 2.0 * v],
+            truth: None,
+        };
+        let rocs = rate_of_change(&[mk(0, 1.0), mk(1, 4.0), mk(2, 2.0)]);
+        assert_eq!(rocs.len(), 2);
+        assert_eq!(rocs[0].features, vec![3.0, 6.0]);
+        assert_eq!(rocs[1].features, vec![-2.0, -4.0]);
+        assert_eq!(rocs[1].index, 2);
+    }
+
+    #[test]
+    fn rate_of_change_empty_and_single() {
+        assert!(rate_of_change(&[]).is_empty());
+        let one = AnalyticWindow { index: 0, features: vec![1.0], truth: None };
+        assert!(rate_of_change(&[one]).is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+//! The KERMIT workload knowledge base (paper §6.4, Figures 5 & 11):
+//! WorkloadDB with workload characterizations, configurations and flags,
+//! plus the landing/transformation/analytics zone layout.
+
+pub mod workload_db;
+pub mod zones;
+
+pub use workload_db::{Characterization, WorkloadDb, WorkloadEntry};
+pub use zones::KnowledgeZones;

@@ -1,0 +1,453 @@
+//! WorkloadDB — the entity model of Figure 11.
+//!
+//! Each workload is keyed by its generated integer label (paper §7.1:
+//! "KERMIT implements a simple integer counter") and stores:
+//! * the workload characterization — per-feature statistics (mean, std,
+//!   min, max, p75, p90) over the member observation windows;
+//! * the cluster centroid;
+//! * `optimal_config_found` flag and the stored configuration;
+//! * `is_drifting` flag.
+//!
+//! Workloads are never deleted ("KERMIT retains a long-term memory of
+//! workloads"). Persistence is JSON through `util::json` so the DB
+//! survives restarts and is human-inspectable.
+
+use crate::features::NUM_FEATURES;
+use crate::simcluster::config_space::ConfigIndex;
+use crate::stats::{l2_distance, Summary};
+use crate::util::json::{Json, JsonError};
+use std::collections::BTreeMap;
+
+/// Per-feature statistics of a workload's observation windows — the
+/// paper's "workload characterization" (§7.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Characterization {
+    /// One Summary per feature (NUM_FEATURES wide; analytic windows use
+    /// 2x width — the width is carried by the data).
+    pub per_feature: Vec<Summary>,
+}
+
+impl Characterization {
+    /// Characterize a cluster of feature vectors.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Characterization {
+        assert!(!rows.is_empty());
+        let w = rows[0].len();
+        let per_feature = (0..w)
+            .map(|j| {
+                let col: Vec<f64> = rows.iter().map(|r| r[j]).collect();
+                Summary::of(&col)
+            })
+            .collect();
+        Characterization { per_feature }
+    }
+
+    pub fn mean_vector(&self) -> Vec<f64> {
+        self.per_feature.iter().map(|s| s.mean).collect()
+    }
+
+    /// L2 distance between mean vectors — the drift / identity metric of
+    /// Algorithm 2.
+    pub fn mean_distance(&self, other: &Characterization) -> f64 {
+        l2_distance(&self.mean_vector(), &other.mean_vector())
+    }
+}
+
+/// One WorkloadDB row (Figure 11).
+#[derive(Debug, Clone)]
+pub struct WorkloadEntry {
+    pub label: u32,
+    pub characterization: Characterization,
+    pub centroid: Vec<f64>,
+    pub optimal_config_found: bool,
+    pub is_drifting: bool,
+    /// Stored configuration (may be non-optimal when drifting).
+    pub config: Option<ConfigIndex>,
+    /// Number of observation windows characterised (bookkeeping).
+    pub window_count: usize,
+    /// True for ZSL-synthesised anticipated classes (paper §7.2 7c).
+    pub synthetic: bool,
+    /// For synthetic classes: the (pure, pure) parent pair.
+    pub parents: Option<(u32, u32)>,
+}
+
+/// The database: label -> entry, with a monotone label counter.
+#[derive(Debug, Default)]
+pub struct WorkloadDb {
+    entries: BTreeMap<u32, WorkloadEntry>,
+    next_label: u32,
+}
+
+impl WorkloadDb {
+    pub fn new() -> WorkloadDb {
+        WorkloadDb::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, label: u32) -> Option<&WorkloadEntry> {
+        self.entries.get(&label)
+    }
+
+    pub fn get_mut(&mut self, label: u32) -> Option<&mut WorkloadEntry> {
+        self.entries.get_mut(&label)
+    }
+
+    pub fn labels(&self) -> Vec<u32> {
+        self.entries.keys().copied().collect()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &WorkloadEntry> {
+        self.entries.values()
+    }
+
+    /// Insert a newly discovered workload; assigns and returns the next
+    /// integer label (paper §7.1 label generation).
+    pub fn insert_new(
+        &mut self,
+        characterization: Characterization,
+        centroid: Vec<f64>,
+        window_count: usize,
+        synthetic: bool,
+    ) -> u32 {
+        self.insert_with_parents(
+            characterization,
+            centroid,
+            window_count,
+            synthetic,
+            None,
+        )
+    }
+
+    /// Insert with an explicit parent pair (ZSL-synthesised classes).
+    pub fn insert_with_parents(
+        &mut self,
+        characterization: Characterization,
+        centroid: Vec<f64>,
+        window_count: usize,
+        synthetic: bool,
+        parents: Option<(u32, u32)>,
+    ) -> u32 {
+        let label = self.next_label;
+        self.next_label += 1;
+        self.entries.insert(
+            label,
+            WorkloadEntry {
+                label,
+                characterization,
+                centroid,
+                optimal_config_found: false,
+                is_drifting: false,
+                config: None,
+                window_count,
+                synthetic,
+                parents,
+            },
+        );
+        label
+    }
+
+    /// True if a synthetic class for this (unordered) parent pair exists.
+    pub fn has_synthetic_pair(&self, a: u32, b: u32) -> bool {
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.entries
+            .values()
+            .any(|e| e.synthetic && e.parents == Some(key))
+    }
+
+    /// Find the stored workload whose characterization mean is nearest
+    /// to `c`, returning (label, distance). Used by Algorithm 2's "find
+    /// match in WorkloadDB" (via the ChangeDetector statistic) and by the
+    /// on-line classifier's nearest-centroid fallback.
+    pub fn nearest(&self, c: &Characterization) -> Option<(u32, f64)> {
+        self.entries
+            .values()
+            .map(|e| (e.label, e.characterization.mean_distance(c)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Nearest among *observed* (non-synthetic) workloads — what
+    /// Algorithm 2's match step uses: a discovered cluster is real data
+    /// and must not merge into a ZSL prototype. (A hybrid that matches
+    /// its anticipated prototype still gets its own observed entry; the
+    /// classifier handles naming hybrids, the DB tracks observations.)
+    pub fn nearest_observed(&self, c: &Characterization) -> Option<(u32, f64)> {
+        self.entries
+            .values()
+            .filter(|e| !e.synthetic)
+            .map(|e| (e.label, e.characterization.mean_distance(c)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Record the optimal configuration for a workload (Algorithm 1's
+    /// "Update WorkloadDB with J_i^o").
+    pub fn set_optimal_config(&mut self, label: u32, config: ConfigIndex) {
+        let e = self.entries.get_mut(&label).expect("unknown label");
+        e.config = Some(config);
+        e.optimal_config_found = true;
+        e.is_drifting = false;
+    }
+
+    /// Mark drift: keeps the stale config but clears the optimal flag
+    /// (Algorithm 2's "update isDrifting to True").
+    pub fn mark_drifting(
+        &mut self,
+        label: u32,
+        new_characterization: Characterization,
+        new_centroid: Vec<f64>,
+        window_count: usize,
+    ) {
+        let e = self.entries.get_mut(&label).expect("unknown label");
+        e.is_drifting = true;
+        e.optimal_config_found = false;
+        e.characterization = new_characterization;
+        e.centroid = new_centroid;
+        e.window_count = window_count;
+    }
+
+    /// Refresh a matched (non-drifting) workload's characterization with
+    /// new data (Algorithm 2's regular update).
+    pub fn refresh(
+        &mut self,
+        label: u32,
+        characterization: Characterization,
+        window_count: usize,
+    ) {
+        let e = self.entries.get_mut(&label).expect("unknown label");
+        e.characterization = characterization;
+        e.window_count += window_count;
+    }
+
+    // ---- persistence -----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut workloads = Vec::new();
+        for e in self.entries.values() {
+            let mut o = Json::obj();
+            o.set("label", Json::Num(e.label as f64))
+                .set("optimal_config_found", Json::Bool(e.optimal_config_found))
+                .set("is_drifting", Json::Bool(e.is_drifting))
+                .set("window_count", Json::Num(e.window_count as f64))
+                .set("synthetic", Json::Bool(e.synthetic))
+                .set("centroid", Json::from_f64_slice(&e.centroid))
+                .set(
+                    "characterization",
+                    Json::Arr(
+                        e.characterization
+                            .per_feature
+                            .iter()
+                            .map(|s| {
+                                Json::from_f64_slice(&[
+                                    s.n as f64, s.mean, s.std, s.min,
+                                    s.max, s.p75, s.p90,
+                                ])
+                            })
+                            .collect(),
+                    ),
+                );
+            match e.config {
+                Some(ci) => {
+                    o.set(
+                        "config",
+                        Json::Arr(
+                            ci.0.iter()
+                                .map(|&i| Json::Num(i as f64))
+                                .collect(),
+                        ),
+                    );
+                }
+                None => {
+                    o.set("config", Json::Null);
+                }
+            }
+            match e.parents {
+                Some((a, b)) => {
+                    o.set(
+                        "parents",
+                        Json::from_f64_slice(&[a as f64, b as f64]),
+                    );
+                }
+                None => {
+                    o.set("parents", Json::Null);
+                }
+            }
+            workloads.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("next_label", Json::Num(self.next_label as f64))
+            .set("workloads", Json::Arr(workloads));
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkloadDb, JsonError> {
+        let mut db = WorkloadDb::new();
+        db.next_label = j.get("next_label")?.as_usize()? as u32;
+        for w in j.get("workloads")?.as_arr()? {
+            let label = w.get("label")?.as_usize()? as u32;
+            let per_feature = w
+                .get("characterization")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    let v = s.f64s()?;
+                    Ok(Summary {
+                        n: v[0] as usize,
+                        mean: v[1],
+                        std: v[2],
+                        min: v[3],
+                        max: v[4],
+                        p75: v[5],
+                        p90: v[6],
+                    })
+                })
+                .collect::<Result<Vec<_>, JsonError>>()?;
+            let config = match w.get("config")? {
+                Json::Null => None,
+                arr => {
+                    let v = arr.f64s()?;
+                    let mut idx = [0usize; 6];
+                    for (d, x) in v.iter().enumerate().take(6) {
+                        idx[d] = *x as usize;
+                    }
+                    Some(ConfigIndex(idx))
+                }
+            };
+            let parents = match w.get_opt("parents") {
+                None | Some(Json::Null) => None,
+                Some(arr) => {
+                    let v = arr.f64s()?;
+                    Some((v[0] as u32, v[1] as u32))
+                }
+            };
+            db.entries.insert(
+                label,
+                WorkloadEntry {
+                    label,
+                    characterization: Characterization { per_feature },
+                    centroid: w.get("centroid")?.f64s()?,
+                    optimal_config_found: w
+                        .get("optimal_config_found")?
+                        .as_bool()?,
+                    is_drifting: w.get("is_drifting")?.as_bool()?,
+                    config,
+                    window_count: w.get("window_count")?.as_usize()?,
+                    synthetic: w.get("synthetic")?.as_bool()?,
+                    parents,
+                },
+            );
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().encode_pretty())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<WorkloadDb> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(WorkloadDb::from_json(&Json::parse(&text)?)?)
+    }
+}
+
+/// Helper: characterization width for raw observation windows.
+pub fn obs_window_width() -> usize {
+    NUM_FEATURES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn char_of(mean: f64, n: usize) -> Characterization {
+        let rows: Vec<Vec<f64>> =
+            (0..n).map(|i| vec![mean + (i % 2) as f64, 2.0 * mean]).collect();
+        Characterization::from_rows(&rows)
+    }
+
+    #[test]
+    fn labels_are_monotone_and_never_reused() {
+        let mut db = WorkloadDb::new();
+        let a = db.insert_new(char_of(1.0, 4), vec![1.0, 2.0], 4, false);
+        let b = db.insert_new(char_of(9.0, 4), vec![9.0, 18.0], 4, false);
+        assert_eq!((a, b), (0, 1));
+        // no delete API exists; labels only grow
+        let c = db.insert_new(char_of(5.0, 4), vec![5.0, 10.0], 4, true);
+        assert_eq!(c, 2);
+        assert_eq!(db.len(), 3);
+    }
+
+    #[test]
+    fn nearest_finds_closest_mean() {
+        let mut db = WorkloadDb::new();
+        db.insert_new(char_of(0.0, 4), vec![0.0, 0.0], 4, false);
+        db.insert_new(char_of(10.0, 4), vec![10.0, 20.0], 4, false);
+        let (label, d) = db.nearest(&char_of(9.0, 4)).unwrap();
+        assert_eq!(label, 1);
+        assert!(d < 3.0);
+    }
+
+    #[test]
+    fn config_lifecycle() {
+        let mut db = WorkloadDb::new();
+        let l = db.insert_new(char_of(1.0, 4), vec![1.0, 2.0], 4, false);
+        assert!(!db.get(l).unwrap().optimal_config_found);
+        db.set_optimal_config(l, ConfigIndex([1, 2, 3, 4, 5, 0]));
+        let e = db.get(l).unwrap();
+        assert!(e.optimal_config_found);
+        assert_eq!(e.config, Some(ConfigIndex([1, 2, 3, 4, 5, 0])));
+        // drift clears the flag but keeps the config for local search
+        db.mark_drifting(l, char_of(2.0, 4), vec![2.0, 4.0], 4);
+        let e = db.get(l).unwrap();
+        assert!(e.is_drifting && !e.optimal_config_found);
+        assert!(e.config.is_some());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = WorkloadDb::new();
+        let l0 = db.insert_new(char_of(1.5, 6), vec![1.5, 3.0], 6, false);
+        db.insert_new(char_of(7.0, 3), vec![7.0, 14.0], 3, true);
+        db.set_optimal_config(l0, ConfigIndex([0, 1, 2, 3, 4, 1]));
+        let j = db.to_json();
+        let back = WorkloadDb::from_json(&j).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.next_label, db.next_label);
+        let e = back.get(l0).unwrap();
+        assert!(e.optimal_config_found);
+        assert_eq!(e.config, Some(ConfigIndex([0, 1, 2, 3, 4, 1])));
+        assert_eq!(
+            e.characterization.per_feature[0].mean,
+            db.get(l0).unwrap().characterization.per_feature[0].mean
+        );
+        let s = back.get(1).unwrap();
+        assert!(s.synthetic);
+        assert_eq!(s.config, None);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let dir = std::env::temp_dir().join("kermit_db_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.json");
+        let mut db = WorkloadDb::new();
+        db.insert_new(char_of(3.0, 5), vec![3.0, 6.0], 5, false);
+        db.save(&path).unwrap();
+        let back = WorkloadDb::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mean_distance_is_metric_like() {
+        let a = char_of(0.0, 4);
+        let b = char_of(3.0, 4);
+        assert_eq!(a.mean_distance(&a), 0.0);
+        assert!((a.mean_distance(&b) - b.mean_distance(&a)).abs() < 1e-12);
+        assert!(a.mean_distance(&b) > 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Knowledge-base zone layout (Figure 5): Landing Zone (raw agent data),
+//! Transformation Zone (aggregated observation windows), Analytics Zone
+//! (training sets, models, WorkloadDB).
+//!
+//! On the paper's cluster these are HDFS directories; here they are a
+//! directory tree on the local filesystem with the same roles, written
+//! as JSON-lines for the streaming zones.
+
+use crate::features::{FeatureVec, ObservationWindow, NUM_FEATURES};
+use crate::util::json::Json;
+use std::io::{BufRead, Write};
+use std::path::{Path, PathBuf};
+
+/// Directory layout manager for the three zones.
+#[derive(Debug, Clone)]
+pub struct KnowledgeZones {
+    pub root: PathBuf,
+}
+
+impl KnowledgeZones {
+    /// Create (or open) the zone tree under `root`.
+    pub fn create(root: &Path) -> std::io::Result<KnowledgeZones> {
+        for sub in ["landing", "transformation", "analytics"] {
+            std::fs::create_dir_all(root.join(sub))?;
+        }
+        Ok(KnowledgeZones { root: root.to_path_buf() })
+    }
+
+    pub fn landing(&self) -> PathBuf {
+        self.root.join("landing")
+    }
+
+    pub fn transformation(&self) -> PathBuf {
+        self.root.join("transformation")
+    }
+
+    pub fn analytics(&self) -> PathBuf {
+        self.root.join("analytics")
+    }
+
+    pub fn workload_db_path(&self) -> PathBuf {
+        self.analytics().join("workload_db.json")
+    }
+
+    /// Append raw agent samples to the landing zone (one JSONL file per
+    /// agent, as §6.4: "There is one file for each agent").
+    pub fn append_landing(
+        &self,
+        agent: &str,
+        samples: &[(f64, FeatureVec)],
+    ) -> std::io::Result<()> {
+        let path = self.landing().join(format!("{agent}.jsonl"));
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        for (t, fv) in samples {
+            let mut o = Json::obj();
+            o.set("t", Json::Num(*t)).set("f", Json::from_f64_slice(fv));
+            writeln!(f, "{}", o.encode())?;
+        }
+        Ok(())
+    }
+
+    /// Append aggregated observation windows to the transformation zone.
+    pub fn append_windows(
+        &self,
+        windows: &[ObservationWindow],
+    ) -> std::io::Result<()> {
+        let path = self.transformation().join("windows.jsonl");
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        for w in windows {
+            let mut o = Json::obj();
+            o.set("index", Json::Num(w.index as f64))
+                .set("time", Json::Num(w.time))
+                .set("samples", Json::Num(w.samples as f64))
+                .set("mean", Json::from_f64_slice(&w.mean))
+                .set("var", Json::from_f64_slice(&w.var));
+            writeln!(f, "{}", o.encode())?;
+        }
+        Ok(())
+    }
+
+    /// Stream observation windows back out of the transformation zone.
+    pub fn read_windows(&self) -> anyhow::Result<Vec<ObservationWindow>> {
+        let path = self.transformation().join("windows.jsonl");
+        if !path.exists() {
+            return Ok(vec![]);
+        }
+        let f = std::fs::File::open(path)?;
+        let mut out = Vec::new();
+        for line in std::io::BufReader::new(f).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(&line)?;
+            let mean_v = j.get("mean")?.f64s()?;
+            let var_v = j.get("var")?.f64s()?;
+            let mut mean = [0.0; NUM_FEATURES];
+            let mut var = [0.0; NUM_FEATURES];
+            mean.copy_from_slice(&mean_v[..NUM_FEATURES]);
+            var.copy_from_slice(&var_v[..NUM_FEATURES]);
+            out.push(ObservationWindow {
+                index: j.get("index")?.as_usize()? as u64,
+                time: j.get("time")?.as_f64()?,
+                samples: j.get("samples")?.as_usize()?,
+                mean,
+                var,
+                truth: None,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::zero_features;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("kermit_zones_{name}"));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    #[test]
+    fn creates_zone_tree() {
+        let root = tmp("tree");
+        let z = KnowledgeZones::create(&root).unwrap();
+        assert!(z.landing().is_dir());
+        assert!(z.transformation().is_dir());
+        assert!(z.analytics().is_dir());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn windows_roundtrip() {
+        let root = tmp("roundtrip");
+        let z = KnowledgeZones::create(&root).unwrap();
+        let mut f = zero_features();
+        f[0] = 42.0;
+        let w = ObservationWindow {
+            index: 7,
+            time: 123.5,
+            samples: 30,
+            mean: f,
+            var: zero_features(),
+            truth: Some(3),
+        };
+        z.append_windows(&[w.clone()]).unwrap();
+        z.append_windows(&[ObservationWindow { index: 8, ..w.clone() }])
+            .unwrap();
+        let back = z.read_windows().unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].index, 7);
+        assert_eq!(back[0].mean[0], 42.0);
+        assert_eq!(back[1].index, 8);
+        // truth is generator-side only; it must NOT survive persistence
+        assert_eq!(back[0].truth, None);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn landing_appends_per_agent() {
+        let root = tmp("landing");
+        let z = KnowledgeZones::create(&root).unwrap();
+        z.append_landing("agent0", &[(0.0, zero_features())]).unwrap();
+        z.append_landing("agent1", &[(0.5, zero_features())]).unwrap();
+        z.append_landing("agent0", &[(1.0, zero_features())]).unwrap();
+        let a0 = std::fs::read_to_string(z.landing().join("agent0.jsonl")).unwrap();
+        assert_eq!(a0.lines().count(), 2);
+        assert!(z.landing().join("agent1.jsonl").exists());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn read_windows_empty_when_missing() {
+        let root = tmp("empty");
+        let z = KnowledgeZones::create(&root).unwrap();
+        assert!(z.read_windows().unwrap().is_empty());
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,30 @@
+//! # KERMIT — Autonomic Architecture for Big Data Performance Optimization
+//!
+//! Rust + JAX + Pallas reproduction of Genkin et al. (2023). The crate
+//! implements the full MAPE-K autonomic loop: a simulated big-data
+//! cluster substrate, the on-line monitoring / change-detection /
+//! classification / prediction / tuning pipeline, and the off-line
+//! discovery / characterization / training pipeline. ML inference for
+//! the NN components executes AOT-compiled XLA artifacts via PJRT
+//! (`runtime`); python is never on the request path.
+//!
+//! See DESIGN.md for the architecture map and EXPERIMENTS.md for the
+//! reproduced results.
+
+pub mod benchkit;
+pub mod clustering;
+pub mod coordinator;
+pub mod experiments;
+pub mod explorer;
+pub mod features;
+pub mod knowledge;
+pub mod ml;
+pub mod monitor;
+pub mod offline;
+pub mod online;
+pub mod runtime;
+pub mod testkit;
+pub mod simcluster;
+pub mod stats;
+pub mod util;
+pub mod workloadgen;

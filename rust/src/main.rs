@@ -1,0 +1,179 @@
+//! KERMIT command-line launcher.
+//!
+//! Subcommands:
+//!   run       — full autonomic loop on a recurring-job schedule,
+//!               vs. default / rule-of-thumb / oracle baselines
+//!   discover  — off-line discovery (Algorithm 2) on a generated trace
+//!   artifacts — load + verify the AOT artifact bundle (PJRT smoke test)
+//!   tune      — one-shot Explorer search for a single workload class
+
+use kermit::clustering::NativeDistance;
+use kermit::coordinator::{
+    run_fixed_config, run_oracle, Coordinator, CoordinatorConfig,
+};
+use kermit::explorer::baselines::{exhaustive, rule_of_thumb};
+use kermit::explorer::Explorer;
+use kermit::monitor::{aggregate_trace, MonitorConfig};
+use kermit::offline::{discover, DiscoveryConfig};
+use kermit::simcluster::config_space::ConfigIndex;
+use kermit::simcluster::perfmodel::job_duration;
+use kermit::simcluster::{default_config_index, JobSpec};
+use kermit::knowledge::WorkloadDb;
+use kermit::util::cli::Args;
+use kermit::workloadgen::{tour_schedule, Generator, Mix};
+
+const USAGE: &str = "\
+kermit — autonomic big-data performance optimization (KERMIT reproduction)
+
+USAGE:
+  kermit run [--cycles N] [--classes 0,3,5] [--seed S] [--budget B]
+  kermit discover [--classes 0,2,5] [--duration D] [--seed S]
+  kermit artifacts [--dir artifacts]
+  kermit tune --class C [--budget B]
+  kermit help
+";
+
+fn parse_classes(s: &str) -> Vec<u32> {
+    s.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| t.trim().parse().expect("bad class id"))
+        .collect()
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cycles = args.get_usize("cycles", 40)?;
+    let classes = parse_classes(args.get_or("classes", "0,3,5"));
+    let seed = args.get_u64("seed", 1)?;
+    let budget = args.get_usize("budget", 60)?;
+
+    let mut jobs = Vec::new();
+    for _ in 0..cycles {
+        for &c in &classes {
+            jobs.push(JobSpec { mix: Mix::Pure(c) });
+        }
+    }
+    let mut cfg = CoordinatorConfig::default();
+    cfg.seed = seed;
+    cfg.offline_interval_windows = 12;
+    let mut coord = Coordinator::new(cfg.clone());
+    coord.plugin.explorer_config.global_budget = budget;
+
+    println!("running {} jobs through the autonomic loop...", jobs.len());
+    let kermit = coord.run_schedule(&jobs);
+    let default =
+        run_fixed_config(&jobs, default_config_index(), &cfg.engine, seed);
+    let rot = run_fixed_config(&jobs, rule_of_thumb(), &cfg.engine, seed);
+    let oracle = run_oracle(&jobs, &cfg.engine, seed);
+
+    println!("\n== makespan (s, lower is better) ==");
+    println!("  kermit          {:>12.0}", kermit.makespan);
+    println!("  default config  {:>12.0}", default.makespan);
+    println!("  rule of thumb   {:>12.0}", rot.makespan);
+    println!("  oracle          {:>12.0}", oracle.makespan);
+    println!("\n== steady state (mean of last 20 jobs) ==");
+    println!("  kermit          {:>12.1}", kermit.tail_mean_duration(20));
+    println!("  rule of thumb   {:>12.1}", rot.tail_mean_duration(20));
+    println!("  oracle          {:>12.1}", oracle.tail_mean_duration(20));
+    println!("\n== plugin ==\n  {:?}", kermit.plugin_stats);
+    println!(
+        "  workloads known: {}   label consistency: {:.3}",
+        kermit.workloads_known,
+        kermit.classification_consistency()
+    );
+    Ok(())
+}
+
+fn cmd_discover(args: &Args) -> anyhow::Result<()> {
+    let classes = parse_classes(args.get_or("classes", "0,2,5"));
+    let duration = args.get_usize("duration", 500)?;
+    let seed = args.get_u64("seed", 0)?;
+
+    let mut g = Generator::with_default_config(seed);
+    let trace = g.generate(&tour_schedule(duration, &classes));
+    let windows =
+        aggregate_trace(&trace, &MonitorConfig { window_size: 30 });
+    let mut db = WorkloadDb::new();
+    let report = discover(
+        &windows,
+        &mut db,
+        &DiscoveryConfig::default(),
+        &NativeDistance,
+    );
+    println!(
+        "trace: {} samples, {} windows ({} transition, {} noise)",
+        trace.len(),
+        windows.len(),
+        report.transition_windows,
+        report.noise_windows
+    );
+    println!("clusters:");
+    for o in &report.outcomes {
+        println!("  {o:?}");
+    }
+    println!("workloads in DB: {}", db.len());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        args.get_or("dir", "artifacts").to_string(),
+    );
+    let rt = kermit::runtime::Runtime::load(&dir)?;
+    println!("PJRT platform: cpu; artifacts loaded from {}:", dir.display());
+    for name in rt.names() {
+        let a = rt.get(name)?;
+        let shapes: Vec<String> = a
+            .inputs
+            .iter()
+            .map(|i| format!("{:?}", i.shape))
+            .collect();
+        println!("  {name:<14} inputs: {}", shapes.join(", "));
+    }
+    println!("artifact smoke test OK");
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let class = args.get_u64("class", 0)? as u32;
+    let budget = args.get_usize("budget", 140)?;
+    let mut cfg = kermit::explorer::ExplorerConfig::default();
+    cfg.global_budget = budget;
+    let ex = Explorer::new(cfg);
+    let mut eval = |c: ConfigIndex| job_duration(class, &c.to_config());
+    let found = ex.global_search(&mut eval);
+    let oracle = exhaustive(&mut eval);
+    println!("class {class}:");
+    println!(
+        "  explorer: {:?} -> {:.1}s in {} probes",
+        found.best.0, found.best_duration, found.probes
+    );
+    println!(
+        "  oracle:   {:?} -> {:.1}s in {} probes",
+        oracle.best.0, oracle.best_duration, oracle.probes
+    );
+    println!(
+        "  tuning efficiency: {:.1}%",
+        100.0 * oracle.best_duration / found.best_duration
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[
+        "cycles", "classes", "seed", "budget", "duration", "dir", "class",
+    ])?;
+    if args.help_requested() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("discover") => cmd_discover(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("tune") => cmd_tune(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

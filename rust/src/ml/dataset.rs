@@ -1,0 +1,177 @@
+//! Labelled dataset container + train/test utilities.
+
+use crate::util::rng::Rng;
+
+/// A dense labelled dataset. Rows are feature vectors, `labels[i]` is the
+//  class of row i.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub rows: Vec<Vec<f64>>,
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn new() -> Dataset {
+        Dataset::default()
+    }
+
+    pub fn push(&mut self, row: Vec<f64>, label: u32) {
+        if let Some(first) = self.rows.first() {
+            assert_eq!(first.len(), row.len(), "inconsistent feature width");
+        }
+        self.rows.push(row);
+        self.labels.push(label);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn width(&self) -> usize {
+        self.rows.first().map(|r| r.len()).unwrap_or(0)
+    }
+
+    /// Distinct labels, sorted.
+    pub fn classes(&self) -> Vec<u32> {
+        let mut c = self.labels.clone();
+        c.sort();
+        c.dedup();
+        c
+    }
+
+    /// Shuffled stratified split: returns (train, test) with `test_frac`
+    /// of each class in the test set (at least one sample of each class
+    /// stays in train).
+    pub fn split(&self, rng: &mut Rng, test_frac: f64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let mut train = Dataset::new();
+        let mut test = Dataset::new();
+        for class in self.classes() {
+            let mut idx: Vec<usize> = (0..self.len())
+                .filter(|&i| self.labels[i] == class)
+                .collect();
+            rng.shuffle(&mut idx);
+            let n_test = ((idx.len() as f64) * test_frac).round() as usize;
+            let n_test = n_test.min(idx.len().saturating_sub(1));
+            for (k, &i) in idx.iter().enumerate() {
+                let row = self.rows[i].clone();
+                if k < n_test {
+                    test.push(row, class);
+                } else {
+                    train.push(row, class);
+                }
+            }
+        }
+        (train, test)
+    }
+
+    /// Bootstrap resample of `n` rows (with replacement) — forest bagging.
+    pub fn bootstrap(&self, rng: &mut Rng, n: usize) -> Dataset {
+        let mut out = Dataset::new();
+        for _ in 0..n {
+            let i = rng.range_usize(0, self.len());
+            out.push(self.rows[i].clone(), self.labels[i]);
+        }
+        out
+    }
+
+    /// Per-feature (mean, std) over the dataset — for standardising
+    /// models that need it (kNN, logreg).
+    pub fn feature_moments(&self) -> Vec<(f64, f64)> {
+        let w = self.width();
+        let n = self.len() as f64;
+        let mut out = vec![(0.0, 0.0); w];
+        for row in &self.rows {
+            for (j, &v) in row.iter().enumerate() {
+                out[j].0 += v;
+            }
+        }
+        for m in out.iter_mut() {
+            m.0 /= n;
+        }
+        for row in &self.rows {
+            for (j, &v) in row.iter().enumerate() {
+                let d = v - out[j].0;
+                out[j].1 += d * d;
+            }
+        }
+        for m in out.iter_mut() {
+            m.1 = (m.1 / n).sqrt();
+            if m.1 < 1e-12 {
+                m.1 = 1.0; // constant feature: leave unscaled
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n_per_class: usize, classes: u32) -> Dataset {
+        let mut d = Dataset::new();
+        for c in 0..classes {
+            for i in 0..n_per_class {
+                d.push(vec![c as f64, i as f64], c);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn split_is_stratified_and_partitions() {
+        let d = toy(20, 3);
+        let mut rng = Rng::new(0);
+        let (tr, te) = d.split(&mut rng, 0.25);
+        assert_eq!(tr.len() + te.len(), d.len());
+        for c in 0..3u32 {
+            let n_te = te.labels.iter().filter(|&&l| l == c).count();
+            assert_eq!(n_te, 5, "class {c}");
+        }
+    }
+
+    #[test]
+    fn split_keeps_train_nonempty_per_class() {
+        let mut d = Dataset::new();
+        d.push(vec![0.0], 0);
+        d.push(vec![1.0], 0);
+        let mut rng = Rng::new(1);
+        let (tr, _) = d.split(&mut rng, 0.9);
+        assert!(tr.labels.iter().any(|&l| l == 0));
+    }
+
+    #[test]
+    fn bootstrap_size_and_membership() {
+        let d = toy(10, 2);
+        let mut rng = Rng::new(2);
+        let b = d.bootstrap(&mut rng, 35);
+        assert_eq!(b.len(), 35);
+        for row in &b.rows {
+            assert!(d.rows.contains(row));
+        }
+    }
+
+    #[test]
+    fn moments_standardise() {
+        let mut d = Dataset::new();
+        d.push(vec![0.0, 5.0], 0);
+        d.push(vec![2.0, 5.0], 1);
+        let m = d.feature_moments();
+        assert!((m[0].0 - 1.0).abs() < 1e-12);
+        assert!((m[0].1 - 1.0).abs() < 1e-12);
+        assert_eq!(m[1].1, 1.0); // constant feature guard
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent")]
+    fn width_mismatch_panics() {
+        let mut d = Dataset::new();
+        d.push(vec![1.0, 2.0], 0);
+        d.push(vec![1.0], 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Random forest — the paper's WorkloadClassifier and TransitionClassifier
+//! algorithm (§7.2). Bagged CART trees with per-split feature subsetting,
+//! majority vote, and soft voting for predict_proba.
+
+use super::dataset::Dataset;
+use super::tree::{DecisionTree, TreeConfig};
+use super::Classifier;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features per split; None = sqrt(width) (the standard default).
+    pub mtry: Option<usize>,
+    /// Bootstrap sample size as a fraction of the training set.
+    pub sample_frac: f64,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig {
+            n_trees: 60,
+            max_depth: 20,
+            min_samples_split: 2,
+            mtry: None,
+            sample_frac: 1.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    pub trees: Vec<DecisionTree>,
+}
+
+impl RandomForest {
+    pub fn fit(data: &Dataset, config: ForestConfig, rng: &mut Rng) -> RandomForest {
+        assert!(!data.is_empty());
+        let mtry = config
+            .mtry
+            .unwrap_or_else(|| (data.width() as f64).sqrt().ceil() as usize)
+            .max(1);
+        let n_boot =
+            ((data.len() as f64) * config.sample_frac).round().max(1.0) as usize;
+        let tree_cfg = TreeConfig {
+            max_depth: config.max_depth,
+            min_samples_split: config.min_samples_split,
+            mtry: Some(mtry),
+        };
+        let trees = (0..config.n_trees)
+            .map(|k| {
+                let mut trng = rng.fork(k as u64);
+                let boot = data.bootstrap(&mut trng, n_boot);
+                DecisionTree::fit(&boot, tree_cfg.clone(), &mut trng)
+            })
+            .collect();
+        RandomForest { trees }
+    }
+
+    /// Hard majority vote: (winning label, vote share). ~2.6x faster
+    /// than the soft vote (§Perf iteration 2) — each tree contributes
+    /// its leaf majority instead of a per-class probability map — and
+    /// agrees with the soft vote on in-distribution data. This is the
+    /// on-line hot path; `vote`/`predict_proba` remain for callers that
+    /// need the full distribution.
+    pub fn vote_hard(&self, x: &[f64]) -> (u32, f64) {
+        let mut counts: BTreeMap<u32, usize> = BTreeMap::new();
+        for t in &self.trees {
+            *counts.entry(t.predict(x)).or_insert(0) += 1;
+        }
+        let (label, n) = counts
+            .into_iter()
+            .max_by_key(|&(_, n)| n)
+            .expect("empty forest");
+        (label, n as f64 / self.trees.len() as f64)
+    }
+
+    /// Soft-vote class distribution.
+    pub fn vote(&self, x: &[f64]) -> BTreeMap<u32, f64> {
+        let mut votes: BTreeMap<u32, f64> = BTreeMap::new();
+        for t in &self.trees {
+            if let Some(p) = t.predict_proba(x) {
+                for (c, q) in p {
+                    *votes.entry(c).or_insert(0.0) += q;
+                }
+            }
+        }
+        let total: f64 = votes.values().sum();
+        if total > 0.0 {
+            for v in votes.values_mut() {
+                *v /= total;
+            }
+        }
+        votes
+    }
+}
+
+impl Classifier for RandomForest {
+    fn predict(&self, x: &[f64]) -> u32 {
+        self.vote(x)
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(c, _)| c)
+            .expect("empty forest")
+    }
+
+    fn predict_proba(&self, x: &[f64]) -> Option<Vec<(u32, f64)>> {
+        Some(self.vote(x).into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+
+    fn gaussian_blobs(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let centers = [
+            vec![0.0, 0.0, 0.0],
+            vec![5.0, 0.0, 2.0],
+            vec![0.0, 5.0, -2.0],
+            vec![5.0, 5.0, 0.0],
+        ];
+        let mut d = Dataset::new();
+        for _ in 0..n {
+            let c = rng.range_usize(0, centers.len());
+            let row: Vec<f64> = centers[c]
+                .iter()
+                .map(|&m| rng.normal_ms(m, 0.8))
+                .collect();
+            d.push(row, c as u32);
+        }
+        d
+    }
+
+    #[test]
+    fn beats_90_percent_on_blobs() {
+        let d = gaussian_blobs(400, 0);
+        let mut rng = Rng::new(1);
+        let (tr, te) = d.split(&mut rng, 0.25);
+        let f = RandomForest::fit(&tr, ForestConfig::default(), &mut rng);
+        let preds = f.predict_batch(&te.rows);
+        let acc = accuracy(&te.labels, &preds);
+        assert!(acc > 0.9, "{acc}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = gaussian_blobs(100, 2);
+        let mk = |seed| {
+            let mut rng = Rng::new(seed);
+            let f = RandomForest::fit(
+                &d,
+                ForestConfig { n_trees: 10, ..Default::default() },
+                &mut rng,
+            );
+            f.predict_batch(&d.rows)
+        };
+        assert_eq!(mk(5), mk(5));
+    }
+
+    #[test]
+    fn proba_is_distribution() {
+        let d = gaussian_blobs(100, 3);
+        let mut rng = Rng::new(4);
+        let f = RandomForest::fit(
+            &d,
+            ForestConfig { n_trees: 15, ..Default::default() },
+            &mut rng,
+        );
+        let p = f.predict_proba(&d.rows[0]).unwrap();
+        let sum: f64 = p.iter().map(|(_, q)| q).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&(_, q)| (0.0..=1.0).contains(&q)));
+    }
+
+    #[test]
+    fn single_class_dataset() {
+        let mut d = Dataset::new();
+        for i in 0..20 {
+            d.push(vec![i as f64], 3);
+        }
+        let mut rng = Rng::new(6);
+        let f = RandomForest::fit(
+            &d,
+            ForestConfig { n_trees: 5, ..Default::default() },
+            &mut rng,
+        );
+        assert_eq!(f.predict(&[100.0]), 3);
+    }
+}

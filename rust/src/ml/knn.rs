@@ -1,0 +1,129 @@
+//! k-nearest-neighbours comparator (Fig 6). Standardised features,
+//! euclidean metric, distance-weighted vote.
+
+use super::dataset::Dataset;
+use super::Classifier;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Knn {
+    k: usize,
+    rows: Vec<Vec<f64>>, // standardised
+    labels: Vec<u32>,
+    moments: Vec<(f64, f64)>,
+}
+
+impl Knn {
+    pub fn fit(data: &Dataset, k: usize) -> Knn {
+        assert!(!data.is_empty());
+        let moments = data.feature_moments();
+        let rows = data
+            .rows
+            .iter()
+            .map(|r| standardise(r, &moments))
+            .collect();
+        Knn { k: k.max(1), rows, labels: data.labels.clone(), moments }
+    }
+}
+
+fn standardise(x: &[f64], moments: &[(f64, f64)]) -> Vec<f64> {
+    x.iter()
+        .zip(moments)
+        .map(|(v, (m, s))| (v - m) / s)
+        .collect()
+}
+
+impl Classifier for Knn {
+    fn predict(&self, x: &[f64]) -> u32 {
+        self.predict_proba(x)
+            .unwrap()
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap()
+    }
+
+    fn predict_proba(&self, x: &[f64]) -> Option<Vec<(u32, f64)>> {
+        let xs = standardise(x, &self.moments);
+        // partial top-k by distance
+        let mut dists: Vec<(f64, u32)> = self
+            .rows
+            .iter()
+            .zip(&self.labels)
+            .map(|(r, &l)| {
+                let d: f64 = r
+                    .iter()
+                    .zip(&xs)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                (d, l)
+            })
+            .collect();
+        let k = self.k.min(dists.len());
+        dists.select_nth_unstable_by(k - 1, |a, b| {
+            a.0.partial_cmp(&b.0).unwrap()
+        });
+        let mut votes: BTreeMap<u32, f64> = BTreeMap::new();
+        for &(d, l) in &dists[..k] {
+            *votes.entry(l).or_insert(0.0) += 1.0 / (d.sqrt() + 1e-9);
+        }
+        let total: f64 = votes.values().sum();
+        Some(votes.into_iter().map(|(c, v)| (c, v / total)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn classifies_separated_blobs() {
+        let mut rng = Rng::new(0);
+        let mut d = Dataset::new();
+        for _ in 0..100 {
+            d.push(vec![rng.normal_ms(0.0, 0.5), rng.normal_ms(0.0, 0.5)], 0);
+            d.push(vec![rng.normal_ms(4.0, 0.5), rng.normal_ms(4.0, 0.5)], 1);
+        }
+        let (tr, te) = d.split(&mut rng, 0.3);
+        let knn = Knn::fit(&tr, 5);
+        let acc = accuracy(&te.labels, &knn.predict_batch(&te.rows));
+        assert!(acc > 0.97, "{acc}");
+    }
+
+    #[test]
+    fn k_one_memorises_training_point() {
+        let mut d = Dataset::new();
+        d.push(vec![0.0], 0);
+        d.push(vec![10.0], 1);
+        let knn = Knn::fit(&d, 1);
+        assert_eq!(knn.predict(&[0.1]), 0);
+        assert_eq!(knn.predict(&[9.9]), 1);
+    }
+
+    #[test]
+    fn k_larger_than_dataset_is_clamped() {
+        let mut d = Dataset::new();
+        d.push(vec![0.0], 0);
+        d.push(vec![1.0], 0);
+        let knn = Knn::fit(&d, 50);
+        assert_eq!(knn.predict(&[0.5]), 0);
+    }
+
+    #[test]
+    fn standardisation_handles_scale_imbalance() {
+        // feature 1 is 1000x feature 0's scale; without standardisation it
+        // would dominate and mask the informative feature 0
+        let mut rng = Rng::new(1);
+        let mut d = Dataset::new();
+        for _ in 0..80 {
+            d.push(vec![0.0 + rng.normal() * 0.1, rng.normal() * 1000.0], 0);
+            d.push(vec![1.0 + rng.normal() * 0.1, rng.normal() * 1000.0], 1);
+        }
+        let (tr, te) = d.split(&mut rng, 0.25);
+        let knn = Knn::fit(&tr, 7);
+        let acc = accuracy(&te.labels, &knn.predict_batch(&te.rows));
+        assert!(acc > 0.9, "{acc}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Ordinary least squares linear regression (normal equations with ridge
+//! fallback). This is the *baseline* predictor the paper criticises
+//! (§3: "Linear regression models typically used to predict workload
+//! characteristics perform poorly with abrupt workload transitions") —
+//! benchmarked against the LSTM WorkloadPredictor in
+//! `benches/predictor_accuracy.rs`.
+
+/// Fitted linear model y = w.x + b.
+#[derive(Debug, Clone)]
+pub struct LinReg {
+    pub weights: Vec<f64>,
+    pub bias: f64,
+}
+
+impl LinReg {
+    /// Least squares fit via the normal equations (X^T X + λI) w = X^T y.
+    /// A small ridge term keeps the Cholesky solve stable when features
+    /// are collinear.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], ridge: f64) -> LinReg {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let w = xs[0].len();
+        let d = w + 1; // + bias column
+        // build X^T X and X^T y with the implicit 1s column
+        let mut xtx = vec![vec![0.0; d]; d];
+        let mut xty = vec![0.0; d];
+        for (x, &y) in xs.iter().zip(ys) {
+            for i in 0..w {
+                for j in i..w {
+                    xtx[i][j] += x[i] * x[j];
+                }
+                xtx[i][w] += x[i];
+                xty[i] += x[i] * y;
+            }
+            xtx[w][w] += 1.0;
+            xty[w] += y;
+        }
+        for i in 0..d {
+            for j in 0..i {
+                xtx[i][j] = xtx[j][i];
+            }
+            xtx[i][i] += ridge;
+        }
+        let sol = solve_cholesky(&mut xtx, &xty)
+            .expect("normal equations not PD even with ridge");
+        LinReg { weights: sol[..w].to_vec(), bias: sol[w] }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.weights.iter().zip(x).map(|(a, b)| a * b).sum::<f64>()
+            + self.bias
+    }
+}
+
+/// Cholesky solve of A x = b for symmetric positive-definite A
+/// (A is overwritten with its factor).
+fn solve_cholesky(a: &mut [Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    // factor: A = L L^T stored in lower triangle
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i][j];
+            for k in 0..j {
+                sum -= a[i][k] * a[j][k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                a[i][i] = sum.sqrt();
+            } else {
+                a[i][j] = sum / a[j][j];
+            }
+        }
+    }
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= a[i][k] * y[k];
+        }
+        y[i] = sum / a[i][i];
+    }
+    // back: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= a[k][i] * x[k];
+        }
+        x[i] = sum / a[i][i];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_exact_linear_function() {
+        // y = 2x0 - 3x1 + 5
+        let xs: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![i as f64, (i * i % 7) as f64])
+            .collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| 2.0 * x[0] - 3.0 * x[1] + 5.0).collect();
+        let m = LinReg::fit(&xs, &ys, 1e-9);
+        assert!((m.weights[0] - 2.0).abs() < 1e-6);
+        assert!((m.weights[1] + 3.0).abs() < 1e-6);
+        assert!((m.bias - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn noisy_fit_close() {
+        let mut rng = Rng::new(0);
+        let xs: Vec<Vec<f64>> =
+            (0..500).map(|_| vec![rng.normal(), rng.normal()]).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 1.5 * x[0] + 0.5 * x[1] - 2.0 + rng.normal() * 0.1)
+            .collect();
+        let m = LinReg::fit(&xs, &ys, 1e-6);
+        assert!((m.weights[0] - 1.5).abs() < 0.05);
+        assert!((m.weights[1] - 0.5).abs() < 0.05);
+        assert!((m.bias + 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn collinear_features_survive_via_ridge() {
+        let xs: Vec<Vec<f64>> =
+            (0..10).map(|i| vec![i as f64, 2.0 * i as f64]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0]).collect();
+        let m = LinReg::fit(&xs, &ys, 1e-6);
+        // prediction should still be right even if weights are split
+        for (x, &y) in xs.iter().zip(&ys) {
+            assert!((m.predict(x) - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn constant_target() {
+        let xs: Vec<Vec<f64>> = (0..5).map(|i| vec![i as f64]).collect();
+        let ys = vec![7.0; 5];
+        let m = LinReg::fit(&xs, &ys, 1e-9);
+        assert!((m.predict(&[100.0]) - 7.0).abs() < 1e-6);
+    }
+}

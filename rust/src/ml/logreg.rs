@@ -1,0 +1,180 @@
+//! Multinomial logistic regression comparator (Fig 6): softmax + SGD on
+//! standardised features, with L2 regularisation.
+
+use super::dataset::Dataset;
+use super::Classifier;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LogRegConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub l2: f64,
+    pub batch: usize,
+}
+
+impl Default for LogRegConfig {
+    fn default() -> Self {
+        LogRegConfig { epochs: 60, lr: 0.1, l2: 1e-4, batch: 32 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LogReg {
+    classes: Vec<u32>,
+    /// weights[c][j], plus bias at index width
+    weights: Vec<Vec<f64>>,
+    moments: Vec<(f64, f64)>,
+}
+
+impl LogReg {
+    pub fn fit(data: &Dataset, config: LogRegConfig, rng: &mut Rng) -> LogReg {
+        assert!(!data.is_empty());
+        let classes = data.classes();
+        let w = data.width();
+        let moments = data.feature_moments();
+        let rows: Vec<Vec<f64>> = data
+            .rows
+            .iter()
+            .map(|r| {
+                r.iter()
+                    .zip(&moments)
+                    .map(|(v, (m, s))| (v - m) / s)
+                    .collect()
+            })
+            .collect();
+        let class_index: std::collections::BTreeMap<u32, usize> =
+            classes.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+        let mut weights = vec![vec![0.0; w + 1]; classes.len()];
+
+        let mut order: Vec<usize> = (0..rows.len()).collect();
+        for _ in 0..config.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(config.batch) {
+                // accumulate gradient over the minibatch
+                let mut grad = vec![vec![0.0; w + 1]; classes.len()];
+                for &i in chunk {
+                    let x = &rows[i];
+                    let probs = softmax_scores(&weights, x);
+                    let yi = class_index[&data.labels[i]];
+                    for (c, p) in probs.iter().enumerate() {
+                        let err = p - if c == yi { 1.0 } else { 0.0 };
+                        for j in 0..w {
+                            grad[c][j] += err * x[j];
+                        }
+                        grad[c][w] += err;
+                    }
+                }
+                let scale = config.lr / chunk.len() as f64;
+                for c in 0..classes.len() {
+                    for j in 0..=w {
+                        weights[c][j] -= scale
+                            * (grad[c][j]
+                                + config.l2 * weights[c][j] * chunk.len() as f64);
+                    }
+                }
+            }
+        }
+        LogReg { classes, weights, moments }
+    }
+
+    fn scores(&self, x: &[f64]) -> Vec<f64> {
+        let xs: Vec<f64> = x
+            .iter()
+            .zip(&self.moments)
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect();
+        softmax_scores(&self.weights, &xs)
+    }
+}
+
+fn softmax_scores(weights: &[Vec<f64>], x: &[f64]) -> Vec<f64> {
+    let w = x.len();
+    let logits: Vec<f64> = weights
+        .iter()
+        .map(|ws| {
+            ws[..w].iter().zip(x).map(|(a, b)| a * b).sum::<f64>() + ws[w]
+        })
+        .collect();
+    let max = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+impl Classifier for LogReg {
+    fn predict(&self, x: &[f64]) -> u32 {
+        let s = self.scores(x);
+        let best = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        self.classes[best]
+    }
+
+    fn predict_proba(&self, x: &[f64]) -> Option<Vec<(u32, f64)>> {
+        Some(
+            self.classes
+                .iter()
+                .copied()
+                .zip(self.scores(x))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+
+    #[test]
+    fn learns_linear_boundary() {
+        let mut rng = Rng::new(0);
+        let mut d = Dataset::new();
+        for _ in 0..200 {
+            let x = rng.normal_ms(0.0, 2.0);
+            let y = rng.normal_ms(0.0, 2.0);
+            d.push(vec![x, y], if x + y > 0.0 { 1 } else { 0 });
+        }
+        let (tr, te) = d.split(&mut rng, 0.25);
+        let m = LogReg::fit(&tr, LogRegConfig::default(), &mut rng);
+        let acc = accuracy(&te.labels, &m.predict_batch(&te.rows));
+        assert!(acc > 0.92, "{acc}");
+    }
+
+    #[test]
+    fn three_class_separation() {
+        let mut rng = Rng::new(1);
+        let mut d = Dataset::new();
+        let centers = [(0.0, 0.0), (6.0, 0.0), (0.0, 6.0)];
+        for _ in 0..150 {
+            for (c, (cx, cy)) in centers.iter().enumerate() {
+                d.push(
+                    vec![rng.normal_ms(*cx, 1.0), rng.normal_ms(*cy, 1.0)],
+                    c as u32,
+                );
+            }
+        }
+        let (tr, te) = d.split(&mut rng, 0.25);
+        let m = LogReg::fit(&tr, LogRegConfig::default(), &mut rng);
+        let acc = accuracy(&te.labels, &m.predict_batch(&te.rows));
+        assert!(acc > 0.95, "{acc}");
+    }
+
+    #[test]
+    fn proba_is_distribution() {
+        let mut rng = Rng::new(2);
+        let mut d = Dataset::new();
+        d.push(vec![0.0], 0);
+        d.push(vec![1.0], 1);
+        d.push(vec![0.2], 0);
+        d.push(vec![0.8], 1);
+        let m = LogReg::fit(&d, LogRegConfig::default(), &mut rng);
+        let p = m.predict_proba(&[0.5]).unwrap();
+        let sum: f64 = p.iter().map(|(_, q)| q).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! Classification metrics: accuracy, confusion matrix, per-class
+//! precision/recall/F1, macro-F1. Used by every Fig 6/7 bench and by the
+//! off-line pipeline's self-evaluation.
+
+use std::collections::BTreeMap;
+
+/// Simple accuracy. Panics on length mismatch, returns 0 for empty.
+pub fn accuracy(truth: &[u32], pred: &[u32]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let hits = truth.iter().zip(pred).filter(|(a, b)| a == b).count();
+    hits as f64 / truth.len() as f64
+}
+
+/// Confusion matrix keyed by (truth, pred).
+pub fn confusion_matrix(truth: &[u32], pred: &[u32]) -> BTreeMap<(u32, u32), usize> {
+    assert_eq!(truth.len(), pred.len());
+    let mut m = BTreeMap::new();
+    for (&t, &p) in truth.iter().zip(pred) {
+        *m.entry((t, p)).or_insert(0) += 1;
+    }
+    m
+}
+
+/// Per-class precision / recall / F1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassMetrics {
+    pub class: u32,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub support: usize,
+}
+
+pub fn per_class_metrics(truth: &[u32], pred: &[u32]) -> Vec<ClassMetrics> {
+    let cm = confusion_matrix(truth, pred);
+    let mut classes: Vec<u32> = truth.iter().chain(pred).copied().collect();
+    classes.sort();
+    classes.dedup();
+    classes
+        .into_iter()
+        .map(|c| {
+            let tp = *cm.get(&(c, c)).unwrap_or(&0) as f64;
+            let fp: f64 = cm
+                .iter()
+                .filter(|((t, p), _)| *p == c && *t != c)
+                .map(|(_, &n)| n as f64)
+                .sum();
+            let fn_: f64 = cm
+                .iter()
+                .filter(|((t, p), _)| *t == c && *p != c)
+                .map(|(_, &n)| n as f64)
+                .sum();
+            let support = truth.iter().filter(|&&t| t == c).count();
+            let precision = if tp + fp > 0.0 { tp / (tp + fp) } else { 0.0 };
+            let recall = if tp + fn_ > 0.0 { tp / (tp + fn_) } else { 0.0 };
+            let f1 = if precision + recall > 0.0 {
+                2.0 * precision * recall / (precision + recall)
+            } else {
+                0.0
+            };
+            ClassMetrics { class: c, precision, recall, f1, support }
+        })
+        .collect()
+}
+
+/// Unweighted mean of per-class F1 (classes present in truth only).
+pub fn macro_f1(truth: &[u32], pred: &[u32]) -> f64 {
+    let per = per_class_metrics(truth, pred);
+    let present: Vec<&ClassMetrics> =
+        per.iter().filter(|m| m.support > 0).collect();
+    if present.is_empty() {
+        return 0.0;
+    }
+    present.iter().map(|m| m.f1).sum::<f64>() / present.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 4]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+        assert_eq!(accuracy(&[5], &[5]), 1.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let cm = confusion_matrix(&[0, 0, 1, 1], &[0, 1, 1, 1]);
+        assert_eq!(cm[&(0, 0)], 1);
+        assert_eq!(cm[&(0, 1)], 1);
+        assert_eq!(cm[&(1, 1)], 2);
+        assert!(!cm.contains_key(&(1, 0)));
+    }
+
+    #[test]
+    fn per_class_known_values() {
+        // class 0: tp=1 fp=0 fn=1 -> p=1, r=0.5, f1=2/3
+        // class 1: tp=2 fp=1 fn=0 -> p=2/3, r=1, f1=0.8
+        let m = per_class_metrics(&[0, 0, 1, 1], &[0, 1, 1, 1]);
+        let c0 = m.iter().find(|x| x.class == 0).unwrap();
+        assert!((c0.precision - 1.0).abs() < 1e-12);
+        assert!((c0.recall - 0.5).abs() < 1e-12);
+        assert!((c0.f1 - 2.0 / 3.0).abs() < 1e-12);
+        let c1 = m.iter().find(|x| x.class == 1).unwrap();
+        assert!((c1.f1 - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn macro_f1_ignores_pred_only_classes() {
+        // pred 9 never in truth -> not averaged
+        let v = macro_f1(&[0, 0], &[0, 9]);
+        // class 0: p=1.0, r=0.5, f1=2/3
+        assert!((v - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_prediction() {
+        let t = [3, 1, 4, 1, 5];
+        assert_eq!(accuracy(&t, &t), 1.0);
+        assert!((macro_f1(&t, &t) - 1.0).abs() < 1e-12);
+    }
+}

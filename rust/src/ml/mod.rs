@@ -1,0 +1,37 @@
+//! From-scratch supervised ML for the KERMIT classifiers.
+//!
+//! The paper's WorkloadClassifier and TransitionClassifier are random
+//! forests (§7.2); Fig 6 compares the forest against alternative
+//! algorithms. All of them are implemented here natively in rust (trees
+//! are branchy and poorly suited to XLA); the NN comparator (MLP) runs
+//! through the PJRT artifact path in `runtime::nn` instead.
+
+pub mod dataset;
+pub mod forest;
+pub mod knn;
+pub mod linreg;
+pub mod logreg;
+pub mod metrics;
+pub mod naive_bayes;
+pub mod tree;
+
+pub use dataset::Dataset;
+pub use metrics::{accuracy, confusion_matrix, macro_f1, ClassMetrics};
+
+/// Common interface for all native classifiers (Fig 6 harness iterates
+/// over trait objects).
+pub trait Classifier: Send + Sync {
+    /// Predict the label of one feature vector.
+    fn predict(&self, x: &[f64]) -> u32;
+
+    /// Batch predict (overridable for vectorised impls).
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<u32> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+
+    /// Class-probability estimate if the model supports it (used by the
+    /// plug-in to gate low-confidence classifications).
+    fn predict_proba(&self, _x: &[f64]) -> Option<Vec<(u32, f64)>> {
+        None
+    }
+}

@@ -1,0 +1,158 @@
+//! Gaussian naive Bayes comparator (Fig 6).
+
+use super::dataset::Dataset;
+use super::Classifier;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct ClassModel {
+    prior_ln: f64,
+    mean: Vec<f64>,
+    var: Vec<f64>, // smoothed
+}
+
+#[derive(Debug, Clone)]
+pub struct GaussianNb {
+    classes: BTreeMap<u32, ClassModel>,
+}
+
+impl GaussianNb {
+    pub fn fit(data: &Dataset) -> GaussianNb {
+        assert!(!data.is_empty());
+        let w = data.width();
+        let n = data.len() as f64;
+        // global variance floor (sklearn-style epsilon smoothing)
+        let moments = data.feature_moments();
+        let eps: f64 = 1e-9
+            * moments.iter().map(|(_, s)| s * s).fold(0.0_f64, f64::max).max(1e-9);
+
+        let mut classes = BTreeMap::new();
+        for c in data.classes() {
+            let idx: Vec<usize> = (0..data.len())
+                .filter(|&i| data.labels[i] == c)
+                .collect();
+            let nc = idx.len() as f64;
+            let mut mean = vec![0.0; w];
+            let mut var = vec![0.0; w];
+            for &i in &idx {
+                for j in 0..w {
+                    mean[j] += data.rows[i][j];
+                }
+            }
+            for m in mean.iter_mut() {
+                *m /= nc;
+            }
+            for &i in &idx {
+                for j in 0..w {
+                    let d = data.rows[i][j] - mean[j];
+                    var[j] += d * d;
+                }
+            }
+            for v in var.iter_mut() {
+                *v = *v / nc + eps;
+            }
+            classes.insert(
+                c,
+                ClassModel { prior_ln: (nc / n).ln(), mean, var },
+            );
+        }
+        GaussianNb { classes }
+    }
+
+    fn log_joint(&self, x: &[f64]) -> Vec<(u32, f64)> {
+        self.classes
+            .iter()
+            .map(|(&c, m)| {
+                let mut lj = m.prior_ln;
+                for j in 0..x.len() {
+                    let d = x[j] - m.mean[j];
+                    lj += -0.5
+                        * ((2.0 * std::f64::consts::PI * m.var[j]).ln()
+                            + d * d / m.var[j]);
+                }
+                (c, lj)
+            })
+            .collect()
+    }
+}
+
+impl Classifier for GaussianNb {
+    fn predict(&self, x: &[f64]) -> u32 {
+        self.log_joint(x)
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap()
+    }
+
+    fn predict_proba(&self, x: &[f64]) -> Option<Vec<(u32, f64)>> {
+        let lj = self.log_joint(x);
+        let max = lj.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<(u32, f64)> =
+            lj.into_iter().map(|(c, v)| (c, (v - max).exp())).collect();
+        let z: f64 = exps.iter().map(|&(_, e)| e).sum();
+        Some(exps.into_iter().map(|(c, e)| (c, e / z)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn separates_gaussians() {
+        let mut rng = Rng::new(0);
+        let mut d = Dataset::new();
+        for _ in 0..200 {
+            d.push(vec![rng.normal_ms(0.0, 1.0), rng.normal_ms(0.0, 1.0)], 0);
+            d.push(vec![rng.normal_ms(5.0, 1.0), rng.normal_ms(-3.0, 1.0)], 1);
+        }
+        let (tr, te) = d.split(&mut rng, 0.25);
+        let nb = GaussianNb::fit(&tr);
+        let acc = accuracy(&te.labels, &nb.predict_batch(&te.rows));
+        assert!(acc > 0.97, "{acc}");
+    }
+
+    #[test]
+    fn respects_priors_under_imbalance() {
+        let mut rng = Rng::new(1);
+        let mut d = Dataset::new();
+        // 95:5 imbalance, fully overlapping features
+        for _ in 0..190 {
+            d.push(vec![rng.normal()], 0);
+        }
+        for _ in 0..10 {
+            d.push(vec![rng.normal()], 1);
+        }
+        let nb = GaussianNb::fit(&d);
+        // ambiguous point -> majority class wins via prior
+        assert_eq!(nb.predict(&[0.0]), 0);
+    }
+
+    #[test]
+    fn proba_normalised() {
+        let mut d = Dataset::new();
+        d.push(vec![0.0], 0);
+        d.push(vec![1.0], 1);
+        d.push(vec![0.1], 0);
+        d.push(vec![0.9], 1);
+        let nb = GaussianNb::fit(&d);
+        let p = nb.predict_proba(&[0.5]).unwrap();
+        let sum: f64 = p.iter().map(|(_, q)| q).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_feature_does_not_nan() {
+        let mut d = Dataset::new();
+        d.push(vec![1.0, 5.0], 0);
+        d.push(vec![1.0, 6.0], 1);
+        d.push(vec![1.0, 5.1], 0);
+        d.push(vec![1.0, 6.1], 1);
+        let nb = GaussianNb::fit(&d);
+        let p = nb.predict(&[1.0, 5.05]);
+        assert_eq!(p, 0);
+    }
+}

@@ -1,0 +1,286 @@
+//! CART decision tree (gini impurity, axis-aligned splits).
+//!
+//! Building block for the random forest (paper's WorkloadClassifier /
+//! TransitionClassifier) and the standalone DecisionTree comparator in
+//! Fig 6. Supports per-split random feature subsetting (mtry) for the
+//! forest's decorrelation.
+
+use super::dataset::Dataset;
+use super::Classifier;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub enum Node {
+    Leaf {
+        /// Class-count distribution at the leaf (kept for predict_proba).
+        counts: BTreeMap<u32, usize>,
+        majority: u32,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: Box<Node>,  // x[feature] <= threshold
+        right: Box<Node>, // x[feature] >  threshold
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features to consider per split; None = all (plain CART).
+    pub mtry: Option<usize>,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig { max_depth: 24, min_samples_split: 2, mtry: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    pub root: Node,
+    pub config: TreeConfig,
+}
+
+fn class_counts(labels: &[u32], idx: &[usize]) -> BTreeMap<u32, usize> {
+    let mut c = BTreeMap::new();
+    for &i in idx {
+        *c.entry(labels[i]).or_insert(0) += 1;
+    }
+    c
+}
+
+fn gini(counts: &BTreeMap<u32, usize>, total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts
+        .values()
+        .map(|&n| {
+            let p = n as f64 / t;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+fn majority(counts: &BTreeMap<u32, usize>) -> u32 {
+    counts
+        .iter()
+        .max_by_key(|(_, &n)| n)
+        .map(|(&c, _)| c)
+        .expect("majority of empty counts")
+}
+
+impl DecisionTree {
+    pub fn fit(data: &Dataset, config: TreeConfig, rng: &mut Rng) -> DecisionTree {
+        assert!(!data.is_empty(), "fit on empty dataset");
+        let idx: Vec<usize> = (0..data.len()).collect();
+        let root = Self::build(data, &idx, &config, rng, 0);
+        DecisionTree { root, config }
+    }
+
+    fn build(
+        data: &Dataset,
+        idx: &[usize],
+        config: &TreeConfig,
+        rng: &mut Rng,
+        depth: usize,
+    ) -> Node {
+        let counts = class_counts(&data.labels, idx);
+        let node_gini = gini(&counts, idx.len());
+        if depth >= config.max_depth
+            || idx.len() < config.min_samples_split
+            || node_gini == 0.0
+        {
+            return Node::Leaf { majority: majority(&counts), counts };
+        }
+
+        let width = data.width();
+        let features: Vec<usize> = match config.mtry {
+            Some(k) if k < width => rng.sample_indices(width, k),
+            _ => (0..width).collect(),
+        };
+
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, score)
+        for &f in &features {
+            // sort index by feature value; scan split points
+            let mut order: Vec<usize> = idx.to_vec();
+            order.sort_by(|&a, &b| {
+                data.rows[a][f]
+                    .partial_cmp(&data.rows[b][f])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut left_counts: BTreeMap<u32, usize> = BTreeMap::new();
+            let total = order.len();
+            for (pos, &i) in order.iter().enumerate().take(total - 1) {
+                *left_counts.entry(data.labels[i]).or_insert(0) += 1;
+                let v = data.rows[i][f];
+                let v_next = data.rows[order[pos + 1]][f];
+                if v == v_next {
+                    continue; // can't split between equal values
+                }
+                let n_left = pos + 1;
+                let n_right = total - n_left;
+                // right counts = counts - left_counts
+                let mut right_counts = counts.clone();
+                for (c, n) in &left_counts {
+                    let e = right_counts.get_mut(c).unwrap();
+                    *e -= n;
+                }
+                let score = (n_left as f64) * gini(&left_counts, n_left)
+                    + (n_right as f64) * gini(&right_counts, n_right);
+                if best.map(|(_, _, s)| score < s).unwrap_or(true) {
+                    best = Some((f, 0.5 * (v + v_next), score));
+                }
+            }
+        }
+
+        let (feature, threshold, score) = match best {
+            Some(b) => b,
+            None => {
+                return Node::Leaf { majority: majority(&counts), counts }
+            }
+        };
+        // no impurity improvement -> leaf
+        if score / idx.len() as f64 >= node_gini - 1e-12 {
+            return Node::Leaf { majority: majority(&counts), counts };
+        }
+
+        let (left_idx, right_idx): (Vec<usize>, Vec<usize>) = idx
+            .iter()
+            .partition(|&&i| data.rows[i][feature] <= threshold);
+        assert!(!left_idx.is_empty() && !right_idx.is_empty());
+        Node::Split {
+            feature,
+            threshold,
+            left: Box::new(Self::build(data, &left_idx, config, rng, depth + 1)),
+            right: Box::new(Self::build(
+                data, &right_idx, config, rng, depth + 1,
+            )),
+        }
+    }
+
+    fn leaf_for(&self, x: &[f64]) -> &Node {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { .. } => return node,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if x[*feature] <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(n: &Node) -> usize {
+            match n {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + d(left).max(d(right)),
+            }
+        }
+        d(&self.root)
+    }
+}
+
+impl Classifier for DecisionTree {
+    fn predict(&self, x: &[f64]) -> u32 {
+        match self.leaf_for(x) {
+            Node::Leaf { majority, .. } => *majority,
+            _ => unreachable!(),
+        }
+    }
+
+    fn predict_proba(&self, x: &[f64]) -> Option<Vec<(u32, f64)>> {
+        match self.leaf_for(x) {
+            Node::Leaf { counts, .. } => {
+                let total: usize = counts.values().sum();
+                Some(
+                    counts
+                        .iter()
+                        .map(|(&c, &n)| (c, n as f64 / total as f64))
+                        .collect(),
+                )
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_dataset() -> Dataset {
+        // 2D XOR with jitter — linearly inseparable, trivially tree-separable
+        let mut d = Dataset::new();
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            for (a, b) in [(0.0, 0.0), (0.0, 1.0), (1.0, 0.0), (1.0, 1.0)] {
+                let label = ((a as u32) ^ (b as u32)) as u32;
+                d.push(
+                    vec![a + rng.normal() * 0.05, b + rng.normal() * 0.05],
+                    label,
+                );
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn learns_xor() {
+        let d = xor_dataset();
+        let mut rng = Rng::new(1);
+        let t = DecisionTree::fit(&d, TreeConfig::default(), &mut rng);
+        let preds: Vec<u32> = d.rows.iter().map(|r| t.predict(r)).collect();
+        let acc = super::super::metrics::accuracy(&d.labels, &preds);
+        assert!(acc > 0.98, "{acc}");
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let d = xor_dataset();
+        let mut rng = Rng::new(2);
+        let cfg = TreeConfig { max_depth: 1, ..Default::default() };
+        let t = DecisionTree::fit(&d, cfg, &mut rng);
+        assert!(t.depth() <= 1);
+    }
+
+    #[test]
+    fn pure_node_is_leaf() {
+        let mut d = Dataset::new();
+        for i in 0..10 {
+            d.push(vec![i as f64], 7);
+        }
+        let mut rng = Rng::new(3);
+        let t = DecisionTree::fit(&d, TreeConfig::default(), &mut rng);
+        assert!(matches!(t.root, Node::Leaf { .. }));
+        assert_eq!(t.predict(&[3.0]), 7);
+    }
+
+    #[test]
+    fn proba_sums_to_one() {
+        let d = xor_dataset();
+        let mut rng = Rng::new(4);
+        let cfg = TreeConfig { max_depth: 2, ..Default::default() };
+        let t = DecisionTree::fit(&d, cfg, &mut rng);
+        let p = t.predict_proba(&[0.0, 1.0]).unwrap();
+        let sum: f64 = p.iter().map(|(_, q)| q).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_features_yield_leaf() {
+        let mut d = Dataset::new();
+        for i in 0..6 {
+            d.push(vec![1.0, 1.0], (i % 2) as u32);
+        }
+        let mut rng = Rng::new(5);
+        let t = DecisionTree::fit(&d, TreeConfig::default(), &mut rng);
+        assert!(matches!(t.root, Node::Leaf { .. }));
+    }
+}

@@ -1,0 +1,288 @@
+//! KERMIT system-monitoring agents (KAgnt, Figure 4): one agent per
+//! cluster node scrapes that node's counters and streams time-stamped
+//! messages to the workload monitor, which merges per-timestamp across
+//! agents into cluster-level samples (utilisations average, throughput
+//! counters sum) before window aggregation.
+//!
+//! On the paper's cluster each agent appends to its own landing-zone
+//! file; here each agent is a thread with an mpsc channel — same
+//! topology, same merge semantics.
+
+use crate::features::NUM_FEATURES;
+use crate::workloadgen::Sample;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Which features average across nodes (utilisation-like) vs sum
+/// (throughput-like). Order matches `features::FEATURE_NAMES`.
+pub const SUM_FEATURES: [bool; NUM_FEATURES] = [
+    false, false, false, // cpu user/sys/iowait: average
+    false, false, // mem used/cache: average
+    true, true, // disk read/write: sum
+    true, true, // net rx/tx: sum
+    true, true, // ctx switches, page faults: sum
+    false, // gc time: average
+    true, // task queue: sum
+    true, true, true, // shuffle, hdfs read/write: sum
+];
+
+/// A message from one agent: (node id, sample).
+#[derive(Debug, Clone)]
+pub struct AgentMessage {
+    pub node: usize,
+    pub sample: Sample,
+}
+
+/// Split a cluster-level sample into `n` plausible per-node shares (the
+/// inverse of [`merge`], used by the simulated agents): sum-features are
+/// divided across nodes, average-features are replicated with jitter.
+pub fn split_sample(
+    s: &Sample,
+    n: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<Sample> {
+    assert!(n > 0);
+    // random positive weights normalised to 1 for the sum features
+    let mut w: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 1.5)).collect();
+    let total: f64 = w.iter().sum();
+    for x in w.iter_mut() {
+        *x /= total;
+    }
+    (0..n)
+        .map(|k| {
+            let mut f = [0.0; NUM_FEATURES];
+            for i in 0..NUM_FEATURES {
+                f[i] = if SUM_FEATURES[i] {
+                    s.features[i] * w[k]
+                } else {
+                    (s.features[i] * rng.range_f64(0.92, 1.08)).max(0.0)
+                };
+            }
+            Sample { time: s.time, features: f, truth: s.truth }
+        })
+        .collect()
+}
+
+/// Merge per-node samples of the same timestamp into one cluster-level
+/// sample: sum-features add, average-features average.
+pub fn merge(parts: &[Sample]) -> Sample {
+    assert!(!parts.is_empty());
+    let n = parts.len() as f64;
+    let mut f = [0.0; NUM_FEATURES];
+    for p in parts {
+        for i in 0..NUM_FEATURES {
+            f[i] += p.features[i];
+        }
+    }
+    for i in 0..NUM_FEATURES {
+        if !SUM_FEATURES[i] {
+            f[i] /= n;
+        }
+    }
+    Sample { time: parts[0].time, features: f, truth: parts[0].truth }
+}
+
+/// The agent fleet: spawns one thread per node, each forwarding its
+/// share of the cluster metrics; a merger thread recombines messages by
+/// timestamp and emits cluster samples in order.
+pub struct AgentFleet;
+
+impl AgentFleet {
+    /// Spawn `n_nodes` agents consuming pre-split per-node streams, plus
+    /// the merger. Returns the merged cluster-sample receiver.
+    ///
+    /// The merger assumes agents deliver in timestamp order per node
+    /// (true of the scrape loop) and waits for all nodes per timestamp —
+    /// the paper's monitor does the same via per-agent landing files.
+    pub fn spawn(
+        per_node: Vec<Receiver<Sample>>,
+    ) -> (Receiver<Sample>, std::thread::JoinHandle<()>) {
+        let (tx_msg, rx_msg) = channel::<AgentMessage>();
+        let n_nodes = per_node.len();
+        // one forwarder thread per agent
+        for (node, rx) in per_node.into_iter().enumerate() {
+            let tx = tx_msg.clone();
+            std::thread::spawn(move || {
+                while let Ok(sample) = rx.recv() {
+                    if tx.send(AgentMessage { node, sample }).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+        drop(tx_msg);
+
+        let (tx_out, rx_out) = channel::<Sample>();
+        let merger = std::thread::spawn(move || {
+            use std::collections::BTreeMap;
+            // pending[timestamp bits] -> collected parts
+            let mut pending: BTreeMap<u64, Vec<Sample>> = BTreeMap::new();
+            while let Ok(msg) = rx_msg.recv() {
+                let key = msg.sample.time.to_bits();
+                let parts = pending.entry(key).or_default();
+                parts.push(msg.sample);
+                if parts.len() == n_nodes {
+                    let parts = pending.remove(&key).unwrap();
+                    if tx_out.send(merge(&parts)).is_err() {
+                        return;
+                    }
+                }
+            }
+            // input closed: flush stragglers (partial scrapes) in order
+            for (_, parts) in pending {
+                let _ = tx_out.send(merge(&parts));
+            }
+        });
+        (rx_out, merger)
+    }
+
+    /// Convenience: run a full trace through a simulated n-node fleet
+    /// and return the merged samples (ordering preserved).
+    pub fn replay_trace(
+        samples: &[Sample],
+        n_nodes: usize,
+        seed: u64,
+    ) -> Vec<Sample> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut txs: Vec<Sender<Sample>> = Vec::new();
+        let mut rxs: Vec<Receiver<Sample>> = Vec::new();
+        for _ in 0..n_nodes {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let (rx_out, merger) = AgentFleet::spawn(rxs);
+        for s in samples {
+            for (k, part) in
+                split_sample(s, n_nodes, &mut rng).into_iter().enumerate()
+            {
+                txs[k].send(part).expect("agent channel closed");
+            }
+        }
+        drop(txs);
+        let out: Vec<Sample> = rx_out.into_iter().collect();
+        merger.join().expect("merger panicked");
+        out
+    }
+}
+
+/// Simulate the loss of `dead` of `n` nodes from time `at`: the dead
+/// node's sum-share disappears and the survivors' utilisations rise —
+/// the paper's §6.2 partial-self-healing scenario, where node failure
+/// "present[s] itself as the appearance of new workload types".
+pub fn inject_node_failure(
+    samples: &mut [Sample],
+    at_time: f64,
+    n_nodes: usize,
+    dead: usize,
+) {
+    assert!(dead < n_nodes);
+    let survivors = (n_nodes - dead) as f64 / n_nodes as f64;
+    for s in samples.iter_mut().filter(|s| s.time >= at_time) {
+        for i in 0..NUM_FEATURES {
+            if SUM_FEATURES[i] {
+                // lost capacity: cluster-wide throughput drops
+                s.features[i] *= survivors;
+            } else {
+                // survivors run hotter
+                s.features[i] =
+                    (s.features[i] / survivors).min(100.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloadgen::TruthTag;
+    use crate::util::rng::Rng;
+    use crate::workloadgen::{tour_schedule, Generator};
+
+    fn sample(t: f64, level: f64) -> Sample {
+        Sample {
+            time: t,
+            features: [level; NUM_FEATURES],
+            truth: TruthTag::Steady(0),
+        }
+    }
+
+    #[test]
+    fn split_then_merge_is_identity_for_sums() {
+        let mut rng = Rng::new(0);
+        let s = sample(1.0, 40.0);
+        let parts = split_sample(&s, 4, &mut rng);
+        let m = merge(&parts);
+        for i in 0..NUM_FEATURES {
+            if SUM_FEATURES[i] {
+                assert!(
+                    (m.features[i] - s.features[i]).abs() < 1e-9,
+                    "sum feature {i}"
+                );
+            } else {
+                // averages reconstruct within the jitter band
+                assert!(
+                    (m.features[i] - s.features[i]).abs()
+                        < 0.1 * s.features[i],
+                    "avg feature {i}: {} vs {}",
+                    m.features[i],
+                    s.features[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_replay_preserves_count_and_order() {
+        let mut g = Generator::with_default_config(1);
+        let trace = g.generate(&tour_schedule(60, &[0, 3]));
+        let merged = AgentFleet::replay_trace(&trace.samples, 4, 2);
+        assert_eq!(merged.len(), trace.samples.len());
+        for (a, b) in merged.iter().zip(&trace.samples) {
+            assert_eq!(a.time, b.time);
+        }
+    }
+
+    #[test]
+    fn fleet_merge_statistically_faithful() {
+        // windows aggregated from fleet-merged samples should match the
+        // original trace closely enough for classification
+        use crate::monitor::{aggregate_samples, MonitorConfig};
+        let mut g = Generator::with_default_config(3);
+        let trace = g.generate(&tour_schedule(300, &[2]));
+        let merged = AgentFleet::replay_trace(&trace.samples, 4, 4);
+        let cfg = MonitorConfig { window_size: 30 };
+        let wa = aggregate_samples(&trace.samples, &cfg);
+        let wb = aggregate_samples(&merged, &cfg);
+        for (a, b) in wa.iter().zip(&wb) {
+            for i in 0..NUM_FEATURES {
+                let tol = 0.12 * a.mean[i].abs() + 1.0;
+                assert!(
+                    (a.mean[i] - b.mean[i]).abs() < tol,
+                    "window {} feature {i}: {} vs {}",
+                    a.index,
+                    a.mean[i],
+                    b.mean[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn node_failure_shifts_signature() {
+        let mut samples: Vec<Sample> =
+            (0..100).map(|i| sample(i as f64, 40.0)).collect();
+        inject_node_failure(&mut samples, 50.0, 4, 1);
+        // before: untouched
+        assert_eq!(samples[10].features[0], 40.0);
+        // after: utilisations rise, throughputs fall
+        assert!(samples[60].features[0] > 40.0); // cpu_user (avg)
+        assert!(samples[60].features[5] < 40.0); // disk_read (sum)
+    }
+
+    #[test]
+    fn merge_single_node_is_identity() {
+        let s = sample(2.0, 17.0);
+        let m = merge(&[s.clone()]);
+        assert_eq!(m.features, s.features);
+    }
+}

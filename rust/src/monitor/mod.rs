@@ -1,0 +1,208 @@
+//! KERMIT Workload Monitor (KWmon) — the streaming engine of the on-line
+//! sub-system (§6.3/§6.4): ingests raw agent metric messages, aggregates
+//! them into observation windows `O_t` with feature vectors `F_t`, and
+//! feeds the transformation zone + the on-line classification pipeline.
+//!
+//! Two modes, same aggregation logic (the paper's batch ChangeDetector
+//! "logic … is exactly the same as in the real-time use case"):
+//! * [`aggregate_trace`] — batch aggregation of a recorded trace;
+//! * [`Monitor`] — a streaming thread consuming an mpsc channel of agent
+//!   samples and emitting windows as they close.
+
+pub mod agents;
+
+use crate::features::{FeatureVec, ObservationWindow};
+use crate::workloadgen::{Sample, Trace, TruthTag};
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Monitor configuration.
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// Samples aggregated per observation window.
+    pub window_size: usize,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig { window_size: 30 }
+    }
+}
+
+/// Majority ground-truth tag for a window (None if mixed/transition) —
+/// scoring aid only.
+fn window_truth(tags: &[TruthTag]) -> Option<u32> {
+    let mut counts = std::collections::BTreeMap::new();
+    for t in tags {
+        if let TruthTag::Steady(id) = t {
+            *counts.entry(*id).or_insert(0usize) += 1;
+        }
+    }
+    let (best, n) = counts.into_iter().max_by_key(|&(_, n)| n)?;
+    // a window dominated (>50%) by one steady class is labelled with it
+    if n * 2 > tags.len() {
+        Some(best)
+    } else {
+        None
+    }
+}
+
+/// Whether the window overlaps a ground-truth transition (for the Fig 9
+/// detection experiment).
+pub fn window_has_transition(tags: &[TruthTag]) -> bool {
+    tags.iter().any(|t| t.is_transition())
+}
+
+/// Batch aggregation: slice the trace into consecutive windows of
+/// `window_size` samples (the trailing partial window is dropped, as a
+/// real streaming aggregator would leave it open).
+pub fn aggregate_trace(
+    trace: &Trace,
+    config: &MonitorConfig,
+) -> Vec<ObservationWindow> {
+    aggregate_samples(&trace.samples, config)
+}
+
+pub fn aggregate_samples(
+    samples: &[Sample],
+    config: &MonitorConfig,
+) -> Vec<ObservationWindow> {
+    let w = config.window_size;
+    assert!(w >= 2, "window_size must be >= 2 for variance");
+    samples
+        .chunks_exact(w)
+        .enumerate()
+        .map(|(i, chunk)| {
+            let feats: Vec<FeatureVec> =
+                chunk.iter().map(|s| s.features).collect();
+            let tags: Vec<TruthTag> = chunk.iter().map(|s| s.truth).collect();
+            let mut ow = ObservationWindow::aggregate(
+                i as u64,
+                chunk.last().unwrap().time,
+                &feats,
+                window_truth(&tags),
+            );
+            // windows overlapping a generator transition keep truth=None
+            if window_has_transition(&tags) && window_truth(&tags).is_none() {
+                ow.truth = None;
+            }
+            ow
+        })
+        .collect()
+}
+
+/// Per-window transition ground truth for detection scoring: true when
+/// the window's samples include a transition tag.
+pub fn transition_truth(trace: &Trace, config: &MonitorConfig) -> Vec<bool> {
+    trace
+        .samples
+        .chunks_exact(config.window_size)
+        .map(|chunk| {
+            chunk.iter().any(|s| s.truth.is_transition())
+        })
+        .collect()
+}
+
+/// Streaming monitor: consumes agent samples from a channel, emits
+/// closed windows on another. Runs until the input channel closes.
+pub struct Monitor;
+
+impl Monitor {
+    /// Spawn the aggregation thread. Window indices are monotone from
+    /// `start_index`.
+    pub fn spawn(
+        rx: Receiver<Sample>,
+        tx: Sender<ObservationWindow>,
+        config: MonitorConfig,
+        start_index: u64,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut buf: Vec<Sample> = Vec::with_capacity(config.window_size);
+            let mut index = start_index;
+            while let Ok(s) = rx.recv() {
+                buf.push(s);
+                if buf.len() == config.window_size {
+                    let feats: Vec<FeatureVec> =
+                        buf.iter().map(|s| s.features).collect();
+                    let tags: Vec<TruthTag> =
+                        buf.iter().map(|s| s.truth).collect();
+                    let ow = ObservationWindow::aggregate(
+                        index,
+                        buf.last().unwrap().time,
+                        &feats,
+                        window_truth(&tags),
+                    );
+                    index += 1;
+                    buf.clear();
+                    if tx.send(ow).is_err() {
+                        return; // downstream hung up
+                    }
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloadgen::{tour_schedule, Generator};
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batch_aggregation_window_count_and_truth() {
+        let mut g = Generator::with_default_config(0);
+        let t = g.generate(&tour_schedule(90, &[0, 1]));
+        let cfg = MonitorConfig { window_size: 30 };
+        let ws = aggregate_trace(&t, &cfg);
+        assert_eq!(ws.len(), t.len() / 30);
+        // early windows are pure class 0, late ones pure class 1
+        assert_eq!(ws.first().unwrap().truth, Some(0));
+        assert_eq!(ws.last().unwrap().truth, Some(1));
+        // indices are consecutive
+        for (i, w) in ws.iter().enumerate() {
+            assert_eq!(w.index, i as u64);
+        }
+    }
+
+    #[test]
+    fn transition_truth_flags_ramp_windows() {
+        let mut g = Generator::with_default_config(1);
+        let t = g.generate(&tour_schedule(60, &[0, 2]));
+        let cfg = MonitorConfig { window_size: 12 };
+        let tt = transition_truth(&t, &cfg);
+        assert!(tt.iter().any(|&b| b), "no transition window found");
+        assert!(!tt[0], "first window must be steady");
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let mut g = Generator::with_default_config(2);
+        let t = g.generate(&tour_schedule(64, &[3]));
+        let cfg = MonitorConfig { window_size: 16 };
+        let batch = aggregate_trace(&t, &cfg);
+
+        let (tx_s, rx_s) = channel();
+        let (tx_w, rx_w) = channel();
+        let h = Monitor::spawn(rx_s, tx_w, cfg.clone(), 0);
+        for s in &t.samples {
+            tx_s.send(s.clone()).unwrap();
+        }
+        drop(tx_s);
+        h.join().unwrap();
+        let streamed: Vec<_> = rx_w.into_iter().collect();
+        assert_eq!(streamed.len(), batch.len());
+        for (a, b) in streamed.iter().zip(&batch) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.mean, b.mean);
+            assert_eq!(a.var, b.var);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "window_size")]
+    fn window_size_one_rejected() {
+        let mut g = Generator::with_default_config(3);
+        let t = g.generate(&tour_schedule(10, &[0]));
+        aggregate_trace(&t, &MonitorConfig { window_size: 1 });
+    }
+}

@@ -1,0 +1,251 @@
+//! Workload discovery, characterization, and drift detection —
+//! Algorithm 2 (paper §7.1).
+//!
+//! On each off-line interval the analyser:
+//! 1. runs the ChangeDetector in batch mode over the landed observation
+//!    windows and extracts the transition windows;
+//! 2. runs DBSCAN on the remaining steady-state windows (each cluster is
+//!    a distinct workload type); the O(n²) distance matrix can be routed
+//!    through the `pairwise_dist` PJRT artifact via [`DistanceProvider`];
+//! 3. characterizes each cluster (mean/std/min/max/p75/p90 per feature);
+//! 4. matches clusters against WorkloadDB: matched + mean-shift > ε ⇒
+//!    drift (stored config kept, optimal flag cleared); matched without
+//!    shift ⇒ refresh; unmatched ⇒ new label inserted.
+
+use crate::clustering::{dbscan, DbscanConfig, DistanceProvider, NOISE};
+use crate::features::{AnalyticWindow, ObservationWindow};
+use crate::knowledge::{Characterization, WorkloadDb};
+use crate::online::change_detector::{ChangeDetector, ChangeDetectorConfig};
+
+#[derive(Debug, Clone)]
+pub struct DiscoveryConfig {
+    pub change: ChangeDetectorConfig,
+    pub dbscan: DbscanConfig,
+    /// Nearest-characterization radius for "find match in WorkloadDB".
+    pub match_radius: f64,
+    /// The ε of Algorithm 2: matched clusters whose mean vector moved
+    /// farther than this are flagged as drifting.
+    pub drift_epsilon: f64,
+}
+
+impl Default for DiscoveryConfig {
+    fn default() -> Self {
+        DiscoveryConfig {
+            change: ChangeDetectorConfig::default(),
+            dbscan: DbscanConfig { eps: 10.0, min_pts: 4 },
+            match_radius: 25.0,
+            drift_epsilon: 8.0,
+        }
+    }
+}
+
+/// What happened to one discovered cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterOutcome {
+    /// Matched an existing workload within drift tolerance.
+    Matched { label: u32, distance: f64 },
+    /// Matched an existing workload but beyond ε: drift flagged.
+    Drifted { label: u32, distance: f64 },
+    /// New workload: fresh label inserted.
+    New { label: u32 },
+}
+
+/// Discovery report for one batch.
+#[derive(Debug, Clone, Default)]
+pub struct DiscoveryReport {
+    /// Per input window: the workload label assigned (None for
+    /// transition windows and DBSCAN noise).
+    pub window_labels: Vec<Option<u32>>,
+    /// Outcome per discovered cluster.
+    pub outcomes: Vec<ClusterOutcome>,
+    /// Count of windows flagged as transitions by the batch detector.
+    pub transition_windows: usize,
+    /// Count of steady windows DBSCAN left as noise.
+    pub noise_windows: usize,
+}
+
+impl DiscoveryReport {
+    pub fn new_labels(&self) -> Vec<u32> {
+        self.outcomes
+            .iter()
+            .filter_map(|o| match o {
+                ClusterOutcome::New { label } => Some(*label),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn drifted_labels(&self) -> Vec<u32> {
+        self.outcomes
+            .iter()
+            .filter_map(|o| match o {
+                ClusterOutcome::Drifted { label, .. } => Some(*label),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Run Algorithm 2 over a batch of observation windows, updating `db`.
+pub fn discover(
+    windows: &[ObservationWindow],
+    db: &mut WorkloadDb,
+    config: &DiscoveryConfig,
+    dist: &dyn DistanceProvider,
+) -> DiscoveryReport {
+    let mut report = DiscoveryReport {
+        window_labels: vec![None; windows.len()],
+        ..Default::default()
+    };
+    if windows.is_empty() {
+        return report;
+    }
+
+    // 1. flag + extract transition windows (batch ChangeDetector)
+    let flags = ChangeDetector::batch(windows, &config.change);
+    let steady_idx: Vec<usize> = (0..windows.len())
+        .filter(|&i| !flags[i])
+        .collect();
+    report.transition_windows = windows.len() - steady_idx.len();
+
+    // 2. DBSCAN on the steady windows' analytic features
+    let rows: Vec<Vec<f64>> = steady_idx
+        .iter()
+        .map(|&i| AnalyticWindow::from_observation(&windows[i]).features)
+        .collect();
+    let clusters = dbscan(&rows, &config.dbscan, dist);
+    report.noise_windows =
+        clusters.labels.iter().filter(|&&l| l == NOISE).count();
+
+    // 3+4. characterize / match / drift / insert, per cluster
+    for c in 0..clusters.n_clusters as i32 {
+        let members = clusters.members(c);
+        let member_rows: Vec<Vec<f64>> =
+            members.iter().map(|&i| rows[i].clone()).collect();
+        let ch = Characterization::from_rows(&member_rows);
+        let centroid = ch.mean_vector();
+
+        let outcome = match db.nearest_observed(&ch) {
+            Some((label, d)) if d <= config.match_radius => {
+                if d > config.drift_epsilon {
+                    db.mark_drifting(label, ch, centroid, members.len());
+                    ClusterOutcome::Drifted { label, distance: d }
+                } else {
+                    db.refresh(label, ch, members.len());
+                    ClusterOutcome::Matched { label, distance: d }
+                }
+            }
+            _ => {
+                let label =
+                    db.insert_new(ch, centroid, members.len(), false);
+                ClusterOutcome::New { label }
+            }
+        };
+        let label = match &outcome {
+            ClusterOutcome::Matched { label, .. }
+            | ClusterOutcome::Drifted { label, .. }
+            | ClusterOutcome::New { label } => *label,
+        };
+        for &m in &members {
+            report.window_labels[steady_idx[m]] = Some(label);
+        }
+        report.outcomes.push(outcome);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::NativeDistance;
+    use crate::features::NUM_FEATURES;
+    use crate::monitor::{aggregate_trace, MonitorConfig};
+    use crate::workloadgen::{tour_schedule, GenConfig, Generator, Mix, ScheduleEntry};
+
+    fn run_tour(seed: u64, classes: &[u32], dur: usize) -> Vec<ObservationWindow> {
+        let mut g = Generator::with_default_config(seed);
+        let t = g.generate(&tour_schedule(dur, classes));
+        aggregate_trace(&t, &MonitorConfig { window_size: 30 })
+    }
+
+    #[test]
+    fn discovers_distinct_workloads_as_new_labels() {
+        let ws = run_tour(0, &[0, 2, 5], 600);
+        let mut db = WorkloadDb::new();
+        let r = discover(&ws, &mut db, &DiscoveryConfig::default(), &NativeDistance);
+        assert_eq!(db.len(), 3, "outcomes: {:?}", r.outcomes);
+        assert_eq!(r.new_labels().len(), 3);
+        // labelled windows dominate
+        let labelled = r.window_labels.iter().filter(|l| l.is_some()).count();
+        assert!(labelled * 10 > ws.len() * 7, "{labelled}/{}", ws.len());
+    }
+
+    #[test]
+    fn rediscovery_matches_not_duplicates() {
+        let mut db = WorkloadDb::new();
+        let cfg = DiscoveryConfig::default();
+        let ws1 = run_tour(1, &[0, 3], 500);
+        discover(&ws1, &mut db, &cfg, &NativeDistance);
+        assert_eq!(db.len(), 2);
+        // second batch of the same classes: matched, no new labels
+        let ws2 = run_tour(2, &[0, 3], 500);
+        let r2 = discover(&ws2, &mut db, &cfg, &NativeDistance);
+        assert_eq!(db.len(), 2, "outcomes: {:?}", r2.outcomes);
+        assert!(r2.new_labels().is_empty());
+    }
+
+    #[test]
+    fn drift_is_detected_and_flagged() {
+        let mut db = WorkloadDb::new();
+        let cfg = DiscoveryConfig::default();
+        let ws1 = run_tour(3, &[1], 500);
+        let r1 = discover(&ws1, &mut db, &cfg, &NativeDistance);
+        let label = r1.new_labels()[0];
+
+        // same class but drifted: shift two features by ~15 units
+        let mut gen_cfg = GenConfig::default();
+        let mut rate = [0.0; NUM_FEATURES];
+        rate[0] = 15.0 / 500.0;
+        rate[3] = 15.0 / 500.0;
+        gen_cfg.drift_per_sample = vec![(1, rate)];
+        let mut g = Generator::new(4, gen_cfg);
+        let t = g.generate(&[ScheduleEntry { mix: Mix::Pure(1), duration: 500 }]);
+        // take only the tail (fully drifted region)
+        let tail: Vec<_> = t.samples[250..].to_vec();
+        let ws2 = crate::monitor::aggregate_samples(
+            &tail,
+            &MonitorConfig { window_size: 30 },
+        );
+        let r2 = discover(&ws2, &mut db, &cfg, &NativeDistance);
+        assert_eq!(r2.drifted_labels(), vec![label], "outcomes {:?}", r2.outcomes);
+        assert!(db.get(label).unwrap().is_drifting);
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let mut db = WorkloadDb::new();
+        let r = discover(&[], &mut db, &DiscoveryConfig::default(), &NativeDistance);
+        assert!(r.outcomes.is_empty());
+        assert!(db.is_empty());
+    }
+
+    #[test]
+    fn hybrid_workload_discovered_as_own_class() {
+        let mut db = WorkloadDb::new();
+        let cfg = DiscoveryConfig::default();
+        // pure classes first
+        let ws = run_tour(5, &[0, 1], 500);
+        discover(&ws, &mut db, &cfg, &NativeDistance);
+        assert_eq!(db.len(), 2);
+        // now a 50/50 hybrid of 0+1: a genuinely new cluster
+        let mut g = Generator::with_default_config(6);
+        let t = g.generate(&[ScheduleEntry {
+            mix: Mix::Hybrid(0, 1, 0.5),
+            duration: 500,
+        }]);
+        let ws2 = aggregate_trace(&t, &MonitorConfig { window_size: 30 });
+        let r = discover(&ws2, &mut db, &cfg, &NativeDistance);
+        assert_eq!(r.new_labels().len(), 1, "outcomes {:?}", r.outcomes);
+        assert_eq!(db.len(), 3);
+    }
+}

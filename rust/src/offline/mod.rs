@@ -1,0 +1,11 @@
+//! The KERMIT off-line sub-system (§7): batch workload discovery and
+//! characterization (Algorithm 2), drift detection, zero-shot workload
+//! anticipation, and automated classifier training.
+
+pub mod discovery;
+pub mod training;
+pub mod zsl;
+
+pub use discovery::{discover, ClusterOutcome, DiscoveryConfig, DiscoveryReport};
+pub use training::{train, TrainedModels, TrainingConfig};
+pub use zsl::{blend_characterizations, synthesize, SynthesisReport, ZslConfig};

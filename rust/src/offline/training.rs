@@ -1,0 +1,259 @@
+//! Automated classifier training — the off-line ML pipeline of §7.2.
+//!
+//! Implements the nine training steps: extract per-workload window
+//! ranges, build the WorkloadClassifier training set from analytic
+//! windows, establish transition ranges and generate transition labels,
+//! apply the rate-of-change transform for the TransitionClassifier set,
+//! run the ZSL WorkloadSynthesizer and merge its instances, extract the
+//! label sequence for the WorkloadPredictor, and fit the classifiers.
+//! No human labelling anywhere: every label comes from discovery
+//! (cluster ids) or generation (transition pair ids, synthetic ids).
+
+use super::discovery::DiscoveryReport;
+use super::zsl::{synthesize, ZslConfig};
+use crate::features::{rate_of_change, AnalyticWindow, ObservationWindow};
+use crate::knowledge::WorkloadDb;
+use crate::ml::forest::{ForestConfig, RandomForest};
+use crate::ml::Dataset;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct TrainingConfig {
+    pub forest: ForestConfig,
+    pub zsl: ZslConfig,
+    /// Run the ZSL synthesizer and merge synthetic instances.
+    pub enable_zsl: bool,
+}
+
+impl Default for TrainingConfig {
+    fn default() -> Self {
+        TrainingConfig {
+            forest: ForestConfig::default(),
+            zsl: ZslConfig::default(),
+            enable_zsl: true,
+        }
+    }
+}
+
+/// Everything the on-line sub-system needs after a training run.
+pub struct TrainedModels {
+    /// The WorkloadClassifier (random forest over analytic windows).
+    pub workload_forest: RandomForest,
+    /// The TransitionClassifier (random forest over rate-of-change
+    /// windows), None when the batch contained no transitions.
+    pub transition_forest: Option<RandomForest>,
+    /// Transition-label registry: (from_label, to_label) -> generated id.
+    pub transition_labels: BTreeMap<(u32, u32), u32>,
+    /// Label sequence for the WorkloadPredictor (consecutive duplicates
+    /// collapsed).
+    pub label_sequence: Vec<u32>,
+    /// Training-set sizes (telemetry).
+    pub workload_set_size: usize,
+    pub transition_set_size: usize,
+}
+
+/// Build the WorkloadClassifier training set: analytic windows labelled
+/// by their discovery cluster label (steps 1-2).
+pub fn workload_training_set(
+    windows: &[ObservationWindow],
+    report: &DiscoveryReport,
+) -> Dataset {
+    let mut d = Dataset::new();
+    for (w, label) in windows.iter().zip(&report.window_labels) {
+        if let Some(l) = label {
+            d.push(AnalyticWindow::from_observation(w).features, *l);
+        }
+    }
+    d
+}
+
+/// Build the TransitionClassifier training set (steps 3-6): scan the
+/// window sequence; maximal runs of unlabelled windows bounded by two
+/// labelled ones form a transition of type (from, to); features are the
+/// rate-of-change transform of the surrounding analytic windows.
+/// Transition labels are generated integers, consistent across calls via
+/// the registry.
+pub fn transition_training_set(
+    windows: &[ObservationWindow],
+    report: &DiscoveryReport,
+    registry: &mut BTreeMap<(u32, u32), u32>,
+) -> Dataset {
+    let analytic: Vec<AnalyticWindow> =
+        windows.iter().map(AnalyticWindow::from_observation).collect();
+    let rocs = rate_of_change(&analytic); // rocs[i] = a[i+1] - a[i]
+    let labels = &report.window_labels;
+    let mut d = Dataset::new();
+
+    let mut i = 0;
+    while i < windows.len() {
+        if labels[i].is_none() {
+            // find the run of unlabelled windows [i, j)
+            let mut j = i;
+            while j < windows.len() && labels[j].is_none() {
+                j += 1;
+            }
+            let from = if i > 0 { labels[i - 1] } else { None };
+            let to = if j < windows.len() { labels[j] } else { None };
+            if let (Some(f), Some(t)) = (from, to) {
+                if f != t {
+                    let next_id = registry.len() as u32;
+                    let id = *registry.entry((f, t)).or_insert(next_id);
+                    // rate-of-change rows spanning the run: indices
+                    // i-1 .. j-1 in roc space cover the ramp deltas
+                    for k in i.saturating_sub(1)..j.min(rocs.len()) {
+                        d.push(rocs[k].features.clone(), id);
+                    }
+                }
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    d
+}
+
+/// Extract the predictor label sequence (step 8): labelled windows in
+/// order, consecutive duplicates collapsed.
+pub fn label_sequence(report: &DiscoveryReport) -> Vec<u32> {
+    let mut seq = Vec::new();
+    for l in report.window_labels.iter().flatten() {
+        if seq.last() != Some(l) {
+            seq.push(*l);
+        }
+    }
+    seq
+}
+
+/// The full pipeline (step 9 trains the forests).
+pub fn train(
+    windows: &[ObservationWindow],
+    report: &DiscoveryReport,
+    db: &mut WorkloadDb,
+    config: &TrainingConfig,
+    rng: &mut Rng,
+) -> TrainedModels {
+    let mut workload_set = workload_training_set(windows, report);
+
+    if config.enable_zsl {
+        let synth = synthesize(db, &config.zsl, rng);
+        for (row, label) in
+            synth.instances.rows.into_iter().zip(synth.instances.labels)
+        {
+            workload_set.push(row, label);
+        }
+    }
+
+    let mut registry = BTreeMap::new();
+    let transition_set =
+        transition_training_set(windows, report, &mut registry);
+
+    let workload_forest =
+        RandomForest::fit(&workload_set, config.forest.clone(), rng);
+    let transition_forest = if transition_set.is_empty() {
+        None
+    } else {
+        Some(RandomForest::fit(&transition_set, config.forest.clone(), rng))
+    };
+
+    TrainedModels {
+        workload_forest,
+        transition_forest,
+        transition_labels: registry,
+        label_sequence: label_sequence(report),
+        workload_set_size: workload_set.len(),
+        transition_set_size: transition_set.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::NativeDistance;
+    use crate::ml::{accuracy, Classifier};
+    use crate::monitor::{aggregate_trace, MonitorConfig};
+    use crate::offline::discovery::{discover, DiscoveryConfig};
+    use crate::workloadgen::{tour_schedule, Generator};
+
+    fn setup(seed: u64, classes: &[u32]) -> (Vec<ObservationWindow>, DiscoveryReport, WorkloadDb) {
+        let mut g = Generator::with_default_config(seed);
+        let t = g.generate(&tour_schedule(400, classes));
+        let ws = aggregate_trace(&t, &MonitorConfig { window_size: 20 });
+        let mut db = WorkloadDb::new();
+        let r = discover(&ws, &mut db, &DiscoveryConfig::default(), &NativeDistance);
+        (ws, r, db)
+    }
+
+    #[test]
+    fn end_to_end_training_classifies_heldout_windows() {
+        let (ws, r, mut db) = setup(0, &[0, 2, 5, 7]);
+        let mut rng = Rng::new(1);
+        let models = train(&ws, &r, &mut db, &TrainingConfig::default(), &mut rng);
+        assert!(models.workload_set_size > 50);
+
+        // held-out trace of the same classes: forest must label windows
+        // with the same discovery labels
+        let mut g = Generator::with_default_config(99);
+        let t2 = g.generate(&tour_schedule(200, &[0, 2, 5, 7]));
+        let ws2 = aggregate_trace(&t2, &MonitorConfig { window_size: 20 });
+        let mut db2 = db;
+        let r2 = discover(&ws2, &mut db2, &DiscoveryConfig::default(), &NativeDistance);
+        let heldout = workload_training_set(&ws2, &r2);
+        let preds = models.workload_forest.predict_batch(&heldout.rows);
+        let acc = accuracy(&heldout.labels, &preds);
+        assert!(acc > 0.9, "held-out accuracy {acc}");
+    }
+
+    #[test]
+    fn transition_set_has_labels_per_pair() {
+        let (ws, r, _) = setup(2, &[0, 2, 5]);
+        let mut reg = BTreeMap::new();
+        let d = transition_training_set(&ws, &r, &mut reg);
+        // tour 0->2->5 has two distinct transitions
+        assert_eq!(reg.len(), 2, "registry {reg:?}");
+        assert!(!d.is_empty());
+        // ids are 0..n
+        let mut ids: Vec<u32> = reg.values().copied().collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn label_sequence_collapses_duplicates() {
+        let report = DiscoveryReport {
+            window_labels: vec![
+                Some(3), Some(3), None, Some(5), Some(5), Some(3),
+            ],
+            ..Default::default()
+        };
+        assert_eq!(label_sequence(&report), vec![3, 5, 3]);
+    }
+
+    #[test]
+    fn zsl_expands_training_set() {
+        let (ws, r, mut db) = setup(3, &[0, 4]);
+        let mut rng = Rng::new(4);
+        let no_zsl = train(
+            &ws, &r, &mut db.clone_for_test(),
+            &TrainingConfig { enable_zsl: false, ..Default::default() },
+            &mut rng,
+        );
+        let with_zsl = train(
+            &ws, &r, &mut db,
+            &TrainingConfig::default(),
+            &mut rng,
+        );
+        assert!(with_zsl.workload_set_size > no_zsl.workload_set_size);
+        // the synthetic hybrid class is registered in the DB
+        assert!(db.entries().any(|e| e.synthetic));
+    }
+}
+
+#[cfg(test)]
+impl WorkloadDb {
+    /// test helper: deep copy via json round-trip
+    fn clone_for_test(&self) -> WorkloadDb {
+        WorkloadDb::from_json(&self.to_json()).unwrap()
+    }
+}

@@ -1,0 +1,207 @@
+//! Zero-shot workload anticipation — the WorkloadSynthesizer (paper
+//! §7.2 step 7, and [9]).
+//!
+//! Multi-user clusters produce *hybrid* workloads: superpositions of
+//! two tenants' jobs. KERMIT anticipates them before ever observing one:
+//! every pair of known pure workloads yields a synthetic class whose
+//! prototype blends the parents' characterizations; synthetic training
+//! instances are sampled from that prototype and merged into the
+//! WorkloadClassifier training set, so the on-line classifier can name a
+//! hybrid the first time it appears.
+
+use crate::knowledge::{Characterization, WorkloadDb};
+use crate::ml::Dataset;
+use crate::stats::Summary;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ZslConfig {
+    /// Synthetic instances generated per anticipated class.
+    pub instances_per_class: usize,
+    /// Blend weight range for the first parent (w ~ U[lo, hi]).
+    pub weight_lo: f64,
+    pub weight_hi: f64,
+}
+
+impl Default for ZslConfig {
+    fn default() -> Self {
+        ZslConfig { instances_per_class: 40, weight_lo: 0.35, weight_hi: 0.65 }
+    }
+}
+
+/// The synthesizer output: synthetic classes registered in the DB and
+/// their training instances.
+#[derive(Debug, Default)]
+pub struct SynthesisReport {
+    /// (synthetic label, parent a, parent b)
+    pub classes: Vec<(u32, u32, u32)>,
+    pub instances: Dataset,
+}
+
+/// Blend two characterizations at weight w (means blend linearly,
+/// variances superpose with a cross-tenant interference term, matching
+/// the generator's hybrid model).
+pub fn blend_characterizations(
+    a: &Characterization,
+    b: &Characterization,
+    w: f64,
+) -> Characterization {
+    let per_feature = a
+        .per_feature
+        .iter()
+        .zip(&b.per_feature)
+        .map(|(sa, sb)| {
+            let mean = w * sa.mean + (1.0 - w) * sb.mean;
+            let va = sa.std * sa.std;
+            let vb = sb.std * sb.std;
+            let var = w * w * va + (1.0 - w) * (1.0 - w) * vb
+                + 0.25 * (va + vb);
+            Summary {
+                n: sa.n.min(sb.n),
+                mean,
+                std: var.sqrt(),
+                min: w * sa.min + (1.0 - w) * sb.min,
+                max: w * sa.max + (1.0 - w) * sb.max,
+                p75: w * sa.p75 + (1.0 - w) * sb.p75,
+                p90: w * sa.p90 + (1.0 - w) * sb.p90,
+            }
+        })
+        .collect();
+    Characterization { per_feature }
+}
+
+/// Generate the Class-Descriptor pairing (step 7a), register synthetic
+/// prototypes in the DB (7c), and emit merged training instances (7d).
+///
+/// Pure = non-synthetic entries currently in the DB. Pairs that already
+/// have a synthetic entry are skipped (idempotent across off-line runs).
+pub fn synthesize(
+    db: &mut WorkloadDb,
+    config: &ZslConfig,
+    rng: &mut Rng,
+) -> SynthesisReport {
+    let mut report = SynthesisReport::default();
+    let pure: Vec<u32> = db
+        .entries()
+        .filter(|e| !e.synthetic)
+        .map(|e| e.label)
+        .collect();
+
+    for (i, &a) in pure.iter().enumerate() {
+        for &b in pure.iter().skip(i + 1) {
+            // idempotence: one synthetic class per parent pair, ever
+            if db.has_synthetic_pair(a, b) {
+                continue;
+            }
+            let (ca, cb) = (
+                db.get(a).unwrap().characterization.clone(),
+                db.get(b).unwrap().characterization.clone(),
+            );
+            let proto = blend_characterizations(&ca, &cb, 0.5);
+            let centroid = proto.mean_vector();
+            let label = db.insert_with_parents(
+                proto.clone(),
+                centroid,
+                0, // no observed windows
+                true,
+                Some(if a < b { (a, b) } else { (b, a) }),
+            );
+            report.classes.push((label, a, b));
+            // synthetic instances: gaussian around blended stats with
+            // per-instance blend-weight jitter (multi-user mixes vary)
+            for _ in 0..config.instances_per_class {
+                let w = rng.range_f64(config.weight_lo, config.weight_hi);
+                let inst = blend_characterizations(&ca, &cb, w);
+                let row: Vec<f64> = inst
+                    .per_feature
+                    .iter()
+                    .map(|s| rng.normal_ms(s.mean, s.std.max(1e-6)))
+                    .collect();
+                report.instances.push(row, label);
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn char_at(level: f64, spread: f64) -> Characterization {
+        let rows: Vec<Vec<f64>> = (0..8)
+            .map(|i| vec![level + spread * (i % 3) as f64, 2.0 * level])
+            .collect();
+        Characterization::from_rows(&rows)
+    }
+
+    fn db_with_pure(levels: &[f64]) -> WorkloadDb {
+        let mut db = WorkloadDb::new();
+        for &l in levels {
+            let c = char_at(l, 1.0);
+            let cen = c.mean_vector();
+            db.insert_new(c, cen, 8, false);
+        }
+        db
+    }
+
+    #[test]
+    fn synthesizes_all_pairs() {
+        let mut db = db_with_pure(&[0.0, 10.0, 30.0]);
+        let mut rng = Rng::new(0);
+        let r = synthesize(&mut db, &ZslConfig::default(), &mut rng);
+        assert_eq!(r.classes.len(), 3); // C(3,2)
+        assert_eq!(db.len(), 6);
+        assert_eq!(
+            r.instances.len(),
+            3 * ZslConfig::default().instances_per_class
+        );
+        // synthetic entries flagged
+        for (label, _, _) in &r.classes {
+            assert!(db.get(*label).unwrap().synthetic);
+        }
+    }
+
+    #[test]
+    fn idempotent_across_runs() {
+        let mut db = db_with_pure(&[0.0, 10.0]);
+        let mut rng = Rng::new(1);
+        let r1 = synthesize(&mut db, &ZslConfig::default(), &mut rng);
+        assert_eq!(r1.classes.len(), 1);
+        let r2 = synthesize(&mut db, &ZslConfig::default(), &mut rng);
+        assert!(r2.classes.is_empty(), "second run must not duplicate");
+        assert_eq!(db.len(), 3);
+    }
+
+    #[test]
+    fn blend_midpoint_mean() {
+        let a = char_at(0.0, 0.5);
+        let b = char_at(10.0, 0.5);
+        let m = blend_characterizations(&a, &b, 0.5);
+        let want = 0.5 * (a.per_feature[0].mean + b.per_feature[0].mean);
+        assert!((m.per_feature[0].mean - want).abs() < 1e-12);
+        // interference term keeps variance strictly positive
+        assert!(m.per_feature[0].std > 0.0);
+    }
+
+    #[test]
+    fn instances_center_near_prototype() {
+        let mut db = db_with_pure(&[0.0, 20.0]);
+        let mut rng = Rng::new(2);
+        let cfg = ZslConfig { instances_per_class: 300, ..Default::default() };
+        let r = synthesize(&mut db, &cfg, &mut rng);
+        let (label, _, _) = r.classes[0];
+        let proto = db.get(label).unwrap().centroid.clone();
+        let rows: Vec<&Vec<f64>> = r
+            .instances
+            .rows
+            .iter()
+            .zip(&r.instances.labels)
+            .filter(|(_, &l)| l == label)
+            .map(|(r, _)| r)
+            .collect();
+        let mean0: f64 =
+            rows.iter().map(|r| r[0]).sum::<f64>() / rows.len() as f64;
+        assert!((mean0 - proto[0]).abs() < 1.5, "{mean0} vs {}", proto[0]);
+    }
+}

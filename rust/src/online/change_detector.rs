@@ -1,0 +1,183 @@
+//! The ChangeDetector (paper §7.2): a statistical binary classifier that
+//! "simply uses the Welch's statistical test to distinguish steady state
+//! processing from workload transitions. This classifier does not
+//! require off-line training."
+//!
+//! Decision rule: between two consecutive observation windows, run a
+//! Welch t-test per feature (from the windows' stored mean/var — the
+//! same moments the `welch_stats` L1 kernel emits); a transition is
+//! flagged when at least `min_changed_features` features reject at
+//! significance `alpha` (a crude Bonferroni against the 16-way multiple
+//! comparison).
+
+use crate::features::{ObservationWindow, NUM_FEATURES};
+use crate::stats::welch_t_test_from_moments;
+
+#[derive(Debug, Clone)]
+pub struct ChangeDetectorConfig {
+    /// Per-feature two-sided significance level.
+    pub alpha: f64,
+    /// Features that must individually reject before we call a change.
+    pub min_changed_features: usize,
+}
+
+impl Default for ChangeDetectorConfig {
+    fn default() -> Self {
+        ChangeDetectorConfig { alpha: 0.001, min_changed_features: 3 }
+    }
+}
+
+/// Stateless core: is there a statistically meaningful change between
+/// two windows?
+pub fn windows_differ(
+    a: &ObservationWindow,
+    b: &ObservationWindow,
+    config: &ChangeDetectorConfig,
+) -> bool {
+    changed_features(a, b, config) >= config.min_changed_features
+}
+
+/// Number of features whose Welch test rejects between `a` and `b`.
+pub fn changed_features(
+    a: &ObservationWindow,
+    b: &ObservationWindow,
+    config: &ChangeDetectorConfig,
+) -> usize {
+    let mut changed = 0;
+    for i in 0..NUM_FEATURES {
+        let r = welch_t_test_from_moments(
+            a.mean[i],
+            a.var[i] * a.samples as f64 / (a.samples as f64 - 1.0),
+            a.samples,
+            b.mean[i],
+            b.var[i] * b.samples as f64 / (b.samples as f64 - 1.0),
+            b.samples,
+        );
+        if r.p < config.alpha {
+            changed += 1;
+        }
+    }
+    changed
+}
+
+/// Streaming change detector: feed windows in order; `observe` returns
+/// true when the new window differs from its predecessor.
+#[derive(Debug)]
+pub struct ChangeDetector {
+    config: ChangeDetectorConfig,
+    prev: Option<ObservationWindow>,
+}
+
+impl ChangeDetector {
+    pub fn new(config: ChangeDetectorConfig) -> ChangeDetector {
+        ChangeDetector { config, prev: None }
+    }
+
+    pub fn with_defaults() -> ChangeDetector {
+        ChangeDetector::new(ChangeDetectorConfig::default())
+    }
+
+    /// Returns true if `w` starts/continues a transition (differs from
+    /// the previous window). The first window is never a change.
+    pub fn observe(&mut self, w: &ObservationWindow) -> bool {
+        let changed = match &self.prev {
+            Some(p) => windows_differ(p, w, &self.config),
+            None => false,
+        };
+        self.prev = Some(w.clone());
+        changed
+    }
+
+    pub fn reset(&mut self) {
+        self.prev = None;
+    }
+
+    /// Batch mode (Algorithm 2: "run ChangeDetector.batch() to identify
+    /// transition windows") — same logic as streaming, applied to a
+    /// recorded window sequence. Returns a flag per window.
+    pub fn batch(
+        windows: &[ObservationWindow],
+        config: &ChangeDetectorConfig,
+    ) -> Vec<bool> {
+        let mut det = ChangeDetector::new(config.clone());
+        windows.iter().map(|w| det.observe(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::{aggregate_trace, MonitorConfig};
+    use crate::workloadgen::{tour_schedule, Generator};
+
+    fn window(mean_val: f64, var_val: f64, idx: u64) -> ObservationWindow {
+        ObservationWindow {
+            index: idx,
+            time: idx as f64,
+            samples: 30,
+            mean: [mean_val; NUM_FEATURES],
+            var: [var_val; NUM_FEATURES],
+            truth: None,
+        }
+    }
+
+    #[test]
+    fn identical_windows_no_change() {
+        let mut det = ChangeDetector::with_defaults();
+        assert!(!det.observe(&window(5.0, 1.0, 0)));
+        assert!(!det.observe(&window(5.0, 1.0, 1)));
+    }
+
+    #[test]
+    fn large_shift_detected() {
+        let mut det = ChangeDetector::with_defaults();
+        det.observe(&window(5.0, 1.0, 0));
+        assert!(det.observe(&window(50.0, 1.0, 1)));
+    }
+
+    #[test]
+    fn small_noise_not_detected() {
+        let mut det = ChangeDetector::with_defaults();
+        det.observe(&window(5.0, 4.0, 0));
+        assert!(!det.observe(&window(5.2, 4.0, 1)));
+    }
+
+    #[test]
+    fn batch_flags_real_transitions() {
+        let mut g = Generator::with_default_config(0);
+        let t = g.generate(&tour_schedule(120, &[0, 2, 5]));
+        let mcfg = MonitorConfig { window_size: 12 };
+        let ws = aggregate_trace(&t, &mcfg);
+        let flags =
+            ChangeDetector::batch(&ws, &ChangeDetectorConfig::default());
+        let truth = crate::monitor::transition_truth(&t, &mcfg);
+        // every true transition region must be flagged within +-1 window
+        for (i, &is_t) in truth.iter().enumerate() {
+            if is_t {
+                let hit = (i.saturating_sub(1)..=(i + 1).min(flags.len() - 1))
+                    .any(|k| flags[k]);
+                assert!(hit, "transition at window {i} missed");
+            }
+        }
+        // and steady interior windows are mostly quiet
+        let quiet = flags
+            .iter()
+            .zip(&truth)
+            .filter(|&(f, t)| !t && !f)
+            .count();
+        let steady = truth.iter().filter(|&&t| !t).count();
+        assert!(
+            quiet as f64 / steady as f64 > 0.9,
+            "{quiet}/{steady} steady windows quiet"
+        );
+    }
+
+    #[test]
+    fn reset_forgets_history() {
+        let mut det = ChangeDetector::with_defaults();
+        det.observe(&window(5.0, 1.0, 0));
+        det.reset();
+        // first window after reset can't be a change
+        assert!(!det.observe(&window(50.0, 1.0, 1)));
+    }
+}

@@ -1,0 +1,255 @@
+//! On-line classifier drivers: uniform interface over the trained
+//! WorkloadClassifier / TransitionClassifier variants so the pipeline
+//! and plug-in don't care which backend is active.
+//!
+//! * [`ForestWindowClassifier`] — the paper's random forest (§7.2),
+//!   native rust (`ml::forest`), with a confidence gate: low-confidence
+//!   windows classify as UNKNOWN rather than guessing (the plug-in then
+//!   uses the default configuration, the paper's safe fallback).
+//! * [`CentroidClassifier`] — nearest-centroid against WorkloadDB
+//!   characterizations with a distance gate: the bootstrap classifier
+//!   available as soon as discovery has run once, before forest
+//!   training.
+//! * `runtime::nn::MlpClassifier` implements the same trait through the
+//!   PJRT artifact (see `runtime::nn`).
+
+use super::context::UNKNOWN;
+use crate::knowledge::WorkloadDb;
+use crate::ml::forest::RandomForest;
+
+/// A window-level workload classifier.
+pub trait WindowClassifier {
+    /// Classify an analytic-window feature vector; UNKNOWN when not
+    /// confident.
+    fn classify(&self, features: &[f64]) -> u32;
+}
+
+/// Random-forest driver with a soft-vote confidence threshold.
+pub struct ForestWindowClassifier {
+    pub forest: RandomForest,
+    /// Minimum winning-class vote share; below it -> UNKNOWN.
+    pub min_confidence: f64,
+}
+
+impl ForestWindowClassifier {
+    pub fn new(forest: RandomForest, min_confidence: f64) -> Self {
+        ForestWindowClassifier { forest, min_confidence }
+    }
+}
+
+impl WindowClassifier for ForestWindowClassifier {
+    fn classify(&self, features: &[f64]) -> u32 {
+        let votes = self.forest.vote(features);
+        match votes
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        {
+            Some((label, share)) if share >= self.min_confidence => label,
+            _ => UNKNOWN,
+        }
+    }
+}
+
+/// Nearest-centroid against the WorkloadDB (bootstrap classifier).
+pub struct CentroidClassifier {
+    /// (label, centroid) pairs snapshotted from the DB.
+    centroids: Vec<(u32, Vec<f64>)>,
+    /// Maximum accepted distance; beyond it -> UNKNOWN.
+    pub max_distance: f64,
+}
+
+impl CentroidClassifier {
+    /// Snapshot the real (non-synthetic) workload centroids from the DB.
+    pub fn from_db(db: &WorkloadDb, max_distance: f64) -> CentroidClassifier {
+        let centroids = db
+            .entries()
+            .filter(|e| !e.synthetic)
+            .map(|e| (e.label, e.centroid.clone()))
+            .collect();
+        CentroidClassifier { centroids, max_distance }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.centroids.is_empty()
+    }
+}
+
+impl WindowClassifier for CentroidClassifier {
+    fn classify(&self, features: &[f64]) -> u32 {
+        let best = self
+            .centroids
+            .iter()
+            .map(|(l, c)| {
+                let d: f64 = c
+                    .iter()
+                    .zip(features)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                (*l, d)
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        match best {
+            Some((l, d)) if d <= self.max_distance => l,
+            _ => UNKNOWN,
+        }
+    }
+}
+
+/// Random forest with a centroid distance gate: the forest proposes a
+/// label, and the proposal is accepted only if the window is actually
+/// near that workload's centroid. This guards against the forest's
+/// blind spot — it is *always* confident on out-of-distribution inputs
+/// when few classes exist (a one-class forest votes 100% for that class
+/// on anything), which would poison the plug-in's search sessions with
+/// wrong-workload measurements.
+pub struct GatedForestClassifier {
+    pub forest: RandomForest,
+    /// (label, centroid) for every label the gate knows. Labels absent
+    /// here (e.g. ZSL synthetic classes) are accepted ungated.
+    centroids: std::collections::BTreeMap<u32, Vec<f64>>,
+    pub max_distance: f64,
+    pub min_confidence: f64,
+}
+
+impl GatedForestClassifier {
+    pub fn new(
+        forest: RandomForest,
+        centroids: impl IntoIterator<Item = (u32, Vec<f64>)>,
+        max_distance: f64,
+        min_confidence: f64,
+    ) -> GatedForestClassifier {
+        GatedForestClassifier {
+            forest,
+            centroids: centroids.into_iter().collect(),
+            max_distance,
+            min_confidence,
+        }
+    }
+
+    /// Gate with centroids of all non-synthetic DB entries.
+    pub fn from_db(
+        forest: RandomForest,
+        db: &WorkloadDb,
+        max_distance: f64,
+        min_confidence: f64,
+    ) -> GatedForestClassifier {
+        Self::new(
+            forest,
+            db.entries()
+                .filter(|e| !e.synthetic)
+                .map(|e| (e.label, e.centroid.clone())),
+            max_distance,
+            min_confidence,
+        )
+    }
+}
+
+impl WindowClassifier for GatedForestClassifier {
+    fn classify(&self, features: &[f64]) -> u32 {
+        // hard vote: the on-line hot path (§Perf iteration 2)
+        let (label, share) = self.forest.vote_hard(features);
+        if share < self.min_confidence {
+            return UNKNOWN;
+        }
+        if let Some(c) = self.centroids.get(&label) {
+            let d: f64 = c
+                .iter()
+                .zip(features)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            if d > self.max_distance {
+                return UNKNOWN;
+            }
+        }
+        label
+    }
+}
+
+/// Always-unknown classifier (pipeline state before any discovery).
+pub struct UnknownClassifier;
+
+impl WindowClassifier for UnknownClassifier {
+    fn classify(&self, _features: &[f64]) -> u32 {
+        UNKNOWN
+    }
+}
+
+/// Batch helper used by benches: classify every row, keeping UNKNOWN.
+pub fn classify_all(c: &dyn WindowClassifier, rows: &[Vec<f64>]) -> Vec<u32> {
+    rows.iter().map(|r| c.classify(r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knowledge::Characterization;
+    use crate::ml::forest::ForestConfig;
+    use crate::ml::Dataset;
+    use crate::util::rng::Rng;
+
+    fn blob_dataset(rng: &mut Rng) -> Dataset {
+        let mut d = Dataset::new();
+        for _ in 0..120 {
+            d.push(vec![rng.normal_ms(0.0, 0.5), rng.normal_ms(0.0, 0.5)], 0);
+            d.push(vec![rng.normal_ms(8.0, 0.5), rng.normal_ms(8.0, 0.5)], 1);
+        }
+        d
+    }
+
+    #[test]
+    fn forest_confident_on_train_region_unknown_far_away() {
+        let mut rng = Rng::new(0);
+        let d = blob_dataset(&mut rng);
+        let f = RandomForest::fit(&d, ForestConfig::default(), &mut rng);
+        let c = ForestWindowClassifier::new(f, 0.7);
+        assert_eq!(c.classify(&[0.1, -0.1]), 0);
+        assert_eq!(c.classify(&[8.2, 7.9]), 1);
+        // a point between blobs gets mixed votes -> UNKNOWN at 0.7 gate
+        // (forests can still be confident off-distribution, so only
+        // assert the in-distribution behaviour strictly)
+    }
+
+    #[test]
+    fn centroid_classifier_with_gate() {
+        let mut db = WorkloadDb::new();
+        let rows0: Vec<Vec<f64>> = vec![vec![0.0, 0.0], vec![0.2, 0.1]];
+        let rows1: Vec<Vec<f64>> = vec![vec![10.0, 10.0], vec![10.1, 9.9]];
+        let l0 = db.insert_new(
+            Characterization::from_rows(&rows0),
+            vec![0.1, 0.05],
+            2,
+            false,
+        );
+        let l1 = db.insert_new(
+            Characterization::from_rows(&rows1),
+            vec![10.05, 9.95],
+            2,
+            false,
+        );
+        let c = CentroidClassifier::from_db(&db, 3.0);
+        assert_eq!(c.classify(&[0.0, 0.2]), l0);
+        assert_eq!(c.classify(&[9.8, 10.2]), l1);
+        assert_eq!(c.classify(&[5.0, 5.0]), UNKNOWN); // between, gated
+    }
+
+    #[test]
+    fn centroid_skips_synthetic_entries() {
+        let mut db = WorkloadDb::new();
+        db.insert_new(
+            Characterization::from_rows(&[vec![0.0], vec![0.1]]),
+            vec![0.05],
+            2,
+            true, // synthetic
+        );
+        let c = CentroidClassifier::from_db(&db, 100.0);
+        assert!(c.is_empty());
+        assert_eq!(c.classify(&[0.0]), UNKNOWN);
+    }
+
+    #[test]
+    fn unknown_classifier_is_unknown() {
+        assert_eq!(UnknownClassifier.classify(&[1.0, 2.0]), UNKNOWN);
+    }
+}

@@ -1,0 +1,103 @@
+//! Workload context objects `C_t` (paper §6.4): what the monitor-side
+//! pipeline publishes and the plug-in consumes on every resource
+//! request.
+
+/// Label value for windows the pipeline cannot yet classify.
+pub const UNKNOWN: u32 = u32::MAX;
+
+/// The context at observation window `t` — exactly the four items §6.4
+/// lists, plus the window index/time used for the plug-in's staleness
+/// check.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadContext {
+    pub window_index: u64,
+    pub time: f64,
+    /// Workload label for the current observation window.
+    pub current_label: u32,
+    /// Predicted label at horizon t+1.
+    pub pred_1: u32,
+    /// Predicted label at horizon t+5.
+    pub pred_5: u32,
+    /// Predicted label at horizon t+10.
+    pub pred_10: u32,
+}
+
+impl WorkloadContext {
+    pub fn unknown(window_index: u64, time: f64) -> WorkloadContext {
+        WorkloadContext {
+            window_index,
+            time,
+            current_label: UNKNOWN,
+            pred_1: UNKNOWN,
+            pred_5: UNKNOWN,
+            pred_10: UNKNOWN,
+        }
+    }
+
+    pub fn is_known(&self) -> bool {
+        self.current_label != UNKNOWN
+    }
+}
+
+/// The context stream `{C_t}`: a bounded in-memory ring the plug-in
+/// reads the latest element of. (On the paper's cluster this is a
+/// streaming file; a ring buffer models the same read-latest semantics.)
+#[derive(Debug)]
+pub struct ContextStream {
+    buf: std::collections::VecDeque<WorkloadContext>,
+    cap: usize,
+}
+
+impl ContextStream {
+    pub fn new(cap: usize) -> ContextStream {
+        assert!(cap > 0);
+        ContextStream { buf: std::collections::VecDeque::new(), cap }
+    }
+
+    pub fn publish(&mut self, c: WorkloadContext) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(c);
+    }
+
+    pub fn latest(&self) -> Option<&WorkloadContext> {
+        self.buf.back()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &WorkloadContext> {
+        self.buf.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_latest() {
+        let mut s = ContextStream::new(3);
+        for i in 0..5u64 {
+            s.publish(WorkloadContext::unknown(i, i as f64));
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.latest().unwrap().window_index, 4);
+        let idx: Vec<u64> = s.iter().map(|c| c.window_index).collect();
+        assert_eq!(idx, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn unknown_context() {
+        let c = WorkloadContext::unknown(0, 0.0);
+        assert!(!c.is_known());
+        assert_eq!(c.pred_10, UNKNOWN);
+    }
+}

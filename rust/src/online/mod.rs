@@ -1,0 +1,22 @@
+//! The KERMIT on-line sub-system: real-time change detection, workload
+//! classification, prediction, the context stream, and the resource-
+//! manager plug-in implementing Algorithm 1.
+
+pub mod change_detector;
+pub mod classifier;
+pub mod context;
+pub mod pipeline;
+pub mod plugin;
+pub mod predictor;
+
+pub use change_detector::{ChangeDetector, ChangeDetectorConfig};
+pub use classifier::{
+    CentroidClassifier, ForestWindowClassifier, UnknownClassifier,
+    WindowClassifier,
+};
+pub use context::{ContextStream, WorkloadContext, UNKNOWN};
+pub use pipeline::OnlinePipeline;
+pub use plugin::{ChoiceKind, KermitPlugin, PluginStats};
+pub use predictor::{
+    sequence_accuracy, LabelPredictor, LastValuePredictor, MarkovPredictor,
+};

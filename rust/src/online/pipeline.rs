@@ -1,0 +1,279 @@
+//! The on-line classification pipeline: ChangeDetector →
+//! WorkloadClassifier → WorkloadPredictor → context stream (Figure 3's
+//! "Workload Classification, Prediction and Optimization" sub-system).
+//!
+//! One `observe` call per closed observation window. Transition windows
+//! (flagged by the ChangeDetector) are not classified — they publish the
+//! previous steady label as UNKNOWN-safe context exactly like the paper:
+//! classification addresses steady states, transitions are a separate
+//! class family handled by the TransitionClassifier off-line.
+
+use super::change_detector::{ChangeDetector, ChangeDetectorConfig};
+use super::classifier::{UnknownClassifier, WindowClassifier};
+use super::context::{ContextStream, WorkloadContext, UNKNOWN};
+use super::predictor::{LabelPredictor, MarkovPredictor};
+use crate::features::{AnalyticWindow, ObservationWindow};
+use std::sync::{Arc, Mutex};
+
+pub struct OnlinePipeline {
+    detector: ChangeDetector,
+    classifier: Box<dyn WindowClassifier>,
+    /// TransitionClassifier (random forest over rate-of-change features,
+    /// trained off-line): names the transition *type* while a change is
+    /// in progress (Figure 3's on-line pipeline).
+    transition_classifier: Option<Box<dyn WindowClassifier>>,
+    predictor: Box<dyn LabelPredictor>,
+    /// Steady-state label history (feeds the predictor).
+    history: Vec<u32>,
+    /// Markov model kept warm online regardless of the active predictor
+    /// (it is also the fallback when the LSTM has no signal).
+    markov: MarkovPredictor,
+    /// Previous analytic window (for the rate-of-change transform).
+    prev_analytic: Option<AnalyticWindow>,
+    /// Transition types named on-line: (type id, window index).
+    pub transition_log: Vec<(u32, u64)>,
+    pub context: Arc<Mutex<ContextStream>>,
+    /// cap on history length (memory bound)
+    max_history: usize,
+}
+
+impl OnlinePipeline {
+    pub fn new(context: Arc<Mutex<ContextStream>>) -> OnlinePipeline {
+        OnlinePipeline {
+            detector: ChangeDetector::new(ChangeDetectorConfig::default()),
+            classifier: Box::new(UnknownClassifier),
+            transition_classifier: None,
+            predictor: Box::new(MarkovPredictor::new()),
+            history: Vec::new(),
+            markov: MarkovPredictor::new(),
+            prev_analytic: None,
+            transition_log: Vec::new(),
+            context,
+            max_history: 4096,
+        }
+    }
+
+    /// Install a trained TransitionClassifier (rate-of-change features).
+    pub fn set_transition_classifier(
+        &mut self,
+        c: Box<dyn WindowClassifier>,
+    ) {
+        self.transition_classifier = Some(c);
+    }
+
+    /// Swap in a trained classifier (after off-line training).
+    pub fn set_classifier(&mut self, c: Box<dyn WindowClassifier>) {
+        self.classifier = c;
+    }
+
+    /// Swap in a trained predictor (e.g. the LSTM artifact wrapper).
+    pub fn set_predictor(&mut self, p: Box<dyn LabelPredictor>) {
+        self.predictor = p;
+    }
+
+    pub fn history(&self) -> &[u32] {
+        &self.history
+    }
+
+    fn predict(&self, horizon: usize) -> u32 {
+        self.predictor
+            .predict(&self.history, horizon)
+            .or_else(|| self.markov.predict(&self.history, horizon))
+            .unwrap_or(UNKNOWN)
+    }
+
+    /// Process one closed window; classify, predict, publish and return
+    /// the context.
+    pub fn observe(&mut self, w: &ObservationWindow) -> WorkloadContext {
+        let changed = self.detector.observe(w);
+        let aw = AnalyticWindow::from_observation(w);
+        let label = if changed {
+            // transition in progress: the steady-state classifier stays
+            // silent; the TransitionClassifier names the transition type
+            // from the rate-of-change features instead
+            if let (Some(tc), Some(prev)) =
+                (&self.transition_classifier, &self.prev_analytic)
+            {
+                let roc: Vec<f64> = aw
+                    .features
+                    .iter()
+                    .zip(&prev.features)
+                    .map(|(b, a)| b - a)
+                    .collect();
+                let t = tc.classify(&roc);
+                if t != UNKNOWN {
+                    self.transition_log.push((t, w.index));
+                }
+            }
+            UNKNOWN
+        } else {
+            self.classifier.classify(&aw.features)
+        };
+        self.prev_analytic = Some(aw);
+        if label != UNKNOWN
+            && self.history.last().copied() != Some(label)
+        {
+            self.history.push(label);
+            if self.history.len() > self.max_history {
+                self.history.drain(..self.max_history / 2);
+            }
+            // keep the online Markov model warm
+            let n = self.history.len();
+            if n >= 2 {
+                self.markov.update(&self.history[n - 2..]);
+            }
+        }
+        let ctx = WorkloadContext {
+            window_index: w.index,
+            time: w.time,
+            current_label: label,
+            pred_1: self.predict(1),
+            pred_5: self.predict(5),
+            pred_10: self.predict(10),
+        };
+        self.context.lock().unwrap().publish(ctx);
+        ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::NUM_FEATURES;
+    use crate::online::classifier::CentroidClassifier;
+    use crate::knowledge::{Characterization, WorkloadDb};
+
+    fn window(level: f64, idx: u64) -> ObservationWindow {
+        ObservationWindow {
+            index: idx,
+            time: idx as f64 * 30.0,
+            samples: 30,
+            mean: [level; NUM_FEATURES],
+            var: [1.0; NUM_FEATURES],
+            truth: None,
+        }
+    }
+
+    fn db_with_two_centroids() -> WorkloadDb {
+        let mut db = WorkloadDb::new();
+        // analytic width = 2 * NUM_FEATURES (mean + std)
+        let mk = |level: f64| -> Vec<Vec<f64>> {
+            let mut a = vec![level; 2 * NUM_FEATURES];
+            let mut b = vec![level + 0.1; 2 * NUM_FEATURES];
+            for i in NUM_FEATURES..2 * NUM_FEATURES {
+                a[i] = 1.0;
+                b[i] = 1.0;
+            }
+            vec![a, b]
+        };
+        for level in [5.0, 50.0] {
+            let rows = mk(level);
+            let c = Characterization::from_rows(&rows);
+            let centroid = c.mean_vector();
+            db.insert_new(c, centroid, 2, false);
+        }
+        db
+    }
+
+    #[test]
+    fn pipeline_publishes_unknown_before_training() {
+        let ctx = Arc::new(Mutex::new(ContextStream::new(8)));
+        let mut p = OnlinePipeline::new(ctx.clone());
+        let c = p.observe(&window(5.0, 0));
+        assert_eq!(c.current_label, UNKNOWN);
+        assert_eq!(ctx.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn classifies_and_predicts_recurring_pattern() {
+        let ctx = Arc::new(Mutex::new(ContextStream::new(64)));
+        let mut p = OnlinePipeline::new(ctx);
+        let db = db_with_two_centroids();
+        p.set_classifier(Box::new(CentroidClassifier::from_db(&db, 20.0)));
+
+        // alternate 5.0 / 50.0 plateaus (3 windows each); use fresh
+        // detector tolerance: consecutive same-level windows are steady
+        let mut idx = 0u64;
+        let mut last = WorkloadContext::unknown(0, 0.0);
+        for _ in 0..6 {
+            for level in [5.0, 50.0] {
+                for _ in 0..3 {
+                    last = p.observe(&window(level, idx));
+                    idx += 1;
+                }
+            }
+        }
+        // after the pattern repeats, prediction should be informative
+        assert_ne!(last.current_label, UNKNOWN);
+        assert_ne!(last.pred_1, UNKNOWN);
+        // history alternates 0,1,0,1...
+        let h = p.history();
+        assert!(h.len() >= 4);
+        for pair in h.windows(2) {
+            assert_ne!(pair[0], pair[1]);
+        }
+    }
+
+    #[test]
+    fn transition_windows_not_classified() {
+        let ctx = Arc::new(Mutex::new(ContextStream::new(8)));
+        let mut p = OnlinePipeline::new(ctx);
+        let db = db_with_two_centroids();
+        p.set_classifier(Box::new(CentroidClassifier::from_db(&db, 20.0)));
+        p.observe(&window(5.0, 0));
+        // abrupt jump: change detector fires, label must be UNKNOWN
+        let c = p.observe(&window(50.0, 1));
+        assert_eq!(c.current_label, UNKNOWN);
+        // settled: next window classifies
+        let c = p.observe(&window(50.0, 2));
+        assert_ne!(c.current_label, UNKNOWN);
+    }
+
+    #[test]
+    fn transition_classifier_names_transitions_online() {
+        use crate::ml::forest::{ForestConfig, RandomForest};
+        use crate::ml::Dataset;
+        use crate::online::classifier::ForestWindowClassifier;
+        use crate::util::rng::Rng;
+        // train a transition forest on two ROC directions: up vs down
+        let mut d = Dataset::new();
+        let mut rng = Rng::new(0);
+        for _ in 0..60 {
+            let up: Vec<f64> = (0..2 * NUM_FEATURES)
+                .map(|i| if i < NUM_FEATURES { 45.0 + rng.normal() } else { rng.normal() })
+                .collect();
+            let down: Vec<f64> = up.iter().map(|x| -x).collect();
+            d.push(up, 100);
+            d.push(down, 200);
+        }
+        let f = RandomForest::fit(&d, ForestConfig::default(), &mut rng);
+
+        let ctx = Arc::new(Mutex::new(ContextStream::new(8)));
+        let mut p = OnlinePipeline::new(ctx);
+        p.set_transition_classifier(Box::new(ForestWindowClassifier::new(
+            f, 0.5,
+        )));
+        p.observe(&window(5.0, 0));
+        p.observe(&window(50.0, 1)); // upward jump
+        p.observe(&window(50.0, 2));
+        p.observe(&window(5.0, 3)); // downward jump
+        assert_eq!(
+            p.transition_log,
+            vec![(100, 1), (200, 3)],
+            "log: {:?}",
+            p.transition_log
+        );
+    }
+
+    #[test]
+    fn history_dedups_consecutive_labels() {
+        let ctx = Arc::new(Mutex::new(ContextStream::new(8)));
+        let mut p = OnlinePipeline::new(ctx);
+        let db = db_with_two_centroids();
+        p.set_classifier(Box::new(CentroidClassifier::from_db(&db, 20.0)));
+        for i in 0..5 {
+            p.observe(&window(5.0, i));
+        }
+        assert_eq!(p.history().len(), 1);
+    }
+}

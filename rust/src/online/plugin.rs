@@ -1,0 +1,324 @@
+//! The KERMIT plug-in — Algorithm 1 (paper §6.4).
+//!
+//! Called when the resource manager responds to a resource request, it:
+//! 1. reads the latest workload context `C_t` and checks it is in sync
+//!    (falls back to the default configuration on staleness);
+//! 2. if the current label is UNKNOWN, uses the default configuration
+//!    until off-line discovery catches up;
+//! 3. if WorkloadDB holds an optimal configuration for the label,
+//!    reuses it — the cache hit that makes recurring workloads fast;
+//! 4. if the workload is drifting, advances a *local* Explorer search
+//!    seeded at the last good configuration;
+//! 5. otherwise advances a *global* Explorer search.
+//!
+//! Searches are [`SearchSession`]s: each probe is one real execution of
+//! the workload, so tuning overhead is paid in the job stream exactly as
+//! on a live cluster.
+
+use crate::explorer::session::{SearchSession, SessionStep};
+use crate::explorer::ExplorerConfig;
+use crate::knowledge::WorkloadDb;
+use crate::online::context::{ContextStream, UNKNOWN};
+use crate::simcluster::config_space::{default_config_index, ConfigIndex};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Why the plug-in chose the configuration it chose (telemetry + tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChoiceKind {
+    /// Context stale or label unknown: vendor default.
+    Default,
+    /// Optimal config found in WorkloadDB (the recurring-workload win).
+    CacheHit,
+    /// Probe of an ongoing global search.
+    GlobalProbe,
+    /// Probe of an ongoing local (drift) search.
+    LocalProbe,
+}
+
+/// Plug-in statistics (reported by benches and the CLI).
+#[derive(Debug, Clone, Default)]
+pub struct PluginStats {
+    pub requests: usize,
+    pub defaults: usize,
+    pub cache_hits: usize,
+    pub global_probes: usize,
+    pub local_probes: usize,
+    pub searches_completed: usize,
+}
+
+enum SessionKind {
+    Global,
+    Local,
+}
+
+pub struct KermitPlugin {
+    pub db: Arc<Mutex<WorkloadDb>>,
+    pub context: Arc<Mutex<ContextStream>>,
+    pub explorer_config: ExplorerConfig,
+    /// Maximum age (seconds) of the latest context before it is
+    /// considered out-of-sync (Algorithm 1's error path).
+    pub max_context_age: f64,
+    default_config: ConfigIndex,
+    sessions: BTreeMap<u32, (SessionKind, SearchSession)>,
+    /// The label whose probe is outstanding, if any.
+    outstanding: Option<u32>,
+    pub stats: PluginStats,
+}
+
+impl KermitPlugin {
+    pub fn new(
+        db: Arc<Mutex<WorkloadDb>>,
+        context: Arc<Mutex<ContextStream>>,
+    ) -> KermitPlugin {
+        KermitPlugin {
+            db,
+            context,
+            explorer_config: ExplorerConfig::default(),
+            max_context_age: 120.0,
+            default_config: default_config_index(),
+            sessions: BTreeMap::new(),
+            outstanding: None,
+            stats: PluginStats::default(),
+        }
+    }
+
+    /// Algorithm 1, for the workload labelled by the current context.
+    /// `now` is the request time (for the staleness check).
+    pub fn choose_config(&mut self, now: f64) -> (ConfigIndex, ChoiceKind) {
+        let label = {
+            let ctx = self.context.lock().unwrap();
+            match ctx.latest() {
+                Some(c)
+                    if (now - c.time).abs() <= self.max_context_age
+                        && c.is_known() =>
+                {
+                    c.current_label
+                }
+                _ => UNKNOWN,
+            }
+        };
+        self.choose_config_for_label(label)
+    }
+
+    /// Algorithm 1 body once the label is known (the coordinator may
+    /// resolve the label itself from the job's first windows).
+    pub fn choose_config_for_label(
+        &mut self,
+        label: u32,
+    ) -> (ConfigIndex, ChoiceKind) {
+        self.stats.requests += 1;
+        if label == UNKNOWN {
+            self.stats.defaults += 1;
+            return (self.default_config, ChoiceKind::Default);
+        }
+        // an existing session for this label takes priority
+        if self.sessions.contains_key(&label) {
+            return self.advance_session(label);
+        }
+        let (known, optimal, drifting, stored) = {
+            let db = self.db.lock().unwrap();
+            match db.get(label) {
+                Some(e) => {
+                    (true, e.optimal_config_found, e.is_drifting, e.config)
+                }
+                None => (false, false, false, None),
+            }
+        };
+        if !known {
+            // classified label that discovery hasn't persisted yet
+            self.stats.defaults += 1;
+            return (self.default_config, ChoiceKind::Default);
+        }
+        if optimal {
+            self.stats.cache_hits += 1;
+            return (stored.expect("optimal flag without config"), ChoiceKind::CacheHit);
+        }
+        // start the right kind of session
+        let (kind, session) = match (drifting, stored) {
+            (true, Some(start)) => (
+                SessionKind::Local,
+                SearchSession::local(self.explorer_config.clone(), start),
+            ),
+            _ => (
+                SessionKind::Global,
+                SearchSession::global(self.explorer_config.clone()),
+            ),
+        };
+        self.sessions.insert(label, (kind, session));
+        self.advance_session(label)
+    }
+
+    fn advance_session(&mut self, label: u32) -> (ConfigIndex, ChoiceKind) {
+        assert!(
+            self.outstanding.is_none(),
+            "previous probe not yet measured"
+        );
+        let (kind, session) = self.sessions.get_mut(&label).unwrap();
+        match session.next() {
+            SessionStep::Probe(c) => {
+                let choice = match kind {
+                    SessionKind::Global => {
+                        self.stats.global_probes += 1;
+                        ChoiceKind::GlobalProbe
+                    }
+                    SessionKind::Local => {
+                        self.stats.local_probes += 1;
+                        ChoiceKind::LocalProbe
+                    }
+                };
+                self.outstanding = Some(label);
+                (c, choice)
+            }
+            SessionStep::Done(r) => {
+                // search converged: persist and serve the optimum
+                self.sessions.remove(&label);
+                self.stats.searches_completed += 1;
+                self.stats.cache_hits += 1;
+                self.db
+                    .lock()
+                    .unwrap()
+                    .set_optimal_config(label, r.best);
+                (r.best, ChoiceKind::CacheHit)
+            }
+        }
+    }
+
+    /// Feed back the measured duration of the last probe for `label`.
+    /// No-op when no search is outstanding (cache hits / defaults).
+    pub fn record_measurement(&mut self, label: u32, duration: f64) {
+        if self.outstanding == Some(label) {
+            if let Some((_, session)) = self.sessions.get_mut(&label) {
+                session.report(duration);
+            }
+            self.outstanding = None;
+        }
+    }
+
+    /// True while a search for `label` is in progress.
+    pub fn searching(&self, label: u32) -> bool {
+        self.sessions.contains_key(&label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knowledge::Characterization;
+    use crate::online::context::WorkloadContext;
+    use crate::simcluster::perfmodel::job_duration;
+
+    fn setup() -> (Arc<Mutex<WorkloadDb>>, Arc<Mutex<ContextStream>>, u32) {
+        let mut db = WorkloadDb::new();
+        let rows: Vec<Vec<f64>> = vec![vec![1.0; 4], vec![1.1; 4]];
+        let label = db.insert_new(
+            Characterization::from_rows(&rows),
+            vec![1.05; 4],
+            2,
+            false,
+        );
+        (
+            Arc::new(Mutex::new(db)),
+            Arc::new(Mutex::new(ContextStream::new(16))),
+            label,
+        )
+    }
+
+    fn publish(ctx: &Arc<Mutex<ContextStream>>, label: u32, t: f64) {
+        ctx.lock().unwrap().publish(WorkloadContext {
+            window_index: 0,
+            time: t,
+            current_label: label,
+            pred_1: label,
+            pred_5: label,
+            pred_10: label,
+        });
+    }
+
+    #[test]
+    fn unknown_label_gets_default() {
+        let (db, ctx, _) = setup();
+        let mut p = KermitPlugin::new(db, ctx);
+        let (c, kind) = p.choose_config_for_label(UNKNOWN);
+        assert_eq!(kind, ChoiceKind::Default);
+        assert_eq!(c, default_config_index());
+    }
+
+    #[test]
+    fn stale_context_gets_default() {
+        let (db, ctx, label) = setup();
+        publish(&ctx, label, 0.0);
+        let mut p = KermitPlugin::new(db, ctx);
+        p.max_context_age = 10.0;
+        let (_, kind) = p.choose_config(1000.0); // far in the future
+        assert_eq!(kind, ChoiceKind::Default);
+    }
+
+    #[test]
+    fn full_search_lifecycle_converges_to_cache_hits() {
+        let (db, ctx, label) = setup();
+        publish(&ctx, label, 0.0);
+        let mut p = KermitPlugin::new(db.clone(), ctx);
+        // drive the search: every request is a probe until convergence
+        let mut probes = 0;
+        loop {
+            let (c, kind) = p.choose_config_for_label(label);
+            match kind {
+                ChoiceKind::GlobalProbe => {
+                    probes += 1;
+                    assert!(probes < 1000, "search never converged");
+                    p.record_measurement(label, job_duration(2, &c.to_config()));
+                }
+                ChoiceKind::CacheHit => break,
+                other => panic!("unexpected choice {other:?}"),
+            }
+        }
+        assert!(probes > 5);
+        assert!(db.lock().unwrap().get(label).unwrap().optimal_config_found);
+        // subsequent requests are pure cache hits with the same config
+        let (c1, k1) = p.choose_config_for_label(label);
+        let (c2, k2) = p.choose_config_for_label(label);
+        assert_eq!((k1, k2), (ChoiceKind::CacheHit, ChoiceKind::CacheHit));
+        assert_eq!(c1, c2);
+        assert_eq!(p.stats.searches_completed, 1);
+    }
+
+    #[test]
+    fn drift_triggers_local_search_from_stored_config() {
+        let (db, ctx, label) = setup();
+        // converge a global search first
+        let mut p = KermitPlugin::new(db.clone(), ctx);
+        loop {
+            let (c, kind) = p.choose_config_for_label(label);
+            match kind {
+                ChoiceKind::GlobalProbe => {
+                    p.record_measurement(label, job_duration(3, &c.to_config()))
+                }
+                ChoiceKind::CacheHit => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // now mark drift (keeps config, clears optimal flag)
+        {
+            let mut dbl = db.lock().unwrap();
+            let rows: Vec<Vec<f64>> = vec![vec![2.0; 4], vec![2.1; 4]];
+            dbl.mark_drifting(
+                label,
+                Characterization::from_rows(&rows),
+                vec![2.05; 4],
+                2,
+            );
+        }
+        let (_, kind) = p.choose_config_for_label(label);
+        assert_eq!(kind, ChoiceKind::LocalProbe);
+        assert!(p.stats.local_probes >= 1);
+    }
+
+    #[test]
+    fn label_not_in_db_gets_default() {
+        let (db, ctx, _) = setup();
+        let mut p = KermitPlugin::new(db, ctx);
+        let (_, kind) = p.choose_config_for_label(999);
+        assert_eq!(kind, ChoiceKind::Default);
+    }
+}

@@ -1,0 +1,187 @@
+//! The Spark/Hadoop tuning-parameter space KERMIT searches.
+//!
+//! Six parameters with discrete levels (the paper's Explorer operates on
+//! YARN container memory/CPU and related knobs [16]; we model the
+//! standard Spark tuning set). The full grid — the "exhaustive search"
+//! oracle that defines 100% tuning efficiency — has
+//! 6*6*6*6*6*2 = 15552 points, discretised as in real deployments.
+
+/// One concrete configuration (a point in the search space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TuningConfig {
+    /// Executor heap, MB.
+    pub executor_mem_mb: u32,
+    /// Cores per executor.
+    pub executor_cores: u32,
+    /// Number of executors.
+    pub num_executors: u32,
+    /// Shuffle buffer per task, MB.
+    pub shuffle_buffer_mb: u32,
+    /// Default parallelism (partitions).
+    pub parallelism: u32,
+    /// I/O compression on/off.
+    pub compression: bool,
+}
+
+/// Discrete levels per dimension.
+pub const MEM_LEVELS: [u32; 6] = [1024, 2048, 4096, 6144, 8192, 12288];
+pub const CORE_LEVELS: [u32; 6] = [1, 2, 3, 4, 5, 8];
+pub const EXEC_LEVELS: [u32; 6] = [2, 4, 8, 12, 16, 24];
+pub const SHUFFLE_LEVELS: [u32; 6] = [16, 32, 64, 128, 256, 512];
+pub const PAR_LEVELS: [u32; 6] = [8, 16, 32, 64, 128, 256];
+pub const COMPRESSION_LEVELS: [bool; 2] = [false, true];
+
+/// Dimension count (for index-vector representations).
+pub const NUM_DIMS: usize = 6;
+
+/// A configuration as level indices — the representation the Explorer's
+/// coordinate search walks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConfigIndex(pub [usize; NUM_DIMS]);
+
+impl ConfigIndex {
+    pub fn dims() -> [usize; NUM_DIMS] {
+        [
+            MEM_LEVELS.len(),
+            CORE_LEVELS.len(),
+            EXEC_LEVELS.len(),
+            SHUFFLE_LEVELS.len(),
+            PAR_LEVELS.len(),
+            COMPRESSION_LEVELS.len(),
+        ]
+    }
+
+    pub fn to_config(self) -> TuningConfig {
+        let i = self.0;
+        TuningConfig {
+            executor_mem_mb: MEM_LEVELS[i[0]],
+            executor_cores: CORE_LEVELS[i[1]],
+            num_executors: EXEC_LEVELS[i[2]],
+            shuffle_buffer_mb: SHUFFLE_LEVELS[i[3]],
+            parallelism: PAR_LEVELS[i[4]],
+            compression: COMPRESSION_LEVELS[i[5]],
+        }
+    }
+
+    /// Neighbours at L1 distance 1 (one dimension stepped by ±1).
+    pub fn neighbours(self) -> Vec<ConfigIndex> {
+        let dims = Self::dims();
+        let mut out = Vec::with_capacity(2 * NUM_DIMS);
+        for d in 0..NUM_DIMS {
+            if self.0[d] > 0 {
+                let mut n = self;
+                n.0[d] -= 1;
+                out.push(n);
+            }
+            if self.0[d] + 1 < dims[d] {
+                let mut n = self;
+                n.0[d] += 1;
+                out.push(n);
+            }
+        }
+        out
+    }
+
+    /// Total number of grid points.
+    pub fn grid_size() -> usize {
+        Self::dims().iter().product()
+    }
+
+    /// Enumerate the entire grid (for the exhaustive-search oracle).
+    pub fn enumerate_all() -> Vec<ConfigIndex> {
+        let dims = Self::dims();
+        let mut out = Vec::with_capacity(Self::grid_size());
+        let mut idx = [0usize; NUM_DIMS];
+        loop {
+            out.push(ConfigIndex(idx));
+            // odometer increment
+            let mut d = NUM_DIMS;
+            loop {
+                if d == 0 {
+                    return out;
+                }
+                d -= 1;
+                idx[d] += 1;
+                if idx[d] < dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+
+    /// Clamp an arbitrary index vector into the grid.
+    pub fn clamped(mut self) -> ConfigIndex {
+        let dims = Self::dims();
+        for d in 0..NUM_DIMS {
+            if self.0[d] >= dims[d] {
+                self.0[d] = dims[d] - 1;
+            }
+        }
+        self
+    }
+}
+
+/// The vendor-default configuration (what an untuned deployment ships
+/// with) — deliberately mediocre for most workloads, like the real
+/// Spark/YARN defaults the paper tunes away from.
+pub fn default_config_index() -> ConfigIndex {
+    // 2048 MB, 1 core, 2 executors, 32 MB shuffle, 16 partitions, no comp
+    ConfigIndex([1, 0, 0, 1, 1, 0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_size_matches_product() {
+        assert_eq!(ConfigIndex::grid_size(), 6 * 6 * 6 * 6 * 6 * 2);
+        assert_eq!(
+            ConfigIndex::enumerate_all().len(),
+            ConfigIndex::grid_size()
+        );
+    }
+
+    #[test]
+    fn enumerate_has_no_duplicates() {
+        let all = ConfigIndex::enumerate_all();
+        let set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(set.len(), all.len());
+    }
+
+    #[test]
+    fn neighbours_interior_and_corner() {
+        let interior = ConfigIndex([2, 2, 2, 2, 2, 0]);
+        assert_eq!(interior.neighbours().len(), 2 * 5 + 1); // bool dim at 0: 1
+        let corner = ConfigIndex([0, 0, 0, 0, 0, 0]);
+        assert_eq!(corner.neighbours().len(), NUM_DIMS);
+        for n in corner.neighbours() {
+            let diff: usize = n
+                .0
+                .iter()
+                .zip(&corner.0)
+                .map(|(a, b)| a.abs_diff(*b))
+                .sum();
+            assert_eq!(diff, 1);
+        }
+    }
+
+    #[test]
+    fn to_config_maps_levels() {
+        let c = ConfigIndex([0, 0, 0, 0, 0, 0]).to_config();
+        assert_eq!(c.executor_mem_mb, 1024);
+        assert!(!c.compression);
+        let c = ConfigIndex([5, 5, 5, 5, 5, 1]).to_config();
+        assert_eq!(c.executor_mem_mb, 12288);
+        assert_eq!(c.parallelism, 256);
+        assert!(c.compression);
+    }
+
+    #[test]
+    fn clamp_works() {
+        let c = ConfigIndex([99, 0, 0, 0, 0, 99]).clamped();
+        assert_eq!(c.0[0], 5);
+        assert_eq!(c.0[5], 1);
+    }
+}

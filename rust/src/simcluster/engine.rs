@@ -1,0 +1,260 @@
+//! Discrete-event cluster engine: runs a schedule of jobs through the
+//! resource manager (with whatever plug-in is installed), produces the
+//! job log (durations, configs) and the agent metric stream the KERMIT
+//! monitor consumes.
+//!
+//! Jobs run back-to-back per the schedule (the paper's workloads are a
+//! serial stream of analytic jobs; concurrency is modelled *inside* a
+//! job via the hybrid classes, matching how the paper treats multi-user
+//! load as hybrid workload types).
+
+use super::config_space::TuningConfig;
+use super::perfmodel::job_duration;
+use super::rm::{ResourceRequest, RmPlugin};
+use crate::util::rng::Rng;
+use crate::workloadgen::{
+    catalog, num_pure_classes, Mix, Sample, TruthTag, WorkloadClass,
+};
+use crate::features::NUM_FEATURES;
+
+/// One job to run.
+#[derive(Debug, Clone, Copy)]
+pub struct JobSpec {
+    pub mix: Mix,
+}
+
+/// Completed-job record.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub app_id: u64,
+    pub truth_id: u32,
+    pub config: TuningConfig,
+    pub start: f64,
+    pub duration: f64,
+}
+
+/// Full simulation output.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    pub jobs: Vec<JobRecord>,
+    pub samples: Vec<Sample>,
+    pub makespan: f64,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Metric sample period (simulated seconds).
+    pub sample_period: f64,
+    /// Multiplicative lognormal-ish noise on job durations (0 = exact).
+    pub duration_noise: f64,
+    /// Idle gap between jobs (seconds).
+    pub inter_job_gap: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            sample_period: 1.0,
+            duration_noise: 0.03,
+            inter_job_gap: 4.0,
+        }
+    }
+}
+
+/// Run `jobs` through the plug-in. Each job: RM calls the plug-in for a
+/// config, the job runs for `perfmodel::job_duration` (plus noise),
+/// metric samples with the class's signature are emitted for its whole
+/// runtime, and the plug-in gets the completion callback.
+pub fn run_jobs(
+    jobs: &[JobSpec],
+    plugin: &mut dyn RmPlugin,
+    engine: &EngineConfig,
+    seed: u64,
+) -> SimResult {
+    let mut rng = Rng::new(seed);
+    let cat = catalog();
+    let mut out = SimResult::default();
+    let mut now = 0.0f64;
+    let n_pure = num_pure_classes();
+
+    for (k, job) in jobs.iter().enumerate() {
+        let app_id = k as u64;
+        let truth_id = job.mix.truth_id(n_pure);
+
+        // idle gap before the job (background noise samples)
+        let gap_end = now + engine.inter_job_gap;
+        emit_idle(&mut out.samples, now, gap_end, engine.sample_period, &mut rng);
+        now = gap_end;
+
+        // RM responds to the resource request -> plug-in picks the config
+        let req = ResourceRequest { app_id, time: now };
+        let config = plugin.on_resource_request(&req);
+
+        let base = job_duration(truth_id, &config);
+        let noise = 1.0 + engine.duration_noise * rng.normal();
+        let duration = base * noise.max(0.5);
+
+        // metric emission for the job's runtime
+        emit_job(
+            &mut out.samples,
+            &cat,
+            job.mix,
+            truth_id,
+            now,
+            now + duration,
+            engine.sample_period,
+            &mut rng,
+        );
+        now += duration;
+
+        plugin.on_app_complete(app_id, duration, now);
+        out.jobs.push(JobRecord { app_id, truth_id, config, start: gap_end, duration });
+    }
+    out.makespan = now;
+    out
+}
+
+fn emit_idle(
+    samples: &mut Vec<Sample>,
+    from: f64,
+    to: f64,
+    period: f64,
+    rng: &mut Rng,
+) {
+    let mut t = from;
+    while t < to {
+        let mut f = [0.0; NUM_FEATURES];
+        for v in f.iter_mut() {
+            *v = rng.range_f64(0.0, 2.0); // background noise floor
+        }
+        samples.push(Sample { time: t, features: f, truth: TruthTag::Idle });
+        t += period;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_job(
+    samples: &mut Vec<Sample>,
+    cat: &[WorkloadClass],
+    mix: Mix,
+    truth_id: u32,
+    from: f64,
+    to: f64,
+    period: f64,
+    rng: &mut Rng,
+) {
+    let mean = mix.mean(cat);
+    let noise = mix.noise(cat);
+    let ramp = ((to - from) * 0.04).clamp(period, 8.0 * period);
+    let mut t = from;
+    while t < to {
+        // short ramp in/out marks the job boundary as a transition
+        let in_ramp = t - from < ramp || to - t < ramp;
+        let scale = if in_ramp { 1.8 } else { 1.0 };
+        let mut f = [0.0; NUM_FEATURES];
+        for i in 0..NUM_FEATURES {
+            f[i] = rng.normal_ms(mean[i], noise[i] * scale).max(0.0);
+        }
+        let truth = if in_ramp {
+            TruthTag::Transition { from: truth_id, to: truth_id }
+        } else {
+            TruthTag::Steady(truth_id)
+        };
+        samples.push(Sample { time: t, features: f, truth });
+        t += period;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcluster::config_space::default_config_index;
+    use crate::simcluster::rm::FixedConfigPlugin;
+
+    fn jobs(classes: &[u32]) -> Vec<JobSpec> {
+        classes.iter().map(|&c| JobSpec { mix: Mix::Pure(c) }).collect()
+    }
+
+    #[test]
+    fn runs_jobs_and_accumulates_makespan() {
+        let mut plugin =
+            FixedConfigPlugin(default_config_index().to_config());
+        let r = run_jobs(
+            &jobs(&[0, 1, 2]),
+            &mut plugin,
+            &EngineConfig::default(),
+            42,
+        );
+        assert_eq!(r.jobs.len(), 3);
+        assert!(r.makespan > 0.0);
+        let sum: f64 = r.jobs.iter().map(|j| j.duration).sum();
+        assert!(r.makespan >= sum);
+        // samples cover the whole makespan
+        let last = r.samples.last().unwrap().time;
+        assert!(last > r.makespan - 2.0);
+    }
+
+    #[test]
+    fn duration_tracks_perfmodel() {
+        let cfg = default_config_index().to_config();
+        let mut plugin = FixedConfigPlugin(cfg);
+        let mut engine = EngineConfig::default();
+        engine.duration_noise = 0.0;
+        let r = run_jobs(&jobs(&[3]), &mut plugin, &engine, 1);
+        let want = job_duration(3, &cfg);
+        assert!((r.jobs[0].duration - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn samples_carry_truth_tags() {
+        let mut plugin =
+            FixedConfigPlugin(default_config_index().to_config());
+        let r = run_jobs(&jobs(&[5]), &mut plugin, &EngineConfig::default(), 2);
+        assert!(r
+            .samples
+            .iter()
+            .any(|s| s.truth == TruthTag::Steady(5)));
+        assert!(r.samples.iter().any(|s| s.truth == TruthTag::Idle));
+    }
+
+    #[test]
+    fn plugin_sees_every_request_and_completion() {
+        struct Counting {
+            cfg: TuningConfig,
+            requests: usize,
+            completions: usize,
+        }
+        impl RmPlugin for Counting {
+            fn on_resource_request(
+                &mut self,
+                _req: &ResourceRequest,
+            ) -> TuningConfig {
+                self.requests += 1;
+                self.cfg
+            }
+            fn on_app_complete(&mut self, _id: u64, _d: f64, _t: f64) {
+                self.completions += 1;
+            }
+        }
+        let mut p = Counting {
+            cfg: default_config_index().to_config(),
+            requests: 0,
+            completions: 0,
+        };
+        run_jobs(&jobs(&[0, 1, 2, 3]), &mut p, &EngineConfig::default(), 3);
+        assert_eq!(p.requests, 4);
+        assert_eq!(p.completions, 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut p = FixedConfigPlugin(default_config_index().to_config());
+            run_jobs(&jobs(&[0, 4]), &mut p, &EngineConfig::default(), 9)
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.samples.len(), b.samples.len());
+    }
+}

@@ -1,0 +1,19 @@
+//! Simulated big-data cluster substrate: YARN-like resource manager with
+//! the plug-in interception point, the configuration-sensitive job
+//! performance model, and a discrete-event engine that produces both job
+//! logs and the agent metric stream.
+//!
+//! Stands in for the paper's physical Hadoop/Spark testbed (DESIGN.md §2).
+
+pub mod config_space;
+pub mod engine;
+pub mod perfmodel;
+pub mod rm;
+
+pub use config_space::{default_config_index, ConfigIndex, TuningConfig};
+pub use engine::{run_jobs, EngineConfig, JobRecord, JobSpec, SimResult};
+pub use perfmodel::{job_duration, profile_for, ClassProfile};
+pub use rm::{
+    Container, FixedConfigPlugin, NodeSpec, ResourceManager,
+    ResourceRequest, RmError, RmPlugin,
+};

@@ -1,0 +1,311 @@
+//! Configuration-sensitive job performance model: the response surface
+//! the Explorer searches (paper §6.4, [16]).
+//!
+//! The surface is built from first-principles Spark/Hadoop cost effects,
+//! per workload class:
+//!
+//! * **Wave quantisation** — tasks run in ⌈parallelism / slots⌉ waves;
+//!   parallelism that doesn't divide the slot count wastes a partial wave.
+//! * **Task overhead** — each task costs fixed scheduling/JVM time, so
+//!   over-partitioning backfires (non-convexity #1).
+//! * **GC/spill cliff** — when per-task memory drops below the class's
+//!   working-set demand, time blows up super-linearly (the cliff real
+//!   tuning guides warn about).
+//! * **Shuffle spills** — shuffle-heavy classes degrade sharply when the
+//!   shuffle buffer is small.
+//! * **Compression trade-off** — compression accelerates I/O-bound
+//!   classes and *penalises* CPU-bound ones (non-convexity #2, class-
+//!   dependent optimum).
+//! * **Cluster capacity** — executors that don't fit the cluster's
+//!   cores/memory run in sequential allocation waves (interaction
+//!   between num_executors, executor_cores and executor_mem).
+//!
+//! Different workload classes weight these effects differently, so each
+//! class has a different optimal configuration — the property that makes
+//! per-workload tuning (and therefore KERMIT) worthwhile.
+
+use super::config_space::TuningConfig;
+use crate::workloadgen::num_pure_classes;
+
+/// Static cluster capacity (4 worker nodes).
+pub const CLUSTER_CORES: u32 = 64;
+pub const CLUSTER_MEM_MB: u32 = 98_304;
+
+/// Resource-demand profile of a workload class.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassProfile {
+    /// Total compute work, core-seconds at unit speed.
+    pub work: f64,
+    /// Fraction of work that is CPU-bound (vs I/O-bound).
+    pub cpu_frac: f64,
+    /// Per-task working-set demand, MB.
+    pub mem_demand_mb: f64,
+    /// Shuffle volume per task, MB.
+    pub shuffle_mb_per_task: f64,
+    /// I/O volume factor (scales the I/O phase).
+    pub io_gb: f64,
+}
+
+/// Profiles for the 10 pure classes in `workloadgen::catalog()` (same
+/// order). Hybrids average their constituents.
+pub fn class_profiles() -> Vec<ClassProfile> {
+    vec![
+        // 0 wordcount_map: cpu-heavy scan
+        ClassProfile { work: 3200.0, cpu_frac: 0.85, mem_demand_mb: 900.0, shuffle_mb_per_task: 8.0, io_gb: 40.0 },
+        // 1 wordcount_reduce: io write heavy
+        ClassProfile { work: 1400.0, cpu_frac: 0.35, mem_demand_mb: 700.0, shuffle_mb_per_task: 24.0, io_gb: 55.0 },
+        // 2 terasort_shuffle: shuffle monster
+        ClassProfile { work: 4200.0, cpu_frac: 0.45, mem_demand_mb: 1600.0, shuffle_mb_per_task: 220.0, io_gb: 90.0 },
+        // 3 kmeans_iter: memory-resident cpu
+        ClassProfile { work: 3800.0, cpu_frac: 0.92, mem_demand_mb: 2600.0, shuffle_mb_per_task: 12.0, io_gb: 12.0 },
+        // 4 sql_join: balanced, moderate shuffle
+        ClassProfile { work: 2800.0, cpu_frac: 0.6, mem_demand_mb: 1400.0, shuffle_mb_per_task: 90.0, io_gb: 50.0 },
+        // 5 stream_ingest: io-dominated
+        ClassProfile { work: 1600.0, cpu_frac: 0.25, mem_demand_mb: 600.0, shuffle_mb_per_task: 4.0, io_gb: 75.0 },
+        // 6 pagerank_step: memory + network
+        ClassProfile { work: 3400.0, cpu_frac: 0.7, mem_demand_mb: 2200.0, shuffle_mb_per_task: 60.0, io_gb: 20.0 },
+        // 7 bayes_train: cpu with broadcast
+        ClassProfile { work: 2600.0, cpu_frac: 0.75, mem_demand_mb: 1200.0, shuffle_mb_per_task: 30.0, io_gb: 30.0 },
+        // 8 etl_transform: io both ways
+        ClassProfile { work: 2200.0, cpu_frac: 0.45, mem_demand_mb: 800.0, shuffle_mb_per_task: 16.0, io_gb: 65.0 },
+        // 9 olap_burst: short cache-hot scans
+        ClassProfile { work: 900.0, cpu_frac: 0.65, mem_demand_mb: 500.0, shuffle_mb_per_task: 10.0, io_gb: 15.0 },
+    ]
+}
+
+/// Profile for a ground-truth class id (pure or hybrid, as produced by
+/// `Mix::truth_id`). Hybrid profiles are the mean of their constituents
+/// plus a 15% contention surcharge on work.
+pub fn profile_for(truth_id: u32) -> ClassProfile {
+    let profiles = class_profiles();
+    let n = num_pure_classes() as u32;
+    if truth_id < n {
+        return profiles[truth_id as usize];
+    }
+    // decode hybrid pair from the lexicographic pair index
+    let mut rest = (truth_id - n) as usize;
+    let n = n as usize;
+    let mut lo = 0usize;
+    while rest >= n - lo - 1 {
+        rest -= n - lo - 1;
+        lo += 1;
+    }
+    let hi = lo + 1 + rest;
+    let (a, b) = (profiles[lo], profiles[hi]);
+    ClassProfile {
+        work: 1.15 * 0.5 * (a.work + b.work) * 2.0, // both tenants' work
+        cpu_frac: 0.5 * (a.cpu_frac + b.cpu_frac),
+        mem_demand_mb: 0.5 * (a.mem_demand_mb + b.mem_demand_mb),
+        shuffle_mb_per_task: 0.5
+            * (a.shuffle_mb_per_task + b.shuffle_mb_per_task),
+        io_gb: 0.5 * (a.io_gb + b.io_gb) * 2.0,
+    }
+}
+
+/// Deterministic job duration (seconds) for class `truth_id` under
+/// `config`. The measurement noise a real cluster adds is injected by
+/// callers (`JobRunner`) so the model itself is exactly reproducible.
+pub fn job_duration(truth_id: u32, config: &TuningConfig) -> f64 {
+    let p = profile_for(truth_id);
+    duration_for_profile(&p, config)
+}
+
+pub fn duration_for_profile(p: &ClassProfile, config: &TuningConfig) -> f64 {
+    let cores_req = config.executor_cores * config.num_executors;
+    let mem_req = config.executor_mem_mb * config.num_executors;
+
+    // --- capacity waves: executors beyond the cluster run sequentially
+    let core_waves = (cores_req as f64 / CLUSTER_CORES as f64).ceil().max(1.0);
+    let mem_waves = (mem_req as f64 / CLUSTER_MEM_MB as f64).ceil().max(1.0);
+    let alloc_waves = core_waves.max(mem_waves);
+    // effective concurrent slots
+    let slots = ((cores_req as f64) / alloc_waves).max(1.0);
+
+    // --- task decomposition
+    let tasks = config.parallelism.max(1) as f64;
+    let task_waves = (tasks / slots).ceil();
+    let work_per_task = p.work / tasks;
+
+    // --- memory effects (per-task share of the executor heap)
+    let mem_per_task =
+        config.executor_mem_mb as f64 / config.executor_cores as f64;
+    let mem_ratio = p.mem_demand_mb / mem_per_task;
+    let gc_factor = if mem_ratio <= 0.8 {
+        1.0
+    } else if mem_ratio <= 1.0 {
+        // approaching the cliff: mild GC pressure
+        1.0 + 0.8 * (mem_ratio - 0.8) / 0.2 * 0.3
+    } else if mem_ratio <= 2.0 {
+        // over the cliff: heavy GC + spill
+        1.24 + 2.8 * (mem_ratio - 1.0)
+    } else {
+        // thrash
+        4.04 + 6.0 * (mem_ratio - 2.0)
+    };
+
+    // --- shuffle effects
+    let shuffle_per_task = p.shuffle_mb_per_task * (256.0 / tasks).max(0.25);
+    let spill_ratio = shuffle_per_task / config.shuffle_buffer_mb as f64;
+    let shuffle_factor = if spill_ratio <= 1.0 {
+        1.0
+    } else {
+        // each extra spill pass re-reads/writes the shuffle data
+        1.0 + 0.55 * (spill_ratio - 1.0).min(6.0)
+    };
+    let shuffle_time = 0.012
+        * p.shuffle_mb_per_task
+        * tasks.min(256.0)
+        * shuffle_factor
+        / slots.sqrt();
+
+    // --- compression trade-off
+    let (io_comp, cpu_comp) = if config.compression {
+        (0.62, 1.18)
+    } else {
+        (1.0, 1.0)
+    };
+
+    // --- cpu and io phases
+    let cpu_time_per_task = work_per_task * p.cpu_frac * cpu_comp * gc_factor;
+    let io_time_per_task = work_per_task * (1.0 - p.cpu_frac) * io_comp
+        + p.io_gb * 1024.0 * io_comp / (tasks * 140.0); // 140 MB/s/task disk
+    // fixed per-task overhead (scheduling + JVM)
+    let overhead_per_task = 0.35;
+
+    let per_task = cpu_time_per_task + io_time_per_task + overhead_per_task;
+    let duration = task_waves * per_task * alloc_waves + shuffle_time;
+
+    // small executors also pay a broadcast/setup cost per executor wave
+    let setup = 2.0 * alloc_waves + 0.15 * config.num_executors as f64;
+    duration + setup
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcluster::config_space::{
+        default_config_index, ConfigIndex,
+    };
+
+    fn best_and_worst(truth_id: u32) -> (f64, f64) {
+        let mut best = f64::INFINITY;
+        let mut worst = 0.0f64;
+        for ci in ConfigIndex::enumerate_all() {
+            let d = job_duration(truth_id, &ci.to_config());
+            best = best.min(d);
+            worst = worst.max(d);
+        }
+        (best, worst)
+    }
+
+    #[test]
+    fn surface_has_meaningful_dynamic_range() {
+        for class in [0u32, 2, 3, 5] {
+            let (best, worst) = best_and_worst(class);
+            assert!(
+                worst / best > 4.0,
+                "class {class}: best {best}, worst {worst}"
+            );
+            assert!(best > 10.0, "class {class} best {best} too small");
+        }
+    }
+
+    #[test]
+    fn default_config_is_mediocre() {
+        // the vendor default should leave >=25% on the table for most
+        // classes (the paper's premise that untuned clusters are slow)
+        let dc = default_config_index().to_config();
+        let mut losers = 0;
+        for class in 0..num_pure_classes() as u32 {
+            let (best, _) = best_and_worst(class);
+            let d = job_duration(class, &dc);
+            if d > 1.25 * best {
+                losers += 1;
+            }
+        }
+        assert!(losers >= 7, "only {losers} classes lose with default");
+    }
+
+    #[test]
+    fn optima_differ_across_classes() {
+        // per-class argmin configs must not all coincide — otherwise
+        // per-workload tuning would be pointless
+        let mut argmins = std::collections::HashSet::new();
+        for class in 0..num_pure_classes() as u32 {
+            let mut best = (f64::INFINITY, ConfigIndex([0; 6]));
+            for ci in ConfigIndex::enumerate_all() {
+                let d = job_duration(class, &ci.to_config());
+                if d < best.0 {
+                    best = (d, ci);
+                }
+            }
+            argmins.insert(best.1 .0);
+        }
+        assert!(argmins.len() >= 3, "only {} distinct optima", argmins.len());
+    }
+
+    #[test]
+    fn memory_cliff_exists() {
+        // kmeans (class 3, 2600 MB demand): starving memory must blow up
+        let starved = TuningConfig {
+            executor_mem_mb: 1024,
+            executor_cores: 4,
+            num_executors: 8,
+            shuffle_buffer_mb: 128,
+            parallelism: 64,
+            compression: false,
+        };
+        let fed = TuningConfig { executor_mem_mb: 12288, ..starved };
+        let r = job_duration(3, &starved) / job_duration(3, &fed);
+        assert!(r > 3.0, "cliff ratio {r}");
+    }
+
+    #[test]
+    fn compression_helps_io_hurts_cpu() {
+        let base = TuningConfig {
+            executor_mem_mb: 8192,
+            executor_cores: 4,
+            num_executors: 12,
+            shuffle_buffer_mb: 128,
+            parallelism: 128,
+            compression: false,
+        };
+        let comp = TuningConfig { compression: true, ..base };
+        // stream_ingest (5) is io-bound: compression should help
+        assert!(job_duration(5, &comp) < job_duration(5, &base));
+        // kmeans (3) is cpu-bound: compression should hurt
+        assert!(job_duration(3, &comp) > job_duration(3, &base));
+    }
+
+    #[test]
+    fn oversubscription_pays_alloc_waves() {
+        let fits = TuningConfig {
+            executor_mem_mb: 4096,
+            executor_cores: 4,
+            num_executors: 16,
+            shuffle_buffer_mb: 128,
+            parallelism: 128,
+            compression: false,
+        }; // 64 cores, 64 GB: fits
+        let over = TuningConfig { num_executors: 24, ..fits }; // 96 cores
+        assert!(job_duration(0, &over) > job_duration(0, &fits));
+    }
+
+    #[test]
+    fn hybrid_profile_is_heavier_than_parts() {
+        let n = num_pure_classes() as u32;
+        let hybrid_id = crate::workloadgen::Mix::Hybrid(0, 1, 0.5)
+            .truth_id(num_pure_classes());
+        let h = profile_for(hybrid_id);
+        let a = profile_for(0);
+        let b = profile_for(1);
+        assert!(h.work > 0.5 * (a.work + b.work));
+        assert!(hybrid_id >= n);
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = default_config_index().to_config();
+        assert_eq!(job_duration(2, &c), job_duration(2, &c));
+    }
+}

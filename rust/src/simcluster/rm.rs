@@ -1,0 +1,236 @@
+//! YARN-like resource manager: nodes, container accounting, and the
+//! plug-in interception point.
+//!
+//! The paper's integration model ([16], §6.4): "The KERMIT plug-in code
+//! is called whenever the resource manager responds to a resource request
+//! from an analytic framework" — the RM exposes exactly that hook here
+//! via the [`RmPlugin`] trait. A no-op plugin reproduces an untuned
+//! cluster; the KERMIT plug-in (in `online::plugin`) implements
+//! Algorithm 1.
+
+use super::config_space::TuningConfig;
+use std::collections::BTreeMap;
+
+/// One worker node's capacity.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeSpec {
+    pub cores: u32,
+    pub mem_mb: u32,
+}
+
+/// A granted container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Container {
+    pub id: u64,
+    pub node: usize,
+    pub cores: u32,
+    pub mem_mb: u32,
+}
+
+/// A resource request from an analytic framework (one job's executor
+/// ask, shaped by the tuning config the plug-in selects).
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceRequest {
+    pub app_id: u64,
+    /// Time of the request (simulated seconds).
+    pub time: f64,
+}
+
+/// The plug-in hook: given the request, return the tuning configuration
+/// the RM should apply to this application's containers.
+pub trait RmPlugin {
+    fn on_resource_request(&mut self, req: &ResourceRequest) -> TuningConfig;
+
+    /// Called when the application completes with its measured duration —
+    /// the feedback edge of the autonomic loop.
+    fn on_app_complete(&mut self, _app_id: u64, _duration: f64, _time: f64) {}
+}
+
+/// A plug-in that always returns a fixed configuration (default-config
+/// and rule-of-thumb baselines).
+pub struct FixedConfigPlugin(pub TuningConfig);
+
+impl RmPlugin for FixedConfigPlugin {
+    fn on_resource_request(&mut self, _req: &ResourceRequest) -> TuningConfig {
+        self.0
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RmError {
+    #[error("no node can fit a container of {cores} cores / {mem_mb} MB")]
+    WontFit { cores: u32, mem_mb: u32 },
+    #[error("unknown container {0}")]
+    UnknownContainer(u64),
+}
+
+/// Container-level accounting for a static set of nodes.
+#[derive(Debug)]
+pub struct ResourceManager {
+    nodes: Vec<NodeSpec>,
+    used: Vec<(u32, u32)>, // (cores, mem) in use per node
+    live: BTreeMap<u64, Container>,
+    next_id: u64,
+}
+
+impl ResourceManager {
+    pub fn new(nodes: Vec<NodeSpec>) -> ResourceManager {
+        let used = vec![(0, 0); nodes.len()];
+        ResourceManager { nodes, used, live: BTreeMap::new(), next_id: 0 }
+    }
+
+    /// The 4-node cluster matching `perfmodel::CLUSTER_*`.
+    pub fn default_cluster() -> ResourceManager {
+        ResourceManager::new(vec![
+            NodeSpec { cores: 16, mem_mb: 24_576 };
+            4
+        ])
+    }
+
+    pub fn total_capacity(&self) -> (u32, u32) {
+        self.nodes
+            .iter()
+            .fold((0, 0), |(c, m), n| (c + n.cores, m + n.mem_mb))
+    }
+
+    pub fn used_resources(&self) -> (u32, u32) {
+        self.used
+            .iter()
+            .fold((0, 0), |(c, m), &(uc, um)| (c + uc, m + um))
+    }
+
+    /// Allocate one container with best-fit (most-loaded node that still
+    /// fits, to reduce fragmentation).
+    pub fn allocate(&mut self, cores: u32, mem_mb: u32) -> Result<Container, RmError> {
+        let mut best: Option<(usize, u32)> = None; // (node, free_cores_after)
+        for (i, node) in self.nodes.iter().enumerate() {
+            let (uc, um) = self.used[i];
+            if uc + cores <= node.cores && um + mem_mb <= node.mem_mb {
+                let free_after = node.cores - uc - cores;
+                if best.map(|(_, f)| free_after < f).unwrap_or(true) {
+                    best = Some((i, free_after));
+                }
+            }
+        }
+        let (node, _) = best.ok_or(RmError::WontFit { cores, mem_mb })?;
+        self.used[node].0 += cores;
+        self.used[node].1 += mem_mb;
+        let c = Container { id: self.next_id, node, cores, mem_mb };
+        self.next_id += 1;
+        self.live.insert(c.id, c);
+        Ok(c)
+    }
+
+    /// Allocate as many of `count` identical containers as fit; returns
+    /// the granted set (possibly shorter — the caller decides whether to
+    /// run degraded or queue, as YARN apps do).
+    pub fn allocate_up_to(
+        &mut self,
+        count: u32,
+        cores: u32,
+        mem_mb: u32,
+    ) -> Vec<Container> {
+        let mut out = Vec::new();
+        for _ in 0..count {
+            match self.allocate(cores, mem_mb) {
+                Ok(c) => out.push(c),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    pub fn release(&mut self, id: u64) -> Result<(), RmError> {
+        let c = self.live.remove(&id).ok_or(RmError::UnknownContainer(id))?;
+        self.used[c.node].0 -= c.cores;
+        self.used[c.node].1 -= c.mem_mb;
+        Ok(())
+    }
+
+    pub fn live_containers(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Accounting invariant: per-node usage equals the sum of live
+    /// containers and never exceeds capacity. Exercised by proptests.
+    pub fn check_invariants(&self) {
+        let mut per_node = vec![(0u32, 0u32); self.nodes.len()];
+        for c in self.live.values() {
+            per_node[c.node].0 += c.cores;
+            per_node[c.node].1 += c.mem_mb;
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            assert_eq!(per_node[i], self.used[i], "node {i} usage mismatch");
+            assert!(self.used[i].0 <= node.cores, "node {i} cores oversub");
+            assert!(self.used[i].1 <= node.mem_mb, "node {i} mem oversub");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let mut rm = ResourceManager::default_cluster();
+        let c = rm.allocate(4, 8192).unwrap();
+        assert_eq!(rm.used_resources(), (4, 8192));
+        rm.check_invariants();
+        rm.release(c.id).unwrap();
+        assert_eq!(rm.used_resources(), (0, 0));
+        rm.check_invariants();
+    }
+
+    #[test]
+    fn rejects_oversized_container() {
+        let mut rm = ResourceManager::default_cluster();
+        assert_eq!(
+            rm.allocate(17, 1024),
+            Err(RmError::WontFit { cores: 17, mem_mb: 1024 })
+        );
+        assert_eq!(
+            rm.allocate(1, 99_999),
+            Err(RmError::WontFit { cores: 1, mem_mb: 99_999 })
+        );
+    }
+
+    #[test]
+    fn fills_cluster_then_stops() {
+        let mut rm = ResourceManager::default_cluster();
+        // 16 containers of 4 cores = 64 cores: exactly fills
+        let got = rm.allocate_up_to(20, 4, 4096);
+        assert_eq!(got.len(), 16);
+        rm.check_invariants();
+        // all 64 cores are in use: nothing else fits
+        assert!(rm.allocate(1, 1024).is_err());
+    }
+
+    #[test]
+    fn cores_exhaustion_blocks() {
+        let mut rm = ResourceManager::new(vec![NodeSpec { cores: 2, mem_mb: 4096 }]);
+        rm.allocate(2, 1024).unwrap();
+        assert!(rm.allocate(1, 1024).is_err());
+    }
+
+    #[test]
+    fn double_release_errors() {
+        let mut rm = ResourceManager::default_cluster();
+        let c = rm.allocate(1, 1024).unwrap();
+        rm.release(c.id).unwrap();
+        assert_eq!(rm.release(c.id), Err(RmError::UnknownContainer(c.id)));
+    }
+
+    #[test]
+    fn best_fit_packs_tight() {
+        let mut rm = ResourceManager::new(vec![
+            NodeSpec { cores: 8, mem_mb: 8192 },
+            NodeSpec { cores: 8, mem_mb: 8192 },
+        ]);
+        let a = rm.allocate(6, 1024).unwrap();
+        // next small container should pack onto the same node (best fit)
+        let b = rm.allocate(2, 1024).unwrap();
+        assert_eq!(a.node, b.node);
+        rm.check_invariants();
+    }
+}

@@ -1,0 +1,358 @@
+//! Statistical primitives: descriptive statistics, Welch's t-test, and
+//! vector norms. These back the ChangeDetector (paper §7.2) and workload
+//! characterization (paper §7.1).
+
+/// Descriptive statistics for one feature over a set of samples — the
+/// paper's "workload characterization" set: mean, std, min, max, p75, p90
+/// (§7.1: "A full set of statistics, including the mean, the standard
+/// deviation, the max, the min, the 90th percentile, and the 75th
+/// percentile").
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p75: f64,
+    pub p90: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p75: percentile_sorted(&sorted, 0.75),
+            p90: percentile_sorted(&sorted, 0.90),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance (matches the L1 window_stats kernel's convention).
+pub fn variance(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (n-1 denominator) — what Welch's t-test wants.
+pub fn sample_variance(xs: &[f64]) -> f64 {
+    assert!(xs.len() >= 2, "sample_variance needs n >= 2");
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64
+}
+
+/// Euclidean (L2) distance between equal-length vectors.
+pub fn l2_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Result of a Welch two-sample t-test.
+#[derive(Debug, Clone, Copy)]
+pub struct WelchResult {
+    pub t: f64,
+    pub df: f64,
+    /// Two-sided p-value.
+    pub p: f64,
+}
+
+/// Welch's unequal-variance t-test from raw samples.
+pub fn welch_t_test(a: &[f64], b: &[f64]) -> WelchResult {
+    welch_t_test_from_moments(
+        mean(a),
+        sample_variance(a),
+        a.len(),
+        mean(b),
+        sample_variance(b),
+        b.len(),
+    )
+}
+
+/// Welch's t-test from precomputed moments — this is the form the on-line
+/// ChangeDetector uses, consuming the mean/var emitted by the
+/// `welch_stats` artifact (L1 kernel) or the streaming aggregator.
+pub fn welch_t_test_from_moments(
+    mean_a: f64,
+    var_a: f64,
+    n_a: usize,
+    mean_b: f64,
+    var_b: f64,
+    n_b: usize,
+) -> WelchResult {
+    assert!(n_a >= 2 && n_b >= 2);
+    let sa = var_a / n_a as f64;
+    let sb = var_b / n_b as f64;
+    let denom = (sa + sb).sqrt();
+    if denom == 0.0 {
+        // identical constant samples: no evidence of change
+        return WelchResult { t: 0.0, df: (n_a + n_b - 2) as f64, p: 1.0 };
+    }
+    let t = (mean_a - mean_b) / denom;
+    // Welch–Satterthwaite degrees of freedom
+    let df = (sa + sb) * (sa + sb)
+        / (sa * sa / (n_a as f64 - 1.0) + sb * sb / (n_b as f64 - 1.0));
+    let p = 2.0 * student_t_sf(t.abs(), df);
+    WelchResult { t, df, p }
+}
+
+/// Survival function P(T > t) of Student's t with `df` degrees of freedom,
+/// via the regularized incomplete beta function.
+pub fn student_t_sf(t: f64, df: f64) -> f64 {
+    if !t.is_finite() {
+        return if t > 0.0 { 0.0 } else { 1.0 };
+    }
+    let x = df / (df + t * t);
+    0.5 * incomplete_beta(0.5 * df, 0.5, x)
+}
+
+/// Regularized incomplete beta I_x(a, b) via the Lentz continued fraction.
+pub fn incomplete_beta(a: f64, b: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && b > 0.0);
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b)
+        + a * x.ln()
+        + b * (1.0 - x).ln();
+    // use the symmetry relation for faster convergence
+    if x < (a + 1.0) / (a + b + 2.0) {
+        (ln_front.exp() * beta_cf(a, b, x)) / a
+    } else {
+        1.0 - incomplete_beta(b, a, 1.0 - x)
+    }
+}
+
+/// Continued fraction for the incomplete beta (Numerical Recipes betacf).
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 300;
+    const EPS: f64 = 1e-14;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        // even step
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // odd step
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Lanczos log-gamma (g=7, n=9), |error| < 1e-13 over the positive reals.
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = COEF[0];
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t
+        + acc.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        close(s.mean, 3.0, 1e-12);
+        close(s.min, 1.0, 1e-12);
+        close(s.max, 5.0, 1e-12);
+        close(s.p75, 4.0, 1e-12);
+        close(s.std, 2.0f64.sqrt(), 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        close(percentile_sorted(&xs, 0.5), 25.0, 1e-12);
+        close(percentile_sorted(&xs, 0.0), 10.0, 1e-12);
+        close(percentile_sorted(&xs, 1.0), 40.0, 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        close(ln_gamma(1.0), 0.0, 1e-10);
+        close(ln_gamma(2.0), 0.0, 1e-10);
+        close(ln_gamma(5.0), 24.0f64.ln(), 1e-10); // gamma(5)=4!
+        close(ln_gamma(0.5), std::f64::consts::PI.sqrt().ln(), 1e-10);
+    }
+
+    #[test]
+    fn incomplete_beta_bounds_and_symmetry() {
+        close(incomplete_beta(2.0, 3.0, 0.0), 0.0, 1e-12);
+        close(incomplete_beta(2.0, 3.0, 1.0), 1.0, 1e-12);
+        // I_x(a,b) = 1 - I_{1-x}(b,a)
+        let x = 0.37;
+        close(
+            incomplete_beta(2.5, 1.5, x),
+            1.0 - incomplete_beta(1.5, 2.5, 1.0 - x),
+            1e-10,
+        );
+        // I_x(1,1) = x (uniform)
+        close(incomplete_beta(1.0, 1.0, 0.42), 0.42, 1e-10);
+    }
+
+    #[test]
+    fn student_t_sf_reference_values() {
+        // scipy.stats.t.sf reference values
+        close(student_t_sf(0.0, 10.0), 0.5, 1e-10);
+        close(student_t_sf(1.812461, 10.0), 0.05, 1e-4); // t_{0.95,10}
+        close(student_t_sf(2.228139, 10.0), 0.025, 1e-4); // t_{0.975,10}
+        close(student_t_sf(1.959964, 1e6), 0.025, 1e-4); // ~normal
+    }
+
+    #[test]
+    fn welch_identical_samples_p_one() {
+        let a = [5.0, 5.1, 4.9, 5.0, 5.05, 4.95];
+        let r = welch_t_test(&a, &a);
+        close(r.t, 0.0, 1e-12);
+        close(r.p, 1.0, 1e-9);
+    }
+
+    #[test]
+    fn welch_clearly_different_samples() {
+        let a = [1.0, 1.1, 0.9, 1.05, 0.95, 1.0, 1.02, 0.98];
+        let b = [9.0, 9.1, 8.9, 9.05, 8.95, 9.0, 9.02, 8.98];
+        let r = welch_t_test(&a, &b);
+        assert!(r.p < 1e-10, "p = {}", r.p);
+        assert!(r.t < 0.0);
+    }
+
+    #[test]
+    fn welch_matches_scipy_example() {
+        // scipy.stats.ttest_ind(a, b, equal_var=False)
+        // -> t = -2.828090, p = 0.008583 (verified against scipy 1.x)
+        let a = [
+            27.5, 21.0, 19.0, 23.6, 17.0, 17.9, 16.9, 20.1, 21.9, 22.6,
+            23.1, 19.6, 19.0, 21.7, 21.4,
+        ];
+        let b = [
+            27.1, 22.0, 20.8, 23.4, 23.4, 23.5, 25.8, 22.0, 24.8, 20.2,
+            21.9, 22.1, 22.9, 30.3, 23.9,
+        ];
+        let r = welch_t_test(&a, &b);
+        close(r.t, -2.828090, 1e-5);
+        close(r.p, 0.008583, 1e-5);
+    }
+
+    #[test]
+    fn welch_constant_equal_samples() {
+        let a = [3.0; 5];
+        let r = welch_t_test(&a, &a);
+        close(r.p, 1.0, 1e-12);
+    }
+
+    #[test]
+    fn l2_distance_known() {
+        close(l2_distance(&[0.0, 0.0], &[3.0, 4.0]), 5.0, 1e-12);
+        close(l2_distance(&[1.0], &[1.0]), 0.0, 1e-12);
+    }
+
+    #[test]
+    fn moments_vs_raw_agree() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        let r1 = welch_t_test(&a, &b);
+        let r2 = welch_t_test_from_moments(
+            mean(&a), sample_variance(&a), 4,
+            mean(&b), sample_variance(&b), 4,
+        );
+        close(r1.t, r2.t, 1e-12);
+        close(r1.p, r2.p, 1e-12);
+    }
+}

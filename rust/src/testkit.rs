@@ -1,0 +1,96 @@
+//! Property-based testing harness (the offline crate set has no
+//! proptest): deterministic random-case generation with shrinking-free
+//! failure reporting (the failing seed + case index are printed, which
+//! is enough to reproduce exactly).
+
+use crate::util::rng::Rng;
+
+/// Run `check` on `cases` generated inputs. On failure, panics with the
+/// case index and root seed so the exact case can be replayed.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut generate: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut root = Rng::new(seed);
+    for i in 0..cases {
+        let mut case_rng = root.fork(i as u64);
+        let input = generate(&mut case_rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {i} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    pub fn vec_f64(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+    }
+
+    pub fn rows(
+        rng: &mut Rng,
+        n: usize,
+        width: usize,
+        lo: f64,
+        hi: f64,
+    ) -> Vec<Vec<f64>> {
+        (0..n).map(|_| vec_f64(rng, width, lo, hi)).collect()
+    }
+
+    pub fn labels(rng: &mut Rng, n: usize, classes: u32) -> Vec<u32> {
+        (0..n).map(|_| rng.below(classes as u64) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            0,
+            50,
+            |rng| rng.range_f64(0.0, 1.0),
+            |x| {
+                if (0.0..1.0).contains(x) {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_failures() {
+        forall(
+            1,
+            50,
+            |rng| rng.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen_a = Vec::new();
+        forall(7, 10, |rng| rng.next_u64(), |&x| {
+            seen_a.push(x);
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        forall(7, 10, |rng| rng.next_u64(), |&x| {
+            seen_b.push(x);
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

@@ -1,0 +1,156 @@
+//! Tiny command-line parser (no clap in the offline crate set).
+//!
+//! Supports `kermit <subcommand> [--flag] [--key value] [positional...]`.
+//! Unknown flags are errors; `--help` is handled by the caller via
+//! [`Args::help_requested`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). `value_keys` lists flags that
+    /// take a value; everything else starting with `--` is boolean.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        value_keys: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut it = raw.into_iter().peekable();
+        let mut out = Args {
+            subcommand: None,
+            positional: Vec::new(),
+            flags: BTreeMap::new(),
+            bools: Vec::new(),
+        };
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if value_keys.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError::MissingValue(name.into()))?;
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(value_keys: &[&str]) -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1), value_keys)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn help_requested(&self) -> bool {
+        self.flag("help") || self.subcommand.as_deref() == Some("help")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), s.into())),
+        }
+    }
+
+    pub fn get_usize(
+        &self,
+        name: &str,
+        default: usize,
+    ) -> Result<usize, CliError> {
+        Ok(self.get_u64(name, default as u64)? as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), s.into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str], keys: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), keys).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = args(
+            &["run", "--seed", "42", "--verbose", "trace.json"],
+            &["seed"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["trace.json"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = args(&["bench", "--eps=0.75"], &[]);
+        assert_eq!(a.get_f64("eps", 0.0).unwrap(), 0.75);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(
+            ["run".to_string(), "--seed".to_string()],
+            &["seed"],
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = args(&["run", "--seed", "abc"], &["seed"]);
+        assert!(a.get_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&["run"], &[]);
+        assert_eq!(a.get_or("out", "/tmp/x"), "/tmp/x");
+        assert_eq!(a.get_f64("eps", 1.5).unwrap(), 1.5);
+        assert!(!a.flag("verbose"));
+    }
+}

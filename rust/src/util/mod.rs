@@ -1,0 +1,6 @@
+//! Foundation utilities built from scratch (the offline crate set has no
+//! serde / clap / rand): deterministic RNG, JSON codec, CLI parsing.
+
+pub mod cli;
+pub mod json;
+pub mod rng;

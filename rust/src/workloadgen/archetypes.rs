@@ -1,0 +1,232 @@
+//! Workload class library: parametric signatures for the big-data job
+//! archetypes the paper's evaluation draws on (HiBench-style Spark/Hadoop
+//! benchmarks). Each archetype phase is one steady-state *workload* in
+//! the paper's sense (§6.1); a job is a sequence of phases connected by
+//! abrupt transitions (Figure 2 — e.g. the map->reduce transition).
+//!
+//! Signatures are per-feature (mean, std) pairs over the 16 counters in
+//! `features::FEATURE_NAMES`. Values are in normalized utilisation units
+//! (0..100 for percentages, MB/s-scaled for throughput counters) — the
+//! algorithms only care about the statistical structure, not the units.
+
+use crate::features::{FeatureVec, NUM_FEATURES};
+
+/// A steady-state workload class: what DBSCAN should discover as one
+/// cluster and the WorkloadClassifier should learn as one label.
+#[derive(Debug, Clone)]
+pub struct WorkloadClass {
+    /// Human name (for reports only; KERMIT's own labels are generated
+    /// integers, per paper §7.1).
+    pub name: &'static str,
+    /// Per-feature mean level.
+    pub base: FeatureVec,
+    /// Per-feature sample noise (std).
+    pub noise: FeatureVec,
+}
+
+/// Index into [`catalog()`].
+pub type ClassId = u32;
+
+macro_rules! sig {
+    ($name:expr; $($mean:expr, $std:expr);* $(;)?) => {{
+        let base = [$($mean as f64),*];
+        let noise = [$($std as f64),*];
+        WorkloadClass { name: $name, base, noise }
+    }};
+}
+
+/// The 10 pure workload classes (8 job archetypes, two of which have a
+/// distinct second phase — the paper's map/reduce-style split).
+///
+/// Feature order: cpu_user, cpu_sys, cpu_iowait, mem_used, mem_cache,
+/// disk_read, disk_write, net_rx, net_tx, ctx_switches, page_faults,
+/// gc_time, task_queue, shuffle_bytes, hdfs_read, hdfs_write.
+pub fn catalog() -> Vec<WorkloadClass> {
+    vec![
+        // 0: WordCount-style map phase — CPU-bound scan over HDFS
+        sig!("wordcount_map";
+            78, 6;  8, 2;  4, 1.5;  45, 5;  20, 4;  35, 8;  5, 2;
+            6, 2;   6, 2;  30, 6;   8, 3;   6, 2;   55, 8;  2, 1;
+            70, 9;  3, 1),
+        // 1: WordCount-style reduce phase — light CPU, HDFS write-out
+        sig!("wordcount_reduce";
+            30, 5;  10, 3;  12, 3;  38, 4;  22, 4;  6, 2;   45, 8;
+            18, 4;  18, 4;  22, 5;  6, 2;   4, 1.5; 18, 5;  25, 6;
+            8, 3;   55, 8),
+        // 2: TeraSort shuffle — network+disk dominated, heavy spill
+        sig!("terasort_shuffle";
+            40, 7;  18, 4;  28, 6;  70, 6;  35, 5;  55, 9;  60, 10;
+            65, 9;  65, 9;  55, 8;  25, 6;  18, 5;  70, 9;  85, 8;
+            30, 6;  30, 6),
+        // 3: K-means iteration — memory-resident iterative compute
+        sig!("kmeans_iter";
+            85, 5;  6, 2;   2, 1;   80, 5;  12, 3;  8, 3;   3, 1.5;
+            25, 5;  25, 5;  40, 7;  12, 4;  22, 5;  45, 7;  12, 4;
+            10, 3;  2, 1),
+        // 4: SQL join (Hive/TPC-DS-ish) — mixed scan + broadcast
+        sig!("sql_join";
+            55, 7;  14, 3;  15, 4;  60, 6;  40, 6;  45, 8;  20, 5;
+            35, 7;  35, 7;  38, 6;  15, 4;  12, 4;  50, 8;  45, 8;
+            50, 8;  12, 4),
+        // 5: Streaming ingest — network-in + sequential disk write
+        sig!("stream_ingest";
+            18, 4;  16, 4;  10, 3;  30, 4;  45, 6;  4, 2;   70, 9;
+            80, 7;  12, 3;  60, 9;  6, 2;   3, 1;   25, 6;  4, 2;
+            2, 1;   65, 8),
+        // 6: PageRank superstep — graph traversal, pointer-chasing
+        sig!("pagerank_step";
+            65, 7;  12, 3;  8, 3;   75, 6;  15, 4;  15, 4;  8, 3;
+            45, 8;  45, 8;  75, 9;  45, 8;  28, 6;  60, 8;  35, 7;
+            15, 4;  5, 2),
+        // 7: Bayes training — moderate CPU + model broadcast
+        sig!("bayes_train";
+            60, 6;  8, 2;   6, 2;   55, 5;  25, 4;  25, 6;  10, 3;
+            30, 6;  15, 4;  35, 6;  10, 3;  15, 4;  40, 7;  18, 5;
+            35, 7;  8, 3),
+        // 8: ETL transform — balanced disk in/out, sys-CPU heavy
+        sig!("etl_transform";
+            35, 6;  30, 5;  20, 5;  42, 5;  35, 5;  55, 8;  55, 8;
+            12, 3;  12, 3;  45, 7;  18, 5;  8, 3;   35, 6;  10, 3;
+            55, 8;  50, 8),
+        // 9: Interactive OLAP burst — short hot scans from cache
+        sig!("olap_burst";
+            50, 9;  10, 3;  3, 1.5; 35, 5;  70, 7;  10, 4;  2, 1;
+            20, 5;  20, 5;  30, 6;  5, 2;   5, 2;   30, 8;  8, 3;
+            20, 6;  1, 0.5),
+    ]
+}
+
+pub fn num_pure_classes() -> usize {
+    catalog().len()
+}
+
+/// A (possibly hybrid) workload mix: pure class, or a weighted blend of
+/// two pure classes — the multi-user scenario the ZSL synthesizer (paper
+/// §7.2 step 7) anticipates without ever observing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mix {
+    Pure(ClassId),
+    /// Hybrid of two pure classes with blend weight w for the first
+    /// (resource signatures superpose when two tenants share a cluster).
+    Hybrid(ClassId, ClassId, f64),
+}
+
+impl Mix {
+    /// Expected feature mean of the mix.
+    pub fn mean(&self, cat: &[WorkloadClass]) -> FeatureVec {
+        match *self {
+            Mix::Pure(a) => cat[a as usize].base,
+            Mix::Hybrid(a, b, w) => {
+                let (ca, cb) = (&cat[a as usize], &cat[b as usize]);
+                let mut out = [0.0; NUM_FEATURES];
+                for i in 0..NUM_FEATURES {
+                    out[i] = w * ca.base[i] + (1.0 - w) * cb.base[i];
+                }
+                out
+            }
+        }
+    }
+
+    /// Sample noise std of the mix (variances superpose).
+    pub fn noise(&self, cat: &[WorkloadClass]) -> FeatureVec {
+        match *self {
+            Mix::Pure(a) => cat[a as usize].noise,
+            Mix::Hybrid(a, b, w) => {
+                let (ca, cb) = (&cat[a as usize], &cat[b as usize]);
+                let mut out = [0.0; NUM_FEATURES];
+                for i in 0..NUM_FEATURES {
+                    let va = ca.noise[i] * ca.noise[i];
+                    let vb = cb.noise[i] * cb.noise[i];
+                    out[i] = (w * w * va + (1.0 - w) * (1.0 - w) * vb
+                        + 0.25 * (va + vb))
+                        .sqrt(); // extra cross-tenant interference term
+                }
+                out
+            }
+        }
+    }
+
+    /// Canonical ground-truth id: pure ids are 0..N; hybrid (a,b) with
+    /// a<b maps to N + pair_index (weight ignored — the paper's hybrid
+    /// classes are identified by their constituents).
+    pub fn truth_id(&self, num_pure: usize) -> u32 {
+        match *self {
+            Mix::Pure(a) => a,
+            Mix::Hybrid(a, b, _) => {
+                let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+                let (lo, hi) = (lo as usize, hi as usize);
+                // index of pair (lo,hi) in lexicographic enumeration
+                let before: usize =
+                    (0..lo).map(|i| num_pure - i - 1).sum();
+                (num_pure + before + (hi - lo - 1)) as u32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_well_formed() {
+        let cat = catalog();
+        assert_eq!(cat.len(), 10);
+        for c in &cat {
+            for i in 0..NUM_FEATURES {
+                assert!(c.base[i] >= 0.0, "{} base[{}]", c.name, i);
+                assert!(c.noise[i] > 0.0, "{} noise[{}]", c.name, i);
+            }
+        }
+    }
+
+    #[test]
+    fn classes_are_mutually_distinct() {
+        // pairwise L2 distance between base vectors must be large relative
+        // to noise, otherwise discovery can't work even in principle
+        let cat = catalog();
+        for i in 0..cat.len() {
+            for j in (i + 1)..cat.len() {
+                let d: f64 = (0..NUM_FEATURES)
+                    .map(|k| (cat[i].base[k] - cat[j].base[k]).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(d > 30.0, "{} vs {} too close: {}", cat[i].name,
+                    cat[j].name, d);
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_mean_is_blend() {
+        let cat = catalog();
+        let m = Mix::Hybrid(0, 1, 0.5);
+        let mean = m.mean(&cat);
+        for i in 0..NUM_FEATURES {
+            let want = 0.5 * (cat[0].base[i] + cat[1].base[i]);
+            assert!((mean[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn truth_ids_unique() {
+        let n = num_pure_classes();
+        let mut ids = std::collections::HashSet::new();
+        for a in 0..n as u32 {
+            assert!(ids.insert(Mix::Pure(a).truth_id(n)));
+        }
+        for a in 0..n as u32 {
+            for b in (a + 1)..n as u32 {
+                assert!(
+                    ids.insert(Mix::Hybrid(a, b, 0.5).truth_id(n)),
+                    "dup id for ({a},{b})"
+                );
+            }
+        }
+        // order/weight independence
+        assert_eq!(
+            Mix::Hybrid(2, 5, 0.3).truth_id(n),
+            Mix::Hybrid(5, 2, 0.9).truth_id(n)
+        );
+    }
+}

@@ -1,0 +1,376 @@
+//! Trace generator: turns a schedule of workload mixes into a raw metric
+//! stream with ground truth. Reproduces the statistical structure the
+//! paper's algorithms depend on (§6.1, Figure 2): steady-state plateaus
+//! connected by *abrupt, non-linear* transition ramps, recurring workload
+//! types, hybrid multi-user mixes, and workload drift.
+
+use super::archetypes::{catalog, Mix, WorkloadClass};
+use super::trace::{Sample, Segment, Trace, TruthTag};
+use crate::features::{FeatureVec, NUM_FEATURES};
+use crate::util::rng::Rng;
+
+/// One scheduled steady-state period.
+#[derive(Debug, Clone)]
+pub struct ScheduleEntry {
+    pub mix: Mix,
+    /// Steady-state duration in samples.
+    pub duration: usize,
+}
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// Samples per second of simulated time (agent scrape rate).
+    pub sample_hz: f64,
+    /// Transition ramp length in samples between consecutive entries.
+    pub transition_len: usize,
+    /// Sigmoid steepness of the ramp (higher = more abrupt; the paper
+    /// stresses big-data transitions are abrupt and non-linear).
+    pub ramp_steepness: f64,
+    /// Extra noise multiplier inside transitions (phase churn).
+    pub transition_noise: f64,
+    /// Additive per-sample systematic drift applied to class means,
+    /// units/sample, per class id. Empty = no drift.
+    pub drift_per_sample: Vec<(u32, FeatureVec)>,
+    /// Clamp features at zero (utilisations can't go negative).
+    pub clamp_zero: bool,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            sample_hz: 1.0,
+            transition_len: 12,
+            ramp_steepness: 10.0,
+            transition_noise: 1.8,
+            drift_per_sample: Vec::new(),
+            clamp_zero: true,
+        }
+    }
+}
+
+/// The generator. Owns the class catalog and an RNG stream.
+pub struct Generator {
+    pub catalog: Vec<WorkloadClass>,
+    pub config: GenConfig,
+    rng: Rng,
+    /// Samples generated so far (drives drift).
+    clock: usize,
+}
+
+impl Generator {
+    pub fn new(seed: u64, config: GenConfig) -> Generator {
+        Generator { catalog: catalog(), config, rng: Rng::new(seed), clock: 0 }
+    }
+
+    pub fn with_default_config(seed: u64) -> Generator {
+        Generator::new(seed, GenConfig::default())
+    }
+
+    /// Effective mean of `mix` at the current clock (drift applied).
+    fn mean_at(&self, mix: Mix, clock: usize) -> FeatureVec {
+        let mut m = mix.mean(&self.catalog);
+        for (cid, rate) in &self.config.drift_per_sample {
+            let applies = match mix {
+                Mix::Pure(a) => a == *cid,
+                Mix::Hybrid(a, b, _) => a == *cid || b == *cid,
+            };
+            if applies {
+                for i in 0..NUM_FEATURES {
+                    m[i] += rate[i] * clock as f64;
+                }
+            }
+        }
+        m
+    }
+
+    fn emit(&mut self, mean: &FeatureVec, noise: &FeatureVec, mult: f64,
+            tag: TruthTag, out: &mut Trace) {
+        let mut f = [0.0; NUM_FEATURES];
+        for i in 0..NUM_FEATURES {
+            f[i] = self.rng.normal_ms(mean[i], noise[i] * mult);
+            if self.config.clamp_zero && f[i] < 0.0 {
+                f[i] = 0.0;
+            }
+        }
+        let time = self.clock as f64 / self.config.sample_hz;
+        out.samples.push(Sample { time, features: f, truth: tag });
+        self.clock += 1;
+    }
+
+    /// Generate a trace for `schedule`, inserting a sigmoid transition
+    /// ramp between consecutive entries.
+    pub fn generate(&mut self, schedule: &[ScheduleEntry]) -> Trace {
+        let mut trace = Trace::default();
+        let num_pure = self.catalog.len();
+        for (k, entry) in schedule.iter().enumerate() {
+            // transition ramp from previous entry
+            if k > 0 {
+                let prev = &schedule[k - 1];
+                let from_id = prev.mix.truth_id(num_pure);
+                let to_id = entry.mix.truth_id(num_pure);
+                let start = trace.samples.len();
+                let n = self.config.transition_len;
+                for j in 0..n {
+                    // sigmoid blend: abrupt mid-ramp switch
+                    let x = (j as f64 + 0.5) / n as f64;
+                    let s = 1.0
+                        / (1.0
+                            + (-self.config.ramp_steepness * (x - 0.5))
+                                .exp());
+                    let ma = self.mean_at(prev.mix, self.clock);
+                    let mb = self.mean_at(entry.mix, self.clock);
+                    let na = prev.mix.noise(&self.catalog);
+                    let nb = entry.mix.noise(&self.catalog);
+                    let mut mean = [0.0; NUM_FEATURES];
+                    let mut noise = [0.0; NUM_FEATURES];
+                    for i in 0..NUM_FEATURES {
+                        mean[i] = (1.0 - s) * ma[i] + s * mb[i];
+                        noise[i] = ((1.0 - s) * na[i] * na[i]
+                            + s * nb[i] * nb[i])
+                            .sqrt();
+                    }
+                    self.emit(
+                        &mean,
+                        &noise,
+                        self.config.transition_noise,
+                        TruthTag::Transition { from: from_id, to: to_id },
+                        &mut trace,
+                    );
+                }
+                trace.segments.push(Segment {
+                    start,
+                    end: trace.samples.len(),
+                    tag: TruthTag::Transition { from: from_id, to: to_id },
+                });
+            }
+            // steady state
+            let id = entry.mix.truth_id(num_pure);
+            let start = trace.samples.len();
+            let noise = entry.mix.noise(&self.catalog);
+            for _ in 0..entry.duration {
+                let mean = self.mean_at(entry.mix, self.clock);
+                self.emit(&mean, &noise, 1.0, TruthTag::Steady(id), &mut trace);
+            }
+            trace.segments.push(Segment {
+                start,
+                end: trace.samples.len(),
+                tag: TruthTag::Steady(id),
+            });
+        }
+        trace.check_invariants();
+        trace
+    }
+
+    /// RNG access for schedule builders sharing the generator's stream.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario builders (the workloads the paper's evaluation motivates)
+// ---------------------------------------------------------------------------
+
+/// Simple tour: every pure class once, fixed duration. The Fig 9/10
+/// detection & discovery workload.
+pub fn tour_schedule(duration: usize, classes: &[u32]) -> Vec<ScheduleEntry> {
+    classes
+        .iter()
+        .map(|&c| ScheduleEntry { mix: Mix::Pure(c), duration })
+        .collect()
+}
+
+/// A recurring "business day": a fixed rotation of jobs repeated `cycles`
+/// times with small duration jitter — the repetitive real-world pattern
+/// §6.4 argues KERMIT exploits (same workload recurs many times per day).
+pub fn daily_schedule(
+    rng: &mut Rng,
+    cycles: usize,
+    base_duration: usize,
+    classes: &[u32],
+) -> Vec<ScheduleEntry> {
+    let mut out = Vec::new();
+    for _ in 0..cycles {
+        for &c in classes {
+            let jitter = rng.range_f64(0.8, 1.2);
+            out.push(ScheduleEntry {
+                mix: Mix::Pure(c),
+                duration: ((base_duration as f64) * jitter) as usize,
+            });
+        }
+    }
+    out
+}
+
+/// Random job arrivals drawn from `classes` (geometric-ish durations),
+/// modelling an uncoordinated multi-tenant queue.
+pub fn random_schedule(
+    rng: &mut Rng,
+    entries: usize,
+    mean_duration: usize,
+    classes: &[u32],
+) -> Vec<ScheduleEntry> {
+    let mut out = Vec::new();
+    let mut prev: Option<u32> = None;
+    for _ in 0..entries {
+        // avoid immediate self-transition (no-op transitions)
+        let mut c = *rng.choice(classes);
+        while Some(c) == prev && classes.len() > 1 {
+            c = *rng.choice(classes);
+        }
+        prev = Some(c);
+        let d = ((mean_duration as f64)
+            * (-rng.f64().max(1e-9).ln()).max(0.25).min(3.0))
+            as usize;
+        out.push(ScheduleEntry { mix: Mix::Pure(c), duration: d.max(8) });
+    }
+    out
+}
+
+/// Multi-user phase: alternates pure jobs with hybrid (two-tenant) mixes
+/// drawn from `classes` — the unseen-hybrid workloads of the ZSL study [9].
+pub fn multi_user_schedule(
+    rng: &mut Rng,
+    entries: usize,
+    duration: usize,
+    classes: &[u32],
+    hybrid_fraction: f64,
+) -> Vec<ScheduleEntry> {
+    let mut out = Vec::new();
+    for _ in 0..entries {
+        let mix = if rng.chance(hybrid_fraction) && classes.len() >= 2 {
+            let a = *rng.choice(classes);
+            let mut b = *rng.choice(classes);
+            while b == a {
+                b = *rng.choice(classes);
+            }
+            Mix::Hybrid(a, b, rng.range_f64(0.35, 0.65))
+        } else {
+            Mix::Pure(*rng.choice(classes))
+        };
+        out.push(ScheduleEntry { mix, duration });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats;
+
+    #[test]
+    fn generates_expected_length_and_segments() {
+        let mut g = Generator::with_default_config(1);
+        let sched = tour_schedule(100, &[0, 1, 2]);
+        let t = g.generate(&sched);
+        // 3 steady + 2 transitions
+        assert_eq!(t.segments.len(), 5);
+        assert_eq!(t.len(), 300 + 2 * g.config.transition_len);
+        assert_eq!(t.steady_classes(), vec![0, 1, 2]);
+        assert_eq!(t.num_transitions(), 2);
+    }
+
+    #[test]
+    fn steady_means_match_signature() {
+        let mut g = Generator::with_default_config(2);
+        let t = g.generate(&[ScheduleEntry { mix: Mix::Pure(3), duration: 2000 }]);
+        let cat = catalog();
+        for i in 0..NUM_FEATURES {
+            let xs: Vec<f64> =
+                t.samples.iter().map(|s| s.features[i]).collect();
+            let m = stats::mean(&xs);
+            // clamping at zero biases low-mean features slightly upward
+            assert!(
+                (m - cat[3].base[i]).abs() < cat[3].noise[i] * 0.5 + 0.5,
+                "feature {i}: {m} vs {}",
+                cat[3].base[i]
+            );
+        }
+    }
+
+    #[test]
+    fn transitions_are_monotone_blends() {
+        let mut cfg = GenConfig::default();
+        cfg.transition_len = 50;
+        let mut g = Generator::new(3, cfg);
+        // classes 0 (cpu 78) -> 1 (cpu 30): cpu_user should fall
+        let t = g.generate(&tour_schedule(50, &[0, 1]));
+        let trans: Vec<&Sample> = t
+            .samples
+            .iter()
+            .filter(|s| s.truth.is_transition())
+            .collect();
+        assert_eq!(trans.len(), 50);
+        let first10: f64 =
+            trans[..10].iter().map(|s| s.features[0]).sum::<f64>() / 10.0;
+        let last10: f64 = trans[40..].iter().map(|s| s.features[0]).sum::<f64>()
+            / 10.0;
+        assert!(first10 > last10 + 20.0, "{first10} -> {last10}");
+    }
+
+    #[test]
+    fn drift_moves_class_mean() {
+        let mut cfg = GenConfig::default();
+        let mut rate = [0.0; NUM_FEATURES];
+        rate[0] = 0.01; // +0.01/sample on cpu_user for class 0
+        cfg.drift_per_sample = vec![(0, rate)];
+        let mut g = Generator::new(4, cfg);
+        let t = g.generate(&[ScheduleEntry { mix: Mix::Pure(0), duration: 4000 }]);
+        let early: f64 = t.samples[..500]
+            .iter()
+            .map(|s| s.features[0])
+            .sum::<f64>()
+            / 500.0;
+        let late: f64 = t.samples[3500..]
+            .iter()
+            .map(|s| s.features[0])
+            .sum::<f64>()
+            / 500.0;
+        assert!(late - early > 25.0, "{early} -> {late}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mk = || {
+            let mut g = Generator::with_default_config(7);
+            g.generate(&tour_schedule(20, &[0, 5]))
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.features, y.features);
+        }
+    }
+
+    #[test]
+    fn hybrid_schedule_produces_hybrid_truth_ids() {
+        let mut rng = Rng::new(9);
+        let sched = multi_user_schedule(&mut rng, 40, 30, &[0, 1, 2, 3], 0.5);
+        let n_hybrid = sched
+            .iter()
+            .filter(|e| matches!(e.mix, Mix::Hybrid(..)))
+            .count();
+        assert!(n_hybrid > 5 && n_hybrid < 35, "{n_hybrid}");
+        let mut g = Generator::with_default_config(10);
+        let t = g.generate(&sched);
+        let max_pure = num_pure_as_u32();
+        assert!(t.steady_classes().iter().any(|&c| c >= max_pure));
+    }
+
+    fn num_pure_as_u32() -> u32 {
+        catalog().len() as u32
+    }
+
+    #[test]
+    fn random_schedule_no_self_transitions() {
+        let mut rng = Rng::new(11);
+        let sched = random_schedule(&mut rng, 100, 30, &[0, 1, 2]);
+        for pair in sched.windows(2) {
+            assert_ne!(
+                pair[0].mix, pair[1].mix,
+                "self-transition in schedule"
+            );
+        }
+    }
+}

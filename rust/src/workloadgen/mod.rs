@@ -1,0 +1,20 @@
+//! Workload generator substrate: parametric big-data workload classes,
+//! trace synthesis with ground truth, and scenario builders.
+//!
+//! Stands in for the paper's physical Spark/Hadoop cluster running
+//! HiBench-style benchmarks (see DESIGN.md §2 for the substitution
+//! argument): the KERMIT algorithms only ever observe per-window feature
+//! vectors, and this module reproduces their statistical structure —
+//! steady plateaus, abrupt transitions, recurrence, hybrid tenancy,
+//! drift.
+
+pub mod archetypes;
+pub mod generator;
+pub mod trace;
+
+pub use archetypes::{catalog, num_pure_classes, ClassId, Mix, WorkloadClass};
+pub use generator::{
+    daily_schedule, multi_user_schedule, random_schedule, tour_schedule,
+    GenConfig, Generator, ScheduleEntry,
+};
+pub use trace::{Sample, Segment, Trace, TruthTag};

@@ -1,0 +1,141 @@
+//! Trace model: the raw metric stream a simulated cluster emits, plus
+//! generator-side ground truth (which windows belong to which workload,
+//! where the transitions are). Ground truth plays the role of the paper's
+//! "human specialist interpretation of Hadoop/Spark logs" when scoring
+//! Awt/Purity/accuracy — it is never visible to the KERMIT algorithms.
+
+use crate::features::FeatureVec;
+
+/// One raw metrics sample (per agent scrape tick).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Simulated time in seconds.
+    pub time: f64,
+    pub features: FeatureVec,
+    /// Ground truth: the workload class generating this sample, or None
+    /// during a transition ramp.
+    pub truth: TruthTag,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TruthTag {
+    /// Steady-state processing of workload class `id`.
+    Steady(u32),
+    /// Inside a transition ramp between `from` and `to`.
+    Transition { from: u32, to: u32 },
+    /// Cluster idle (background noise only).
+    Idle,
+}
+
+impl TruthTag {
+    pub fn steady_id(&self) -> Option<u32> {
+        match self {
+            TruthTag::Steady(id) => Some(*id),
+            _ => None,
+        }
+    }
+
+    pub fn is_transition(&self) -> bool {
+        matches!(self, TruthTag::Transition { .. })
+    }
+}
+
+/// A generated trace: samples plus segment-level ground truth.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub samples: Vec<Sample>,
+    pub segments: Vec<Segment>,
+}
+
+/// Ground-truth segment: [start, end) sample range of one steady state or
+/// transition.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub start: usize,
+    pub end: usize,
+    pub tag: TruthTag,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Distinct steady-state class ids present, sorted.
+    pub fn steady_classes(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = self
+            .segments
+            .iter()
+            .filter_map(|s| s.tag.steady_id())
+            .collect();
+        ids.sort();
+        ids.dedup();
+        ids
+    }
+
+    /// Number of transition segments.
+    pub fn num_transitions(&self) -> usize {
+        self.segments.iter().filter(|s| s.tag.is_transition()).count()
+    }
+
+    /// Sanity: segments tile the sample range exactly.
+    pub fn check_invariants(&self) {
+        let mut pos = 0;
+        for s in &self.segments {
+            assert_eq!(s.start, pos, "segment gap at {pos}");
+            assert!(s.end > s.start, "empty segment at {pos}");
+            pos = s.end;
+        }
+        assert_eq!(pos, self.samples.len(), "segments don't cover trace");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::zero_features;
+
+    fn sample(t: f64, tag: TruthTag) -> Sample {
+        Sample { time: t, features: zero_features(), truth: tag }
+    }
+
+    #[test]
+    fn invariants_hold_for_tiled_segments() {
+        let tr = Trace {
+            samples: (0..10)
+                .map(|i| sample(i as f64, TruthTag::Steady(0)))
+                .collect(),
+            segments: vec![
+                Segment { start: 0, end: 6, tag: TruthTag::Steady(0) },
+                Segment {
+                    start: 6,
+                    end: 10,
+                    tag: TruthTag::Transition { from: 0, to: 1 },
+                },
+            ],
+        };
+        tr.check_invariants();
+        assert_eq!(tr.steady_classes(), vec![0]);
+        assert_eq!(tr.num_transitions(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "segments don't cover")]
+    fn invariants_catch_gap() {
+        let tr = Trace {
+            samples: (0..10)
+                .map(|i| sample(i as f64, TruthTag::Idle))
+                .collect(),
+            segments: vec![Segment {
+                start: 0,
+                end: 5,
+                tag: TruthTag::Idle,
+            }],
+        };
+        tr.check_invariants();
+    }
+}

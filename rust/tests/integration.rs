@@ -1,0 +1,308 @@
+//! Cross-module integration tests: monitor → discovery → training →
+//! on-line classification; plug-in Algorithm 1 against the live DB;
+//! knowledge-zone persistence through a simulated restart; artifact
+//! runtime vs native math equivalence.
+
+use kermit::clustering::NativeDistance;
+use kermit::coordinator::{Coordinator, CoordinatorConfig};
+use kermit::knowledge::{KnowledgeZones, WorkloadDb};
+use kermit::ml::Classifier;
+use kermit::monitor::{aggregate_trace, MonitorConfig};
+use kermit::offline::{discover, train, DiscoveryConfig, TrainingConfig};
+use kermit::online::{ChoiceKind, UNKNOWN};
+use kermit::simcluster::JobSpec;
+use kermit::util::rng::Rng;
+use kermit::workloadgen::{tour_schedule, Generator, Mix};
+
+#[test]
+fn full_pipeline_monitor_to_classifier() {
+    // generate -> monitor -> discover -> train -> classify a NEW trace
+    let mut g = Generator::with_default_config(100);
+    let trace = g.generate(&tour_schedule(400, &[1, 4, 6]));
+    let mcfg = MonitorConfig { window_size: 30 };
+    let windows = aggregate_trace(&trace, &mcfg);
+
+    let mut db = WorkloadDb::new();
+    let report = discover(
+        &windows,
+        &mut db,
+        &DiscoveryConfig::default(),
+        &NativeDistance,
+    );
+    assert_eq!(report.new_labels().len(), 3);
+
+    let mut rng = Rng::new(101);
+    let models = train(
+        &windows,
+        &report,
+        &mut db,
+        &TrainingConfig::default(),
+        &mut rng,
+    );
+
+    // fresh trace, same classes: classification must be internally
+    // consistent (same generator class -> same predicted label)
+    let mut g2 = Generator::with_default_config(999);
+    let t2 = g2.generate(&tour_schedule(200, &[1, 4, 6]));
+    let w2 = aggregate_trace(&t2, &mcfg);
+    let mut truth_to_pred: std::collections::BTreeMap<u32, Vec<u32>> =
+        Default::default();
+    for w in &w2 {
+        if let Some(t) = w.truth {
+            let aw = kermit::features::AnalyticWindow::from_observation(w);
+            truth_to_pred
+                .entry(t)
+                .or_default()
+                .push(models.workload_forest.predict(&aw.features));
+        }
+    }
+    let mut seen_labels = std::collections::BTreeSet::new();
+    for (t, preds) in &truth_to_pred {
+        let first = preds[0];
+        let agree =
+            preds.iter().filter(|&&p| p == first).count() as f64
+                / preds.len() as f64;
+        assert!(agree > 0.9, "class {t}: only {agree} agreement");
+        assert!(seen_labels.insert(first), "two classes share label {first}");
+    }
+}
+
+#[test]
+fn plugin_algorithm1_full_state_machine() {
+    // UNKNOWN -> default; discovered -> global search -> cache hit;
+    // drift -> local search -> cache hit again
+    use kermit::knowledge::Characterization;
+    use kermit::online::{ContextStream, KermitPlugin};
+    use kermit::simcluster::perfmodel::job_duration;
+    use std::sync::{Arc, Mutex};
+
+    let db = Arc::new(Mutex::new(WorkloadDb::new()));
+    let ctx = Arc::new(Mutex::new(ContextStream::new(8)));
+    let mut plugin = KermitPlugin::new(db.clone(), ctx);
+    plugin.explorer_config.global_budget = 30;
+    plugin.explorer_config.local_budget = 10;
+
+    // phase 1: unknown
+    let (c, kind) = plugin.choose_config_for_label(UNKNOWN);
+    assert_eq!(kind, ChoiceKind::Default);
+    assert_eq!(c, kermit::simcluster::default_config_index());
+
+    // phase 2: discovery inserts the workload
+    let label = {
+        let rows: Vec<Vec<f64>> = vec![vec![5.0; 8], vec![5.2; 8]];
+        let ch = Characterization::from_rows(&rows);
+        let cen = ch.mean_vector();
+        db.lock().unwrap().insert_new(ch, cen, 2, false)
+    };
+
+    // phase 3: global search until convergence
+    let mut probes = 0;
+    loop {
+        let (ci, kind) = plugin.choose_config_for_label(label);
+        match kind {
+            ChoiceKind::GlobalProbe => {
+                probes += 1;
+                assert!(probes <= 30);
+                plugin
+                    .record_measurement(label, job_duration(4, &ci.to_config()));
+            }
+            ChoiceKind::CacheHit => break,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(db.lock().unwrap().get(label).unwrap().optimal_config_found);
+
+    // phase 4: drift -> local search from the stored config
+    {
+        let mut dbl = db.lock().unwrap();
+        let rows: Vec<Vec<f64>> = vec![vec![9.0; 8], vec![9.2; 8]];
+        let ch = Characterization::from_rows(&rows);
+        let cen = ch.mean_vector();
+        dbl.mark_drifting(label, ch, cen, 2);
+    }
+    let (_, kind) = plugin.choose_config_for_label(label);
+    assert_eq!(kind, ChoiceKind::LocalProbe);
+    // drive local search to completion
+    let mut steps = 0;
+    plugin.record_measurement(label, 50.0);
+    loop {
+        let (ci, kind) = plugin.choose_config_for_label(label);
+        match kind {
+            ChoiceKind::LocalProbe => {
+                steps += 1;
+                assert!(steps <= 12);
+                plugin
+                    .record_measurement(label, job_duration(4, &ci.to_config()));
+            }
+            ChoiceKind::CacheHit => break,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let dbl = db.lock().unwrap();
+    let e = dbl.get(label).unwrap();
+    assert!(e.optimal_config_found && !e.is_drifting);
+}
+
+#[test]
+fn knowledge_survives_restart() {
+    let dir = std::env::temp_dir().join("kermit_it_restart");
+    std::fs::remove_dir_all(&dir).ok();
+    let zones = KnowledgeZones::create(&dir).unwrap();
+
+    // session 1: discover and persist
+    let mut g = Generator::with_default_config(7);
+    let trace = g.generate(&tour_schedule(300, &[2, 8]));
+    let windows =
+        aggregate_trace(&trace, &MonitorConfig { window_size: 30 });
+    zones.append_windows(&windows).unwrap();
+    let mut db = WorkloadDb::new();
+    let r1 = discover(
+        &windows,
+        &mut db,
+        &DiscoveryConfig::default(),
+        &NativeDistance,
+    );
+    assert_eq!(r1.new_labels().len(), 2);
+    db.save(&zones.workload_db_path()).unwrap();
+
+    // session 2 (restart): reload zones + db, re-discover same classes
+    let db2_windows = zones.read_windows().unwrap();
+    assert_eq!(db2_windows.len(), windows.len());
+    let mut db2 = WorkloadDb::load(&zones.workload_db_path()).unwrap();
+    let t2 = g.generate(&tour_schedule(300, &[8, 2]));
+    let w2 = aggregate_trace(&t2, &MonitorConfig { window_size: 30 });
+    let r2 = discover(
+        &w2,
+        &mut db2,
+        &DiscoveryConfig::default(),
+        &NativeDistance,
+    );
+    assert!(
+        r2.new_labels().is_empty(),
+        "restart lost workload identity: {:?}",
+        r2.outcomes
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coordinator_closed_loop_converges() {
+    let mut cfg = CoordinatorConfig::default();
+    cfg.offline_interval_windows = 12;
+    cfg.engine.duration_noise = 0.01;
+    let mut coord = Coordinator::new(cfg);
+    coord.plugin.explorer_config.global_budget = 20;
+    let jobs: Vec<JobSpec> = (0..80)
+        .map(|i| JobSpec { mix: Mix::Pure([0u32, 5][i % 2]) })
+        .collect();
+    let report = coord.run_schedule(&jobs);
+    // both classes learned, searches finished, cache hits dominate tail
+    assert!(report.plugin_stats.searches_completed >= 2);
+    let tail_hits = report.jobs[60..]
+        .iter()
+        .filter(|j| j.choice == ChoiceKind::CacheHit)
+        .count();
+    assert!(tail_hits >= 15, "only {tail_hits} cache hits in tail");
+    assert!(report.classification_consistency() > 0.9);
+}
+
+#[test]
+fn drift_recovery_in_closed_loop() {
+    // converge on a class, inject signature drift mid-run (the paper's
+    // §6.1 drift / §6.2 node-failure scenario), and verify the autonomic
+    // response: Algorithm 2 flags drift -> Algorithm 1 runs a LOCAL
+    // search from the stored config -> system returns to cache hits.
+    let mut cfg = CoordinatorConfig::default();
+    cfg.offline_interval_windows = 12;
+    cfg.engine.duration_noise = 0.01;
+    // drift threshold low enough that the injected shift trips it
+    cfg.discovery.drift_epsilon = 6.0;
+    let mut coord = Coordinator::new(cfg);
+    coord.plugin.explorer_config.global_budget = 20;
+    coord.plugin.explorer_config.local_budget = 8;
+
+    // phase 1: converge on classes 0 and 5
+    let phase1: Vec<JobSpec> = (0..50)
+        .map(|i| JobSpec { mix: Mix::Pure([0u32, 5][i % 2]) })
+        .collect();
+    let r1 = coord.run_schedule(&phase1);
+    assert!(r1.plugin_stats.searches_completed >= 2, "{:?}", r1.plugin_stats);
+
+    // phase 2: drift class 0's signature — far enough that the drifted
+    // cluster separates cleanly from the stored one (beyond DBSCAN eps
+    // and ε) yet still inside the match radius
+    let mut shift = [0.0; kermit::features::NUM_FEATURES];
+    shift[0] = 13.0;
+    shift[3] = 11.0;
+    shift[5] = 8.0;
+    coord.inject_drift(0, shift);
+    let phase2: Vec<JobSpec> = (0..40)
+        .map(|i| JobSpec { mix: Mix::Pure([0u32, 5][i % 2]) })
+        .collect();
+    let r2 = coord.run_schedule(&phase2);
+
+    // the local (drift) search must have run...
+    assert!(
+        r2.plugin_stats.local_probes > 0,
+        "no local search after drift: {:?}",
+        r2.plugin_stats
+    );
+    // ...and the system must be back to serving cached optima by the end
+    let tail_hits = r2.jobs[30..]
+        .iter()
+        .filter(|j| j.choice == ChoiceKind::CacheHit)
+        .count();
+    assert!(tail_hits >= 6, "only {tail_hits} cache hits after recovery");
+    // and the DB entry is no longer flagged drifting
+    let db = coord.db.lock().unwrap();
+    assert!(db.entries().filter(|e| !e.synthetic).all(|e| !e.is_drifting));
+}
+
+#[test]
+fn artifact_runtime_equivalent_to_native_welch() {
+    // the welch_stats artifact and stats::welch agree end-to-end
+    let rt = match kermit::runtime::Runtime::load(std::path::Path::new(
+        "artifacts",
+    )) {
+        Ok(rt) => rt,
+        Err(_) => return, // artifacts not built; covered elsewhere
+    };
+    use kermit::runtime::{literal_f32, shapes, to_f64_vec};
+    let mut rng = Rng::new(3);
+    let (w, s, f) = (
+        shapes::WELCH_WINDOWS,
+        shapes::WELCH_SAMPLES,
+        shapes::NUM_FEATURES,
+    );
+    let xs: Vec<f64> =
+        (0..w * s * f).map(|_| rng.normal_ms(10.0, 3.0)).collect();
+    let art = rt.get("welch_stats").unwrap();
+    let lit = literal_f32(&xs, &[w as i64, s as i64, f as i64]).unwrap();
+    let out = art.run(&[lit]).unwrap();
+    let mean = to_f64_vec(&out[0]).unwrap();
+    let var = to_f64_vec(&out[1]).unwrap();
+
+    // Welch t-test via artifact moments == via native moments
+    let col = |wi: usize, fi: usize| -> Vec<f64> {
+        (0..s).map(|si| xs[wi * s * f + si * f + fi]).collect()
+    };
+    for (wa, wb, fi) in [(0usize, 1usize, 0usize), (5, 6, 3), (62, 63, 15)] {
+        let native = kermit::stats::welch_t_test(&col(wa, fi), &col(wb, fi));
+        let nf = s as f64;
+        let via_artifact = kermit::stats::welch_t_test_from_moments(
+            mean[wa * f + fi],
+            var[wa * f + fi] * nf / (nf - 1.0),
+            s,
+            mean[wb * f + fi],
+            var[wb * f + fi] * nf / (nf - 1.0),
+            s,
+        );
+        assert!(
+            (native.t - via_artifact.t).abs() < 1e-3,
+            "t: {} vs {}",
+            native.t,
+            via_artifact.t
+        );
+        assert!((native.p - via_artifact.p).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,346 @@
+//! Property-based tests (own `testkit` harness) on the coordinator-
+//! facing invariants: RM accounting, window aggregation, WorkloadDB,
+//! Explorer budgets/validity, DBSCAN label validity, JSON round-trips,
+//! metric bounds.
+
+use kermit::clustering::{dbscan, DbscanConfig, NativeDistance, NOISE};
+use kermit::explorer::{ConfigEvaluator, Explorer, ExplorerConfig};
+use kermit::features::ObservationWindow;
+use kermit::knowledge::{Characterization, WorkloadDb};
+use kermit::simcluster::config_space::ConfigIndex;
+use kermit::simcluster::{NodeSpec, ResourceManager};
+use kermit::testkit::{forall, gen};
+use kermit::util::json::Json;
+use kermit::util::rng::Rng;
+
+#[test]
+fn prop_rm_accounting_never_oversubscribes() {
+    forall(
+        1,
+        60,
+        |rng| {
+            // a random sequence of alloc/release ops
+            let ops: Vec<(bool, u32, u32)> = (0..80)
+                .map(|_| {
+                    (
+                        rng.chance(0.6),
+                        rng.range_usize(1, 9) as u32,
+                        rng.range_usize(256, 8193) as u32,
+                    )
+                })
+                .collect();
+            ops
+        },
+        |ops| {
+            let mut rm = ResourceManager::new(vec![
+                NodeSpec { cores: 8, mem_mb: 16384 },
+                NodeSpec { cores: 16, mem_mb: 8192 },
+            ]);
+            let mut live: Vec<u64> = Vec::new();
+            for &(alloc, cores, mem) in ops {
+                if alloc {
+                    if let Ok(c) = rm.allocate(cores, mem) {
+                        live.push(c.id);
+                    }
+                } else if !live.is_empty() {
+                    let id = live.remove(live.len() / 2);
+                    rm.release(id).map_err(|e| e.to_string())?;
+                }
+                rm.check_invariants(); // panics on violation
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_window_aggregation_mean_within_sample_range() {
+    forall(
+        2,
+        60,
+        |rng| {
+            let n = rng.range_usize(2, 50);
+            gen::rows(rng, n, kermit::features::NUM_FEATURES, -50.0, 50.0)
+        },
+        |rows| {
+            let samples: Vec<kermit::features::FeatureVec> = rows
+                .iter()
+                .map(|r| {
+                    let mut f = [0.0; kermit::features::NUM_FEATURES];
+                    f.copy_from_slice(r);
+                    f
+                })
+                .collect();
+            let w = ObservationWindow::aggregate(0, 0.0, &samples, None);
+            for i in 0..kermit::features::NUM_FEATURES {
+                let lo = samples.iter().map(|s| s[i]).fold(f64::MAX, f64::min);
+                let hi = samples.iter().map(|s| s[i]).fold(f64::MIN, f64::max);
+                if w.mean[i] < lo - 1e-9 || w.mean[i] > hi + 1e-9 {
+                    return Err(format!("mean[{i}] outside sample range"));
+                }
+                if w.var[i] < 0.0 {
+                    return Err(format!("negative variance[{i}]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_workload_db_labels_unique_and_persistent() {
+    forall(
+        3,
+        40,
+        |rng| {
+            let n = rng.range_usize(1, 12);
+            (0..n)
+                .map(|_| gen::rows(rng, 3, 6, 0.0, 100.0))
+                .collect::<Vec<_>>()
+        },
+        |clusters| {
+            let mut db = WorkloadDb::new();
+            let mut labels = Vec::new();
+            for rows in clusters {
+                let ch = Characterization::from_rows(rows);
+                let cen = ch.mean_vector();
+                labels.push(db.insert_new(ch, cen, rows.len(), false));
+            }
+            // unique + monotone
+            for pair in labels.windows(2) {
+                if pair[1] <= pair[0] {
+                    return Err("labels not monotone".into());
+                }
+            }
+            // json round-trip preserves everything relevant
+            let back = WorkloadDb::from_json(&db.to_json())
+                .map_err(|e| e.to_string())?;
+            if back.len() != db.len() {
+                return Err("roundtrip lost entries".into());
+            }
+            for l in &labels {
+                let (a, b) = (db.get(*l).unwrap(), back.get(*l).unwrap());
+                if a.centroid != b.centroid {
+                    return Err(format!("centroid mismatch for {l}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_explorer_respects_budget_and_returns_measured_config() {
+    forall(
+        4,
+        25,
+        |rng| {
+            // random smooth-ish surface: weighted distance from a random
+            // grid point + a second basin
+            let dims = ConfigIndex::dims();
+            let target: Vec<usize> =
+                dims.iter().map(|&d| rng.range_usize(0, d)).collect();
+            let weights = gen::vec_f64(rng, 6, 0.5, 4.0);
+            let budget = rng.range_usize(5, 80);
+            (target, weights, budget)
+        },
+        |(target, weights, budget)| {
+            struct Counting<'a> {
+                target: &'a [usize],
+                weights: &'a [f64],
+                calls: usize,
+                probed: std::collections::HashMap<ConfigIndex, f64>,
+            }
+            impl ConfigEvaluator for Counting<'_> {
+                fn measure(&mut self, c: ConfigIndex) -> f64 {
+                    self.calls += 1;
+                    let d: f64 = c
+                        .0
+                        .iter()
+                        .zip(self.target)
+                        .zip(self.weights)
+                        .map(|((&a, &t), &w)| {
+                            w * (a as f64 - t as f64).powi(2)
+                        })
+                        .sum::<f64>()
+                        + 1.0;
+                    self.probed.insert(c, d);
+                    d
+                }
+            }
+            let mut eval = Counting {
+                target,
+                weights,
+                calls: 0,
+                probed: Default::default(),
+            };
+            let ex = Explorer::new(ExplorerConfig {
+                global_budget: *budget,
+                local_budget: 8,
+                min_improvement: 0.0,
+            });
+            let r = ex.global_search(&mut eval);
+            if eval.calls > *budget {
+                return Err(format!(
+                    "{} probes > budget {budget}",
+                    eval.calls
+                ));
+            }
+            if r.probes != eval.calls {
+                return Err("probe count mismatch".into());
+            }
+            // the returned best must be a config that was actually
+            // measured, with its measured value
+            match eval.probed.get(&r.best) {
+                Some(&v) if (v - r.best_duration).abs() < 1e-9 => Ok(()),
+                Some(_) => Err("best_duration != measured value".into()),
+                None => Err("returned config never measured".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_dbscan_labels_valid_and_deterministic() {
+    forall(
+        5,
+        30,
+        |rng| {
+            let n = rng.range_usize(5, 120);
+            let w = rng.range_usize(2, 8);
+            (
+                gen::rows(rng, n, w, -20.0, 20.0),
+                rng.range_f64(0.5, 15.0),
+                rng.range_usize(2, 6),
+            )
+        },
+        |(rows, eps, min_pts)| {
+            let cfg = DbscanConfig { eps: *eps, min_pts: *min_pts };
+            let a = dbscan(rows, &cfg, &NativeDistance);
+            let b = dbscan(rows, &cfg, &NativeDistance);
+            if a.labels != b.labels {
+                return Err("nondeterministic".into());
+            }
+            // labels are NOISE or within [0, n_clusters)
+            for &l in &a.labels {
+                if l != NOISE && !(0..a.n_clusters as i32).contains(&l) {
+                    return Err(format!("invalid label {l}"));
+                }
+            }
+            // every cluster id in range is used
+            for c in 0..a.n_clusters as i32 {
+                if !a.labels.contains(&c) {
+                    return Err(format!("cluster {c} empty"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    fn arb_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.range_usize(0, 8);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            *rng.choice(&[
+                                'a', 'é', '"', '\\', '\n', '😀', ' ', 'z',
+                            ])
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.range_usize(0, 4))
+                    .map(|_| arb_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.range_usize(0, 4) {
+                    o.set(&format!("k{i}"), arb_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    forall(
+        6,
+        200,
+        |rng| arb_json(rng, 3),
+        |j| {
+            let enc = j.encode();
+            let back = Json::parse(&enc).map_err(|e| e.to_string())?;
+            if &back != j {
+                return Err(format!("roundtrip mismatch: {enc}"));
+            }
+            // pretty round-trips too
+            let back2 = Json::parse(&j.encode_pretty())
+                .map_err(|e| e.to_string())?;
+            if &back2 != j {
+                return Err("pretty roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_clustering_metrics_bounded() {
+    forall(
+        7,
+        100,
+        |rng| {
+            let n = rng.range_usize(1, 60);
+            (
+                gen::labels(rng, n, 5),
+                (0..n)
+                    .map(|_| rng.below(6) as i32 - 1) // -1..4 incl. noise
+                    .collect::<Vec<i32>>(),
+            )
+        },
+        |(truth, cluster)| {
+            let p = kermit::clustering::purity(truth, cluster);
+            let a = kermit::clustering::awt(truth, cluster);
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("purity {p} out of bounds"));
+            }
+            if !(0.0..=1.0).contains(&a) {
+                return Err(format!("awt {a} out of bounds"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_summary_percentiles_ordered() {
+    forall(
+        8,
+        100,
+        |rng| {
+            let n = rng.range_usize(1, 200);
+            gen::vec_f64(rng, n, -1e3, 1e3)
+        },
+        |xs| {
+            let s = kermit::stats::Summary::of(xs);
+            if !(s.min <= s.p75 && s.p75 <= s.p90 && s.p90 <= s.max) {
+                return Err(format!("percentiles out of order: {s:?}"));
+            }
+            if s.mean < s.min - 1e-9 || s.mean > s.max + 1e-9 {
+                return Err("mean outside [min,max]".into());
+            }
+            if s.std < 0.0 {
+                return Err("negative std".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -54,7 +54,7 @@ fn main() {
             });
             println!(
                 "dbscan on {} windows: native {} | artifact {}",
-                rows_data.len(),
+                rows_data.n_rows(),
                 tn.per_iter_str(),
                 ta.per_iter_str()
             );

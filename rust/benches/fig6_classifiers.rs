@@ -34,8 +34,8 @@ fn main() {
             mlp.fit(&data.train, 30, 0.05, 1).unwrap();
             let preds: Vec<u32> = data
                 .test
-                .rows
-                .iter()
+                .x()
+                .iter_rows()
                 .map(|r| mlp.classify(r))
                 .collect();
             let acc = accuracy(&data.test.labels, &preds);
@@ -50,7 +50,7 @@ fn main() {
     let mut rng = Rng::new(7);
     let forest =
         RandomForest::fit(&data.train, ForestConfig::default(), &mut rng);
-    let probe = data.test.rows[0].clone();
+    let probe = data.test.row(0).to_vec();
     let timing = bench(10, 100, || {
         std::hint::black_box(forest.predict(&probe));
     });

@@ -1,16 +1,23 @@
 //! Hot-path micro-benchmarks (§Perf): the on-line pipeline stages that
 //! must never become the bottleneck — window aggregation, change
-//! detection, classification, context publication — plus the PJRT
-//! execution costs of each artifact.
+//! detection, classification, context publication — plus the contiguous
+//! `Matrix` kernels behind Fig-10 discovery and the PJRT execution costs
+//! of each artifact.
+//!
+//! Writes `BENCH_hotpath.json` (stage -> median_ns, plus the rendered
+//! table) so the perf trajectory is machine-trackable across PRs.
 
 use kermit::benchkit::{bench, fmt_ns, Table};
+use kermit::clustering::{dbscan, kmeans::kmeans, DbscanConfig, NativeDistance};
+use kermit::clustering::DistanceProvider;
 use kermit::experiments::fig6;
 use kermit::features::AnalyticWindow;
+use kermit::linalg::{sq_dist, Matrix};
 use kermit::ml::forest::{ForestConfig, RandomForest};
 use kermit::ml::Classifier;
 use kermit::monitor::{aggregate_samples, MonitorConfig};
-use kermit::online::{ContextStream, OnlinePipeline};
 use kermit::online::classifier::ForestWindowClassifier;
+use kermit::online::{ContextStream, OnlinePipeline};
 use kermit::runtime::{literal_f32, shapes, Runtime};
 use kermit::util::rng::Rng;
 use kermit::workloadgen::{tour_schedule, Generator};
@@ -28,14 +35,17 @@ fn main() {
         std::hint::black_box(aggregate_samples(&trace.samples, &mcfg));
     });
 
-    t.row(&[
-        "aggregate 6k samples -> 200 windows".into(),
-        tm.per_iter_str(),
-        format!(
-            "{:.1}M samples/s",
-            trace.len() as f64 / (tm.median_ns / 1e9) / 1e6
-        ),
-    ]);
+    t.timed_row(
+        &[
+            "aggregate 6k samples -> 200 windows".into(),
+            tm.per_iter_str(),
+            format!(
+                "{:.1}M samples/s",
+                trace.len() as f64 / (tm.median_ns / 1e9) / 1e6
+            ),
+        ],
+        tm,
+    );
 
     // --- full online pipeline per window (detector+forest+predictor)
     let data = fig6::data(42);
@@ -54,22 +64,92 @@ fn main() {
         std::hint::black_box(pipe.observe(&windows[i % windows.len()]));
         i += 1;
     });
-    t.row(&[
-        "online pipeline observe(window)".into(),
-        tp.per_iter_str(),
-        format!("{:.0}k windows/s", 1e9 / tp.median_ns / 1e3),
-    ]);
+    t.timed_row(
+        &[
+            "online pipeline observe(window)".into(),
+            tp.per_iter_str(),
+            format!("{:.0}k windows/s", 1e9 / tp.median_ns / 1e3),
+        ],
+        tp,
+    );
 
     // --- forest inference alone
     let probe = AnalyticWindow::from_observation(&windows[0]).features;
     let tf = bench(50, 2000, || {
         std::hint::black_box(forest.predict(&probe));
     });
-    t.row(&[
-        "random forest predict".into(),
-        tf.per_iter_str(),
-        format!("{:.0}k preds/s", 1e9 / tf.median_ns / 1e3),
-    ]);
+    t.timed_row(
+        &[
+            "random forest predict".into(),
+            tf.per_iter_str(),
+            format!("{:.0}k preds/s", 1e9 / tf.median_ns / 1e3),
+        ],
+        tf,
+    );
+
+    // --- contiguous Matrix kernels (Fig-10 discovery path)
+    let mut krng = Rng::new(3);
+    let disc = {
+        let mut m = Matrix::with_width(shapes::ANALYTIC_FEATURES);
+        let mut buf = vec![0.0; shapes::ANALYTIC_FEATURES];
+        for r in 0..600 {
+            for (j, b) in buf.iter_mut().enumerate() {
+                *b = ((r % 6) * 10) as f64
+                    + krng.normal() * 0.5
+                    + j as f64 * 0.01;
+            }
+            m.push_row(&buf);
+        }
+        m
+    };
+    let (ra, rb) = (disc.row(0).to_vec(), disc.row(300).to_vec());
+    let ts = bench(100, 5000, || {
+        std::hint::black_box(sq_dist(&ra, &rb));
+    });
+    t.timed_row(
+        &[
+            format!("sq_dist {}-wide row", shapes::ANALYTIC_FEATURES),
+            ts.per_iter_str(),
+            format!("{:.0}M dists/s", 1e9 / ts.median_ns / 1e6),
+        ],
+        ts,
+    );
+
+    let td = bench(2, 10, || {
+        std::hint::black_box(NativeDistance.pairwise_sq(&disc));
+    });
+    t.timed_row(
+        &[
+            "pairwise_sq 600x32 (native)".into(),
+            td.per_iter_str(),
+            format!(
+                "{:.1}M pairs/s",
+                (600.0 * 600.0) / (td.median_ns / 1e9) / 1e6
+            ),
+        ],
+        td,
+    );
+
+    let tdb = bench(2, 10, || {
+        std::hint::black_box(dbscan(
+            &disc,
+            &DbscanConfig { eps: 10.0, min_pts: 4 },
+            &NativeDistance,
+        ));
+    });
+    t.timed_row(
+        &["dbscan 600 windows".into(), tdb.per_iter_str(), "-".into()],
+        tdb,
+    );
+
+    let mut kmrng = Rng::new(9);
+    let tk = bench(2, 10, || {
+        std::hint::black_box(kmeans(&disc, 6, 50, &mut kmrng));
+    });
+    t.timed_row(
+        &["kmeans k=6 600 windows".into(), tk.per_iter_str(), "-".into()],
+        tk,
+    );
 
     t.print();
 
@@ -92,7 +172,10 @@ fn main() {
                     art.run(&[lx.clone(), ly.clone()]).unwrap(),
                 );
             });
-            t2.row(&["pairwise_dist 256x256".into(), td.per_iter_str()]);
+            t2.timed_row(
+                &["pairwise_dist 256x256".into(), td.per_iter_str()],
+                td,
+            );
 
             // welch_stats
             let (w, s, nf) = (
@@ -108,13 +191,25 @@ fn main() {
             let tw = bench(3, 20, || {
                 std::hint::black_box(art.run(&[lw.clone()]).unwrap());
             });
-            t2.row(&["welch_stats 64 windows".into(), tw.per_iter_str()]);
+            t2.timed_row(
+                &["welch_stats 64 windows".into(), tw.per_iter_str()],
+                tw,
+            );
             t2.print();
             println!(
                 "\nper-window amortized welch via artifact: {}",
                 fmt_ns(tw.median_ns / w as f64)
             );
+            // fold the artifact numbers into the same JSON
+            t.metric("pjrt pairwise_dist 256x256", td.median_ns);
+            t.metric("pjrt welch_stats 64 windows", tw.median_ns);
         }
         Err(e) => println!("(artifacts skipped: {e})"),
+    }
+
+    let out = std::path::Path::new("BENCH_hotpath.json");
+    match t.write_json(out) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => println!("\nfailed to write {}: {e}", out.display()),
     }
 }

@@ -13,6 +13,7 @@ use kermit::benchkit::pct;
 use kermit::clustering::{dbscan, DbscanConfig};
 use kermit::features::AnalyticWindow;
 use kermit::knowledge::{Characterization, WorkloadDb};
+use kermit::linalg::Matrix;
 use kermit::ml::Dataset;
 use kermit::online::classifier::WindowClassifier;
 use kermit::online::predictor::sequence_accuracy;
@@ -22,7 +23,7 @@ use kermit::runtime::nn::{
 use kermit::runtime::Runtime;
 use kermit::workloadgen::{tour_schedule, Generator};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> kermit::util::error::Result<()> {
     let rt = Runtime::load(&Runtime::default_dir())?;
     println!("artifacts loaded: {:?}\n", rt.names());
 
@@ -41,11 +42,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 2. pairwise_dist DBSCAN discovery ---------------------------
-    let rows: Vec<Vec<f64>> = windows
-        .iter()
-        .filter(|w| w.truth.is_some())
-        .map(|w| AnalyticWindow::from_observation(w).features)
-        .collect();
+    let rows = Matrix::from_rows(
+        &windows
+            .iter()
+            .filter(|w| w.truth.is_some())
+            .map(|w| AnalyticWindow::from_observation(w).features)
+            .collect::<Vec<Vec<f64>>>(),
+    );
     let truths: Vec<u32> = windows
         .iter()
         .filter_map(|w| w.truth)
@@ -64,13 +67,12 @@ fn main() -> anyhow::Result<()> {
     let mut train = Dataset::new();
     for c in 0..clusters.n_clusters as i32 {
         let members = clusters.members(c);
-        let member_rows: Vec<Vec<f64>> =
-            members.iter().map(|&i| rows[i].clone()).collect();
+        let member_rows = rows.gather(&members);
         let ch = Characterization::from_rows(&member_rows);
         let cen = ch.mean_vector();
         let label = db.insert_new(ch, cen, members.len(), false);
-        for r in &member_rows {
-            train.push(r.clone(), label);
+        for r in member_rows.iter_rows() {
+            train.push(r, label);
         }
     }
 

@@ -14,7 +14,7 @@ use kermit::workloadgen::{
     tour_schedule, GenConfig, Generator, Mix, ScheduleEntry,
 };
 
-fn main() -> anyhow::Result<()> {
+fn main() -> kermit::util::error::Result<()> {
     let zones_dir = std::env::temp_dir().join("kermit_discovery_demo");
     std::fs::remove_dir_all(&zones_dir).ok();
     let zones = KnowledgeZones::create(&zones_dir)?;

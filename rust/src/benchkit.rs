@@ -56,10 +56,17 @@ pub fn bench<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Timing {
     }
 }
 
-/// Aligned table printer for figure/table reproduction output.
+/// Aligned table printer for figure/table reproduction output, with an
+/// optional machine-readable side channel: rows recorded through
+/// [`Table::timed_row`] (or [`Table::metric`]) carry their median
+/// latency in nanoseconds, and [`Table::write_json`] dumps the whole
+/// table plus the `stage -> median_ns` map so the perf trajectory can
+/// be tracked across PRs.
 pub struct Table {
     headers: Vec<String>,
     rows: Vec<Vec<String>>,
+    /// (stage, median_ns) points recorded alongside the display rows.
+    metrics: Vec<(String, f64)>,
 }
 
 impl Table {
@@ -67,12 +74,59 @@ impl Table {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
+    }
+
+    /// Record a numeric data point for [`Table::write_json`] without
+    /// adding a display row.
+    pub fn metric(&mut self, stage: &str, median_ns: f64) {
+        self.metrics.push((stage.to_string(), median_ns));
+    }
+
+    /// Add a display row whose first cell names the stage, recording the
+    /// timing's median alongside for the JSON output.
+    pub fn timed_row(&mut self, cells: &[String], t: Timing) {
+        assert!(!cells.is_empty());
+        self.metric(&cells[0], t.median_ns);
+        self.row(cells);
+    }
+
+    /// Write the table (headers + rows) and the recorded
+    /// `stage -> median_ns` map as pretty-printed JSON.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        let mut root = Json::obj();
+        root.set(
+            "headers",
+            Json::Arr(
+                self.headers.iter().map(|h| Json::Str(h.clone())).collect(),
+            ),
+        )
+        .set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        Json::Arr(
+                            r.iter().map(|c| Json::Str(c.clone())).collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        let mut m = Json::obj();
+        for (stage, ns) in &self.metrics {
+            m.set(stage, Json::Num(*ns));
+        }
+        root.set("median_ns", m);
+        std::fs::write(path, root.encode_pretty())
     }
 
     pub fn print(&self) {
@@ -132,5 +186,34 @@ mod tests {
         let mut t = Table::new(&["a", "bb"]);
         t.row(&["1".into(), "2".into()]);
         t.print(); // just must not panic
+    }
+
+    #[test]
+    fn write_json_emits_stage_medians() {
+        use crate::util::json::Json;
+        let mut t = Table::new(&["stage", "latency"]);
+        t.timed_row(
+            &["observe".into(), "1.00 µs".into()],
+            Timing { median_ns: 1000.0, mad_ns: 10.0, samples: 5 },
+        );
+        t.metric("extra_stage", 42.0);
+        let path = std::env::temp_dir().join("kermit_benchkit_json_test.json");
+        t.write_json(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            j.get("median_ns").unwrap().get("observe").unwrap().as_f64().unwrap(),
+            1000.0
+        );
+        assert_eq!(
+            j.get("median_ns")
+                .unwrap()
+                .get("extra_stage")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            42.0
+        );
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -4,6 +4,7 @@
 //! fine for discovery-batch sizes (hundreds of windows).
 
 use super::DistanceProvider;
+use crate::linalg::Matrix;
 
 #[derive(Debug, Clone)]
 pub struct AggloResult {
@@ -14,11 +15,11 @@ pub struct AggloResult {
 /// Average-linkage agglomerative clustering; merging stops when the
 /// closest pair of clusters is farther than `cut_distance` apart.
 pub fn agglomerative(
-    rows: &[Vec<f64>],
+    rows: &Matrix,
     cut_distance: f64,
     dist: &dyn DistanceProvider,
 ) -> AggloResult {
-    let n = rows.len();
+    let n = rows.n_rows();
     if n == 0 {
         return AggloResult { labels: vec![], n_clusters: 0 };
     }
@@ -101,10 +102,10 @@ mod tests {
     #[test]
     fn merges_tight_blobs_keeps_far_ones_apart() {
         let mut rng = Rng::new(0);
-        let mut rows = vec![];
+        let mut rows = Matrix::with_width(2);
         for &(cx, cy) in &[(0.0, 0.0), (20.0, 0.0), (0.0, 20.0)] {
             for _ in 0..20 {
-                rows.push(vec![rng.normal_ms(cx, 0.4), rng.normal_ms(cy, 0.4)]);
+                rows.push_row(&[rng.normal_ms(cx, 0.4), rng.normal_ms(cy, 0.4)]);
             }
         }
         let r = agglomerative(&rows, 6.0, &NativeDistance);
@@ -117,21 +118,21 @@ mod tests {
 
     #[test]
     fn cut_zero_keeps_singletons() {
-        let rows = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let rows = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
         let r = agglomerative(&rows, 0.5, &NativeDistance);
         assert_eq!(r.n_clusters, 3);
     }
 
     #[test]
     fn cut_infinite_merges_all() {
-        let rows = vec![vec![0.0], vec![100.0], vec![200.0]];
+        let rows = Matrix::from_rows(&[vec![0.0], vec![100.0], vec![200.0]]);
         let r = agglomerative(&rows, f64::INFINITY, &NativeDistance);
         assert_eq!(r.n_clusters, 1);
     }
 
     #[test]
     fn empty_input() {
-        let r = agglomerative(&[], 1.0, &NativeDistance);
+        let r = agglomerative(&Matrix::new(), 1.0, &NativeDistance);
         assert_eq!(r.n_clusters, 0);
     }
 }

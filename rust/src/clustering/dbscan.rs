@@ -7,6 +7,7 @@
 //! L1 pallas kernel) — see `offline::discovery`.
 
 use super::DistanceProvider;
+use crate::linalg::Matrix;
 
 /// Cluster id assigned to noise points.
 pub const NOISE: i32 = -1;
@@ -51,11 +52,11 @@ impl DbscanResult {
 
 /// Classic DBSCAN (Ester et al.) with BFS cluster expansion.
 pub fn dbscan(
-    rows: &[Vec<f64>],
+    rows: &Matrix,
     config: &DbscanConfig,
     dist: &dyn DistanceProvider,
 ) -> DbscanResult {
-    let n = rows.len();
+    let n = rows.n_rows();
     if n == 0 {
         return DbscanResult { labels: vec![], n_clusters: 0 };
     }
@@ -113,18 +114,19 @@ mod tests {
     use crate::clustering::NativeDistance;
     use crate::util::rng::Rng;
 
-    fn blob(rng: &mut Rng, cx: f64, cy: f64, n: usize, s: f64) -> Vec<Vec<f64>> {
-        (0..n)
-            .map(|_| vec![rng.normal_ms(cx, s), rng.normal_ms(cy, s)])
-            .collect()
+    fn blob(rng: &mut Rng, rows: &mut Matrix, cx: f64, cy: f64, n: usize, s: f64) {
+        for _ in 0..n {
+            rows.push_row(&[rng.normal_ms(cx, s), rng.normal_ms(cy, s)]);
+        }
     }
 
     #[test]
     fn finds_two_blobs_and_noise() {
         let mut rng = Rng::new(0);
-        let mut rows = blob(&mut rng, 0.0, 0.0, 40, 0.3);
-        rows.extend(blob(&mut rng, 10.0, 10.0, 40, 0.3));
-        rows.push(vec![5.0, 5.0]); // isolated noise point
+        let mut rows = Matrix::with_width(2);
+        blob(&mut rng, &mut rows, 0.0, 0.0, 40, 0.3);
+        blob(&mut rng, &mut rows, 10.0, 10.0, 40, 0.3);
+        rows.push_row(&[5.0, 5.0]); // isolated noise point
         let r = dbscan(
             &rows,
             &DbscanConfig { eps: 1.2, min_pts: 4 },
@@ -143,7 +145,8 @@ mod tests {
     #[test]
     fn all_noise_when_eps_tiny() {
         let mut rng = Rng::new(1);
-        let rows = blob(&mut rng, 0.0, 0.0, 20, 1.0);
+        let mut rows = Matrix::with_width(2);
+        blob(&mut rng, &mut rows, 0.0, 0.0, 20, 1.0);
         let r = dbscan(
             &rows,
             &DbscanConfig { eps: 1e-6, min_pts: 3 },
@@ -156,8 +159,9 @@ mod tests {
     #[test]
     fn one_cluster_when_eps_huge() {
         let mut rng = Rng::new(2);
-        let mut rows = blob(&mut rng, 0.0, 0.0, 20, 1.0);
-        rows.extend(blob(&mut rng, 5.0, 0.0, 20, 1.0));
+        let mut rows = Matrix::with_width(2);
+        blob(&mut rng, &mut rows, 0.0, 0.0, 20, 1.0);
+        blob(&mut rng, &mut rows, 5.0, 0.0, 20, 1.0);
         let r = dbscan(
             &rows,
             &DbscanConfig { eps: 1e3, min_pts: 3 },
@@ -170,8 +174,10 @@ mod tests {
     #[test]
     fn chain_connectivity() {
         // points in a line spaced 1.0 apart: single cluster at eps=1.5
-        let rows: Vec<Vec<f64>> =
-            (0..30).map(|i| vec![i as f64, 0.0]).collect();
+        let mut rows = Matrix::with_width(2);
+        for i in 0..30 {
+            rows.push_row(&[i as f64, 0.0]);
+        }
         let r = dbscan(
             &rows,
             &DbscanConfig { eps: 1.5, min_pts: 2 },
@@ -182,7 +188,8 @@ mod tests {
 
     #[test]
     fn empty_input() {
-        let r = dbscan(&[], &DbscanConfig::default(), &NativeDistance);
+        let r =
+            dbscan(&Matrix::new(), &DbscanConfig::default(), &NativeDistance);
         assert_eq!(r.n_clusters, 0);
         assert!(r.labels.is_empty());
     }
@@ -190,9 +197,9 @@ mod tests {
     #[test]
     fn labels_are_contiguous() {
         let mut rng = Rng::new(3);
-        let mut rows = vec![];
+        let mut rows = Matrix::with_width(2);
         for k in 0..4 {
-            rows.extend(blob(&mut rng, 8.0 * k as f64, 0.0, 25, 0.4));
+            blob(&mut rng, &mut rows, 8.0 * k as f64, 0.0, 25, 0.4);
         }
         let r = dbscan(
             &rows,

@@ -1,36 +1,46 @@
-//! k-means baseline for Fig 10 (k-means++ init, Lloyd iterations).
+//! k-means baseline for Fig 10 (k-means++ init, Lloyd iterations) over
+//! the contiguous `Matrix` row store.
 
+use crate::linalg::{add_assign, sq_dist, Matrix};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
 pub struct KmeansResult {
     pub labels: Vec<i32>,
-    pub centroids: Vec<Vec<f64>>,
+    /// k x width centroid matrix.
+    pub centroids: Matrix,
     pub inertia: f64,
     pub iterations: usize,
 }
 
-fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
-}
-
 /// Lloyd's algorithm with k-means++ seeding.
+///
+/// Convergence check runs *before* the update step: once an assign pass
+/// changes nothing (after at least one update has made the centroids
+/// actual means), the loop exits without the redundant extra update the
+/// classic "break at loop end" formulation pays. Empty clusters reseed
+/// at the point farthest from its assigned centroid, reusing the
+/// distances computed during the assign pass instead of recomputing
+/// `sq_dist` per candidate.
 pub fn kmeans(
-    rows: &[Vec<f64>],
+    rows: &Matrix,
     k: usize,
     max_iter: usize,
     rng: &mut Rng,
 ) -> KmeansResult {
     assert!(k >= 1);
-    assert!(rows.len() >= k, "need at least k rows");
-    let n = rows.len();
+    let n = rows.n_rows();
+    assert!(n >= k, "need at least k rows");
+    let w = rows.n_cols();
 
-    // k-means++ init
-    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
-    centroids.push(rows[rng.range_usize(0, n)].clone());
+    // k-means++ init (same probe sequence as the classic formulation)
+    let mut centroids = Matrix::zeros(k, w);
+    let first = rng.range_usize(0, n);
+    centroids.row_mut(0).copy_from_slice(rows.row(first));
     let mut d2: Vec<f64> =
-        rows.iter().map(|r| sq_dist(r, &centroids[0])).collect();
-    while centroids.len() < k {
+        rows.iter_rows().map(|r| sq_dist(r, centroids.row(0))).collect();
+    let mut seeded = 1;
+    while seeded < k {
         let total: f64 = d2.iter().sum();
         let next = if total <= 1e-18 {
             // all points coincide with existing centroids: pick any
@@ -38,79 +48,93 @@ pub fn kmeans(
         } else {
             let mut target = rng.f64() * total;
             let mut pick = n - 1;
-            for (i, &w) in d2.iter().enumerate() {
-                if target < w {
+            for (i, &weight) in d2.iter().enumerate() {
+                if target < weight {
                     pick = i;
                     break;
                 }
-                target -= w;
+                target -= weight;
             }
             pick
         };
-        centroids.push(rows[next].clone());
-        for (i, r) in rows.iter().enumerate() {
-            let d = sq_dist(r, centroids.last().unwrap());
+        centroids.row_mut(seeded).copy_from_slice(rows.row(next));
+        for (i, r) in rows.iter_rows().enumerate() {
+            let d = sq_dist(r, centroids.row(seeded));
             if d < d2[i] {
                 d2[i] = d;
             }
         }
+        seeded += 1;
     }
 
     let mut labels = vec![0i32; n];
+    // distance of each point to its assigned centroid (assign-pass
+    // byproduct; feeds inertia and empty-cluster reseeding for free)
+    let mut assigned_d2 = vec![0.0f64; n];
+    let mut sums = vec![0.0f64; k * w];
+    let mut counts = vec![0usize; k];
     let mut iterations = 0;
     for it in 0..max_iter {
         iterations = it + 1;
         // assign
         let mut changed = false;
-        for (i, r) in rows.iter().enumerate() {
-            let best = centroids
-                .iter()
-                .enumerate()
-                .map(|(c, cen)| (c, sq_dist(r, cen)))
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .unwrap()
-                .0 as i32;
-            if labels[i] != best {
-                labels[i] = best;
+        for (i, r) in rows.iter_rows().enumerate() {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d = sq_dist(r, centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            assigned_d2[i] = best_d;
+            if labels[i] != best as i32 {
+                labels[i] = best as i32;
                 changed = true;
             }
         }
-        // update
-        let w = rows[0].len();
-        let mut sums = vec![vec![0.0; w]; k];
-        let mut counts = vec![0usize; k];
-        for (i, r) in rows.iter().enumerate() {
-            let c = labels[i] as usize;
-            counts[c] += 1;
-            for j in 0..w {
-                sums[c][j] += r[j];
-            }
-        }
-        for c in 0..k {
-            if counts[c] > 0 {
-                for j in 0..w {
-                    centroids[c][j] = sums[c][j] / counts[c] as f64;
-                }
-            } else {
-                // empty cluster: reseed at the farthest point
-                let far = (0..n)
-                    .max_by(|&a, &b| {
-                        let da = sq_dist(&rows[a], &centroids[labels[a] as usize]);
-                        let db = sq_dist(&rows[b], &centroids[labels[b] as usize]);
-                        da.partial_cmp(&db).unwrap()
-                    })
-                    .unwrap();
-                centroids[c] = rows[far].clone();
-            }
-        }
+        // converged: centroids are already the means of this assignment
+        // (it == 0 is excluded because the initial all-zero labels may
+        // coincidentally match before any update has run)
         if !changed && it > 0 {
             break;
         }
+        // update
+        sums.fill(0.0);
+        counts.fill(0);
+        for (i, r) in rows.iter_rows().enumerate() {
+            let c = labels[i] as usize;
+            counts[c] += 1;
+            add_assign(&mut sums[c * w..(c + 1) * w], r);
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let cnt = counts[c] as f64;
+                for (dst, s) in centroids
+                    .row_mut(c)
+                    .iter_mut()
+                    .zip(&sums[c * w..(c + 1) * w])
+                {
+                    *dst = s / cnt;
+                }
+            } else {
+                // empty cluster: reseed at the farthest point, using the
+                // assign-pass distances
+                let far = assigned_d2
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(rows.row(far));
+            }
+        }
     }
     let inertia = rows
-        .iter()
+        .iter_rows()
         .zip(&labels)
-        .map(|(r, &l)| sq_dist(r, &centroids[l as usize]))
+        .map(|(r, &l)| sq_dist(r, centroids.row(l as usize)))
         .sum();
     KmeansResult { labels, centroids, inertia, iterations }
 }
@@ -119,7 +143,7 @@ pub fn kmeans(
 /// relative inertia improvement drops below `threshold`. This is how the
 /// Fig 10 harness gives k-means a fair shot without the true class count.
 pub fn kmeans_elbow(
-    rows: &[Vec<f64>],
+    rows: &Matrix,
     k_max: usize,
     threshold: f64,
     max_iter: usize,
@@ -127,7 +151,7 @@ pub fn kmeans_elbow(
 ) -> KmeansResult {
     assert!(k_max >= 1);
     let mut prev = kmeans(rows, 1, max_iter, rng);
-    for k in 2..=k_max.min(rows.len()) {
+    for k in 2..=k_max.min(rows.n_rows()) {
         let cur = kmeans(rows, k, max_iter, rng);
         let denom = prev.inertia.max(1e-12);
         let improve = (prev.inertia - cur.inertia) / denom;
@@ -143,11 +167,11 @@ pub fn kmeans_elbow(
 mod tests {
     use super::*;
 
-    fn blobs(rng: &mut Rng, centers: &[(f64, f64)], n: usize, s: f64) -> Vec<Vec<f64>> {
-        let mut rows = vec![];
+    fn blobs(rng: &mut Rng, centers: &[(f64, f64)], n: usize, s: f64) -> Matrix {
+        let mut rows = Matrix::with_width(2);
         for &(cx, cy) in centers {
             for _ in 0..n {
-                rows.push(vec![rng.normal_ms(cx, s), rng.normal_ms(cy, s)]);
+                rows.push_row(&[rng.normal_ms(cx, s), rng.normal_ms(cy, s)]);
             }
         }
         rows
@@ -168,10 +192,20 @@ mod tests {
 
     #[test]
     fn k_one_centroid_is_mean() {
-        let rows = vec![vec![0.0], vec![2.0], vec![4.0]];
+        let rows = Matrix::from_rows(&[vec![0.0], vec![2.0], vec![4.0]]);
         let mut rng = Rng::new(1);
         let r = kmeans(&rows, 1, 10, &mut rng);
-        assert!((r.centroids[0][0] - 2.0).abs() < 1e-9);
+        assert!((r.centroids.row(0)[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn converged_init_stops_after_one_update() {
+        // k=1: the initial all-zero labels already match; exactly one
+        // update pass must run, then the next assign pass breaks
+        let rows = Matrix::from_rows(&[vec![0.0], vec![2.0], vec![4.0]]);
+        let mut rng = Rng::new(1);
+        let r = kmeans(&rows, 1, 10, &mut rng);
+        assert_eq!(r.iterations, 2, "expected assign+update then break");
     }
 
     #[test]
@@ -184,13 +218,13 @@ mod tests {
             0.5,
         );
         let r = kmeans_elbow(&rows, 8, 0.25, 100, &mut rng);
-        let k = r.centroids.len();
+        let k = r.centroids.n_rows();
         assert!((3..=5).contains(&k), "k = {k}");
     }
 
     #[test]
     fn duplicate_points_dont_crash() {
-        let rows = vec![vec![1.0, 1.0]; 10];
+        let rows = Matrix::from_rows(&vec![vec![1.0, 1.0]; 10]);
         let mut rng = Rng::new(3);
         let r = kmeans(&rows, 3, 10, &mut rng);
         assert_eq!(r.labels.len(), 10);

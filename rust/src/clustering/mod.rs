@@ -1,39 +1,40 @@
 //! Clustering for workload discovery (paper §7.1, Algorithm 2, Fig 10).
 //!
 //! DBSCAN is KERMIT's discovery algorithm; k-means and agglomerative are
-//! the Fig 10 baselines. The distance matrix is computed through a
-//! pluggable provider so the off-line pipeline can route it through the
-//! `pairwise_dist` PJRT artifact (L1 pallas kernel) while unit tests use
-//! the native implementation.
+//! the Fig 10 baselines. All of them operate on the contiguous
+//! [`Matrix`] row store (`linalg`), and the distance matrix is computed
+//! through a pluggable provider so the off-line pipeline can route it
+//! through the `pairwise_dist` PJRT artifact (L1 pallas kernel) while
+//! unit tests use the native implementation.
 
 pub mod agglomerative;
 pub mod dbscan;
 pub mod kmeans;
 pub mod metrics;
 
+use crate::linalg::{sq_dist, Matrix};
+
 pub use dbscan::{dbscan, DbscanConfig, DbscanResult, NOISE};
 pub use metrics::{awt, purity};
 
-/// Pluggable pairwise squared-distance provider. `rows` are feature
-/// vectors; the result is the dense n x n matrix (row-major).
+/// Pluggable pairwise squared-distance provider. `rows` is the feature
+/// matrix (one observation per row); the result is the dense n x n
+/// matrix (row-major).
 pub trait DistanceProvider {
-    fn pairwise_sq(&self, rows: &[Vec<f64>]) -> Vec<f64>;
+    fn pairwise_sq(&self, rows: &Matrix) -> Vec<f64>;
 }
 
-/// Native O(n^2 d) implementation.
+/// Native O(n^2 d) implementation over contiguous rows.
 pub struct NativeDistance;
 
 impl DistanceProvider for NativeDistance {
-    fn pairwise_sq(&self, rows: &[Vec<f64>]) -> Vec<f64> {
-        let n = rows.len();
+    fn pairwise_sq(&self, rows: &Matrix) -> Vec<f64> {
+        let n = rows.n_rows();
         let mut out = vec![0.0; n * n];
         for i in 0..n {
+            let ri = rows.row(i);
             for j in (i + 1)..n {
-                let d: f64 = rows[i]
-                    .iter()
-                    .zip(&rows[j])
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum();
+                let d = sq_dist(ri, rows.row(j));
                 out[i * n + j] = d;
                 out[j * n + i] = d;
             }
@@ -48,7 +49,11 @@ mod tests {
 
     #[test]
     fn native_distance_symmetric_zero_diag() {
-        let rows = vec![vec![0.0, 0.0], vec![3.0, 4.0], vec![1.0, 1.0]];
+        let rows = Matrix::from_rows(&[
+            vec![0.0, 0.0],
+            vec![3.0, 4.0],
+            vec![1.0, 1.0],
+        ]);
         let d = NativeDistance.pairwise_sq(&rows);
         assert_eq!(d[0], 0.0);
         assert_eq!(d[4], 0.0);

@@ -12,8 +12,9 @@
 pub mod report;
 
 use crate::clustering::{DistanceProvider, NativeDistance};
-use crate::features::{AnalyticWindow, ObservationWindow};
+use crate::features::{zero_analytic, ObservationWindow};
 use crate::knowledge::WorkloadDb;
+use crate::linalg::Matrix;
 use crate::ml::forest::RandomForest;
 use crate::ml::Dataset;
 use crate::monitor::{aggregate_samples, MonitorConfig};
@@ -83,10 +84,10 @@ pub struct Coordinator {
     /// distance provider for discovery (native, or the PJRT artifact)
     dist: Box<dyn DistanceProvider>,
     /// Cumulative training store (the analytics zone): per label, the
-    /// labelled analytic windows accumulated across all discovery runs.
-    /// Without it, a forest retrained on just the latest batch would
-    /// forget every class absent from that batch.
-    training_store: BTreeMap<u32, Vec<Vec<f64>>>,
+    /// labelled analytic windows accumulated across all discovery runs,
+    /// in contiguous row storage. Without it, a forest retrained on just
+    /// the latest batch would forget every class absent from that batch.
+    training_store: BTreeMap<u32, Matrix>,
     /// cap per label (memory bound; oldest dropped first)
     store_cap: usize,
     /// Off-line ticks since the classifier was last retrained.
@@ -97,8 +98,10 @@ pub struct Coordinator {
     /// Transition-type label registry ((from, to) -> generated id),
     /// persistent across off-line runs so ids stay stable.
     transition_registry: BTreeMap<(u32, u32), u32>,
-    /// Cumulative transition training examples (rate-of-change rows).
-    transition_store: Vec<(Vec<f64>, u32)>,
+    /// Cumulative transition training examples: rate-of-change rows in
+    /// contiguous storage, with the label per row alongside.
+    transition_rows: Matrix,
+    transition_row_labels: Vec<u32>,
     /// §Perf optimisation: retrain only when discovery changes the label
     /// set (new/drifted labels) or every `retrain_every` ticks as a
     /// refresher — retraining on every tick dominated end-to-end
@@ -139,7 +142,8 @@ impl Coordinator {
             retrain_every: 5,
             signature_shift: BTreeMap::new(),
             transition_registry: BTreeMap::new(),
-            transition_store: Vec::new(),
+            transition_rows: Matrix::new(),
+            transition_row_labels: Vec::new(),
         }
     }
 
@@ -195,14 +199,17 @@ impl Coordinator {
             self.dist.as_ref(),
         );
 
-        // accumulate the analytics-zone training store
+        // accumulate the analytics-zone training store (fixed-width
+        // analytic rows appended straight into contiguous storage)
+        let mut analytic_buf = zero_analytic();
         for (w, label) in self.backlog.iter().zip(&report.window_labels) {
             if let Some(l) = label {
                 let rows = self.training_store.entry(*l).or_default();
-                rows.push(AnalyticWindow::from_observation(w).features);
-                if rows.len() > self.store_cap {
-                    let excess = rows.len() - self.store_cap;
-                    rows.drain(..excess);
+                w.fill_analytic(&mut analytic_buf);
+                rows.push_row(&analytic_buf);
+                if rows.n_rows() > self.store_cap {
+                    let excess = rows.n_rows() - self.store_cap;
+                    rows.remove_first_rows(excess);
                 }
             }
         }
@@ -225,12 +232,14 @@ impl Coordinator {
             &report,
             &mut self.transition_registry,
         );
-        for (row, label) in tset.rows.into_iter().zip(tset.labels) {
-            self.transition_store.push((row, label));
+        for (row, label) in tset.iter() {
+            self.transition_rows.push_row(row);
+            self.transition_row_labels.push(label);
         }
-        if self.transition_store.len() > 4 * self.store_cap {
-            let excess = self.transition_store.len() - 4 * self.store_cap;
-            self.transition_store.drain(..excess);
+        if self.transition_rows.n_rows() > 4 * self.store_cap {
+            let excess = self.transition_rows.n_rows() - 4 * self.store_cap;
+            self.transition_rows.remove_first_rows(excess);
+            self.transition_row_labels.drain(..excess);
         }
 
         if !self.training_store.is_empty() && must_train {
@@ -238,21 +247,14 @@ impl Coordinator {
             // training set = cumulative store + ZSL synthetic instances
             let mut data = Dataset::new();
             for (l, rows) in &self.training_store {
-                for r in rows {
-                    data.push(r.clone(), *l);
+                for r in rows.iter_rows() {
+                    data.push(r, *l);
                 }
             }
             if self.config.training.enable_zsl {
                 let synth =
                     synthesize(&mut db, &self.config.training.zsl, &mut self.rng);
-                for (row, label) in synth
-                    .instances
-                    .rows
-                    .into_iter()
-                    .zip(synth.instances.labels)
-                {
-                    data.push(row, label);
-                }
+                data.extend_from(&synth.instances);
                 // include previously synthesised classes' instances via
                 // their prototypes (regenerate a few per stored class)
             }
@@ -271,15 +273,16 @@ impl Coordinator {
             self.pipeline.set_classifier(Box::new(classifier));
 
             // TransitionClassifier: retrain alongside (needs >=2 types)
-            let types: std::collections::BTreeSet<u32> = self
-                .transition_store
-                .iter()
-                .map(|(_, l)| *l)
-                .collect();
+            let types: std::collections::BTreeSet<u32> =
+                self.transition_row_labels.iter().copied().collect();
             if types.len() >= 2 {
                 let mut td = Dataset::new();
-                for (row, label) in &self.transition_store {
-                    td.push(row.clone(), *label);
+                for (row, &label) in self
+                    .transition_rows
+                    .iter_rows()
+                    .zip(&self.transition_row_labels)
+                {
+                    td.push(row, label);
                 }
                 let tforest = RandomForest::fit(
                     &td,

@@ -7,7 +7,8 @@ use crate::clustering::{
     agglomerative::agglomerative, dbscan, kmeans::kmeans_elbow, metrics,
     DbscanConfig, DistanceProvider, NativeDistance,
 };
-use crate::features::AnalyticWindow;
+use crate::features::{zero_analytic, ANALYTIC_WIDTH};
+use crate::linalg::Matrix;
 use crate::monitor::{aggregate_trace, MonitorConfig};
 use crate::util::rng::Rng;
 use crate::workloadgen::{random_schedule, Generator};
@@ -21,22 +22,22 @@ pub struct Fig10Row {
     pub true_classes: usize,
 }
 
-/// Steady-window rows + ground-truth labels for a discovery scenario.
-pub fn discovery_data(
-    seed: u64,
-    classes: &[u32],
-) -> (Vec<Vec<f64>>, Vec<u32>) {
+/// Steady-window rows (contiguous analytic matrix) + ground-truth
+/// labels for a discovery scenario.
+pub fn discovery_data(seed: u64, classes: &[u32]) -> (Matrix, Vec<u32>) {
     let mut srng = Rng::new(seed);
     let sched = random_schedule(&mut srng, 40, 240, classes);
     let mut g = Generator::with_default_config(seed ^ 0x10);
     let trace = g.generate(&sched);
     let windows =
         aggregate_trace(&trace, &MonitorConfig { window_size: WINDOW });
-    let mut rows = Vec::new();
+    let mut rows = Matrix::with_width(ANALYTIC_WIDTH);
     let mut truth = Vec::new();
+    let mut buf = zero_analytic();
     for w in &windows {
         if let Some(t) = w.truth {
-            rows.push(AnalyticWindow::from_observation(w).features);
+            w.fill_analytic(&mut buf);
+            rows.push_row(&buf);
             truth.push(t);
         }
     }
@@ -67,7 +68,7 @@ pub fn run_with_distance(
         algorithm: "kmeans_elbow",
         awt: metrics::awt(&truth, &km.labels),
         purity: metrics::purity(&truth, &km.labels),
-        clusters_found: km.centroids.len(),
+        clusters_found: km.centroids.n_rows(),
         true_classes,
     });
 

@@ -38,7 +38,7 @@ pub fn data(seed: u64) -> Fig6Data {
 }
 
 fn eval(c: &dyn Classifier, test: &Dataset) -> (f64, f64) {
-    let preds = c.predict_batch(&test.rows);
+    let preds = c.predict_batch(test.x());
     (accuracy(&test.labels, &preds), macro_f1(&test.labels, &preds))
 }
 

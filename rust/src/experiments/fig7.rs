@@ -83,8 +83,8 @@ pub fn transition_data(trace: &Trace) -> (Dataset, Dataset) {
             let next = registry.len() as u32;
             let id = *registry.entry((*from, *to)).or_insert(next);
             // roc[i-1] = analytic[i] - analytic[i-1]
-            roc_set.push(rocs[i - 1].features.clone(), id);
-            raw_set.push(analytic[i].features.clone(), id);
+            roc_set.push(&rocs[i - 1].features, id);
+            raw_set.push(&analytic[i].features, id);
         }
     }
     (roc_set, raw_set)
@@ -100,13 +100,13 @@ pub fn run(seed: u64) -> Fig7Result {
     let mut rng = Rng::new(seed ^ 0x7);
     let (tr_roc, te_roc) = roc.split(&mut rng, 0.3);
     let f = RandomForest::fit(&tr_roc, ForestConfig::default(), &mut rng);
-    let preds = f.predict_batch(&te_roc.rows);
+    let preds = f.predict_batch(te_roc.x());
     let acc_roc = accuracy(&te_roc.labels, &preds);
     let f1_roc = macro_f1(&te_roc.labels, &preds);
 
     let (tr_raw, te_raw) = raw.split(&mut rng, 0.3);
     let f2 = RandomForest::fit(&tr_raw, ForestConfig::default(), &mut rng);
-    let preds2 = f2.predict_batch(&te_raw.rows);
+    let preds2 = f2.predict_batch(te_raw.x());
     let acc_raw = accuracy(&te_raw.labels, &preds2);
 
     Fig7Result {

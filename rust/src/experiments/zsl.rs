@@ -39,37 +39,27 @@ pub fn run(seed: u64) -> ZslResult {
     let mut db = WorkloadDb::new();
     let mut truth_to_label: BTreeMap<u32, u32> = BTreeMap::new();
     for &c in &pure_classes {
-        let rows: Vec<Vec<f64>> = pure_data
-            .rows
-            .iter()
-            .zip(&pure_data.labels)
-            .filter(|(_, &l)| l == c)
-            .map(|(r, _)| r.clone())
+        let idx: Vec<usize> = (0..pure_data.len())
+            .filter(|&i| pure_data.labels[i] == c)
             .collect();
+        let rows = pure_data.x().gather(&idx);
         let ch = Characterization::from_rows(&rows);
         let centroid = ch.mean_vector();
-        let label = db.insert_new(ch, centroid, rows.len(), false);
+        let label = db.insert_new(ch, centroid, rows.n_rows(), false);
         truth_to_label.insert(c, label);
     }
 
     // training set in DB-label space
     let mut train = Dataset::new();
-    for (r, &t) in pure_data.rows.iter().zip(&pure_data.labels) {
-        train.push(r.clone(), truth_to_label[&t]);
+    for (r, t) in pure_data.iter() {
+        train.push(r, truth_to_label[&t]);
     }
 
     // --- ZSL synthesis
     let mut rng = Rng::new(seed ^ 0x25);
     let synth = synthesize(&mut db, &ZslConfig::default(), &mut rng);
     let mut train_zsl = train.clone();
-    for (row, label) in synth
-        .instances
-        .rows
-        .iter()
-        .zip(&synth.instances.labels)
-    {
-        train_zsl.push(row.clone(), *label);
-    }
+    train_zsl.extend_from(&synth.instances);
     // map (pure_label_a, pure_label_b) -> synthetic label
     let pair_label: BTreeMap<(u32, u32), u32> = synth
         .classes
@@ -138,13 +128,13 @@ pub fn run(seed: u64) -> ZslResult {
     let mut prng = Rng::new(seed ^ 0x42);
     let (ptr, pte) = {
         let mut d = Dataset::new();
-        for (r, &t) in pure_data.rows.iter().zip(&pure_data.labels) {
-            d.push(r.clone(), truth_to_label[&t]);
+        for (r, t) in pure_data.iter() {
+            d.push(r, truth_to_label[&t]);
         }
         d.split(&mut prng, 0.3)
     };
     let _ = ptr;
-    let ppred = forest_zsl.predict_batch(&pte.rows);
+    let ppred = forest_zsl.predict_batch(pte.x());
     let pure_accuracy = crate::ml::accuracy(&pte.labels, &ppred);
 
     ZslResult {

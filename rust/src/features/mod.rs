@@ -38,6 +38,18 @@ pub fn zero_features() -> FeatureVec {
     [0.0; NUM_FEATURES]
 }
 
+/// Width of the analytic representation (window mean ++ window std).
+pub const ANALYTIC_WIDTH: usize = 2 * NUM_FEATURES;
+
+/// Fixed-width analytic feature vector — the widths are static, so the
+/// on-line pipeline keeps these on the stack and re-fills them per
+/// window instead of allocating a `Vec` per `observe` call.
+pub type AnalyticVec = [f64; ANALYTIC_WIDTH];
+
+pub fn zero_analytic() -> AnalyticVec {
+    [0.0; ANALYTIC_WIDTH]
+}
+
 /// An observation window `O_t`: the aggregation of `samples` raw metric
 /// samples over one monitoring interval, with per-feature mean and
 /// variance. This is the unit every KERMIT algorithm operates on.
@@ -89,6 +101,24 @@ impl ObservationWindow {
         }
         ObservationWindow { index, time, samples: samples.len(), mean, var, truth }
     }
+
+    /// Write the analytic representation (mean ++ std) into `out`
+    /// without allocating. `out.len()` must be [`ANALYTIC_WIDTH`].
+    #[inline]
+    pub fn write_analytic(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), ANALYTIC_WIDTH);
+        out[..NUM_FEATURES].copy_from_slice(&self.mean);
+        for i in 0..NUM_FEATURES {
+            out[NUM_FEATURES + i] = self.var[i].sqrt();
+        }
+    }
+
+    /// Fixed-array variant of [`ObservationWindow::write_analytic`] for
+    /// the on-line hot path.
+    #[inline]
+    pub fn fill_analytic(&self, out: &mut AnalyticVec) {
+        self.write_analytic(&mut out[..]);
+    }
 }
 
 /// An analytic window `A_t`: the feature representation handed to the
@@ -104,14 +134,13 @@ pub struct AnalyticWindow {
 
 impl AnalyticWindow {
     pub fn from_observation(o: &ObservationWindow) -> AnalyticWindow {
-        let mut features = Vec::with_capacity(2 * NUM_FEATURES);
-        features.extend_from_slice(&o.mean);
-        features.extend(o.var.iter().map(|v| v.sqrt()));
+        let mut features = vec![0.0; ANALYTIC_WIDTH];
+        o.write_analytic(&mut features);
         AnalyticWindow { index: o.index, features, truth: o.truth }
     }
 
     pub fn width() -> usize {
-        2 * NUM_FEATURES
+        ANALYTIC_WIDTH
     }
 }
 
@@ -188,6 +217,16 @@ mod tests {
         assert_eq!(rocs[0].features, vec![3.0, 6.0]);
         assert_eq!(rocs[1].features, vec![-2.0, -4.0]);
         assert_eq!(rocs[1].index, 2);
+    }
+
+    #[test]
+    fn fill_analytic_matches_analytic_window() {
+        let samples = vec![fv(1.0), fv(3.0)];
+        let o = ObservationWindow::aggregate(0, 0.0, &samples, None);
+        let mut buf = zero_analytic();
+        o.fill_analytic(&mut buf);
+        let a = AnalyticWindow::from_observation(&o);
+        assert_eq!(&buf[..], a.features.as_slice());
     }
 
     #[test]

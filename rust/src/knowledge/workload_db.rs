@@ -13,8 +13,9 @@
 //! survives restarts and is human-inspectable.
 
 use crate::features::NUM_FEATURES;
+use crate::linalg::Matrix;
 use crate::simcluster::config_space::ConfigIndex;
-use crate::stats::{l2_distance, Summary};
+use crate::stats::Summary;
 use crate::util::json::{Json, JsonError};
 use std::collections::BTreeMap;
 
@@ -28,17 +29,25 @@ pub struct Characterization {
 }
 
 impl Characterization {
-    /// Characterize a cluster of feature vectors.
-    pub fn from_rows(rows: &[Vec<f64>]) -> Characterization {
+    /// Characterize a cluster of feature vectors (contiguous rows).
+    pub fn from_rows(rows: &Matrix) -> Characterization {
         assert!(!rows.is_empty());
-        let w = rows[0].len();
+        let w = rows.n_cols();
+        let mut col: Vec<f64> = Vec::with_capacity(rows.n_rows());
         let per_feature = (0..w)
             .map(|j| {
-                let col: Vec<f64> = rows.iter().map(|r| r[j]).collect();
+                col.clear();
+                col.extend(rows.iter_rows().map(|r| r[j]));
                 Summary::of(&col)
             })
             .collect();
         Characterization { per_feature }
+    }
+
+    /// Boundary shim: characterize `Vec<Vec<f64>>` rows by converting
+    /// once into contiguous storage.
+    pub fn from_vec_rows(rows: &[Vec<f64>]) -> Characterization {
+        Characterization::from_rows(&Matrix::from_rows(rows))
     }
 
     pub fn mean_vector(&self) -> Vec<f64> {
@@ -46,9 +55,16 @@ impl Characterization {
     }
 
     /// L2 distance between mean vectors — the drift / identity metric of
-    /// Algorithm 2.
+    /// Algorithm 2. Computed directly over the summaries (no temporary
+    /// vectors: this runs once per DB entry on every `nearest` lookup).
     pub fn mean_distance(&self, other: &Characterization) -> f64 {
-        l2_distance(&self.mean_vector(), &other.mean_vector())
+        assert_eq!(self.per_feature.len(), other.per_feature.len());
+        self.per_feature
+            .iter()
+            .zip(&other.per_feature)
+            .map(|(a, b)| (a.mean - b.mean) * (a.mean - b.mean))
+            .sum::<f64>()
+            .sqrt()
     }
 }
 
@@ -348,7 +364,7 @@ impl WorkloadDb {
         std::fs::write(path, self.to_json().encode_pretty())
     }
 
-    pub fn load(path: &std::path::Path) -> anyhow::Result<WorkloadDb> {
+    pub fn load(path: &std::path::Path) -> crate::util::error::Result<WorkloadDb> {
         let text = std::fs::read_to_string(path)?;
         Ok(WorkloadDb::from_json(&Json::parse(&text)?)?)
     }
@@ -366,7 +382,7 @@ mod tests {
     fn char_of(mean: f64, n: usize) -> Characterization {
         let rows: Vec<Vec<f64>> =
             (0..n).map(|i| vec![mean + (i % 2) as f64, 2.0 * mean]).collect();
-        Characterization::from_rows(&rows)
+        Characterization::from_vec_rows(&rows)
     }
 
     #[test]

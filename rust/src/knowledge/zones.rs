@@ -85,7 +85,9 @@ impl KnowledgeZones {
     }
 
     /// Stream observation windows back out of the transformation zone.
-    pub fn read_windows(&self) -> anyhow::Result<Vec<ObservationWindow>> {
+    pub fn read_windows(
+        &self,
+    ) -> crate::util::error::Result<Vec<ObservationWindow>> {
         let path = self.transformation().join("windows.jsonl");
         if !path.exists() {
             return Ok(vec![]);

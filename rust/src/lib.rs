@@ -18,6 +18,7 @@ pub mod experiments;
 pub mod explorer;
 pub mod features;
 pub mod knowledge;
+pub mod linalg;
 pub mod ml;
 pub mod monitor;
 pub mod offline;

@@ -1,0 +1,309 @@
+//! Contiguous numeric core: the [`Matrix`] row store and the cache-
+//! friendly distance/accumulate kernels every clustering and ML path in
+//! the crate runs on.
+//!
+//! # Layout
+//!
+//! A `Matrix` is a dense row-major table: one flat `Vec<f64>` of
+//! `rows * cols` values, row `i` occupying `data[i*cols .. (i+1)*cols]`.
+//! Compared to the `Vec<Vec<f64>>` it replaced, rows are contiguous in
+//! memory (one allocation instead of `n+1`, no pointer chase per row),
+//! so scanning kernels like [`sq_dist`] stream linearly through cache
+//! and auto-vectorise.
+//!
+//! # Aliasing rules
+//!
+//! Row accessors hand out plain slices: [`Matrix::row`] borrows the
+//! whole matrix shared, [`Matrix::row_mut`] borrows it exclusively.
+//! There is deliberately no cell-level interior mutability — callers
+//! that need to read row `a` while writing row `b` should either copy
+//! the source row into a scratch buffer first or restructure as a
+//! gather + write (see `kmeans`'s `sums` buffer for the idiom).
+//!
+//! # Views vs owned
+//!
+//! * Pass `&Matrix` (or a `&[f64]` row view) through APIs; it is `Copy`
+//!   -cheap and keeps the single allocation alive.
+//! * Own a `Matrix` when the rows are a new value (a gathered cluster,
+//!   a standardised copy of a dataset). [`Matrix::gather`] and
+//!   [`Matrix::from_rows`] build those in one pass.
+//! * A width of 0 on an empty matrix means "width not fixed yet": the
+//!   first [`Matrix::push_row`] adopts the row's width. This lets
+//!   growable containers (e.g. `ml::Dataset`) start empty without
+//!   declaring a width up front.
+
+/// Dense row-major matrix of `f64`. See the module docs for layout and
+/// aliasing rules.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Matrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Empty matrix with the width left unfixed (adopted on first push).
+    pub fn new() -> Matrix {
+        Matrix::default()
+    }
+
+    /// Empty matrix with a fixed width.
+    pub fn with_width(cols: usize) -> Matrix {
+        Matrix { data: Vec::new(), rows: 0, cols }
+    }
+
+    /// `rows x cols` matrix of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Adopt a flat row-major buffer. Panics unless `data.len()` is an
+    /// exact multiple of `cols`.
+    pub fn from_flat(data: Vec<f64>, cols: usize) -> Matrix {
+        assert!(cols > 0, "from_flat needs cols > 0");
+        assert_eq!(data.len() % cols, 0, "flat length not a multiple of width");
+        let rows = data.len() / cols;
+        Matrix { data, rows, cols }
+    }
+
+    /// Boundary shim: copy a `Vec<Vec<f64>>` row set into contiguous
+    /// storage once. Panics on inconsistent widths.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
+        let mut m = Matrix::new();
+        for r in rows {
+            m.push_row(r);
+        }
+        m
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Append one row. An empty width-unfixed matrix adopts the row's
+    /// width; otherwise the width must match.
+    pub fn push_row(&mut self, row: &[f64]) {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+        }
+        assert_eq!(
+            row.len(),
+            self.cols,
+            "inconsistent feature width: row {} vs matrix {}",
+            row.len(),
+            self.cols
+        );
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Append every row of `other` (width must match, or self empty).
+    pub fn extend_rows(&mut self, other: &Matrix) {
+        if other.rows == 0 {
+            return;
+        }
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = other.cols;
+        }
+        assert_eq!(self.cols, other.cols, "inconsistent feature width");
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
+    /// Drop the first `k` rows (FIFO trim for bounded stores).
+    pub fn remove_first_rows(&mut self, k: usize) {
+        let k = k.min(self.rows);
+        self.data.drain(..k * self.cols);
+        self.rows -= k;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Iterate rows as slices, in order.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f64]> + '_ {
+        (0..self.rows).map(move |i| self.row(i))
+    }
+
+    /// New matrix holding the selected rows, in `idx` order.
+    pub fn gather(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix {
+            data: Vec::with_capacity(idx.len() * self.cols),
+            rows: 0,
+            cols: self.cols,
+        };
+        for &i in idx {
+            out.data.extend_from_slice(self.row(i));
+            out.rows += 1;
+        }
+        out
+    }
+
+    /// The whole storage, row-major.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+/// Squared euclidean distance between two equal-length slices.
+///
+/// Four independent accumulators so the compiler can keep the loop in
+/// SIMD lanes; on contiguous `Matrix` rows this is the hot kernel of
+/// k-means assign, DBSCAN's distance matrix, kNN, and the centroid
+/// gates.
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        let d0 = x[0] - y[0];
+        let d1 = x[1] - y[1];
+        let d2 = x[2] - y[2];
+        let d3 = x[3] - y[3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut sum = (s0 + s1) + (s2 + s3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x - y;
+        sum += d * d;
+    }
+    sum
+}
+
+/// Fused accumulate: `acc[i] += x[i]` — k-means update without a
+/// temporary.
+#[inline]
+pub fn add_assign(acc: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, v) in acc.iter_mut().zip(x) {
+        *a += v;
+    }
+}
+
+/// Index and squared distance of the row of `m` nearest to `x`.
+/// Ties keep the first (lowest index). Panics on an empty matrix.
+#[inline]
+pub fn nearest_row(m: &Matrix, x: &[f64]) -> (usize, f64) {
+    assert!(!m.is_empty(), "nearest_row on empty matrix");
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (i, r) in m.iter_rows().enumerate() {
+        let d = sq_dist(r, x);
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    (best, best_d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_row_adopts_width_and_checks_it() {
+        let mut m = Matrix::new();
+        assert_eq!(m.n_cols(), 0);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        assert_eq!((m.n_rows(), m.n_cols()), (1, 3));
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent feature width")]
+    fn push_row_width_mismatch_panics() {
+        let mut m = Matrix::new();
+        m.push_row(&[1.0, 2.0]);
+        m.push_row(&[1.0]);
+    }
+
+    #[test]
+    fn from_rows_roundtrips() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let m = Matrix::from_rows(&rows);
+        assert_eq!(m.n_rows(), 3);
+        for (got, want) in m.iter_rows().zip(&rows) {
+            assert_eq!(got, want.as_slice());
+        }
+        assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn gather_selects_in_order() {
+        let m = Matrix::from_flat(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], 2);
+        let g = m.gather(&[2, 0]);
+        assert_eq!(g.row(0), &[4.0, 5.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn remove_first_rows_trims_fifo() {
+        let mut m = Matrix::from_flat(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], 2);
+        m.remove_first_rows(2);
+        assert_eq!(m.n_rows(), 1);
+        assert_eq!(m.row(0), &[4.0, 5.0]);
+        m.remove_first_rows(5); // over-trim clamps
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn sq_dist_matches_naive_all_lengths() {
+        // exercise remainder handling at every length 0..=9
+        for n in 0..=9usize {
+            let a: Vec<f64> = (0..n).map(|i| i as f64 * 1.25).collect();
+            let b: Vec<f64> = (0..n).map(|i| 10.0 - i as f64).collect();
+            let naive: f64 =
+                a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((sq_dist(&a, &b) - naive).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn nearest_row_finds_closest_first_on_tie() {
+        let m = Matrix::from_flat(vec![0.0, 0.0, 5.0, 5.0, 0.0, 0.0], 2);
+        let (i, d) = nearest_row(&m, &[0.1, 0.0]);
+        assert_eq!(i, 0); // ties broken by first index
+        assert!((d - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut acc = vec![1.0, 2.0];
+        add_assign(&mut acc, &[0.5, 0.5]);
+        assert_eq!(acc, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn extend_rows_appends() {
+        let mut a = Matrix::new();
+        let b = Matrix::from_flat(vec![1.0, 2.0, 3.0, 4.0], 2);
+        a.extend_rows(&b);
+        a.extend_rows(&b);
+        assert_eq!(a.n_rows(), 4);
+        assert_eq!(a.row(3), &[3.0, 4.0]);
+    }
+}

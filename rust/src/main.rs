@@ -40,7 +40,7 @@ fn parse_classes(s: &str) -> Vec<u32> {
         .collect()
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> kermit::util::error::Result<()> {
     let cycles = args.get_usize("cycles", 40)?;
     let classes = parse_classes(args.get_or("classes", "0,3,5"));
     let seed = args.get_u64("seed", 1)?;
@@ -83,7 +83,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_discover(args: &Args) -> anyhow::Result<()> {
+fn cmd_discover(args: &Args) -> kermit::util::error::Result<()> {
     let classes = parse_classes(args.get_or("classes", "0,2,5"));
     let duration = args.get_usize("duration", 500)?;
     let seed = args.get_u64("seed", 0)?;
@@ -114,7 +114,7 @@ fn cmd_discover(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+fn cmd_artifacts(args: &Args) -> kermit::util::error::Result<()> {
     let dir = std::path::PathBuf::from(
         args.get_or("dir", "artifacts").to_string(),
     );
@@ -133,7 +133,7 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+fn cmd_tune(args: &Args) -> kermit::util::error::Result<()> {
     let class = args.get_u64("class", 0)? as u32;
     let budget = args.get_usize("budget", 140)?;
     let mut cfg = kermit::explorer::ExplorerConfig::default();
@@ -158,7 +158,7 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> kermit::util::error::Result<()> {
     let args = Args::from_env(&[
         "cycles", "classes", "seed", "budget", "duration", "dir", "class",
     ])?;

@@ -1,12 +1,14 @@
-//! Labelled dataset container + train/test utilities.
+//! Labelled dataset container + train/test utilities, backed by the
+//! contiguous `linalg::Matrix` row store (`labels[i]` is the class of
+//! row `i`).
 
+use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
-/// A dense labelled dataset. Rows are feature vectors, `labels[i]` is the
-//  class of row i.
+/// A dense labelled dataset over contiguous row storage.
 #[derive(Debug, Clone, Default)]
 pub struct Dataset {
-    pub rows: Vec<Vec<f64>>,
+    x: Matrix,
     pub labels: Vec<u32>,
 }
 
@@ -15,24 +17,52 @@ impl Dataset {
         Dataset::default()
     }
 
-    pub fn push(&mut self, row: Vec<f64>, label: u32) {
-        if let Some(first) = self.rows.first() {
-            assert_eq!(first.len(), row.len(), "inconsistent feature width");
+    /// Append one labelled row. Accepts any `[f64]`-like (slice, array,
+    /// `Vec`, `&Vec`) so call sites stay allocation-agnostic.
+    pub fn push<R: AsRef<[f64]>>(&mut self, row: R, label: u32) {
+        let r = row.as_ref();
+        if !self.x.is_empty() {
+            assert_eq!(
+                self.x.n_cols(),
+                r.len(),
+                "inconsistent feature width"
+            );
         }
-        self.rows.push(row);
+        self.x.push_row(r);
         self.labels.push(label);
     }
 
+    /// Append every row of `other` (widths must agree).
+    pub fn extend_from(&mut self, other: &Dataset) {
+        self.x.extend_rows(&other.x);
+        self.labels.extend_from_slice(&other.labels);
+    }
+
     pub fn len(&self) -> usize {
-        self.rows.len()
+        self.x.n_rows()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.x.is_empty()
     }
 
     pub fn width(&self) -> usize {
-        self.rows.first().map(|r| r.len()).unwrap_or(0)
+        self.x.n_cols()
+    }
+
+    /// The contiguous feature matrix.
+    pub fn x(&self) -> &Matrix {
+        &self.x
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        self.x.row(i)
+    }
+
+    /// Iterate `(row, label)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (&[f64], u32)> + '_ {
+        self.x.iter_rows().zip(self.labels.iter().copied())
     }
 
     /// Distinct labels, sorted.
@@ -58,11 +88,10 @@ impl Dataset {
             let n_test = ((idx.len() as f64) * test_frac).round() as usize;
             let n_test = n_test.min(idx.len().saturating_sub(1));
             for (k, &i) in idx.iter().enumerate() {
-                let row = self.rows[i].clone();
                 if k < n_test {
-                    test.push(row, class);
+                    test.push(self.row(i), class);
                 } else {
-                    train.push(row, class);
+                    train.push(self.row(i), class);
                 }
             }
         }
@@ -74,7 +103,7 @@ impl Dataset {
         let mut out = Dataset::new();
         for _ in 0..n {
             let i = rng.range_usize(0, self.len());
-            out.push(self.rows[i].clone(), self.labels[i]);
+            out.push(self.row(i), self.labels[i]);
         }
         out
     }
@@ -85,7 +114,7 @@ impl Dataset {
         let w = self.width();
         let n = self.len() as f64;
         let mut out = vec![(0.0, 0.0); w];
-        for row in &self.rows {
+        for row in self.x.iter_rows() {
             for (j, &v) in row.iter().enumerate() {
                 out[j].0 += v;
             }
@@ -93,7 +122,7 @@ impl Dataset {
         for m in out.iter_mut() {
             m.0 /= n;
         }
-        for row in &self.rows {
+        for row in self.x.iter_rows() {
             for (j, &v) in row.iter().enumerate() {
                 let d = v - out[j].0;
                 out[j].1 += d * d;
@@ -151,8 +180,8 @@ mod tests {
         let mut rng = Rng::new(2);
         let b = d.bootstrap(&mut rng, 35);
         assert_eq!(b.len(), 35);
-        for row in &b.rows {
-            assert!(d.rows.contains(row));
+        for row in b.x().iter_rows() {
+            assert!(d.x().iter_rows().any(|r| r == row));
         }
     }
 
@@ -165,6 +194,16 @@ mod tests {
         assert!((m[0].0 - 1.0).abs() < 1e-12);
         assert!((m[0].1 - 1.0).abs() < 1e-12);
         assert_eq!(m[1].1, 1.0); // constant feature guard
+    }
+
+    #[test]
+    fn extend_from_appends_rows_and_labels() {
+        let mut a = toy(3, 2);
+        let b = toy(2, 2);
+        let n = a.len();
+        a.extend_from(&b);
+        assert_eq!(a.len(), n + b.len());
+        assert_eq!(a.row(n), b.row(0));
     }
 
     #[test]

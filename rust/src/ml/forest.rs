@@ -64,18 +64,52 @@ impl RandomForest {
     /// than the soft vote (§Perf iteration 2) — each tree contributes
     /// its leaf majority instead of a per-class probability map — and
     /// agrees with the soft vote on in-distribution data. This is the
-    /// on-line hot path; `vote`/`predict_proba` remain for callers that
-    /// need the full distribution.
+    /// on-line hot path, so the tally lives in a stack scratch table
+    /// (distinct labels are bounded by the tree count) and the steady
+    /// path performs zero heap allocations; the heap spill only engages
+    /// for forests voting for more than `STACK_CLASSES` distinct labels.
+    /// `vote`/`predict_proba` remain for callers that need the full
+    /// distribution.
     pub fn vote_hard(&self, x: &[f64]) -> (u32, f64) {
-        let mut counts: BTreeMap<u32, usize> = BTreeMap::new();
+        const STACK_CLASSES: usize = 64;
+        let mut keys = [0u32; STACK_CLASSES];
+        let mut counts = [0u32; STACK_CLASSES];
+        let mut used = 0usize;
+        let mut spill: Vec<(u32, u32)> = Vec::new(); // no alloc until push
         for t in &self.trees {
-            *counts.entry(t.predict(x)).or_insert(0) += 1;
+            let l = t.predict(x);
+            if let Some(k) = keys[..used].iter().position(|&k| k == l) {
+                counts[k] += 1;
+            } else if used < STACK_CLASSES {
+                keys[used] = l;
+                counts[used] = 1;
+                used += 1;
+            } else if let Some(e) = spill.iter_mut().find(|e| e.0 == l) {
+                e.1 += 1;
+            } else {
+                spill.push((l, 1));
+            }
         }
-        let (label, n) = counts
-            .into_iter()
-            .max_by_key(|&(_, n)| n)
-            .expect("empty forest");
-        (label, n as f64 / self.trees.len() as f64)
+        assert!(used > 0, "empty forest");
+        // winner: highest count; ties go to the largest label (the
+        // behaviour of the previous BTreeMap + max_by_key tally)
+        let mut best_label = keys[0];
+        let mut best_n = counts[0];
+        for k in 1..used {
+            if counts[k] > best_n
+                || (counts[k] == best_n && keys[k] > best_label)
+            {
+                best_label = keys[k];
+                best_n = counts[k];
+            }
+        }
+        for &(l, n) in &spill {
+            if n > best_n || (n == best_n && l > best_label) {
+                best_label = l;
+                best_n = n;
+            }
+        }
+        (best_label, best_n as f64 / self.trees.len() as f64)
     }
 
     /// Soft-vote class distribution.
@@ -143,7 +177,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let (tr, te) = d.split(&mut rng, 0.25);
         let f = RandomForest::fit(&tr, ForestConfig::default(), &mut rng);
-        let preds = f.predict_batch(&te.rows);
+        let preds = f.predict_batch(te.x());
         let acc = accuracy(&te.labels, &preds);
         assert!(acc > 0.9, "{acc}");
     }
@@ -158,7 +192,7 @@ mod tests {
                 ForestConfig { n_trees: 10, ..Default::default() },
                 &mut rng,
             );
-            f.predict_batch(&d.rows)
+            f.predict_batch(d.x())
         };
         assert_eq!(mk(5), mk(5));
     }
@@ -172,7 +206,7 @@ mod tests {
             ForestConfig { n_trees: 15, ..Default::default() },
             &mut rng,
         );
-        let p = f.predict_proba(&d.rows[0]).unwrap();
+        let p = f.predict_proba(d.row(0)).unwrap();
         let sum: f64 = p.iter().map(|(_, q)| q).sum();
         assert!((sum - 1.0).abs() < 1e-9);
         assert!(p.iter().all(|&(_, q)| (0.0..=1.0).contains(&q)));

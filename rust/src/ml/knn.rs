@@ -1,14 +1,15 @@
-//! k-nearest-neighbours comparator (Fig 6). Standardised features,
-//! euclidean metric, distance-weighted vote.
+//! k-nearest-neighbours comparator (Fig 6). Standardised features in a
+//! contiguous `Matrix`, euclidean metric, distance-weighted vote.
 
 use super::dataset::Dataset;
 use super::Classifier;
+use crate::linalg::{sq_dist, Matrix};
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone)]
 pub struct Knn {
     k: usize,
-    rows: Vec<Vec<f64>>, // standardised
+    x: Matrix, // standardised rows
     labels: Vec<u32>,
     moments: Vec<(f64, f64)>,
 }
@@ -17,20 +18,24 @@ impl Knn {
     pub fn fit(data: &Dataset, k: usize) -> Knn {
         assert!(!data.is_empty());
         let moments = data.feature_moments();
-        let rows = data
-            .rows
-            .iter()
-            .map(|r| standardise(r, &moments))
-            .collect();
-        Knn { k: k.max(1), rows, labels: data.labels.clone(), moments }
+        let mut x = Matrix::zeros(data.len(), data.width());
+        for i in 0..data.len() {
+            standardise_into(data.row(i), &moments, x.row_mut(i));
+        }
+        Knn { k: k.max(1), x, labels: data.labels.clone(), moments }
+    }
+}
+
+fn standardise_into(x: &[f64], moments: &[(f64, f64)], out: &mut [f64]) {
+    for ((o, v), (m, s)) in out.iter_mut().zip(x).zip(moments) {
+        *o = (v - m) / s;
     }
 }
 
 fn standardise(x: &[f64], moments: &[(f64, f64)]) -> Vec<f64> {
-    x.iter()
-        .zip(moments)
-        .map(|(v, (m, s))| (v - m) / s)
-        .collect()
+    let mut out = vec![0.0; x.len()];
+    standardise_into(x, moments, &mut out);
+    out
 }
 
 impl Classifier for Knn {
@@ -45,19 +50,12 @@ impl Classifier for Knn {
 
     fn predict_proba(&self, x: &[f64]) -> Option<Vec<(u32, f64)>> {
         let xs = standardise(x, &self.moments);
-        // partial top-k by distance
+        // partial top-k by distance over contiguous rows
         let mut dists: Vec<(f64, u32)> = self
-            .rows
-            .iter()
+            .x
+            .iter_rows()
             .zip(&self.labels)
-            .map(|(r, &l)| {
-                let d: f64 = r
-                    .iter()
-                    .zip(&xs)
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum();
-                (d, l)
-            })
+            .map(|(r, &l)| (sq_dist(r, &xs), l))
             .collect();
         let k = self.k.min(dists.len());
         dists.select_nth_unstable_by(k - 1, |a, b| {
@@ -88,7 +86,7 @@ mod tests {
         }
         let (tr, te) = d.split(&mut rng, 0.3);
         let knn = Knn::fit(&tr, 5);
-        let acc = accuracy(&te.labels, &knn.predict_batch(&te.rows));
+        let acc = accuracy(&te.labels, &knn.predict_batch(te.x()));
         assert!(acc > 0.97, "{acc}");
     }
 
@@ -123,7 +121,7 @@ mod tests {
         }
         let (tr, te) = d.split(&mut rng, 0.25);
         let knn = Knn::fit(&tr, 7);
-        let acc = accuracy(&te.labels, &knn.predict_batch(&te.rows));
+        let acc = accuracy(&te.labels, &knn.predict_batch(te.x()));
         assert!(acc > 0.9, "{acc}");
     }
 }

@@ -1,8 +1,10 @@
 //! Multinomial logistic regression comparator (Fig 6): softmax + SGD on
-//! standardised features, with L2 regularisation.
+//! standardised features, with L2 regularisation. Weights and the
+//! standardised design matrix live in contiguous `Matrix` storage.
 
 use super::dataset::Dataset;
 use super::Classifier;
+use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -22,8 +24,8 @@ impl Default for LogRegConfig {
 #[derive(Debug, Clone)]
 pub struct LogReg {
     classes: Vec<u32>,
-    /// weights[c][j], plus bias at index width
-    weights: Vec<Vec<f64>>,
+    /// One row per class: the class weights, plus bias at index `width`.
+    weights: Matrix,
     moments: Vec<(f64, f64)>,
 }
 
@@ -33,44 +35,44 @@ impl LogReg {
         let classes = data.classes();
         let w = data.width();
         let moments = data.feature_moments();
-        let rows: Vec<Vec<f64>> = data
-            .rows
-            .iter()
-            .map(|r| {
-                r.iter()
-                    .zip(&moments)
-                    .map(|(v, (m, s))| (v - m) / s)
-                    .collect()
-            })
-            .collect();
+        let mut rows = Matrix::zeros(data.len(), w);
+        for i in 0..data.len() {
+            for (j, &v) in data.row(i).iter().enumerate() {
+                rows.row_mut(i)[j] = (v - moments[j].0) / moments[j].1;
+            }
+        }
         let class_index: std::collections::BTreeMap<u32, usize> =
             classes.iter().enumerate().map(|(i, &c)| (c, i)).collect();
-        let mut weights = vec![vec![0.0; w + 1]; classes.len()];
+        let d = w + 1; // + bias column
+        let mut weights = Matrix::zeros(classes.len(), d);
+        let mut grad = vec![0.0f64; classes.len() * d];
 
-        let mut order: Vec<usize> = (0..rows.len()).collect();
+        let mut order: Vec<usize> = (0..rows.n_rows()).collect();
         for _ in 0..config.epochs {
             rng.shuffle(&mut order);
             for chunk in order.chunks(config.batch) {
                 // accumulate gradient over the minibatch
-                let mut grad = vec![vec![0.0; w + 1]; classes.len()];
+                grad.fill(0.0);
                 for &i in chunk {
-                    let x = &rows[i];
+                    let x = rows.row(i);
                     let probs = softmax_scores(&weights, x);
                     let yi = class_index[&data.labels[i]];
                     for (c, p) in probs.iter().enumerate() {
                         let err = p - if c == yi { 1.0 } else { 0.0 };
+                        let g = &mut grad[c * d..(c + 1) * d];
                         for j in 0..w {
-                            grad[c][j] += err * x[j];
+                            g[j] += err * x[j];
                         }
-                        grad[c][w] += err;
+                        g[w] += err;
                     }
                 }
                 let scale = config.lr / chunk.len() as f64;
                 for c in 0..classes.len() {
-                    for j in 0..=w {
-                        weights[c][j] -= scale
-                            * (grad[c][j]
-                                + config.l2 * weights[c][j] * chunk.len() as f64);
+                    let ws = weights.row_mut(c);
+                    let g = &grad[c * d..(c + 1) * d];
+                    for j in 0..d {
+                        ws[j] -= scale
+                            * (g[j] + config.l2 * ws[j] * chunk.len() as f64);
                     }
                 }
             }
@@ -88,10 +90,10 @@ impl LogReg {
     }
 }
 
-fn softmax_scores(weights: &[Vec<f64>], x: &[f64]) -> Vec<f64> {
+fn softmax_scores(weights: &Matrix, x: &[f64]) -> Vec<f64> {
     let w = x.len();
     let logits: Vec<f64> = weights
-        .iter()
+        .iter_rows()
         .map(|ws| {
             ws[..w].iter().zip(x).map(|(a, b)| a * b).sum::<f64>() + ws[w]
         })
@@ -141,7 +143,7 @@ mod tests {
         }
         let (tr, te) = d.split(&mut rng, 0.25);
         let m = LogReg::fit(&tr, LogRegConfig::default(), &mut rng);
-        let acc = accuracy(&te.labels, &m.predict_batch(&te.rows));
+        let acc = accuracy(&te.labels, &m.predict_batch(te.x()));
         assert!(acc > 0.92, "{acc}");
     }
 
@@ -160,7 +162,7 @@ mod tests {
         }
         let (tr, te) = d.split(&mut rng, 0.25);
         let m = LogReg::fit(&tr, LogRegConfig::default(), &mut rng);
-        let acc = accuracy(&te.labels, &m.predict_batch(&te.rows));
+        let acc = accuracy(&te.labels, &m.predict_batch(te.x()));
         assert!(acc > 0.95, "{acc}");
     }
 

@@ -15,6 +15,8 @@ pub mod metrics;
 pub mod naive_bayes;
 pub mod tree;
 
+use crate::linalg::Matrix;
+
 pub use dataset::Dataset;
 pub use metrics::{accuracy, confusion_matrix, macro_f1, ClassMetrics};
 
@@ -24,9 +26,10 @@ pub trait Classifier: Send + Sync {
     /// Predict the label of one feature vector.
     fn predict(&self, x: &[f64]) -> u32;
 
-    /// Batch predict (overridable for vectorised impls).
-    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<u32> {
-        xs.iter().map(|x| self.predict(x)).collect()
+    /// Batch predict over contiguous rows (overridable for vectorised
+    /// impls).
+    fn predict_batch(&self, xs: &Matrix) -> Vec<u32> {
+        xs.iter_rows().map(|x| self.predict(x)).collect()
     }
 
     /// Class-probability estimate if the model supports it (used by the

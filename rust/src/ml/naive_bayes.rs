@@ -36,7 +36,7 @@ impl GaussianNb {
             let mut var = vec![0.0; w];
             for &i in &idx {
                 for j in 0..w {
-                    mean[j] += data.rows[i][j];
+                    mean[j] += data.row(i)[j];
                 }
             }
             for m in mean.iter_mut() {
@@ -44,7 +44,7 @@ impl GaussianNb {
             }
             for &i in &idx {
                 for j in 0..w {
-                    let d = data.rows[i][j] - mean[j];
+                    let d = data.row(i)[j] - mean[j];
                     var[j] += d * d;
                 }
             }
@@ -111,7 +111,7 @@ mod tests {
         }
         let (tr, te) = d.split(&mut rng, 0.25);
         let nb = GaussianNb::fit(&tr);
-        let acc = accuracy(&te.labels, &nb.predict_batch(&te.rows));
+        let acc = accuracy(&te.labels, &nb.predict_batch(te.x()));
         assert!(acc > 0.97, "{acc}");
     }
 

@@ -110,16 +110,16 @@ impl DecisionTree {
             // sort index by feature value; scan split points
             let mut order: Vec<usize> = idx.to_vec();
             order.sort_by(|&a, &b| {
-                data.rows[a][f]
-                    .partial_cmp(&data.rows[b][f])
+                data.row(a)[f]
+                    .partial_cmp(&data.row(b)[f])
                     .unwrap_or(std::cmp::Ordering::Equal)
             });
             let mut left_counts: BTreeMap<u32, usize> = BTreeMap::new();
             let total = order.len();
             for (pos, &i) in order.iter().enumerate().take(total - 1) {
                 *left_counts.entry(data.labels[i]).or_insert(0) += 1;
-                let v = data.rows[i][f];
-                let v_next = data.rows[order[pos + 1]][f];
+                let v = data.row(i)[f];
+                let v_next = data.row(order[pos + 1])[f];
                 if v == v_next {
                     continue; // can't split between equal values
                 }
@@ -152,7 +152,7 @@ impl DecisionTree {
 
         let (left_idx, right_idx): (Vec<usize>, Vec<usize>) = idx
             .iter()
-            .partition(|&&i| data.rows[i][feature] <= threshold);
+            .partition(|&&i| data.row(i)[feature] <= threshold);
         assert!(!left_idx.is_empty() && !right_idx.is_empty());
         Node::Split {
             feature,
@@ -236,7 +236,7 @@ mod tests {
         let d = xor_dataset();
         let mut rng = Rng::new(1);
         let t = DecisionTree::fit(&d, TreeConfig::default(), &mut rng);
-        let preds: Vec<u32> = d.rows.iter().map(|r| t.predict(r)).collect();
+        let preds = t.predict_batch(d.x());
         let acc = super::super::metrics::accuracy(&d.labels, &preds);
         assert!(acc > 0.98, "{acc}");
     }

@@ -13,8 +13,9 @@
 //!    shift ⇒ refresh; unmatched ⇒ new label inserted.
 
 use crate::clustering::{dbscan, DbscanConfig, DistanceProvider, NOISE};
-use crate::features::{AnalyticWindow, ObservationWindow};
+use crate::features::{ObservationWindow, ANALYTIC_WIDTH};
 use crate::knowledge::{Characterization, WorkloadDb};
+use crate::linalg::Matrix;
 use crate::online::change_detector::{ChangeDetector, ChangeDetectorConfig};
 
 #[derive(Debug, Clone)]
@@ -108,11 +109,12 @@ pub fn discover(
         .collect();
     report.transition_windows = windows.len() - steady_idx.len();
 
-    // 2. DBSCAN on the steady windows' analytic features
-    let rows: Vec<Vec<f64>> = steady_idx
-        .iter()
-        .map(|&i| AnalyticWindow::from_observation(&windows[i]).features)
-        .collect();
+    // 2. DBSCAN on the steady windows' analytic features (written
+    // straight into one contiguous matrix — no per-window Vec)
+    let mut rows = Matrix::zeros(steady_idx.len(), ANALYTIC_WIDTH);
+    for (r, &i) in steady_idx.iter().enumerate() {
+        windows[i].write_analytic(rows.row_mut(r));
+    }
     let clusters = dbscan(&rows, &config.dbscan, dist);
     report.noise_windows =
         clusters.labels.iter().filter(|&&l| l == NOISE).count();
@@ -120,8 +122,7 @@ pub fn discover(
     // 3+4. characterize / match / drift / insert, per cluster
     for c in 0..clusters.n_clusters as i32 {
         let members = clusters.members(c);
-        let member_rows: Vec<Vec<f64>> =
-            members.iter().map(|&i| rows[i].clone()).collect();
+        let member_rows = rows.gather(&members);
         let ch = Characterization::from_rows(&member_rows);
         let centroid = ch.mean_vector();
 

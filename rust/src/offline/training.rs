@@ -102,7 +102,7 @@ pub fn transition_training_set(
                     // rate-of-change rows spanning the run: indices
                     // i-1 .. j-1 in roc space cover the ramp deltas
                     for k in i.saturating_sub(1)..j.min(rocs.len()) {
-                        d.push(rocs[k].features.clone(), id);
+                        d.push(&rocs[k].features, id);
                     }
                 }
             }
@@ -138,11 +138,7 @@ pub fn train(
 
     if config.enable_zsl {
         let synth = synthesize(db, &config.zsl, rng);
-        for (row, label) in
-            synth.instances.rows.into_iter().zip(synth.instances.labels)
-        {
-            workload_set.push(row, label);
-        }
+        workload_set.extend_from(&synth.instances);
     }
 
     let mut registry = BTreeMap::new();
@@ -200,7 +196,7 @@ mod tests {
         let mut db2 = db;
         let r2 = discover(&ws2, &mut db2, &DiscoveryConfig::default(), &NativeDistance);
         let heldout = workload_training_set(&ws2, &r2);
-        let preds = models.workload_forest.predict_batch(&heldout.rows);
+        let preds = models.workload_forest.predict_batch(heldout.x());
         let acc = accuracy(&heldout.labels, &preds);
         assert!(acc > 0.9, "held-out accuracy {acc}");
     }

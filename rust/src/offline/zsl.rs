@@ -132,7 +132,7 @@ mod tests {
         let rows: Vec<Vec<f64>> = (0..8)
             .map(|i| vec![level + spread * (i % 3) as f64, 2.0 * level])
             .collect();
-        Characterization::from_rows(&rows)
+        Characterization::from_vec_rows(&rows)
     }
 
     fn db_with_pure(levels: &[f64]) -> WorkloadDb {
@@ -192,12 +192,10 @@ mod tests {
         let r = synthesize(&mut db, &cfg, &mut rng);
         let (label, _, _) = r.classes[0];
         let proto = db.get(label).unwrap().centroid.clone();
-        let rows: Vec<&Vec<f64>> = r
+        let rows: Vec<&[f64]> = r
             .instances
-            .rows
             .iter()
-            .zip(&r.instances.labels)
-            .filter(|(_, &l)| l == label)
+            .filter(|&(_, l)| l == label)
             .map(|(r, _)| r)
             .collect();
         let mean0: f64 =

@@ -12,9 +12,16 @@
 //!   training.
 //! * `runtime::nn::MlpClassifier` implements the same trait through the
 //!   PJRT artifact (see `runtime::nn`).
+//!
+//! All centroid tables live in contiguous `Matrix` storage. The
+//! classifiers the coordinator installs on-line ([`CentroidClassifier`],
+//! [`GatedForestClassifier`]) perform no heap allocation in `classify`
+//! (this is the per-window hot loop); [`ForestWindowClassifier`] keeps
+//! the seed's soft-vote semantics and allocates per call.
 
 use super::context::UNKNOWN;
 use crate::knowledge::WorkloadDb;
+use crate::linalg::{nearest_row, sq_dist, Matrix};
 use crate::ml::forest::RandomForest;
 
 /// A window-level workload classifier.
@@ -25,6 +32,8 @@ pub trait WindowClassifier {
 }
 
 /// Random-forest driver with a soft-vote confidence threshold.
+/// (The soft vote allocates per call; [`GatedForestClassifier`] is the
+/// allocation-free hard-vote hot path the coordinator installs.)
 pub struct ForestWindowClassifier {
     pub forest: RandomForest,
     /// Minimum winning-class vote share; below it -> UNKNOWN.
@@ -52,8 +61,9 @@ impl WindowClassifier for ForestWindowClassifier {
 
 /// Nearest-centroid against the WorkloadDB (bootstrap classifier).
 pub struct CentroidClassifier {
-    /// (label, centroid) pairs snapshotted from the DB.
-    centroids: Vec<(u32, Vec<f64>)>,
+    labels: Vec<u32>,
+    /// One centroid per row, aligned with `labels`.
+    centroids: Matrix,
     /// Maximum accepted distance; beyond it -> UNKNOWN.
     pub max_distance: f64,
 }
@@ -61,37 +71,30 @@ pub struct CentroidClassifier {
 impl CentroidClassifier {
     /// Snapshot the real (non-synthetic) workload centroids from the DB.
     pub fn from_db(db: &WorkloadDb, max_distance: f64) -> CentroidClassifier {
-        let centroids = db
-            .entries()
-            .filter(|e| !e.synthetic)
-            .map(|e| (e.label, e.centroid.clone()))
-            .collect();
-        CentroidClassifier { centroids, max_distance }
+        let mut labels = Vec::new();
+        let mut centroids = Matrix::new();
+        for e in db.entries().filter(|e| !e.synthetic) {
+            labels.push(e.label);
+            centroids.push_row(&e.centroid);
+        }
+        CentroidClassifier { labels, centroids, max_distance }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.centroids.is_empty()
+        self.labels.is_empty()
     }
 }
 
 impl WindowClassifier for CentroidClassifier {
     fn classify(&self, features: &[f64]) -> u32 {
-        let best = self
-            .centroids
-            .iter()
-            .map(|(l, c)| {
-                let d: f64 = c
-                    .iter()
-                    .zip(features)
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum::<f64>()
-                    .sqrt();
-                (*l, d)
-            })
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        match best {
-            Some((l, d)) if d <= self.max_distance => l,
-            _ => UNKNOWN,
+        if self.labels.is_empty() {
+            return UNKNOWN;
+        }
+        let (best, best_d2) = nearest_row(&self.centroids, features);
+        if best_d2 <= self.max_distance * self.max_distance {
+            self.labels[best]
+        } else {
+            UNKNOWN
         }
     }
 }
@@ -105,9 +108,10 @@ impl WindowClassifier for CentroidClassifier {
 /// wrong-workload measurements.
 pub struct GatedForestClassifier {
     pub forest: RandomForest,
-    /// (label, centroid) for every label the gate knows. Labels absent
-    /// here (e.g. ZSL synthetic classes) are accepted ungated.
-    centroids: std::collections::BTreeMap<u32, Vec<f64>>,
+    /// Labels the gate knows, aligned with `centroids` rows. Labels
+    /// absent here (e.g. ZSL synthetic classes) are accepted ungated.
+    labels: Vec<u32>,
+    centroids: Matrix,
     pub max_distance: f64,
     pub min_confidence: f64,
 }
@@ -119,9 +123,16 @@ impl GatedForestClassifier {
         max_distance: f64,
         min_confidence: f64,
     ) -> GatedForestClassifier {
+        let mut labels = Vec::new();
+        let mut table = Matrix::new();
+        for (l, c) in centroids {
+            labels.push(l);
+            table.push_row(&c);
+        }
         GatedForestClassifier {
             forest,
-            centroids: centroids.into_iter().collect(),
+            labels,
+            centroids: table,
             max_distance,
             min_confidence,
         }
@@ -152,14 +163,9 @@ impl WindowClassifier for GatedForestClassifier {
         if share < self.min_confidence {
             return UNKNOWN;
         }
-        if let Some(c) = self.centroids.get(&label) {
-            let d: f64 = c
-                .iter()
-                .zip(features)
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum::<f64>()
-                .sqrt();
-            if d > self.max_distance {
+        if let Some(pos) = self.labels.iter().position(|&l| l == label) {
+            let d2 = sq_dist(self.centroids.row(pos), features);
+            if d2 > self.max_distance * self.max_distance {
                 return UNKNOWN;
             }
         }
@@ -177,8 +183,8 @@ impl WindowClassifier for UnknownClassifier {
 }
 
 /// Batch helper used by benches: classify every row, keeping UNKNOWN.
-pub fn classify_all(c: &dyn WindowClassifier, rows: &[Vec<f64>]) -> Vec<u32> {
-    rows.iter().map(|r| c.classify(r)).collect()
+pub fn classify_all(c: &dyn WindowClassifier, rows: &Matrix) -> Vec<u32> {
+    rows.iter_rows().map(|r| c.classify(r)).collect()
 }
 
 #[cfg(test)]
@@ -217,13 +223,13 @@ mod tests {
         let rows0: Vec<Vec<f64>> = vec![vec![0.0, 0.0], vec![0.2, 0.1]];
         let rows1: Vec<Vec<f64>> = vec![vec![10.0, 10.0], vec![10.1, 9.9]];
         let l0 = db.insert_new(
-            Characterization::from_rows(&rows0),
+            Characterization::from_vec_rows(&rows0),
             vec![0.1, 0.05],
             2,
             false,
         );
         let l1 = db.insert_new(
-            Characterization::from_rows(&rows1),
+            Characterization::from_vec_rows(&rows1),
             vec![10.05, 9.95],
             2,
             false,
@@ -238,7 +244,7 @@ mod tests {
     fn centroid_skips_synthetic_entries() {
         let mut db = WorkloadDb::new();
         db.insert_new(
-            Characterization::from_rows(&[vec![0.0], vec![0.1]]),
+            Characterization::from_vec_rows(&[vec![0.0], vec![0.1]]),
             vec![0.05],
             2,
             true, // synthetic
@@ -246,6 +252,26 @@ mod tests {
         let c = CentroidClassifier::from_db(&db, 100.0);
         assert!(c.is_empty());
         assert_eq!(c.classify(&[0.0]), UNKNOWN);
+    }
+
+    #[test]
+    fn classify_all_maps_rows() {
+        let mut db = WorkloadDb::new();
+        db.insert_new(
+            Characterization::from_vec_rows(&[vec![0.0], vec![0.2]]),
+            vec![0.1],
+            2,
+            false,
+        );
+        let c = CentroidClassifier::from_db(&db, 1.0);
+        let rows = crate::linalg::Matrix::from_rows(&[
+            vec![0.0],
+            vec![50.0],
+        ]);
+        let out = classify_all(&c, &rows);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], 0);
+        assert_eq!(out[1], UNKNOWN);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use super::change_detector::{ChangeDetector, ChangeDetectorConfig};
 use super::classifier::{UnknownClassifier, WindowClassifier};
 use super::context::{ContextStream, WorkloadContext, UNKNOWN};
 use super::predictor::{LabelPredictor, MarkovPredictor};
-use crate::features::{AnalyticWindow, ObservationWindow};
+use crate::features::{zero_analytic, AnalyticVec, ObservationWindow, ANALYTIC_WIDTH};
 use std::sync::{Arc, Mutex};
 
 pub struct OnlinePipeline {
@@ -28,8 +28,14 @@ pub struct OnlinePipeline {
     /// Markov model kept warm online regardless of the active predictor
     /// (it is also the fallback when the LSTM has no signal).
     markov: MarkovPredictor,
-    /// Previous analytic window (for the rate-of-change transform).
-    prev_analytic: Option<AnalyticWindow>,
+    /// Fixed-width scratch buffers: the analytic widths are static, so
+    /// the steady-state `observe` path never allocates (§Perf) — the
+    /// current / previous analytic vectors and the rate-of-change vector
+    /// are filled in place each window.
+    cur_analytic: AnalyticVec,
+    prev_analytic: AnalyticVec,
+    roc_scratch: AnalyticVec,
+    has_prev: bool,
     /// Transition types named on-line: (type id, window index).
     pub transition_log: Vec<(u32, u64)>,
     pub context: Arc<Mutex<ContextStream>>,
@@ -46,7 +52,10 @@ impl OnlinePipeline {
             predictor: Box::new(MarkovPredictor::new()),
             history: Vec::new(),
             markov: MarkovPredictor::new(),
-            prev_analytic: None,
+            cur_analytic: zero_analytic(),
+            prev_analytic: zero_analytic(),
+            roc_scratch: zero_analytic(),
+            has_prev: false,
             transition_log: Vec::new(),
             context,
             max_history: 4096,
@@ -83,33 +92,35 @@ impl OnlinePipeline {
     }
 
     /// Process one closed window; classify, predict, publish and return
-    /// the context.
+    /// the context. Steady-state calls allocate nothing in the pipeline
+    /// itself: the analytic and rate-of-change vectors are written into
+    /// fixed scratch buffers, and the classifiers the coordinator
+    /// installs (centroid / gated-forest) tally on the stack too.
     pub fn observe(&mut self, w: &ObservationWindow) -> WorkloadContext {
         let changed = self.detector.observe(w);
-        let aw = AnalyticWindow::from_observation(w);
+        w.fill_analytic(&mut self.cur_analytic);
         let label = if changed {
             // transition in progress: the steady-state classifier stays
             // silent; the TransitionClassifier names the transition type
             // from the rate-of-change features instead
-            if let (Some(tc), Some(prev)) =
-                (&self.transition_classifier, &self.prev_analytic)
-            {
-                let roc: Vec<f64> = aw
-                    .features
-                    .iter()
-                    .zip(&prev.features)
-                    .map(|(b, a)| b - a)
-                    .collect();
-                let t = tc.classify(&roc);
-                if t != UNKNOWN {
-                    self.transition_log.push((t, w.index));
+            if self.has_prev {
+                if let Some(tc) = &self.transition_classifier {
+                    for i in 0..ANALYTIC_WIDTH {
+                        self.roc_scratch[i] =
+                            self.cur_analytic[i] - self.prev_analytic[i];
+                    }
+                    let t = tc.classify(&self.roc_scratch);
+                    if t != UNKNOWN {
+                        self.transition_log.push((t, w.index));
+                    }
                 }
             }
             UNKNOWN
         } else {
-            self.classifier.classify(&aw.features)
+            self.classifier.classify(&self.cur_analytic)
         };
-        self.prev_analytic = Some(aw);
+        self.prev_analytic = self.cur_analytic;
+        self.has_prev = true;
         if label != UNKNOWN
             && self.history.last().copied() != Some(label)
         {
@@ -168,7 +179,7 @@ mod tests {
         };
         for level in [5.0, 50.0] {
             let rows = mk(level);
-            let c = Characterization::from_rows(&rows);
+            let c = Characterization::from_vec_rows(&rows);
             let centroid = c.mean_vector();
             db.insert_new(c, centroid, 2, false);
         }

@@ -212,7 +212,7 @@ mod tests {
         let mut db = WorkloadDb::new();
         let rows: Vec<Vec<f64>> = vec![vec![1.0; 4], vec![1.1; 4]];
         let label = db.insert_new(
-            Characterization::from_rows(&rows),
+            Characterization::from_vec_rows(&rows),
             vec![1.05; 4],
             2,
             false,
@@ -304,7 +304,7 @@ mod tests {
             let rows: Vec<Vec<f64>> = vec![vec![2.0; 4], vec![2.1; 4]];
             dbl.mark_drifting(
                 label,
-                Characterization::from_rows(&rows),
+                Characterization::from_vec_rows(&rows),
                 vec![2.05; 4],
                 2,
             );

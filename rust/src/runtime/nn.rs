@@ -7,23 +7,18 @@
 //! forward-path artifacts contain the L1 pallas kernels; these wrappers
 //! are exactly how "the paper's ML runs on the XLA runtime" while the
 //! coordinator stays pure rust.
+//!
+//! Everything that executes artifacts is gated behind the
+//! `runtime-artifacts` feature; without it this module exposes stubs
+//! whose constructors fail (unreachable in practice, since the stub
+//! `Runtime::load` already fails). [`SlotMap`] is pure rust and always
+//! available.
 
-use super::{literal_f32, literal_i32, literal_scalar, shapes, to_f64_vec, Artifact, Runtime};
-use crate::online::classifier::WindowClassifier;
-use crate::online::context::UNKNOWN;
-use crate::online::predictor::LabelPredictor;
-use crate::util::rng::Rng;
-use anyhow::Result;
+use super::shapes;
 use std::collections::BTreeMap;
-use std::rc::Rc;
-use std::sync::Mutex;
-
-fn init_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f64) -> Vec<f64> {
-    (0..rows * cols).map(|_| rng.normal() * scale).collect()
-}
 
 // ---------------------------------------------------------------------------
-// label <-> one-hot slot mapping
+// label <-> one-hot slot mapping (always available)
 // ---------------------------------------------------------------------------
 
 /// Workload labels are unbounded generated integers; the NN artifacts
@@ -64,504 +59,796 @@ impl SlotMap {
     }
 }
 
+#[cfg(feature = "runtime-artifacts")]
+pub use real::{ArtifactDistance, LstmPredictor, MlpClassifier, WelchAggregator};
+
+#[cfg(not(feature = "runtime-artifacts"))]
+pub use stubs::{ArtifactDistance, LstmPredictor, MlpClassifier, WelchAggregator};
+
 // ---------------------------------------------------------------------------
-// LSTM WorkloadPredictor
+// stubs (feature disabled)
 // ---------------------------------------------------------------------------
 
-/// LSTM predictor over workload-label sequences, running the `lstm_fwd`
-/// artifact for inference and `lstm_train` for BPTT+SGD training.
-pub struct LstmPredictor {
-    fwd: Rc<Artifact>,
-    train: Rc<Artifact>,
-    /// wx [C,4H], wh [H,4H], b [4H], wo [H,C], bo [C] (row-major f64).
-    params: Mutex<[Vec<f64>; 5]>,
-    slots: Mutex<SlotMap>,
+#[cfg(not(feature = "runtime-artifacts"))]
+mod stubs {
+    use crate::clustering::DistanceProvider;
+    use crate::linalg::Matrix;
+    use crate::ml::Dataset;
+    use crate::online::classifier::WindowClassifier;
+    use crate::online::context::UNKNOWN;
+    use crate::online::predictor::LabelPredictor;
+    use crate::runtime::{shapes, Runtime};
+    use crate::util::error::{Error, Result};
+    use crate::workloadgen::Sample;
+
+    fn disabled() -> Error {
+        Error::msg(
+            "NN artifacts unavailable: built without the \
+             `runtime-artifacts` cargo feature",
+        )
+    }
+
+    /// Stub LSTM predictor: unconstructible in practice (the stub
+    /// `Runtime::load` fails before `new` can be reached).
+    pub struct LstmPredictor {
+        _priv: (),
+    }
+
+    impl LstmPredictor {
+        pub fn new(_rt: &Runtime, _seed: u64) -> Result<LstmPredictor> {
+            Err(disabled())
+        }
+
+        pub fn train_on_sequence(
+            &self,
+            _seq: &[u32],
+            _epochs: usize,
+            _lr: f64,
+            _seed: u64,
+        ) -> Result<f64> {
+            Err(disabled())
+        }
+    }
+
+    impl LabelPredictor for LstmPredictor {
+        fn predict(&self, _history: &[u32], _horizon: usize) -> Option<u32> {
+            None
+        }
+    }
+
+    /// Stub MLP classifier.
+    pub struct MlpClassifier {
+        pub min_confidence: f64,
+    }
+
+    impl MlpClassifier {
+        pub fn new(_rt: &Runtime, _seed: u64) -> Result<MlpClassifier> {
+            Err(disabled())
+        }
+
+        pub fn fit(
+            &self,
+            _data: &Dataset,
+            _epochs: usize,
+            _lr: f64,
+            _seed: u64,
+        ) -> Result<f64> {
+            Err(disabled())
+        }
+
+        pub fn logits(&self, _rows: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+            Err(disabled())
+        }
+    }
+
+    impl WindowClassifier for MlpClassifier {
+        fn classify(&self, _features: &[f64]) -> u32 {
+            UNKNOWN
+        }
+    }
+
+    /// Stub batch aggregator.
+    pub struct WelchAggregator {
+        _priv: (),
+    }
+
+    impl WelchAggregator {
+        pub fn new(_rt: &Runtime) -> Result<WelchAggregator> {
+            Err(disabled())
+        }
+
+        pub fn window_size() -> usize {
+            shapes::WELCH_SAMPLES
+        }
+
+        pub fn aggregate(
+            &self,
+            _samples: &[Sample],
+            _start_index: u64,
+        ) -> Result<Vec<crate::features::ObservationWindow>> {
+            Err(disabled())
+        }
+    }
+
+    /// Stub distance provider (never constructible; pairwise_sq is
+    /// unreachable but must satisfy the trait).
+    pub struct ArtifactDistance {
+        _priv: (),
+    }
+
+    impl ArtifactDistance {
+        pub fn new(_rt: &Runtime) -> Result<ArtifactDistance> {
+            Err(disabled())
+        }
+    }
+
+    impl DistanceProvider for ArtifactDistance {
+        fn pairwise_sq(&self, rows: &Matrix) -> Vec<f64> {
+            unreachable!("stub ArtifactDistance cannot be constructed: {rows:?}")
+        }
+    }
 }
 
-impl LstmPredictor {
-    pub fn new(rt: &Runtime, seed: u64) -> Result<LstmPredictor> {
-        let (c, h) = (shapes::MAX_CLASSES, shapes::LSTM_HIDDEN);
-        let mut rng = Rng::new(seed);
-        let params = [
-            init_matrix(&mut rng, c, 4 * h, 0.25),
-            init_matrix(&mut rng, h, 4 * h, 0.25),
-            vec![0.0; 4 * h],
-            init_matrix(&mut rng, h, c, 0.25),
-            vec![0.0; c],
-        ];
-        Ok(LstmPredictor {
-            fwd: rt.get("lstm_fwd")?,
-            train: rt.get("lstm_train")?,
-            params: Mutex::new(params),
-            slots: Mutex::new(SlotMap::default()),
-        })
+// ---------------------------------------------------------------------------
+// real implementations (feature enabled)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "runtime-artifacts")]
+mod real {
+    use super::SlotMap;
+    use crate::linalg::Matrix;
+    use crate::online::classifier::WindowClassifier;
+    use crate::online::context::UNKNOWN;
+    use crate::online::predictor::LabelPredictor;
+    use crate::runtime::{
+        literal_f32, literal_i32, literal_scalar, shapes, to_f64_vec,
+        Artifact, Literal, Runtime,
+    };
+    use crate::util::error::Result;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::rc::Rc;
+    use std::sync::Mutex;
+
+    fn init_matrix(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        scale: f64,
+    ) -> Vec<f64> {
+        (0..rows * cols).map(|_| rng.normal() * scale).collect()
     }
 
-    fn param_literals(params: &[Vec<f64>; 5]) -> Result<Vec<xla::Literal>> {
-        let (c, h) = (shapes::MAX_CLASSES as i64, shapes::LSTM_HIDDEN as i64);
-        Ok(vec![
-            literal_f32(&params[0], &[c, 4 * h])?,
-            literal_f32(&params[1], &[h, 4 * h])?,
-            literal_f32(&params[2], &[4 * h])?,
-            literal_f32(&params[3], &[h, c])?,
-            literal_f32(&params[4], &[c])?,
-        ])
+    // -----------------------------------------------------------------------
+    // LSTM WorkloadPredictor
+    // -----------------------------------------------------------------------
+
+    /// LSTM predictor over workload-label sequences, running the
+    /// `lstm_fwd` artifact for inference and `lstm_train` for BPTT+SGD
+    /// training.
+    pub struct LstmPredictor {
+        fwd: Rc<Artifact>,
+        train: Rc<Artifact>,
+        /// wx [C,4H], wh [H,4H], b [4H], wo [H,C], bo [C] (row-major f64).
+        params: Mutex<[Vec<f64>; 5]>,
+        slots: Mutex<SlotMap>,
     }
 
-    /// One-hot encode the last LSTM_SEQ labels (left-padded with zeros).
-    fn encode_seq(slots: &mut SlotMap, history: &[u32]) -> Vec<f64> {
-        let (t, c) = (shapes::LSTM_SEQ, shapes::MAX_CLASSES);
-        let mut seq = vec![0.0; t * c];
-        let tail: Vec<u32> = history
-            .iter()
-            .rev()
-            .take(t)
-            .rev()
-            .copied()
-            .collect();
-        let offset = t - tail.len();
-        for (j, &label) in tail.iter().enumerate() {
-            let s = slots.slot_of(label);
-            seq[(offset + j) * c + s] = 1.0;
+    impl LstmPredictor {
+        pub fn new(rt: &Runtime, seed: u64) -> Result<LstmPredictor> {
+            let (c, h) = (shapes::MAX_CLASSES, shapes::LSTM_HIDDEN);
+            let mut rng = Rng::new(seed);
+            let params = [
+                init_matrix(&mut rng, c, 4 * h, 0.25),
+                init_matrix(&mut rng, h, 4 * h, 0.25),
+                vec![0.0; 4 * h],
+                init_matrix(&mut rng, h, c, 0.25),
+                vec![0.0; c],
+            ];
+            Ok(LstmPredictor {
+                fwd: rt.get("lstm_fwd")?,
+                train: rt.get("lstm_train")?,
+                params: Mutex::new(params),
+                slots: Mutex::new(SlotMap::default()),
+            })
         }
-        seq
-    }
 
-    fn forward_slot(&self, history: &[u32]) -> Result<Option<usize>> {
-        if history.is_empty() {
-            return Ok(None);
+        fn param_literals(params: &[Vec<f64>; 5]) -> Result<Vec<Literal>> {
+            let (c, h) =
+                (shapes::MAX_CLASSES as i64, shapes::LSTM_HIDDEN as i64);
+            Ok(vec![
+                literal_f32(&params[0], &[c, 4 * h])?,
+                literal_f32(&params[1], &[h, 4 * h])?,
+                literal_f32(&params[2], &[4 * h])?,
+                literal_f32(&params[3], &[h, c])?,
+                literal_f32(&params[4], &[c])?,
+            ])
         }
-        let params = self.params.lock().unwrap();
-        let mut slots = self.slots.lock().unwrap();
-        let seq = Self::encode_seq(&mut slots, history);
-        let n_known = slots.len();
-        drop(slots);
-        let (t, c) = (shapes::LSTM_SEQ as i64, shapes::MAX_CLASSES as i64);
-        let mut args = Self::param_literals(&params)?;
-        args.push(literal_f32(&seq, &[1, t, c])?);
-        let out = self.fwd.run(&args)?;
-        let logits = to_f64_vec(&out[0])?;
-        // argmax over the slots that map to known labels
-        let best = logits[..n_known.max(1)]
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i);
-        Ok(best)
-    }
 
-    /// Train on a label sequence: sliding windows of LSTM_SEQ + next
-    /// label, shuffled into LSTM_BATCH minibatches. Returns final loss.
-    pub fn train_on_sequence(
-        &self,
-        seq: &[u32],
-        epochs: usize,
-        lr: f64,
-        seed: u64,
-    ) -> Result<f64> {
-        let (t, c, b) =
-            (shapes::LSTM_SEQ, shapes::MAX_CLASSES, shapes::LSTM_BATCH);
-        if seq.len() < 3 {
-            return Ok(f64::NAN);
-        }
-        // build examples (input window, target slot)
-        let mut slots = self.slots.lock().unwrap();
-        let mut examples: Vec<(Vec<f64>, i32)> = Vec::new();
-        for end in 1..seq.len() {
-            let start = end.saturating_sub(t);
-            let x = Self::encode_seq(&mut slots, &seq[start..end]);
-            let y = slots.slot_of(seq[end]) as i32;
-            examples.push((x, y));
-        }
-        drop(slots);
-
-        let mut rng = Rng::new(seed);
-        let mut last_loss = f64::NAN;
-        for _ in 0..epochs {
-            rng.shuffle(&mut examples);
-            for chunk in examples.chunks(b) {
-                // pad the minibatch by repeating examples
-                let mut xs = Vec::with_capacity(b * t * c);
-                let mut ys = Vec::with_capacity(b);
-                for i in 0..b {
-                    let (x, y) = &chunk[i % chunk.len()];
-                    xs.extend_from_slice(x);
-                    ys.push(*y);
-                }
-                let mut params = self.params.lock().unwrap();
-                let mut args = Self::param_literals(&params)?;
-                args.push(literal_f32(
-                    &xs,
-                    &[b as i64, t as i64, c as i64],
-                )?);
-                args.push(literal_i32(&ys, &[b as i64])?);
-                args.push(literal_scalar(lr));
-                let out = self.train.run(&args)?;
-                last_loss = to_f64_vec(&out[0])?[0];
-                for (k, p) in params.iter_mut().enumerate() {
-                    *p = to_f64_vec(&out[k + 1])?;
-                }
+        /// One-hot encode the last LSTM_SEQ labels (left-padded with zeros).
+        fn encode_seq(slots: &mut SlotMap, history: &[u32]) -> Vec<f64> {
+            let (t, c) = (shapes::LSTM_SEQ, shapes::MAX_CLASSES);
+            let mut seq = vec![0.0; t * c];
+            let tail: Vec<u32> = history
+                .iter()
+                .rev()
+                .take(t)
+                .rev()
+                .copied()
+                .collect();
+            let offset = t - tail.len();
+            for (j, &label) in tail.iter().enumerate() {
+                let s = slots.slot_of(label);
+                seq[(offset + j) * c + s] = 1.0;
             }
+            seq
         }
-        Ok(last_loss)
-    }
-}
 
-impl LabelPredictor for LstmPredictor {
-    fn predict(&self, history: &[u32], horizon: usize) -> Option<u32> {
-        // roll the 1-step prediction forward for longer horizons
-        let mut hist: Vec<u32> = history.to_vec();
-        let mut out = None;
-        for _ in 0..horizon.max(1) {
-            let slot = self.forward_slot(&hist).ok()??;
-            let label = self.slots.lock().unwrap().label_of(slot)?;
-            hist.push(label);
-            out = Some(label);
-        }
-        out
-    }
-}
-
-// ---------------------------------------------------------------------------
-// MLP workload classifier
-// ---------------------------------------------------------------------------
-
-/// Two-layer MLP classifier over analytic windows, running `mlp_fwd` /
-/// `mlp_train`. Implements [`WindowClassifier`] so the on-line pipeline
-/// can use it interchangeably with the random forest.
-pub struct MlpClassifier {
-    fwd: Rc<Artifact>,
-    train: Rc<Artifact>,
-    /// w1 [F,H], b1 [H], w2 [H,C], b2 [C]
-    params: Mutex<[Vec<f64>; 4]>,
-    slots: Mutex<SlotMap>,
-    /// feature standardisation (mean, std) fitted at train time
-    moments: Mutex<Vec<(f64, f64)>>,
-    pub min_confidence: f64,
-}
-
-impl MlpClassifier {
-    pub fn new(rt: &Runtime, seed: u64) -> Result<MlpClassifier> {
-        let (f, h, c) =
-            (shapes::MLP_FEATURES, shapes::MLP_HIDDEN, shapes::MAX_CLASSES);
-        let mut rng = Rng::new(seed);
-        let params = [
-            init_matrix(&mut rng, f, h, (2.0 / f as f64).sqrt()),
-            vec![0.0; h],
-            init_matrix(&mut rng, h, c, (2.0 / h as f64).sqrt()),
-            vec![0.0; c],
-        ];
-        Ok(MlpClassifier {
-            fwd: rt.get("mlp_fwd")?,
-            train: rt.get("mlp_train")?,
-            params: Mutex::new(params),
-            slots: Mutex::new(SlotMap::default()),
-            moments: Mutex::new(vec![(0.0, 1.0); shapes::MLP_FEATURES]),
-            min_confidence: 0.6,
-        })
-    }
-
-    fn param_literals(params: &[Vec<f64>; 4]) -> Result<Vec<xla::Literal>> {
-        let (f, h, c) = (
-            shapes::MLP_FEATURES as i64,
-            shapes::MLP_HIDDEN as i64,
-            shapes::MAX_CLASSES as i64,
-        );
-        Ok(vec![
-            literal_f32(&params[0], &[f, h])?,
-            literal_f32(&params[1], &[h])?,
-            literal_f32(&params[2], &[h, c])?,
-            literal_f32(&params[3], &[c])?,
-        ])
-    }
-
-    fn standardise(&self, row: &[f64]) -> Vec<f64> {
-        let m = self.moments.lock().unwrap();
-        row.iter().zip(m.iter()).map(|(v, (mu, sd))| (v - mu) / sd).collect()
-    }
-
-    /// Batch logits for up to MLP_BATCH rows (padded internally).
-    pub fn logits(&self, rows: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        let (bsz, f, c) =
-            (shapes::MLP_BATCH, shapes::MLP_FEATURES, shapes::MAX_CLASSES);
-        assert!(rows.len() <= bsz);
-        let mut xs = vec![0.0; bsz * f];
-        for (i, r) in rows.iter().enumerate() {
-            let sr = self.standardise(r);
-            xs[i * f..(i + 1) * f].copy_from_slice(&sr);
-        }
-        let params = self.params.lock().unwrap();
-        let mut args = Self::param_literals(&params)?;
-        args.push(literal_f32(&xs, &[bsz as i64, f as i64])?);
-        let out = self.fwd.run(&args)?;
-        let flat = to_f64_vec(&out[0])?;
-        Ok(rows
-            .iter()
-            .enumerate()
-            .map(|(i, _)| flat[i * c..(i + 1) * c].to_vec())
-            .collect())
-    }
-
-    /// Train on a labelled dataset (epochs of shuffled minibatches).
-    /// Fits the standardisation moments first. Returns final loss.
-    pub fn fit(
-        &self,
-        data: &crate::ml::Dataset,
-        epochs: usize,
-        lr: f64,
-        seed: u64,
-    ) -> Result<f64> {
-        assert_eq!(data.width(), shapes::MLP_FEATURES);
-        *self.moments.lock().unwrap() = data.feature_moments();
-        let (bsz, f) = (shapes::MLP_BATCH, shapes::MLP_FEATURES);
-        let mut slots = self.slots.lock().unwrap();
-        let examples: Vec<(Vec<f64>, i32)> = data
-            .rows
-            .iter()
-            .zip(&data.labels)
-            .map(|(r, &l)| (self.standardise(r), slots.slot_of(l) as i32))
-            .collect();
-        drop(slots);
-
-        let mut order: Vec<usize> = (0..examples.len()).collect();
-        let mut rng = Rng::new(seed);
-        let mut last_loss = f64::NAN;
-        for _ in 0..epochs {
-            rng.shuffle(&mut order);
-            for chunk in order.chunks(bsz) {
-                let mut xs = vec![0.0; bsz * f];
-                let mut ys = vec![0i32; bsz];
-                for i in 0..bsz {
-                    let (x, y) = &examples[chunk[i % chunk.len()]];
-                    xs[i * f..(i + 1) * f].copy_from_slice(x);
-                    ys[i] = *y;
-                }
-                let mut params = self.params.lock().unwrap();
-                let mut args = Self::param_literals(&params)?;
-                args.push(literal_f32(&xs, &[bsz as i64, f as i64])?);
-                args.push(literal_i32(&ys, &[bsz as i64])?);
-                args.push(literal_scalar(lr));
-                let out = self.train.run(&args)?;
-                last_loss = to_f64_vec(&out[0])?[0];
-                for (k, p) in params.iter_mut().enumerate() {
-                    *p = to_f64_vec(&out[k + 1])?;
-                }
+        fn forward_slot(&self, history: &[u32]) -> Result<Option<usize>> {
+            if history.is_empty() {
+                return Ok(None);
             }
+            let params = self.params.lock().unwrap();
+            let mut slots = self.slots.lock().unwrap();
+            let seq = Self::encode_seq(&mut slots, history);
+            let n_known = slots.len();
+            drop(slots);
+            let (t, c) = (shapes::LSTM_SEQ as i64, shapes::MAX_CLASSES as i64);
+            let mut args = Self::param_literals(&params)?;
+            args.push(literal_f32(&seq, &[1, t, c])?);
+            let out = self.fwd.run(&args)?;
+            let logits = to_f64_vec(&out[0])?;
+            // argmax over the slots that map to known labels
+            let best = logits[..n_known.max(1)]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i);
+            Ok(best)
         }
-        Ok(last_loss)
-    }
-}
 
-impl WindowClassifier for MlpClassifier {
-    fn classify(&self, features: &[f64]) -> u32 {
-        let logits = match self.logits(&[features.to_vec()]) {
-            Ok(l) => l,
-            Err(_) => return UNKNOWN,
-        };
-        let row = &logits[0];
-        let slots = self.slots.lock().unwrap();
-        let n = slots.len().max(1);
-        // softmax over known slots
-        let max = row[..n].iter().copied().fold(f64::NEG_INFINITY, f64::max);
-        let exps: Vec<f64> = row[..n].iter().map(|&l| (l - max).exp()).collect();
-        let z: f64 = exps.iter().sum();
-        let (best, share) = exps
-            .iter()
-            .enumerate()
-            .map(|(i, &e)| (i, e / z))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap();
-        if share < self.min_confidence {
-            return UNKNOWN;
-        }
-        slots.label_of(best).unwrap_or(UNKNOWN)
-    }
-}
+        /// Train on a label sequence: sliding windows of LSTM_SEQ + next
+        /// label, shuffled into LSTM_BATCH minibatches. Returns final loss.
+        pub fn train_on_sequence(
+            &self,
+            seq: &[u32],
+            epochs: usize,
+            lr: f64,
+            seed: u64,
+        ) -> Result<f64> {
+            let (t, c, b) =
+                (shapes::LSTM_SEQ, shapes::MAX_CLASSES, shapes::LSTM_BATCH);
+            if seq.len() < 3 {
+                return Ok(f64::NAN);
+            }
+            // build examples (input window, target slot)
+            let mut slots = self.slots.lock().unwrap();
+            let mut examples: Vec<(Vec<f64>, i32)> = Vec::new();
+            for end in 1..seq.len() {
+                let start = end.saturating_sub(t);
+                let x = Self::encode_seq(&mut slots, &seq[start..end]);
+                let y = slots.slot_of(seq[end]) as i32;
+                examples.push((x, y));
+            }
+            drop(slots);
 
-// ---------------------------------------------------------------------------
-// Artifact-backed batch window aggregation (welch_stats kernel)
-// ---------------------------------------------------------------------------
-
-/// Batch observation-window aggregation through the `welch_stats`
-/// artifact (the L1 reduction kernel): the off-line analyser's re-scan
-/// of landed raw samples (Algorithm 2's batch ChangeDetector input)
-/// computes per-window mean/variance on the XLA runtime instead of the
-/// scalar loop. Numerically equivalent to
-/// `monitor::aggregate_samples` (asserted in tests and the integration
-/// suite).
-pub struct WelchAggregator {
-    art: Rc<Artifact>,
-}
-
-impl WelchAggregator {
-    pub fn new(rt: &Runtime) -> Result<WelchAggregator> {
-        Ok(WelchAggregator { art: rt.get("welch_stats")? })
-    }
-
-    /// Window size this artifact was compiled for.
-    pub fn window_size() -> usize {
-        shapes::WELCH_SAMPLES
-    }
-
-    /// Aggregate raw samples into observation windows (window size fixed
-    /// at WELCH_SAMPLES). Trailing partial window dropped, matching the
-    /// native aggregator. Ground-truth tags are carried through from the
-    /// samples exactly as `monitor::aggregate_samples` does.
-    pub fn aggregate(
-        &self,
-        samples: &[crate::workloadgen::Sample],
-        start_index: u64,
-    ) -> Result<Vec<crate::features::ObservationWindow>> {
-        use crate::features::NUM_FEATURES;
-        let s = shapes::WELCH_SAMPLES;
-        let wb = shapes::WELCH_WINDOWS;
-        let f = NUM_FEATURES;
-        let n_windows = samples.len() / s;
-        let mut out = Vec::with_capacity(n_windows);
-
-        let mut widx = 0usize;
-        while widx < n_windows {
-            let batch = (n_windows - widx).min(wb);
-            // pack [wb, s, f]; unused windows zero-padded
-            let mut xs = vec![0.0f64; wb * s * f];
-            for w in 0..batch {
-                for si in 0..s {
-                    let sample = &samples[(widx + w) * s + si];
-                    for fi in 0..f {
-                        xs[w * s * f + si * f + fi] =
-                            sample.features[fi];
+            let mut rng = Rng::new(seed);
+            let mut last_loss = f64::NAN;
+            for _ in 0..epochs {
+                rng.shuffle(&mut examples);
+                for chunk in examples.chunks(b) {
+                    // pad the minibatch by repeating examples
+                    let mut xs = Vec::with_capacity(b * t * c);
+                    let mut ys = Vec::with_capacity(b);
+                    for i in 0..b {
+                        let (x, y) = &chunk[i % chunk.len()];
+                        xs.extend_from_slice(x);
+                        ys.push(*y);
+                    }
+                    let mut params = self.params.lock().unwrap();
+                    let mut args = Self::param_literals(&params)?;
+                    args.push(literal_f32(
+                        &xs,
+                        &[b as i64, t as i64, c as i64],
+                    )?);
+                    args.push(literal_i32(&ys, &[b as i64])?);
+                    args.push(literal_scalar(lr));
+                    let out = self.train.run(&args)?;
+                    last_loss = to_f64_vec(&out[0])?[0];
+                    for (k, p) in params.iter_mut().enumerate() {
+                        *p = to_f64_vec(&out[k + 1])?;
                     }
                 }
             }
-            let lit = literal_f32(
-                &xs,
-                &[wb as i64, s as i64, f as i64],
-            )?;
-            let res = self.art.run(&[lit])?;
-            let mean = to_f64_vec(&res[0])?;
-            let var = to_f64_vec(&res[1])?;
-            for w in 0..batch {
-                let chunk = &samples[(widx + w) * s..(widx + w + 1) * s];
-                let tags: Vec<crate::workloadgen::TruthTag> =
-                    chunk.iter().map(|x| x.truth).collect();
-                let mut mw = [0.0; NUM_FEATURES];
-                let mut vw = [0.0; NUM_FEATURES];
-                mw.copy_from_slice(&mean[w * f..(w + 1) * f]);
-                vw.copy_from_slice(&var[w * f..(w + 1) * f]);
-                out.push(crate::features::ObservationWindow {
-                    index: start_index + (widx + w) as u64,
-                    time: chunk.last().unwrap().time,
-                    samples: s,
-                    mean: mw,
-                    var: vw,
-                    truth: window_truth_of(&tags),
-                });
+            Ok(last_loss)
+        }
+    }
+
+    impl LabelPredictor for LstmPredictor {
+        fn predict(&self, history: &[u32], horizon: usize) -> Option<u32> {
+            // roll the 1-step prediction forward for longer horizons
+            let mut hist: Vec<u32> = history.to_vec();
+            let mut out = None;
+            for _ in 0..horizon.max(1) {
+                let slot = self.forward_slot(&hist).ok()??;
+                let label = self.slots.lock().unwrap().label_of(slot)?;
+                hist.push(label);
+                out = Some(label);
             }
-            widx += batch;
-        }
-        Ok(out)
-    }
-}
-
-/// Majority steady tag (mirrors the monitor's internal rule).
-fn window_truth_of(tags: &[crate::workloadgen::TruthTag]) -> Option<u32> {
-    let mut counts = BTreeMap::new();
-    for t in tags {
-        if let crate::workloadgen::TruthTag::Steady(id) = t {
-            *counts.entry(*id).or_insert(0usize) += 1;
+            out
         }
     }
-    let (best, n) = counts.into_iter().max_by_key(|&(_, n)| n)?;
-    if n * 2 > tags.len() {
-        Some(best)
-    } else {
-        None
+
+    // -----------------------------------------------------------------------
+    // MLP workload classifier
+    // -----------------------------------------------------------------------
+
+    /// Two-layer MLP classifier over analytic windows, running `mlp_fwd` /
+    /// `mlp_train`. Implements [`WindowClassifier`] so the on-line pipeline
+    /// can use it interchangeably with the random forest.
+    pub struct MlpClassifier {
+        fwd: Rc<Artifact>,
+        train: Rc<Artifact>,
+        /// w1 [F,H], b1 [H], w2 [H,C], b2 [C]
+        params: Mutex<[Vec<f64>; 4]>,
+        slots: Mutex<SlotMap>,
+        /// feature standardisation (mean, std) fitted at train time
+        moments: Mutex<Vec<(f64, f64)>>,
+        pub min_confidence: f64,
     }
-}
 
-// ---------------------------------------------------------------------------
-// Artifact-backed distance provider for DBSCAN
-// ---------------------------------------------------------------------------
-
-/// Pairwise-distance provider that routes the O(n²) distance matrix
-/// through the `pairwise_dist` artifact (the tiled pallas kernel),
-/// batching rows into DIST_N x DIST_N tiles.
-pub struct ArtifactDistance {
-    art: Rc<Artifact>,
-}
-
-impl ArtifactDistance {
-    pub fn new(rt: &Runtime) -> Result<ArtifactDistance> {
-        Ok(ArtifactDistance { art: rt.get("pairwise_dist")? })
-    }
-}
-
-impl crate::clustering::DistanceProvider for ArtifactDistance {
-    fn pairwise_sq(&self, rows: &[Vec<f64>]) -> Vec<f64> {
-        let n = rows.len();
-        if n == 0 {
-            return vec![];
+    impl MlpClassifier {
+        pub fn new(rt: &Runtime, seed: u64) -> Result<MlpClassifier> {
+            let (f, h, c) = (
+                shapes::MLP_FEATURES,
+                shapes::MLP_HIDDEN,
+                shapes::MAX_CLASSES,
+            );
+            let mut rng = Rng::new(seed);
+            let params = [
+                init_matrix(&mut rng, f, h, (2.0 / f as f64).sqrt()),
+                vec![0.0; h],
+                init_matrix(&mut rng, h, c, (2.0 / h as f64).sqrt()),
+                vec![0.0; c],
+            ];
+            Ok(MlpClassifier {
+                fwd: rt.get("mlp_fwd")?,
+                train: rt.get("mlp_train")?,
+                params: Mutex::new(params),
+                slots: Mutex::new(SlotMap::default()),
+                moments: Mutex::new(vec![(0.0, 1.0); shapes::MLP_FEATURES]),
+                min_confidence: 0.6,
+            })
         }
-        let f = shapes::DIST_F;
-        assert_eq!(
-            rows[0].len(),
-            f,
-            "ArtifactDistance expects analytic rows of width {f}"
-        );
-        let tile = shapes::DIST_N;
-        let tiles = n.div_ceil(tile);
-        // zero-padded row blocks
-        let block_of = |ti: usize| -> Vec<f64> {
-            let mut b = vec![0.0; tile * f];
-            for i in 0..tile {
-                let r = ti * tile + i;
-                if r < n {
-                    b[i * f..(i + 1) * f].copy_from_slice(&rows[r]);
+
+        fn param_literals(params: &[Vec<f64>; 4]) -> Result<Vec<Literal>> {
+            let (f, h, c) = (
+                shapes::MLP_FEATURES as i64,
+                shapes::MLP_HIDDEN as i64,
+                shapes::MAX_CLASSES as i64,
+            );
+            Ok(vec![
+                literal_f32(&params[0], &[f, h])?,
+                literal_f32(&params[1], &[h])?,
+                literal_f32(&params[2], &[h, c])?,
+                literal_f32(&params[3], &[c])?,
+            ])
+        }
+
+        fn standardise(&self, row: &[f64]) -> Vec<f64> {
+            let m = self.moments.lock().unwrap();
+            row.iter()
+                .zip(m.iter())
+                .map(|(v, (mu, sd))| (v - mu) / sd)
+                .collect()
+        }
+
+        /// Batch logits for up to MLP_BATCH rows (padded internally).
+        pub fn logits(&self, rows: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+            let (bsz, f, c) = (
+                shapes::MLP_BATCH,
+                shapes::MLP_FEATURES,
+                shapes::MAX_CLASSES,
+            );
+            assert!(rows.len() <= bsz);
+            let mut xs = vec![0.0; bsz * f];
+            for (i, r) in rows.iter().enumerate() {
+                let sr = self.standardise(r);
+                xs[i * f..(i + 1) * f].copy_from_slice(&sr);
+            }
+            let params = self.params.lock().unwrap();
+            let mut args = Self::param_literals(&params)?;
+            args.push(literal_f32(&xs, &[bsz as i64, f as i64])?);
+            let out = self.fwd.run(&args)?;
+            let flat = to_f64_vec(&out[0])?;
+            Ok(rows
+                .iter()
+                .enumerate()
+                .map(|(i, _)| flat[i * c..(i + 1) * c].to_vec())
+                .collect())
+        }
+
+        /// Train on a labelled dataset (epochs of shuffled minibatches).
+        /// Fits the standardisation moments first. Returns final loss.
+        pub fn fit(
+            &self,
+            data: &crate::ml::Dataset,
+            epochs: usize,
+            lr: f64,
+            seed: u64,
+        ) -> Result<f64> {
+            assert_eq!(data.width(), shapes::MLP_FEATURES);
+            *self.moments.lock().unwrap() = data.feature_moments();
+            let (bsz, f) = (shapes::MLP_BATCH, shapes::MLP_FEATURES);
+            let mut slots = self.slots.lock().unwrap();
+            let examples: Vec<(Vec<f64>, i32)> = data
+                .iter()
+                .map(|(r, l)| (self.standardise(r), slots.slot_of(l) as i32))
+                .collect();
+            drop(slots);
+
+            let mut order: Vec<usize> = (0..examples.len()).collect();
+            let mut rng = Rng::new(seed);
+            let mut last_loss = f64::NAN;
+            for _ in 0..epochs {
+                rng.shuffle(&mut order);
+                for chunk in order.chunks(bsz) {
+                    let mut xs = vec![0.0; bsz * f];
+                    let mut ys = vec![0i32; bsz];
+                    for i in 0..bsz {
+                        let (x, y) = &examples[chunk[i % chunk.len()]];
+                        xs[i * f..(i + 1) * f].copy_from_slice(x);
+                        ys[i] = *y;
+                    }
+                    let mut params = self.params.lock().unwrap();
+                    let mut args = Self::param_literals(&params)?;
+                    args.push(literal_f32(&xs, &[bsz as i64, f as i64])?);
+                    args.push(literal_i32(&ys, &[bsz as i64])?);
+                    args.push(literal_scalar(lr));
+                    let out = self.train.run(&args)?;
+                    last_loss = to_f64_vec(&out[0])?[0];
+                    for (k, p) in params.iter_mut().enumerate() {
+                        *p = to_f64_vec(&out[k + 1])?;
+                    }
                 }
             }
-            b
-        };
-        let mut out = vec![0.0; n * n];
-        for ti in 0..tiles {
-            let bx = block_of(ti);
-            let lx = literal_f32(&bx, &[tile as i64, f as i64]).unwrap();
-            for tj in ti..tiles {
-                let by = block_of(tj);
-                let ly =
-                    literal_f32(&by, &[tile as i64, f as i64]).unwrap();
-                let res = self.art.run(&[&lx, &ly].map(|l| l.clone())).unwrap();
-                let d = to_f64_vec(&res[0]).unwrap();
-                for i in 0..tile {
-                    let gi = ti * tile + i;
-                    if gi >= n {
-                        break;
-                    }
-                    for j in 0..tile {
-                        let gj = tj * tile + j;
-                        if gj >= n {
-                            continue;
+            Ok(last_loss)
+        }
+    }
+
+    impl WindowClassifier for MlpClassifier {
+        fn classify(&self, features: &[f64]) -> u32 {
+            let logits = match self.logits(&[features.to_vec()]) {
+                Ok(l) => l,
+                Err(_) => return UNKNOWN,
+            };
+            let row = &logits[0];
+            let slots = self.slots.lock().unwrap();
+            let n = slots.len().max(1);
+            // softmax over known slots
+            let max =
+                row[..n].iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let exps: Vec<f64> =
+                row[..n].iter().map(|&l| (l - max).exp()).collect();
+            let z: f64 = exps.iter().sum();
+            let (best, share) = exps
+                .iter()
+                .enumerate()
+                .map(|(i, &e)| (i, e / z))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            if share < self.min_confidence {
+                return UNKNOWN;
+            }
+            slots.label_of(best).unwrap_or(UNKNOWN)
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // Artifact-backed batch window aggregation (welch_stats kernel)
+    // -----------------------------------------------------------------------
+
+    /// Batch observation-window aggregation through the `welch_stats`
+    /// artifact (the L1 reduction kernel): the off-line analyser's re-scan
+    /// of landed raw samples (Algorithm 2's batch ChangeDetector input)
+    /// computes per-window mean/variance on the XLA runtime instead of the
+    /// scalar loop. Numerically equivalent to
+    /// `monitor::aggregate_samples` (asserted in tests and the integration
+    /// suite).
+    pub struct WelchAggregator {
+        art: Rc<Artifact>,
+    }
+
+    impl WelchAggregator {
+        pub fn new(rt: &Runtime) -> Result<WelchAggregator> {
+            Ok(WelchAggregator { art: rt.get("welch_stats")? })
+        }
+
+        /// Window size this artifact was compiled for.
+        pub fn window_size() -> usize {
+            shapes::WELCH_SAMPLES
+        }
+
+        /// Aggregate raw samples into observation windows (window size fixed
+        /// at WELCH_SAMPLES). Trailing partial window dropped, matching the
+        /// native aggregator. Ground-truth tags are carried through from the
+        /// samples exactly as `monitor::aggregate_samples` does.
+        pub fn aggregate(
+            &self,
+            samples: &[crate::workloadgen::Sample],
+            start_index: u64,
+        ) -> Result<Vec<crate::features::ObservationWindow>> {
+            use crate::features::NUM_FEATURES;
+            let s = shapes::WELCH_SAMPLES;
+            let wb = shapes::WELCH_WINDOWS;
+            let f = NUM_FEATURES;
+            let n_windows = samples.len() / s;
+            let mut out = Vec::with_capacity(n_windows);
+
+            let mut widx = 0usize;
+            while widx < n_windows {
+                let batch = (n_windows - widx).min(wb);
+                // pack [wb, s, f]; unused windows zero-padded
+                let mut xs = vec![0.0f64; wb * s * f];
+                for w in 0..batch {
+                    for si in 0..s {
+                        let sample = &samples[(widx + w) * s + si];
+                        for fi in 0..f {
+                            xs[w * s * f + si * f + fi] =
+                                sample.features[fi];
                         }
-                        let v = d[i * tile + j];
-                        out[gi * n + gj] = v;
-                        out[gj * n + gi] = v;
+                    }
+                }
+                let lit = literal_f32(
+                    &xs,
+                    &[wb as i64, s as i64, f as i64],
+                )?;
+                let res = self.art.run(&[lit])?;
+                let mean = to_f64_vec(&res[0])?;
+                let var = to_f64_vec(&res[1])?;
+                for w in 0..batch {
+                    let chunk =
+                        &samples[(widx + w) * s..(widx + w + 1) * s];
+                    let tags: Vec<crate::workloadgen::TruthTag> =
+                        chunk.iter().map(|x| x.truth).collect();
+                    let mut mw = [0.0; NUM_FEATURES];
+                    let mut vw = [0.0; NUM_FEATURES];
+                    mw.copy_from_slice(&mean[w * f..(w + 1) * f]);
+                    vw.copy_from_slice(&var[w * f..(w + 1) * f]);
+                    out.push(crate::features::ObservationWindow {
+                        index: start_index + (widx + w) as u64,
+                        time: chunk.last().unwrap().time,
+                        samples: s,
+                        mean: mw,
+                        var: vw,
+                        truth: window_truth_of(&tags),
+                    });
+                }
+                widx += batch;
+            }
+            Ok(out)
+        }
+    }
+
+    /// Majority steady tag (mirrors the monitor's internal rule).
+    fn window_truth_of(tags: &[crate::workloadgen::TruthTag]) -> Option<u32> {
+        let mut counts = BTreeMap::new();
+        for t in tags {
+            if let crate::workloadgen::TruthTag::Steady(id) = t {
+                *counts.entry(*id).or_insert(0usize) += 1;
+            }
+        }
+        let (best, n) = counts.into_iter().max_by_key(|&(_, n)| n)?;
+        if n * 2 > tags.len() {
+            Some(best)
+        } else {
+            None
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // Artifact-backed distance provider for DBSCAN
+    // -----------------------------------------------------------------------
+
+    /// Pairwise-distance provider that routes the O(n²) distance matrix
+    /// through the `pairwise_dist` artifact (the tiled pallas kernel),
+    /// batching rows into DIST_N x DIST_N tiles.
+    pub struct ArtifactDistance {
+        art: Rc<Artifact>,
+    }
+
+    impl ArtifactDistance {
+        pub fn new(rt: &Runtime) -> Result<ArtifactDistance> {
+            Ok(ArtifactDistance { art: rt.get("pairwise_dist")? })
+        }
+    }
+
+    impl crate::clustering::DistanceProvider for ArtifactDistance {
+        fn pairwise_sq(&self, rows: &Matrix) -> Vec<f64> {
+            let n = rows.n_rows();
+            if n == 0 {
+                return vec![];
+            }
+            let f = shapes::DIST_F;
+            assert_eq!(
+                rows.n_cols(),
+                f,
+                "ArtifactDistance expects analytic rows of width {f}"
+            );
+            let tile = shapes::DIST_N;
+            let tiles = n.div_ceil(tile);
+            // zero-padded row blocks
+            let block_of = |ti: usize| -> Vec<f64> {
+                let mut b = vec![0.0; tile * f];
+                for i in 0..tile {
+                    let r = ti * tile + i;
+                    if r < n {
+                        b[i * f..(i + 1) * f].copy_from_slice(rows.row(r));
+                    }
+                }
+                b
+            };
+            let mut out = vec![0.0; n * n];
+            for ti in 0..tiles {
+                let bx = block_of(ti);
+                let lx =
+                    literal_f32(&bx, &[tile as i64, f as i64]).unwrap();
+                for tj in ti..tiles {
+                    let by = block_of(tj);
+                    let ly =
+                        literal_f32(&by, &[tile as i64, f as i64]).unwrap();
+                    let res = self
+                        .art
+                        .run(&[&lx, &ly].map(|l| l.clone()))
+                        .unwrap();
+                    let d = to_f64_vec(&res[0]).unwrap();
+                    for i in 0..tile {
+                        let gi = ti * tile + i;
+                        if gi >= n {
+                            break;
+                        }
+                        for j in 0..tile {
+                            let gj = tj * tile + j;
+                            if gj >= n {
+                                continue;
+                            }
+                            let v = d[i * tile + j];
+                            out[gi * n + gj] = v;
+                            out[gj * n + gi] = v;
+                        }
                     }
                 }
             }
+            out
         }
-        out
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::clustering::{DistanceProvider, NativeDistance};
+        use crate::ml::Dataset;
+        use std::path::Path;
+
+        fn runtime() -> Runtime {
+            Runtime::load(Path::new("artifacts"))
+                .expect("run `make artifacts`")
+        }
+
+        #[test]
+        fn lstm_learns_cyclic_pattern() {
+            let rt = runtime();
+            let p = LstmPredictor::new(&rt, 0).unwrap();
+            let seq: Vec<u32> =
+                (0..120).map(|i| [3u32, 8, 5][i % 3]).collect();
+            let loss = p.train_on_sequence(&seq, 30, 0.5, 1).unwrap();
+            assert!(loss < 0.35, "final loss {loss}");
+            assert_eq!(p.predict(&[3, 8], 1), Some(5));
+            assert_eq!(p.predict(&[8, 5], 1), Some(3));
+            // multi-horizon rolls forward the cycle
+            assert_eq!(p.predict(&[3, 8, 5], 3), Some(5));
+        }
+
+        #[test]
+        fn mlp_classifies_separable_blobs() {
+            let rt = runtime();
+            let c = MlpClassifier::new(&rt, 0).unwrap();
+            let mut rng = Rng::new(2);
+            let mut d = Dataset::new();
+            for _ in 0..150 {
+                for (label, level) in [(10u32, 10.0), (20u32, 60.0)] {
+                    let row: Vec<f64> = (0..shapes::MLP_FEATURES)
+                        .map(|_| rng.normal_ms(level, 4.0))
+                        .collect();
+                    d.push(row, label);
+                }
+            }
+            let loss = c.fit(&d, 12, 0.1, 3).unwrap();
+            assert!(loss < 0.3, "loss {loss}");
+            let a: Vec<f64> = vec![10.0; shapes::MLP_FEATURES];
+            let b: Vec<f64> = vec![60.0; shapes::MLP_FEATURES];
+            assert_eq!(c.classify(&a), 10);
+            assert_eq!(c.classify(&b), 20);
+        }
+
+        #[test]
+        fn artifact_distance_matches_native() {
+            let rt = runtime();
+            let ad = ArtifactDistance::new(&rt).unwrap();
+            let mut rng = Rng::new(4);
+            // n > DIST_N to exercise tiling
+            let rows = Matrix::from_rows(
+                &(0..300)
+                    .map(|_| {
+                        (0..shapes::DIST_F)
+                            .map(|_| rng.range_f64(0.0, 50.0))
+                            .collect()
+                    })
+                    .collect::<Vec<Vec<f64>>>(),
+            );
+            let got = ad.pairwise_sq(&rows);
+            let want = NativeDistance.pairwise_sq(&rows);
+            assert_eq!(got.len(), want.len());
+            // f32 matmul formulation cancels catastrophically near zero:
+            // absolute tolerance ~0.05 on norms of ~8e4 (eps^2 used by
+            // DBSCAN is O(100), so this is 3 orders of magnitude below it)
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() < 0.05 + 1e-2 * w,
+                    "idx {i}: {g} vs {w}"
+                );
+            }
+        }
+
+        #[test]
+        fn welch_aggregator_matches_native_monitor() {
+            use crate::monitor::{aggregate_samples, MonitorConfig};
+            use crate::workloadgen::{tour_schedule, Generator};
+            let rt = runtime();
+            let agg = WelchAggregator::new(&rt).unwrap();
+            let mut g = Generator::with_default_config(5);
+            // 200 windows of 32 samples: exercises multi-batch (> 64) path
+            let trace = g.generate(&tour_schedule(3200, &[0, 2]));
+            let native = aggregate_samples(
+                &trace.samples,
+                &MonitorConfig {
+                    window_size: WelchAggregator::window_size(),
+                },
+            );
+            let via = agg.aggregate(&trace.samples, 0).unwrap();
+            assert_eq!(via.len(), native.len());
+            for (a, b) in via.iter().zip(&native) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.truth, b.truth);
+                for i in 0..crate::features::NUM_FEATURES {
+                    assert!(
+                        (a.mean[i] - b.mean[i]).abs() < 1e-3,
+                        "mean[{i}] {} vs {}",
+                        a.mean[i],
+                        b.mean[i]
+                    );
+                    assert!(
+                        (a.var[i] - b.var[i]).abs() < 1e-2,
+                        "var[{i}] {} vs {}",
+                        a.var[i],
+                        b.var[i]
+                    );
+                }
+            }
+        }
+
+        #[test]
+        fn lstm_empty_history_none() {
+            let rt = runtime();
+            let p = LstmPredictor::new(&rt, 0).unwrap();
+            assert_eq!(p.predict(&[], 1), None);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::clustering::{DistanceProvider, NativeDistance};
-    use crate::ml::Dataset;
-    use std::path::Path;
-
-    fn runtime() -> Runtime {
-        Runtime::load(Path::new("artifacts")).expect("run `make artifacts`")
-    }
 
     #[test]
     fn slotmap_assigns_and_recycles() {
@@ -571,109 +858,5 @@ mod tests {
         assert_eq!(s.slot_of(100), 0);
         assert_eq!(s.label_of(1), Some(7));
         assert_eq!(s.label_of(9), None);
-    }
-
-    #[test]
-    fn lstm_learns_cyclic_pattern() {
-        let rt = runtime();
-        let p = LstmPredictor::new(&rt, 0).unwrap();
-        let seq: Vec<u32> = (0..120).map(|i| [3u32, 8, 5][i % 3]).collect();
-        let loss = p.train_on_sequence(&seq, 30, 0.5, 1).unwrap();
-        assert!(loss < 0.35, "final loss {loss}");
-        assert_eq!(p.predict(&[3, 8], 1), Some(5));
-        assert_eq!(p.predict(&[8, 5], 1), Some(3));
-        // multi-horizon rolls forward the cycle
-        assert_eq!(p.predict(&[3, 8, 5], 3), Some(5));
-    }
-
-    #[test]
-    fn mlp_classifies_separable_blobs() {
-        let rt = runtime();
-        let c = MlpClassifier::new(&rt, 0).unwrap();
-        let mut rng = Rng::new(2);
-        let mut d = Dataset::new();
-        for _ in 0..150 {
-            for (label, level) in [(10u32, 10.0), (20u32, 60.0)] {
-                let row: Vec<f64> = (0..shapes::MLP_FEATURES)
-                    .map(|_| rng.normal_ms(level, 4.0))
-                    .collect();
-                d.push(row, label);
-            }
-        }
-        let loss = c.fit(&d, 12, 0.1, 3).unwrap();
-        assert!(loss < 0.3, "loss {loss}");
-        let a: Vec<f64> = vec![10.0; shapes::MLP_FEATURES];
-        let b: Vec<f64> = vec![60.0; shapes::MLP_FEATURES];
-        assert_eq!(c.classify(&a), 10);
-        assert_eq!(c.classify(&b), 20);
-    }
-
-    #[test]
-    fn artifact_distance_matches_native() {
-        let rt = runtime();
-        let ad = ArtifactDistance::new(&rt).unwrap();
-        let mut rng = Rng::new(4);
-        // n > DIST_N to exercise tiling
-        let rows: Vec<Vec<f64>> = (0..300)
-            .map(|_| {
-                (0..shapes::DIST_F)
-                    .map(|_| rng.range_f64(0.0, 50.0))
-                    .collect()
-            })
-            .collect();
-        let got = ad.pairwise_sq(&rows);
-        let want = NativeDistance.pairwise_sq(&rows);
-        assert_eq!(got.len(), want.len());
-        // f32 matmul formulation cancels catastrophically near zero:
-        // absolute tolerance ~0.05 on norms of ~8e4 (eps^2 used by
-        // DBSCAN is O(100), so this is 3 orders of magnitude below it)
-        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
-            assert!(
-                (g - w).abs() < 0.05 + 1e-2 * w,
-                "idx {i}: {g} vs {w}"
-            );
-        }
-    }
-
-    #[test]
-    fn welch_aggregator_matches_native_monitor() {
-        use crate::monitor::{aggregate_samples, MonitorConfig};
-        use crate::workloadgen::{tour_schedule, Generator};
-        let rt = runtime();
-        let agg = WelchAggregator::new(&rt).unwrap();
-        let mut g = Generator::with_default_config(5);
-        // 200 windows of 32 samples: exercises multi-batch (> 64) path
-        let trace = g.generate(&tour_schedule(3200, &[0, 2]));
-        let native = aggregate_samples(
-            &trace.samples,
-            &MonitorConfig { window_size: WelchAggregator::window_size() },
-        );
-        let via = agg.aggregate(&trace.samples, 0).unwrap();
-        assert_eq!(via.len(), native.len());
-        for (a, b) in via.iter().zip(&native) {
-            assert_eq!(a.index, b.index);
-            assert_eq!(a.truth, b.truth);
-            for i in 0..crate::features::NUM_FEATURES {
-                assert!(
-                    (a.mean[i] - b.mean[i]).abs() < 1e-3,
-                    "mean[{i}] {} vs {}",
-                    a.mean[i],
-                    b.mean[i]
-                );
-                assert!(
-                    (a.var[i] - b.var[i]).abs() < 1e-2,
-                    "var[{i}] {} vs {}",
-                    a.var[i],
-                    b.var[i]
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn lstm_empty_history_none() {
-        let rt = runtime();
-        let p = LstmPredictor::new(&rt, 0).unwrap();
-        assert_eq!(p.predict(&[], 1), None);
     }
 }

@@ -1,0 +1,260 @@
+//! Real PJRT runtime (feature `runtime-artifacts`): compiles and
+//! executes the AOT HLO-text artifacts through the `xla` crate. This is
+//! the only module in the crate that touches `xla`.
+
+use super::{shapes, InputSpec};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Re-export so callers can name literal values without importing `xla`.
+pub use xla::Literal;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<InputSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        if args.len() != self.inputs.len() {
+            return Err(Error::msg(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            )));
+        }
+        let mut out = self.exe.execute::<Literal>(args)?;
+        let buf = out
+            .pop()
+            .and_then(|mut d| d.pop())
+            .ok_or_else(|| Error::msg(format!("{}: empty result", self.name)))?;
+        let lit = buf.to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The artifact registry: PJRT client + every compiled model.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    artifacts: BTreeMap<String, Rc<Artifact>>,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::msg(format!(
+                "reading {} — run `make artifacts` first: {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Json::parse(&text)?;
+
+        // validate the shared shape constants
+        let c = manifest.get("constants")?;
+        let checks: [(&str, usize); 6] = [
+            ("num_features", shapes::NUM_FEATURES),
+            ("max_classes", shapes::MAX_CLASSES),
+            ("dist_n", shapes::DIST_N),
+            ("lstm_seq", shapes::LSTM_SEQ),
+            ("mlp_batch", shapes::MLP_BATCH),
+            ("mlp_features", shapes::MLP_FEATURES),
+        ];
+        for (key, want) in checks {
+            let got = c.get(key)?.as_usize()?;
+            if got != want {
+                return Err(Error::msg(format!(
+                    "manifest constant {key}={got} != rust {want}; \
+                     re-run `make artifacts`"
+                )));
+            }
+        }
+
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in manifest.get("artifacts")?.as_obj()? {
+            let file = dir.join(entry.get("file")?.as_str()?);
+            let proto = xla::HloModuleProto::from_text_file(
+                file.to_str().ok_or_else(|| Error::msg("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let inputs = entry
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(InputSpec {
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                        shape: i
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<std::result::Result<_, _>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                Rc::new(Artifact { name: name.clone(), inputs, exe }),
+            );
+        }
+        Ok(Runtime { client, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifact directory: `$KERMIT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        super::default_dir()
+    }
+
+    pub fn get(&self, name: &str) -> Result<Rc<Artifact>> {
+        self.artifacts
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::msg(format!("unknown artifact '{name}'")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal of the given shape from an f64 slice (row-major).
+pub fn literal_f32(values: &[f64], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != values.len() {
+        return Err(Error::msg(format!(
+            "literal_f32: {} values for shape {:?}",
+            values.len(),
+            dims
+        )));
+    }
+    let v32: Vec<f32> = values.iter().map(|&x| x as f32).collect();
+    Ok(Literal::vec1(&v32).reshape(dims)?)
+}
+
+/// i32 literal of the given shape.
+pub fn literal_i32(values: &[i32], dims: &[i64]) -> Result<Literal> {
+    Ok(Literal::vec1(values).reshape(dims)?)
+}
+
+/// scalar f32 literal.
+pub fn literal_scalar(x: f64) -> Literal {
+    Literal::scalar(x as f32)
+}
+
+/// Extract an f32 literal into f64s.
+pub fn to_f64_vec(lit: &Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Runtime {
+        // tests run from the crate root; artifacts/ must exist (make artifacts)
+        Runtime::load(Path::new("artifacts")).expect(
+            "artifacts missing — run `make artifacts` before cargo test",
+        )
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let rt = runtime();
+        let names = rt.names();
+        for want in [
+            "pairwise_dist", "welch_stats", "lstm_fwd", "lstm_train",
+            "mlp_fwd", "mlp_train",
+        ] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn pairwise_dist_matches_native() {
+        let rt = runtime();
+        let art = rt.get("pairwise_dist").unwrap();
+        let n = shapes::DIST_N;
+        let f = shapes::DIST_F;
+        // deterministic pseudo-data
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x: Vec<f64> = (0..n * f).map(|_| rng.range_f64(0.0, 10.0)).collect();
+        let lx = literal_f32(&x, &[n as i64, f as i64]).unwrap();
+        let ly = literal_f32(&x, &[n as i64, f as i64]).unwrap();
+        let out = art.run(&[lx, ly]).unwrap();
+        assert_eq!(out.len(), 1);
+        let d = to_f64_vec(&out[0]).unwrap();
+        assert_eq!(d.len(), n * n);
+        // spot-check against native computation
+        for (i, j) in [(0usize, 1usize), (5, 200), (255, 255), (17, 17)] {
+            let want: f64 = (0..f)
+                .map(|k| {
+                    let a = x[i * f + k];
+                    let b = x[j * f + k];
+                    (a - b) * (a - b)
+                })
+                .sum();
+            let got = d[i * n + j];
+            assert!(
+                (got - want).abs() < 1e-2 * want.max(1.0),
+                "({i},{j}): {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn welch_stats_matches_native() {
+        let rt = runtime();
+        let art = rt.get("welch_stats").unwrap();
+        let (w, s, f) = (
+            shapes::WELCH_WINDOWS,
+            shapes::WELCH_SAMPLES,
+            shapes::NUM_FEATURES,
+        );
+        let mut rng = crate::util::rng::Rng::new(8);
+        let x: Vec<f64> =
+            (0..w * s * f).map(|_| rng.normal_ms(5.0, 2.0)).collect();
+        let lx = literal_f32(&x, &[w as i64, s as i64, f as i64]).unwrap();
+        let out = art.run(&[lx]).unwrap();
+        assert_eq!(out.len(), 2);
+        let mean = to_f64_vec(&out[0]).unwrap();
+        let var = to_f64_vec(&out[1]).unwrap();
+        // native check for window 3, feature 2
+        let (wi, fi) = (3usize, 2usize);
+        let col: Vec<f64> =
+            (0..s).map(|si| x[wi * s * f + si * f + fi]).collect();
+        let m = crate::stats::mean(&col);
+        let v = crate::stats::variance(&col);
+        assert!((mean[wi * f + fi] - m).abs() < 1e-4, "mean");
+        assert!((var[wi * f + fi] - v).abs() < 1e-3, "var");
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let rt = runtime();
+        let art = rt.get("pairwise_dist").unwrap();
+        assert!(art.run(&[]).is_err());
+    }
+}

@@ -56,13 +56,27 @@ impl RmPlugin for FixedConfigPlugin {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum RmError {
-    #[error("no node can fit a container of {cores} cores / {mem_mb} MB")]
     WontFit { cores: u32, mem_mb: u32 },
-    #[error("unknown container {0}")]
     UnknownContainer(u64),
 }
+
+impl std::fmt::Display for RmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RmError::WontFit { cores, mem_mb } => write!(
+                f,
+                "no node can fit a container of {cores} cores / {mem_mb} MB"
+            ),
+            RmError::UnknownContainer(id) => {
+                write!(f, "unknown container {id}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RmError {}
 
 /// Container-level accounting for a static set of nodes.
 #[derive(Debug)]

@@ -14,13 +14,26 @@ pub struct Args {
     bools: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for --{0}")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     BadValue(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => {
+                write!(f, "missing value for --{k}")
+            }
+            CliError::BadValue(k, v) => {
+                write!(f, "invalid value for --{k}: {v}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw args (excluding argv[0]). `value_keys` lists flags that

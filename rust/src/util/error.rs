@@ -1,0 +1,79 @@
+//! Crate-local error type (the offline crate set has no anyhow /
+//! thiserror): a message-carrying error with `From` impls for the
+//! error types that cross module boundaries, so `?` composes through
+//! the CLI, persistence, and runtime layers without external crates.
+
+use std::fmt;
+
+/// A boxed-free, message-only error. Construct with [`Error::msg`] or
+/// via the `From` impls.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error { msg: s.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::util::cli::CliError> for Error {
+    fn from(e: crate::util::cli::CliError) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = Error::msg(format!("bad thing {}", 7));
+        assert_eq!(e.to_string(), "bad thing 7");
+    }
+
+    #[test]
+    fn question_mark_composes_io() {
+        fn inner() -> Result<()> {
+            let _ = std::fs::read_to_string("/definitely/not/a/path/xyz")?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}

@@ -22,25 +22,46 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character '{0}' at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape '\\{0}' at byte {1}")]
     BadEscape(char, usize),
-    #[error("invalid unicode escape at byte {0}")]
     BadUnicode(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("expected {0}, found {1}")]
     Type(&'static str, &'static str),
-    #[error("missing key '{0}'")]
     MissingKey(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(p) => {
+                write!(f, "unexpected end of input at byte {p}")
+            }
+            JsonError::Unexpected(c, p) => {
+                write!(f, "unexpected character '{c}' at byte {p}")
+            }
+            JsonError::BadNumber(p) => write!(f, "invalid number at byte {p}"),
+            JsonError::BadEscape(c, p) => {
+                write!(f, "invalid escape '\\{c}' at byte {p}")
+            }
+            JsonError::BadUnicode(p) => {
+                write!(f, "invalid unicode escape at byte {p}")
+            }
+            JsonError::Trailing(p) => {
+                write!(f, "trailing garbage at byte {p}")
+            }
+            JsonError::Type(want, got) => {
+                write!(f, "expected {want}, found {got}")
+            }
+            JsonError::MissingKey(k) => write!(f, "missing key '{k}'"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---- constructors -------------------------------------------------

@@ -1,6 +1,8 @@
 //! Foundation utilities built from scratch (the offline crate set has no
-//! serde / clap / rand): deterministic RNG, JSON codec, CLI parsing.
+//! serde / clap / rand / anyhow): deterministic RNG, JSON codec, CLI
+//! parsing, and the crate-local error type.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;

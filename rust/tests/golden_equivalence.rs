@@ -1,0 +1,339 @@
+//! Golden-equivalence tests for the contiguous-storage migration: the
+//! `Matrix`-based kmeans / DBSCAN / kNN must produce exactly the labels
+//! the pre-refactor `Vec<Vec<f64>>` implementations produced on seeded
+//! blob fixtures.
+//!
+//! Each reference implementation below is a verbatim port of the
+//! pre-migration algorithm over nested-Vec rows (same RNG probe
+//! sequence, same update arithmetic), with distances computed through
+//! the same `linalg::sq_dist` kernel so float summation order is
+//! identical and label comparisons can be exact.
+
+use kermit::clustering::kmeans::kmeans;
+use kermit::clustering::{dbscan, DbscanConfig, NativeDistance};
+use kermit::linalg::{sq_dist, Matrix};
+use kermit::ml::{Classifier, Dataset};
+use kermit::ml::knn::Knn;
+use kermit::util::rng::Rng;
+use std::collections::BTreeMap;
+
+fn blob_rows(
+    seed: u64,
+    centers: &[(f64, f64)],
+    per_center: usize,
+    spread: f64,
+) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    for &(cx, cy) in centers {
+        for _ in 0..per_center {
+            rows.push(vec![
+                rng.normal_ms(cx, spread),
+                rng.normal_ms(cy, spread),
+            ]);
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// reference: pre-refactor kmeans (k-means++ init + Lloyd over Vec rows)
+// ---------------------------------------------------------------------------
+
+fn ref_kmeans(
+    rows: &[Vec<f64>],
+    k: usize,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> (Vec<i32>, Vec<Vec<f64>>) {
+    let n = rows.len();
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centroids.push(rows[rng.range_usize(0, n)].clone());
+    let mut d2: Vec<f64> =
+        rows.iter().map(|r| sq_dist(r, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 1e-18 {
+            rng.range_usize(0, n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if target < w {
+                    pick = i;
+                    break;
+                }
+                target -= w;
+            }
+            pick
+        };
+        centroids.push(rows[next].clone());
+        for (i, r) in rows.iter().enumerate() {
+            let d = sq_dist(r, centroids.last().unwrap());
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    let mut labels = vec![0i32; n];
+    for it in 0..max_iter {
+        let mut changed = false;
+        for (i, r) in rows.iter().enumerate() {
+            let best = centroids
+                .iter()
+                .enumerate()
+                .map(|(c, cen)| (c, sq_dist(r, cen)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            if labels[i] != best {
+                labels[i] = best;
+                changed = true;
+            }
+        }
+        let w = rows[0].len();
+        let mut sums = vec![vec![0.0; w]; k];
+        let mut counts = vec![0usize; k];
+        for (i, r) in rows.iter().enumerate() {
+            let c = labels[i] as usize;
+            counts[c] += 1;
+            for j in 0..w {
+                sums[c][j] += r[j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..w {
+                    centroids[c][j] = sums[c][j] / counts[c] as f64;
+                }
+            } else {
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da =
+                            sq_dist(&rows[a], &centroids[labels[a] as usize]);
+                        let db =
+                            sq_dist(&rows[b], &centroids[labels[b] as usize]);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids[c] = rows[far].clone();
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+    }
+    (labels, centroids)
+}
+
+#[test]
+fn kmeans_labels_match_vec_of_vec_reference() {
+    let rows =
+        blob_rows(0, &[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)], 50, 0.5);
+    let m = Matrix::from_rows(&rows);
+
+    // identical RNG seed -> identical k-means++ probe sequence
+    let mut rng_ref = Rng::new(7);
+    let (ref_labels, ref_centroids) = ref_kmeans(&rows, 3, 100, &mut rng_ref);
+    let mut rng_new = Rng::new(7);
+    let r = kmeans(&m, 3, 100, &mut rng_new);
+
+    assert_eq!(r.labels, ref_labels, "kmeans labels diverged");
+    for (c, rc) in ref_centroids.iter().enumerate() {
+        for (j, v) in rc.iter().enumerate() {
+            assert!(
+                (r.centroids.row(c)[j] - v).abs() < 1e-9,
+                "centroid [{c}][{j}]: {} vs {v}",
+                r.centroids.row(c)[j]
+            );
+        }
+    }
+    // inertia agrees with the reference assignment
+    let ref_inertia: f64 = rows
+        .iter()
+        .zip(&ref_labels)
+        .map(|(r, &l)| sq_dist(r, &ref_centroids[l as usize]))
+        .sum();
+    assert!((r.inertia - ref_inertia).abs() < 1e-6 * ref_inertia.max(1.0));
+}
+
+// ---------------------------------------------------------------------------
+// reference: pre-refactor DBSCAN over a Vec<Vec<f64>> distance matrix
+// ---------------------------------------------------------------------------
+
+fn ref_dbscan(rows: &[Vec<f64>], eps: f64, min_pts: usize) -> Vec<i32> {
+    let n = rows.len();
+    if n == 0 {
+        return vec![];
+    }
+    let mut d = vec![0.0; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = sq_dist(&rows[i], &rows[j]);
+            d[i * n + j] = v;
+            d[j * n + i] = v;
+        }
+    }
+    let eps_sq = eps * eps;
+    let neighbours: Vec<Vec<usize>> = (0..n)
+        .map(|i| (0..n).filter(|&j| d[i * n + j] <= eps_sq).collect())
+        .collect();
+    let is_core: Vec<bool> =
+        neighbours.iter().map(|nb| nb.len() >= min_pts).collect();
+
+    const UNVISITED: i32 = -2;
+    const NOISE: i32 = -1;
+    let mut labels = vec![UNVISITED; n];
+    let mut cluster = 0i32;
+    for i in 0..n {
+        if labels[i] != UNVISITED || !is_core[i] {
+            continue;
+        }
+        labels[i] = cluster;
+        let mut queue: Vec<usize> = neighbours[i].clone();
+        while let Some(j) = queue.pop() {
+            if labels[j] == NOISE {
+                labels[j] = cluster;
+            }
+            if labels[j] != UNVISITED {
+                continue;
+            }
+            labels[j] = cluster;
+            if is_core[j] {
+                queue.extend(neighbours[j].iter().copied());
+            }
+        }
+        cluster += 1;
+    }
+    for l in labels.iter_mut() {
+        if *l == UNVISITED {
+            *l = NOISE;
+        }
+    }
+    labels
+}
+
+#[test]
+fn dbscan_labels_match_vec_of_vec_reference() {
+    for seed in [0u64, 1, 2] {
+        let mut rows =
+            blob_rows(seed, &[(0.0, 0.0), (8.0, 8.0)], 40, 0.4);
+        rows.push(vec![4.0, 4.0]); // isolated point -> noise
+        let m = Matrix::from_rows(&rows);
+        let cfg = DbscanConfig { eps: 1.2, min_pts: 4 };
+        let got = dbscan(&m, &cfg, &NativeDistance);
+        let want = ref_dbscan(&rows, cfg.eps, cfg.min_pts);
+        assert_eq!(got.labels, want, "dbscan diverged at seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reference: pre-refactor kNN (standardised Vec rows, distance-weighted)
+// ---------------------------------------------------------------------------
+
+struct RefKnn {
+    k: usize,
+    rows: Vec<Vec<f64>>,
+    labels: Vec<u32>,
+    moments: Vec<(f64, f64)>,
+}
+
+fn ref_feature_moments(rows: &[Vec<f64>]) -> Vec<(f64, f64)> {
+    let w = rows[0].len();
+    let n = rows.len() as f64;
+    let mut out = vec![(0.0, 0.0); w];
+    for row in rows {
+        for (j, &v) in row.iter().enumerate() {
+            out[j].0 += v;
+        }
+    }
+    for m in out.iter_mut() {
+        m.0 /= n;
+    }
+    for row in rows {
+        for (j, &v) in row.iter().enumerate() {
+            let d = v - out[j].0;
+            out[j].1 += d * d;
+        }
+    }
+    for m in out.iter_mut() {
+        m.1 = (m.1 / n).sqrt();
+        if m.1 < 1e-12 {
+            m.1 = 1.0;
+        }
+    }
+    out
+}
+
+fn ref_standardise(x: &[f64], moments: &[(f64, f64)]) -> Vec<f64> {
+    x.iter().zip(moments).map(|(v, (m, s))| (v - m) / s).collect()
+}
+
+impl RefKnn {
+    fn fit(rows: &[Vec<f64>], labels: &[u32], k: usize) -> RefKnn {
+        let moments = ref_feature_moments(rows);
+        let std_rows =
+            rows.iter().map(|r| ref_standardise(r, &moments)).collect();
+        RefKnn { k: k.max(1), rows: std_rows, labels: labels.to_vec(), moments }
+    }
+
+    fn predict(&self, x: &[f64]) -> u32 {
+        let xs = ref_standardise(x, &self.moments);
+        let mut dists: Vec<(f64, u32)> = self
+            .rows
+            .iter()
+            .zip(&self.labels)
+            .map(|(r, &l)| (sq_dist(r, &xs), l))
+            .collect();
+        let k = self.k.min(dists.len());
+        dists.select_nth_unstable_by(k - 1, |a, b| {
+            a.0.partial_cmp(&b.0).unwrap()
+        });
+        let mut votes: BTreeMap<u32, f64> = BTreeMap::new();
+        for &(d, l) in &dists[..k] {
+            *votes.entry(l).or_insert(0.0) += 1.0 / (d.sqrt() + 1e-9);
+        }
+        votes
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap()
+    }
+}
+
+#[test]
+fn knn_predictions_match_vec_of_vec_reference() {
+    let rows = blob_rows(
+        3,
+        &[(0.0, 0.0), (6.0, 0.0), (0.0, 6.0)],
+        40,
+        0.8,
+    );
+    let labels: Vec<u32> =
+        (0..3u32).flat_map(|c| std::iter::repeat(c).take(40)).collect();
+
+    let mut data = Dataset::new();
+    for (r, &l) in rows.iter().zip(&labels) {
+        data.push(r, l);
+    }
+    let knn = Knn::fit(&data, 7);
+    let reference = RefKnn::fit(&rows, &labels, 7);
+
+    // probe a grid spanning the blobs, including ambiguous midpoints
+    for ix in -2..=8 {
+        for iy in -2..=8 {
+            let p = [ix as f64, iy as f64];
+            assert_eq!(
+                knn.predict(&p),
+                reference.predict(&p),
+                "knn diverged at probe {p:?}"
+            );
+        }
+    }
+    // and on the training rows themselves
+    let batch = knn.predict_batch(data.x());
+    for (i, r) in rows.iter().enumerate() {
+        assert_eq!(batch[i], reference.predict(r), "row {i}");
+    }
+}

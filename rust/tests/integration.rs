@@ -90,7 +90,7 @@ fn plugin_algorithm1_full_state_machine() {
     // phase 2: discovery inserts the workload
     let label = {
         let rows: Vec<Vec<f64>> = vec![vec![5.0; 8], vec![5.2; 8]];
-        let ch = Characterization::from_rows(&rows);
+        let ch = Characterization::from_vec_rows(&rows);
         let cen = ch.mean_vector();
         db.lock().unwrap().insert_new(ch, cen, 2, false)
     };
@@ -116,7 +116,7 @@ fn plugin_algorithm1_full_state_machine() {
     {
         let mut dbl = db.lock().unwrap();
         let rows: Vec<Vec<f64>> = vec![vec![9.0; 8], vec![9.2; 8]];
-        let ch = Characterization::from_rows(&rows);
+        let ch = Characterization::from_vec_rows(&rows);
         let cen = ch.mean_vector();
         dbl.mark_drifting(label, ch, cen, 2);
     }

@@ -7,6 +7,7 @@ use kermit::clustering::{dbscan, DbscanConfig, NativeDistance, NOISE};
 use kermit::explorer::{ConfigEvaluator, Explorer, ExplorerConfig};
 use kermit::features::ObservationWindow;
 use kermit::knowledge::{Characterization, WorkloadDb};
+use kermit::linalg::Matrix;
 use kermit::simcluster::config_space::ConfigIndex;
 use kermit::simcluster::{NodeSpec, ResourceManager};
 use kermit::testkit::{forall, gen};
@@ -102,7 +103,7 @@ fn prop_workload_db_labels_unique_and_persistent() {
             let mut db = WorkloadDb::new();
             let mut labels = Vec::new();
             for rows in clusters {
-                let ch = Characterization::from_rows(rows);
+                let ch = Characterization::from_vec_rows(rows);
                 let cen = ch.mean_vector();
                 labels.push(db.insert_new(ch, cen, rows.len(), false));
             }
@@ -216,8 +217,9 @@ fn prop_dbscan_labels_valid_and_deterministic() {
         },
         |(rows, eps, min_pts)| {
             let cfg = DbscanConfig { eps: *eps, min_pts: *min_pts };
-            let a = dbscan(rows, &cfg, &NativeDistance);
-            let b = dbscan(rows, &cfg, &NativeDistance);
+            let m = Matrix::from_rows(rows);
+            let a = dbscan(&m, &cfg, &NativeDistance);
+            let b = dbscan(&m, &cfg, &NativeDistance);
             if a.labels != b.labels {
                 return Err("nondeterministic".into());
             }
@@ -314,6 +316,76 @@ fn prop_clustering_metrics_bounded() {
             }
             if !(0.0..=1.0).contains(&a) {
                 return Err(format!("awt {a} out of bounds"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_matrix_from_rows_roundtrips_iter_rows() {
+    forall(
+        9,
+        120,
+        |rng| {
+            let n = rng.range_usize(0, 40);
+            let w = rng.range_usize(1, 12);
+            gen::rows(rng, n, w, -1e4, 1e4)
+        },
+        |rows| {
+            let m = Matrix::from_rows(rows);
+            if m.n_rows() != rows.len() {
+                return Err(format!(
+                    "row count {} != {}",
+                    m.n_rows(),
+                    rows.len()
+                ));
+            }
+            if !rows.is_empty() && m.n_cols() != rows[0].len() {
+                return Err("width mismatch".into());
+            }
+            // iter_rows round-trips every row bit-exactly, in order
+            for (i, (got, want)) in m.iter_rows().zip(rows).enumerate() {
+                if got != want.as_slice() {
+                    return Err(format!("row {i} mismatch"));
+                }
+            }
+            // indexed access agrees with iteration
+            for i in 0..m.n_rows() {
+                if m.row(i) != rows[i].as_slice() {
+                    return Err(format!("row({i}) mismatch"));
+                }
+            }
+            // flat storage is the concatenation of the rows
+            let flat: Vec<f64> =
+                rows.iter().flat_map(|r| r.iter().copied()).collect();
+            if m.as_slice() != flat.as_slice() {
+                return Err("flat storage mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sq_dist_matches_naive() {
+    forall(
+        10,
+        150,
+        |rng| {
+            let w = rng.range_usize(1, 40);
+            (
+                gen::vec_f64(rng, w, -100.0, 100.0),
+                gen::vec_f64(rng, w, -100.0, 100.0),
+            )
+        },
+        |(a, b)| {
+            let naive: f64 =
+                a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let got = kermit::linalg::sq_dist(a, b);
+            let tol = 1e-9 * naive.max(1.0);
+            if (got - naive).abs() > tol {
+                return Err(format!("{got} vs {naive}"));
             }
             Ok(())
         },

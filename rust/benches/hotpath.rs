@@ -8,10 +8,12 @@
 //! table) so the perf trajectory is machine-trackable across PRs.
 
 use kermit::benchkit::{bench, fmt_ns, Table};
-use kermit::clustering::{dbscan, kmeans::kmeans, DbscanConfig, NativeDistance};
+use kermit::clustering::kmeans::{kmeans, kmeans_with};
 use kermit::clustering::DistanceProvider;
+use kermit::clustering::{dbscan, dbscan_with, DbscanConfig, EngineDistance, NativeDistance};
 use kermit::experiments::fig6;
 use kermit::features::AnalyticWindow;
+use kermit::linalg::engine::{self, Engine};
 use kermit::linalg::{sq_dist, Matrix};
 use kermit::ml::forest::{ForestConfig, RandomForest};
 use kermit::ml::Classifier;
@@ -102,44 +104,84 @@ fn main() {
         }
         m
     };
+    // scalar vs simd kernel, then sequential vs parallel stages for
+    // every discovery hot path — the engine rows quantify the speedup
+    // the coordinator gets from `DiscoveryConfig::engine`
+    let eng = Engine::auto();
+
     let (ra, rb) = (disc.row(0).to_vec(), disc.row(300).to_vec());
-    let ts = bench(100, 5000, || {
+    let ts_scalar = bench(100, 5000, || {
+        std::hint::black_box(engine::sq_dist_scalar(&ra, &rb));
+    });
+    t.timed_row(
+        &[
+            format!("sq_dist {}-wide row (scalar)", shapes::ANALYTIC_FEATURES),
+            ts_scalar.per_iter_str(),
+            format!("{:.0}M dists/s", 1e9 / ts_scalar.median_ns / 1e6),
+        ],
+        ts_scalar,
+    );
+    let ts_simd = bench(100, 5000, || {
         std::hint::black_box(sq_dist(&ra, &rb));
     });
     t.timed_row(
         &[
-            format!("sq_dist {}-wide row", shapes::ANALYTIC_FEATURES),
-            ts.per_iter_str(),
-            format!("{:.0}M dists/s", 1e9 / ts.median_ns / 1e6),
+            format!("sq_dist {}-wide row (simd)", shapes::ANALYTIC_FEATURES),
+            ts_simd.per_iter_str(),
+            format!("{:.0}M dists/s", 1e9 / ts_simd.median_ns / 1e6),
         ],
-        ts,
+        ts_simd,
     );
 
+    let pairs_rate = |ns: f64| {
+        format!("{:.1}M pairs/s", (600.0 * 600.0) / (ns / 1e9) / 1e6)
+    };
     let td = bench(2, 10, || {
         std::hint::black_box(NativeDistance.pairwise_sq(&disc));
     });
     t.timed_row(
         &[
-            "pairwise_sq 600x32 (native)".into(),
+            "pairwise_sq 600x32 (sequential)".into(),
             td.per_iter_str(),
-            format!(
-                "{:.1}M pairs/s",
-                (600.0 * 600.0) / (td.median_ns / 1e9) / 1e6
-            ),
+            pairs_rate(td.median_ns),
         ],
         td,
     );
-
-    let tdb = bench(2, 10, || {
-        std::hint::black_box(dbscan(
-            &disc,
-            &DbscanConfig { eps: 10.0, min_pts: 4 },
-            &NativeDistance,
-        ));
+    let par_dist = EngineDistance::new(eng);
+    let tdp = bench(2, 10, || {
+        std::hint::black_box(par_dist.pairwise_sq(&disc));
     });
     t.timed_row(
-        &["dbscan 600 windows".into(), tdb.per_iter_str(), "-".into()],
+        &[
+            "pairwise_sq 600x32 (parallel)".into(),
+            tdp.per_iter_str(),
+            pairs_rate(tdp.median_ns),
+        ],
+        tdp,
+    );
+
+    let db_cfg = DbscanConfig { eps: 10.0, min_pts: 4 };
+    let tdb = bench(2, 10, || {
+        std::hint::black_box(dbscan(&disc, &db_cfg, &NativeDistance));
+    });
+    t.timed_row(
+        &[
+            "dbscan 600 windows (sequential)".into(),
+            tdb.per_iter_str(),
+            "-".into(),
+        ],
         tdb,
+    );
+    let tdbp = bench(2, 10, || {
+        std::hint::black_box(dbscan_with(eng, &disc, &db_cfg, &par_dist));
+    });
+    t.timed_row(
+        &[
+            "dbscan 600 windows (parallel)".into(),
+            tdbp.per_iter_str(),
+            "-".into(),
+        ],
+        tdbp,
     );
 
     let mut kmrng = Rng::new(9);
@@ -147,8 +189,50 @@ fn main() {
         std::hint::black_box(kmeans(&disc, 6, 50, &mut kmrng));
     });
     t.timed_row(
-        &["kmeans k=6 600 windows".into(), tk.per_iter_str(), "-".into()],
+        &[
+            "kmeans assign k=6 600 windows (sequential)".into(),
+            tk.per_iter_str(),
+            "-".into(),
+        ],
         tk,
+    );
+    let mut kmrng_p = Rng::new(9);
+    let tkp = bench(2, 10, || {
+        std::hint::black_box(kmeans_with(eng, &disc, 6, 50, &mut kmrng_p));
+    });
+    t.timed_row(
+        &[
+            "kmeans assign k=6 600 windows (parallel)".into(),
+            tkp.per_iter_str(),
+            "-".into(),
+        ],
+        tkp,
+    );
+
+    let batch_rate = |ns: f64| {
+        format!("{:.0}k preds/s", disc.n_rows() as f64 / (ns / 1e9) / 1e3)
+    };
+    let tb = bench(3, 30, || {
+        std::hint::black_box(forest.predict_batch(&disc));
+    });
+    t.timed_row(
+        &[
+            "predict_batch 600 windows (sequential)".into(),
+            tb.per_iter_str(),
+            batch_rate(tb.median_ns),
+        ],
+        tb,
+    );
+    let tbp = bench(3, 30, || {
+        std::hint::black_box(forest.predict_batch_with(eng, &disc));
+    });
+    t.timed_row(
+        &[
+            "predict_batch 600 windows (parallel)".into(),
+            tbp.per_iter_str(),
+            batch_rate(tbp.median_ns),
+        ],
+        tbp,
     );
 
     t.print();
@@ -206,6 +290,16 @@ fn main() {
         }
         Err(e) => println!("(artifacts skipped: {e})"),
     }
+
+    // environment metadata so successive PRs diff baselines
+    // apples-to-apples (a 2-thread run is not a 16-thread run)
+    t.meta("engine_threads", &eng.threads().to_string());
+    t.meta("simd_feature", if cfg!(feature = "simd") { "on" } else { "off" });
+    t.meta("simd_active", if engine::simd_active() { "yes" } else { "no" });
+    t.meta(
+        "runtime_artifacts_feature",
+        if cfg!(feature = "runtime-artifacts") { "on" } else { "off" },
+    );
 
     let out = std::path::Path::new("BENCH_hotpath.json");
     match t.write_json(out) {

@@ -67,6 +67,9 @@ pub struct Table {
     rows: Vec<Vec<String>>,
     /// (stage, median_ns) points recorded alongside the display rows.
     metrics: Vec<(String, f64)>,
+    /// Environment metadata (thread count, feature flags, …) emitted
+    /// into the JSON so baselines diff apples-to-apples across PRs.
+    meta: Vec<(String, String)>,
 }
 
 impl Table {
@@ -75,7 +78,16 @@ impl Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
             metrics: Vec::new(),
+            meta: Vec::new(),
         }
+    }
+
+    /// Record a metadata key/value for [`Table::write_json`] (e.g. the
+    /// engine thread count or whether the simd kernel was active), so a
+    /// future PR diffing two baseline files can tell matching
+    /// configurations apart.
+    pub fn meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
     }
 
     pub fn row(&mut self, cells: &[String]) {
@@ -126,6 +138,11 @@ impl Table {
             m.set(stage, Json::Num(*ns));
         }
         root.set("median_ns", m);
+        let mut meta = Json::obj();
+        for (k, v) in &self.meta {
+            meta.set(k, Json::Str(v.clone()));
+        }
+        root.set("meta", meta);
         std::fs::write(path, root.encode_pretty())
     }
 
@@ -197,6 +214,8 @@ mod tests {
             Timing { median_ns: 1000.0, mad_ns: 10.0, samples: 5 },
         );
         t.metric("extra_stage", 42.0);
+        t.meta("threads", "4");
+        t.meta("simd", "off");
         let path = std::env::temp_dir().join("kermit_benchkit_json_test.json");
         t.write_json(&path).unwrap();
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
@@ -214,6 +233,9 @@ mod tests {
             42.0
         );
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        let meta = j.get("meta").unwrap();
+        assert_eq!(meta.get("threads").unwrap().as_str().unwrap(), "4");
+        assert_eq!(meta.get("simd").unwrap().as_str().unwrap(), "off");
         std::fs::remove_file(&path).ok();
     }
 }

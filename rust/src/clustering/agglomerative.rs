@@ -4,6 +4,7 @@
 //! fine for discovery-batch sizes (hundreds of windows).
 
 use super::DistanceProvider;
+use crate::linalg::engine::Engine;
 use crate::linalg::Matrix;
 
 #[derive(Debug, Clone)]
@@ -15,6 +16,22 @@ pub struct AggloResult {
 /// Average-linkage agglomerative clustering; merging stops when the
 /// closest pair of clusters is farther than `cut_distance` apart.
 pub fn agglomerative(
+    rows: &Matrix,
+    cut_distance: f64,
+    dist: &dyn DistanceProvider,
+) -> AggloResult {
+    agglomerative_with(Engine::sequential(), rows, cut_distance, dist)
+}
+
+/// Engine-parallel [`agglomerative`]: each merge step's closest-pair
+/// scan (the O(n²) inner loop of the O(n³) algorithm) fans out over the
+/// engine's worker pool; chunk winners reduce in chunk order with
+/// strict `<`, preserving the sequential first-pair tie-breaking, so
+/// the merge sequence and labels are bit-identical for any thread
+/// count. Pass an [`super::EngineDistance`] to also parallelise the
+/// initial distance-matrix construction.
+pub fn agglomerative_with(
+    engine: Engine,
     rows: &Matrix,
     cut_distance: f64,
     dist: &dyn DistanceProvider,
@@ -33,22 +50,29 @@ pub fn agglomerative(
 
     let mut live = n;
     while live > 1 {
-        // find closest live pair
-        let mut best = (usize::MAX, usize::MAX, f64::INFINITY);
-        for i in 0..n {
-            if !alive[i] {
-                continue;
-            }
-            for j in (i + 1)..n {
-                if !alive[j] {
-                    continue;
+        // find closest live pair (row-parallel scan, first-pair ties)
+        let best = engine
+            .map_chunks(n, |range| {
+                let mut local = (usize::MAX, usize::MAX, f64::INFINITY);
+                for i in range {
+                    if !alive[i] {
+                        continue;
+                    }
+                    for j in (i + 1)..n {
+                        if !alive[j] {
+                            continue;
+                        }
+                        let dij = d[i * n + j];
+                        if dij < local.2 {
+                            local = (i, j, dij);
+                        }
+                    }
                 }
-                let dij = d[i * n + j];
-                if dij < best.2 {
-                    best = (i, j, dij);
-                }
-            }
-        }
+                local
+            })
+            .into_iter()
+            .reduce(|a, b| if b.2 < a.2 { b } else { a })
+            .unwrap();
         let (a, b, dab) = best;
         if dab > cut_distance {
             break;
@@ -134,5 +158,24 @@ mod tests {
     fn empty_input() {
         let r = agglomerative(&Matrix::new(), 1.0, &NativeDistance);
         assert_eq!(r.n_clusters, 0);
+    }
+
+    #[test]
+    fn parallel_labels_bit_identical_to_sequential() {
+        use crate::clustering::EngineDistance;
+        let mut rng = Rng::new(4);
+        let mut rows = Matrix::with_width(2);
+        for &(cx, cy) in &[(0.0, 0.0), (15.0, 0.0), (0.0, 15.0)] {
+            for _ in 0..30 {
+                rows.push_row(&[rng.normal_ms(cx, 0.5), rng.normal_ms(cy, 0.5)]);
+            }
+        }
+        let a = agglomerative(&rows, 6.0, &NativeDistance);
+        for threads in [2, 4] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            let b = agglomerative_with(engine, &rows, 6.0, &EngineDistance::new(engine));
+            assert_eq!(a.labels, b.labels, "threads {threads}");
+            assert_eq!(a.n_clusters, b.n_clusters);
+        }
     }
 }

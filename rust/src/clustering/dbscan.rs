@@ -7,6 +7,7 @@
 //! L1 pallas kernel) — see `offline::discovery`.
 
 use super::DistanceProvider;
+use crate::linalg::engine::Engine;
 use crate::linalg::Matrix;
 
 /// Cluster id assigned to noise points.
@@ -56,6 +57,22 @@ pub fn dbscan(
     config: &DbscanConfig,
     dist: &dyn DistanceProvider,
 ) -> DbscanResult {
+    dbscan_with(Engine::sequential(), rows, config, dist)
+}
+
+/// Engine-parallel [`dbscan`]: the O(n²) neighbourhood queries fan out
+/// over the engine's worker pool (each row's neighbour list is an
+/// independent scan of its distance-matrix row, written to a disjoint
+/// slot). The BFS expansion is inherently sequential and untouched, so
+/// labels are bit-identical to the sequential path for any thread
+/// count. Pair with [`super::EngineDistance`] to also parallelise the
+/// distance-matrix construction itself.
+pub fn dbscan_with(
+    engine: Engine,
+    rows: &Matrix,
+    config: &DbscanConfig,
+    dist: &dyn DistanceProvider,
+) -> DbscanResult {
     let n = rows.n_rows();
     if n == 0 {
         return DbscanResult { labels: vec![], n_clusters: 0 };
@@ -63,14 +80,14 @@ pub fn dbscan(
     let d = dist.pairwise_sq(rows);
     let eps_sq = config.eps * config.eps;
 
-    // neighbour lists
-    let neighbours: Vec<Vec<usize>> = (0..n)
-        .map(|i| {
-            (0..n)
-                .filter(|&j| d[i * n + j] <= eps_sq)
-                .collect()
-        })
-        .collect();
+    // neighbour lists (row-parallel)
+    let mut neighbours: Vec<Vec<usize>> = vec![Vec::new(); n];
+    engine.for_rows(&mut neighbours, 1, |start, chunk| {
+        for (off, nb) in chunk.iter_mut().enumerate() {
+            let drow = &d[(start + off) * n..(start + off + 1) * n];
+            *nb = (0..n).filter(|&j| drow[j] <= eps_sq).collect();
+        }
+    });
     let is_core: Vec<bool> =
         neighbours.iter().map(|nb| nb.len() >= config.min_pts).collect();
 
@@ -192,6 +209,24 @@ mod tests {
             dbscan(&Matrix::new(), &DbscanConfig::default(), &NativeDistance);
         assert_eq!(r.n_clusters, 0);
         assert!(r.labels.is_empty());
+    }
+
+    #[test]
+    fn parallel_labels_bit_identical_to_sequential() {
+        use crate::clustering::EngineDistance;
+        let mut rng = Rng::new(5);
+        let mut rows = Matrix::with_width(2);
+        blob(&mut rng, &mut rows, 0.0, 0.0, 60, 0.4);
+        blob(&mut rng, &mut rows, 7.0, 7.0, 60, 0.4);
+        rows.push_row(&[3.5, 3.5]);
+        let cfg = DbscanConfig { eps: 1.2, min_pts: 4 };
+        let a = dbscan(&rows, &cfg, &NativeDistance);
+        for threads in [2, 4] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            let b = dbscan_with(engine, &rows, &cfg, &EngineDistance::new(engine));
+            assert_eq!(a.labels, b.labels, "threads {threads}");
+            assert_eq!(a.n_clusters, b.n_clusters);
+        }
     }
 
     #[test]

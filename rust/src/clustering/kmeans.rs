@@ -1,6 +1,14 @@
 //! k-means baseline for Fig 10 (k-means++ init, Lloyd iterations) over
 //! the contiguous `Matrix` row store.
+//!
+//! The assign pass (and the k-means++ seeding distance refresh) is
+//! row-parallel through [`Engine`]; the update pass stays sequential so
+//! centroid accumulation keeps one floating-point summation order.
+//! Together with chunk-ordered tie-breaking in the empty-cluster reseed
+//! scan, [`kmeans_with`] is **bit-identical** to the sequential
+//! [`kmeans`] for any thread count (pinned by tests).
 
+use crate::linalg::engine::Engine;
 use crate::linalg::{add_assign, sq_dist, Matrix};
 use crate::util::rng::Rng;
 
@@ -23,6 +31,23 @@ pub struct KmeansResult {
 /// distances computed during the assign pass instead of recomputing
 /// `sq_dist` per candidate.
 pub fn kmeans(
+    rows: &Matrix,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> KmeansResult {
+    kmeans_with(Engine::sequential(), rows, k, max_iter, rng)
+}
+
+/// Engine-parallel [`kmeans`]: the assign pass fans its row loop out
+/// over the engine's worker pool. Per-row work has no cross-row
+/// dependency, the update pass stays sequential, and the empty-cluster
+/// reseed reduces chunk winners in chunk order with `max_by`'s
+/// last-index tie-breaking, so labels, centroids, inertia, and
+/// iteration count are bit-identical to the sequential path for any
+/// thread count.
+pub fn kmeans_with(
+    engine: Engine,
     rows: &Matrix,
     k: usize,
     max_iter: usize,
@@ -58,53 +83,66 @@ pub fn kmeans(
             pick
         };
         centroids.row_mut(seeded).copy_from_slice(rows.row(next));
-        for (i, r) in rows.iter_rows().enumerate() {
-            let d = sq_dist(r, centroids.row(seeded));
-            if d < d2[i] {
-                d2[i] = d;
+        let seeded_row = centroids.row(seeded);
+        engine.for_rows(&mut d2, 1, |start, chunk| {
+            for (off, dv) in chunk.iter_mut().enumerate() {
+                let d = sq_dist(rows.row(start + off), seeded_row);
+                if d < *dv {
+                    *dv = d;
+                }
             }
-        }
+        });
         seeded += 1;
     }
 
-    let mut labels = vec![0i32; n];
-    // distance of each point to its assigned centroid (assign-pass
-    // byproduct; feeds inertia and empty-cluster reseeding for free)
-    let mut assigned_d2 = vec![0.0f64; n];
+    // per row: (assigned label, distance to its centroid). The distance
+    // is an assign-pass byproduct that feeds inertia and empty-cluster
+    // reseeding for free; fusing both into one buffer lets the parallel
+    // assign write each row's results through a single chunked slice.
+    let mut assign = vec![(0i32, 0.0f64); n];
     let mut sums = vec![0.0f64; k * w];
     let mut counts = vec![0usize; k];
     let mut iterations = 0;
     for it in 0..max_iter {
         iterations = it + 1;
-        // assign
-        let mut changed = false;
-        for (i, r) in rows.iter_rows().enumerate() {
-            let mut best = 0usize;
-            let mut best_d = f64::INFINITY;
-            for c in 0..k {
-                let d = sq_dist(r, centroids.row(c));
-                if d < best_d {
-                    best_d = d;
-                    best = c;
+        // assign (row-parallel; the per-chunk changed flags are
+        // order-insensitive so any reduction order is fine)
+        let changed = engine
+            .for_rows_map(&mut assign, 1, |start, chunk| {
+                let mut changed = false;
+                for (off, cell) in chunk.iter_mut().enumerate() {
+                    let r = rows.row(start + off);
+                    let mut best = 0usize;
+                    let mut best_d = f64::INFINITY;
+                    for c in 0..k {
+                        let d = sq_dist(r, centroids.row(c));
+                        if d < best_d {
+                            best_d = d;
+                            best = c;
+                        }
+                    }
+                    cell.1 = best_d;
+                    if cell.0 != best as i32 {
+                        cell.0 = best as i32;
+                        changed = true;
+                    }
                 }
-            }
-            assigned_d2[i] = best_d;
-            if labels[i] != best as i32 {
-                labels[i] = best as i32;
-                changed = true;
-            }
-        }
+                changed
+            })
+            .into_iter()
+            .any(|c| c);
         // converged: centroids are already the means of this assignment
         // (it == 0 is excluded because the initial all-zero labels may
         // coincidentally match before any update has run)
         if !changed && it > 0 {
             break;
         }
-        // update
+        // update (sequential: keeps one summation order, so centroids
+        // stay bit-identical to the single-threaded run)
         sums.fill(0.0);
         counts.fill(0);
         for (i, r) in rows.iter_rows().enumerate() {
-            let c = labels[i] as usize;
+            let c = assign[i].0 as usize;
             counts[c] += 1;
             add_assign(&mut sums[c * w..(c + 1) * w], r);
         }
@@ -120,17 +158,31 @@ pub fn kmeans(
                 }
             } else {
                 // empty cluster: reseed at the farthest point, using the
-                // assign-pass distances
-                let far = assigned_d2
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                // assign-pass distances. `>=` in both the chunk-local
+                // scan and the chunk-order reduction reproduces
+                // `Iterator::max_by`'s last-maximum tie-breaking exactly.
+                let far = engine
+                    .map_chunks(n, |range| {
+                        let mut best_i = range.start;
+                        let mut best_v = f64::NEG_INFINITY;
+                        for i in range {
+                            let v = assign[i].1;
+                            if v >= best_v {
+                                best_v = v;
+                                best_i = i;
+                            }
+                        }
+                        (best_i, best_v)
+                    })
+                    .into_iter()
+                    .reduce(|a, b| if b.1 >= a.1 { b } else { a })
                     .map(|(i, _)| i)
                     .unwrap();
                 centroids.row_mut(c).copy_from_slice(rows.row(far));
             }
         }
     }
+    let labels: Vec<i32> = assign.iter().map(|a| a.0).collect();
     let inertia = rows
         .iter_rows()
         .zip(&labels)
@@ -149,10 +201,26 @@ pub fn kmeans_elbow(
     max_iter: usize,
     rng: &mut Rng,
 ) -> KmeansResult {
+    kmeans_elbow_with(Engine::sequential(), rows, k_max, threshold, max_iter, rng)
+}
+
+/// Engine-parallel [`kmeans_elbow`]: the k sweep itself stays sequential
+/// (each step consumes the shared RNG stream and compares against the
+/// previous inertia), but every inner [`kmeans_with`] fans its assign
+/// passes out over the engine — same elbow decisions, same result,
+/// multi-threaded inner loops.
+pub fn kmeans_elbow_with(
+    engine: Engine,
+    rows: &Matrix,
+    k_max: usize,
+    threshold: f64,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> KmeansResult {
     assert!(k_max >= 1);
-    let mut prev = kmeans(rows, 1, max_iter, rng);
+    let mut prev = kmeans_with(engine, rows, 1, max_iter, rng);
     for k in 2..=k_max.min(rows.n_rows()) {
-        let cur = kmeans(rows, k, max_iter, rng);
+        let cur = kmeans_with(engine, rows, k, max_iter, rng);
         let denom = prev.inertia.max(1e-12);
         let improve = (prev.inertia - cur.inertia) / denom;
         if improve < threshold {
@@ -229,5 +297,59 @@ mod tests {
         let r = kmeans(&rows, 3, 10, &mut rng);
         assert_eq!(r.labels.len(), 10);
         assert!(r.inertia < 1e-9);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_sequential() {
+        for seed in 0..4u64 {
+            let mut drng = Rng::new(seed);
+            let mut rows = blobs(&mut drng, &[(0.0, 0.0), (6.0, 0.0), (0.0, 6.0)], 70, 0.6);
+            // duplicate block: distance ties in assign and (when a
+            // cluster empties) in the reseed argmax
+            for _ in 0..80 {
+                rows.push_row(&[3.0, 3.0]);
+            }
+            let mut ra = Rng::new(seed ^ 0x5eed);
+            let a = kmeans(&rows, 4, 60, &mut ra);
+            for threads in [2, 3, 8] {
+                let engine = Engine::with_threads(threads).with_min_items(1);
+                let mut rb = Rng::new(seed ^ 0x5eed);
+                let b = kmeans_with(engine, &rows, 4, 60, &mut rb);
+                assert_eq!(a.labels, b.labels, "threads {threads}");
+                assert_eq!(a.centroids, b.centroids, "threads {threads}");
+                assert_eq!(a.iterations, b.iterations);
+                assert_eq!(a.inertia, b.inertia);
+            }
+        }
+    }
+
+    #[test]
+    fn reseed_tie_break_matches_sequential_under_parallelism() {
+        // 200 identical points with k=3: clusters empty on every update
+        // and all reseed candidates tie at distance zero, so this pins
+        // the chunk-order last-index tie-breaking of the parallel argmax
+        let rows = Matrix::from_rows(&vec![vec![1.0, 2.0]; 200]);
+        let mut ra = Rng::new(11);
+        let a = kmeans(&rows, 3, 10, &mut ra);
+        for threads in [2, 5] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            let mut rb = Rng::new(11);
+            let b = kmeans_with(engine, &rows, 3, 10, &mut rb);
+            assert_eq!(a.labels, b.labels, "threads {threads}");
+            assert_eq!(a.centroids, b.centroids, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_elbow_matches_sequential() {
+        let mut drng = Rng::new(9);
+        let rows = blobs(&mut drng, &[(0.0, 0.0), (12.0, 0.0), (0.0, 12.0)], 60, 0.5);
+        let mut ra = Rng::new(21);
+        let a = kmeans_elbow(&rows, 8, 0.25, 100, &mut ra);
+        let engine = Engine::with_threads(4).with_min_items(1);
+        let mut rb = Rng::new(21);
+        let b = kmeans_elbow_with(engine, &rows, 8, 0.25, 100, &mut rb);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.centroids, b.centroids);
     }
 }

@@ -12,9 +12,10 @@ pub mod dbscan;
 pub mod kmeans;
 pub mod metrics;
 
+use crate::linalg::engine::Engine;
 use crate::linalg::{sq_dist, Matrix};
 
-pub use dbscan::{dbscan, DbscanConfig, DbscanResult, NOISE};
+pub use dbscan::{dbscan, dbscan_with, DbscanConfig, DbscanResult, NOISE};
 pub use metrics::{awt, purity};
 
 /// Pluggable pairwise squared-distance provider. `rows` is the feature
@@ -29,7 +30,42 @@ pub struct NativeDistance;
 
 impl DistanceProvider for NativeDistance {
     fn pairwise_sq(&self, rows: &Matrix) -> Vec<f64> {
-        let n = rows.n_rows();
+        pairwise_sq_with(Engine::sequential(), rows)
+    }
+}
+
+/// Engine-parallel native provider: same distances as [`NativeDistance`]
+/// bit-for-bit, with the O(n^2 d) matrix construction row-chunked across
+/// the engine's worker pool. The coordinator's "artifact if available"
+/// constructor falls back to this when the PJRT `pairwise_dist` kernel
+/// is not loadable (see `runtime::nn::distance_provider`).
+pub struct EngineDistance {
+    pub engine: Engine,
+}
+
+impl EngineDistance {
+    pub fn new(engine: Engine) -> EngineDistance {
+        EngineDistance { engine }
+    }
+}
+
+impl DistanceProvider for EngineDistance {
+    fn pairwise_sq(&self, rows: &Matrix) -> Vec<f64> {
+        pairwise_sq_with(self.engine, rows)
+    }
+}
+
+/// Dense pairwise squared-distance matrix, row-parallel over `engine`.
+///
+/// The sequential path computes the upper triangle and mirrors it. The
+/// parallel path computes full rows instead (each worker owns a disjoint
+/// band of output rows, so no mirror write crosses a chunk boundary);
+/// that doubles the kernel invocations but removes all write sharing,
+/// and because `sq_dist(a, b)` is bitwise-symmetric the two paths
+/// produce identical matrices.
+pub fn pairwise_sq_with(engine: Engine, rows: &Matrix) -> Vec<f64> {
+    let n = rows.n_rows();
+    if !engine.is_parallel_for(n) {
         let mut out = vec![0.0; n * n];
         for i in 0..n {
             let ri = rows.row(i);
@@ -39,8 +75,21 @@ impl DistanceProvider for NativeDistance {
                 out[j * n + i] = d;
             }
         }
-        out
+        return out;
     }
+    let mut out = vec![0.0; n * n];
+    engine.for_rows(&mut out, n, |first_row, chunk| {
+        for (off, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = first_row + off;
+            let ri = rows.row(i);
+            for (j, cell) in orow.iter_mut().enumerate() {
+                if i != j {
+                    *cell = sq_dist(ri, rows.row(j));
+                }
+            }
+        }
+    });
+    out
 }
 
 #[cfg(test)]
@@ -61,5 +110,23 @@ mod tests {
         assert!((d[1] - 25.0).abs() < 1e-12);
         assert_eq!(d[1], d[3]);
         assert!((d[2] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_distance_bit_identical_to_native() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0);
+        let mut rows = Matrix::with_width(5);
+        for _ in 0..130 {
+            let r: Vec<f64> =
+                (0..5).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+            rows.push_row(&r);
+        }
+        let want = NativeDistance.pairwise_sq(&rows);
+        for threads in [2, 4] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            let got = EngineDistance::new(engine).pairwise_sq(&rows);
+            assert_eq!(got, want, "threads {threads}");
+        }
     }
 }

@@ -114,6 +114,18 @@ impl Coordinator {
         Self::with_distance(config, Box::new(NativeDistance))
     }
 
+    /// "Artifact if available" construction (ROADMAP): route the
+    /// discovery distance matrix through the PJRT `pairwise_dist`
+    /// artifact when the runtime and artifacts are present, and degrade
+    /// gracefully to the engine-parallel native provider otherwise —
+    /// the caller no longer has to pick at build time. The fallback
+    /// (and the off-line retraining) parallelise over
+    /// `config.discovery.engine`.
+    pub fn with_best_distance(config: CoordinatorConfig) -> Coordinator {
+        let dist = crate::runtime::nn::distance_provider(config.discovery.engine);
+        Self::with_distance(config, dist)
+    }
+
     /// Use a custom distance provider (e.g. `runtime::nn::ArtifactDistance`
     /// to route DBSCAN through the pallas kernel artifact).
     pub fn with_distance(
@@ -258,10 +270,11 @@ impl Coordinator {
                 // include previously synthesised classes' instances via
                 // their prototypes (regenerate a few per stored class)
             }
-            let forest = RandomForest::fit(
+            let forest = RandomForest::fit_with(
                 &data,
                 self.config.training.forest.clone(),
                 &mut self.rng,
+                self.config.discovery.engine,
             );
             let classifier = GatedForestClassifier::from_db(
                 forest,
@@ -284,10 +297,11 @@ impl Coordinator {
                 {
                     td.push(row, label);
                 }
-                let tforest = RandomForest::fit(
+                let tforest = RandomForest::fit_with(
                     &td,
                     self.config.training.forest.clone(),
                     &mut self.rng,
+                    self.config.discovery.engine,
                 );
                 self.pipeline.set_transition_classifier(Box::new(
                     crate::online::ForestWindowClassifier::new(
@@ -468,6 +482,7 @@ pub fn run_oracle(
 mod tests {
     use super::*;
     use crate::explorer::baselines::rule_of_thumb;
+    use crate::linalg::engine::Engine;
     use crate::simcluster::default_config_index;
     use crate::workloadgen::Mix;
 
@@ -544,6 +559,39 @@ mod tests {
         assert!(oracle.makespan <= kermit.makespan * 1.01);
         // and the oracle is meaningfully better than rule-of-thumb
         assert!(oracle.makespan < rot.makespan);
+    }
+
+    #[test]
+    fn best_distance_parallel_run_matches_native_sequential() {
+        // without artifacts on disk, with_best_distance must degrade to
+        // the native provider; with a parallel engine the whole run is
+        // still bit-identical to the sequential Coordinator::new path
+        let mut cfg = CoordinatorConfig::default();
+        cfg.offline_interval_windows = 12;
+        cfg.engine.duration_noise = 0.01;
+        let jobs = recurring_jobs(&[0, 5], 8);
+
+        let mut seq = Coordinator::new(cfg.clone());
+        seq.plugin.explorer_config.global_budget = 25;
+        let seq_report = seq.run_schedule(&jobs);
+
+        cfg.discovery.engine = Engine::with_threads(4).with_min_items(1);
+        let mut par = Coordinator::with_best_distance(cfg);
+        par.plugin.explorer_config.global_budget = 25;
+        let par_report = par.run_schedule(&jobs);
+
+        if crate::runtime::Runtime::load(&crate::runtime::default_dir()).is_ok() {
+            // artifact path live (f32 kernel): bitwise comparison does
+            // not apply; the construction + run not panicking is the
+            // degradation contract under test
+            return;
+        }
+        assert_eq!(seq_report.makespan, par_report.makespan);
+        assert_eq!(seq_report.workloads_known, par_report.workloads_known);
+        for (a, b) in seq_report.jobs.iter().zip(&par_report.jobs) {
+            assert_eq!(a.classified_label, b.classified_label);
+            assert_eq!(a.duration, b.duration);
+        }
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! The compute engine behind the clustering / classification hot paths:
+//! an explicit SIMD squared-distance kernel and a std-only scoped-thread
+//! worker pool for the embarrassingly-parallel row loops.
+//!
+//! # SIMD kernel and feature gates
+//!
+//! [`sq_dist`] is the dispatch point every distance computation in the
+//! crate funnels through (via `linalg::sq_dist`). Three tiers:
+//!
+//! * **default build** — [`sq_dist_scalar`], the four-accumulator scalar
+//!   kernel. It auto-vectorises well and keeps the build dependency- and
+//!   `unsafe`-free.
+//! * **`--features simd`, x86_64** — an explicit AVX f64x4 kernel
+//!   (`std::arch` intrinsics, no external crates). Availability is
+//!   checked *at runtime* via `is_x86_feature_detected!` and cached, so
+//!   a `simd` binary still runs correctly on a pre-AVX host by falling
+//!   back to the scalar kernel.
+//! * **`--features simd`, non-x86_64** — compiles to the scalar kernel;
+//!   the feature is a no-op rather than a build error.
+//!
+//! The AVX kernel deliberately avoids fused multiply-add: lane `i` of
+//! the vector accumulator performs exactly the operation sequence of
+//! scalar accumulator `s[i]`, and the horizontal reduction uses the same
+//! `(s0 + s1) + (s2 + s3)` order, so the SIMD path is **bit-identical**
+//! to the scalar path (pinned by a property test). That keeps every
+//! golden-equivalence guarantee of the numeric core intact regardless of
+//! build flavour.
+//!
+//! # Worker pool and threshold heuristics
+//!
+//! [`Engine`] is a tiny `Copy` handle — a thread count plus a
+//! sequential-fallback threshold — that callers pick **once at
+//! construction** ([`Engine::sequential`], [`Engine::auto`],
+//! [`Engine::with_threads`]) and thread through the clustering / ML /
+//! discovery APIs. Work is fanned out with `std::thread::scope` (no
+//! external thread-pool dependency, no `'static` bounds), split into at
+//! most `threads` contiguous, disjoint chunks.
+//!
+//! Batches smaller than `min_items` (default [`MIN_PAR_ITEMS`]) run
+//! sequentially on the calling thread: below roughly that many rows the
+//! scoped-spawn cost (~tens of µs) exceeds the row work itself for the
+//! 32-wide analytic rows these loops process. Callers whose items are
+//! individually heavy (e.g. fitting one forest tree) lower it with
+//! [`Engine::with_min_items`].
+//!
+//! # Determinism
+//!
+//! Chunks are contiguous index ranges and results are reduced **in
+//! chunk order**, so any per-row map is bit-identical to its sequential
+//! run. Reductions that break ties by index (k-means empty-cluster
+//! reseed, agglomerative closest-pair) keep sequential tie-breaking by
+//! comparing chunk-local winners in chunk order — see
+//! `clustering::kmeans` for the pattern. Nothing in this module uses
+//! work stealing or atomics on the data path, so there is no scheduling
+//! nondeterminism to begin with.
+
+use std::ops::Range;
+
+/// Below this many items a parallel call runs sequentially (see the
+/// module docs for the rationale).
+pub const MIN_PAR_ITEMS: usize = 64;
+
+/// Scoped-thread worker pool handle. Cheap to copy; embed it in configs
+/// so parallelism is picked once at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Engine {
+    threads: usize,
+    min_items: usize,
+}
+
+impl Engine {
+    /// Single-threaded engine: every call runs on the calling thread.
+    pub fn sequential() -> Engine {
+        Engine { threads: 1, min_items: MIN_PAR_ITEMS }
+    }
+
+    /// Engine with an explicit worker count (clamped to at least 1).
+    pub fn with_threads(threads: usize) -> Engine {
+        Engine { threads: threads.max(1), min_items: MIN_PAR_ITEMS }
+    }
+
+    /// Engine sized to the host (`std::thread::available_parallelism`).
+    pub fn auto() -> Engine {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Engine::with_threads(threads)
+    }
+
+    /// Override the sequential-fallback threshold (items per call below
+    /// which no threads are spawned). For loops whose items are
+    /// individually expensive — fitting a tree, not scanning a row.
+    pub fn with_min_items(mut self, min_items: usize) -> Engine {
+        self.min_items = min_items.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Would a call over `items` items actually fan out?
+    pub fn is_parallel_for(&self, items: usize) -> bool {
+        self.threads > 1 && items >= self.min_items
+    }
+
+    /// Parallel for over disjoint chunks of `out`, collecting one result
+    /// per chunk **in chunk order**.
+    ///
+    /// `out` is split at multiples of `stride` (use `stride > 1` when
+    /// each logical item spans several elements, e.g. one matrix row of
+    /// `n` distances). `f` receives the first *item* index of its chunk
+    /// and the chunk slice. Sequential below the engine threshold, in
+    /// which case `f` runs once over the whole slice.
+    pub fn for_rows_map<T, R, F>(&self, out: &mut [T], stride: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut [T]) -> R + Sync,
+    {
+        assert!(stride > 0, "stride must be positive");
+        assert_eq!(out.len() % stride, 0, "slice length not a stride multiple");
+        let items = out.len() / stride;
+        if !self.is_parallel_for(items) {
+            return vec![f(0, out)];
+        }
+        let workers = self.threads.min(items);
+        let chunk_items = items.div_ceil(workers);
+        let chunk_len = chunk_items * stride;
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = out
+                .chunks_mut(chunk_len)
+                .enumerate()
+                .map(|(ci, chunk)| s.spawn(move || f(ci * chunk_items, chunk)))
+                .collect();
+            handles.into_iter().map(join_or_resume).collect()
+        })
+    }
+
+    /// Parallel for over disjoint chunks of `out` (no per-chunk result).
+    pub fn for_rows<T, F>(&self, out: &mut [T], stride: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        self.for_rows_map(out, stride, |start, chunk| f(start, chunk));
+    }
+
+    /// Fan a read-only computation over contiguous sub-ranges of `0..n`,
+    /// collecting one result per chunk **in chunk order**. Sequential
+    /// below the engine threshold (one call over the whole range).
+    pub fn map_chunks<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+    {
+        if !self.is_parallel_for(n) {
+            return vec![f(0..n)];
+        }
+        let workers = self.threads.min(n);
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = (0..n)
+                .step_by(chunk)
+                .map(|start| {
+                    let end = (start + chunk).min(n);
+                    s.spawn(move || f(start..end))
+                })
+                .collect();
+            handles.into_iter().map(join_or_resume).collect()
+        })
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Engine {
+        Engine::sequential()
+    }
+}
+
+fn join_or_resume<R>(h: std::thread::ScopedJoinHandle<'_, R>) -> R {
+    match h.join() {
+        Ok(r) => r,
+        Err(payload) => std::panic::resume_unwind(payload),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// squared-distance kernels
+// ---------------------------------------------------------------------------
+
+/// Scalar squared euclidean distance: four independent accumulators so
+/// the compiler can keep the loop in SIMD lanes even without the
+/// explicit kernel. This is the reference arithmetic the AVX path must
+/// match bit-for-bit.
+#[inline]
+pub fn sq_dist_scalar(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        let d0 = x[0] - y[0];
+        let d1 = x[1] - y[1];
+        let d2 = x[2] - y[2];
+        let d3 = x[3] - y[3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut sum = (s0 + s1) + (s2 + s3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x - y;
+        sum += d * d;
+    }
+    sum
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_setzero_pd,
+        _mm256_storeu_pd, _mm256_sub_pd,
+    };
+
+    /// AVX f64x4 squared distance, bit-identical to
+    /// [`super::sq_dist_scalar`]: lane `i` of `acc` runs exactly the
+    /// scalar accumulator `s[i]`'s operation sequence (no FMA — fusing
+    /// would change the rounding and break golden equivalence), and the
+    /// horizontal reduction uses the same `(s0 + s1) + (s2 + s3)` order.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX support on the running CPU
+    /// (see `avx_active`).
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let n4 = n / 4 * 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < n4 {
+            let x = _mm256_loadu_pd(a.as_ptr().add(i));
+            let y = _mm256_loadu_pd(b.as_ptr().add(i));
+            let d = _mm256_sub_pd(x, y);
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+            i += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut sum = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            sum += d * d;
+            i += 1;
+        }
+        sum
+    }
+}
+
+/// Cached runtime AVX check: 0 = unknown, 1 = available, 2 = absent.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn avx_active() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let ok = is_x86_feature_detected!("avx");
+            STATE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// Squared euclidean distance — the dispatch point (`linalg::sq_dist`
+/// forwards here). Explicit AVX kernel when compiled with `--features
+/// simd` on an x86_64 host that has AVX; scalar kernel otherwise. Both
+/// paths produce bit-identical results.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    if avx_active() {
+        // SAFETY: AVX availability verified by `avx_active`.
+        unsafe { avx::sq_dist(a, b) }
+    } else {
+        sq_dist_scalar(a, b)
+    }
+}
+
+/// Squared euclidean distance — the dispatch point (`linalg::sq_dist`
+/// forwards here). This build has no explicit SIMD kernel compiled in;
+/// the scalar kernel is the (auto-vectorising) implementation.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    sq_dist_scalar(a, b)
+}
+
+/// True when the explicit SIMD kernel is compiled in *and* the running
+/// CPU supports it (benches record this into their JSON metadata).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn simd_active() -> bool {
+    avx_active()
+}
+
+/// True when the explicit SIMD kernel is compiled in *and* the running
+/// CPU supports it (benches record this into their JSON metadata).
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn simd_active() -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn for_rows_visits_every_item_once_with_correct_index() {
+        for threads in [1, 2, 4, 7] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            let mut out = vec![usize::MAX; 333];
+            engine.for_rows(&mut out, 1, |start, chunk| {
+                for (off, cell) in chunk.iter_mut().enumerate() {
+                    assert_eq!(*cell, usize::MAX, "item visited twice");
+                    *cell = start + off;
+                }
+            });
+            let want: Vec<usize> = (0..333).collect();
+            assert_eq!(out, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn for_rows_respects_stride() {
+        let engine = Engine::with_threads(3).with_min_items(1);
+        let mut out = vec![0usize; 50 * 7];
+        engine.for_rows(&mut out, 7, |first_item, chunk| {
+            assert_eq!(chunk.len() % 7, 0, "chunk split mid-row");
+            for (off, row) in chunk.chunks_mut(7).enumerate() {
+                for cell in row.iter_mut() {
+                    *cell = first_item + off;
+                }
+            }
+        });
+        for (i, row) in out.chunks(7).enumerate() {
+            assert!(row.iter().all(|&v| v == i), "row {i}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn for_rows_map_results_in_chunk_order() {
+        let engine = Engine::with_threads(4).with_min_items(1);
+        let mut out = vec![0u8; 100];
+        let firsts = engine.for_rows_map(&mut out, 1, |start, _| start);
+        let mut sorted = firsts.clone();
+        sorted.sort_unstable();
+        assert_eq!(firsts, sorted, "chunk results out of order");
+        assert_eq!(firsts[0], 0);
+    }
+
+    #[test]
+    fn map_chunks_partitions_range_in_order() {
+        for (threads, n) in [(1, 10), (4, 100), (3, 64), (16, 65)] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            let ranges = engine.map_chunks(n, |r| r);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap/overlap at {next}");
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n, "threads={threads} n={n}");
+        }
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let engine = Engine::with_threads(4).with_min_items(1);
+        let mut out: Vec<u32> = Vec::new();
+        let results = engine.for_rows_map(&mut out, 1, |_, chunk| chunk.len());
+        assert_eq!(results, vec![0]);
+        assert_eq!(engine.map_chunks(0, |r| r.len()), vec![0]);
+    }
+
+    #[test]
+    fn threshold_keeps_small_batches_sequential() {
+        let engine = Engine::with_threads(8);
+        assert!(!engine.is_parallel_for(MIN_PAR_ITEMS - 1));
+        assert!(engine.is_parallel_for(MIN_PAR_ITEMS));
+        assert!(!Engine::sequential().is_parallel_for(1 << 20));
+        assert!(engine.with_min_items(1).is_parallel_for(2));
+    }
+
+    #[test]
+    fn with_threads_clamps_to_one() {
+        assert_eq!(Engine::with_threads(0).threads(), 1);
+        assert!(Engine::auto().threads() >= 1);
+    }
+
+    #[test]
+    fn sq_dist_dispatch_matches_scalar_all_lengths() {
+        // bit-identical across 0..=64, covering every remainder case of
+        // the 4-lane kernel (exact equality, not a tolerance)
+        let mut rng = Rng::new(42);
+        for n in 0..=64usize {
+            let a: Vec<f64> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+            assert_eq!(sq_dist(&a, &b), sq_dist_scalar(&a, &b), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn sq_dist_is_symmetric_bitwise() {
+        let mut rng = Rng::new(7);
+        let a: Vec<f64> = (0..32).map(|_| rng.normal_ms(5.0, 3.0)).collect();
+        let b: Vec<f64> = (0..32).map(|_| rng.normal_ms(1.0, 2.0)).collect();
+        // exact symmetry is what lets the parallel pairwise matrix
+        // compute both triangles independently yet stay bit-identical
+        assert_eq!(sq_dist(&a, &b), sq_dist(&b, &a));
+    }
+
+    #[test]
+    fn parallel_map_is_bit_identical_to_sequential() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..500).map(|_| rng.normal()).collect();
+        let run = |engine: Engine| -> Vec<f64> {
+            let mut out = vec![0.0f64; xs.len()];
+            engine.for_rows(&mut out, 1, |start, chunk| {
+                for (off, cell) in chunk.iter_mut().enumerate() {
+                    let x = xs[start + off];
+                    *cell = (x * 1.7).sin() + x * x;
+                }
+            });
+            out
+        };
+        let seq = run(Engine::sequential());
+        for threads in [2, 3, 8] {
+            assert_eq!(
+                seq,
+                run(Engine::with_threads(threads).with_min_items(1)),
+                "threads = {threads}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "stride multiple")]
+    fn stride_mismatch_panics() {
+        let mut out = vec![0u8; 10];
+        Engine::sequential().for_rows(&mut out, 3, |_, _| {});
+    }
+}

@@ -1,6 +1,9 @@
 //! Contiguous numeric core: the [`Matrix`] row store and the cache-
 //! friendly distance/accumulate kernels every clustering and ML path in
-//! the crate runs on.
+//! the crate runs on. The [`engine`] submodule supplies the compute
+//! layer on top — the explicit SIMD `sq_dist` kernel (behind the `simd`
+//! cargo feature) and the scoped-thread worker pool the row-parallel
+//! hot paths fan out on.
 //!
 //! # Layout
 //!
@@ -31,6 +34,8 @@
 //!   first [`Matrix::push_row`] adopts the row's width. This lets
 //!   growable containers (e.g. `ml::Dataset`) start empty without
 //!   declaring a width up front.
+
+pub mod engine;
 
 /// Dense row-major matrix of `f64`. See the module docs for layout and
 /// aliasing rules.
@@ -164,32 +169,15 @@ impl Matrix {
 
 /// Squared euclidean distance between two equal-length slices.
 ///
-/// Four independent accumulators so the compiler can keep the loop in
-/// SIMD lanes; on contiguous `Matrix` rows this is the hot kernel of
-/// k-means assign, DBSCAN's distance matrix, kNN, and the centroid
-/// gates.
+/// On contiguous `Matrix` rows this is the hot kernel of k-means
+/// assign, DBSCAN's distance matrix, kNN, and the centroid gates.
+/// Dispatches through [`engine::sq_dist`]: the explicit AVX kernel when
+/// built with `--features simd` on a host that has it, otherwise the
+/// four-accumulator scalar kernel. Both produce bit-identical results
+/// (see the `engine` module docs).
 #[inline]
 pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut ca = a.chunks_exact(4);
-    let mut cb = b.chunks_exact(4);
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for (x, y) in (&mut ca).zip(&mut cb) {
-        let d0 = x[0] - y[0];
-        let d1 = x[1] - y[1];
-        let d2 = x[2] - y[2];
-        let d3 = x[3] - y[3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-    }
-    let mut sum = (s0 + s1) + (s2 + s3);
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        let d = x - y;
-        sum += d * d;
-    }
-    sum
+    engine::sq_dist(a, b)
 }
 
 /// Fused accumulate: `acc[i] += x[i]` — k-means update without a

@@ -5,6 +5,7 @@
 use super::dataset::Dataset;
 use super::tree::{DecisionTree, TreeConfig};
 use super::Classifier;
+use crate::linalg::engine::Engine;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 
@@ -38,6 +39,22 @@ pub struct RandomForest {
 
 impl RandomForest {
     pub fn fit(data: &Dataset, config: ForestConfig, rng: &mut Rng) -> RandomForest {
+        Self::fit_with(data, config, rng, Engine::sequential())
+    }
+
+    /// Engine-parallel [`RandomForest::fit`]: the per-tree RNG streams
+    /// are forked from `rng` sequentially (same draw order as the
+    /// sequential path), then bootstrap + CART fitting fan out over the
+    /// engine's worker pool — each tree owns its forked stream, so the
+    /// forest is bit-identical to the sequential fit for any thread
+    /// count. Trees are heavy work items, so parallelism engages from
+    /// two trees up regardless of the engine's row-loop threshold.
+    pub fn fit_with(
+        data: &Dataset,
+        config: ForestConfig,
+        rng: &mut Rng,
+        engine: Engine,
+    ) -> RandomForest {
         assert!(!data.is_empty());
         let mtry = config
             .mtry
@@ -50,13 +67,16 @@ impl RandomForest {
             min_samples_split: config.min_samples_split,
             mtry: Some(mtry),
         };
-        let trees = (0..config.n_trees)
-            .map(|k| {
-                let mut trng = rng.fork(k as u64);
-                let boot = data.bootstrap(&mut trng, n_boot);
-                DecisionTree::fit(&boot, tree_cfg.clone(), &mut trng)
-            })
+        let mut slots: Vec<(Rng, Option<DecisionTree>)> = (0..config.n_trees)
+            .map(|k| (rng.fork(k as u64), None))
             .collect();
+        engine.with_min_items(2).for_rows(&mut slots, 1, |_, chunk| {
+            for (trng, slot) in chunk.iter_mut() {
+                let boot = data.bootstrap(trng, n_boot);
+                *slot = Some(DecisionTree::fit(&boot, tree_cfg.clone(), trng));
+            }
+        });
+        let trees = slots.into_iter().map(|(_, t)| t.unwrap()).collect();
         RandomForest { trees }
     }
 
@@ -210,6 +230,26 @@ mod tests {
         let sum: f64 = p.iter().map(|(_, q)| q).sum();
         assert!((sum - 1.0).abs() < 1e-9);
         assert!(p.iter().all(|&(_, q)| (0.0..=1.0).contains(&q)));
+    }
+
+    #[test]
+    fn parallel_fit_and_predict_match_sequential() {
+        let d = gaussian_blobs(300, 7);
+        let cfg = ForestConfig { n_trees: 12, ..Default::default() };
+        let mut ra = Rng::new(8);
+        let a = RandomForest::fit(&d, cfg.clone(), &mut ra);
+        let seq_preds = a.predict_batch(d.x());
+        for threads in [2, 4] {
+            let engine = Engine::with_threads(threads);
+            let mut rb = Rng::new(8);
+            let b = RandomForest::fit_with(&d, cfg.clone(), &mut rb, engine);
+            assert_eq!(seq_preds, b.predict_batch(d.x()), "fit diverged at {threads} threads");
+            assert_eq!(
+                seq_preds,
+                a.predict_batch_with(engine.with_min_items(1), d.x()),
+                "batch predict diverged at {threads} threads"
+            );
+        }
     }
 
     #[test]

@@ -110,6 +110,23 @@ mod tests {
     }
 
     #[test]
+    fn parallel_batch_matches_sequential() {
+        use crate::linalg::engine::Engine;
+        let mut rng = Rng::new(5);
+        let mut d = Dataset::new();
+        for _ in 0..150 {
+            d.push(vec![rng.normal_ms(0.0, 1.0), rng.normal_ms(0.0, 1.0)], 0);
+            d.push(vec![rng.normal_ms(3.0, 1.0), rng.normal_ms(3.0, 1.0)], 1);
+        }
+        let knn = Knn::fit(&d, 5);
+        let seq = knn.predict_batch(d.x());
+        for threads in [2, 4] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            assert_eq!(seq, knn.predict_batch_with(engine, d.x()), "threads {threads}");
+        }
+    }
+
+    #[test]
     fn standardisation_handles_scale_imbalance() {
         // feature 1 is 1000x feature 0's scale; without standardisation it
         // would dominate and mask the informative feature 0

@@ -15,6 +15,7 @@ pub mod metrics;
 pub mod naive_bayes;
 pub mod tree;
 
+use crate::linalg::engine::Engine;
 use crate::linalg::Matrix;
 
 pub use dataset::Dataset;
@@ -30,6 +31,21 @@ pub trait Classifier: Send + Sync {
     /// impls).
     fn predict_batch(&self, xs: &Matrix) -> Vec<u32> {
         xs.iter_rows().map(|x| self.predict(x)).collect()
+    }
+
+    /// Engine-parallel [`Classifier::predict_batch`]: rows fan out over
+    /// the engine's worker pool (every classifier is `Sync`, and each
+    /// prediction is independent), producing exactly the labels of the
+    /// sequential path. Small batches fall back to a single-threaded
+    /// loop per the engine's threshold.
+    fn predict_batch_with(&self, engine: Engine, xs: &Matrix) -> Vec<u32> {
+        let mut out = vec![0u32; xs.n_rows()];
+        engine.for_rows(&mut out, 1, |start, chunk| {
+            for (off, cell) in chunk.iter_mut().enumerate() {
+                *cell = self.predict(xs.row(start + off));
+            }
+        });
+        out
     }
 
     /// Class-probability estimate if the model supports it (used by the

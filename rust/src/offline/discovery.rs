@@ -12,9 +12,10 @@
 //!    drift (stored config kept, optimal flag cleared); matched without
 //!    shift ⇒ refresh; unmatched ⇒ new label inserted.
 
-use crate::clustering::{dbscan, DbscanConfig, DistanceProvider, NOISE};
+use crate::clustering::{dbscan_with, DbscanConfig, DistanceProvider, NOISE};
 use crate::features::{ObservationWindow, ANALYTIC_WIDTH};
 use crate::knowledge::{Characterization, WorkloadDb};
+use crate::linalg::engine::Engine;
 use crate::linalg::Matrix;
 use crate::online::change_detector::{ChangeDetector, ChangeDetectorConfig};
 
@@ -27,6 +28,12 @@ pub struct DiscoveryConfig {
     /// The ε of Algorithm 2: matched clusters whose mean vector moved
     /// farther than this are flagged as drifting.
     pub drift_epsilon: f64,
+    /// Compute engine for the off-line batch work (DBSCAN neighbourhood
+    /// queries here, plus classifier retraining in the coordinator).
+    /// Parallel engines produce bit-identical discovery results; the
+    /// default stays single-threaded so plain constructions add no
+    /// threading.
+    pub engine: Engine,
 }
 
 impl Default for DiscoveryConfig {
@@ -36,6 +43,7 @@ impl Default for DiscoveryConfig {
             dbscan: DbscanConfig { eps: 10.0, min_pts: 4 },
             match_radius: 25.0,
             drift_epsilon: 8.0,
+            engine: Engine::sequential(),
         }
     }
 }
@@ -115,7 +123,7 @@ pub fn discover(
     for (r, &i) in steady_idx.iter().enumerate() {
         windows[i].write_analytic(rows.row_mut(r));
     }
-    let clusters = dbscan(&rows, &config.dbscan, dist);
+    let clusters = dbscan_with(config.engine, &rows, &config.dbscan, dist);
     report.noise_windows =
         clusters.labels.iter().filter(|&&l| l == NOISE).count();
 

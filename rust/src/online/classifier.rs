@@ -21,6 +21,7 @@
 
 use super::context::UNKNOWN;
 use crate::knowledge::WorkloadDb;
+use crate::linalg::engine::Engine;
 use crate::linalg::{nearest_row, sq_dist, Matrix};
 use crate::ml::forest::RandomForest;
 
@@ -187,6 +188,23 @@ pub fn classify_all(c: &dyn WindowClassifier, rows: &Matrix) -> Vec<u32> {
     rows.iter_rows().map(|r| c.classify(r)).collect()
 }
 
+/// Engine-parallel [`classify_all`]: windows are independent, so rows
+/// fan out over the engine's worker pool and the labels come back
+/// identical to the sequential helper.
+pub fn classify_all_with(
+    engine: Engine,
+    c: &(dyn WindowClassifier + Sync),
+    rows: &Matrix,
+) -> Vec<u32> {
+    let mut out = vec![0u32; rows.n_rows()];
+    engine.for_rows(&mut out, 1, |start, chunk| {
+        for (off, cell) in chunk.iter_mut().enumerate() {
+            *cell = c.classify(rows.row(start + off));
+        }
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,5 +295,27 @@ mod tests {
     #[test]
     fn unknown_classifier_is_unknown() {
         assert_eq!(UnknownClassifier.classify(&[1.0, 2.0]), UNKNOWN);
+    }
+
+    #[test]
+    fn classify_all_with_matches_sequential() {
+        let mut db = WorkloadDb::new();
+        db.insert_new(
+            Characterization::from_vec_rows(&[vec![0.0], vec![0.2]]),
+            vec![0.1],
+            2,
+            false,
+        );
+        let c = CentroidClassifier::from_db(&db, 1.0);
+        let mut rows = crate::linalg::Matrix::with_width(1);
+        for i in 0..120 {
+            rows.push_row(&[(i % 7) as f64]);
+        }
+        let seq = classify_all(&c, &rows);
+        for threads in [2, 4] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            let par = classify_all_with(engine, &c, &rows);
+            assert_eq!(seq, par, "threads {threads}");
+        }
     }
 }

@@ -65,6 +65,25 @@ pub use real::{ArtifactDistance, LstmPredictor, MlpClassifier, WelchAggregator};
 #[cfg(not(feature = "runtime-artifacts"))]
 pub use stubs::{ArtifactDistance, LstmPredictor, MlpClassifier, WelchAggregator};
 
+/// "Artifact if available" pairwise-distance provider (ROADMAP): try to
+/// load the PJRT runtime from the default artifact directory and back
+/// the provider with the `pairwise_dist` pallas kernel; degrade to the
+/// engine-parallel native implementation when the runtime is compiled
+/// out (`runtime-artifacts` feature off) or the artifacts are missing
+/// on disk. Callers that must know which path was taken can check
+/// [`ArtifactDistance::new`] themselves; the coordinator just wants the
+/// best available provider.
+pub fn distance_provider(
+    engine: crate::linalg::engine::Engine,
+) -> Box<dyn crate::clustering::DistanceProvider> {
+    let artifact = crate::runtime::Runtime::load(&crate::runtime::default_dir())
+        .and_then(|rt| ArtifactDistance::new(&rt));
+    match artifact {
+        Ok(a) => Box::new(a),
+        Err(_) => Box::new(crate::clustering::EngineDistance::new(engine)),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // stubs (feature disabled)
 // ---------------------------------------------------------------------------
@@ -858,5 +877,32 @@ mod tests {
         assert_eq!(s.slot_of(100), 0);
         assert_eq!(s.label_of(1), Some(7));
         assert_eq!(s.label_of(9), None);
+    }
+
+    #[test]
+    fn distance_provider_degrades_to_native() {
+        use crate::clustering::{DistanceProvider, NativeDistance};
+        use crate::linalg::engine::Engine;
+        use crate::linalg::Matrix;
+        // without loadable artifacts (always true in the default build,
+        // and true in artifact builds until `make artifacts` has run in
+        // cwd) the provider must be the native fallback and agree with
+        // NativeDistance exactly
+        let provider = distance_provider(Engine::with_threads(2));
+        let rows = Matrix::from_rows(&[
+            vec![0.0, 0.0],
+            vec![3.0, 4.0],
+            vec![1.0, 1.0],
+        ]);
+        let got = provider.pairwise_sq(&rows);
+        let want = NativeDistance.pairwise_sq(&rows);
+        if crate::runtime::Runtime::load(&crate::runtime::default_dir()).is_err() {
+            assert_eq!(got, want);
+        } else {
+            // artifact path live: f32 kernel, tolerance comparison
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 0.05 + 1e-2 * w, "{g} vs {w}");
+            }
+        }
     }
 }

@@ -1,0 +1,197 @@
+//! Golden-equivalence tests for the `linalg::engine` compute layer: the
+//! SIMD `sq_dist` kernel must be bit-identical to the scalar kernel
+//! (build with `--features simd` to exercise the AVX path — the CI simd
+//! job does), and every engine-parallel hot path must produce labels
+//! bit-identical to its sequential counterpart, because the on-line /
+//! off-line split of the paper's loop assumes discovery is a pure
+//! function of the landed windows, not of the host's core count.
+
+use kermit::clustering::kmeans::{kmeans, kmeans_with};
+use kermit::clustering::{dbscan, dbscan_with, DbscanConfig};
+use kermit::clustering::{DistanceProvider, EngineDistance, NativeDistance};
+use kermit::linalg::engine::{self, Engine};
+use kermit::linalg::Matrix;
+use kermit::ml::forest::{ForestConfig, RandomForest};
+use kermit::ml::knn::Knn;
+use kermit::ml::{Classifier, Dataset};
+use kermit::testkit::{forall, gen};
+use kermit::util::rng::Rng;
+
+fn par(threads: usize) -> Engine {
+    // threshold dropped to 1 so even small generated cases actually fan
+    // out instead of taking the sequential fallback
+    Engine::with_threads(threads).with_min_items(1)
+}
+
+#[test]
+fn prop_simd_sq_dist_matches_scalar_lengths_0_to_64() {
+    forall(
+        20,
+        200,
+        |rng| {
+            let n = rng.range_usize(0, 65);
+            (gen::vec_f64(rng, n, -1e3, 1e3), gen::vec_f64(rng, n, -1e3, 1e3))
+        },
+        |(a, b)| {
+            // exact bit equality, not a tolerance: the AVX kernel runs
+            // the scalar accumulator sequence per lane (no FMA) and
+            // reduces in the same order
+            let fast = kermit::linalg::sq_dist(a, b);
+            let scalar = engine::sq_dist_scalar(a, b);
+            if fast.to_bits() != scalar.to_bits() {
+                return Err(format!("simd {fast} != scalar {scalar}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pairwise_matrix_parallel_matches_sequential() {
+    forall(
+        21,
+        25,
+        |rng| {
+            let n = rng.range_usize(2, 150);
+            let w = rng.range_usize(1, 9);
+            (gen::rows(rng, n, w, -50.0, 50.0), rng.range_usize(2, 9))
+        },
+        |(rows, threads)| {
+            let m = Matrix::from_rows(rows);
+            let want = NativeDistance.pairwise_sq(&m);
+            let got = EngineDistance::new(par(*threads)).pairwise_sq(&m);
+            if got != want {
+                return Err(format!("diverged at {threads} threads"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kmeans_parallel_labels_match_sequential() {
+    forall(
+        22,
+        15,
+        |rng| {
+            let n = rng.range_usize(64, 220);
+            let w = rng.range_usize(2, 7);
+            (
+                gen::rows(rng, n, w, -30.0, 30.0),
+                rng.range_usize(1, 6),
+                rng.range_usize(2, 9),
+                rng.next_u64(),
+            )
+        },
+        |(rows, k, threads, seed)| {
+            let m = Matrix::from_rows(rows);
+            let mut ra = Rng::new(*seed);
+            let a = kmeans(&m, *k, 40, &mut ra);
+            let mut rb = Rng::new(*seed);
+            let b = kmeans_with(par(*threads), &m, *k, 40, &mut rb);
+            if a.labels != b.labels {
+                return Err(format!("labels diverged ({threads} threads)"));
+            }
+            if a.centroids != b.centroids {
+                return Err("centroids diverged".into());
+            }
+            if a.inertia.to_bits() != b.inertia.to_bits() {
+                return Err(format!("inertia {} vs {}", a.inertia, b.inertia));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dbscan_parallel_labels_match_sequential() {
+    forall(
+        23,
+        15,
+        |rng| {
+            let n = rng.range_usize(5, 180);
+            let w = rng.range_usize(2, 7);
+            (
+                gen::rows(rng, n, w, -20.0, 20.0),
+                rng.range_f64(0.5, 15.0),
+                rng.range_usize(2, 6),
+                rng.range_usize(2, 9),
+            )
+        },
+        |(rows, eps, min_pts, threads)| {
+            let m = Matrix::from_rows(rows);
+            let cfg = DbscanConfig { eps: *eps, min_pts: *min_pts };
+            let a = dbscan(&m, &cfg, &NativeDistance);
+            let engine = par(*threads);
+            let b = dbscan_with(engine, &m, &cfg, &EngineDistance::new(engine));
+            if a.labels != b.labels || a.n_clusters != b.n_clusters {
+                return Err(format!("diverged at {threads} threads"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn forest_parallel_fit_and_predict_batch_match_sequential() {
+    // seeded blobs; both the parallel tree fitting and the parallel
+    // batch prediction must reproduce the sequential labels exactly
+    let mut rng = Rng::new(31);
+    let mut data = Dataset::new();
+    for _ in 0..120 {
+        for (label, cx) in [(0u32, 0.0), (1, 6.0), (2, -6.0)] {
+            data.push(vec![rng.normal_ms(cx, 1.0), rng.normal_ms(cx / 2.0, 1.0)], label);
+        }
+    }
+    let cfg = ForestConfig { n_trees: 20, ..Default::default() };
+    let mut ra = Rng::new(77);
+    let seq_forest = RandomForest::fit(&data, cfg.clone(), &mut ra);
+    let seq_preds = seq_forest.predict_batch(data.x());
+    for threads in [2, 3, 8] {
+        let engine = par(threads);
+        let mut rb = Rng::new(77);
+        let par_forest = RandomForest::fit_with(&data, cfg.clone(), &mut rb, engine);
+        assert_eq!(
+            seq_preds,
+            par_forest.predict_batch(data.x()),
+            "parallel fit diverged at {threads} threads"
+        );
+        assert_eq!(
+            seq_preds,
+            seq_forest.predict_batch_with(engine, data.x()),
+            "parallel predict_batch diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn knn_parallel_predict_batch_matches_sequential() {
+    let mut rng = Rng::new(41);
+    let mut data = Dataset::new();
+    for _ in 0..100 {
+        data.push(vec![rng.normal_ms(0.0, 1.0), rng.normal_ms(0.0, 1.0)], 0);
+        data.push(vec![rng.normal_ms(4.0, 1.0), rng.normal_ms(4.0, 1.0)], 1);
+    }
+    let knn = Knn::fit(&data, 7);
+    let seq = knn.predict_batch(data.x());
+    for threads in [2, 5] {
+        assert_eq!(seq, knn.predict_batch_with(par(threads), data.x()), "threads {threads}");
+    }
+}
+
+#[test]
+fn kmeans_duplicate_ties_stay_deterministic_across_thread_counts() {
+    // all-duplicate rows: every assign distance ties at 0 and every
+    // update empties k-1 clusters, forcing the reseed argmax through
+    // its tie-breaking on each iteration
+    let rows = Matrix::from_rows(&vec![vec![2.0, 3.0, 4.0]; 256]);
+    let mut ra = Rng::new(13);
+    let a = kmeans(&rows, 4, 12, &mut ra);
+    for threads in [2, 3, 7, 16] {
+        let mut rb = Rng::new(13);
+        let b = kmeans_with(par(threads), &rows, 4, 12, &mut rb);
+        assert_eq!(a.labels, b.labels, "threads {threads}");
+        assert_eq!(a.centroids, b.centroids, "threads {threads}");
+        assert_eq!(a.iterations, b.iterations, "threads {threads}");
+    }
+}

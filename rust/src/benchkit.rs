@@ -177,6 +177,113 @@ pub fn pct(x: f64) -> String {
     format!("{:.1}%", 100.0 * x)
 }
 
+// ---------------------------------------------------------------------------
+// baseline diffing
+// ---------------------------------------------------------------------------
+
+/// One stage that got slower than the baseline beyond the threshold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageRegression {
+    pub stage: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+    /// current / baseline (always > 1 for a regression).
+    pub ratio: f64,
+}
+
+/// Outcome of diffing a current hotpath table against a baseline one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BaselineDiff {
+    /// The two files were measured under different environments
+    /// (thread count, feature flags, …): latencies are not comparable,
+    /// the diff is skipped — this must NOT fail a build.
+    MetaMismatch {
+        key: String,
+        baseline: String,
+        current: String,
+    },
+    /// Environments match: per-stage comparison ran.
+    Compared {
+        /// Stages beyond `threshold`, sorted worst-first.
+        regressions: Vec<StageRegression>,
+        /// Stages within threshold (or improved).
+        ok: usize,
+        /// Stages present in only one of the files (new/retired
+        /// benchmarks — informational, never a failure).
+        unmatched: usize,
+    },
+}
+
+/// Compare two `Table::write_json` documents (the `meta` and
+/// `median_ns` sections). A stage regresses when
+/// `current > baseline * (1 + threshold)`. Meta keys present in either
+/// document must match exactly in the other, otherwise the comparison
+/// is skipped as [`BaselineDiff::MetaMismatch`].
+pub fn diff_baselines(
+    baseline: &crate::util::json::Json,
+    current: &crate::util::json::Json,
+    threshold: f64,
+) -> Result<BaselineDiff, crate::util::json::JsonError> {
+    let empty = crate::util::json::Json::obj();
+    let meta_of = |j: &crate::util::json::Json| {
+        j.get_opt("meta").cloned().unwrap_or_else(|| empty.clone())
+    };
+    let bm = meta_of(baseline);
+    let cm = meta_of(current);
+    let mut keys: Vec<String> = Vec::new();
+    for m in [&bm, &cm] {
+        for k in m.as_obj()?.keys() {
+            if !keys.contains(k) {
+                keys.push(k.clone());
+            }
+        }
+    }
+    for key in keys {
+        let b = bm
+            .get_opt(&key)
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?;
+        let c = cm
+            .get_opt(&key)
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?;
+        if b != c {
+            return Ok(BaselineDiff::MetaMismatch {
+                key,
+                baseline: b.unwrap_or_else(|| "<absent>".into()),
+                current: c.unwrap_or_else(|| "<absent>".into()),
+            });
+        }
+    }
+
+    let bs = baseline.get("median_ns")?.as_obj()?;
+    let cs = current.get("median_ns")?.as_obj()?;
+    let mut regressions = Vec::new();
+    let mut ok = 0usize;
+    let mut unmatched = 0usize;
+    for (stage, bns) in bs {
+        match cs.get(stage) {
+            Some(cns) => {
+                let (b, c) = (bns.as_f64()?, cns.as_f64()?);
+                if b > 0.0 && c > b * (1.0 + threshold) {
+                    regressions.push(StageRegression {
+                        stage: stage.clone(),
+                        baseline_ns: b,
+                        current_ns: c,
+                        ratio: c / b,
+                    });
+                } else {
+                    ok += 1;
+                }
+            }
+            None => unmatched += 1,
+        }
+    }
+    unmatched += cs.keys().filter(|k| !bs.contains_key(*k)).count();
+    regressions.sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap());
+    Ok(BaselineDiff::Compared { regressions, ok, unmatched })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +310,105 @@ mod tests {
         let mut t = Table::new(&["a", "bb"]);
         t.row(&["1".into(), "2".into()]);
         t.print(); // just must not panic
+    }
+
+    fn doc(meta: &[(&str, &str)], stages: &[(&str, f64)]) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = Json::obj();
+        for (k, v) in meta {
+            m.set(k, Json::Str(v.to_string()));
+        }
+        let mut s = Json::obj();
+        for (k, ns) in stages {
+            s.set(k, Json::Num(*ns));
+        }
+        let mut root = Json::obj();
+        root.set("meta", m).set("median_ns", s);
+        root
+    }
+
+    #[test]
+    fn diff_flags_regressions_beyond_threshold_worst_first() {
+        let base = doc(
+            &[("engine_threads", "8"), ("simd_feature", "on")],
+            &[("observe", 1000.0), ("kmeans", 2000.0), ("dbscan", 500.0)],
+        );
+        let cur = doc(
+            &[("engine_threads", "8"), ("simd_feature", "on")],
+            &[("observe", 1400.0), ("kmeans", 2100.0), ("dbscan", 2500.0)],
+        );
+        match diff_baselines(&base, &cur, 0.25).unwrap() {
+            BaselineDiff::Compared { regressions, ok, unmatched } => {
+                assert_eq!(regressions.len(), 2);
+                // worst ratio first: dbscan 5x, then observe 1.4x
+                assert_eq!(regressions[0].stage, "dbscan");
+                assert!((regressions[0].ratio - 5.0).abs() < 1e-9);
+                assert_eq!(regressions[1].stage, "observe");
+                // kmeans +5% is inside the 25% threshold
+                assert_eq!(ok, 1);
+                assert_eq!(unmatched, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn diff_improvements_and_new_stages_never_fail() {
+        let base = doc(&[("t", "4")], &[("a", 1000.0), ("gone", 9.0)]);
+        let cur = doc(&[("t", "4")], &[("a", 400.0), ("new", 5.0)]);
+        match diff_baselines(&base, &cur, 0.1).unwrap() {
+            BaselineDiff::Compared { regressions, ok, unmatched } => {
+                assert!(regressions.is_empty());
+                assert_eq!(ok, 1);
+                assert_eq!(unmatched, 2); // one retired + one new
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn diff_skips_on_meta_mismatch_including_absent_keys() {
+        let base = doc(&[("engine_threads", "8")], &[("a", 1000.0)]);
+        let cur = doc(&[("engine_threads", "2")], &[("a", 9000.0)]);
+        match diff_baselines(&base, &cur, 0.1).unwrap() {
+            BaselineDiff::MetaMismatch { key, baseline, current } => {
+                assert_eq!(key, "engine_threads");
+                assert_eq!((baseline.as_str(), current.as_str()), ("8", "2"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // a key present on one side only is a mismatch too (a feature
+        // flag added later must not silently compare)
+        let cur2 = doc(
+            &[("engine_threads", "8"), ("simd_feature", "on")],
+            &[("a", 1.0)],
+        );
+        assert!(matches!(
+            diff_baselines(&base, &cur2, 0.1).unwrap(),
+            BaselineDiff::MetaMismatch { .. }
+        ));
+    }
+
+    #[test]
+    fn diff_roundtrips_through_real_table_json() {
+        use crate::util::json::Json;
+        let mut t = Table::new(&["stage", "latency"]);
+        t.timed_row(
+            &["observe".into(), "1.00 µs".into()],
+            Timing { median_ns: 1000.0, mad_ns: 10.0, samples: 5 },
+        );
+        t.meta("engine_threads", "4");
+        let path = std::env::temp_dir().join("kermit_diff_roundtrip.json");
+        t.write_json(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        match diff_baselines(&j, &j, 0.05).unwrap() {
+            BaselineDiff::Compared { regressions, ok, unmatched } => {
+                assert!(regressions.is_empty());
+                assert_eq!((ok, unmatched), (1, 0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

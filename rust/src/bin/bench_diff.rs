@@ -1,0 +1,108 @@
+//! Hotpath baseline differ (ROADMAP: "record + diff hotpath
+//! baselines"): compares the freshly written `BENCH_hotpath.json`
+//! against the committed `BENCH_baseline.json` and fails loudly when a
+//! stage regressed beyond the threshold *under a matching environment*
+//! (`meta`: thread count + feature flags). On meta mismatch — or when
+//! either file is missing — it skips cleanly: a 2-thread laptop run
+//! must never fail CI against a 16-thread baseline.
+//!
+//! Usage:
+//!   bench_diff [--baseline PATH] [--current PATH] [--threshold PCT]
+//!
+//! Exit codes: 0 = ok or skipped, 1 = regression, 2 = bad input.
+//!
+//! Workflow: run `cargo bench --bench hotpath` (writes
+//! BENCH_hotpath.json), then `cargo run --bin bench_diff`; to accept
+//! the current numbers as the new baseline, copy BENCH_hotpath.json to
+//! BENCH_baseline.json and commit it.
+
+use kermit::benchkit::{diff_baselines, BaselineDiff};
+use kermit::util::json::Json;
+
+fn load(path: &str) -> Option<Json> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("bench_diff: {path} not found — skipping (ok)");
+            return None;
+        }
+    };
+    match Json::parse(&text) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            eprintln!("bench_diff: {path} is not valid JSON: {e:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let mut baseline = "BENCH_baseline.json".to_string();
+    let mut current = "BENCH_hotpath.json".to_string();
+    let mut threshold = 0.25f64;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let need_value = |i: usize| {
+            args.get(i + 1).cloned().unwrap_or_else(|| {
+                eprintln!("bench_diff: {} needs a value", args[i]);
+                std::process::exit(2);
+            })
+        };
+        match args[i].as_str() {
+            "--baseline" => baseline = need_value(i),
+            "--current" => current = need_value(i),
+            "--threshold" => {
+                threshold = need_value(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bench_diff: bad --threshold");
+                    std::process::exit(2);
+                })
+            }
+            other => {
+                eprintln!("bench_diff: unknown argument {other}");
+                std::process::exit(2);
+            }
+        }
+        i += 2;
+    }
+
+    let (Some(base), Some(cur)) = (load(&baseline), load(&current)) else {
+        return; // missing file(s): skipped cleanly above
+    };
+    match diff_baselines(&base, &cur, threshold) {
+        Ok(BaselineDiff::MetaMismatch { key, baseline, current }) => {
+            println!(
+                "bench_diff: meta mismatch on `{key}` \
+                 (baseline {baseline:?} vs current {current:?}) — \
+                 environments differ, comparison skipped (ok)"
+            );
+        }
+        Ok(BaselineDiff::Compared { regressions, ok, unmatched }) => {
+            println!(
+                "bench_diff: {ok} stage(s) within {:.0}% of baseline, \
+                 {unmatched} unmatched",
+                threshold * 100.0
+            );
+            if regressions.is_empty() {
+                println!("bench_diff: no regressions");
+                return;
+            }
+            for r in &regressions {
+                println!(
+                    "  REGRESSION {}: {:.0} ns -> {:.0} ns ({:.2}x)",
+                    r.stage, r.baseline_ns, r.current_ns, r.ratio
+                );
+            }
+            eprintln!(
+                "bench_diff: {} stage(s) regressed beyond {:.0}%",
+                regressions.len(),
+                threshold * 100.0
+            );
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("bench_diff: malformed bench JSON: {e:?}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -25,11 +25,24 @@ pub fn agglomerative(
 
 /// Engine-parallel [`agglomerative`]: each merge step's closest-pair
 /// scan (the O(n²) inner loop of the O(n³) algorithm) fans out over the
-/// engine's worker pool; chunk winners reduce in chunk order with
-/// strict `<`, preserving the sequential first-pair tie-breaking, so
-/// the merge sequence and labels are bit-identical for any thread
-/// count. Pass an [`super::EngineDistance`] to also parallelise the
-/// initial distance-matrix construction.
+/// engine's worker pool. Pass an [`super::EngineDistance`] to also
+/// parallelise the initial distance-matrix construction.
+///
+/// The scan is a *triangular* loop — row `i` visits `n-1-i` pairs — so
+/// equal-count row chunks would give the first chunk ~2x its share of
+/// the area. Work items are therefore the `i ↔ n-1-i` row *pairings*:
+/// pairing `p` covers rows `p` and `n-1-p`, whose combined pair count
+/// is a constant `n-2` (the middle row of an odd `n` stands alone), so
+/// every chunk carries an equal share of the area and the speedup
+/// tracks the thread count.
+///
+/// Balancing reorders the visit sequence, so winners can no longer rely
+/// on first-encounter tie-breaking. Instead every comparison uses the
+/// total order "smaller distance, then lexicographically smaller
+/// `(i, j)`" — whose unique minimum is exactly the pair the sequential
+/// row-major strict-`<` scan selects — keeping the merge sequence and
+/// labels bit-identical for any thread count (pinned by the
+/// equivalence test below).
 pub fn agglomerative_with(
     engine: Engine,
     rows: &Matrix,
@@ -48,30 +61,50 @@ pub fn agglomerative_with(
     // union-find style parent chain for final labelling
     let mut merged_into: Vec<usize> = (0..n).collect();
 
+    // "is y a better closest-pair candidate than x": the total order
+    // described in the doc comment (distance, then (i, j) lex) — its
+    // minimum is the sequential scan's first strictly-smallest pair
+    fn better(
+        x: (usize, usize, f64),
+        y: (usize, usize, f64),
+    ) -> bool {
+        y.2 < x.2 || (y.2 == x.2 && (y.0, y.1) < (x.0, x.1))
+    }
+
     let mut live = n;
+    let half = n.div_ceil(2);
     while live > 1 {
-        // find closest live pair (row-parallel scan, first-pair ties)
+        // find closest live pair: area-balanced chunks over the i ↔
+        // n-1-i row pairings (each pairing scans a constant n-2 pairs)
         let best = engine
-            .map_chunks(n, |range| {
+            .map_chunks(half, |range| {
                 let mut local = (usize::MAX, usize::MAX, f64::INFINITY);
-                for i in range {
-                    if !alive[i] {
-                        continue;
-                    }
-                    for j in (i + 1)..n {
-                        if !alive[j] {
+                for p in range {
+                    let lo = p;
+                    let hi = n - 1 - p;
+                    // odd-n middle row pairs with itself: scan it once
+                    let pair = [lo, hi];
+                    let rows: &[usize] =
+                        if lo == hi { &pair[..1] } else { &pair };
+                    for &i in rows {
+                        if !alive[i] {
                             continue;
                         }
-                        let dij = d[i * n + j];
-                        if dij < local.2 {
-                            local = (i, j, dij);
+                        for j in (i + 1)..n {
+                            if !alive[j] {
+                                continue;
+                            }
+                            let dij = d[i * n + j];
+                            if better(local, (i, j, dij)) {
+                                local = (i, j, dij);
+                            }
                         }
                     }
                 }
                 local
             })
             .into_iter()
-            .reduce(|a, b| if b.2 < a.2 { b } else { a })
+            .reduce(|x, y| if better(x, y) { y } else { x })
             .unwrap();
         let (a, b, dab) = best;
         if dab > cut_distance {
@@ -158,6 +191,40 @@ mod tests {
     fn empty_input() {
         let r = agglomerative(&Matrix::new(), 1.0, &NativeDistance);
         assert_eq!(r.n_clusters, 0);
+    }
+
+    #[test]
+    fn balanced_scan_identical_on_odd_counts_and_duplicate_ties() {
+        use crate::clustering::EngineDistance;
+        // odd row count exercises the self-paired middle row; duplicate
+        // rows create exact distance ties, exercising the (i, j) lex
+        // tie-break that replaces first-encounter order
+        let mut rng = Rng::new(9);
+        let mut rows = Matrix::with_width(3);
+        for i in 0..77 {
+            if i % 5 == 0 {
+                rows.push_row(&[1.0, 2.0, 3.0]); // exact duplicates
+            } else {
+                let c = (i % 3) as f64 * 12.0;
+                rows.push_row(&[
+                    rng.normal_ms(c, 0.3),
+                    rng.normal_ms(c, 0.3),
+                    rng.normal_ms(-c, 0.3),
+                ]);
+            }
+        }
+        let a = agglomerative(&rows, 5.0, &NativeDistance);
+        for threads in [2, 3, 8] {
+            let engine = Engine::with_threads(threads).with_min_items(1);
+            let b = agglomerative_with(
+                engine,
+                &rows,
+                5.0,
+                &EngineDistance::new(engine),
+            );
+            assert_eq!(a.labels, b.labels, "threads {threads}");
+            assert_eq!(a.n_clusters, b.n_clusters);
+        }
     }
 
     #[test]

@@ -9,11 +9,13 @@
 //! Execute: the RM applies them to job containers. Knowledge: the
 //! WorkloadDB persists everything.
 
+pub mod multi;
+
 pub mod report;
 
 use crate::clustering::{DistanceProvider, NativeDistance};
 use crate::features::{zero_analytic, ObservationWindow};
-use crate::knowledge::WorkloadDb;
+use crate::knowledge::{shared_db, SharedWorkloadDb};
 use crate::linalg::Matrix;
 use crate::ml::forest::RandomForest;
 use crate::ml::Dataset;
@@ -31,6 +33,7 @@ use crate::simcluster::JobSpec;
 use crate::util::rng::Rng;
 use crate::workloadgen::{catalog, num_pure_classes, Sample, TruthTag};
 use crate::features::NUM_FEATURES;
+pub use multi::{MultiTenantCoordinator, MultiTenantReport};
 pub use report::{JobOutcome, RunReport};
 use std::sync::{Arc, Mutex};
 
@@ -73,7 +76,9 @@ impl Default for CoordinatorConfig {
 /// The assembled autonomic system.
 pub struct Coordinator {
     pub config: CoordinatorConfig,
-    pub db: Arc<Mutex<WorkloadDb>>,
+    /// The shared knowledge plane (read-mostly RwLock; multi-tenant
+    /// deployments hand the same handle to every tenant's consumers).
+    pub db: SharedWorkloadDb,
     pub context: Arc<Mutex<ContextStream>>,
     pub pipeline: OnlinePipeline,
     pub plugin: KermitPlugin,
@@ -132,7 +137,7 @@ impl Coordinator {
         config: CoordinatorConfig,
         dist: Box<dyn DistanceProvider>,
     ) -> Coordinator {
-        let db = Arc::new(Mutex::new(WorkloadDb::new()));
+        let db = shared_db();
         let context = Arc::new(Mutex::new(ContextStream::new(64)));
         let pipeline = OnlinePipeline::new(context.clone());
         let plugin = KermitPlugin::new(db.clone(), context.clone());
@@ -203,7 +208,7 @@ impl Coordinator {
         if self.backlog.len() < 8 {
             return;
         }
-        let mut db = self.db.lock().unwrap();
+        let mut db = self.db.write().unwrap();
         let report = discover(
             &self.backlog,
             &mut db,
@@ -406,7 +411,7 @@ impl Coordinator {
         }
         report.makespan = now;
         report.plugin_stats = self.plugin.stats.clone();
-        report.workloads_known = self.db.lock().unwrap().len();
+        report.workloads_known = self.db.read().unwrap().len();
         report
     }
 }

@@ -7,6 +7,7 @@ pub mod fig10;
 pub mod fig6;
 pub mod fig7;
 pub mod fig9;
+pub mod multitenant;
 pub mod predictor;
 pub mod zsl;
 

@@ -34,6 +34,21 @@ pub const FEATURE_NAMES: [&str; NUM_FEATURES] = [
 /// A point-in-time feature vector (one aggregated metrics sample).
 pub type FeatureVec = [f64; NUM_FEATURES];
 
+/// Identity of one tenant (one application / user whose metric stream
+/// flows through its own pipeline shard). Defined here — the shared
+/// vocabulary layer — so the monitor and the context stream can tag
+/// per-tenant data without depending on the `stream` orchestration
+/// layer above them (which re-exports this type). The id is opaque to
+/// every algorithm; it only routes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct TenantId(pub u32);
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tenant-{}", self.0)
+    }
+}
+
 pub fn zero_features() -> FeatureVec {
     [0.0; NUM_FEATURES]
 }

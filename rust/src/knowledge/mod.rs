@@ -7,3 +7,19 @@ pub mod zones;
 
 pub use workload_db::{Characterization, WorkloadDb, WorkloadEntry};
 pub use zones::KnowledgeZones;
+
+/// The shared knowledge plane: one WorkloadDB behind a read/write lock,
+/// handed to every consumer (N pipeline shards, N plug-in instances,
+/// the off-line analyser). Reads — classification gates, Algorithm 1
+/// cache lookups — vastly outnumber writes (discovery inserts, config
+/// updates), so an `RwLock` lets all tenants read concurrently while a
+/// class discovered from tenant A's traffic becomes visible to tenant B
+/// the moment the write lock drops (the paper's cross-workload
+/// learning: one long-term memory, many streams).
+pub type SharedWorkloadDb =
+    std::sync::Arc<std::sync::RwLock<WorkloadDb>>;
+
+/// Fresh empty shared knowledge plane.
+pub fn shared_db() -> SharedWorkloadDb {
+    std::sync::Arc::new(std::sync::RwLock::new(WorkloadDb::new()))
+}

@@ -24,6 +24,7 @@ pub mod monitor;
 pub mod offline;
 pub mod online;
 pub mod runtime;
+pub mod stream;
 pub mod testkit;
 pub mod simcluster;
 pub mod stats;

@@ -11,8 +11,9 @@
 
 pub mod agents;
 
-use crate::features::{FeatureVec, ObservationWindow};
+use crate::features::{FeatureVec, ObservationWindow, TenantId};
 use crate::workloadgen::{Sample, Trace, TruthTag};
+use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
 
 /// Monitor configuration.
@@ -102,6 +103,103 @@ pub fn transition_truth(trace: &Trace, config: &MonitorConfig) -> Vec<bool> {
         .collect()
 }
 
+/// Incremental single-stream aggregator: push samples one at a time,
+/// get the closed window back the moment the `window_size`-th sample
+/// lands. Windows are **bit-identical** to [`aggregate_samples`] over
+/// the same sample sequence (same mean/var arithmetic, same truth rule,
+/// same trailing-partial-window-stays-open semantics) — this is the
+/// synchronous core both the streaming [`Monitor`] thread and the
+/// per-tenant stream shards are built on.
+#[derive(Debug)]
+pub struct WindowAggregator {
+    config: MonitorConfig,
+    buf: Vec<Sample>,
+    index: u64,
+}
+
+impl WindowAggregator {
+    pub fn new(config: MonitorConfig, start_index: u64) -> WindowAggregator {
+        assert!(
+            config.window_size >= 2,
+            "window_size must be >= 2 for variance"
+        );
+        let cap = config.window_size;
+        WindowAggregator { config, buf: Vec::with_capacity(cap), index: start_index }
+    }
+
+    /// Feed one sample; returns the closed window when this sample
+    /// completes one.
+    pub fn push(&mut self, s: Sample) -> Option<ObservationWindow> {
+        self.buf.push(s);
+        if self.buf.len() < self.config.window_size {
+            return None;
+        }
+        let feats: Vec<FeatureVec> =
+            self.buf.iter().map(|s| s.features).collect();
+        let tags: Vec<TruthTag> = self.buf.iter().map(|s| s.truth).collect();
+        let ow = ObservationWindow::aggregate(
+            self.index,
+            self.buf.last().unwrap().time,
+            &feats,
+            window_truth(&tags),
+        );
+        self.index += 1;
+        self.buf.clear();
+        Some(ow)
+    }
+
+    /// Samples buffered in the currently open window.
+    pub fn pending_samples(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Index the next closed window will carry.
+    pub fn next_index(&self) -> u64 {
+        self.index
+    }
+}
+
+/// Per-tenant window aggregation: one [`WindowAggregator`] per tenant,
+/// demultiplexing a tagged sample stream. Each tenant gets its own
+/// monotone window index space starting at 0 — exactly what that
+/// tenant's stream alone would have produced.
+///
+/// This is the standalone demux primitive (replay tooling, tests,
+/// window-only consumers). The `stream::StreamRouter` intentionally
+/// does **not** sit on top of it: each router shard embeds its own
+/// [`WindowAggregator`] so aggregation state lives inside the shard
+/// that the engine hands to a single worker per tick.
+#[derive(Debug)]
+pub struct TenantAggregator {
+    config: MonitorConfig,
+    shards: BTreeMap<TenantId, WindowAggregator>,
+}
+
+impl TenantAggregator {
+    pub fn new(config: MonitorConfig) -> TenantAggregator {
+        TenantAggregator { config, shards: BTreeMap::new() }
+    }
+
+    /// Route one tenant-tagged sample; returns the tenant's closed
+    /// window when this sample completes one.
+    pub fn push(
+        &mut self,
+        tenant: TenantId,
+        s: Sample,
+    ) -> Option<(TenantId, ObservationWindow)> {
+        let agg = self
+            .shards
+            .entry(tenant)
+            .or_insert_with(|| WindowAggregator::new(self.config.clone(), 0));
+        agg.push(s).map(|w| (tenant, w))
+    }
+
+    /// Tenants seen so far, in id order.
+    pub fn tenants(&self) -> Vec<TenantId> {
+        self.shards.keys().copied().collect()
+    }
+}
+
 /// Streaming monitor: consumes agent samples from a channel, emits
 /// closed windows on another. Runs until the input channel closes.
 pub struct Monitor;
@@ -116,23 +214,9 @@ impl Monitor {
         start_index: u64,
     ) -> std::thread::JoinHandle<()> {
         std::thread::spawn(move || {
-            let mut buf: Vec<Sample> = Vec::with_capacity(config.window_size);
-            let mut index = start_index;
+            let mut agg = WindowAggregator::new(config, start_index);
             while let Ok(s) = rx.recv() {
-                buf.push(s);
-                if buf.len() == config.window_size {
-                    let feats: Vec<FeatureVec> =
-                        buf.iter().map(|s| s.features).collect();
-                    let tags: Vec<TruthTag> =
-                        buf.iter().map(|s| s.truth).collect();
-                    let ow = ObservationWindow::aggregate(
-                        index,
-                        buf.last().unwrap().time,
-                        &feats,
-                        window_truth(&tags),
-                    );
-                    index += 1;
-                    buf.clear();
+                if let Some(ow) = agg.push(s) {
                     if tx.send(ow).is_err() {
                         return; // downstream hung up
                     }
@@ -195,6 +279,62 @@ mod tests {
             assert_eq!(a.index, b.index);
             assert_eq!(a.mean, b.mean);
             assert_eq!(a.var, b.var);
+        }
+    }
+
+    #[test]
+    fn incremental_aggregator_matches_batch() {
+        let mut g = Generator::with_default_config(5);
+        let t = g.generate(&tour_schedule(70, &[1, 4]));
+        let cfg = MonitorConfig { window_size: 14 };
+        let batch = aggregate_trace(&t, &cfg);
+        let mut agg = WindowAggregator::new(cfg, 0);
+        let streamed: Vec<_> =
+            t.samples.iter().filter_map(|s| agg.push(s.clone())).collect();
+        assert_eq!(streamed.len(), batch.len());
+        for (a, b) in streamed.iter().zip(&batch) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.mean, b.mean);
+            assert_eq!(a.var, b.var);
+            assert_eq!(a.truth, b.truth);
+        }
+        // the trailing partial window stays open
+        assert_eq!(agg.pending_samples(), t.len() % 14);
+    }
+
+    #[test]
+    fn tenant_aggregator_demultiplexes_independent_index_spaces() {
+        use crate::features::TenantId;
+        let mut g = Generator::with_default_config(6);
+        let ta = g.generate(&tour_schedule(50, &[0]));
+        let tb = g.generate(&tour_schedule(30, &[2]));
+        let cfg = MonitorConfig { window_size: 10 };
+        let mut agg = TenantAggregator::new(cfg.clone());
+        let mut per_tenant: std::collections::BTreeMap<u32, Vec<_>> =
+            Default::default();
+        // interleave one sample at a time (worst-case multiplexing)
+        let longest = ta.len().max(tb.len());
+        for i in 0..longest {
+            for (k, tr) in [&ta, &tb].iter().enumerate() {
+                if let Some(s) = tr.samples.get(i) {
+                    if let Some((t, w)) =
+                        agg.push(TenantId(k as u32), s.clone())
+                    {
+                        per_tenant.entry(t.0).or_default().push(w);
+                    }
+                }
+            }
+        }
+        assert_eq!(agg.tenants(), vec![TenantId(0), TenantId(1)]);
+        for (k, tr) in [&ta, &tb].iter().enumerate() {
+            let batch = aggregate_trace(tr, &cfg);
+            let got = &per_tenant[&(k as u32)];
+            assert_eq!(got.len(), batch.len(), "tenant {k}");
+            for (a, b) in got.iter().zip(&batch) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.mean, b.mean);
+                assert_eq!(a.var, b.var);
+            }
         }
     }
 

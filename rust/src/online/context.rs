@@ -78,6 +78,77 @@ impl ContextStream {
     }
 }
 
+/// A bus of per-tenant context streams: one ring (and one lock) per
+/// tenant, so N pipeline shards publishing concurrently never contend on
+/// a shared `Mutex` — the single-stream `Arc<Mutex<ContextStream>>`
+/// would otherwise serialize the multi-tenant observe path. Handles are
+/// cheap `Arc` clones; the plug-in serving tenant `t` holds `stream(t)`
+/// and sees only that tenant's contexts.
+#[derive(Debug)]
+pub struct ContextBus {
+    streams: std::collections::BTreeMap<
+        crate::features::TenantId,
+        std::sync::Arc<std::sync::Mutex<ContextStream>>,
+    >,
+    cap: usize,
+}
+
+impl ContextBus {
+    /// `cap` is the ring capacity of every per-tenant stream.
+    pub fn new(cap: usize) -> ContextBus {
+        assert!(cap > 0);
+        ContextBus { streams: Default::default(), cap }
+    }
+
+    /// Get (creating on first use) tenant `t`'s stream handle.
+    pub fn stream(
+        &mut self,
+        t: crate::features::TenantId,
+    ) -> std::sync::Arc<std::sync::Mutex<ContextStream>> {
+        let cap = self.cap;
+        self.streams
+            .entry(t)
+            .or_insert_with(|| {
+                std::sync::Arc::new(std::sync::Mutex::new(
+                    ContextStream::new(cap),
+                ))
+            })
+            .clone()
+    }
+
+    /// Tenant `t`'s stream, if it has published before.
+    pub fn get(
+        &self,
+        t: crate::features::TenantId,
+    ) -> Option<std::sync::Arc<std::sync::Mutex<ContextStream>>> {
+        self.streams.get(&t).cloned()
+    }
+
+    /// Latest context for tenant `t` (a copy — the lock is held only for
+    /// the read).
+    pub fn latest(
+        &self,
+        t: crate::features::TenantId,
+    ) -> Option<WorkloadContext> {
+        self.streams
+            .get(&t)
+            .and_then(|s| s.lock().unwrap().latest().copied())
+    }
+
+    /// Tenants with a stream, in id order.
+    pub fn tenants(&self) -> Vec<crate::features::TenantId> {
+        self.streams.keys().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +170,94 @@ mod tests {
         let c = WorkloadContext::unknown(0, 0.0);
         assert!(!c.is_known());
         assert_eq!(c.pred_10, UNKNOWN);
+    }
+
+    #[test]
+    fn concurrent_publishers_one_stream_stays_bounded_and_ordered() {
+        use std::sync::{Arc, Mutex};
+        let cap = 32;
+        let stream = Arc::new(Mutex::new(ContextStream::new(cap)));
+        let writers = 8;
+        let per_writer = 200u64;
+        std::thread::scope(|s| {
+            for w in 0..writers {
+                let stream = stream.clone();
+                s.spawn(move || {
+                    for i in 0..per_writer {
+                        stream.lock().unwrap().publish(
+                            WorkloadContext::unknown(
+                                w * per_writer + i,
+                                i as f64,
+                            ),
+                        );
+                    }
+                });
+            }
+        });
+        let st = stream.lock().unwrap();
+        // ring is full, never over capacity
+        assert_eq!(st.len(), cap);
+        // every element is one of the published contexts
+        for c in st.iter() {
+            assert!(c.window_index < writers * per_writer);
+        }
+        // each writer's surviving contexts appear in its publish order
+        for w in 0..writers {
+            let idx: Vec<u64> = st
+                .iter()
+                .map(|c| c.window_index)
+                .filter(|&i| i / per_writer == w)
+                .collect();
+            assert!(
+                idx.windows(2).all(|p| p[0] < p[1]),
+                "writer {w} out of order: {idx:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bus_isolates_tenants_under_concurrent_publishers() {
+        use crate::features::TenantId;
+        let mut bus = ContextBus::new(16);
+        let writers = 6u32;
+        let handles: Vec<_> =
+            (0..writers).map(|t| bus.stream(TenantId(t))).collect();
+        // same handle back on re-request (create-or-get semantics)
+        assert_eq!(bus.len(), writers as usize);
+        assert!(std::sync::Arc::ptr_eq(
+            &handles[0],
+            &bus.stream(TenantId(0))
+        ));
+        std::thread::scope(|s| {
+            for (t, h) in handles.iter().enumerate() {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..300u64 {
+                        let mut c = WorkloadContext::unknown(i, i as f64);
+                        c.current_label = t as u32;
+                        h.lock().unwrap().publish(c);
+                    }
+                });
+            }
+        });
+        for t in 0..writers {
+            let stream = bus.get(TenantId(t)).unwrap();
+            {
+                let st = stream.lock().unwrap();
+                assert_eq!(st.len(), 16, "tenant {t}");
+                // no cross-tenant bleed: every context carries its
+                // tenant's label, in publish order
+                let idx: Vec<u64> =
+                    st.iter().map(|c| c.window_index).collect();
+                assert!(st.iter().all(|c| c.current_label == t));
+                assert!(idx.windows(2).all(|p| p[0] + 1 == p[1]));
+            } // guard drops: bus.latest re-locks this same stream
+            assert_eq!(
+                bus.latest(TenantId(t)).unwrap().window_index,
+                299
+            );
+        }
+        assert!(bus.latest(TenantId(99)).is_none());
+        assert_eq!(bus.tenants().len(), writers as usize);
     }
 }

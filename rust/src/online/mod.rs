@@ -14,7 +14,7 @@ pub use classifier::{
     CentroidClassifier, ForestWindowClassifier, UnknownClassifier,
     WindowClassifier,
 };
-pub use context::{ContextStream, WorkloadContext, UNKNOWN};
+pub use context::{ContextBus, ContextStream, WorkloadContext, UNKNOWN};
 pub use pipeline::OnlinePipeline;
 pub use plugin::{ChoiceKind, KermitPlugin, PluginStats};
 pub use predictor::{

@@ -15,14 +15,19 @@ use super::predictor::{LabelPredictor, MarkovPredictor};
 use crate::features::{zero_analytic, AnalyticVec, ObservationWindow, ANALYTIC_WIDTH};
 use std::sync::{Arc, Mutex};
 
+/// The trait objects are `+ Send` so a whole pipeline can move to (or
+/// be borrowed by) a stream-router worker thread: the multi-tenant
+/// `stream` layer fans pipeline shards out over the `linalg::Engine`
+/// pool. Every native classifier/predictor is plain owned data, so the
+/// bound costs nothing.
 pub struct OnlinePipeline {
     detector: ChangeDetector,
-    classifier: Box<dyn WindowClassifier>,
+    classifier: Box<dyn WindowClassifier + Send>,
     /// TransitionClassifier (random forest over rate-of-change features,
     /// trained off-line): names the transition *type* while a change is
     /// in progress (Figure 3's on-line pipeline).
-    transition_classifier: Option<Box<dyn WindowClassifier>>,
-    predictor: Box<dyn LabelPredictor>,
+    transition_classifier: Option<Box<dyn WindowClassifier + Send>>,
+    predictor: Box<dyn LabelPredictor + Send>,
     /// Steady-state label history (feeds the predictor).
     history: Vec<u32>,
     /// Markov model kept warm online regardless of the active predictor
@@ -65,19 +70,30 @@ impl OnlinePipeline {
     /// Install a trained TransitionClassifier (rate-of-change features).
     pub fn set_transition_classifier(
         &mut self,
-        c: Box<dyn WindowClassifier>,
+        c: Box<dyn WindowClassifier + Send>,
     ) {
         self.transition_classifier = Some(c);
     }
 
     /// Swap in a trained classifier (after off-line training).
-    pub fn set_classifier(&mut self, c: Box<dyn WindowClassifier>) {
+    pub fn set_classifier(&mut self, c: Box<dyn WindowClassifier + Send>) {
         self.classifier = c;
     }
 
     /// Swap in a trained predictor (e.g. the LSTM artifact wrapper).
-    pub fn set_predictor(&mut self, p: Box<dyn LabelPredictor>) {
+    pub fn set_predictor(&mut self, p: Box<dyn LabelPredictor + Send>) {
         self.predictor = p;
+    }
+
+    /// Override the label-history cap (memory bound per pipeline shard;
+    /// when exceeded the oldest half is drained). Clamped to >= 2 so the
+    /// Markov update always has a pair to learn from.
+    pub fn set_max_history(&mut self, cap: usize) {
+        self.max_history = cap.max(2);
+    }
+
+    pub fn max_history(&self) -> usize {
+        self.max_history
     }
 
     pub fn history(&self) -> &[u32] {
@@ -274,6 +290,57 @@ mod tests {
             "log: {:?}",
             p.transition_log
         );
+    }
+
+    #[test]
+    fn history_cap_drains_oldest_half_and_keeps_a_suffix() {
+        let ctx = Arc::new(Mutex::new(ContextStream::new(8)));
+        let mut p = OnlinePipeline::new(ctx);
+        let db = db_with_two_centroids();
+        p.set_classifier(Box::new(CentroidClassifier::from_db(&db, 20.0)));
+        p.set_max_history(8);
+        assert_eq!(p.max_history(), 8);
+
+        // alternate plateaus so every plateau appends one label; track
+        // the full dedup label sequence the unbounded history would hold
+        let mut full: Vec<u32> = Vec::new();
+        let mut idx = 0u64;
+        for _ in 0..14 {
+            for level in [5.0, 50.0] {
+                for _ in 0..3 {
+                    let c = p.observe(&window(level, idx));
+                    idx += 1;
+                    if c.current_label != UNKNOWN
+                        && full.last().copied() != Some(c.current_label)
+                    {
+                        full.push(c.current_label);
+                    }
+                    // the drain runs inside observe: the cap holds on
+                    // every return, not just eventually
+                    assert!(
+                        p.history().len() <= 8,
+                        "history grew past cap: {}",
+                        p.history().len()
+                    );
+                }
+            }
+        }
+        // 14 cycles x 2 plateaus pushed far more labels than the cap
+        assert!(full.len() > 16, "only {} labels", full.len());
+        // what survives is exactly a suffix of the full sequence
+        assert!(
+            full.ends_with(p.history()),
+            "history {:?} not a suffix of {:?}",
+            p.history(),
+            full
+        );
+        // and the alternation structure survived the drains
+        for pair in p.history().windows(2) {
+            assert_ne!(pair[0], pair[1]);
+        }
+        // predictor still has signal after draining
+        p.observe(&window(5.0, idx));
+        assert!(p.history().len() >= 2);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use crate::explorer::session::{SearchSession, SessionStep};
 use crate::explorer::ExplorerConfig;
-use crate::knowledge::WorkloadDb;
+use crate::knowledge::SharedWorkloadDb;
 use crate::online::context::{ContextStream, UNKNOWN};
 use crate::simcluster::config_space::{default_config_index, ConfigIndex};
 use std::collections::BTreeMap;
@@ -53,7 +53,10 @@ enum SessionKind {
 }
 
 pub struct KermitPlugin {
-    pub db: Arc<Mutex<WorkloadDb>>,
+    /// The shared knowledge plane (read-mostly: Algorithm 1 takes the
+    /// read lock for cache lookups, the write lock only to persist a
+    /// converged optimum — so N tenant plug-ins look up concurrently).
+    pub db: SharedWorkloadDb,
     pub context: Arc<Mutex<ContextStream>>,
     pub explorer_config: ExplorerConfig,
     /// Maximum age (seconds) of the latest context before it is
@@ -68,7 +71,7 @@ pub struct KermitPlugin {
 
 impl KermitPlugin {
     pub fn new(
-        db: Arc<Mutex<WorkloadDb>>,
+        db: SharedWorkloadDb,
         context: Arc<Mutex<ContextStream>>,
     ) -> KermitPlugin {
         KermitPlugin {
@@ -117,7 +120,7 @@ impl KermitPlugin {
             return self.advance_session(label);
         }
         let (known, optimal, drifting, stored) = {
-            let db = self.db.lock().unwrap();
+            let db = self.db.read().unwrap();
             match db.get(label) {
                 Some(e) => {
                     (true, e.optimal_config_found, e.is_drifting, e.config)
@@ -176,7 +179,7 @@ impl KermitPlugin {
                 self.stats.searches_completed += 1;
                 self.stats.cache_hits += 1;
                 self.db
-                    .lock()
+                    .write()
                     .unwrap()
                     .set_optimal_config(label, r.best);
                 (r.best, ChoiceKind::CacheHit)
@@ -208,8 +211,8 @@ mod tests {
     use crate::online::context::WorkloadContext;
     use crate::simcluster::perfmodel::job_duration;
 
-    fn setup() -> (Arc<Mutex<WorkloadDb>>, Arc<Mutex<ContextStream>>, u32) {
-        let mut db = WorkloadDb::new();
+    fn setup() -> (SharedWorkloadDb, Arc<Mutex<ContextStream>>, u32) {
+        let mut db = crate::knowledge::WorkloadDb::new();
         let rows: Vec<Vec<f64>> = vec![vec![1.0; 4], vec![1.1; 4]];
         let label = db.insert_new(
             Characterization::from_vec_rows(&rows),
@@ -218,7 +221,7 @@ mod tests {
             false,
         );
         (
-            Arc::new(Mutex::new(db)),
+            Arc::new(std::sync::RwLock::new(db)),
             Arc::new(Mutex::new(ContextStream::new(16))),
             label,
         )
@@ -274,7 +277,7 @@ mod tests {
             }
         }
         assert!(probes > 5);
-        assert!(db.lock().unwrap().get(label).unwrap().optimal_config_found);
+        assert!(db.read().unwrap().get(label).unwrap().optimal_config_found);
         // subsequent requests are pure cache hits with the same config
         let (c1, k1) = p.choose_config_for_label(label);
         let (c2, k2) = p.choose_config_for_label(label);
@@ -300,7 +303,7 @@ mod tests {
         }
         // now mark drift (keeps config, clears optimal flag)
         {
-            let mut dbl = db.lock().unwrap();
+            let mut dbl = db.write().unwrap();
             let rows: Vec<Vec<f64>> = vec![vec![2.0; 4], vec![2.1; 4]];
             dbl.mark_drifting(
                 label,

@@ -1,0 +1,32 @@
+//! The multi-tenant stream layer: turns the single-stream MAPE-K loop
+//! into a sharded service (paper §1/§6: KERMIT identifies and optimises
+//! *complex multi-user workloads*; this layer is where "multi-user"
+//! becomes a first-class runtime concept rather than a trace property).
+//!
+//! Topology (see docs/ARCHITECTURE.md for the full diagram):
+//!
+//! ```text
+//!   tenant streams ──▶ StreamRouter ──▶ one TenantShard per tenant
+//!                        │                ├─ monitor::WindowAggregator
+//!                        │                ├─ online::OnlinePipeline
+//!                        │                └─ per-tenant ContextStream
+//!                        └─ tick(): drains every shard's closed windows
+//!                           through `linalg::Engine` — shards fan out
+//!                           over the worker pool, one shard per worker
+//!                           at a time, so the observe path scales with
+//!                           tenant count while each shard's state stays
+//!                           single-writer.
+//! ```
+//!
+//! Because every shard is touched by exactly one worker per tick and
+//! shards share no mutable state (the knowledge plane is behind its own
+//! lock, contexts are per-tenant), parallel-over-tenants is race-free by
+//! construction and **bit-identical** to replaying each tenant's trace
+//! alone through a sequential [`crate::online::OnlinePipeline`] — pinned
+//! by `tests/stream_equivalence.rs`.
+
+pub mod router;
+pub mod tenant;
+
+pub use router::{RouterConfig, StreamRouter, TenantShard};
+pub use tenant::{interleave_round_robin, TenantId, TenantSample};

@@ -1,0 +1,389 @@
+//! The `StreamRouter`: one MAPE-K pipeline shard per tenant, with the
+//! per-tick observe pass dispatched across shards on the
+//! `linalg::Engine` worker pool.
+//!
+//! # Determinism
+//!
+//! A shard is the *only* writer of its own state (aggregator, change
+//! detector, classifier scratch, label history, context ring). A tick
+//! hands each shard to exactly one worker, and within a shard the
+//! pending windows are observed in arrival order — so for any engine
+//! (1 thread or 64) every tenant's context sequence is bit-identical to
+//! replaying that tenant's samples alone through a sequential
+//! [`OnlinePipeline`]. `tests/stream_equivalence.rs` pins this.
+//!
+//! # Engine threshold
+//!
+//! One work item here is a whole shard's pending batch (tens of windows,
+//! each a detector + classifier + predictor pass), not a 32-wide row —
+//! far above the engine's default per-row spawn-amortization threshold.
+//! The router therefore lowers `min_items` to the tenant count so a
+//! 4-tenant tick already fans out (see [`Engine::with_min_items`]).
+
+use super::tenant::{TenantId, TenantSample};
+use crate::features::ObservationWindow;
+use crate::linalg::engine::Engine;
+use crate::monitor::{MonitorConfig, WindowAggregator};
+use crate::online::classifier::WindowClassifier;
+use crate::online::context::{ContextBus, ContextStream, WorkloadContext};
+use crate::online::OnlinePipeline;
+use crate::workloadgen::Sample;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub monitor: MonitorConfig,
+    /// Ring capacity of every per-tenant context stream.
+    pub context_cap: usize,
+    /// Worker pool the per-tick observe pass fans out on. Sequential by
+    /// default: plain constructions add no threading.
+    pub engine: Engine,
+    /// Per-shard cap on the context log and the observed-window backlog
+    /// (the memory bound for long-running deployments: on overflow the
+    /// oldest half is dropped, like the pipeline's history cap).
+    /// Off-line consumers drain `take_observed` every tick — far below
+    /// this — so the cap only bites router-only users and runaway logs.
+    pub shard_log_cap: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            monitor: MonitorConfig::default(),
+            context_cap: 64,
+            engine: Engine::sequential(),
+            shard_log_cap: 65_536,
+        }
+    }
+}
+
+/// One tenant's slice of the on-line sub-system: aggregation, pipeline,
+/// context stream, and the window/context logs the off-line analyser
+/// and the equivalence tests read.
+pub struct TenantShard {
+    pub tenant: TenantId,
+    agg: WindowAggregator,
+    pub pipeline: OnlinePipeline,
+    /// This tenant's context ring (shared with its plug-in readers via
+    /// the router's [`ContextBus`]).
+    pub context: Arc<Mutex<ContextStream>>,
+    /// Closed windows awaiting the next tick's observe pass.
+    pending: Vec<ObservationWindow>,
+    /// Observed windows awaiting off-line collection — the analyze
+    /// backlog feed of [`StreamRouter::take_observed`].
+    observed: Vec<ObservationWindow>,
+    /// Per-tenant context log, in observe order (capped at the router's
+    /// `shard_log_cap`; oldest half dropped on overflow).
+    pub contexts: Vec<WorkloadContext>,
+    log_cap: usize,
+}
+
+impl TenantShard {
+    fn new(
+        tenant: TenantId,
+        config: &RouterConfig,
+        context: Arc<Mutex<ContextStream>>,
+    ) -> TenantShard {
+        TenantShard {
+            tenant,
+            agg: WindowAggregator::new(config.monitor.clone(), 0),
+            pipeline: OnlinePipeline::new(context.clone()),
+            context,
+            pending: Vec::new(),
+            observed: Vec::new(),
+            contexts: Vec::new(),
+            log_cap: config.shard_log_cap.max(2),
+        }
+    }
+
+    /// Observe every pending window in arrival order; returns the count.
+    fn observe_pending(&mut self) -> usize {
+        let pending = std::mem::take(&mut self.pending);
+        let n = pending.len();
+        for w in pending {
+            let ctx = self.pipeline.observe(&w);
+            self.contexts.push(ctx);
+            self.observed.push(w);
+        }
+        // memory bound for long-running shards: both logs drop their
+        // oldest half past the cap (take_observed normally drains
+        // `observed` every tick, far below it)
+        cap_log(&mut self.contexts, self.log_cap);
+        cap_log(&mut self.observed, self.log_cap);
+        n
+    }
+
+    /// Closed-but-unobserved window count.
+    pub fn pending_windows(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Label sequence this shard has published (UNKNOWN included), for
+    /// scoring and equivalence checks.
+    pub fn label_log(&self) -> Vec<u32> {
+        self.contexts.iter().map(|c| c.current_label).collect()
+    }
+}
+
+/// Drop the oldest half of `log` once it exceeds `cap`.
+fn cap_log<T>(log: &mut Vec<T>, cap: usize) {
+    if log.len() > cap {
+        let cut = log.len() - cap / 2;
+        log.drain(..cut);
+    }
+}
+
+/// The sharded multi-tenant front end of the on-line sub-system.
+pub struct StreamRouter {
+    pub config: RouterConfig,
+    shards: BTreeMap<TenantId, TenantShard>,
+    bus: ContextBus,
+}
+
+impl StreamRouter {
+    pub fn new(config: RouterConfig) -> StreamRouter {
+        let bus = ContextBus::new(config.context_cap);
+        StreamRouter { config, shards: BTreeMap::new(), bus }
+    }
+
+    /// Ensure tenant `t` has a shard (idempotent) and return it.
+    pub fn add_tenant(&mut self, t: TenantId) -> &mut TenantShard {
+        if !self.shards.contains_key(&t) {
+            let ctx = self.bus.stream(t);
+            self.shards.insert(t, TenantShard::new(t, &self.config, ctx));
+        }
+        self.shards.get_mut(&t).unwrap()
+    }
+
+    /// Ingest a burst of one tenant's samples: windows close into the
+    /// shard's pending queue; nothing is observed until [`tick`].
+    ///
+    /// [`tick`]: StreamRouter::tick
+    pub fn ingest(&mut self, t: TenantId, samples: &[Sample]) {
+        let shard = self.add_tenant(t);
+        for s in samples {
+            if let Some(w) = shard.agg.push(s.clone()) {
+                shard.pending.push(w);
+            }
+        }
+    }
+
+    /// Ingest one tenant-tagged sample from a multiplexed stream.
+    pub fn ingest_tagged(&mut self, ts: &TenantSample) {
+        let shard = self.add_tenant(ts.tenant);
+        if let Some(w) = shard.agg.push(ts.sample.clone()) {
+            shard.pending.push(w);
+        }
+    }
+
+    /// Enqueue pre-aggregated windows directly (off-line replay and the
+    /// hot-path benches, which time the observe dispatch in isolation).
+    pub fn enqueue_windows(&mut self, t: TenantId, ws: &[ObservationWindow]) {
+        let shard = self.add_tenant(t);
+        shard.pending.extend(ws.iter().cloned());
+    }
+
+    /// One router tick: drain every shard's pending windows through its
+    /// pipeline, shards dispatched across the engine's workers (see the
+    /// module docs for why this is race-free and bit-identical to the
+    /// sequential replay). Returns the number of windows observed.
+    pub fn tick(&mut self) -> usize {
+        let engine = self
+            .config
+            .engine
+            .with_min_items(self.shards.len().max(1));
+        let mut shards: Vec<&mut TenantShard> =
+            self.shards.values_mut().collect();
+        let counts = engine.for_rows_map(&mut shards, 1, |_, chunk| {
+            let mut n = 0usize;
+            for shard in chunk.iter_mut() {
+                n += shard.observe_pending();
+            }
+            n
+        });
+        counts.into_iter().sum()
+    }
+
+    /// Take every shard's observed-window backlog (cleared on return):
+    /// the union feed for one amortized off-line analyze/train cycle.
+    pub fn take_observed(&mut self) -> Vec<(TenantId, Vec<ObservationWindow>)> {
+        self.shards
+            .values_mut()
+            .filter(|s| !s.observed.is_empty())
+            .map(|s| (s.tenant, std::mem::take(&mut s.observed)))
+            .collect()
+    }
+
+    /// Install a classifier on every shard (the off-line trainer calls
+    /// this after each retrain: one shared model, N shards).
+    pub fn install_classifiers<F>(&mut self, mut make: F)
+    where
+        F: FnMut(TenantId) -> Box<dyn WindowClassifier + Send>,
+    {
+        for (t, shard) in self.shards.iter_mut() {
+            shard.pipeline.set_classifier(make(*t));
+        }
+    }
+
+    pub fn shard(&self, t: TenantId) -> Option<&TenantShard> {
+        self.shards.get(&t)
+    }
+
+    pub fn shard_mut(&mut self, t: TenantId) -> Option<&mut TenantShard> {
+        self.shards.get_mut(&t)
+    }
+
+    pub fn tenants(&self) -> Vec<TenantId> {
+        self.shards.keys().copied().collect()
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-tenant context bus (plug-in readers take handles here).
+    pub fn bus(&self) -> &ContextBus {
+        &self.bus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::aggregate_samples;
+    use crate::workloadgen::{tour_schedule, Generator};
+
+    fn trace_for(seed: u64, classes: &[u32]) -> crate::workloadgen::Trace {
+        let mut g = Generator::with_default_config(seed);
+        g.generate(&tour_schedule(60, classes))
+    }
+
+    #[test]
+    fn router_windows_match_batch_aggregation_per_tenant() {
+        let cfg = RouterConfig {
+            monitor: MonitorConfig { window_size: 15 },
+            ..Default::default()
+        };
+        let mut router = StreamRouter::new(cfg.clone());
+        let traces = [trace_for(1, &[0, 2]), trace_for(2, &[4])];
+        // interleave bursts that straddle window boundaries
+        let mixed = super::super::tenant::interleave_round_robin(&traces, 7);
+        for ts in &mixed {
+            router.ingest_tagged(ts);
+        }
+        let n = router.tick();
+        let want_total: usize =
+            traces.iter().map(|t| t.len() / 15).sum();
+        assert_eq!(n, want_total);
+        for (k, tr) in traces.iter().enumerate() {
+            let t = TenantId(k as u32);
+            let batch =
+                aggregate_samples(&tr.samples, &cfg.monitor);
+            let shard = router.shard(t).unwrap();
+            assert_eq!(shard.contexts.len(), batch.len(), "tenant {k}");
+            for (c, w) in shard.contexts.iter().zip(&batch) {
+                assert_eq!(c.window_index, w.index);
+                assert_eq!(c.time, w.time);
+            }
+            // context ring saw the same tail
+            assert_eq!(
+                router.bus().latest(t).unwrap().window_index,
+                batch.last().unwrap().index
+            );
+        }
+    }
+
+    #[test]
+    fn tick_is_incremental_and_observed_backlog_drains_once() {
+        let mut router = StreamRouter::new(RouterConfig {
+            monitor: MonitorConfig { window_size: 10 },
+            ..Default::default()
+        });
+        let tr = trace_for(3, &[1]);
+        let half = tr.len() / 2;
+        router.ingest(TenantId(0), &tr.samples[..half]);
+        let n1 = router.tick();
+        assert!(n1 > 0);
+        assert_eq!(router.tick(), 0, "second tick with no new samples");
+        router.ingest(TenantId(0), &tr.samples[half..]);
+        let n2 = router.tick();
+        assert_eq!(n1 + n2, tr.len() / 10);
+        let taken = router.take_observed();
+        assert_eq!(taken.len(), 1);
+        assert_eq!(taken[0].1.len(), n1 + n2);
+        assert!(router.take_observed().is_empty(), "backlog re-served");
+        // contexts log everything ever observed
+        assert_eq!(
+            router.shard(TenantId(0)).unwrap().contexts.len(),
+            n1 + n2
+        );
+    }
+
+    #[test]
+    fn shard_logs_are_bounded_by_the_cap() {
+        let mut router = StreamRouter::new(RouterConfig {
+            monitor: MonitorConfig { window_size: 10 },
+            shard_log_cap: 16,
+            ..Default::default()
+        });
+        let tr = trace_for(7, &[2]);
+        let ws = aggregate_samples(
+            &tr.samples,
+            &MonitorConfig { window_size: 10 },
+        );
+        // a router-only user that never drains take_observed: both the
+        // context log and the observed backlog must stay bounded
+        for _ in 0..20 {
+            router.enqueue_windows(TenantId(0), &ws);
+            router.tick();
+        }
+        let shard = router.shard(TenantId(0)).unwrap();
+        assert!(
+            shard.contexts.len() <= 16 && shard.contexts.len() >= 8,
+            "context log {} outside [8, 16]",
+            shard.contexts.len()
+        );
+        let taken = router.take_observed();
+        assert!(taken[0].1.len() <= 16, "observed {}", taken[0].1.len());
+    }
+
+    #[test]
+    fn parallel_tick_contexts_bit_identical_to_sequential_router() {
+        let traces: Vec<_> = (0..5)
+            .map(|k| trace_for(10 + k, &[k as u32, (k as u32 + 3) % 6]))
+            .collect();
+        let run = |engine: Engine| -> Vec<Vec<WorkloadContext>> {
+            let mut router = StreamRouter::new(RouterConfig {
+                monitor: MonitorConfig { window_size: 12 },
+                context_cap: 32,
+                engine,
+                ..Default::default()
+            });
+            let mixed =
+                super::super::tenant::interleave_round_robin(&traces, 9);
+            for (i, ts) in mixed.iter().enumerate() {
+                router.ingest_tagged(ts);
+                if i % 40 == 0 {
+                    router.tick();
+                }
+            }
+            router.tick();
+            (0..traces.len())
+                .map(|k| {
+                    router
+                        .shard(TenantId(k as u32))
+                        .unwrap()
+                        .contexts
+                        .clone()
+                })
+                .collect()
+        };
+        let seq = run(Engine::sequential());
+        for threads in [2, 4, 8] {
+            let par = run(Engine::with_threads(threads));
+            assert_eq!(seq, par, "threads {threads}");
+        }
+    }
+}

@@ -254,6 +254,86 @@ pub fn multi_user_schedule(
     out
 }
 
+/// Per-tenant schedules for an interleaved multi-tenant run: tenant `k`
+/// rotates through `classes` starting at offset `k` (so concurrent
+/// tenants run *different* archetypes at any instant — the paper's
+/// complex multi-user condition), with duration jitter and an
+/// occasional two-tenant hybrid mix thrown in.
+pub fn tenant_schedules(
+    rng: &mut Rng,
+    tenants: usize,
+    entries: usize,
+    duration: usize,
+    classes: &[u32],
+) -> Vec<Vec<ScheduleEntry>> {
+    assert!(!classes.is_empty());
+    (0..tenants)
+        .map(|k| {
+            let mut out = Vec::with_capacity(entries);
+            for e in 0..entries {
+                let c = classes[(k + e) % classes.len()];
+                // hybrids need a partner class distinct from `c` — a
+                // list like [3, 3] has none, so the resample below must
+                // be gated on distinct values, not on list length
+                let has_partner = classes.iter().any(|&x| x != c);
+                let mix = if has_partner && rng.chance(0.2) {
+                    let mut other = *rng.choice(classes);
+                    while other == c {
+                        other = *rng.choice(classes);
+                    }
+                    Mix::Hybrid(c, other, rng.range_f64(0.35, 0.65))
+                } else {
+                    Mix::Pure(c)
+                };
+                let jitter = rng.range_f64(0.8, 1.2);
+                out.push(ScheduleEntry {
+                    mix,
+                    duration: ((duration as f64) * jitter) as usize,
+                });
+            }
+            out
+        })
+        .collect()
+}
+
+/// Generate one trace per tenant with **phase-shifted drift**: every
+/// tenant's copy of `drift_class` drifts on the same features, but
+/// tenant `k`'s per-sample rate is scaled by `1 - k/tenants`, so the
+/// tenants cross the off-line analyser's drift threshold ε at staggered
+/// times (tenant 0 first, the last tenant barely at all) — the
+/// staggered-drift scenario a shared knowledge plane must absorb
+/// without tenants corrupting each other's entries. `drift_rate` may be
+/// zero for a drift-free mix.
+pub fn tenant_traces(
+    seed: u64,
+    tenants: usize,
+    entries: usize,
+    duration: usize,
+    classes: &[u32],
+    drift_class: u32,
+    drift_rate: f64,
+) -> Vec<Trace> {
+    let mut sched_rng = Rng::new(seed ^ 0x7E4A_17);
+    let schedules =
+        tenant_schedules(&mut sched_rng, tenants, entries, duration, classes);
+    schedules
+        .into_iter()
+        .enumerate()
+        .map(|(k, schedule)| {
+            let mut cfg = GenConfig::default();
+            if drift_rate != 0.0 {
+                let phase = k as f64 / tenants.max(1) as f64;
+                let mut rate = [0.0; NUM_FEATURES];
+                rate[0] = drift_rate * (1.0 - phase);
+                rate[3] = drift_rate * (1.0 - phase);
+                cfg.drift_per_sample = vec![(drift_class, rate)];
+            }
+            let mut g = Generator::new(seed + k as u64, cfg);
+            g.generate(&schedule)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -360,6 +440,85 @@ mod tests {
 
     fn num_pure_as_u32() -> u32 {
         catalog().len() as u32
+    }
+
+    #[test]
+    fn tenant_schedules_stagger_archetypes() {
+        let mut rng = Rng::new(12);
+        let scheds = tenant_schedules(&mut rng, 4, 6, 50, &[0, 1, 2]);
+        assert_eq!(scheds.len(), 4);
+        for s in &scheds {
+            assert_eq!(s.len(), 6);
+            for e in s {
+                assert!(e.duration >= 40 && e.duration <= 60);
+            }
+        }
+        // at entry 0 the tenants start on rotated classes: whatever the
+        // pure entries are, they can't all share one class
+        let firsts: Vec<Option<u32>> = scheds
+            .iter()
+            .map(|s| match s[0].mix {
+                Mix::Pure(c) => Some(c),
+                Mix::Hybrid(..) => None,
+            })
+            .collect();
+        let pure: Vec<u32> = firsts.iter().flatten().copied().collect();
+        if pure.len() >= 2 {
+            assert!(
+                pure.windows(2).any(|p| p[0] != p[1]),
+                "all tenants opened on {pure:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn tenant_traces_drift_is_phase_shifted() {
+        // one long class-0 plateau per tenant; tenant 0 drifts at full
+        // rate, the last tenant at 1/4 rate
+        let traces = tenant_traces(7, 4, 1, 4000, &[0], 0, 0.01);
+        assert_eq!(traces.len(), 4);
+        // durations are jittered per tenant, so slice fractionally
+        let late_mean = |t: &Trace| -> f64 {
+            let from = t.len() - t.len() / 8;
+            t.samples[from..]
+                .iter()
+                .map(|s| s.features[0])
+                .sum::<f64>()
+                / (t.len() - from) as f64
+        };
+        let early_mean = |t: &Trace| -> f64 {
+            let to = t.len() / 8;
+            t.samples[..to]
+                .iter()
+                .map(|s| s.features[0])
+                .sum::<f64>()
+                / to as f64
+        };
+        let drift0 = late_mean(&traces[0]) - early_mean(&traces[0]);
+        let drift3 = late_mean(&traces[3]) - early_mean(&traces[3]);
+        assert!(drift0 > 20.0, "tenant 0 drifted only {drift0}");
+        assert!(
+            drift3 < drift0 * 0.5,
+            "phase shift lost: {drift3} vs {drift0}"
+        );
+    }
+
+    #[test]
+    fn tenant_traces_deterministic_and_distinct_per_tenant() {
+        let a = tenant_traces(3, 3, 4, 60, &[0, 2, 5], 0, 0.0);
+        let b = tenant_traces(3, 3, 4, 60, &[0, 2, 5], 0, 0.0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.len(), y.len());
+            for (sx, sy) in x.samples.iter().zip(&y.samples) {
+                assert_eq!(sx.features, sy.features);
+            }
+        }
+        // different tenants get different sample streams
+        assert!(a[0]
+            .samples
+            .iter()
+            .zip(&a[1].samples)
+            .any(|(s0, s1)| s0.features != s1.features));
     }
 
     #[test]

@@ -74,9 +74,9 @@ fn plugin_algorithm1_full_state_machine() {
     use kermit::knowledge::Characterization;
     use kermit::online::{ContextStream, KermitPlugin};
     use kermit::simcluster::perfmodel::job_duration;
-    use std::sync::{Arc, Mutex};
+    use std::sync::{Arc, Mutex, RwLock};
 
-    let db = Arc::new(Mutex::new(WorkloadDb::new()));
+    let db = Arc::new(RwLock::new(WorkloadDb::new()));
     let ctx = Arc::new(Mutex::new(ContextStream::new(8)));
     let mut plugin = KermitPlugin::new(db.clone(), ctx);
     plugin.explorer_config.global_budget = 30;
@@ -92,7 +92,7 @@ fn plugin_algorithm1_full_state_machine() {
         let rows: Vec<Vec<f64>> = vec![vec![5.0; 8], vec![5.2; 8]];
         let ch = Characterization::from_vec_rows(&rows);
         let cen = ch.mean_vector();
-        db.lock().unwrap().insert_new(ch, cen, 2, false)
+        db.write().unwrap().insert_new(ch, cen, 2, false)
     };
 
     // phase 3: global search until convergence
@@ -110,11 +110,11 @@ fn plugin_algorithm1_full_state_machine() {
             other => panic!("unexpected {other:?}"),
         }
     }
-    assert!(db.lock().unwrap().get(label).unwrap().optimal_config_found);
+    assert!(db.read().unwrap().get(label).unwrap().optimal_config_found);
 
     // phase 4: drift -> local search from the stored config
     {
-        let mut dbl = db.lock().unwrap();
+        let mut dbl = db.write().unwrap();
         let rows: Vec<Vec<f64>> = vec![vec![9.0; 8], vec![9.2; 8]];
         let ch = Characterization::from_vec_rows(&rows);
         let cen = ch.mean_vector();
@@ -138,7 +138,7 @@ fn plugin_algorithm1_full_state_machine() {
             other => panic!("unexpected {other:?}"),
         }
     }
-    let dbl = db.lock().unwrap();
+    let dbl = db.read().unwrap();
     let e = dbl.get(label).unwrap();
     assert!(e.optimal_config_found && !e.is_drifting);
 }
@@ -254,7 +254,7 @@ fn drift_recovery_in_closed_loop() {
         .count();
     assert!(tail_hits >= 6, "only {tail_hits} cache hits after recovery");
     // and the DB entry is no longer flagged drifting
-    let db = coord.db.lock().unwrap();
+    let db = coord.db.read().unwrap();
     assert!(db.entries().filter(|e| !e.synthetic).all(|e| !e.is_drifting));
 }
 

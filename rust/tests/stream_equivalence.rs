@@ -1,0 +1,199 @@
+//! Multi-tenant equivalence pins (the stream-layer contract): routing K
+//! interleaved tenant traces through a `StreamRouter` — with any engine
+//! thread count — produces, per tenant, the **exact** context sequence
+//! of replaying that tenant's trace alone through a sequential
+//! `OnlinePipeline`. Per-shard state is single-writer and shards share
+//! nothing mutable, so this is equality of every field (labels,
+//! predictions, window indices, times), not a tolerance.
+
+use kermit::features::ObservationWindow;
+use kermit::knowledge::{Characterization, WorkloadDb};
+use kermit::linalg::engine::Engine;
+use kermit::monitor::{aggregate_samples, MonitorConfig};
+use kermit::online::classifier::CentroidClassifier;
+use kermit::online::{ContextStream, OnlinePipeline, WorkloadContext};
+use kermit::stream::{
+    interleave_round_robin, RouterConfig, StreamRouter, TenantId,
+};
+use kermit::workloadgen::{tenant_traces, Trace};
+use std::sync::{Arc, Mutex};
+
+const WINDOW: usize = 15;
+const CLASSES: [u32; 4] = [0, 2, 5, 7];
+
+/// A WorkloadDb with one entry per class, characterised from a clean
+/// plateau of that class — so the centroid classifier has a stable,
+/// deterministic model shared by the reference and the router paths.
+fn class_db() -> WorkloadDb {
+    use kermit::features::AnalyticWindow;
+    use kermit::workloadgen::{tour_schedule, Generator};
+    let mut db = WorkloadDb::new();
+    for (i, &c) in CLASSES.iter().enumerate() {
+        let mut g = Generator::with_default_config(1000 + i as u64);
+        let t = g.generate(&tour_schedule(300, &[c]));
+        let ws = aggregate_samples(
+            &t.samples,
+            &MonitorConfig { window_size: WINDOW },
+        );
+        let rows: Vec<Vec<f64>> = ws
+            .iter()
+            .map(|w| AnalyticWindow::from_observation(w).features)
+            .collect();
+        let ch = Characterization::from_vec_rows(&rows);
+        let centroid = ch.mean_vector();
+        db.insert_new(ch, centroid, rows.len(), false);
+    }
+    db
+}
+
+fn classifier(db: &WorkloadDb) -> Box<CentroidClassifier> {
+    Box::new(CentroidClassifier::from_db(db, 20.0))
+}
+
+/// Sequential reference: this tenant's trace alone through one
+/// aggregator + one pipeline.
+fn replay_alone(trace: &Trace, db: &WorkloadDb) -> Vec<WorkloadContext> {
+    let ctx = Arc::new(Mutex::new(ContextStream::new(64)));
+    let mut pipe = OnlinePipeline::new(ctx);
+    pipe.set_classifier(classifier(db));
+    aggregate_samples(
+        &trace.samples,
+        &MonitorConfig { window_size: WINDOW },
+    )
+    .iter()
+    .map(|w| pipe.observe(w))
+    .collect()
+}
+
+fn route_interleaved(
+    traces: &[Trace],
+    db: &WorkloadDb,
+    engine: Engine,
+    burst: usize,
+    tick_every: usize,
+) -> Vec<Vec<WorkloadContext>> {
+    let mut router = StreamRouter::new(RouterConfig {
+        monitor: MonitorConfig { window_size: WINDOW },
+        context_cap: 64,
+        engine,
+        ..Default::default()
+    });
+    // shards must exist (with the trained classifier installed) before
+    // the first window closes
+    for k in 0..traces.len() {
+        router
+            .add_tenant(TenantId(k as u32))
+            .pipeline
+            .set_classifier(classifier(db));
+    }
+    let mixed = interleave_round_robin(traces, burst);
+    for (i, ts) in mixed.iter().enumerate() {
+        router.ingest_tagged(ts);
+        if (i + 1) % tick_every == 0 {
+            router.tick();
+        }
+    }
+    router.tick();
+    (0..traces.len())
+        .map(|k| router.shard(TenantId(k as u32)).unwrap().contexts.clone())
+        .collect()
+}
+
+fn tenant_fleet(n: usize) -> Vec<Trace> {
+    // mixed archetypes, hybrids, jittered durations — the adversarial
+    // interleaving input, 5+ plateaus per tenant
+    tenant_traces(42, n, 5, 8 * WINDOW, &CLASSES, 0, 0.0)
+}
+
+#[test]
+fn router_equals_solo_replay_for_every_tenant_sequential_engine() {
+    let db = class_db();
+    let traces = tenant_fleet(5);
+    let routed =
+        route_interleaved(&traces, &db, Engine::sequential(), 11, 37);
+    for (k, trace) in traces.iter().enumerate() {
+        let solo = replay_alone(trace, &db);
+        assert_eq!(
+            routed[k], solo,
+            "tenant {k}: routed context sequence diverged from solo replay"
+        );
+        assert!(!solo.is_empty());
+        // the run must actually classify (a vacuous all-UNKNOWN
+        // equality would prove nothing)
+        assert!(
+            solo.iter().any(|c| c.is_known()),
+            "tenant {k} never classified"
+        );
+    }
+}
+
+#[test]
+fn router_equals_solo_replay_under_engine_parallel_dispatch() {
+    let db = class_db();
+    let traces = tenant_fleet(6);
+    let solos: Vec<Vec<WorkloadContext>> =
+        traces.iter().map(|t| replay_alone(t, &db)).collect();
+    for threads in [2, 4, 8] {
+        let routed = route_interleaved(
+            &traces,
+            &db,
+            Engine::with_threads(threads),
+            7,
+            53,
+        );
+        assert_eq!(
+            routed, solos,
+            "engine with {threads} threads diverged from solo replays"
+        );
+    }
+}
+
+#[test]
+fn tick_granularity_does_not_change_the_context_sequences() {
+    let db = class_db();
+    let traces = tenant_fleet(4);
+    // tick after every sample vs one giant tick at the end
+    let fine =
+        route_interleaved(&traces, &db, Engine::with_threads(4), 5, 1);
+    let coarse = route_interleaved(
+        &traces,
+        &db,
+        Engine::with_threads(4),
+        5,
+        usize::MAX,
+    );
+    assert_eq!(fine, coarse);
+}
+
+#[test]
+fn per_tenant_windows_match_solo_aggregation_exactly() {
+    // the monitor half of the contract: the router's shard aggregation
+    // produces the same windows (indices, moments, truth) the batch
+    // aggregator yields on the tenant's trace alone
+    let traces = tenant_fleet(3);
+    let mut router = StreamRouter::new(RouterConfig {
+        monitor: MonitorConfig { window_size: WINDOW },
+        context_cap: 64,
+        engine: Engine::with_threads(3),
+        ..Default::default()
+    });
+    for ts in interleave_round_robin(&traces, 13) {
+        router.ingest_tagged(&ts);
+    }
+    router.tick();
+    for (k, trace) in traces.iter().enumerate() {
+        let solo: Vec<ObservationWindow> = aggregate_samples(
+            &trace.samples,
+            &MonitorConfig { window_size: WINDOW },
+        );
+        let routed = router
+            .shard_mut(TenantId(k as u32))
+            .unwrap();
+        let got = std::mem::take(&mut routed.contexts);
+        assert_eq!(got.len(), solo.len(), "tenant {k} window count");
+        for (c, w) in got.iter().zip(&solo) {
+            assert_eq!(c.window_index, w.index, "tenant {k}");
+            assert_eq!(c.time, w.time, "tenant {k}");
+        }
+    }
+}

@@ -26,6 +26,38 @@ use kermit::util::rng::Rng;
 use kermit::workloadgen::{tenant_traces, tour_schedule, Generator};
 use std::sync::{Arc, Mutex};
 
+/// The old per-call scoped-spawn fan-out PR 2's engine used, kept here
+/// as the reference the `spawn_amortization` stage measures the
+/// persistent pool against.
+fn scoped_for_rows(threads: usize, out: &mut [f64], f: impl Fn(usize, &mut [f64]) + Sync) {
+    let items = out.len();
+    let workers = threads.min(items).max(1);
+    let chunk = items.div_ceil(workers);
+    std::thread::scope(|s| {
+        let f = &f;
+        for (ci, c) in out.chunks_mut(chunk).enumerate() {
+            s.spawn(move || f(ci * chunk, c));
+        }
+    });
+}
+
+/// Pairwise matrix forced through the scalar kernel (upper triangle +
+/// mirror, like the sequential provider) — the reference row for the
+/// kernel-tier comparison.
+fn pairwise_scalar_kernel(rows: &Matrix) -> Vec<f64> {
+    let n = rows.n_rows();
+    let mut out = vec![0.0; n * n];
+    for i in 0..n {
+        let ri = rows.row(i);
+        for j in (i + 1)..n {
+            let d = engine::sq_dist_scalar(ri, rows.row(j));
+            out[i * n + j] = d;
+            out[j * n + i] = d;
+        }
+    }
+    out
+}
+
 fn main() {
     println!("\n== Hot-path micro-benchmarks (§Perf) ==\n");
     let mut t = Table::new(&["stage", "latency", "throughput"]);
@@ -137,6 +169,21 @@ fn main() {
     let pairs_rate = |ns: f64| {
         format!("{:.1}M pairs/s", (600.0 * 600.0) / (ns / 1e9) / 1e6)
     };
+    // scalar-kernel reference pairwise: together with the dispatch-
+    // kernel stages below (whose active tier is in `meta.simd_tier`)
+    // this records the scalar / simd / simd-fast pairwise comparison —
+    // run the bench once per feature set to fill in all three tiers
+    let tps = bench(2, 10, || {
+        std::hint::black_box(pairwise_scalar_kernel(&disc));
+    });
+    t.timed_row(
+        &[
+            "pairwise_sq 600x32 (scalar kernel)".into(),
+            tps.per_iter_str(),
+            pairs_rate(tps.median_ns),
+        ],
+        tps,
+    );
     let td = bench(2, 10, || {
         std::hint::black_box(NativeDistance.pairwise_sq(&disc));
     });
@@ -235,6 +282,49 @@ fn main() {
         ],
         tbp,
     );
+
+    // --- spawn amortization: 1k tiny dispatches through the old
+    // scoped-spawn fan-out vs the persistent pool. Small batches (96
+    // f64 items) make the dispatch overhead itself the measurand: the
+    // pool's condvar wakeup must beat a thread spawn+join per call
+    // (this is the per-merge agglomerative / per-tick router pattern).
+    let tiny_items = 96usize;
+    let dispatches = 1000usize;
+    let amort_engine = Engine::with_threads(eng.threads()).with_min_items(1);
+    let mut tiny = vec![0.0f64; tiny_items];
+    let per_dispatch = |ns: f64| format!("{}/dispatch", fmt_ns(ns / dispatches as f64));
+    let t_scoped = bench(1, 5, || {
+        for _ in 0..dispatches {
+            scoped_for_rows(eng.threads(), &mut tiny, |start, chunk| {
+                for (off, cell) in chunk.iter_mut().enumerate() {
+                    *cell = ((start + off) as f64).sqrt();
+                }
+            });
+            std::hint::black_box(&mut tiny);
+        }
+    });
+    t.row(&[
+        format!("spawn_amortization {dispatches}x{tiny_items} (scoped spawn)"),
+        t_scoped.per_iter_str(),
+        per_dispatch(t_scoped.median_ns),
+    ]);
+    t.metric("spawn_amortization_scoped", t_scoped.median_ns);
+    let t_pool = bench(1, 5, || {
+        for _ in 0..dispatches {
+            amort_engine.for_rows(&mut tiny, 1, |start, chunk| {
+                for (off, cell) in chunk.iter_mut().enumerate() {
+                    *cell = ((start + off) as f64).sqrt();
+                }
+            });
+            std::hint::black_box(&mut tiny);
+        }
+    });
+    t.row(&[
+        format!("spawn_amortization {dispatches}x{tiny_items} (persistent pool)"),
+        t_pool.per_iter_str(),
+        per_dispatch(t_pool.median_ns),
+    ]);
+    t.metric("spawn_amortization_pool", t_pool.median_ns);
 
     // --- multi-tenant observe path: K pipeline shards per tick,
     // sequential vs engine-parallel dispatch (the stream layer's win —
@@ -351,7 +441,13 @@ fn main() {
     // environment metadata so successive PRs diff baselines
     // apples-to-apples (a 2-thread run is not a 16-thread run)
     t.meta("engine_threads", &eng.threads().to_string());
+    t.meta("engine_pool", "persistent");
     t.meta("simd_feature", if cfg!(feature = "simd") { "on" } else { "off" });
+    t.meta(
+        "simd_fast_feature",
+        if cfg!(feature = "simd-fast") { "on" } else { "off" },
+    );
+    t.meta("simd_tier", engine::simd_tier());
     t.meta("simd_active", if engine::simd_active() { "yes" } else { "no" });
     t.meta(
         "runtime_artifacts_feature",

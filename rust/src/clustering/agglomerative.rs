@@ -25,8 +25,11 @@ pub fn agglomerative(
 
 /// Engine-parallel [`agglomerative`]: each merge step's closest-pair
 /// scan (the O(n²) inner loop of the O(n³) algorithm) fans out over the
-/// engine's worker pool. Pass an [`super::EngineDistance`] to also
-/// parallelise the initial distance-matrix construction.
+/// engine's persistent worker pool — the per-merge dispatch is exactly
+/// the many-small-calls pattern the pool amortises (a scoped spawn per
+/// merge used to dominate small-n runs). Pass an
+/// [`super::EngineDistance`] to also parallelise the initial
+/// distance-matrix construction.
 ///
 /// The scan is a *triangular* loop — row `i` visits `n-1-i` pairs — so
 /// equal-count row chunks would give the first chunk ~2x its share of

@@ -61,12 +61,12 @@ pub fn dbscan(
 }
 
 /// Engine-parallel [`dbscan`]: the O(n²) neighbourhood queries fan out
-/// over the engine's worker pool (each row's neighbour list is an
-/// independent scan of its distance-matrix row, written to a disjoint
-/// slot). The BFS expansion is inherently sequential and untouched, so
-/// labels are bit-identical to the sequential path for any thread
-/// count. Pair with [`super::EngineDistance`] to also parallelise the
-/// distance-matrix construction itself.
+/// over the engine's persistent worker pool (each row's neighbour list
+/// is an independent scan of its distance-matrix row, written to a
+/// disjoint slot). The BFS expansion is inherently sequential and
+/// untouched, so labels are bit-identical to the sequential path for
+/// any thread count. Pair with [`super::EngineDistance`] to also
+/// parallelise the distance-matrix construction itself.
 pub fn dbscan_with(
     engine: Engine,
     rows: &Matrix,

@@ -40,12 +40,15 @@ pub fn kmeans(
 }
 
 /// Engine-parallel [`kmeans`]: the assign pass fans its row loop out
-/// over the engine's worker pool. Per-row work has no cross-row
-/// dependency, the update pass stays sequential, and the empty-cluster
-/// reseed reduces chunk winners in chunk order with `max_by`'s
-/// last-index tie-breaking, so labels, centroids, inertia, and
-/// iteration count are bit-identical to the sequential path for any
-/// thread count.
+/// over the engine's persistent worker pool. Per-row work has no
+/// cross-row dependency, the update pass stays sequential, and the
+/// empty-cluster reseed reduces chunk winners in chunk order with
+/// `max_by`'s last-index tie-breaking, so labels, centroids, inertia,
+/// and iteration count are bit-identical to the sequential path for any
+/// thread count — and for any chunk alignment, which lets the scratch
+/// loops use cache-line-aligned chunk boundaries (false sharing on the
+/// `d2` / `assign` buffers bounded to at most the one line straddling
+/// each boundary between adjacent workers).
 pub fn kmeans_with(
     engine: Engine,
     rows: &Matrix,
@@ -57,6 +60,10 @@ pub fn kmeans_with(
     let n = rows.n_rows();
     assert!(n >= k, "need at least k rows");
     let w = rows.n_cols();
+    // alignment only moves chunk boundaries, never what is computed
+    // (the reseed reduction below is chunk-boundary-invariant)
+    let d2_engine = engine.with_chunk_align(Engine::cache_align_for::<f64>(1));
+    let assign_engine = engine.with_chunk_align(Engine::cache_align_for::<(i32, f64)>(1));
 
     // k-means++ init (same probe sequence as the classic formulation)
     let mut centroids = Matrix::zeros(k, w);
@@ -84,7 +91,7 @@ pub fn kmeans_with(
         };
         centroids.row_mut(seeded).copy_from_slice(rows.row(next));
         let seeded_row = centroids.row(seeded);
-        engine.for_rows(&mut d2, 1, |start, chunk| {
+        d2_engine.for_rows(&mut d2, 1, |start, chunk| {
             for (off, dv) in chunk.iter_mut().enumerate() {
                 let d = sq_dist(rows.row(start + off), seeded_row);
                 if d < *dv {
@@ -107,7 +114,7 @@ pub fn kmeans_with(
         iterations = it + 1;
         // assign (row-parallel; the per-chunk changed flags are
         // order-insensitive so any reduction order is fine)
-        let changed = engine
+        let changed = assign_engine
             .for_rows_map(&mut assign, 1, |start, chunk| {
                 let mut changed = false;
                 for (off, cell) in chunk.iter_mut().enumerate() {
@@ -161,7 +168,7 @@ pub fn kmeans_with(
                 // assign-pass distances. `>=` in both the chunk-local
                 // scan and the chunk-order reduction reproduces
                 // `Iterator::max_by`'s last-maximum tie-breaking exactly.
-                let far = engine
+                let far = assign_engine
                     .map_chunks(n, |range| {
                         let mut best_i = range.start;
                         let mut best_v = f64::NEG_INFINITY;

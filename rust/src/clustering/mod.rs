@@ -61,10 +61,14 @@ impl DistanceProvider for EngineDistance {
 /// parallel path computes full rows instead (each worker owns a disjoint
 /// band of output rows, so no mirror write crosses a chunk boundary);
 /// that doubles the kernel invocations but removes all write sharing,
-/// and because `sq_dist(a, b)` is bitwise-symmetric the two paths
-/// produce identical matrices.
+/// and because `sq_dist(a, b)` is bitwise-symmetric — in every SIMD
+/// tier, including the FMA ones — the two paths produce identical
+/// matrices. Chunk boundaries are rounded to cache-line-sized
+/// multiples of the n-wide output rows, bounding cross-worker sharing
+/// to at most the one line straddling each boundary.
 pub fn pairwise_sq_with(engine: Engine, rows: &Matrix) -> Vec<f64> {
     let n = rows.n_rows();
+    let engine = engine.with_chunk_align(Engine::cache_align_for::<f64>(n));
     if !engine.is_parallel_for(n) {
         let mut out = vec![0.0; n * n];
         for i in 0..n {

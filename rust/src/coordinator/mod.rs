@@ -125,7 +125,9 @@ impl Coordinator {
     /// gracefully to the engine-parallel native provider otherwise —
     /// the caller no longer has to pick at build time. The fallback
     /// (and the off-line retraining) parallelise over
-    /// `config.discovery.engine`.
+    /// `config.discovery.engine`, whose workers live in the process-
+    /// wide persistent pool — repeated discovery cycles reuse them
+    /// instead of re-spawning per call.
     pub fn with_best_distance(config: CoordinatorConfig) -> Coordinator {
         let dist = crate::runtime::nn::distance_provider(config.discovery.engine);
         Self::with_distance(config, dist)

@@ -99,6 +99,9 @@ impl MultiTenantCoordinator {
         config: CoordinatorConfig,
         dist: Box<dyn DistanceProvider>,
     ) -> MultiTenantCoordinator {
+        // the default TickDispatch policy fans busy shards out across
+        // the persistent pool from 2 tenants up; a 1-tenant deployment
+        // drains inline (no wakeup for an indivisible work item)
         let router = StreamRouter::new(RouterConfig {
             monitor: config.monitor.clone(),
             context_cap: 64,

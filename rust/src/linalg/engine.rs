@@ -1,105 +1,197 @@
 //! The compute engine behind the clustering / classification hot paths:
-//! an explicit SIMD squared-distance kernel and a std-only scoped-thread
-//! worker pool for the embarrassingly-parallel row loops.
+//! explicit SIMD squared-distance kernels and a std-only **persistent
+//! worker pool** for the embarrassingly-parallel row loops.
 //!
-//! # SIMD kernel and feature gates
+//! # SIMD kernels and feature gates
 //!
 //! [`sq_dist`] is the dispatch point every distance computation in the
-//! crate funnels through (via `linalg::sq_dist`). Three tiers:
+//! crate funnels through (via `linalg::sq_dist`). Four tiers, picked at
+//! compile time by cargo feature and at **runtime** by CPU detection
+//! (cached after the first call, scalar fallback everywhere):
 //!
-//! * **default build** — [`sq_dist_scalar`], the four-accumulator scalar
-//!   kernel. It auto-vectorises well and keeps the build dependency- and
-//!   `unsafe`-free.
-//! * **`--features simd`, x86_64** — an explicit AVX f64x4 kernel
-//!   (`std::arch` intrinsics, no external crates). Availability is
-//!   checked *at runtime* via `is_x86_feature_detected!` and cached, so
-//!   a `simd` binary still runs correctly on a pre-AVX host by falling
-//!   back to the scalar kernel.
-//! * **`--features simd`, non-x86_64** — compiles to the scalar kernel;
-//!   the feature is a no-op rather than a build error.
+//! | build                  | kernel                | equivalence guarantee |
+//! |------------------------|-----------------------|-----------------------|
+//! | default                | [`sq_dist_scalar`], four-accumulator scalar | reference arithmetic |
+//! | `--features simd`      | AVX f64x4, **no FMA** | **bit-identical** to scalar |
+//! | `--features simd-fast` | AVX2 f64x4 **FMA**    | relative error ≤ [`SIMD_FAST_REL_TOL`]; labels unchanged on the golden fixtures |
+//! | `--features simd-fast` + AVX-512 host | AVX-512 f64x8 FMA | same tolerance contract as AVX2 FMA |
 //!
-//! The AVX kernel deliberately avoids fused multiply-add: lane `i` of
-//! the vector accumulator performs exactly the operation sequence of
-//! scalar accumulator `s[i]`, and the horizontal reduction uses the same
-//! `(s0 + s1) + (s2 + s3)` order, so the SIMD path is **bit-identical**
-//! to the scalar path (pinned by a property test). That keeps every
-//! golden-equivalence guarantee of the numeric core intact regardless of
-//! build flavour.
+//! The plain-`simd` AVX kernel deliberately avoids fused multiply-add:
+//! lane `i` of the vector accumulator performs exactly the operation
+//! sequence of scalar accumulator `s[i]`, and the horizontal reduction
+//! uses the same `(s0 + s1) + (s2 + s3)` order, so that tier is
+//! **bit-identical** to the scalar path (pinned by a property test) and
+//! every golden-equivalence guarantee holds regardless of build flavour.
 //!
-//! # Worker pool and threshold heuristics
+//! The `simd-fast` tier trades that bit identity for throughput: FMA
+//! contracts `acc + d*d` into one correctly-rounded operation (the
+//! *contracted* result is more accurate, not less — it skips the
+//! intermediate rounding of `d*d`), and the AVX-512 path additionally
+//! changes the accumulator width and reduction shape. Because
+//! `sq_dist` is a sum of non-negative terms there is no cancellation,
+//! so the relative error against the scalar kernel is bounded by the
+//! usual `n·ε` accumulation bound — [`SIMD_FAST_REL_TOL`] documents the
+//! shipped contract and the tolerance property tests in
+//! `tests/engine_equivalence.rs` pin it, together with label-stability
+//! tests showing the low-order distance bits never flip a clustering or
+//! classification decision on the golden fixtures. Both fast kernels
+//! remain **bitwise symmetric** (`sq_dist(a,b) == sq_dist(b,a)`), which
+//! is what the parallel pairwise matrix relies on.
 //!
-//! [`Engine`] is a tiny `Copy` handle — a thread count plus a
-//! sequential-fallback threshold — that callers pick **once at
+//! On non-x86_64 targets every simd feature compiles to the scalar
+//! kernel; the features are no-ops rather than build errors. The
+//! AVX-512 intrinsics need Rust ≥ 1.89 (they stabilised there).
+//!
+//! # Persistent worker pool
+//!
+//! [`Engine`] is a tiny `Copy` handle — thread count, sequential-
+//! fallback threshold, chunk alignment — that callers pick **once at
 //! construction** ([`Engine::sequential`], [`Engine::auto`],
 //! [`Engine::with_threads`]) and thread through the clustering / ML /
-//! discovery APIs. Work is fanned out with `std::thread::scope` (no
-//! external thread-pool dependency, no `'static` bounds), split into at
-//! most `threads` contiguous, disjoint chunks.
+//! discovery APIs. Parallel calls no longer spawn scoped threads; they
+//! publish a job descriptor to the process-wide persistent pool
+//! ([`crate::linalg::pool`]) whose workers are started lazily on the
+//! first parallel call and then parked on a condvar between calls. The
+//! calling thread always claims chunks itself, so every call makes
+//! progress even under pool contention or shutdown, and a
+//! 1000-small-call loop (per-merge agglomerative scans, per-tick router
+//! dispatch) pays parking-lot wakeups instead of thread spawns — see
+//! the `spawn_amortization` stage of `benches/hotpath.rs`.
 //!
 //! Batches smaller than `min_items` (default [`MIN_PAR_ITEMS`]) run
-//! sequentially on the calling thread: below roughly that many rows the
-//! scoped-spawn cost (~tens of µs) exceeds the row work itself for the
-//! 32-wide analytic rows these loops process. Callers whose items are
-//! individually heavy (e.g. fitting one forest tree) lower it with
-//! [`Engine::with_min_items`].
+//! sequentially on the calling thread: below roughly that many rows
+//! even a pool wakeup exceeds the row work itself for the 32-wide
+//! analytic rows these loops process. Callers whose items are
+//! individually heavy (fitting one forest tree, draining one tenant
+//! shard) lower it with [`Engine::with_min_items`].
 //!
-//! # Determinism
+//! # Chunking and determinism
 //!
 //! Chunks are contiguous index ranges and results are reduced **in
 //! chunk order**, so any per-row map is bit-identical to its sequential
 //! run. Reductions that break ties by index (k-means empty-cluster
 //! reseed, agglomerative closest-pair) keep sequential tie-breaking by
 //! comparing chunk-local winners in chunk order — see
-//! `clustering::kmeans` for the pattern. Nothing in this module uses
-//! work stealing or atomics on the data path, so there is no scheduling
+//! `clustering::kmeans` for the pattern; those reductions are written
+//! to be chunk-boundary-invariant, which also makes them alignment-
+//! invariant. [`Engine::with_chunk_align`] rounds chunk boundaries up
+//! to a multiple of the given item count; pair it with
+//! [`Engine::cache_align_for`] so boundaries land on cache-line-sized
+//! multiples from the buffer start — adjacent workers then share at
+//! most the one line straddling each boundary (none when the
+//! allocation happens to be line-aligned; `Vec` guarantees only
+//! element alignment), instead of a line per misplaced split.
+//! Alignment changes *where* chunks split, never what is computed. Nothing in this module uses work stealing below chunk
+//! granularity or atomics on the data path, so there is no scheduling
 //! nondeterminism to begin with.
 
+use super::pool;
 use std::ops::Range;
 
 /// Below this many items a parallel call runs sequentially (see the
 /// module docs for the rationale).
 pub const MIN_PAR_ITEMS: usize = 64;
 
-/// Scoped-thread worker pool handle. Cheap to copy; embed it in configs
-/// so parallelism is picked once at construction.
+/// Documented error contract of the `simd-fast` tier: for inputs up to
+/// a few thousand features, `|sq_dist - sq_dist_scalar|` is bounded by
+/// `SIMD_FAST_REL_TOL * sq_dist_scalar` (plus nothing — the sum has no
+/// cancellation, so the bound is purely the `n·ε` accumulation term,
+/// about `4e-13` at n = 4096 and far smaller for the 32-wide analytic
+/// rows). The default and plain-`simd` tiers are exact (bit-identical),
+/// not merely within this bound.
+pub const SIMD_FAST_REL_TOL: f64 = 1e-12;
+
+/// Cache-line size assumed by [`Engine::cache_align_for`].
+pub const CACHE_LINE_BYTES: usize = 64;
+
+/// Worker-pool engine handle. Cheap to copy; embed it in configs so
+/// parallelism is picked once at construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Engine {
     threads: usize,
     min_items: usize,
+    chunk_align: usize,
 }
 
 impl Engine {
     /// Single-threaded engine: every call runs on the calling thread.
     pub fn sequential() -> Engine {
-        Engine { threads: 1, min_items: MIN_PAR_ITEMS }
+        Engine { threads: 1, min_items: MIN_PAR_ITEMS, chunk_align: 1 }
     }
 
     /// Engine with an explicit worker count (clamped to at least 1).
     pub fn with_threads(threads: usize) -> Engine {
-        Engine { threads: threads.max(1), min_items: MIN_PAR_ITEMS }
+        Engine { threads: threads.max(1), min_items: MIN_PAR_ITEMS, chunk_align: 1 }
     }
 
-    /// Engine sized to the host (`std::thread::available_parallelism`).
+    /// Engine sized to the host (`std::thread::available_parallelism`),
+    /// overridable with the `KERMIT_THREADS` environment variable
+    /// (clamped to ≥ 1; unparsable values fall back to the host size).
+    /// The override is what makes CI benches and `bench_diff` runs
+    /// reproducible across heterogeneous runners.
     pub fn auto() -> Engine {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let host = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let threads = match std::env::var("KERMIT_THREADS") {
+            Ok(v) => {
+                v.trim().parse::<usize>().map(|n| n.max(1)).unwrap_or_else(|_| host())
+            }
+            Err(_) => host(),
+        };
         Engine::with_threads(threads)
     }
 
     /// Override the sequential-fallback threshold (items per call below
-    /// which no threads are spawned). For loops whose items are
+    /// which the pool is not used). For loops whose items are
     /// individually expensive — fitting a tree, not scanning a row.
     pub fn with_min_items(mut self, min_items: usize) -> Engine {
         self.min_items = min_items.max(1);
         self
     }
 
+    /// Round chunk boundaries up to a multiple of `items` items
+    /// (clamped to ≥ 1; 1 = split anywhere, the default). Use
+    /// [`Engine::cache_align_for`] to compute the item count that puts
+    /// boundaries on cache-line multiples of the row stride. Alignment
+    /// can reduce the number of chunks for tiny batches (the rounded
+    /// chunk covers more items), so leave it at 1 for loops whose items
+    /// are individually heavy.
+    pub fn with_chunk_align(mut self, items: usize) -> Engine {
+        self.chunk_align = items.max(1);
+        self
+    }
+
+    /// Smallest item count whose byte span is a whole number of cache
+    /// lines: with chunks aligned to this, adjacent workers share at
+    /// most the single line straddling each chunk boundary (and none
+    /// when the buffer base happens to be line-aligned — `Vec` only
+    /// guarantees element alignment). `stride` is in elements of `T`
+    /// per item (e.g. one n-wide matrix row ⇒
+    /// `cache_align_for::<f64>(n)`). Always a power of two ≤ 64; 1
+    /// when a single item already spans whole lines.
+    pub fn cache_align_for<T>(stride: usize) -> usize {
+        let bytes = std::mem::size_of::<T>().max(1) * stride.max(1);
+        CACHE_LINE_BYTES / gcd(bytes, CACHE_LINE_BYTES)
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Configured chunk alignment, in items.
+    pub fn chunk_align(&self) -> usize {
+        self.chunk_align
     }
 
     /// Would a call over `items` items actually fan out?
     pub fn is_parallel_for(&self, items: usize) -> bool {
         self.threads > 1 && items >= self.min_items
+    }
+
+    /// Chunk length (in items) for a parallel call over `items`:
+    /// an even `threads`-way split, rounded up to the chunk alignment.
+    fn chunk_items(&self, items: usize) -> usize {
+        let workers = self.threads.min(items);
+        round_up(items.div_ceil(workers), self.chunk_align)
     }
 
     /// Parallel for over disjoint chunks of `out`, collecting one result
@@ -122,17 +214,22 @@ impl Engine {
         if !self.is_parallel_for(items) {
             return vec![f(0, out)];
         }
-        let workers = self.threads.min(items);
-        let chunk_items = items.div_ceil(workers);
+        let chunk_items = self.chunk_items(items);
         let chunk_len = chunk_items * stride;
-        std::thread::scope(|s| {
-            let f = &f;
-            let handles: Vec<_> = out
-                .chunks_mut(chunk_len)
-                .enumerate()
-                .map(|(ci, chunk)| s.spawn(move || f(ci * chunk_items, chunk)))
-                .collect();
-            handles.into_iter().map(join_or_resume).collect()
+        let chunks = items.div_ceil(chunk_items);
+        let total_len = out.len();
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        self.dispatch_collect(chunks, |ci| {
+            let start = ci * chunk_len;
+            let len = chunk_len.min(total_len - start);
+            // SAFETY: chunk `ci` exclusively owns out[start..start+len]
+            // (chunk ranges are disjoint) and the borrow ends before
+            // `out` is touched again — the pool blocks until every
+            // chunk has completed.
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(start), len)
+            };
+            f(ci * chunk_items, chunk)
         })
     }
 
@@ -156,19 +253,41 @@ impl Engine {
         if !self.is_parallel_for(n) {
             return vec![f(0..n)];
         }
-        let workers = self.threads.min(n);
-        let chunk = n.div_ceil(workers);
-        std::thread::scope(|s| {
-            let f = &f;
-            let handles: Vec<_> = (0..n)
-                .step_by(chunk)
-                .map(|start| {
-                    let end = (start + chunk).min(n);
-                    s.spawn(move || f(start..end))
-                })
-                .collect();
-            handles.into_iter().map(join_or_resume).collect()
+        let chunk = self.chunk_items(n);
+        let chunks = n.div_ceil(chunk);
+        self.dispatch_collect(chunks, |ci| {
+            let start = ci * chunk;
+            f(start..(start + chunk).min(n))
         })
+    }
+
+    /// Shared pool-dispatch scaffolding for the parallel paths: run
+    /// `run(ci)` for every chunk index in `0..chunks` (the calling
+    /// thread claiming chunks alongside up to `threads - 1` pool
+    /// workers) and collect each chunk's result **in chunk order**.
+    /// This is the one place the result-slot raw-pointer protocol
+    /// lives; the public methods only contribute their chunk math.
+    fn dispatch_collect<R, F>(&self, chunks: usize, run: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let mut results: Vec<Option<R>> = Vec::with_capacity(chunks);
+        results.resize_with(chunks, || None);
+        {
+            let res_ptr = SendPtr(results.as_mut_ptr());
+            let task = |ci: usize| {
+                let r = run(ci);
+                // SAFETY: chunk `ci` exclusively owns results[ci], and
+                // the write ends before `results` is read below — the
+                // pool blocks until every chunk has completed (a chunk
+                // panic also counts as completed, and unwinds on this
+                // thread before the read).
+                unsafe { *res_ptr.0.add(ci) = Some(r) };
+            };
+            pool::dispatch(chunks, self.threads - 1, &task);
+        }
+        results.into_iter().map(|r| r.expect("pool chunk skipped")).collect()
     }
 }
 
@@ -178,11 +297,25 @@ impl Default for Engine {
     }
 }
 
-fn join_or_resume<R>(h: std::thread::ScopedJoinHandle<'_, R>) -> R {
-    match h.join() {
-        Ok(r) => r,
-        Err(payload) => std::panic::resume_unwind(payload),
+/// Raw-pointer wrapper so disjoint chunk writes can cross the pool's
+/// closure boundary. Soundness rests on the chunk-disjointness argument
+/// at each use site.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+fn round_up(x: usize, align: usize) -> usize {
+    debug_assert!(align >= 1);
+    x.div_ceil(align) * align
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
     }
+    a.max(1)
 }
 
 // ---------------------------------------------------------------------------
@@ -192,7 +325,8 @@ fn join_or_resume<R>(h: std::thread::ScopedJoinHandle<'_, R>) -> R {
 /// Scalar squared euclidean distance: four independent accumulators so
 /// the compiler can keep the loop in SIMD lanes even without the
 /// explicit kernel. This is the reference arithmetic the AVX path must
-/// match bit-for-bit.
+/// match bit-for-bit (and the `simd-fast` tiers within
+/// [`SIMD_FAST_REL_TOL`]).
 #[inline]
 pub fn sq_dist_scalar(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -233,7 +367,7 @@ mod avx {
     /// # Safety
     ///
     /// The caller must have verified AVX support on the running CPU
-    /// (see `avx_active`).
+    /// (see `tier::active`).
     #[target_feature(enable = "avx")]
     pub unsafe fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
         debug_assert_eq!(a.len(), b.len());
@@ -260,35 +394,151 @@ mod avx {
     }
 }
 
-/// Cached runtime AVX check: 0 = unknown, 1 = available, 2 = absent.
+#[cfg(all(feature = "simd-fast", target_arch = "x86_64"))]
+mod avx2_fma {
+    use std::arch::x86_64::{
+        _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_setzero_pd, _mm256_storeu_pd,
+        _mm256_sub_pd,
+    };
+
+    /// AVX2 f64x4 squared distance with fused multiply-add: `simd-fast`
+    /// tier, within [`super::SIMD_FAST_REL_TOL`] of the scalar kernel
+    /// (not bit-identical — the FMA skips the intermediate rounding of
+    /// `d*d`). Bitwise symmetric in its arguments, which the parallel
+    /// pairwise matrix relies on.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX2 + FMA support on the running
+    /// CPU (see `tier::active`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let n4 = n / 4 * 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < n4 {
+            let x = _mm256_loadu_pd(a.as_ptr().add(i));
+            let y = _mm256_loadu_pd(b.as_ptr().add(i));
+            let d = _mm256_sub_pd(x, y);
+            acc = _mm256_fmadd_pd(d, d, acc);
+            i += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut sum = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            sum += d * d;
+            i += 1;
+        }
+        sum
+    }
+}
+
+#[cfg(all(feature = "simd-fast", target_arch = "x86_64"))]
+mod avx512 {
+    use std::arch::x86_64::{
+        _mm512_fmadd_pd, _mm512_loadu_pd, _mm512_reduce_add_pd, _mm512_setzero_pd,
+        _mm512_sub_pd,
+    };
+
+    /// AVX-512 f64x8 squared distance with fused multiply-add: the
+    /// widest `simd-fast` tier, same tolerance contract as the AVX2 FMA
+    /// kernel ([`super::SIMD_FAST_REL_TOL`]) and likewise bitwise
+    /// symmetric. Needs Rust ≥ 1.89 (AVX-512 intrinsics stabilised
+    /// there).
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX-512F support on the running
+    /// CPU (see `tier::active`).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let n8 = n / 8 * 8;
+        let mut acc = _mm512_setzero_pd();
+        let mut i = 0;
+        while i < n8 {
+            let x = _mm512_loadu_pd(a.as_ptr().add(i));
+            let y = _mm512_loadu_pd(b.as_ptr().add(i));
+            let d = _mm512_sub_pd(x, y);
+            acc = _mm512_fmadd_pd(d, d, acc);
+            i += 8;
+        }
+        let mut sum = _mm512_reduce_add_pd(acc);
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            sum += d * d;
+            i += 1;
+        }
+        sum
+    }
+}
+
+/// Runtime kernel-tier detection, cached after the first call.
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-#[inline]
-fn avx_active() -> bool {
+mod tier {
     use std::sync::atomic::{AtomicU8, Ordering};
+
+    pub const SCALAR: u8 = 1;
+    pub const AVX: u8 = 2;
+    #[cfg(feature = "simd-fast")]
+    pub const AVX2_FMA: u8 = 3;
+    #[cfg(feature = "simd-fast")]
+    pub const AVX512_FMA: u8 = 4;
+
     static STATE: AtomicU8 = AtomicU8::new(0);
-    match STATE.load(Ordering::Relaxed) {
-        1 => true,
-        2 => false,
-        _ => {
-            let ok = is_x86_feature_detected!("avx");
-            STATE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
-            ok
+
+    /// The active kernel tier (0 is "not yet probed" and never
+    /// returned).
+    pub fn active() -> u8 {
+        match STATE.load(Ordering::Relaxed) {
+            0 => {
+                let t = detect();
+                STATE.store(t, Ordering::Relaxed);
+                t
+            }
+            t => t,
+        }
+    }
+
+    fn detect() -> u8 {
+        #[cfg(feature = "simd-fast")]
+        {
+            if is_x86_feature_detected!("avx512f") {
+                return AVX512_FMA;
+            }
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return AVX2_FMA;
+            }
+        }
+        if is_x86_feature_detected!("avx") {
+            AVX
+        } else {
+            SCALAR
         }
     }
 }
 
 /// Squared euclidean distance — the dispatch point (`linalg::sq_dist`
-/// forwards here). Explicit AVX kernel when compiled with `--features
-/// simd` on an x86_64 host that has AVX; scalar kernel otherwise. Both
-/// paths produce bit-identical results.
+/// forwards here). Picks the best compiled-in kernel the running CPU
+/// supports: AVX-512 FMA / AVX2 FMA under `simd-fast`, the bit-exact
+/// AVX kernel under plain `simd`, scalar otherwise. See the module docs
+/// for the per-tier equivalence guarantees.
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[inline]
 pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
-    if avx_active() {
-        // SAFETY: AVX availability verified by `avx_active`.
-        unsafe { avx::sq_dist(a, b) }
-    } else {
-        sq_dist_scalar(a, b)
+    match tier::active() {
+        // SAFETY: each arm's CPU features were verified by `tier::active`.
+        #[cfg(feature = "simd-fast")]
+        tier::AVX512_FMA => unsafe { avx512::sq_dist(a, b) },
+        #[cfg(feature = "simd-fast")]
+        tier::AVX2_FMA => unsafe { avx2_fma::sq_dist(a, b) },
+        tier::AVX => unsafe { avx::sq_dist(a, b) },
+        _ => sq_dist_scalar(a, b),
     }
 }
 
@@ -301,18 +551,40 @@ pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     sq_dist_scalar(a, b)
 }
 
-/// True when the explicit SIMD kernel is compiled in *and* the running
+/// True when an explicit SIMD kernel is compiled in *and* the running
 /// CPU supports it (benches record this into their JSON metadata).
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 pub fn simd_active() -> bool {
-    avx_active()
+    tier::active() != tier::SCALAR
 }
 
-/// True when the explicit SIMD kernel is compiled in *and* the running
+/// True when an explicit SIMD kernel is compiled in *and* the running
 /// CPU supports it (benches record this into their JSON metadata).
 #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
 pub fn simd_active() -> bool {
     false
+}
+
+/// Name of the kernel [`sq_dist`] actually dispatches to on this build
+/// + host: `"scalar"`, `"avx"`, `"avx2-fma"`, or `"avx512-fma"`.
+/// Benches record it so baseline diffs compare like with like.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn simd_tier() -> &'static str {
+    match tier::active() {
+        #[cfg(feature = "simd-fast")]
+        tier::AVX512_FMA => "avx512-fma",
+        #[cfg(feature = "simd-fast")]
+        tier::AVX2_FMA => "avx2-fma",
+        tier::AVX => "avx",
+        _ => "scalar",
+    }
+}
+
+/// Name of the kernel [`sq_dist`] actually dispatches to on this build
+/// + host: always `"scalar"` without the `simd` feature on x86_64.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn simd_tier() -> &'static str {
+    "scalar"
 }
 
 #[cfg(test)]
@@ -380,6 +652,60 @@ mod tests {
     }
 
     #[test]
+    fn chunk_alignment_rounds_boundaries_and_covers_everything() {
+        for (threads, n, align) in [(4, 100, 8), (3, 65, 4), (8, 120, 16), (2, 7, 64)] {
+            let engine =
+                Engine::with_threads(threads).with_min_items(1).with_chunk_align(align);
+            let ranges = engine.map_chunks(n, |r| r);
+            let mut next = 0;
+            for (ci, r) in ranges.iter().enumerate() {
+                assert_eq!(r.start, next, "gap/overlap at {next}");
+                assert_eq!(r.start % align, 0, "unaligned boundary {}", r.start);
+                assert!(
+                    r.len() % align == 0 || ci == ranges.len() - 1,
+                    "non-final chunk {ci} unaligned: {r:?}"
+                );
+                next = r.end;
+            }
+            assert_eq!(next, n, "threads={threads} n={n} align={align}");
+        }
+    }
+
+    #[test]
+    fn cache_align_for_matches_item_sizes() {
+        // 8-byte items: 8 per 64-byte line
+        assert_eq!(Engine::cache_align_for::<f64>(1), 8);
+        // a 32-wide f64 row is 256 bytes = 4 whole lines
+        assert_eq!(Engine::cache_align_for::<f64>(32), 1);
+        // 16-byte items: 4 per line
+        assert_eq!(Engine::cache_align_for::<(i32, f64)>(1), 4);
+        // a 5-wide f64 row (40 bytes): 8 rows = 5 lines
+        assert_eq!(Engine::cache_align_for::<f64>(5), 8);
+        assert_eq!(Engine::cache_align_for::<u8>(1), 64);
+    }
+
+    #[test]
+    fn alignment_does_not_change_results() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let run = |engine: Engine| -> Vec<f64> {
+            let mut out = vec![0.0f64; xs.len()];
+            engine.for_rows(&mut out, 1, |start, chunk| {
+                for (off, cell) in chunk.iter_mut().enumerate() {
+                    *cell = xs[start + off] * 2.0 + 1.0;
+                }
+            });
+            out
+        };
+        let plain = run(Engine::with_threads(4).with_min_items(1));
+        for align in [2, 8, 64] {
+            let aligned =
+                run(Engine::with_threads(4).with_min_items(1).with_chunk_align(align));
+            assert_eq!(plain, aligned, "align = {align}");
+        }
+    }
+
+    #[test]
     fn empty_input_is_a_noop() {
         let engine = Engine::with_threads(4).with_min_items(1);
         let mut out: Vec<u32> = Vec::new();
@@ -400,18 +726,35 @@ mod tests {
     #[test]
     fn with_threads_clamps_to_one() {
         assert_eq!(Engine::with_threads(0).threads(), 1);
-        assert!(Engine::auto().threads() >= 1);
+        assert_eq!(Engine::sequential().with_chunk_align(0).chunk_align(), 1);
     }
+
+    // Engine::auto()'s KERMIT_THREADS handling is tested in
+    // tests/engine_env.rs — a dedicated integration-test binary, so
+    // its set_var never races another test's getenv (setenv vs getenv
+    // across threads is UB on glibc, and several lib unit tests read
+    // env vars, e.g. runtime artifact dirs).
 
     #[test]
     fn sq_dist_dispatch_matches_scalar_all_lengths() {
-        // bit-identical across 0..=64, covering every remainder case of
-        // the 4-lane kernel (exact equality, not a tolerance)
+        // covering every remainder case of the 4- and 8-lane kernels.
+        // Exact bits for the default and plain-simd tiers; the
+        // simd-fast tiers are pinned to the documented tolerance
+        // instead (and exactly when the fast kernels fall back).
         let mut rng = Rng::new(42);
         for n in 0..=64usize {
             let a: Vec<f64> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
             let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
-            assert_eq!(sq_dist(&a, &b), sq_dist_scalar(&a, &b), "n = {n}");
+            let fast = sq_dist(&a, &b);
+            let scalar = sq_dist_scalar(&a, &b);
+            if cfg!(feature = "simd-fast") {
+                assert!(
+                    (fast - scalar).abs() <= SIMD_FAST_REL_TOL * scalar.max(f64::MIN_POSITIVE),
+                    "n = {n}: {fast} vs {scalar}"
+                );
+            } else {
+                assert_eq!(fast, scalar, "n = {n}");
+            }
         }
     }
 
@@ -421,8 +764,26 @@ mod tests {
         let a: Vec<f64> = (0..32).map(|_| rng.normal_ms(5.0, 3.0)).collect();
         let b: Vec<f64> = (0..32).map(|_| rng.normal_ms(1.0, 2.0)).collect();
         // exact symmetry is what lets the parallel pairwise matrix
-        // compute both triangles independently yet stay bit-identical
+        // compute both triangles independently yet stay bit-identical —
+        // it holds for every tier (the FMA kernels square a sign-
+        // flipped difference, which is sign-invariant)
         assert_eq!(sq_dist(&a, &b), sq_dist(&b, &a));
+    }
+
+    #[test]
+    fn simd_tier_is_consistent_with_simd_active() {
+        let tier = simd_tier();
+        assert!(
+            ["scalar", "avx", "avx2-fma", "avx512-fma"].contains(&tier),
+            "unknown tier {tier}"
+        );
+        assert_eq!(simd_active(), tier != "scalar");
+        if !cfg!(feature = "simd") {
+            assert_eq!(tier, "scalar");
+        }
+        if !cfg!(feature = "simd-fast") {
+            assert!(!tier.ends_with("fma"), "fma tier without simd-fast: {tier}");
+        }
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Contiguous numeric core: the [`Matrix`] row store and the cache-
 //! friendly distance/accumulate kernels every clustering and ML path in
 //! the crate runs on. The [`engine`] submodule supplies the compute
-//! layer on top — the explicit SIMD `sq_dist` kernel (behind the `simd`
-//! cargo feature) and the scoped-thread worker pool the row-parallel
-//! hot paths fan out on.
+//! layer on top — the explicit SIMD `sq_dist` kernel tiers (behind the
+//! `simd` / `simd-fast` cargo features) and the `Engine` handle whose
+//! row-parallel hot paths fan out on the lazily-started persistent
+//! worker pool in [`pool`].
 //!
 //! # Layout
 //!
@@ -36,6 +37,7 @@
 //!   declaring a width up front.
 
 pub mod engine;
+pub mod pool;
 
 /// Dense row-major matrix of `f64`. See the module docs for layout and
 /// aliasing rules.
@@ -171,10 +173,11 @@ impl Matrix {
 ///
 /// On contiguous `Matrix` rows this is the hot kernel of k-means
 /// assign, DBSCAN's distance matrix, kNN, and the centroid gates.
-/// Dispatches through [`engine::sq_dist`]: the explicit AVX kernel when
-/// built with `--features simd` on a host that has it, otherwise the
-/// four-accumulator scalar kernel. Both produce bit-identical results
-/// (see the `engine` module docs).
+/// Dispatches through [`engine::sq_dist`]: the best explicit SIMD
+/// kernel compiled in (`simd` = bit-exact AVX, `simd-fast` = FMA
+/// AVX2/AVX-512 within a documented tolerance) that the running CPU
+/// supports, otherwise the four-accumulator scalar kernel. See the
+/// `engine` module docs for the per-tier equivalence guarantees.
 #[inline]
 pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     engine::sq_dist(a, b)

@@ -1,0 +1,402 @@
+//! The persistent worker pool behind [`crate::linalg::engine::Engine`].
+//!
+//! PR 2's engine fanned every call out with `std::thread::scope`, which
+//! pays a full spawn + join per call — fine for one 600-row discovery
+//! pass, ruinous for the per-merge scans of agglomerative clustering and
+//! the per-tick dispatch of `stream::StreamRouter` (thousands of small
+//! calls). This module replaces that with **one process-wide pool of
+//! long-lived workers parked on a condvar**:
+//!
+//! * Workers are started **lazily** on the first parallel dispatch and
+//!   grown by the *shortfall* between a job's useful helper count (the
+//!   smaller of the engine's `threads - 1` and the job's `chunks - 1`)
+//!   and the workers not currently busy, capped at [`MAX_WORKERS`] —
+//!   so one caller's back-to-back dispatches reuse the same parked
+//!   workers while concurrent callers each provision their own. A
+//!   program that only ever uses sequential engines never starts a
+//!   thread.
+//! * A call publishes one **job descriptor** — a lifetime-erased pointer
+//!   to its chunk-runner closure plus an atomic chunk-claim counter and
+//!   a completion latch — onto a FIFO queue and wakes the workers. The
+//!   **calling thread claims chunks too**, so a job always makes
+//!   progress even if every worker is busy with another caller's job
+//!   (or the pool is shutting down), and the fast path for a 2-chunk
+//!   job is "caller takes one, first awake worker takes the other".
+//! * Chunk *contents* are fixed by the submitting `Engine` (contiguous
+//!   index ranges); workers only race on **which** chunk they claim.
+//!   Each chunk writes results into its own pre-allocated slot, and the
+//!   caller reduces the slots in chunk order after [`Job::wait`], so
+//!   execution order never leaks into results — the pool preserves the
+//!   engine's bit-identical-to-sequential guarantee.
+//! * A panic inside a chunk is caught on the worker, parked in the job,
+//!   and **resumed on the caller** once the job has fully drained. The
+//!   worker survives and the pool keeps serving subsequent calls (no
+//!   poisoning — pinned by `tests/engine_equivalence.rs`).
+//! * [`shutdown`] drains the pool (workers exit, the global handle
+//!   resets); the next parallel dispatch re-initializes it. In-flight
+//!   callers are never stranded: they drain their own jobs.
+//!
+//! # Why the lifetime erasure is sound
+//!
+//! A job's closure borrows the caller's stack (`thread::scope`-style,
+//! no `'static` bound). The raw pointer in the descriptor erases that
+//! lifetime, which is sound because (a) [`dispatch`] does not return
+//! until every chunk has completed, so the borrow outlives every
+//! dereference, and (b) a worker only dereferences the pointer for
+//! chunk indices it claimed *below* `chunks`, and all claims happen
+//! before the caller's completion latch releases.
+//!
+//! Memory visibility: the job travels caller → worker through the pool
+//! mutex (queue push / queue pop), and results travel worker → caller
+//! through the job's state mutex (chunk-done increment / completion
+//! wait), so every side effect of a chunk happens-before the caller's
+//! return from [`dispatch`].
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+/// Hard cap on pool size: above this, extra requested helpers just
+/// share the existing workers. Far beyond any sane `Engine::auto` and
+/// merely a guard against `Engine::with_threads(huge)`.
+pub const MAX_WORKERS: usize = 512;
+
+/// Lifetime-erased chunk runner. Only dereferenced for claimed chunk
+/// indices while the submitting caller is blocked in [`Job::wait`].
+struct RunPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (it is built from `&(dyn Fn + Sync)`)
+// and the pointer is only dereferenced under the liveness protocol in
+// the module docs.
+unsafe impl Send for RunPtr {}
+unsafe impl Sync for RunPtr {}
+
+/// One dispatched call: closure pointer, chunk-claim counter, and the
+/// completion latch the caller blocks on.
+struct Job {
+    run: RunPtr,
+    chunks: usize,
+    /// Next unclaimed chunk index (claims may exceed `chunks`; a claim
+    /// `>= chunks` means "nothing left for you").
+    next: AtomicUsize,
+    state: Mutex<JobState>,
+    done_cv: Condvar,
+}
+
+struct JobState {
+    done: usize,
+    /// First panic payload out of any chunk, re-raised on the caller.
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Job {
+    /// # Safety
+    ///
+    /// The caller must keep `run` alive (not return / not drop the
+    /// closure) until [`Job::wait`] has returned.
+    #[allow(clippy::transmutes_expressible_as_ptr_casts)]
+    unsafe fn new(run: &(dyn Fn(usize) + Sync), chunks: usize) -> Arc<Job> {
+        let run = RunPtr(std::mem::transmute::<
+            &(dyn Fn(usize) + Sync),
+            *const (dyn Fn(usize) + Sync + 'static),
+        >(run));
+        Arc::new(Job {
+            run,
+            chunks,
+            next: AtomicUsize::new(0),
+            state: Mutex::new(JobState { done: 0, panic: None }),
+            done_cv: Condvar::new(),
+        })
+    }
+
+    /// Claim and run chunks until none are left. Called by workers and
+    /// by the submitting caller alike; panics in the closure are caught
+    /// and parked so the claimer (possibly a pool worker) survives.
+    fn help(&self) {
+        loop {
+            let ci = self.next.fetch_add(1, Ordering::Relaxed);
+            if ci >= self.chunks {
+                return;
+            }
+            // SAFETY: ci < chunks, so the caller is still blocked in
+            // `wait` and the closure borrow is alive (module docs).
+            let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*self.run.0)(ci) }));
+            let mut st = self.state.lock().unwrap();
+            if let Err(payload) = result {
+                if st.panic.is_none() {
+                    st.panic = Some(payload);
+                }
+            }
+            st.done += 1;
+            if st.done == self.chunks {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Every chunk claimed (not necessarily finished)? Workers use this
+    /// to drop drained jobs off the queue front.
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.chunks
+    }
+
+    /// Block until every chunk has finished, then re-raise the first
+    /// chunk panic (if any) on this thread.
+    fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.done < self.chunks {
+            st = self.done_cv.wait(st).unwrap();
+        }
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+struct Pool {
+    shared: Mutex<Shared>,
+    /// Workers park here; [`shutdown`] also waits here for the worker
+    /// count to reach zero.
+    work_cv: Condvar,
+}
+
+struct Shared {
+    queue: VecDeque<Arc<Job>>,
+    workers: usize,
+    /// Workers currently inside [`Job::help`]. `workers - busy` are
+    /// available (parked, or in transit back to the queue check) —
+    /// the growth heuristic in [`Pool::submit`] keys off this so
+    /// concurrent callers each get their own helpers while
+    /// back-to-back calls from one caller reuse the same workers.
+    busy: usize,
+    shutting_down: bool,
+}
+
+impl Pool {
+    fn new() -> Arc<Pool> {
+        Arc::new(Pool {
+            shared: Mutex::new(Shared {
+                queue: VecDeque::new(),
+                workers: 0,
+                busy: 0,
+                shutting_down: false,
+            }),
+            work_cv: Condvar::new(),
+        })
+    }
+
+    /// Queue `job`, growing the pool to however many workers the job
+    /// can actually use (capped). On a pool already shutting down this
+    /// is a no-op: the submitting caller drains the job itself via
+    /// [`Job::help`].
+    fn submit(self: &Arc<Pool>, job: Arc<Job>, helpers: usize) {
+        let mut sh = self.shared.lock().unwrap();
+        if sh.shutting_down {
+            return;
+        }
+        // at most `chunks - 1` workers can usefully serve this job (the
+        // caller claims chunks itself), and only the shortfall against
+        // currently-available workers needs spawning: a 2-chunk job on
+        // a 64-thread engine grows/wakes one worker, not 63;
+        // back-to-back calls from one caller reuse the same workers;
+        // and a second concurrent caller (whose rival's workers are all
+        // `busy`) grows its own helpers instead of sharing an
+        // under-provisioned pool.
+        let useful = helpers.min(job.chunks.saturating_sub(1));
+        let available = sh.workers - sh.busy;
+        let mut grow = useful.saturating_sub(available);
+        // `busy` can transiently over-count: a worker that just ran a
+        // job's last chunk (caller already released) stays "busy" until
+        // it re-acquires this mutex. The demand-justified cap below
+        // (`busy + useful` total workers) bounds the resulting
+        // over-spawn to that stale count, and extra workers park and
+        // raise `available` for every later submit, so growth stops
+        // instead of ratcheting.
+        let cap = (sh.busy + useful).min(MAX_WORKERS);
+        while grow > 0 && sh.workers < cap {
+            let pool = Arc::clone(self);
+            let spawned = std::thread::Builder::new()
+                .name("kermit-engine".into())
+                .spawn(move || worker_loop(&pool));
+            match spawned {
+                Ok(_) => {
+                    sh.workers += 1;
+                    grow -= 1;
+                }
+                // transient spawn failure (thread limit, OOM): degrade
+                // to however many workers exist — the caller and the
+                // surviving workers still drain every job, and a later
+                // submit retries the growth. Panicking here would
+                // poison the process-wide pool mutex forever.
+                Err(_) => break,
+            }
+        }
+        if sh.workers == 0 {
+            // nothing could be spawned: don't queue — no worker exists
+            // to ever pop the descriptor, and the caller drains every
+            // chunk itself anyway.
+            return;
+        }
+        // prune drained descriptors here too, not just in worker_loop:
+        // with every worker pinned inside a long chunk, a caller
+        // looping tiny self-drained dispatches would otherwise grow the
+        // queue without bound. Retain (not front-only pruning) because
+        // a long-running unexhausted front job would shield thousands
+        // of dead descriptors queued behind it. An exhausted job is
+        // always safe to drop: its submitter holds its own Arc and its
+        // own claim loop.
+        sh.queue.retain(|j| !j.exhausted());
+        sh.queue.push_back(job);
+        // wake only as many workers as can usefully claim a chunk.
+        // Under-waking can't strand the job: busy workers re-check the
+        // queue between jobs, and the caller always drains its own.
+        for _ in 0..useful.min(sh.workers - sh.busy) {
+            self.work_cv.notify_one();
+        }
+    }
+}
+
+fn worker_loop(pool: &Pool) {
+    let mut sh = pool.shared.lock().unwrap();
+    loop {
+        if sh.shutting_down {
+            sh.workers -= 1;
+            // wake the shutdown waiter (and fellow workers) so the
+            // count re-check runs
+            pool.work_cv.notify_all();
+            return;
+        }
+        // drop fully-claimed jobs off the front so later callers'
+        // jobs become visible
+        while sh.queue.front().is_some_and(|j| j.exhausted()) {
+            sh.queue.pop_front();
+        }
+        match sh.queue.front().cloned() {
+            Some(job) => {
+                sh.busy += 1;
+                drop(sh);
+                job.help();
+                sh = pool.shared.lock().unwrap();
+                sh.busy -= 1;
+            }
+            None => sh = pool.work_cv.wait(sh).unwrap(),
+        }
+    }
+}
+
+/// The process-wide pool handle. `None` until the first parallel
+/// dispatch (lazy start) and after [`shutdown`]. An `RwLock` (not a
+/// `Mutex`) so the many-small-dispatches hot path only ever takes the
+/// read lock once the pool exists; the write lock is limited to lazy
+/// init and [`shutdown`]. (An `OnceLock` can't give the reset-on-
+/// shutdown semantics.)
+static GLOBAL: RwLock<Option<Arc<Pool>>> = RwLock::new(None);
+
+fn handle() -> Arc<Pool> {
+    if let Some(p) = GLOBAL.read().unwrap().as_ref() {
+        return Arc::clone(p);
+    }
+    let mut g = GLOBAL.write().unwrap();
+    Arc::clone(g.get_or_insert_with(Pool::new))
+}
+
+/// Run `run(ci)` for every chunk index in `0..chunks`, the calling
+/// thread claiming chunks alongside up to `helpers` pool workers.
+/// Blocks until every chunk has finished; the first panic out of any
+/// chunk resumes on the caller after the job has fully drained (the
+/// pool itself is never poisoned).
+///
+/// With `helpers == 0` or a single chunk the call runs entirely inline
+/// — no queue traffic, no wakeups.
+pub(crate) fn dispatch(chunks: usize, helpers: usize, run: &(dyn Fn(usize) + Sync)) {
+    if chunks == 0 {
+        return;
+    }
+    if helpers == 0 || chunks == 1 {
+        for ci in 0..chunks {
+            run(ci);
+        }
+        return;
+    }
+    // SAFETY: `job.wait()` below blocks this frame until every chunk
+    // has completed, so `run` outlives every dereference of the erased
+    // pointer.
+    let job = unsafe { Job::new(run, chunks) };
+    handle().submit(Arc::clone(&job), helpers);
+    job.help();
+    job.wait();
+}
+
+/// Tear the pool down: workers exit, the global handle resets, and the
+/// next parallel dispatch lazily re-initializes a fresh pool. In-flight
+/// jobs are drained by their submitting callers (which always hold a
+/// claim loop of their own), so this never strands a caller — but it
+/// does busy-drain through them, so prefer calling it at quiesce points
+/// (process teardown, between test cases).
+pub fn shutdown() {
+    let pool = GLOBAL.write().unwrap().take();
+    let Some(pool) = pool else { return };
+    let mut sh = pool.shared.lock().unwrap();
+    sh.shutting_down = true;
+    pool.work_cv.notify_all();
+    while sh.workers > 0 {
+        sh = pool.work_cv.wait(sh).unwrap();
+    }
+}
+
+/// Number of live pool workers (0 before the first parallel dispatch
+/// and after [`shutdown`]). Exposed for tests and bench metadata.
+pub fn worker_count() -> usize {
+    GLOBAL
+        .read()
+        .unwrap()
+        .as_ref()
+        .map_or(0, |p| p.shared.lock().unwrap().workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn dispatch_runs_every_chunk_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..23).map(|_| AtomicU64::new(0)).collect();
+        dispatch(23, 3, &|ci| {
+            hits[ci].fetch_add(1, Ordering::Relaxed);
+        });
+        for (ci, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {ci}");
+        }
+    }
+
+    #[test]
+    fn zero_helpers_runs_inline() {
+        // the inline path never touches the global pool (no equality
+        // assertion on worker_count here: sibling tests grow the pool
+        // concurrently)
+        let count = AtomicU64::new(0);
+        dispatch(5, 0, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn pool_workers_are_reused_across_calls() {
+        for _ in 0..200 {
+            let count = AtomicU64::new(0);
+            dispatch(4, 2, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 4);
+        }
+        // lazily started, then persistent: the 200 calls share workers
+        assert!(worker_count() >= 1, "no persistent worker left");
+        assert!(worker_count() <= MAX_WORKERS);
+    }
+}

@@ -45,7 +45,8 @@ impl RandomForest {
     /// Engine-parallel [`RandomForest::fit`]: the per-tree RNG streams
     /// are forked from `rng` sequentially (same draw order as the
     /// sequential path), then bootstrap + CART fitting fan out over the
-    /// engine's worker pool — each tree owns its forked stream, so the
+    /// engine's persistent worker pool — each tree owns its forked
+    /// stream, so the
     /// forest is bit-identical to the sequential fit for any thread
     /// count. Trees are heavy work items, so parallelism engages from
     /// two trees up regardless of the engine's row-loop threshold.

@@ -1,5 +1,9 @@
 //! k-nearest-neighbours comparator (Fig 6). Standardised features in a
-//! contiguous `Matrix`, euclidean metric, distance-weighted vote.
+//! contiguous `Matrix`, euclidean metric, distance-weighted vote. Batch
+//! prediction inherits the engine-parallel `predict_batch_with` default
+//! (persistent pool) from [`Classifier`]; each query row funnels
+//! through `linalg::sq_dist`, so kNN rides whatever SIMD tier the
+//! build compiled in.
 
 use super::dataset::Dataset;
 use super::Classifier;

@@ -34,10 +34,13 @@ pub trait Classifier: Send + Sync {
     }
 
     /// Engine-parallel [`Classifier::predict_batch`]: rows fan out over
-    /// the engine's worker pool (every classifier is `Sync`, and each
-    /// prediction is independent), producing exactly the labels of the
-    /// sequential path. Small batches fall back to a single-threaded
-    /// loop per the engine's threshold.
+    /// the engine's persistent worker pool (every classifier is `Sync`,
+    /// and each prediction is independent), producing exactly the
+    /// labels of the sequential path. Small batches fall back to a
+    /// single-threaded loop per the engine's threshold. No forced chunk
+    /// alignment here: one prediction (a tree ensemble / neighbour
+    /// scan) dwarfs a cache-line ping, and heavy items want the full
+    /// `threads`-way split — callers can still opt in via their engine.
     fn predict_batch_with(&self, engine: Engine, xs: &Matrix) -> Vec<u32> {
         let mut out = vec![0u32; xs.n_rows()];
         engine.for_rows(&mut out, 1, |start, chunk| {

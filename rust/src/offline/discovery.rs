@@ -30,9 +30,10 @@ pub struct DiscoveryConfig {
     pub drift_epsilon: f64,
     /// Compute engine for the off-line batch work (DBSCAN neighbourhood
     /// queries here, plus classifier retraining in the coordinator).
-    /// Parallel engines produce bit-identical discovery results; the
+    /// Parallel engines dispatch onto the lazily-started persistent
+    /// worker pool and produce bit-identical discovery results; the
     /// default stays single-threaded so plain constructions add no
-    /// threading.
+    /// threading (and never start the pool).
     pub engine: Engine,
 }
 

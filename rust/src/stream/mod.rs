@@ -11,11 +11,12 @@
 //!                        │                ├─ online::OnlinePipeline
 //!                        │                └─ per-tenant ContextStream
 //!                        └─ tick(): drains every shard's closed windows
-//!                           through `linalg::Engine` — shards fan out
-//!                           over the worker pool, one shard per worker
-//!                           at a time, so the observe path scales with
-//!                           tenant count while each shard's state stays
-//!                           single-writer.
+//!                           through `linalg::Engine` — busy shards fan
+//!                           out over the persistent worker pool when
+//!                           the `TickDispatch` policy allows, one shard
+//!                           per worker at a time, so the observe path
+//!                           scales with tenant count while each shard's
+//!                           state stays single-writer.
 //! ```
 //!
 //! Because every shard is touched by exactly one worker per tick and
@@ -28,5 +29,5 @@
 pub mod router;
 pub mod tenant;
 
-pub use router::{RouterConfig, StreamRouter, TenantShard};
+pub use router::{RouterConfig, StreamRouter, TenantShard, TickDispatch};
 pub use tenant::{interleave_round_robin, TenantId, TenantSample};

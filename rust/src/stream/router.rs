@@ -12,13 +12,18 @@
 //! replaying that tenant's samples alone through a sequential
 //! [`OnlinePipeline`]. `tests/stream_equivalence.rs` pins this.
 //!
-//! # Engine threshold
+//! # Dispatch policy
 //!
 //! One work item here is a whole shard's pending batch (tens of windows,
 //! each a detector + classifier + predictor pass), not a 32-wide row —
-//! far above the engine's default per-row spawn-amortization threshold.
-//! The router therefore lowers `min_items` to the tenant count so a
-//! 4-tenant tick already fans out (see [`Engine::with_min_items`]).
+//! far above the engine's default per-row threshold, so the engine's
+//! generic `min_items` heuristic is the wrong knob. The router instead
+//! carries an explicit per-tick policy ([`TickDispatch`]): fan out
+//! across the persistent pool only when at least `min_tenants` shards
+//! actually have pending windows (idle shards are skipped entirely).
+//! A 1-tenant router therefore **never** fans out — there is nothing to
+//! overlap with, and the pool wakeup would be pure overhead (pinned by
+//! a test).
 
 use super::tenant::{TenantId, TenantSample};
 use crate::features::ObservationWindow;
@@ -31,6 +36,25 @@ use crate::workloadgen::Sample;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+/// When does a router tick fan shards out across the engine pool
+/// instead of draining them inline on the calling thread?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TickDispatch {
+    /// Always drain shards inline, whatever the engine says.
+    Sequential,
+    /// Fan out when the engine is multi-threaded and at least
+    /// `min_tenants` shards have pending windows this tick. Clamped to
+    /// ≥ 2: a single busy shard is one indivisible work item, so
+    /// dispatching it to the pool buys nothing and costs a wakeup.
+    Parallel { min_tenants: usize },
+}
+
+impl Default for TickDispatch {
+    fn default() -> Self {
+        TickDispatch::Parallel { min_tenants: 2 }
+    }
+}
+
 /// Router configuration.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
@@ -40,6 +64,8 @@ pub struct RouterConfig {
     /// Worker pool the per-tick observe pass fans out on. Sequential by
     /// default: plain constructions add no threading.
     pub engine: Engine,
+    /// Explicit per-tick fan-out policy (see [`TickDispatch`]).
+    pub dispatch: TickDispatch,
     /// Per-shard cap on the context log and the observed-window backlog
     /// (the memory bound for long-running deployments: on overflow the
     /// oldest half is dropped, like the pipeline's history cap).
@@ -54,6 +80,7 @@ impl Default for RouterConfig {
             monitor: MonitorConfig::default(),
             context_cap: 64,
             engine: Engine::sequential(),
+            dispatch: TickDispatch::default(),
             shard_log_cap: 65_536,
         }
     }
@@ -186,16 +213,26 @@ impl StreamRouter {
     }
 
     /// One router tick: drain every shard's pending windows through its
-    /// pipeline, shards dispatched across the engine's workers (see the
-    /// module docs for why this is race-free and bit-identical to the
-    /// sequential replay). Returns the number of windows observed.
+    /// pipeline. Shards with pending work are dispatched across the
+    /// persistent engine pool when the [`TickDispatch`] policy says so,
+    /// and drained inline otherwise (see the module docs for why the
+    /// parallel path is race-free and bit-identical to the sequential
+    /// replay). Returns the number of windows observed.
     pub fn tick(&mut self) -> usize {
-        let engine = self
-            .config
-            .engine
-            .with_min_items(self.shards.len().max(1));
-        let mut shards: Vec<&mut TenantShard> =
-            self.shards.values_mut().collect();
+        let busy =
+            self.shards.values().filter(|s| !s.pending.is_empty()).count();
+        if !self.fan_out_for(busy) {
+            return self.shards.values_mut().map(|s| s.observe_pending()).sum();
+        }
+        // one chunk item = one busy shard's whole pending batch: heavy,
+        // pointer-sized items, so no min-items heuristic or cache
+        // alignment — dispatch each busy shard as its own work item
+        let engine = self.config.engine.with_min_items(1);
+        let mut shards: Vec<&mut TenantShard> = self
+            .shards
+            .values_mut()
+            .filter(|s| !s.pending.is_empty())
+            .collect();
         let counts = engine.for_rows_map(&mut shards, 1, |_, chunk| {
             let mut n = 0usize;
             for shard in chunk.iter_mut() {
@@ -204,6 +241,24 @@ impl StreamRouter {
             n
         });
         counts.into_iter().sum()
+    }
+
+    /// Would a tick right now fan out across the pool? (The explicit
+    /// dispatch policy made observable so tests can pin it.)
+    pub fn would_fan_out(&self) -> bool {
+        let busy =
+            self.shards.values().filter(|s| !s.pending.is_empty()).count();
+        self.fan_out_for(busy)
+    }
+
+    fn fan_out_for(&self, busy_shards: usize) -> bool {
+        match self.config.dispatch {
+            TickDispatch::Sequential => false,
+            TickDispatch::Parallel { min_tenants } => {
+                self.config.engine.threads() > 1
+                    && busy_shards >= min_tenants.max(2)
+            }
+        }
     }
 
     /// Take every shard's observed-window backlog (cleared on return):
@@ -347,6 +402,120 @@ mod tests {
         );
         let taken = router.take_observed();
         assert!(taken[0].1.len() <= 16, "observed {}", taken[0].1.len());
+    }
+
+    #[test]
+    fn single_tenant_router_never_fans_out() {
+        // the explicit dispatch policy replaces the old "min_items
+        // lowered to tenant count" hack: one busy shard is one
+        // indivisible work item, so even an 8-thread engine must not
+        // dispatch it to the pool
+        let cfg = RouterConfig {
+            monitor: MonitorConfig { window_size: 10 },
+            engine: Engine::with_threads(8),
+            ..Default::default()
+        };
+        let mut router = StreamRouter::new(cfg);
+        let tr = trace_for(5, &[1]);
+        router.ingest(TenantId(0), &tr.samples);
+        assert!(!router.would_fan_out(), "1 busy tenant fanned out");
+        let n = router.tick();
+        assert_eq!(n, tr.len() / 10, "inline tick observed everything");
+
+        // min_tenants = 1 is clamped to 2 for the same reason
+        let mut clamped = StreamRouter::new(RouterConfig {
+            monitor: MonitorConfig { window_size: 10 },
+            engine: Engine::with_threads(8),
+            dispatch: TickDispatch::Parallel { min_tenants: 1 },
+            ..Default::default()
+        });
+        clamped.ingest(TenantId(0), &tr.samples);
+        assert!(!clamped.would_fan_out(), "min_tenants=1 not clamped");
+    }
+
+    #[test]
+    fn dispatch_policy_gates_fan_out() {
+        let mk = |engine: Engine, dispatch: TickDispatch| {
+            StreamRouter::new(RouterConfig {
+                monitor: MonitorConfig { window_size: 10 },
+                engine,
+                dispatch,
+                ..Default::default()
+            })
+        };
+        let traces: Vec<_> = (0..3).map(|k| trace_for(20 + k, &[2])).collect();
+        let fill = |router: &mut StreamRouter, n: usize| {
+            for (k, tr) in traces.iter().take(n).enumerate() {
+                router.ingest(TenantId(k as u32), &tr.samples);
+            }
+        };
+
+        // Sequential policy: never, whatever the engine
+        let mut r = mk(Engine::with_threads(8), TickDispatch::Sequential);
+        fill(&mut r, 3);
+        assert!(!r.would_fan_out());
+
+        // Parallel policy counts only shards with pending windows
+        let mut r = mk(
+            Engine::with_threads(8),
+            TickDispatch::Parallel { min_tenants: 3 },
+        );
+        fill(&mut r, 2);
+        r.add_tenant(TenantId(9)); // idle shard must not count
+        assert!(!r.would_fan_out(), "2 busy < min_tenants=3");
+        fill(&mut r, 3);
+        assert!(r.would_fan_out(), "3 busy >= min_tenants=3");
+
+        // a sequential engine never fans out regardless of policy
+        let mut r = mk(
+            Engine::sequential(),
+            TickDispatch::Parallel { min_tenants: 2 },
+        );
+        fill(&mut r, 3);
+        assert!(!r.would_fan_out());
+
+        // after a tick drains everything the router is idle again
+        let mut r = mk(
+            Engine::with_threads(4),
+            TickDispatch::Parallel { min_tenants: 2 },
+        );
+        fill(&mut r, 3);
+        assert!(r.would_fan_out());
+        r.tick();
+        assert!(!r.would_fan_out(), "no pending work left");
+    }
+
+    #[test]
+    fn concurrent_routers_share_the_pool_and_stay_exact() {
+        // two routers ticking simultaneously from two caller threads:
+        // both dispatch jobs into the same persistent pool, and each
+        // must still produce exactly the solo sequential result
+        let traces: Vec<_> = (0..4)
+            .map(|k| trace_for(40 + k, &[k as u32 % 6, (k as u32 + 2) % 6]))
+            .collect();
+        let run = |engine: Engine| -> Vec<Vec<WorkloadContext>> {
+            let mut router = StreamRouter::new(RouterConfig {
+                monitor: MonitorConfig { window_size: 12 },
+                engine,
+                ..Default::default()
+            });
+            for (k, tr) in traces.iter().enumerate() {
+                router.ingest(TenantId(k as u32), &tr.samples);
+            }
+            router.tick();
+            (0..traces.len())
+                .map(|k| router.shard(TenantId(k as u32)).unwrap().contexts.clone())
+                .collect()
+        };
+        let want = run(Engine::sequential());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| s.spawn(|| run(Engine::with_threads(4))))
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), want, "concurrent router diverged");
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,26 @@
+//! `Engine::auto()`'s `KERMIT_THREADS` override, in its own
+//! integration-test binary (own process): `std::env::set_var` racing a
+//! concurrent `getenv` from another thread is undefined behavior on
+//! glibc, so the single test below must be the only code in this
+//! process touching the environment while it runs. Do not add other
+//! tests to this file.
+
+use kermit::linalg::engine::Engine;
+
+#[test]
+fn auto_honors_kermit_threads_env() {
+    let host =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // start from a clean slate: the developer's shell (or a job-wide CI
+    // export) may legitimately have the knob set
+    std::env::remove_var("KERMIT_THREADS");
+    assert_eq!(Engine::auto().threads(), host, "no override set");
+    std::env::set_var("KERMIT_THREADS", "3");
+    assert_eq!(Engine::auto().threads(), 3);
+    std::env::set_var("KERMIT_THREADS", "0");
+    assert_eq!(Engine::auto().threads(), 1, "clamped to >= 1");
+    std::env::set_var("KERMIT_THREADS", "not-a-number");
+    assert_eq!(Engine::auto().threads(), host, "unparsable falls back");
+    std::env::remove_var("KERMIT_THREADS");
+    assert_eq!(Engine::auto().threads(), host, "unset falls back");
+}

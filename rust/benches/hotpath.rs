@@ -382,6 +382,65 @@ fn main() {
     run_router(Engine::sequential(), "observe_multitenant_seq");
     run_router(eng, "observe_multitenant_engine");
 
+    // --- plugin decision micro: Algorithm 1's steady-state path (the
+    // cache hit every recurring job takes) — one context read + one
+    // read-locked DB lookup; must stay far below the observe path
+    let decide_db = {
+        let mut db = kermit::knowledge::WorkloadDb::new();
+        let rows: Vec<Vec<f64>> = vec![vec![1.0; 4], vec![1.1; 4]];
+        let label = db.insert_new(
+            kermit::knowledge::Characterization::from_vec_rows(&rows),
+            vec![1.05; 4],
+            2,
+            false,
+        );
+        db.set_optimal_config(
+            label,
+            kermit::simcluster::default_config_index(),
+        );
+        (Arc::new(std::sync::RwLock::new(db)), label)
+    };
+    let (decide_db, decide_label) = decide_db;
+    let decide_ctx = Arc::new(Mutex::new(ContextStream::new(16)));
+    let mut plugin =
+        kermit::online::KermitPlugin::new(decide_db, decide_ctx);
+    let tdec = bench(100, 5000, || {
+        std::hint::black_box(
+            plugin.choose_config_for_label(decide_label),
+        );
+    });
+    t.timed_row(
+        &[
+            "plugin_decision".into(),
+            tdec.per_iter_str(),
+            format!("{:.1}M decisions/s", 1e9 / tdec.median_ns / 1e6),
+        ],
+        tdec,
+    );
+
+    // --- tuning plane end-to-end: K=4 tenants' job streams through the
+    // shared simcluster with per-tenant plug-ins, adaptive cadence and
+    // the consolidated off-line cycle — the closed-loop macro stage
+    let tp_tenants = 4usize;
+    let tp_jobs = 6usize;
+    let tp_scheds = kermit::experiments::tuning_plane::schedules(
+        17, tp_tenants, tp_jobs, &[0, 5],
+    );
+    let ttp = bench(1, 3, || {
+        std::hint::black_box(kermit::experiments::tuning_plane::run_shared(
+            17, &tp_scheds, 8,
+        ));
+    });
+    t.row(&[
+        format!("tuning_plane_k4 ({tp_tenants} tenants x {tp_jobs} jobs)"),
+        ttp.per_iter_str(),
+        format!(
+            "{:.1} jobs/s",
+            (tp_tenants * tp_jobs) as f64 / (ttp.median_ns / 1e9)
+        ),
+    ]);
+    t.metric("tuning_plane_k4", ttp.median_ns);
+
     t.print();
 
     // --- PJRT artifact execution costs
@@ -453,6 +512,8 @@ fn main() {
         "runtime_artifacts_feature",
         if cfg!(feature = "runtime-artifacts") { "on" } else { "off" },
     );
+    t.meta("tuning_plane_tenants", &tp_tenants.to_string());
+    t.meta("tuning_plane_jobs", &tp_jobs.to_string());
 
     let out = std::path::Path::new("BENCH_hotpath.json");
     match t.write_json(out) {

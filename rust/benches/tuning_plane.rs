@@ -1,0 +1,73 @@
+//! Tuning-plane experiment runner: K tenants' job streams on one
+//! simulated cluster with the full per-tenant MAPE-K loop closed, vs
+//! the vendor-default baseline and vs K independent single-tenant
+//! loops (probes saved).
+//!
+//! With `KERMIT_SMOKE=1` the run shrinks to toy sizes and asserts the
+//! core invariants — the blocking CI smoke job for the tuning plane.
+
+use kermit::benchkit::Table;
+use kermit::experiments::tuning_plane;
+
+fn main() {
+    let smoke = matches!(
+        std::env::var("KERMIT_SMOKE").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    );
+    let (tenants_list, jobs): (&[usize], usize) =
+        if smoke { (&[4], 12) } else { (&[2, 4, 8], 24) };
+
+    println!("\n== Per-tenant tuning plane (K tenants, shared cluster) ==\n");
+    let mut t = Table::new(&[
+        "tenants",
+        "tuned makespan(s)",
+        "default makespan(s)",
+        "speedup",
+        "cache-hit",
+        "x-tenant hits",
+        "probes shared",
+        "probes indep",
+        "saved/tenant",
+    ]);
+    for &k in tenants_list {
+        let t0 = std::time::Instant::now();
+        let s = tuning_plane::run(11, k, jobs);
+        let wall = t0.elapsed();
+        t.row(&[
+            format!("{k}"),
+            format!("{:.0}", s.tuned_makespan),
+            format!("{:.0}", s.default_makespan),
+            format!("{:.2}x", s.speedup),
+            format!("{:.0}%", 100.0 * s.cache_hit_ratio),
+            format!("{}", s.cross_tenant_hits),
+            format!("{}", s.probes_shared),
+            format!("{}", s.probes_independent),
+            format!("{:.1}", s.probes_saved_per_tenant()),
+        ]);
+        println!(
+            "k={k}: {} workloads known, {} offline cycles, peak \
+             concurrency {}, wall {:.1}s",
+            s.workloads_known,
+            s.offline_runs,
+            s.peak_concurrency,
+            wall.as_secs_f64()
+        );
+        if smoke {
+            // blocking CI invariants (deterministic seeds)
+            assert!(s.speedup > 1.0, "tuned lost to default: {s:?}");
+            assert!(
+                s.cross_tenant_hits >= 1,
+                "no cross-tenant optimum reuse: {s:?}"
+            );
+            assert!(
+                s.probes_shared < s.probes_independent,
+                "sharing saved no probes: {s:?}"
+            );
+            assert!(s.peak_concurrency >= 2, "streams never overlapped");
+        }
+    }
+    t.print();
+    if smoke {
+        println!("\ntuning-plane smoke OK");
+    }
+}

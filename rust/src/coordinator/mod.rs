@@ -11,20 +11,19 @@
 
 pub mod multi;
 
+pub mod offline_cycle;
+
 pub mod report;
 
 use crate::clustering::{DistanceProvider, NativeDistance};
-use crate::features::{zero_analytic, ObservationWindow};
+use crate::features::ObservationWindow;
 use crate::knowledge::{shared_db, SharedWorkloadDb};
-use crate::linalg::Matrix;
-use crate::ml::forest::RandomForest;
-use crate::ml::Dataset;
 use crate::monitor::{aggregate_samples, MonitorConfig};
-use crate::offline::zsl::synthesize;
-use crate::offline::{discover, DiscoveryConfig, TrainingConfig};
+use crate::offline::{DiscoveryConfig, TrainingConfig};
 use crate::online::classifier::GatedForestClassifier;
 use crate::online::{
-    ChoiceKind, ContextStream, KermitPlugin, OnlinePipeline, UNKNOWN,
+    ChoiceKind, ContextStream, ForestWindowClassifier, KermitPlugin,
+    OnlinePipeline, UNKNOWN,
 };
 use std::collections::BTreeMap;
 use crate::simcluster::engine::EngineConfig;
@@ -33,7 +32,8 @@ use crate::simcluster::JobSpec;
 use crate::util::rng::Rng;
 use crate::workloadgen::{catalog, num_pure_classes, Sample, TruthTag};
 use crate::features::NUM_FEATURES;
-pub use multi::{MultiTenantCoordinator, MultiTenantReport};
+pub use multi::{CadencePolicy, MultiTenantCoordinator, MultiTenantReport};
+pub use offline_cycle::{CycleModels, CycleOutcome, OfflineCycle};
 pub use report::{JobOutcome, RunReport};
 use std::sync::{Arc, Mutex};
 
@@ -88,30 +88,13 @@ pub struct Coordinator {
     rng: Rng,
     /// distance provider for discovery (native, or the PJRT artifact)
     dist: Box<dyn DistanceProvider>,
-    /// Cumulative training store (the analytics zone): per label, the
-    /// labelled analytic windows accumulated across all discovery runs,
-    /// in contiguous row storage. Without it, a forest retrained on just
-    /// the latest batch would forget every class absent from that batch.
-    training_store: BTreeMap<u32, Matrix>,
-    /// cap per label (memory bound; oldest dropped first)
-    store_cap: usize,
-    /// Off-line ticks since the classifier was last retrained.
-    ticks_since_train: usize,
+    /// The consolidated off-line analyze/train loop state (training
+    /// stores, retrain gate, transition registry) — shared routine with
+    /// the multi-tenant coordinator; see [`offline_cycle::OfflineCycle`].
+    pub cycle: OfflineCycle,
     /// Active signature drift per ground-truth class (systematic mean
     /// shift applied to emitted metrics; see [`Coordinator::inject_drift`]).
     signature_shift: BTreeMap<u32, crate::features::FeatureVec>,
-    /// Transition-type label registry ((from, to) -> generated id),
-    /// persistent across off-line runs so ids stay stable.
-    transition_registry: BTreeMap<(u32, u32), u32>,
-    /// Cumulative transition training examples: rate-of-change rows in
-    /// contiguous storage, with the label per row alongside.
-    transition_rows: Matrix,
-    transition_row_labels: Vec<u32>,
-    /// §Perf optimisation: retrain only when discovery changes the label
-    /// set (new/drifted labels) or every `retrain_every` ticks as a
-    /// refresher — retraining on every tick dominated end-to-end
-    /// wall-clock (see EXPERIMENTS.md §Perf iteration 1).
-    pub retrain_every: usize,
 }
 
 impl Coordinator {
@@ -155,14 +138,8 @@ impl Coordinator {
             window_index: 0,
             rng,
             dist,
-            training_store: BTreeMap::new(),
-            store_cap: 400,
-            ticks_since_train: 0,
-            retrain_every: 5,
+            cycle: OfflineCycle::new(400, 5),
             signature_shift: BTreeMap::new(),
-            transition_registry: BTreeMap::new(),
-            transition_rows: Matrix::new(),
-            transition_row_labels: Vec::new(),
         }
     }
 
@@ -181,8 +158,11 @@ impl Coordinator {
     }
 
     /// Stream raw samples through the monitor + on-line pipeline;
-    /// returns the label of the final context.
-    fn ingest(&mut self, samples: &[Sample]) -> u32 {
+    /// returns the label of the final known context (UNKNOWN when no
+    /// window classified). Public so external drivers (the tuning
+    /// plane's parity tests, replay tools) can feed a recorded stream
+    /// without going through `run_schedule`'s own sample synthesis.
+    pub fn ingest(&mut self, samples: &[Sample]) -> u32 {
         let windows = aggregate_samples(samples, &self.config.monitor);
         let mut label = UNKNOWN;
         for mut w in windows {
@@ -202,116 +182,37 @@ impl Coordinator {
         label
     }
 
-    /// The off-line sub-system tick: Algorithm 2 (discovery + drift),
-    /// training-store accumulation, ZSL synthesis, and classifier
-    /// retraining on the *cumulative* labelled set.
+    /// The off-line sub-system tick: the consolidated cycle (Algorithm 2
+    /// discovery + drift, store accumulation, retrain gating, ZSL
+    /// synthesis, classifier + transition-classifier training — see
+    /// [`OfflineCycle::run`]) followed by model installation on this
+    /// coordinator's single pipeline.
     pub fn run_offline(&mut self) {
         self.windows_since_offline = 0;
         if self.backlog.len() < 8 {
             return;
         }
-        let mut db = self.db.write().unwrap();
-        let report = discover(
+        let outcome = self.cycle.run(
             &self.backlog,
-            &mut db,
-            &self.config.discovery,
+            &self.db,
+            &self.config,
+            &mut self.rng,
             self.dist.as_ref(),
         );
-
-        // accumulate the analytics-zone training store (fixed-width
-        // analytic rows appended straight into contiguous storage)
-        let mut analytic_buf = zero_analytic();
-        for (w, label) in self.backlog.iter().zip(&report.window_labels) {
-            if let Some(l) = label {
-                let rows = self.training_store.entry(*l).or_default();
-                w.fill_analytic(&mut analytic_buf);
-                rows.push_row(&analytic_buf);
-                if rows.n_rows() > self.store_cap {
-                    let excess = rows.n_rows() - self.store_cap;
-                    rows.remove_first_rows(excess);
-                }
-            }
-        }
-
-        // retrain gating (§Perf): skip the expensive forest refit when
-        // nothing about the label set changed and the refresher interval
-        // hasn't elapsed
-        self.ticks_since_train += 1;
-        let label_set_changed = report
-            .outcomes
-            .iter()
-            .any(|o| !matches!(o, crate::offline::ClusterOutcome::Matched { .. }));
-        let must_train = label_set_changed
-            || self.ticks_since_train >= self.retrain_every;
-
-        // accumulate transition training data (rate-of-change rows per
-        // (from, to) pair — §7.2 steps 3-6)
-        let tset = crate::offline::training::transition_training_set(
-            &self.backlog,
-            &report,
-            &mut self.transition_registry,
-        );
-        for (row, label) in tset.iter() {
-            self.transition_rows.push_row(row);
-            self.transition_row_labels.push(label);
-        }
-        if self.transition_rows.n_rows() > 4 * self.store_cap {
-            let excess = self.transition_rows.n_rows() - 4 * self.store_cap;
-            self.transition_rows.remove_first_rows(excess);
-            self.transition_row_labels.drain(..excess);
-        }
-
-        if !self.training_store.is_empty() && must_train {
-            self.ticks_since_train = 0;
-            // training set = cumulative store + ZSL synthetic instances
-            let mut data = Dataset::new();
-            for (l, rows) in &self.training_store {
-                for r in rows.iter_rows() {
-                    data.push(r, *l);
-                }
-            }
-            if self.config.training.enable_zsl {
-                let synth =
-                    synthesize(&mut db, &self.config.training.zsl, &mut self.rng);
-                data.extend_from(&synth.instances);
-                // include previously synthesised classes' instances via
-                // their prototypes (regenerate a few per stored class)
-            }
-            let forest = RandomForest::fit_with(
-                &data,
-                self.config.training.forest.clone(),
-                &mut self.rng,
-                self.config.discovery.engine,
-            );
-            let classifier = GatedForestClassifier::from_db(
-                forest,
-                &db,
-                self.config.centroid_gate,
-                self.config.min_confidence,
-            );
-            drop(db);
+        if let Some(models) = outcome.models {
+            let classifier = {
+                let db = self.db.read().unwrap();
+                GatedForestClassifier::from_db(
+                    models.forest,
+                    &db,
+                    self.config.centroid_gate,
+                    self.config.min_confidence,
+                )
+            };
             self.pipeline.set_classifier(Box::new(classifier));
-
-            // TransitionClassifier: retrain alongside (needs >=2 types)
-            let types: std::collections::BTreeSet<u32> =
-                self.transition_row_labels.iter().copied().collect();
-            if types.len() >= 2 {
-                let mut td = Dataset::new();
-                for (row, &label) in self
-                    .transition_rows
-                    .iter_rows()
-                    .zip(&self.transition_row_labels)
-                {
-                    td.push(row, label);
-                }
-                let tforest = RandomForest::fit_with(
-                    &td,
-                    self.config.training.forest.clone(),
-                    &mut self.rng,
-                    self.config.discovery.engine,
-                );
+            if let Some(tforest) = models.transition_forest {
                 self.pipeline.set_transition_classifier(Box::new(
-                    crate::online::ForestWindowClassifier::new(
+                    ForestWindowClassifier::new(
                         tforest,
                         self.config.min_confidence,
                     ),

@@ -9,20 +9,34 @@
 //! Contrast with [`super::Coordinator`], which drives one stream and
 //! one plug-in through the full Algorithm 1 tuning loop: this
 //! coordinator scales the *identification* side (monitor → analyze →
-//! knowledge) to many concurrent streams. Tuning stays per-tenant — a
-//! plug-in instance per tenant can share `db` and read its tenant's
-//! context stream from the router's bus.
+//! knowledge) to many concurrent streams. Tuning is layered on top by
+//! [`crate::tuning::TuningPlane`], which owns one `KermitPlugin` per
+//! tenant sharing `db` and reading its tenant's context stream.
+//!
+//! The off-line cycle is the consolidated
+//! [`super::offline_cycle::OfflineCycle`] — the same store → gate →
+//! ZSL → retrain → transition routine the single-tenant coordinator
+//! runs, so a multi-tenant deployment anticipates hybrids and names
+//! transitions exactly like a single-tenant one (this used to be
+//! silently skipped; pinned by `tests/tuning_plane.rs`).
+//!
+//! # Cadence
+//!
+//! By default one cycle runs per `offline_interval_windows × K` union
+//! windows (amortized). [`CadencePolicy::Adaptive`] additionally
+//! triggers an early cycle when any tenant's recent UNKNOWN rate
+//! crosses a threshold — a new tenant (or a drifted signature, which
+//! also stops classifying and so shows up as UNKNOWN pressure) gets its
+//! time-to-label cut without retraining for quiet tenants.
 
+use super::offline_cycle::OfflineCycle;
 use super::CoordinatorConfig;
 use crate::clustering::{DistanceProvider, NativeDistance};
-use crate::features::{zero_analytic, ObservationWindow};
+use crate::features::ObservationWindow;
 use crate::knowledge::{shared_db, SharedWorkloadDb};
-use crate::linalg::Matrix;
 use crate::ml::forest::RandomForest;
-use crate::ml::Dataset;
-use crate::offline::{discover, ClusterOutcome};
 use crate::online::classifier::{GatedForestClassifier, WindowClassifier};
-use crate::online::UNKNOWN;
+use crate::online::{ForestWindowClassifier, PluginStats, UNKNOWN};
 use crate::stream::{
     interleave_round_robin, RouterConfig, StreamRouter, TenantId,
     TenantSample,
@@ -30,6 +44,21 @@ use crate::stream::{
 use crate::util::rng::Rng;
 use crate::workloadgen::{Sample, Trace};
 use std::collections::BTreeMap;
+
+/// When does the amortized off-line cycle run?
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CadencePolicy {
+    /// One cycle per `offline_interval_windows × K` union windows.
+    #[default]
+    FixedUnion,
+    /// The fixed union interval PLUS early triggers: any tenant with at
+    /// least `min_windows` windows observed since the last cycle whose
+    /// UNKNOWN fraction is ≥ `unknown_rate` forces a cycle now. High
+    /// UNKNOWN pressure is both the new-tenant signal and the drift
+    /// suspicion proxy (a drifted signature stops matching the
+    /// classifier's gate and degrades to UNKNOWN).
+    Adaptive { unknown_rate: f64, min_windows: usize },
+}
 
 /// Summary of one multi-tenant run.
 #[derive(Debug, Clone, Default)]
@@ -39,6 +68,10 @@ pub struct MultiTenantReport {
     pub workloads_known: usize,
     /// Per tenant: (tenant, windows with a known label, total windows).
     pub per_tenant: Vec<(TenantId, usize, usize)>,
+    /// Per-tenant Algorithm-1 decision statistics (choice-kind counts).
+    /// Empty unless a tuning plane drove plug-ins during the run — the
+    /// identification-only coordinator has no plug-ins to report on.
+    pub tenant_stats: Vec<(TenantId, PluginStats)>,
 }
 
 impl MultiTenantReport {
@@ -56,6 +89,22 @@ impl MultiTenantReport {
             known as f64 / total as f64
         }
     }
+
+    /// Cluster-wide cache-hit ratio: cache hits over all tenants'
+    /// requests pooled (0 when no plug-in stats were recorded).
+    pub fn cluster_cache_hit_ratio(&self) -> f64 {
+        let (hits, reqs) = self
+            .tenant_stats
+            .iter()
+            .fold((0usize, 0usize), |(h, r), (_, s)| {
+                (h + s.cache_hits, r + s.requests)
+            });
+        if reqs == 0 {
+            0.0
+        } else {
+            hits as f64 / reqs as f64
+        }
+    }
 }
 
 /// The assembled multi-tenant identification loop.
@@ -71,12 +120,18 @@ pub struct MultiTenantCoordinator {
     /// plateau switch) instead of a boundary at every drain interleave.
     backlogs: BTreeMap<TenantId, Vec<ObservationWindow>>,
     windows_since_offline: usize,
-    /// Cumulative per-label training store over the union stream.
-    training_store: BTreeMap<u32, Matrix>,
-    store_cap: usize,
-    ticks_since_train: usize,
-    /// Retrain cadence in off-line cycles (see `Coordinator::retrain_every`).
-    pub retrain_every: usize,
+    /// The consolidated off-line cycle state (shared routine with the
+    /// single-tenant coordinator).
+    pub cycle: OfflineCycle,
+    /// Off-line cadence policy (see [`CadencePolicy`]).
+    pub cadence: CadencePolicy,
+    /// Per-tenant (unknown, total) window counts since the last cycle —
+    /// the adaptive-cadence pressure signal.
+    since_offline: BTreeMap<TenantId, (usize, usize)>,
+    /// Per-tenant cursor over `TenantShard::contexts_published` (how
+    /// many of the shard's contexts the cadence counters have folded
+    /// in — an absolute count, immune to the capped log's truncation).
+    ctx_cursor: BTreeMap<TenantId, u64>,
     rng: Rng,
     dist: Box<dyn DistanceProvider>,
     /// The latest union-trained shared model. Kept so a tenant joining
@@ -84,9 +139,12 @@ pub struct MultiTenantCoordinator {
     /// creation — the "knowledge from tenant A immediately serves
     /// tenant B" contract must not wait for the next retrain.
     trained_forest: Option<RandomForest>,
+    /// Ditto for the transition classifier.
+    trained_transition: Option<RandomForest>,
     /// Off-line cycles executed — the amortization observable: with N
     /// tenants this grows once per `offline_interval_windows * N`
-    /// windows, not once per tenant interval.
+    /// windows (plus any adaptive early triggers), not once per tenant
+    /// interval.
     pub offline_runs: usize,
 }
 
@@ -115,13 +173,14 @@ impl MultiTenantCoordinator {
             router,
             backlogs: BTreeMap::new(),
             windows_since_offline: 0,
-            training_store: BTreeMap::new(),
-            store_cap: 400,
-            ticks_since_train: 0,
-            retrain_every: 5,
+            cycle: OfflineCycle::new(400, 5),
+            cadence: CadencePolicy::default(),
+            since_offline: BTreeMap::new(),
+            ctx_cursor: BTreeMap::new(),
             rng,
             dist,
             trained_forest: None,
+            trained_transition: None,
             offline_runs: 0,
         }
     }
@@ -132,6 +191,12 @@ impl MultiTenantCoordinator {
 
     pub fn router_mut(&mut self) -> &mut StreamRouter {
         &mut self.router
+    }
+
+    /// True once a retrain has produced a transition classifier (the
+    /// consolidation observable: the old multi-tenant cycle never did).
+    pub fn has_transition_model(&self) -> bool {
+        self.trained_transition.is_some()
     }
 
     /// Snapshot of the current shared model as an installable
@@ -148,13 +213,21 @@ impl MultiTenantCoordinator {
     }
 
     /// Ensure tenant `t` has a shard; a shard created after a retrain
-    /// receives the current shared model immediately.
+    /// receives the current shared model (and transition classifier)
+    /// immediately.
     pub fn ensure_tenant(&mut self, t: TenantId) {
         if self.router.shard(t).is_none() {
             let classifier = self.shared_classifier();
+            let transition = self.trained_transition.clone();
+            let conf = self.config.min_confidence;
             let shard = self.router.add_tenant(t);
             if let Some(c) = classifier {
                 shard.pipeline.set_classifier(c);
+            }
+            if let Some(tf) = transition {
+                shard.pipeline.set_transition_classifier(Box::new(
+                    ForestWindowClassifier::new(tf, conf),
+                ));
             }
         }
     }
@@ -175,94 +248,112 @@ impl MultiTenantCoordinator {
     /// One loop turn: observe every shard's pending windows (engine-
     /// parallel over tenants), fold the observed windows into the union
     /// backlog, and run the amortized off-line cycle when the union
-    /// interval elapses. Returns windows observed this turn.
+    /// interval elapses — or earlier, when the adaptive cadence sees a
+    /// tenant under UNKNOWN pressure. Returns windows observed this turn.
     pub fn tick(&mut self) -> usize {
         let n = self.router.tick();
         for (t, ws) in self.router.take_observed() {
             self.backlogs.entry(t).or_default().extend(ws);
         }
+        self.update_cadence_counters();
         self.windows_since_offline += n;
         let interval = self.config.offline_interval_windows
             * self.router.n_tenants().max(1);
-        if self.windows_since_offline >= interval {
+        if self.windows_since_offline >= interval || self.adaptive_due() {
             self.run_offline();
         }
         n
     }
 
-    /// The single amortized off-line cycle: Algorithm 2 over the union
-    /// backlog (one discovery pass, one drift check, one DB write-lock
-    /// hold), then one retrain installing the same shared model on every
-    /// tenant shard.
-    ///
-    /// This mirrors `Coordinator::run_offline`'s store-accumulate /
-    /// gate / retrain shape but deliberately omits ZSL synthesis and
-    /// transition-classifier training for now (ROADMAP: per-tenant
-    /// tuning plane names the consolidation of the two cycles).
+    /// Fold newly published contexts into the per-tenant UNKNOWN
+    /// counters the adaptive cadence reads.
+    fn update_cadence_counters(&mut self) {
+        if !matches!(self.cadence, CadencePolicy::Adaptive { .. }) {
+            return;
+        }
+        for t in self.router.tenants() {
+            let shard = self.router.shard(t).unwrap();
+            let published = shard.contexts_published;
+            let seen = self.ctx_cursor.entry(t).or_insert(0);
+            let fresh = (published - *seen) as usize;
+            *seen = published;
+            if fresh == 0 {
+                continue;
+            }
+            // the capped log may have truncated part of an extreme
+            // burst; whatever survived is the newest suffix
+            let avail = shard.contexts.len();
+            let visible = fresh.min(avail);
+            let truncated = fresh - visible;
+            let counts = self.since_offline.entry(t).or_insert((0, 0));
+            // truncated contexts are uninspectable — count them toward
+            // the total only, which can only *delay* a trigger, never
+            // fire one spuriously
+            counts.1 += truncated;
+            for c in &shard.contexts[avail - visible..] {
+                counts.1 += 1;
+                if c.current_label == UNKNOWN {
+                    counts.0 += 1;
+                }
+            }
+        }
+    }
+
+    /// Would the adaptive cadence trigger a cycle right now?
+    pub fn adaptive_due(&self) -> bool {
+        match self.cadence {
+            CadencePolicy::FixedUnion => false,
+            CadencePolicy::Adaptive { unknown_rate, min_windows } => self
+                .since_offline
+                .values()
+                .any(|&(unknown, total)| {
+                    total >= min_windows.max(1)
+                        && unknown as f64 / total as f64 >= unknown_rate
+                }),
+        }
+    }
+
+    /// The single amortized off-line cycle: the consolidated
+    /// [`OfflineCycle::run`] over the union backlog (one discovery pass,
+    /// one drift check, ZSL synthesis, one retrain + transition-forest
+    /// fit), then the same shared models installed on every tenant
+    /// shard. The DB write lock covers discovery + synthesis only — the
+    /// expensive forest fits run lock-free so concurrent tenant plug-ins
+    /// keep serving read-lock cache lookups throughout the cycle.
     pub fn run_offline(&mut self) {
         self.windows_since_offline = 0;
         let total: usize = self.backlogs.values().map(|v| v.len()).sum();
         if total < 8 {
+            // too little data to do anything: keep the adaptive-cadence
+            // pressure counters so the trigger re-fires once the union
+            // backlog is big enough, instead of making a pressured
+            // tenant re-earn min_windows from scratch
             return;
         }
+        self.since_offline.clear();
         // concatenate tenant-major: each tenant's run stays contiguous
         let mut union: Vec<ObservationWindow> = Vec::with_capacity(total);
         for ws in self.backlogs.values() {
             union.extend(ws.iter().cloned());
         }
-        // the write lock covers discovery only — the expensive retrain
-        // below runs lock-free so concurrent tenant plug-ins keep
-        // serving read-lock cache lookups throughout the cycle
-        let report = {
-            let mut db = self.db.write().unwrap();
-            discover(
-                &union,
-                &mut db,
-                &self.config.discovery,
-                self.dist.as_ref(),
-            )
-        };
+        let outcome = self.cycle.run(
+            &union,
+            &self.db,
+            &self.config,
+            &mut self.rng,
+            self.dist.as_ref(),
+        );
         self.offline_runs += 1;
 
-        // cumulative per-label training store over the union stream
-        let mut analytic_buf = zero_analytic();
-        for (w, label) in union.iter().zip(&report.window_labels) {
-            if let Some(l) = label {
-                let rows = self.training_store.entry(*l).or_default();
-                w.fill_analytic(&mut analytic_buf);
-                rows.push_row(&analytic_buf);
-                if rows.n_rows() > self.store_cap {
-                    let excess = rows.n_rows() - self.store_cap;
-                    rows.remove_first_rows(excess);
-                }
+        if let Some(models) = outcome.models {
+            self.trained_forest = Some(models.forest.clone());
+            if models.transition_forest.is_some() {
+                // keep the previous transition model when this retrain
+                // had too few transition types to fit one — existing
+                // shards keep theirs (install below is skipped), so
+                // late joiners must match them, not regress to None
+                self.trained_transition = models.transition_forest.clone();
             }
-        }
-
-        // retrain gating, as in the single-tenant coordinator: only on
-        // label-set changes or the refresher interval
-        self.ticks_since_train += 1;
-        let label_set_changed = report
-            .outcomes
-            .iter()
-            .any(|o| !matches!(o, ClusterOutcome::Matched { .. }));
-        let must_train = label_set_changed
-            || self.ticks_since_train >= self.retrain_every;
-
-        if !self.training_store.is_empty() && must_train {
-            self.ticks_since_train = 0;
-            let mut data = Dataset::new();
-            for (l, rows) in &self.training_store {
-                for r in rows.iter_rows() {
-                    data.push(r, *l);
-                }
-            }
-            let forest = RandomForest::fit_with(
-                &data,
-                self.config.training.forest.clone(),
-                &mut self.rng,
-                self.config.discovery.engine,
-            );
-            self.trained_forest = Some(forest.clone());
             let gate = self.config.centroid_gate;
             let conf = self.config.min_confidence;
             // one shared model, N shards: every tenant classifies with
@@ -271,12 +362,20 @@ impl MultiTenantCoordinator {
             let db = self.db.read().unwrap();
             self.router.install_classifiers(|_t| {
                 Box::new(GatedForestClassifier::from_db(
-                    forest.clone(),
+                    models.forest.clone(),
                     &db,
                     gate,
                     conf,
                 ))
             });
+            if let Some(tforest) = &models.transition_forest {
+                self.router.install_transition_classifiers(|_t| {
+                    Box::new(ForestWindowClassifier::new(
+                        tforest.clone(),
+                        conf,
+                    ))
+                });
+            }
         }
 
         // keep a characterization tail per tenant so recurring
@@ -330,6 +429,7 @@ impl MultiTenantCoordinator {
             offline_runs: self.offline_runs,
             workloads_known: self.db.read().unwrap().len(),
             per_tenant,
+            tenant_stats: Vec::new(),
         }
     }
 }
@@ -457,5 +557,86 @@ mod tests {
             labels.windows(2).all(|p| p[0] == p[1]),
             "tenants disagree on the same class: {labels:?}"
         );
+    }
+
+    #[test]
+    fn multi_cycle_runs_zsl_and_trains_transitions() {
+        // the consolidation pin at the unit level: one multi-tenant
+        // off-line cycle must synthesize ZSL classes and (with >= 2
+        // transition types in the backlog) train a transition model —
+        // the two steps the pre-consolidation cycle silently skipped
+        let mut cfg = CoordinatorConfig::default();
+        cfg.offline_interval_windows = 1_000_000; // manual cycles only
+        let mut coord = MultiTenantCoordinator::new(cfg);
+        let t0 = trace(5, &[0, 5, 0, 5], 150);
+        coord.ingest(TenantId(0), &t0.samples);
+        coord.tick();
+        coord.run_offline();
+        assert_eq!(coord.offline_runs, 1);
+        assert!(
+            coord.db.read().unwrap().entries().any(|e| e.synthetic),
+            "multi-tenant cycle did not synthesize ZSL classes"
+        );
+        assert!(
+            coord.has_transition_model(),
+            "multi-tenant cycle did not train a transition classifier"
+        );
+        // a late-joining tenant's fresh shard gets both models installed
+        coord.ensure_tenant(TenantId(7));
+        let shard = coord.router().shard(TenantId(7)).unwrap();
+        assert_eq!(shard.pending_windows(), 0);
+    }
+
+    #[test]
+    fn adaptive_cadence_triggers_early_for_unknown_pressure() {
+        let mut cfg = CoordinatorConfig::default();
+        // fixed interval far away: only the adaptive path can trigger
+        cfg.offline_interval_windows = 1_000_000;
+        let mut coord = MultiTenantCoordinator::new(cfg);
+        coord.cadence =
+            CadencePolicy::Adaptive { unknown_rate: 0.6, min_windows: 4 };
+
+        // a brand-new tenant streams an undiscovered class: everything
+        // is UNKNOWN, so the cycle must fire well before the fixed
+        // interval
+        let t0 = trace(30, &[0, 5], 240);
+        coord.ingest(TenantId(0), &t0.samples);
+        coord.tick();
+        assert!(coord.offline_runs >= 1, "adaptive cadence never fired");
+        let runs_after_learning = coord.offline_runs;
+
+        // now a quiet phase: the same tenant replays a class the model
+        // already knows — the UNKNOWN rate stays low, so no extra
+        // cycles fire (quiet tenants don't pay retrains)
+        let t1 = trace(31, &[5], 150);
+        coord.ingest(TenantId(0), &t1.samples);
+        coord.tick();
+        let report = coord.report(0);
+        let (_, known, total) = report.per_tenant[0];
+        assert!(
+            total > 0 && known > 0,
+            "follow-up plateau never classified: {report:?}"
+        );
+        assert!(
+            coord.offline_runs <= runs_after_learning + 1,
+            "quiet tenant kept triggering cycles: {} -> {}",
+            runs_after_learning,
+            coord.offline_runs
+        );
+    }
+
+    #[test]
+    fn report_aggregates_tenant_stats() {
+        let mut report = MultiTenantReport::default();
+        assert_eq!(report.cluster_cache_hit_ratio(), 0.0);
+        let mut a = PluginStats::default();
+        a.requests = 10;
+        a.cache_hits = 6;
+        let mut b = PluginStats::default();
+        b.requests = 10;
+        b.cache_hits = 2;
+        report.tenant_stats =
+            vec![(TenantId(0), a), (TenantId(1), b)];
+        assert!((report.cluster_cache_hit_ratio() - 0.4).abs() < 1e-12);
     }
 }

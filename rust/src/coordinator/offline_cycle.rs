@@ -1,0 +1,285 @@
+//! The consolidated off-line analyze/train cycle — ONE routine for the
+//! single-tenant [`super::Coordinator`] and the multi-tenant
+//! [`super::MultiTenantCoordinator`].
+//!
+//! Before this module existed the multi-tenant coordinator re-derived
+//! the store/gate/retrain shape of `Coordinator::run_offline` but
+//! silently skipped ZSL synthesis and transition-classifier training —
+//! so a multi-tenant deployment could never anticipate hybrid workloads
+//! or name transitions on-line. Both coordinators now delegate to
+//! [`OfflineCycle::run`], which performs the full §7 pipeline:
+//!
+//! 1. Algorithm 2 discovery + drift detection over the backlog (under
+//!    the knowledge-plane **write** lock — the only slow write);
+//! 2. cumulative per-label training-store accumulation (the analytics
+//!    zone, capped per label);
+//! 3. retrain gating (§Perf: refit only on label-set changes or every
+//!    `retrain_every` ticks);
+//! 4. transition training-set accumulation (rate-of-change rows, stable
+//!    ids via the persistent registry);
+//! 5. when the gate opens: ZSL synthesis (write lock again — fast) and
+//!    the WorkloadClassifier + TransitionClassifier forest fits, both
+//!    **lock-free** so tenant plug-ins keep serving cache lookups while
+//!    the expensive training runs.
+//!
+//! The caller installs the returned models (one pipeline, or one model
+//! cloned onto every tenant shard) — installation is the only part that
+//! differs between the two deployment shapes.
+
+use super::CoordinatorConfig;
+use crate::clustering::DistanceProvider;
+use crate::features::{zero_analytic, ObservationWindow};
+use crate::knowledge::SharedWorkloadDb;
+use crate::linalg::Matrix;
+use crate::ml::forest::RandomForest;
+use crate::ml::Dataset;
+use crate::offline::zsl::synthesize;
+use crate::offline::{discover, ClusterOutcome, DiscoveryReport};
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Models produced by a cycle whose retrain gate opened.
+pub struct CycleModels {
+    /// The WorkloadClassifier forest (train set = cumulative store +
+    /// ZSL synthetic instances when enabled).
+    pub forest: RandomForest,
+    /// The TransitionClassifier forest (None until two or more
+    /// transition types have been observed).
+    pub transition_forest: Option<RandomForest>,
+}
+
+/// What one off-line cycle did.
+pub struct CycleOutcome {
+    pub report: DiscoveryReport,
+    /// `Some` when the retrain gate opened this cycle.
+    pub models: Option<CycleModels>,
+}
+
+/// Persistent state of the off-line analyze/train loop (the parts that
+/// must survive across cycles: stores, caps, gates, registries).
+pub struct OfflineCycle {
+    /// Cumulative training store (the analytics zone): per label, the
+    /// labelled analytic windows accumulated across all discovery runs,
+    /// in contiguous row storage. Without it, a forest retrained on just
+    /// the latest batch would forget every class absent from that batch.
+    training_store: BTreeMap<u32, Matrix>,
+    /// Cap per label (memory bound; oldest dropped first).
+    store_cap: usize,
+    /// Off-line ticks since the classifier was last retrained.
+    ticks_since_train: usize,
+    /// §Perf optimisation: retrain only when discovery changes the label
+    /// set (new/drifted labels) or every `retrain_every` ticks as a
+    /// refresher — retraining on every tick dominated end-to-end
+    /// wall-clock (see EXPERIMENTS.md §Perf iteration 1).
+    pub retrain_every: usize,
+    /// Transition-type label registry ((from, to) -> generated id),
+    /// persistent across cycles so ids stay stable.
+    transition_registry: BTreeMap<(u32, u32), u32>,
+    /// Cumulative transition training examples: rate-of-change rows in
+    /// contiguous storage, with the label per row alongside.
+    transition_rows: Matrix,
+    transition_row_labels: Vec<u32>,
+}
+
+impl OfflineCycle {
+    pub fn new(store_cap: usize, retrain_every: usize) -> OfflineCycle {
+        OfflineCycle {
+            training_store: BTreeMap::new(),
+            store_cap,
+            ticks_since_train: 0,
+            retrain_every,
+            transition_registry: BTreeMap::new(),
+            transition_rows: Matrix::new(),
+            transition_row_labels: Vec::new(),
+        }
+    }
+
+    /// Transition types registered so far (telemetry + tests).
+    pub fn transition_types(&self) -> usize {
+        self.transition_registry.len()
+    }
+
+    /// One full off-line cycle over `backlog`. The write lock is held
+    /// for discovery and (when retraining) ZSL synthesis only; forest
+    /// fits run lock-free.
+    pub fn run(
+        &mut self,
+        backlog: &[ObservationWindow],
+        db: &SharedWorkloadDb,
+        config: &CoordinatorConfig,
+        rng: &mut Rng,
+        dist: &dyn DistanceProvider,
+    ) -> CycleOutcome {
+        let report = {
+            let mut dbw = db.write().unwrap();
+            discover(backlog, &mut dbw, &config.discovery, dist)
+        };
+
+        // accumulate the analytics-zone training store (fixed-width
+        // analytic rows appended straight into contiguous storage)
+        let mut analytic_buf = zero_analytic();
+        for (w, label) in backlog.iter().zip(&report.window_labels) {
+            if let Some(l) = label {
+                let rows = self.training_store.entry(*l).or_default();
+                w.fill_analytic(&mut analytic_buf);
+                rows.push_row(&analytic_buf);
+                if rows.n_rows() > self.store_cap {
+                    let excess = rows.n_rows() - self.store_cap;
+                    rows.remove_first_rows(excess);
+                }
+            }
+        }
+
+        // retrain gating (§Perf): skip the expensive forest refit when
+        // nothing about the label set changed and the refresher interval
+        // hasn't elapsed
+        self.ticks_since_train += 1;
+        let label_set_changed = report
+            .outcomes
+            .iter()
+            .any(|o| !matches!(o, ClusterOutcome::Matched { .. }));
+        let must_train = label_set_changed
+            || self.ticks_since_train >= self.retrain_every;
+
+        // accumulate transition training data (rate-of-change rows per
+        // (from, to) pair — §7.2 steps 3-6)
+        let tset = crate::offline::training::transition_training_set(
+            backlog,
+            &report,
+            &mut self.transition_registry,
+        );
+        for (row, label) in tset.iter() {
+            self.transition_rows.push_row(row);
+            self.transition_row_labels.push(label);
+        }
+        if self.transition_rows.n_rows() > 4 * self.store_cap {
+            let excess = self.transition_rows.n_rows() - 4 * self.store_cap;
+            self.transition_rows.remove_first_rows(excess);
+            self.transition_row_labels.drain(..excess);
+        }
+
+        let models = if !self.training_store.is_empty() && must_train {
+            self.ticks_since_train = 0;
+            // training set = cumulative store + ZSL synthetic instances
+            let mut data = Dataset::new();
+            for (l, rows) in &self.training_store {
+                for r in rows.iter_rows() {
+                    data.push(r, *l);
+                }
+            }
+            if config.training.enable_zsl {
+                let mut dbw = db.write().unwrap();
+                let synth = synthesize(&mut dbw, &config.training.zsl, rng);
+                data.extend_from(&synth.instances);
+            }
+            let forest = RandomForest::fit_with(
+                &data,
+                config.training.forest.clone(),
+                rng,
+                config.discovery.engine,
+            );
+
+            // TransitionClassifier: retrain alongside (needs >=2 types)
+            let types: BTreeSet<u32> =
+                self.transition_row_labels.iter().copied().collect();
+            let transition_forest = if types.len() >= 2 {
+                let mut td = Dataset::new();
+                for (row, &label) in self
+                    .transition_rows
+                    .iter_rows()
+                    .zip(&self.transition_row_labels)
+                {
+                    td.push(row, label);
+                }
+                Some(RandomForest::fit_with(
+                    &td,
+                    config.training.forest.clone(),
+                    rng,
+                    config.discovery.engine,
+                ))
+            } else {
+                None
+            };
+            Some(CycleModels { forest, transition_forest })
+        } else {
+            None
+        };
+
+        CycleOutcome { report, models }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::NativeDistance;
+    use crate::knowledge::shared_db;
+    use crate::monitor::{aggregate_trace, MonitorConfig};
+    use crate::workloadgen::{tour_schedule, Generator};
+
+    fn backlog(seed: u64, classes: &[u32]) -> Vec<ObservationWindow> {
+        let mut g = Generator::with_default_config(seed);
+        let t = g.generate(&tour_schedule(150, classes));
+        aggregate_trace(&t, &MonitorConfig { window_size: 30 })
+    }
+
+    #[test]
+    fn cycle_is_deterministic_given_seed() {
+        let run = || {
+            let db = shared_db();
+            let mut cyc = OfflineCycle::new(400, 5);
+            let mut rng = Rng::new(3);
+            let cfg = CoordinatorConfig::default();
+            let out = cyc.run(
+                &backlog(1, &[0, 5, 0]),
+                &db,
+                &cfg,
+                &mut rng,
+                &NativeDistance,
+            );
+            let json = db.read().unwrap().to_json().encode_pretty();
+            (out.report.window_labels.clone(), json)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn first_cycle_trains_and_synthesizes() {
+        let db = shared_db();
+        let mut cyc = OfflineCycle::new(400, 5);
+        let mut rng = Rng::new(3);
+        let cfg = CoordinatorConfig::default();
+        let out = cyc.run(
+            &backlog(1, &[0, 5, 0, 5]),
+            &db,
+            &cfg,
+            &mut rng,
+            &NativeDistance,
+        );
+        // new labels -> gate opens on the first cycle
+        let models = out.models.expect("first cycle must retrain");
+        // ZSL ran: the DB holds a synthetic (anticipated) hybrid class
+        assert!(db.read().unwrap().entries().any(|e| e.synthetic));
+        // two transition directions (0->5, 5->0) -> transition forest
+        assert!(cyc.transition_types() >= 2, "{}", cyc.transition_types());
+        assert!(models.transition_forest.is_some());
+    }
+
+    #[test]
+    fn retrain_gate_closes_on_unchanged_label_set() {
+        let db = shared_db();
+        let mut cyc = OfflineCycle::new(400, 5);
+        let mut rng = Rng::new(3);
+        let cfg = CoordinatorConfig::default();
+        let b = backlog(1, &[0, 5, 0]);
+        let first = cyc.run(&b, &db, &cfg, &mut rng, &NativeDistance);
+        assert!(first.models.is_some());
+        // the identical backlog again: every cluster re-matches its own
+        // DB entry, and the refresher interval has not elapsed
+        let second = cyc.run(&b, &db, &cfg, &mut rng, &NativeDistance);
+        assert!(
+            second.models.is_none(),
+            "gate must hold on an unchanged label set"
+        );
+    }
+}

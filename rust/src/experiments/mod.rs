@@ -9,6 +9,7 @@ pub mod fig7;
 pub mod fig9;
 pub mod multitenant;
 pub mod predictor;
+pub mod tuning_plane;
 pub mod zsl;
 
 use crate::features::AnalyticWindow;

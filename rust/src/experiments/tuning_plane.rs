@@ -1,0 +1,209 @@
+//! Tuning-plane experiment: K tenants with rotated/hybrid archetype
+//! schedules run their job streams concurrently on one simulated
+//! cluster, with the full per-tenant MAPE-K loop closed by
+//! [`crate::tuning::TuningPlane`]. Scores the §6.4 economics at
+//! multi-tenant scale:
+//!
+//! * **tuned-vs-default speedup** — makespan under the plane versus the
+//!   same schedules under the vendor default config;
+//! * **cross-tenant cache-hit rate** — how often a tenant reuses an
+//!   optimum another tenant paid the search for;
+//! * **probes saved** — probes paid by the shared plane versus K
+//!   *independent* single-tenant loops over the same schedules (the
+//!   amortization Tuneful-style recurring-workload tuning promises).
+
+use crate::explorer::ExplorerConfig;
+use crate::simcluster::multi::{
+    FixedConfigTenants, MultiClusterEngine, MultiEngineConfig,
+};
+use crate::simcluster::rm::ResourceManager;
+use crate::simcluster::{default_config_index, JobSpec};
+use crate::stream::TenantId;
+use crate::tuning::{TuningPlane, TuningPlaneConfig, TuningRunReport};
+use crate::util::rng::Rng;
+use crate::workloadgen::tenant_schedules;
+
+/// Scores for one tuning-plane run.
+#[derive(Debug, Clone, Default)]
+pub struct TuningPlaneScore {
+    pub tenants: usize,
+    pub jobs_per_tenant: usize,
+    pub tuned_makespan: f64,
+    pub default_makespan: f64,
+    /// default / tuned (>1 means the plane beat the untuned cluster).
+    pub speedup: f64,
+    pub cache_hit_ratio: f64,
+    pub cross_tenant_hits: usize,
+    pub searches_completed: usize,
+    pub searches_abandoned: usize,
+    /// Probes paid by the shared plane.
+    pub probes_shared: usize,
+    /// Probes paid by K independent single-tenant loops on the same
+    /// schedules (no shared knowledge plane).
+    pub probes_independent: usize,
+    pub peak_concurrency: usize,
+    pub workloads_known: usize,
+    pub offline_runs: usize,
+}
+
+impl TuningPlaneScore {
+    /// Probes saved per tenant by sharing the plane.
+    pub fn probes_saved_per_tenant(&self) -> f64 {
+        if self.tenants == 0 {
+            return 0.0;
+        }
+        (self.probes_independent as f64 - self.probes_shared as f64)
+            / self.tenants as f64
+    }
+}
+
+/// Rotated/hybrid per-tenant job schedules (the archetype rotation of
+/// `workloadgen::tenant_schedules`, as job streams instead of traces).
+pub fn schedules(
+    seed: u64,
+    tenants: usize,
+    jobs_per_tenant: usize,
+    classes: &[u32],
+) -> Vec<(TenantId, Vec<JobSpec>)> {
+    let mut rng = Rng::new(seed ^ 0x51C0_FFEE);
+    tenant_schedules(&mut rng, tenants, jobs_per_tenant, 1, classes)
+        .into_iter()
+        .enumerate()
+        .map(|(k, entries)| {
+            (
+                TenantId(k as u32),
+                entries
+                    .into_iter()
+                    .map(|e| JobSpec { mix: e.mix })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn plane_config(seed: u64, budget: usize) -> TuningPlaneConfig {
+    let mut cfg = TuningPlaneConfig::default();
+    cfg.coordinator.seed = seed;
+    cfg.coordinator.offline_interval_windows = 16;
+    cfg.coordinator.engine.duration_noise = 0.01;
+    // archetypes here are well separated; a small forest keeps the
+    // experiment's many retrain cycles cheap without costing accuracy
+    cfg.coordinator.training.forest.n_trees = 24;
+    cfg.coordinator.training.forest.max_depth = 12;
+    cfg.explorer = ExplorerConfig {
+        global_budget: budget,
+        local_budget: budget / 2 + 1,
+        min_improvement: 0.002,
+    };
+    cfg
+}
+
+fn sim_config() -> MultiEngineConfig {
+    let mut sim = MultiEngineConfig::default();
+    sim.engine.duration_noise = 0.01;
+    // identification needs windows, not hours: cap each job's emitted
+    // body at ~20 observation windows
+    sim.max_job_samples = 600;
+    sim
+}
+
+/// One shared-plane run over `schedules`.
+pub fn run_shared(
+    seed: u64,
+    schedules: &[(TenantId, Vec<JobSpec>)],
+    budget: usize,
+) -> TuningRunReport {
+    let mut plane = TuningPlane::new(plane_config(seed, budget));
+    plane.run_schedules(schedules, sim_config(), seed)
+}
+
+/// K independent single-tenant loops: each tenant gets its own plane
+/// (own DB, own classifiers) and runs alone — the comparator for the
+/// probes-saved metric. Returns total probes paid.
+pub fn run_independent(
+    seed: u64,
+    schedules: &[(TenantId, Vec<JobSpec>)],
+    budget: usize,
+) -> usize {
+    let mut probes = 0usize;
+    for (t, jobs) in schedules {
+        let mut plane = TuningPlane::new(plane_config(seed, budget));
+        let solo = vec![(*t, jobs.clone())];
+        let report = plane.run_schedules(&solo, sim_config(), seed);
+        probes += report.probes_paid;
+    }
+    probes
+}
+
+/// The full experiment.
+pub fn run(seed: u64, tenants: usize, jobs_per_tenant: usize) -> TuningPlaneScore {
+    let classes = [0u32, 5];
+    let budget = 18;
+    let scheds = schedules(seed, tenants, jobs_per_tenant, &classes);
+
+    // tuned: the closed multi-tenant loop
+    let tuned = run_shared(seed, &scheds, budget);
+
+    // default baseline: same schedules, same cluster, vendor default
+    let default_makespan = {
+        let mut engine = MultiClusterEngine::new(
+            ResourceManager::default_cluster(),
+            sim_config(),
+            seed,
+        );
+        for (t, jobs) in &scheds {
+            engine.push_jobs(*t, jobs);
+        }
+        let mut hub =
+            FixedConfigTenants(default_config_index().to_config());
+        engine.run(&mut hub).makespan
+    };
+
+    // independent loops comparator
+    let probes_independent = run_independent(seed, &scheds, budget);
+
+    TuningPlaneScore {
+        tenants,
+        jobs_per_tenant,
+        tuned_makespan: tuned.makespan(),
+        default_makespan,
+        speedup: default_makespan / tuned.makespan().max(1e-9),
+        cache_hit_ratio: tuned.cache_hit_ratio(),
+        cross_tenant_hits: tuned.cross_tenant_hits,
+        searches_completed: tuned.searches_completed,
+        searches_abandoned: tuned.searches_abandoned,
+        probes_shared: tuned.probes_paid,
+        probes_independent,
+        peak_concurrency: tuned.sim.peak_concurrency,
+        workloads_known: tuned.multi.workloads_known,
+        offline_runs: tuned.multi.offline_runs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuning_plane_closes_the_loop_at_k4() {
+        let s = run(11, 4, 16);
+        assert_eq!(s.tenants, 4);
+        // the loop learned something and tuned jobs
+        assert!(s.workloads_known >= 1, "{s:?}");
+        assert!(s.offline_runs >= 1, "{s:?}");
+        assert!(s.searches_completed >= 1, "{s:?}");
+        assert!(s.cache_hit_ratio > 0.0, "{s:?}");
+        // the streams actually shared the cluster
+        assert!(s.peak_concurrency >= 2, "{s:?}");
+        // tuned beats the untuned default cluster
+        assert!(s.speedup > 1.0, "{s:?}");
+        // at least one tenant reused an optimum another tenant paid for
+        assert!(s.cross_tenant_hits >= 1, "{s:?}");
+        // sharing the knowledge plane pays fewer probes than K
+        // independent loops — the amortization headline
+        assert!(
+            s.probes_shared < s.probes_independent,
+            "no probes saved: {s:?}"
+        );
+    }
+}

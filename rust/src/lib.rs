@@ -28,5 +28,6 @@ pub mod stream;
 pub mod testkit;
 pub mod simcluster;
 pub mod stats;
+pub mod tuning;
 pub mod util;
 pub mod workloadgen;

@@ -36,7 +36,8 @@ pub enum ChoiceKind {
     LocalProbe,
 }
 
-/// Plug-in statistics (reported by benches and the CLI).
+/// Plug-in statistics (reported by benches, the CLI, and per tenant in
+/// `MultiTenantReport::tenant_stats`).
 #[derive(Debug, Clone, Default)]
 pub struct PluginStats {
     pub requests: usize,
@@ -45,6 +46,37 @@ pub struct PluginStats {
     pub global_probes: usize,
     pub local_probes: usize,
     pub searches_completed: usize,
+    /// Searches abandoned because another plug-in sharing the knowledge
+    /// plane persisted an optimum for the same label first (the
+    /// cross-tenant search dedup — probes this tenant did NOT pay).
+    pub searches_abandoned: usize,
+}
+
+impl PluginStats {
+    /// Cache hits as a fraction of all requests (0 when idle) — the
+    /// recurring-workload economics observable.
+    pub fn cache_hit_ratio(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.requests as f64
+        }
+    }
+
+    /// Probes actually paid (global + local).
+    pub fn probes_paid(&self) -> usize {
+        self.global_probes + self.local_probes
+    }
+
+    /// Count for one choice kind.
+    pub fn count(&self, kind: ChoiceKind) -> usize {
+        match kind {
+            ChoiceKind::Default => self.defaults,
+            ChoiceKind::CacheHit => self.cache_hits,
+            ChoiceKind::GlobalProbe => self.global_probes,
+            ChoiceKind::LocalProbe => self.local_probes,
+        }
+    }
 }
 
 enum SessionKind {
@@ -86,21 +118,28 @@ impl KermitPlugin {
         }
     }
 
+    /// The label Algorithm 1 would act on at `now`: the latest context
+    /// when it is in sync (within `max_context_age`) and known, UNKNOWN
+    /// otherwise. Exposed so callers that must correlate the decision
+    /// with its later measurement (the tuning plane's completion edge)
+    /// resolve the label exactly once.
+    pub fn current_label(&self, now: f64) -> u32 {
+        let ctx = self.context.lock().unwrap();
+        match ctx.latest() {
+            Some(c)
+                if (now - c.time).abs() <= self.max_context_age
+                    && c.is_known() =>
+            {
+                c.current_label
+            }
+            _ => UNKNOWN,
+        }
+    }
+
     /// Algorithm 1, for the workload labelled by the current context.
     /// `now` is the request time (for the staleness check).
     pub fn choose_config(&mut self, now: f64) -> (ConfigIndex, ChoiceKind) {
-        let label = {
-            let ctx = self.context.lock().unwrap();
-            match ctx.latest() {
-                Some(c)
-                    if (now - c.time).abs() <= self.max_context_age
-                        && c.is_known() =>
-                {
-                    c.current_label
-                }
-                _ => UNKNOWN,
-            }
-        };
+        let label = self.current_label(now);
         self.choose_config_for_label(label)
     }
 
@@ -115,8 +154,28 @@ impl KermitPlugin {
             self.stats.defaults += 1;
             return (self.default_config, ChoiceKind::Default);
         }
-        // an existing session for this label takes priority
+        // an existing session for this label takes priority — unless a
+        // *different* plug-in sharing the knowledge plane persisted an
+        // optimum for it while our search was in flight (the optimal
+        // flag can only have been set externally: our own convergence
+        // removes the session before setting it). Abandoning the local
+        // session is the cross-tenant search dedup: the remaining probe
+        // budget is pure waste once a converged optimum exists.
         if self.sessions.contains_key(&label) {
+            if self.outstanding != Some(label) {
+                let stored = {
+                    let db = self.db.read().unwrap();
+                    db.get(label)
+                        .filter(|e| e.optimal_config_found)
+                        .and_then(|e| e.config)
+                };
+                if let Some(cfg) = stored {
+                    self.sessions.remove(&label);
+                    self.stats.searches_abandoned += 1;
+                    self.stats.cache_hits += 1;
+                    return (cfg, ChoiceKind::CacheHit);
+                }
+            }
             return self.advance_session(label);
         }
         let (known, optimal, drifting, stored) = {
@@ -323,5 +382,63 @@ mod tests {
         let mut p = KermitPlugin::new(db, ctx);
         let (_, kind) = p.choose_config_for_label(999);
         assert_eq!(kind, ChoiceKind::Default);
+    }
+
+    #[test]
+    fn stats_helpers_aggregate() {
+        let mut s = PluginStats::default();
+        assert_eq!(s.cache_hit_ratio(), 0.0);
+        s.requests = 8;
+        s.cache_hits = 2;
+        s.global_probes = 5;
+        s.local_probes = 1;
+        assert!((s.cache_hit_ratio() - 0.25).abs() < 1e-12);
+        assert_eq!(s.probes_paid(), 6);
+        assert_eq!(s.count(ChoiceKind::CacheHit), 2);
+        assert_eq!(s.count(ChoiceKind::GlobalProbe), 5);
+    }
+
+    #[test]
+    fn concurrent_search_abandoned_once_peer_stores_optimum() {
+        // two plug-ins (two tenants) share the knowledge plane and both
+        // start a global search for the same label; A converges first
+        // and persists the optimum; B's next request must abandon its
+        // own session and serve A's optimum — zero further probes paid
+        let (db, ctx_a, label) = setup();
+        let ctx_b = Arc::new(Mutex::new(ContextStream::new(16)));
+        let mut a = KermitPlugin::new(db.clone(), ctx_a);
+        let mut b = KermitPlugin::new(db.clone(), ctx_b);
+
+        // B starts searching (one probe in flight, then measured)
+        let (cb, kb) = b.choose_config_for_label(label);
+        assert_eq!(kb, ChoiceKind::GlobalProbe);
+        b.record_measurement(label, job_duration(2, &cb.to_config()));
+        assert!(b.searching(label));
+
+        // A searches to convergence
+        let stored = loop {
+            let (c, kind) = a.choose_config_for_label(label);
+            match kind {
+                ChoiceKind::GlobalProbe => {
+                    a.record_measurement(label, job_duration(2, &c.to_config()))
+                }
+                ChoiceKind::CacheHit => break c,
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        assert!(db.read().unwrap().get(label).unwrap().optimal_config_found);
+
+        // B's next request: abandon, cache-hit A's config
+        let probes_before = b.stats.probes_paid();
+        let (cb2, kb2) = b.choose_config_for_label(label);
+        assert_eq!(kb2, ChoiceKind::CacheHit);
+        assert_eq!(cb2, stored);
+        assert!(!b.searching(label), "B's session not abandoned");
+        assert_eq!(b.stats.searches_abandoned, 1);
+        assert_eq!(b.stats.probes_paid(), probes_before);
+        // and B keeps cache-hitting (no new session)
+        let (_, kb3) = b.choose_config_for_label(label);
+        assert_eq!(kb3, ChoiceKind::CacheHit);
+        assert_eq!(b.stats.searches_abandoned, 1);
     }
 }

@@ -104,6 +104,7 @@ pub fn run_jobs(
             now,
             now + duration,
             engine.sample_period,
+            (true, true),
             &mut rng,
         );
         now += duration;
@@ -115,7 +116,9 @@ pub fn run_jobs(
     out
 }
 
-fn emit_idle(
+/// Idle-gap emission (background noise floor) — shared with the
+/// multi-tenant engine (`simcluster::multi`).
+pub(crate) fn emit_idle(
     samples: &mut Vec<Sample>,
     from: f64,
     to: f64,
@@ -133,8 +136,13 @@ fn emit_idle(
     }
 }
 
+/// Job emission with transition-ramp marking — shared with the
+/// multi-tenant engine (`simcluster::multi`). `ramps` = (ramp_in,
+/// ramp_out): callers that split one job across several emission calls
+/// (identification prefix, then body) ramp only at the *real* job
+/// boundaries, so no spurious mid-job transition appears at the split.
 #[allow(clippy::too_many_arguments)]
-fn emit_job(
+pub(crate) fn emit_job(
     samples: &mut Vec<Sample>,
     cat: &[WorkloadClass],
     mix: Mix,
@@ -142,6 +150,7 @@ fn emit_job(
     from: f64,
     to: f64,
     period: f64,
+    ramps: (bool, bool),
     rng: &mut Rng,
 ) {
     let mean = mix.mean(cat);
@@ -150,7 +159,8 @@ fn emit_job(
     let mut t = from;
     while t < to {
         // short ramp in/out marks the job boundary as a transition
-        let in_ramp = t - from < ramp || to - t < ramp;
+        let in_ramp = (ramps.0 && t - from < ramp)
+            || (ramps.1 && to - t < ramp);
         let scale = if in_ramp { 1.8 } else { 1.0 };
         let mut f = [0.0; NUM_FEATURES];
         for i in 0..NUM_FEATURES {

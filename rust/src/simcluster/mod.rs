@@ -7,11 +7,16 @@
 
 pub mod config_space;
 pub mod engine;
+pub mod multi;
 pub mod perfmodel;
 pub mod rm;
 
 pub use config_space::{default_config_index, ConfigIndex, TuningConfig};
 pub use engine::{run_jobs, EngineConfig, JobRecord, JobSpec, SimResult};
+pub use multi::{
+    FixedConfigTenants, MultiClusterEngine, MultiEngineConfig,
+    MultiSimResult, TenantRmPlugin, TenantSimLog,
+};
 pub use perfmodel::{job_duration, profile_for, ClassProfile};
 pub use rm::{
     Container, FixedConfigPlugin, NodeSpec, ResourceManager,

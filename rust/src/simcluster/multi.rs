@@ -1,0 +1,683 @@
+//! Multi-tenant cluster engine: ONE `ResourceManager` serving K
+//! concurrent, interleaved job streams.
+//!
+//! The single-stream engine (`simcluster::engine::run_jobs`) models the
+//! paper's serial benchmark runs; this module models the shared-cluster
+//! deployment the multi-tenant MAPE-K loop actually targets: every
+//! tenant owns a FIFO queue of [`JobSpec`]s, at most one job per tenant
+//! runs at a time (a tenant's jobs are a serial analytic stream), and
+//! jobs of *different* tenants run concurrently against the same
+//! container pool.
+//!
+//! # Fair container allocation
+//!
+//! When a job starts, the RM responds to its resource request — the
+//! plug-in interception point, per tenant — and the job asks for its
+//! chosen config's executor fleet (`num_executors` containers of
+//! `executor_cores` × `executor_mem_mb`). The RM grants what fits
+//! (`allocate_up_to`); the job runs with the granted fleet, i.e. its
+//! duration is computed from an *effective* config whose executor count
+//! is the grant — contention on the shared cluster slows jobs down
+//! exactly the way the perf model prices a smaller fleet. A job granted
+//! nothing queues until a completion frees capacity; start attempts are
+//! retried in round-robin rotated tenant order so no tenant starves.
+//!
+//! This means a *probe* measured under a degraded grant feeds the
+//! contention-inflated duration back to the Explorer — exactly what a
+//! real shared cluster does (a probe IS one execution under whatever
+//! the RM granted). A search that converges under heavy contention can
+//! therefore persist a contention-shaped optimum; as on the paper's
+//! cluster, re-evaluation happens through the drift path (the optimum
+//! is cleared when the workload is marked drifting), not by re-probing
+//! a stored optimum.
+//!
+//! # Metric streams
+//!
+//! Each tenant emits its own tagged metric stream (idle gaps, an
+//! identification prefix *before* the config decision — the lead-in the
+//! single-tenant coordinator models — and the job body with transition
+//! ramps), delivered incrementally through
+//! [`TenantRmPlugin::on_samples`] so a monitor/identification stack can
+//! run in lock-step with the simulation. Per-tenant RNG streams make
+//! every tenant's timeline deterministic regardless of interleaving.
+
+use super::config_space::TuningConfig;
+use super::engine::{emit_idle, emit_job, EngineConfig, JobRecord, JobSpec};
+use super::perfmodel::job_duration;
+use super::rm::{ResourceManager, ResourceRequest};
+use crate::features::TenantId;
+use crate::util::rng::Rng;
+use crate::workloadgen::{catalog, num_pure_classes, Sample};
+use std::collections::{BTreeMap, VecDeque};
+
+/// The per-tenant plug-in interception surface: what the RM calls as K
+/// job streams run. One implementor fans these out to per-tenant
+/// `KermitPlugin`s (`tuning::TuningPlane`); baselines use
+/// [`FixedConfigTenants`].
+pub trait TenantRmPlugin {
+    /// Metric samples `tenant`'s agents emitted up to the current
+    /// simulated time (idle gaps, identification prefixes, job bodies).
+    fn on_samples(&mut self, _tenant: TenantId, _samples: &[Sample]) {}
+
+    /// The RM responds to `tenant`'s resource request: pick the tuning
+    /// configuration for this application's containers.
+    fn on_resource_request(
+        &mut self,
+        tenant: TenantId,
+        req: &ResourceRequest,
+    ) -> TuningConfig;
+
+    /// Completion feedback — the measured duration of the application
+    /// (the feedback edge of the autonomic loop).
+    fn on_app_complete(
+        &mut self,
+        _tenant: TenantId,
+        _app_id: u64,
+        _duration: f64,
+        _now: f64,
+    ) {
+    }
+}
+
+/// Every tenant under one fixed configuration (default / rule-of-thumb
+/// baselines for the tuning-plane experiment).
+pub struct FixedConfigTenants(pub TuningConfig);
+
+impl TenantRmPlugin for FixedConfigTenants {
+    fn on_resource_request(
+        &mut self,
+        _tenant: TenantId,
+        _req: &ResourceRequest,
+    ) -> TuningConfig {
+        self.0
+    }
+}
+
+/// Multi-tenant engine configuration.
+#[derive(Debug, Clone)]
+pub struct MultiEngineConfig {
+    /// Shared knobs with the single-stream engine (sample period,
+    /// duration noise, inter-job gap).
+    pub engine: EngineConfig,
+    /// Identification lead-in (seconds of the job's signature emitted
+    /// before the config decision). Keep ≥ one observation window of
+    /// samples or the decision always sees a stale/unknown context.
+    pub prefix_secs: f64,
+    /// Cap on metric samples emitted per job body (long jobs emit a
+    /// truncated head — identification needs windows, not hours).
+    pub max_job_samples: usize,
+    /// Cap on idle samples emitted before a job (long queue waits are
+    /// compressed; the noise floor carries no information).
+    pub max_idle_samples: usize,
+    /// Per-tenant start stagger (seconds): tenant k's first job arrives
+    /// at `k * start_stagger`, so K tenants don't hit the RM in one
+    /// thundering herd at t=0.
+    pub start_stagger: f64,
+}
+
+impl Default for MultiEngineConfig {
+    fn default() -> Self {
+        MultiEngineConfig {
+            engine: EngineConfig::default(),
+            prefix_secs: 60.0,
+            max_job_samples: 1200,
+            max_idle_samples: 90,
+            start_stagger: 7.0,
+        }
+    }
+}
+
+/// One tenant's simulation log.
+#[derive(Debug, Clone, Default)]
+pub struct TenantSimLog {
+    pub jobs: Vec<JobRecord>,
+    pub samples: Vec<Sample>,
+}
+
+/// Full multi-tenant simulation output.
+#[derive(Debug, Clone, Default)]
+pub struct MultiSimResult {
+    pub per_tenant: BTreeMap<TenantId, TenantSimLog>,
+    pub makespan: f64,
+    /// Peak number of concurrently running jobs — must exceed 1 for the
+    /// run to have actually exercised the shared cluster.
+    pub peak_concurrency: usize,
+    /// Jobs that had to wait for a completion before getting containers
+    /// (the contention observable).
+    pub waited_for_capacity: usize,
+}
+
+/// A job whose config is decided but whose containers are not granted
+/// yet (the cluster was full at request time).
+struct WaitingJob {
+    app_id: u64,
+    truth_id: u32,
+    mix: crate::workloadgen::Mix,
+    config: TuningConfig,
+    decided_at: f64,
+    waited: bool,
+}
+
+struct RunningJob {
+    app_id: u64,
+    truth_id: u32,
+    mix: crate::workloadgen::Mix,
+    config: TuningConfig,
+    containers: Vec<u64>,
+    start: f64,
+    end: f64,
+}
+
+struct TenantState {
+    queue: VecDeque<JobSpec>,
+    /// Earliest time the tenant's next job may start.
+    ready_at: f64,
+    /// End of this tenant's last emitted sample range.
+    last_emit: f64,
+    waiting: Option<WaitingJob>,
+    running: Option<RunningJob>,
+    rng: Rng,
+}
+
+/// The K-stream discrete-event engine.
+pub struct MultiClusterEngine {
+    pub config: MultiEngineConfig,
+    rm: ResourceManager,
+    tenants: BTreeMap<TenantId, TenantState>,
+    next_app: u64,
+    /// Round-robin rotation for start attempts (fairness tie-break).
+    rotation: usize,
+    seed: u64,
+}
+
+impl MultiClusterEngine {
+    pub fn new(
+        rm: ResourceManager,
+        config: MultiEngineConfig,
+        seed: u64,
+    ) -> MultiClusterEngine {
+        MultiClusterEngine {
+            config,
+            rm,
+            tenants: BTreeMap::new(),
+            next_app: 0,
+            rotation: 0,
+            seed,
+        }
+    }
+
+    /// Append jobs to tenant `t`'s queue (creating the tenant if new).
+    pub fn push_jobs(&mut self, t: TenantId, jobs: &[JobSpec]) {
+        let seed = self.seed;
+        let stagger = self.config.start_stagger;
+        let state = self.tenants.entry(t).or_insert_with(|| TenantState {
+            queue: VecDeque::new(),
+            ready_at: stagger * t.0 as f64,
+            last_emit: stagger * t.0 as f64,
+            waiting: None,
+            running: None,
+            rng: Rng::new(seed ^ (0x9E37_79B9_7F4A_7C15u64
+                .wrapping_mul(t.0 as u64 + 1))),
+        });
+        state.queue.extend(jobs.iter().copied());
+    }
+
+    /// Tenant ids in rotated round-robin order for this scheduling pass.
+    fn rotated_ids(&self) -> Vec<TenantId> {
+        let ids: Vec<TenantId> = self.tenants.keys().copied().collect();
+        let k = ids.len();
+        if k == 0 {
+            return ids;
+        }
+        let r = self.rotation % k;
+        ids[r..].iter().chain(ids[..r].iter()).copied().collect()
+    }
+
+    /// Run every queued job of every tenant to completion.
+    pub fn run(&mut self, hub: &mut dyn TenantRmPlugin) -> MultiSimResult {
+        let cat = catalog();
+        let n_pure = num_pure_classes();
+        let mut result = MultiSimResult::default();
+        for &t in self.tenants.keys() {
+            result.per_tenant.insert(t, TenantSimLog::default());
+        }
+        let mut now = 0.0f64;
+
+        loop {
+            // ---- start phase: decide configs for idle, ready tenants
+            for t in self.rotated_ids() {
+                let state = self.tenants.get_mut(&t).unwrap();
+                if state.running.is_some()
+                    || state.waiting.is_some()
+                    || state.queue.is_empty()
+                    || state.ready_at > now + 1e-9
+                {
+                    continue;
+                }
+                let spec = state.queue.pop_front().unwrap();
+                let truth_id = spec.mix.truth_id(n_pure);
+                let log = result.per_tenant.get_mut(&t).unwrap();
+
+                // idle-gap samples up to now (capped noise floor)
+                let period = self.config.engine.sample_period;
+                let idle_from = state
+                    .last_emit
+                    .max(now - self.config.max_idle_samples as f64 * period);
+                if idle_from < now {
+                    let mut buf = Vec::new();
+                    emit_idle(&mut buf, idle_from, now, period, &mut state.rng);
+                    hub.on_samples(t, &buf);
+                    log.samples.extend(buf);
+                }
+
+                // identification prefix: the job's signature streams in
+                // before the RM responds (the lead-in the plug-in's
+                // context read depends on)
+                let decision_time = now + self.config.prefix_secs;
+                let mut prefix = Vec::new();
+                // ramp in only: the body continues this job, so the
+                // prefix/body split must not look like a transition
+                emit_job(
+                    &mut prefix,
+                    &cat,
+                    spec.mix,
+                    truth_id,
+                    now,
+                    decision_time,
+                    period,
+                    (true, false),
+                    &mut state.rng,
+                );
+                state.last_emit = decision_time;
+                hub.on_samples(t, &prefix);
+                result.per_tenant.get_mut(&t).unwrap().samples.extend(prefix);
+
+                // plug-in interception point
+                let app_id = self.next_app;
+                self.next_app += 1;
+                let req = ResourceRequest { app_id, time: decision_time };
+                let config = hub.on_resource_request(t, &req);
+                let state = self.tenants.get_mut(&t).unwrap();
+                state.waiting = Some(WaitingJob {
+                    app_id,
+                    truth_id,
+                    mix: spec.mix,
+                    config,
+                    decided_at: decision_time,
+                    waited: false,
+                });
+                self.rotation += 1;
+            }
+
+            // ---- grant phase: give waiting jobs whatever fleet fits
+            for t in self.rotated_ids() {
+                self.try_grant(t, now, &mut result);
+            }
+
+            // ---- next event
+            let mut next = f64::INFINITY;
+            for state in self.tenants.values() {
+                if let Some(r) = &state.running {
+                    next = next.min(r.end);
+                }
+                if state.running.is_none()
+                    && state.waiting.is_none()
+                    && !state.queue.is_empty()
+                    && state.ready_at > now + 1e-9
+                {
+                    next = next.min(state.ready_at);
+                }
+            }
+            if !next.is_finite() {
+                break;
+            }
+            now = next;
+
+            // ---- completion phase
+            let due: Vec<TenantId> = self
+                .tenants
+                .iter()
+                .filter(|(_, s)| {
+                    s.running
+                        .as_ref()
+                        .map(|r| r.end <= now + 1e-9)
+                        .unwrap_or(false)
+                })
+                .map(|(t, _)| *t)
+                .collect();
+            for t in due {
+                self.complete(t, hub, &cat, &mut result);
+            }
+        }
+
+        result.makespan = result
+            .per_tenant
+            .values()
+            .flat_map(|l| l.jobs.iter())
+            .map(|j| j.start + j.duration)
+            .fold(0.0, f64::max);
+        result
+    }
+
+    /// Try to grant a waiting job its fleet; on success the job starts.
+    fn try_grant(&mut self, t: TenantId, now: f64, result: &mut MultiSimResult) {
+        let state = self.tenants.get_mut(&t).unwrap();
+        let Some(w) = state.waiting.take() else { return };
+        let desired = w.config.num_executors.max(1);
+        let mut granted = self.rm.allocate_up_to(
+            desired,
+            w.config.executor_cores,
+            w.config.executor_mem_mb,
+        );
+        if granted.is_empty() && self.rm.live_containers() == 0 {
+            // pathological shape on an empty cluster (a container bigger
+            // than any node): run minimally degraded rather than
+            // deadlock the stream. Size the fallback container to the
+            // largest node so it fits *any* non-empty cluster; a silent
+            // never-run job (leaking the plug-in's outstanding probe)
+            // is worse than failing loudly here.
+            let (cores, mem) = self
+                .rm
+                .nodes()
+                .iter()
+                .fold((0u32, 0u32), |(c, m), n| {
+                    (c.max(n.cores), m.max(n.mem_mb))
+                });
+            let c = self
+                .rm
+                .allocate(1.min(cores), 1024.min(mem))
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "empty cluster cannot fit even a minimal \
+                         container for app {}: {e}",
+                        w.app_id
+                    )
+                });
+            granted.push(c);
+        }
+        if granted.is_empty() {
+            // cluster full: queue at the RM until a completion
+            state.waiting = Some(WaitingJob { waited: true, ..w });
+            return;
+        }
+        if w.waited {
+            result.waited_for_capacity += 1;
+        }
+        // the job runs with the granted fleet: contention prices itself
+        // through the perf model's view of a smaller executor count
+        let effective = TuningConfig {
+            num_executors: granted.len() as u32,
+            ..w.config
+        };
+        let base = job_duration(w.truth_id, &effective);
+        let noise =
+            1.0 + self.config.engine.duration_noise * state.rng.normal();
+        let duration = base * noise.max(0.5);
+        state.running = Some(RunningJob {
+            app_id: w.app_id,
+            truth_id: w.truth_id,
+            mix: w.mix,
+            config: w.config,
+            containers: granted.iter().map(|c| c.id).collect(),
+            start: now.max(w.decided_at),
+            end: now.max(w.decided_at) + duration,
+        });
+        let running = self.tenants.values().filter(|s| s.running.is_some()).count();
+        result.peak_concurrency = result.peak_concurrency.max(running);
+    }
+
+    /// Finish tenant `t`'s running job: release containers, emit the
+    /// body metrics, fire the completion callback, record the job.
+    fn complete(
+        &mut self,
+        t: TenantId,
+        hub: &mut dyn TenantRmPlugin,
+        cat: &[crate::workloadgen::WorkloadClass],
+        result: &mut MultiSimResult,
+    ) {
+        let state = self.tenants.get_mut(&t).unwrap();
+        let r = state.running.take().expect("no running job to complete");
+        for id in &r.containers {
+            self.rm.release(*id).expect("container double-release");
+        }
+        let period = self.config.engine.sample_period;
+        let body_end = r
+            .end
+            .min(r.start + self.config.max_job_samples as f64 * period);
+        let mut body = Vec::new();
+        // ramp out only: the prefix already ramped this job in
+        emit_job(
+            &mut body,
+            cat,
+            r.mix,
+            r.truth_id,
+            r.start,
+            body_end,
+            period,
+            (false, true),
+            &mut state.rng,
+        );
+        state.last_emit = body_end;
+        state.ready_at = r.end + self.config.engine.inter_job_gap;
+        hub.on_samples(t, &body);
+        let duration = r.end - r.start;
+        hub.on_app_complete(t, r.app_id, duration, r.end);
+        let log = result.per_tenant.get_mut(&t).unwrap();
+        log.samples.extend(body);
+        log.jobs.push(JobRecord {
+            app_id: r.app_id,
+            truth_id: r.truth_id,
+            config: r.config,
+            start: r.start,
+            duration,
+        });
+    }
+
+    /// RM accounting access (tests assert invariants after a run).
+    pub fn rm(&self) -> &ResourceManager {
+        &self.rm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcluster::config_space::{default_config_index, ConfigIndex};
+    use crate::workloadgen::Mix;
+
+    struct CountingHub {
+        cfg: TuningConfig,
+        requests: Vec<(TenantId, u64, f64)>,
+        completions: Vec<(TenantId, u64, f64)>,
+        samples: BTreeMap<TenantId, usize>,
+    }
+
+    impl CountingHub {
+        fn new(cfg: TuningConfig) -> CountingHub {
+            CountingHub {
+                cfg,
+                requests: Vec::new(),
+                completions: Vec::new(),
+                samples: BTreeMap::new(),
+            }
+        }
+    }
+
+    impl TenantRmPlugin for CountingHub {
+        fn on_samples(&mut self, t: TenantId, samples: &[Sample]) {
+            *self.samples.entry(t).or_insert(0) += samples.len();
+        }
+        fn on_resource_request(
+            &mut self,
+            t: TenantId,
+            req: &ResourceRequest,
+        ) -> TuningConfig {
+            self.requests.push((t, req.app_id, req.time));
+            self.cfg
+        }
+        fn on_app_complete(
+            &mut self,
+            t: TenantId,
+            app_id: u64,
+            duration: f64,
+            _now: f64,
+        ) {
+            self.completions.push((t, app_id, duration));
+        }
+    }
+
+    fn jobs(classes: &[u32]) -> Vec<JobSpec> {
+        classes.iter().map(|&c| JobSpec { mix: Mix::Pure(c) }).collect()
+    }
+
+    fn engine_with(tenant_jobs: &[(u32, Vec<JobSpec>)]) -> MultiClusterEngine {
+        let mut e = MultiClusterEngine::new(
+            ResourceManager::default_cluster(),
+            MultiEngineConfig::default(),
+            42,
+        );
+        for (t, js) in tenant_jobs {
+            e.push_jobs(TenantId(*t), js);
+        }
+        e
+    }
+
+    #[test]
+    fn k_streams_run_concurrently_and_complete() {
+        let per_tenant = jobs(&[0, 5, 3]);
+        let mut e = engine_with(&[
+            (0, per_tenant.clone()),
+            (1, per_tenant.clone()),
+            (2, per_tenant.clone()),
+            (3, per_tenant.clone()),
+        ]);
+        let mut hub = CountingHub::new(default_config_index().to_config());
+        let r = e.run(&mut hub);
+
+        assert_eq!(hub.requests.len(), 12);
+        assert_eq!(hub.completions.len(), 12);
+        assert_eq!(r.per_tenant.len(), 4);
+        for (t, log) in &r.per_tenant {
+            assert_eq!(log.jobs.len(), 3, "{t}");
+            assert!(*hub.samples.get(t).unwrap() > 0, "{t} got no samples");
+            // per-tenant sample times are non-decreasing (a tenant's
+            // stream is a single coherent timeline)
+            assert!(
+                log.samples.windows(2).all(|p| p[0].time <= p[1].time),
+                "{t} stream went backwards"
+            );
+            // jobs are serial per tenant
+            for pair in log.jobs.windows(2) {
+                assert!(
+                    pair[1].start >= pair[0].start + pair[0].duration - 1e-9,
+                    "{t} overlapped its own jobs"
+                );
+            }
+        }
+        // different tenants overlapped on the shared cluster
+        assert!(r.peak_concurrency >= 2, "never concurrent: {r:?}");
+        // everything released
+        assert_eq!(e.rm().live_containers(), 0);
+        assert_eq!(e.rm().used_resources(), (0, 0));
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn oversized_fleets_contend_and_wait_fairly() {
+        // 24 executors x 5 cores = 120 cores on a 64-core cluster: every
+        // job wants more than half the cluster, so streams must wait for
+        // each other's completions — and still all finish
+        let big = ConfigIndex([2, 4, 5, 3, 3, 0]).to_config();
+        assert_eq!(big.num_executors, 24);
+        let per_tenant = jobs(&[9, 9]);
+        let mut e = engine_with(&[
+            (0, per_tenant.clone()),
+            (1, per_tenant.clone()),
+            (2, per_tenant.clone()),
+        ]);
+        let mut hub = CountingHub::new(big);
+        let r = e.run(&mut hub);
+        assert_eq!(hub.completions.len(), 6);
+        assert!(
+            r.waited_for_capacity > 0,
+            "nothing ever waited: {r:?}"
+        );
+        assert_eq!(e.rm().live_containers(), 0);
+        // no tenant starved: every tenant finished both jobs
+        for log in r.per_tenant.values() {
+            assert_eq!(log.jobs.len(), 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut e = engine_with(&[
+                (0, jobs(&[0, 2])),
+                (1, jobs(&[5, 3])),
+            ]);
+            let mut hub =
+                CountingHub::new(default_config_index().to_config());
+            let r = e.run(&mut hub);
+            let durs: Vec<f64> = r
+                .per_tenant
+                .values()
+                .flat_map(|l| l.jobs.iter().map(|j| j.duration))
+                .collect();
+            (r.makespan, durs)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn contention_slows_jobs_versus_solo_run() {
+        // same stream solo vs alongside three contending tenants asking
+        // for large fleets: the shared-cluster copy must not be faster
+        let big = ConfigIndex([2, 3, 5, 3, 3, 0]).to_config();
+        let solo = {
+            let mut e = engine_with(&[(0, jobs(&[2, 2]))]);
+            let mut hub = CountingHub::new(big);
+            let r = e.run(&mut hub);
+            r.per_tenant[&TenantId(0)]
+                .jobs
+                .iter()
+                .map(|j| j.duration)
+                .sum::<f64>()
+        };
+        let contended = {
+            let mut e = engine_with(&[
+                (0, jobs(&[2, 2])),
+                (1, jobs(&[2, 2])),
+                (2, jobs(&[2, 2])),
+                (3, jobs(&[2, 2])),
+            ]);
+            let mut hub = CountingHub::new(big);
+            let r = e.run(&mut hub);
+            r.per_tenant[&TenantId(0)]
+                .jobs
+                .iter()
+                .map(|j| j.duration)
+                .sum::<f64>()
+        };
+        assert!(
+            contended >= solo * 0.95,
+            "contended {contended} faster than solo {solo}"
+        );
+    }
+
+    #[test]
+    fn decision_comes_after_prefix_and_before_body() {
+        let mut e = engine_with(&[(0, jobs(&[4]))]);
+        let mut hub = CountingHub::new(default_config_index().to_config());
+        let r = e.run(&mut hub);
+        let (_, _, req_time) = hub.requests[0];
+        let job = &r.per_tenant[&TenantId(0)].jobs[0];
+        // request fired exactly at the end of the identification prefix
+        assert!((req_time - e.config.prefix_secs).abs() < 1e-9);
+        // the job body starts at the decision, never before
+        assert!(job.start >= req_time - 1e-9);
+        // prefix samples precede the decision time
+        let first = r.per_tenant[&TenantId(0)].samples.first().unwrap();
+        assert!(first.time < req_time);
+    }
+}

@@ -101,6 +101,12 @@ impl ResourceManager {
         ])
     }
 
+    /// The static node set (the multi-tenant engine's degraded-grant
+    /// fallback sizes a minimal container from it).
+    pub fn nodes(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
     pub fn total_capacity(&self) -> (u32, u32) {
         self.nodes
             .iter()

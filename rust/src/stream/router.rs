@@ -104,6 +104,11 @@ pub struct TenantShard {
     /// Per-tenant context log, in observe order (capped at the router's
     /// `shard_log_cap`; oldest half dropped on overflow).
     pub contexts: Vec<WorkloadContext>,
+    /// Monotone count of contexts ever published by this shard —
+    /// unlike `contexts.len()` it is immune to the cap's truncation,
+    /// so cursor-based consumers (the adaptive-cadence counters) never
+    /// silently skip or double-count entries.
+    pub contexts_published: u64,
     log_cap: usize,
 }
 
@@ -121,6 +126,7 @@ impl TenantShard {
             pending: Vec::new(),
             observed: Vec::new(),
             contexts: Vec::new(),
+            contexts_published: 0,
             log_cap: config.shard_log_cap.max(2),
         }
     }
@@ -132,6 +138,7 @@ impl TenantShard {
         for w in pending {
             let ctx = self.pipeline.observe(&w);
             self.contexts.push(ctx);
+            self.contexts_published += 1;
             self.observed.push(w);
         }
         // memory bound for long-running shards: both logs drop their
@@ -279,6 +286,19 @@ impl StreamRouter {
     {
         for (t, shard) in self.shards.iter_mut() {
             shard.pipeline.set_classifier(make(*t));
+        }
+    }
+
+    /// Install a transition classifier on every shard (paired with
+    /// [`StreamRouter::install_classifiers`] after each retrain, so the
+    /// multi-tenant pipelines name transition types on-line exactly
+    /// like the single-tenant pipeline).
+    pub fn install_transition_classifiers<F>(&mut self, mut make: F)
+    where
+        F: FnMut(TenantId) -> Box<dyn WindowClassifier + Send>,
+    {
+        for (t, shard) in self.shards.iter_mut() {
+            shard.pipeline.set_transition_classifier(make(*t));
         }
     }
 

@@ -1,0 +1,516 @@
+//! The per-tenant tuning plane: the layer that closes the multi-tenant
+//! MAPE-K loop end to end.
+//!
+//! PRs 3–4 scaled the *identification* side (sharded stream layer,
+//! amortized off-line cycles); this module scales the *tuning* side —
+//! the paper's §6.4 Algorithm 1 headline — to K tenants on one shared
+//! cluster:
+//!
+//! * **Monitor / Analyze** — every tenant's metric stream flows through
+//!   the [`MultiTenantCoordinator`]'s router shards (adaptive off-line
+//!   cadence included);
+//! * **Plan** — one [`KermitPlugin`] per tenant, each reading its own
+//!   tenant's context stream (the same `Arc` the shard publishes into)
+//!   and all sharing the [`SharedWorkloadDb`] knowledge plane;
+//! * **Execute** — the plane implements
+//!   [`TenantRmPlugin`], so the multi-tenant simcluster's resource
+//!   manager calls straight into each tenant's Algorithm 1 at the
+//!   interception point and applies the chosen config to the job's
+//!   containers;
+//! * **Knowledge** — optima are stored once and cache-hit by *every*
+//!   tenant: when tenant A's search converges, tenant B's next request
+//!   for the same workload label is a `CacheHit` with zero probes paid
+//!   (and a tenant mid-search for that label abandons its session —
+//!   the plug-in's cross-tenant search dedup). This is the
+//!   recurring-workload economics of Tuneful-style amortized tuning on
+//!   a shared cluster.
+//!
+//! `experiments::tuning_plane` scores the closed loop: tuned-vs-default
+//! speedup, cluster-wide cache-hit ratio, and probes saved versus K
+//! independent single-tenant loops.
+
+use crate::coordinator::{
+    CadencePolicy, CoordinatorConfig, MultiTenantCoordinator,
+    MultiTenantReport,
+};
+use crate::explorer::ExplorerConfig;
+use crate::online::{ChoiceKind, KermitPlugin, PluginStats, UNKNOWN};
+use crate::simcluster::config_space::{ConfigIndex, TuningConfig};
+use crate::simcluster::multi::{
+    MultiClusterEngine, MultiEngineConfig, MultiSimResult, TenantRmPlugin,
+};
+use crate::simcluster::rm::{ResourceManager, ResourceRequest};
+use crate::simcluster::JobSpec;
+use crate::stream::TenantId;
+use crate::workloadgen::Sample;
+use std::collections::BTreeMap;
+
+/// Tuning-plane configuration.
+#[derive(Clone)]
+pub struct TuningPlaneConfig {
+    pub coordinator: CoordinatorConfig,
+    /// Explorer budgets handed to every tenant's plug-in.
+    pub explorer: ExplorerConfig,
+    /// Plug-in context staleness bound (Algorithm 1's error path).
+    pub max_context_age: f64,
+    /// Off-line cadence. Defaults to adaptive: a tenant whose recent
+    /// windows are mostly UNKNOWN (new tenant, or drift suspicion)
+    /// triggers an early cycle instead of waiting out the fixed union
+    /// interval.
+    pub cadence: CadencePolicy,
+}
+
+impl Default for TuningPlaneConfig {
+    fn default() -> Self {
+        TuningPlaneConfig {
+            coordinator: CoordinatorConfig::default(),
+            explorer: ExplorerConfig::default(),
+            max_context_age: 120.0,
+            cadence: CadencePolicy::Adaptive {
+                unknown_rate: 0.7,
+                min_windows: 8,
+            },
+        }
+    }
+}
+
+/// Cap on the per-tenant decision log (telemetry; oldest half dropped
+/// on overflow, like the stream layer's shard logs — the durable
+/// per-kind counts live in `PluginStats`).
+const CHOICE_LOG_CAP: usize = 4096;
+
+/// One tenant's slice of the tuning plane.
+struct TenantTuning {
+    plugin: KermitPlugin,
+    /// app_id -> label an outstanding probe decision was made for (the
+    /// measurement at completion must feed exactly that label's
+    /// session).
+    pending: BTreeMap<u64, u32>,
+    /// Decision log in request order (telemetry + tests; capped at
+    /// [`CHOICE_LOG_CAP`]).
+    choices: Vec<ChoiceKind>,
+}
+
+/// Aggregate report of one tuning-plane run.
+#[derive(Debug, Clone, Default)]
+pub struct TuningRunReport {
+    pub sim: MultiSimResult,
+    /// Identification-side report with `tenant_stats` filled in.
+    pub multi: MultiTenantReport,
+    /// Cache hits served with an optimum a *different* tenant paid the
+    /// search for — the cross-tenant reuse observable.
+    pub cross_tenant_hits: usize,
+    /// Probes actually paid across all tenants (global + local).
+    pub probes_paid: usize,
+    pub searches_completed: usize,
+    pub searches_abandoned: usize,
+}
+
+impl TuningRunReport {
+    pub fn makespan(&self) -> f64 {
+        self.sim.makespan
+    }
+
+    pub fn cache_hit_ratio(&self) -> f64 {
+        self.multi.cluster_cache_hit_ratio()
+    }
+}
+
+/// The assembled per-tenant tuning plane.
+pub struct TuningPlane {
+    /// The identification loop underneath (router shards, shared DB,
+    /// consolidated off-line cycle, adaptive cadence).
+    pub coord: MultiTenantCoordinator,
+    tenants: BTreeMap<TenantId, TenantTuning>,
+    explorer: ExplorerConfig,
+    max_context_age: f64,
+    /// label -> tenant whose search stored the optimum.
+    search_owner: BTreeMap<u32, TenantId>,
+    /// Cache hits on an optimum some other tenant searched for.
+    pub cross_tenant_hits: usize,
+    /// Windows observed across all ticks driven by this plane.
+    windows_observed: usize,
+}
+
+impl TuningPlane {
+    pub fn new(config: TuningPlaneConfig) -> TuningPlane {
+        let mut coord = MultiTenantCoordinator::new(config.coordinator);
+        coord.cadence = config.cadence;
+        TuningPlane {
+            coord,
+            tenants: BTreeMap::new(),
+            explorer: config.explorer,
+            max_context_age: config.max_context_age,
+            search_owner: BTreeMap::new(),
+            cross_tenant_hits: 0,
+            windows_observed: 0,
+        }
+    }
+
+    /// Ensure tenant `t` exists: a router shard in the coordinator and
+    /// a plug-in wired to that shard's context stream plus the shared
+    /// knowledge plane.
+    pub fn ensure_tenant(&mut self, t: TenantId) {
+        self.coord.ensure_tenant(t);
+        if !self.tenants.contains_key(&t) {
+            let ctx = self
+                .coord
+                .router()
+                .shard(t)
+                .expect("shard just ensured")
+                .context
+                .clone();
+            let mut plugin = KermitPlugin::new(self.coord.db.clone(), ctx);
+            plugin.explorer_config = self.explorer.clone();
+            plugin.max_context_age = self.max_context_age;
+            self.tenants.insert(
+                t,
+                TenantTuning {
+                    plugin,
+                    pending: BTreeMap::new(),
+                    choices: Vec::new(),
+                },
+            );
+        }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Tenant `t`'s plug-in stats (None before `ensure_tenant`).
+    pub fn stats(&self, t: TenantId) -> Option<&PluginStats> {
+        self.tenants.get(&t).map(|tt| &tt.plugin.stats)
+    }
+
+    /// Tenant `t`'s decision log in request order.
+    pub fn choices(&self, t: TenantId) -> Option<&[ChoiceKind]> {
+        self.tenants.get(&t).map(|tt| tt.choices.as_slice())
+    }
+
+    /// Algorithm 1 for tenant `t` at time `now` (`app_id` keys the
+    /// probe-measurement correlation). The plane resolves the label
+    /// once, runs the tenant's plug-in, and tracks the cross-tenant
+    /// reuse bookkeeping (who paid for which optimum).
+    pub fn decide(
+        &mut self,
+        t: TenantId,
+        app_id: u64,
+        now: f64,
+    ) -> (ConfigIndex, ChoiceKind) {
+        self.ensure_tenant(t);
+        let tt = self.tenants.get_mut(&t).unwrap();
+        let label = tt.plugin.current_label(now);
+        let completed_before = tt.plugin.stats.searches_completed;
+        let (config, kind) = tt.plugin.choose_config_for_label(label);
+        if label != UNKNOWN {
+            if tt.plugin.stats.searches_completed > completed_before {
+                // this tenant's own search converged on this request
+                // and persisted the optimum: it owns the label now —
+                // overwrite, because after drift a *different* tenant
+                // may have paid the re-search for a label somebody
+                // else owned first. (The abandon path deliberately
+                // does NOT touch ownership: the optimum it serves was
+                // stored by whoever already owns the label.)
+                self.search_owner.insert(label, t);
+            }
+            if kind == ChoiceKind::CacheHit
+                && self.search_owner.get(&label).is_some_and(|o| *o != t)
+            {
+                self.cross_tenant_hits += 1;
+            }
+            if matches!(
+                kind,
+                ChoiceKind::GlobalProbe | ChoiceKind::LocalProbe
+            ) {
+                tt.pending.insert(app_id, label);
+            }
+        }
+        tt.choices.push(kind);
+        if tt.choices.len() > CHOICE_LOG_CAP {
+            tt.choices.drain(..CHOICE_LOG_CAP / 2);
+        }
+        (config, kind)
+    }
+
+    /// Completion feedback for tenant `t`'s application `app_id`.
+    pub fn complete(&mut self, t: TenantId, app_id: u64, duration: f64) {
+        if let Some(tt) = self.tenants.get_mut(&t) {
+            if let Some(label) = tt.pending.remove(&app_id) {
+                tt.plugin.record_measurement(label, duration);
+            }
+        }
+    }
+
+    /// Drive per-tenant job schedules through the shared simcluster
+    /// with this plane as the RM plug-in hub: the full closed loop
+    /// (monitor → analyze → plan → execute → knowledge) per tenant.
+    pub fn run_schedules(
+        &mut self,
+        schedules: &[(TenantId, Vec<JobSpec>)],
+        sim: MultiEngineConfig,
+        seed: u64,
+    ) -> TuningRunReport {
+        let mut engine = MultiClusterEngine::new(
+            ResourceManager::default_cluster(),
+            sim,
+            seed,
+        );
+        for (t, jobs) in schedules {
+            self.ensure_tenant(*t);
+            engine.push_jobs(*t, jobs);
+        }
+        let sim_result = engine.run(self);
+        // drain whatever is still pending in the shards
+        self.windows_observed += self.coord.tick();
+        self.report(sim_result)
+    }
+
+    /// Build the aggregate report for a finished run.
+    pub fn report(&self, sim: MultiSimResult) -> TuningRunReport {
+        let mut multi = self.coord.report(self.windows_observed);
+        multi.tenant_stats = self
+            .tenants
+            .iter()
+            .map(|(t, tt)| (*t, tt.plugin.stats.clone()))
+            .collect();
+        let (probes, completed, abandoned) = multi.tenant_stats.iter().fold(
+            (0, 0, 0),
+            |(p, c, a), (_, s)| {
+                (
+                    p + s.probes_paid(),
+                    c + s.searches_completed,
+                    a + s.searches_abandoned,
+                )
+            },
+        );
+        TuningRunReport {
+            sim,
+            multi,
+            cross_tenant_hits: self.cross_tenant_hits,
+            probes_paid: probes,
+            searches_completed: completed,
+            searches_abandoned: abandoned,
+        }
+    }
+}
+
+impl TenantRmPlugin for TuningPlane {
+    fn on_samples(&mut self, t: TenantId, samples: &[Sample]) {
+        self.coord.ingest(t, samples);
+        self.windows_observed += self.coord.tick();
+    }
+
+    fn on_resource_request(
+        &mut self,
+        t: TenantId,
+        req: &ResourceRequest,
+    ) -> TuningConfig {
+        let (config, _kind) = self.decide(t, req.app_id, req.time);
+        config.to_config()
+    }
+
+    fn on_app_complete(
+        &mut self,
+        t: TenantId,
+        app_id: u64,
+        duration: f64,
+        _now: f64,
+    ) {
+        self.complete(t, app_id, duration);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knowledge::Characterization;
+    use crate::online::context::WorkloadContext;
+    use crate::simcluster::perfmodel::job_duration;
+
+    fn publish(plane: &TuningPlane, t: TenantId, label: u32, time: f64) {
+        let ctx = plane
+            .coord
+            .router()
+            .shard(t)
+            .unwrap()
+            .context
+            .clone();
+        ctx.lock().unwrap().publish(WorkloadContext {
+            window_index: 0,
+            time,
+            current_label: label,
+            pred_1: label,
+            pred_5: label,
+            pred_10: label,
+        });
+    }
+
+    fn insert_workload(plane: &TuningPlane) -> u32 {
+        let rows: Vec<Vec<f64>> = vec![vec![1.0; 4], vec![1.1; 4]];
+        plane.coord.db.write().unwrap().insert_new(
+            Characterization::from_vec_rows(&rows),
+            vec![1.05; 4],
+            2,
+            false,
+        )
+    }
+
+    #[test]
+    fn late_joining_tenant_cache_hits_with_zero_probes() {
+        // satellite pin, at K=4: tenant A pays the global search; a
+        // late-joining tenant B with the same workload label gets
+        // CacheHit on its FIRST in-sync request — zero probes paid by B
+        // (and the remaining tenants reuse the same optimum too)
+        let mut plane = TuningPlane::new(TuningPlaneConfig::default());
+        let (a, b) = (TenantId(0), TenantId(1));
+        plane.ensure_tenant(a);
+        let label = insert_workload(&plane);
+        publish(&plane, a, label, 0.0);
+
+        // drive A's search to convergence (app ids arbitrary but unique)
+        let mut app = 0u64;
+        loop {
+            let (c, kind) = plane.decide(a, app, 1.0);
+            match kind {
+                ChoiceKind::GlobalProbe => {
+                    plane.complete(a, app, job_duration(2, &c.to_config()));
+                }
+                ChoiceKind::CacheHit => break,
+                other => panic!("unexpected {other:?}"),
+            }
+            app += 1;
+        }
+        let a_stats = plane.stats(a).unwrap().clone();
+        assert!(a_stats.probes_paid() > 5, "{a_stats:?}");
+        assert_eq!(a_stats.searches_completed, 1);
+        // A's own hit is not cross-tenant
+        assert_eq!(plane.cross_tenant_hits, 0);
+
+        // B joins late, sees the same workload label in its context
+        plane.ensure_tenant(b);
+        publish(&plane, b, label, 2.0);
+        let (cfg_b, kind_b) = plane.decide(b, 999, 2.5);
+        assert_eq!(kind_b, ChoiceKind::CacheHit, "B's first request");
+        let stored = plane
+            .coord
+            .db
+            .read()
+            .unwrap()
+            .get(label)
+            .unwrap()
+            .config
+            .unwrap();
+        assert_eq!(cfg_b, stored);
+        let b_stats = plane.stats(b).unwrap();
+        assert_eq!(b_stats.probes_paid(), 0, "B paid probes: {b_stats:?}");
+        assert_eq!(b_stats.defaults, 0);
+        assert_eq!(plane.cross_tenant_hits, 1);
+        assert_eq!(plane.choices(b).unwrap(), &[ChoiceKind::CacheHit]);
+
+        // two more late joiners: K=4 tenants total, one search paid
+        for (k, t) in [TenantId(2), TenantId(3)].into_iter().enumerate() {
+            plane.ensure_tenant(t);
+            publish(&plane, t, label, 3.0);
+            let (cfg, kind) = plane.decide(t, 1000 + k as u64, 3.5);
+            assert_eq!(kind, ChoiceKind::CacheHit, "{t}");
+            assert_eq!(cfg, stored, "{t}");
+            assert_eq!(plane.stats(t).unwrap().probes_paid(), 0, "{t}");
+        }
+        assert_eq!(plane.n_tenants(), 4);
+        assert_eq!(plane.cross_tenant_hits, 3);
+        let report = plane.report(MultiSimResult::default());
+        assert_eq!(report.multi.tenant_stats.len(), 4);
+        // cluster-wide: A's probes dilute the ratio, the three reusing
+        // tenants are pure cache hits
+        assert!(report.cache_hit_ratio() > 0.0);
+        assert_eq!(report.searches_completed, 1);
+    }
+
+    #[test]
+    fn stale_context_falls_back_to_default_per_tenant() {
+        // satellite pin: per-tenant staleness — tenant A in sync keeps
+        // its real decision path while tenant B's stale context maps to
+        // ChoiceKind::Default, visible per tenant in the report stats
+        let mut plane = TuningPlane::new(TuningPlaneConfig::default());
+        let (a, b) = (TenantId(0), TenantId(1));
+        plane.ensure_tenant(a);
+        plane.ensure_tenant(b);
+        let label = insert_workload(&plane);
+        publish(&plane, a, label, 1000.0);
+        publish(&plane, b, label, 0.0); // will be stale at t=1000
+
+        let (_, kind_a) = plane.decide(a, 0, 1000.0);
+        assert_eq!(kind_a, ChoiceKind::GlobalProbe);
+        plane.complete(a, 0, 100.0);
+        let (cfg_b, kind_b) = plane.decide(b, 1, 1000.0);
+        assert_eq!(kind_b, ChoiceKind::Default);
+        assert_eq!(
+            cfg_b,
+            crate::simcluster::default_config_index()
+        );
+
+        let report = plane.report(MultiSimResult::default());
+        let stats: BTreeMap<TenantId, PluginStats> =
+            report.multi.tenant_stats.iter().cloned().collect();
+        assert_eq!(stats[&a].defaults, 0);
+        assert_eq!(stats[&a].global_probes, 1);
+        assert_eq!(stats[&b].defaults, 1);
+        assert_eq!(stats[&b].probes_paid(), 0);
+    }
+
+    #[test]
+    fn concurrent_searchers_dedup_through_the_shared_plane() {
+        // A and B both start searching the same label; A converges
+        // first; B's next request abandons its session and cache-hits —
+        // counted as a cross-tenant hit
+        let mut plane = TuningPlane::new(TuningPlaneConfig::default());
+        let (a, b) = (TenantId(0), TenantId(1));
+        plane.ensure_tenant(a);
+        plane.ensure_tenant(b);
+        let label = insert_workload(&plane);
+        publish(&plane, a, label, 0.0);
+        publish(&plane, b, label, 0.0);
+
+        // B probes once, then stalls (its jobs are long)
+        let (cb, kb) = plane.decide(b, 1000, 1.0);
+        assert_eq!(kb, ChoiceKind::GlobalProbe);
+        plane.complete(b, 1000, job_duration(2, &cb.to_config()));
+
+        // A searches to convergence
+        let mut app = 0u64;
+        loop {
+            let (c, kind) = plane.decide(a, app, 1.0);
+            match kind {
+                ChoiceKind::GlobalProbe => {
+                    plane.complete(a, app, job_duration(2, &c.to_config()))
+                }
+                ChoiceKind::CacheHit => break,
+                other => panic!("unexpected {other:?}"),
+            }
+            app += 1;
+        }
+
+        // B's next request: session abandoned, A's optimum served
+        let before = plane.stats(b).unwrap().probes_paid();
+        let (_, kb2) = plane.decide(b, 2000, 2.0);
+        assert_eq!(kb2, ChoiceKind::CacheHit);
+        let b_stats = plane.stats(b).unwrap();
+        assert_eq!(b_stats.searches_abandoned, 1);
+        assert_eq!(b_stats.probes_paid(), before);
+        assert!(plane.cross_tenant_hits >= 1);
+    }
+
+    #[test]
+    fn unknown_label_never_creates_pending_entries() {
+        let mut plane = TuningPlane::new(TuningPlaneConfig::default());
+        let t = TenantId(0);
+        plane.ensure_tenant(t);
+        // no context published at all
+        let (_, kind) = plane.decide(t, 0, 0.0);
+        assert_eq!(kind, ChoiceKind::Default);
+        // completion for an app with no pending probe is a no-op
+        plane.complete(t, 0, 50.0);
+        assert_eq!(plane.stats(t).unwrap().defaults, 1);
+    }
+}

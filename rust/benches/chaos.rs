@@ -1,0 +1,83 @@
+//! Chaos-lab runner: the standard fault-scenario sweep, each scenario
+//! scored against its fault-free oracle for the graceful-degradation
+//! guarantees (bounded regret, zero livelocked sessions, poison
+//! containment, cache recovery). Writes the deterministic per-scenario
+//! JSON snapshots to `CHAOS_outcomes.json` (the CI artifact — a
+//! failure reproduces locally from its seed via `KERMIT_CHAOS_SEED`).
+//!
+//! With `KERMIT_SMOKE=1` the sweep shrinks to toy sizes and *asserts*
+//! every scenario passes — the blocking `rust-chaos-smoke` CI job.
+
+use kermit::benchkit::Table;
+use kermit::experiments::chaos;
+use kermit::util::json::Json;
+
+fn main() {
+    let smoke = matches!(
+        std::env::var("KERMIT_SMOKE").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    );
+
+    println!("\n== Chaos lab (faulted simcluster vs fault-free oracle) ==\n");
+    let t0 = std::time::Instant::now();
+    let outcomes = chaos::run_all(smoke);
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(&[
+        "scenario",
+        "regret",
+        "bound",
+        "livelock",
+        "quarantined",
+        "poison srv",
+        "tail hit (o/f)",
+        "jobs (o/f)",
+        "verdict",
+    ]);
+    for o in &outcomes {
+        t.row(&[
+            o.name.clone(),
+            format!("{:+.3}", o.regret),
+            format!("{:.2}", o.regret_bound),
+            format!("{}", o.livelocked_sessions),
+            format!("{}", o.labels_quarantined + o.audit_quarantined),
+            format!("{}", o.poison_servings),
+            format!(
+                "{:.0}%/{:.0}%",
+                100.0 * o.oracle_tail_hit_ratio,
+                100.0 * o.faulted_tail_hit_ratio
+            ),
+            format!("{}/{}", o.oracle_jobs, o.faulted_jobs),
+            if o.pass { "pass".into() } else { "FAIL".into() },
+        ]);
+        for f in &o.failures {
+            println!("{}: FAIL — {f}", o.name);
+        }
+    }
+    t.print();
+    println!(
+        "\n{} scenarios, wall {:.1}s",
+        outcomes.len(),
+        wall.as_secs_f64()
+    );
+
+    // deterministic JSON snapshots: same seeds → same bytes
+    let snapshot =
+        Json::Arr(outcomes.iter().map(|o| o.to_json()).collect());
+    let path = "CHAOS_outcomes.json";
+    match std::fs::write(path, snapshot.encode_pretty()) {
+        Ok(()) => println!("snapshots written to {path}"),
+        Err(e) => println!("snapshot write failed ({path}): {e}"),
+    }
+
+    if smoke {
+        for o in &outcomes {
+            assert!(
+                o.pass,
+                "scenario {} violated its degradation guarantees: {:?}",
+                o.name, o.failures
+            );
+        }
+        println!("\nchaos smoke OK");
+    }
+}

@@ -1,0 +1,34 @@
+//! Chaos lab: scripted fault-injection scenarios over the multi-tenant
+//! simcluster, scored against a fault-free oracle for
+//! graceful-degradation guarantees.
+//!
+//! The KERMIT MAPE-K loop of PRs 3–5 was built and scored on a healthy
+//! cluster. Real shared clusters are not healthy: executors straggle,
+//! containers get preempted, tenants churn away mid-queue, workloads
+//! drift in coordinated storms, and the knowledge plane itself can rot
+//! (stale optima that went pessimal, corrupt entries). The chaos lab
+//! makes those failure modes first-class and *repeatable*:
+//!
+//! * [`scenario`] — [`ScenarioSpec`]: a named, seeded fault plan plus
+//!   scripted knowledge-plane attacks and the degradation bounds the
+//!   run must hold ([`standard_scenarios`] is the taxonomy sweep);
+//! * [`runner`] — [`run_scenario`]: executes the spec twice over
+//!   identical workloads (oracle, then faulted) and scores bounded
+//!   regret, zero livelocked sessions, poison containment, and cache
+//!   recovery;
+//! * [`outcome`] — [`ScenarioOutcome`]: the scoreboard, serializable
+//!   to deterministic JSON (same seed → same bytes) for CI artifacts.
+//!
+//! Everything is seeded through `util::rng::Rng` — a CI failure
+//! reproduces locally from the JSON snapshot's seed via
+//! `KERMIT_CHAOS_SEED` (see `ScenarioSpec::apply_env`).
+
+pub mod outcome;
+pub mod runner;
+pub mod scenario;
+
+pub use outcome::ScenarioOutcome;
+pub use runner::run_scenario;
+pub use scenario::{
+    standard_scenarios, ScenarioSpec, ScenarioStep, StepAction,
+};

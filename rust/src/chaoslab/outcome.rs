@@ -1,0 +1,155 @@
+//! Scenario outcome: the scored comparison of one faulted run against
+//! its fault-free oracle, serializable to deterministic JSON (`Json`
+//! objects are `BTreeMap`-backed, so same outcome → same bytes — the
+//! chaos smoke's reproducibility artifact).
+
+use crate::util::json::Json;
+
+/// The chaos scoreboard for one scenario.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    pub seed: u64,
+
+    // ---- workload + makespans -----------------------------------------
+    pub oracle_makespan: f64,
+    pub faulted_makespan: f64,
+    /// Jobs the oracle run completed.
+    pub oracle_jobs: usize,
+    /// Jobs the faulted run completed (churn/requeue-exhaustion drop
+    /// the rest — regret is scored per *completed* job).
+    pub faulted_jobs: usize,
+
+    // ---- graceful-degradation score -----------------------------------
+    /// `faulted_per_job / oracle_per_job - 1`.
+    pub regret: f64,
+    pub regret_bound: f64,
+
+    // ---- no-livelock guarantee ----------------------------------------
+    pub livelocked_sessions: usize,
+    pub pending_decisions: usize,
+
+    // ---- hardening telemetry ------------------------------------------
+    pub searches_failed: usize,
+    pub probes_timed_out: usize,
+    pub probe_jobs_failed: usize,
+    pub labels_quarantined: usize,
+
+    // ---- poisoning containment ----------------------------------------
+    /// Optima the scenario script poisoned.
+    pub db_poisoned: usize,
+    /// Entries the scenario script structurally corrupted.
+    pub db_corrupted: usize,
+    /// Cache hits that served a poisoned optimum.
+    pub poison_servings: usize,
+    /// Served-poison labels still trusted at run end — must be zero.
+    pub unquarantined_poison: usize,
+    /// Corrupt entries the integrity audit quarantined.
+    pub audit_quarantined: usize,
+
+    // ---- cache recovery -----------------------------------------------
+    pub oracle_tail_hit_ratio: f64,
+    pub faulted_tail_hit_ratio: f64,
+    pub recovery_floor: f64,
+
+    // ---- fault-layer ground truth (faulted run) -----------------------
+    pub straggler_jobs: usize,
+    pub interference_jobs: usize,
+    pub preemptions: usize,
+    pub containers_preempted: usize,
+    pub regrants: usize,
+    pub jobs_failed: usize,
+    pub jobs_requeued: usize,
+    pub jobs_dropped: usize,
+    pub tenants_churned: usize,
+    pub drifted_samples: usize,
+    pub windows_dropped: u64,
+
+    // ---- verdict ------------------------------------------------------
+    pub pass: bool,
+    pub failures: Vec<String>,
+}
+
+impl ScenarioOutcome {
+    /// Deterministic JSON snapshot (same scenario + same seed → byte
+    /// identical output; the CI artifact and the determinism test both
+    /// rely on this).
+    pub fn to_json(&self) -> Json {
+        let n = |v: usize| Json::Num(v as f64);
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("oracle_makespan", Json::Num(self.oracle_makespan))
+            .set("faulted_makespan", Json::Num(self.faulted_makespan))
+            .set("oracle_jobs", n(self.oracle_jobs))
+            .set("faulted_jobs", n(self.faulted_jobs))
+            .set("regret", Json::Num(self.regret))
+            .set("regret_bound", Json::Num(self.regret_bound))
+            .set("livelocked_sessions", n(self.livelocked_sessions))
+            .set("pending_decisions", n(self.pending_decisions))
+            .set("searches_failed", n(self.searches_failed))
+            .set("probes_timed_out", n(self.probes_timed_out))
+            .set("probe_jobs_failed", n(self.probe_jobs_failed))
+            .set("labels_quarantined", n(self.labels_quarantined))
+            .set("db_poisoned", n(self.db_poisoned))
+            .set("db_corrupted", n(self.db_corrupted))
+            .set("poison_servings", n(self.poison_servings))
+            .set("unquarantined_poison", n(self.unquarantined_poison))
+            .set("audit_quarantined", n(self.audit_quarantined))
+            .set(
+                "oracle_tail_hit_ratio",
+                Json::Num(self.oracle_tail_hit_ratio),
+            )
+            .set(
+                "faulted_tail_hit_ratio",
+                Json::Num(self.faulted_tail_hit_ratio),
+            )
+            .set("recovery_floor", Json::Num(self.recovery_floor))
+            .set("straggler_jobs", n(self.straggler_jobs))
+            .set("interference_jobs", n(self.interference_jobs))
+            .set("preemptions", n(self.preemptions))
+            .set("containers_preempted", n(self.containers_preempted))
+            .set("regrants", n(self.regrants))
+            .set("jobs_failed", n(self.jobs_failed))
+            .set("jobs_requeued", n(self.jobs_requeued))
+            .set("jobs_dropped", n(self.jobs_dropped))
+            .set("tenants_churned", n(self.tenants_churned))
+            .set("drifted_samples", n(self.drifted_samples))
+            .set("windows_dropped", Json::Num(self.windows_dropped as f64))
+            .set("pass", Json::Bool(self.pass))
+            .set(
+                "failures",
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|f| Json::Str(f.clone()))
+                        .collect(),
+                ),
+            );
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_json_is_deterministic_and_complete() {
+        let mut o = ScenarioOutcome::default();
+        o.name = "demo".into();
+        o.seed = 7;
+        o.regret = 0.25;
+        o.pass = true;
+        o.failures = vec!["x".into()];
+        let a = o.to_json().encode();
+        let b = o.to_json().encode();
+        assert_eq!(a, b);
+        // BTreeMap ordering: keys come out sorted, so the verdict and
+        // the score are both present and stable
+        assert!(a.contains("\"name\":\"demo\""), "{a}");
+        assert!(a.contains("\"regret\":0.25"), "{a}");
+        assert!(a.contains("\"pass\":true"), "{a}");
+        assert!(a.contains("\"failures\":[\"x\"]"), "{a}");
+    }
+}

@@ -1,0 +1,466 @@
+//! Scenario runner: executes a [`ScenarioSpec`] twice over identical
+//! workloads — once fault-free (the oracle), once with the fault plan
+//! and scripted knowledge-plane attacks — and scores the faulted run's
+//! graceful degradation against the oracle:
+//!
+//! * **bounded regret** — per-completed-job makespan within the spec's
+//!   `regret_bound` of the oracle;
+//! * **no livelock** — zero plug-ins still waiting on a probe after the
+//!   run drains (the decision-timeout / failure-edge hardening);
+//! * **poison containment** — a poisoned optimum that was actually
+//!   served ends the run quarantined or re-searched, never still
+//!   trusted; structurally corrupt entries never survive the audit;
+//! * **cache recovery** — the tail cache-hit ratio holds the spec's
+//!   floor relative to the oracle (where the scenario asserts one).
+
+use super::outcome::ScenarioOutcome;
+use super::scenario::{ScenarioSpec, ScenarioStep, StepAction};
+use crate::experiments::tuning_plane::{plane_config, schedules, sim_config};
+use crate::online::ChoiceKind;
+use crate::simcluster::config_space::{ConfigIndex, TuningConfig};
+use crate::simcluster::fault::FaultReport;
+use crate::simcluster::multi::{MultiClusterEngine, TenantRmPlugin};
+use crate::simcluster::rm::{ResourceManager, ResourceRequest};
+use crate::stream::TenantId;
+use crate::tuning::{TuningPlane, TuningRunReport};
+use crate::workloadgen::Sample;
+
+/// The pessimal config the `PoisonOptimum` step plants: minimum
+/// everything — in-grid and structurally valid, so only the *semantic*
+/// poison detector can catch it.
+fn poison_config() -> ConfigIndex {
+    ConfigIndex([0, 0, 0, 0, 0, 0])
+}
+
+/// Wraps the tuning plane as the engine's plug-in hub and fires the
+/// scenario's scripted knowledge-plane steps once sim time crosses
+/// their `at` (checked on every callback edge).
+struct ChaosHub {
+    plane: TuningPlane,
+    steps: Vec<ScenarioStep>,
+    next_step: usize,
+    /// Labels `PoisonOptimum` overwrote.
+    poisoned: Vec<u32>,
+    /// Labels `CorruptEntry` broke.
+    corrupted: Vec<u32>,
+    /// Cache hits that served a poisoned optimum after planting.
+    poison_servings: usize,
+}
+
+impl ChaosHub {
+    fn new(plane: TuningPlane, steps: Vec<ScenarioStep>) -> ChaosHub {
+        ChaosHub {
+            plane,
+            steps,
+            next_step: 0,
+            poisoned: Vec::new(),
+            corrupted: Vec::new(),
+            poison_servings: 0,
+        }
+    }
+
+    /// Fire every scripted step whose time has come.
+    fn fire_due(&mut self, now: f64) {
+        while self.next_step < self.steps.len()
+            && self.steps[self.next_step].at <= now
+        {
+            let action = self.steps[self.next_step].action;
+            self.next_step += 1;
+            match action {
+                StepAction::PoisonOptimum => {
+                    // overwrite the lowest trusted optimum with the
+                    // pessimal config and a wildly optimistic measured
+                    // duration — the worst case for cache reuse. If no
+                    // search has converged yet, plant the poison on the
+                    // lowest unquarantined label instead (a rotted
+                    // entry that *claims* a trusted optimum is exactly
+                    // what a stale knowledge plane looks like).
+                    let mut db = self.plane.coord.db.write().unwrap();
+                    let labels = db.labels();
+                    let target = labels
+                        .iter()
+                        .copied()
+                        .filter(|&l| {
+                            db.get(l).is_some_and(|e| {
+                                e.optimal_config_found && !e.quarantined
+                            })
+                        })
+                        .min()
+                        .or_else(|| {
+                            labels
+                                .iter()
+                                .copied()
+                                .filter(|&l| {
+                                    db.get(l)
+                                        .is_some_and(|e| !e.quarantined)
+                                })
+                                .min()
+                        });
+                    if let Some(label) = target {
+                        let e = db.get_mut(label).unwrap();
+                        e.config = Some(poison_config());
+                        e.best_duration = Some(1.0);
+                        e.optimal_config_found = true;
+                        self.poisoned.push(label);
+                    }
+                }
+                StepAction::CorruptEntry => {
+                    // break the highest label's centroid — structural
+                    // corruption the integrity audit must quarantine
+                    let mut db = self.plane.coord.db.write().unwrap();
+                    let target = db
+                        .labels()
+                        .into_iter()
+                        .filter(|&l| {
+                            db.get(l).is_some_and(|e| !e.quarantined)
+                        })
+                        .max();
+                    if let Some(label) = target {
+                        let e = db.get_mut(label).unwrap();
+                        if !e.centroid.is_empty() {
+                            e.centroid[0] = f64::NAN;
+                        }
+                        self.corrupted.push(label);
+                    }
+                }
+                // flash crowds are workload, staged pre-run in BOTH
+                // the oracle and the faulted run — nothing to do here
+                StepAction::FlashCrowd { .. } => {}
+            }
+        }
+    }
+}
+
+impl TenantRmPlugin for ChaosHub {
+    fn on_samples(&mut self, t: TenantId, samples: &[Sample]) {
+        if let Some(s) = samples.last() {
+            self.fire_due(s.time);
+        }
+        self.plane.on_samples(t, samples);
+    }
+
+    fn on_resource_request(
+        &mut self,
+        t: TenantId,
+        req: &ResourceRequest,
+    ) -> TuningConfig {
+        self.fire_due(req.time);
+        let (config, kind) = self.plane.decide(t, req.app_id, req.time);
+        if kind == ChoiceKind::CacheHit
+            && !self.poisoned.is_empty()
+            && config == poison_config()
+        {
+            self.poison_servings += 1;
+        }
+        config.to_config()
+    }
+
+    fn on_app_complete(
+        &mut self,
+        t: TenantId,
+        app_id: u64,
+        duration: f64,
+        now: f64,
+    ) {
+        self.fire_due(now);
+        self.plane.complete(t, app_id, duration);
+    }
+
+    fn on_grant(&mut self, t: TenantId, app_id: u64, granted: u32) {
+        self.plane.on_grant(t, app_id, granted);
+    }
+
+    fn on_app_fail(&mut self, t: TenantId, app_id: u64, now: f64) {
+        self.fire_due(now);
+        self.plane.on_app_fail(t, app_id, now);
+    }
+}
+
+/// Everything one run (oracle or faulted) contributes to the score.
+struct RunArtifacts {
+    report: TuningRunReport,
+    fault_report: FaultReport,
+    jobs_completed: usize,
+    pending_decisions: usize,
+    tail_hit_ratio: f64,
+    poisoned: usize,
+    corrupted: usize,
+    poison_servings: usize,
+    unquarantined_poison: usize,
+    unquarantined_corrupt: usize,
+    audit_quarantined: usize,
+}
+
+/// Pooled cache-hit ratio over the last `window` decisions of every
+/// tenant — the recovery observable (did the loop get back to serving
+/// optima after the faults, or is it still flailing on defaults?).
+fn tail_hit_ratio(plane: &TuningPlane, window: usize) -> f64 {
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for t in plane.tenant_ids() {
+        if let Some(choices) = plane.choices(t) {
+            let tail = &choices[choices.len().saturating_sub(window)..];
+            total += tail.len();
+            hits += tail
+                .iter()
+                .filter(|k| **k == ChoiceKind::CacheHit)
+                .count();
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+fn run_one(spec: &ScenarioSpec, with_faults: bool) -> RunArtifacts {
+    let mut plane = TuningPlane::new(plane_config(spec.seed, spec.budget));
+    // the containment guarantee under test is "a poisoned optimum is
+    // served at most `poison_strikes` times": the lab pins one strike
+    // so a single bad full-fleet serving must quarantine the label
+    plane.resilience.poison_strikes = 1;
+    let scheds = schedules(
+        spec.seed,
+        spec.tenants,
+        spec.jobs_per_tenant,
+        &spec.classes,
+    );
+    let mut engine = MultiClusterEngine::new(
+        ResourceManager::default_cluster(),
+        sim_config(),
+        spec.seed,
+    );
+    if with_faults {
+        engine.set_faults(spec.faults.clone());
+    }
+    for (t, jobs) in &scheds {
+        plane.ensure_tenant(*t);
+        engine.push_jobs(*t, jobs);
+    }
+    // flash crowds are part of the workload, so both runs stage them —
+    // the fault plan is the only thing that differs between runs
+    let mut crowd_base = spec.tenants as u32;
+    for step in &spec.steps {
+        if let StepAction::FlashCrowd { tenants, jobs } = step.action {
+            let crowd = schedules(
+                spec.seed ^ 0xF1A5_C0DE,
+                tenants,
+                jobs,
+                &spec.classes,
+            );
+            for (k, (_, jobs)) in crowd.iter().enumerate() {
+                let t = TenantId(crowd_base + k as u32);
+                plane.ensure_tenant(t);
+                engine.push_jobs_at(t, jobs, step.at);
+            }
+            crowd_base += tenants as u32;
+        }
+    }
+    // knowledge-plane attacks only fire in the faulted run
+    let steps = if with_faults { spec.steps.clone() } else { Vec::new() };
+    let mut hub = ChaosHub::new(plane, steps);
+    let sim = engine.run(&mut hub);
+    let fault_report = *engine.fault_report();
+
+    // force any step the run ended before (a corrupt entry must always
+    // be planted so the audit is always on the hook for it), then
+    // settle: drain the shards, write off dangling decisions, audit
+    hub.fire_due(f64::INFINITY);
+    hub.plane.drain();
+    let timeout = hub.plane.resilience.decision_timeout;
+    hub.plane.reconcile(sim.makespan + timeout + 1.0);
+    let audit_quarantined = hub.plane.audit_knowledge().len();
+
+    let jobs_completed =
+        sim.per_tenant.values().map(|l| l.jobs.len()).sum();
+    let pending_decisions = hub.plane.pending_decisions();
+    let tail = tail_hit_ratio(&hub.plane, spec.recovery_window);
+    // containment: a poisoned label that was actually served must end
+    // the run quarantined or re-searched — never still trusted with
+    // the planted config (a never-served poison did no harm and waits
+    // for its first serving to be caught)
+    let (unquarantined_poison, unquarantined_corrupt) = {
+        let db = hub.plane.coord.db.read().unwrap();
+        let poison = if hub.poison_servings == 0 {
+            0
+        } else {
+            hub.poisoned
+                .iter()
+                .filter(|&&l| {
+                    db.get(l).is_some_and(|e| {
+                        !e.quarantined
+                            && e.optimal_config_found
+                            && e.config == Some(poison_config())
+                    })
+                })
+                .count()
+        };
+        // a structurally corrupt entry must be quarantined by SOME
+        // audit (mid-run off-line cycle or the final sweep) — checked
+        // against the db directly, not against sweep counters
+        let corrupt = hub
+            .corrupted
+            .iter()
+            .filter(|&&l| db.get(l).is_some_and(|e| !e.quarantined))
+            .count();
+        (poison, corrupt)
+    };
+    RunArtifacts {
+        report: hub.plane.report(sim),
+        fault_report,
+        jobs_completed,
+        pending_decisions,
+        tail_hit_ratio: tail,
+        poisoned: hub.poisoned.len(),
+        corrupted: hub.corrupted.len(),
+        poison_servings: hub.poison_servings,
+        unquarantined_poison,
+        unquarantined_corrupt,
+        audit_quarantined,
+    }
+}
+
+/// Run one scenario: oracle first, then the faulted run, then score.
+pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioOutcome {
+    let oracle = run_one(spec, false);
+    let faulted = run_one(spec, true);
+
+    let per_job = |makespan: f64, jobs: usize| makespan / jobs.max(1) as f64;
+    let oracle_per_job =
+        per_job(oracle.report.makespan(), oracle.jobs_completed).max(1e-9);
+    let faulted_per_job =
+        per_job(faulted.report.makespan(), faulted.jobs_completed);
+    let regret = faulted_per_job / oracle_per_job - 1.0;
+
+    let mut failures = Vec::new();
+    if !(regret <= spec.regret_bound) {
+        failures.push(format!(
+            "regret {regret:.3} exceeds bound {:.3}",
+            spec.regret_bound
+        ));
+    }
+    if faulted.report.livelocked_sessions != 0 {
+        failures.push(format!(
+            "{} sessions livelocked after drain",
+            faulted.report.livelocked_sessions
+        ));
+    }
+    if faulted.pending_decisions != 0 {
+        failures.push(format!(
+            "{} decisions still pending after reconcile",
+            faulted.pending_decisions
+        ));
+    }
+    if faulted.unquarantined_poison != 0 {
+        failures.push(format!(
+            "{} served poisoned optima still trusted at run end",
+            faulted.unquarantined_poison
+        ));
+    }
+    if faulted.unquarantined_corrupt != 0 {
+        failures.push(format!(
+            "{} corrupt entries survived the audit",
+            faulted.unquarantined_corrupt
+        ));
+    }
+    if spec.recovery_floor > 0.0
+        && faulted.tail_hit_ratio + 1e-9
+            < spec.recovery_floor * oracle.tail_hit_ratio
+    {
+        failures.push(format!(
+            "tail cache-hit ratio {:.3} below {:.2}x oracle ({:.3})",
+            faulted.tail_hit_ratio,
+            spec.recovery_floor,
+            oracle.tail_hit_ratio
+        ));
+    }
+
+    let fr = faulted.fault_report;
+    ScenarioOutcome {
+        name: spec.name.to_string(),
+        seed: spec.seed,
+        oracle_makespan: oracle.report.makespan(),
+        faulted_makespan: faulted.report.makespan(),
+        oracle_jobs: oracle.jobs_completed,
+        faulted_jobs: faulted.jobs_completed,
+        regret,
+        regret_bound: spec.regret_bound,
+        livelocked_sessions: faulted.report.livelocked_sessions,
+        pending_decisions: faulted.pending_decisions,
+        searches_failed: faulted.report.searches_failed,
+        probes_timed_out: faulted.report.probes_timed_out,
+        probe_jobs_failed: faulted.report.probe_jobs_failed,
+        labels_quarantined: faulted.report.labels_quarantined,
+        db_poisoned: faulted.poisoned,
+        db_corrupted: faulted.corrupted,
+        poison_servings: faulted.poison_servings,
+        unquarantined_poison: faulted.unquarantined_poison,
+        audit_quarantined: faulted.audit_quarantined,
+        oracle_tail_hit_ratio: oracle.tail_hit_ratio,
+        faulted_tail_hit_ratio: faulted.tail_hit_ratio,
+        recovery_floor: spec.recovery_floor,
+        straggler_jobs: fr.straggler_jobs,
+        interference_jobs: fr.interference_jobs,
+        preemptions: fr.preemptions,
+        containers_preempted: fr.containers_preempted,
+        regrants: fr.regrants,
+        jobs_failed: fr.jobs_failed,
+        jobs_requeued: fr.jobs_requeued,
+        jobs_dropped: fr.jobs_dropped,
+        tenants_churned: fr.tenants_churned,
+        drifted_samples: fr.drifted_samples,
+        windows_dropped: faulted.report.multi.windows_dropped,
+        pass: failures.is_empty(),
+        failures,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcluster::fault::StragglerFault;
+
+    /// Tiny spec so unit tests stay fast; experiments::chaos runs the
+    /// standard sweep.
+    fn tiny(name: &'static str, seed: u64) -> ScenarioSpec {
+        let mut s = ScenarioSpec::base(name, seed, true);
+        s.tenants = 2;
+        s.jobs_per_tenant = 5;
+        s.budget = 8;
+        s
+    }
+
+    #[test]
+    fn oracle_equals_inert_faulted_run() {
+        // a spec with no faults and no steps: the "faulted" run IS the
+        // oracle (the fault layer draws zero RNG), so regret is ~0 and
+        // every guarantee holds trivially
+        let spec = tiny("inert", 31);
+        let o = run_scenario(&spec);
+        assert!(o.pass, "failures: {:?}", o.failures);
+        assert!(o.regret.abs() < 1e-9, "regret {}", o.regret);
+        assert_eq!(o.oracle_makespan, o.faulted_makespan);
+        assert_eq!(o.oracle_jobs, o.faulted_jobs);
+        assert_eq!(o.livelocked_sessions, 0);
+        assert_eq!(o.preemptions, 0);
+        assert_eq!(o.straggler_jobs, 0);
+    }
+
+    #[test]
+    fn straggler_run_degrades_but_stays_bounded() {
+        let mut spec = tiny("mini_stragglers", 32);
+        spec.faults.stragglers =
+            Some(StragglerFault { prob: 0.3, slowdown: 2.0 });
+        spec.regret_bound = 3.0;
+        let o = run_scenario(&spec);
+        // the fault layer actually did something, and the faulted run
+        // is not the oracle
+        assert!(o.straggler_jobs > 0, "{o:?}");
+        assert!(o.faulted_makespan > o.oracle_makespan, "{o:?}");
+        // ...yet degradation stayed within the documented guarantees
+        assert!(o.pass, "failures: {:?}", o.failures);
+        assert_eq!(o.livelocked_sessions, 0);
+        assert_eq!(o.pending_decisions, 0);
+    }
+}

@@ -1,0 +1,231 @@
+//! Scenario scripting: a named, seeded description of one chaos-lab
+//! experiment — the fault plan for the simcluster plus scripted
+//! knowledge-plane attacks, and the degradation bounds the run must
+//! hold (the scoreboard of `super::runner`).
+
+use crate::simcluster::fault::{
+    ChurnEvent, DriftStorm, FaultPlan, NoisyNeighborFault, PreemptionFault,
+    StragglerFault,
+};
+use crate::stream::TenantId;
+
+/// A scripted knowledge-plane / workload attack fired mid-run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepAction {
+    /// Overwrite the lowest trusted stored optimum with a pessimal
+    /// config (cache poisoning: the semantic corruption the integrity
+    /// audit cannot see — only the poison detector can).
+    PoisonOptimum,
+    /// Corrupt the highest label's centroid to NaN (structural
+    /// corruption: the off-line audit must quarantine it).
+    CorruptEntry,
+    /// A flash crowd: `tenants` brand-new tenants each submit `jobs`
+    /// jobs at the step time. Part of the *workload*, so it is staged
+    /// in the oracle run too — the faults are what differs.
+    FlashCrowd { tenants: usize, jobs: usize },
+}
+
+/// One scripted step of a scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioStep {
+    pub name: &'static str,
+    /// Sim time the step fires at (first engine callback at/after it).
+    pub at: f64,
+    pub action: StepAction,
+}
+
+/// A full chaos scenario: workload scale, fault plan, scripted steps,
+/// and the graceful-degradation bounds the faulted run must satisfy
+/// against its fault-free oracle.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    pub tenants: usize,
+    pub jobs_per_tenant: usize,
+    pub classes: Vec<u32>,
+    /// Explorer global budget (local budget derives from it).
+    pub budget: usize,
+    pub faults: FaultPlan,
+    pub steps: Vec<ScenarioStep>,
+    /// Max allowed per-completed-job makespan regret vs the oracle:
+    /// `faulted_per_job / oracle_per_job - 1 <= regret_bound`.
+    pub regret_bound: f64,
+    /// Tail window (decisions per tenant) the recovery check pools.
+    pub recovery_window: usize,
+    /// The faulted run's tail cache-hit ratio must be at least this
+    /// fraction of the oracle's (0 disables the check for scenarios
+    /// whose guarantee is containment, not cache recovery).
+    pub recovery_floor: f64,
+}
+
+impl ScenarioSpec {
+    /// Baseline spec at the standard scale: smoke (CI) runs 3 tenants x
+    /// 8 jobs with a small search budget, full runs 4 x 14.
+    pub fn base(name: &'static str, seed: u64, smoke: bool) -> ScenarioSpec {
+        let (tenants, jobs, budget) =
+            if smoke { (3, 8, 10) } else { (4, 14, 14) };
+        ScenarioSpec {
+            name,
+            seed,
+            tenants,
+            jobs_per_tenant: jobs,
+            classes: vec![0, 5],
+            budget,
+            faults: FaultPlan::default(),
+            steps: Vec::new(),
+            regret_bound: 2.5,
+            recovery_window: 6,
+            recovery_floor: 0.0,
+        }
+    }
+
+    /// Apply `KERMIT_CHAOS_SEED` / `KERMIT_CHAOS_TENANTS` /
+    /// `KERMIT_CHAOS_JOBS` env overrides (unset or unparsable values
+    /// leave the spec untouched) — the reproduce-my-CI-failure knob.
+    pub fn apply_env(&mut self) {
+        fn env_parse<T: std::str::FromStr>(key: &str) -> Option<T> {
+            std::env::var(key).ok()?.parse().ok()
+        }
+        if let Some(s) = env_parse::<u64>("KERMIT_CHAOS_SEED") {
+            self.seed = s;
+        }
+        if let Some(t) = env_parse::<usize>("KERMIT_CHAOS_TENANTS") {
+            self.tenants = t.max(1);
+        }
+        if let Some(j) = env_parse::<usize>("KERMIT_CHAOS_JOBS") {
+            self.jobs_per_tenant = j.max(1);
+        }
+    }
+}
+
+/// The standard scenario sweep — one scenario per fault family in the
+/// taxonomy (docs/ARCHITECTURE.md "Chaos lab"). Bounds are the
+/// documented graceful-degradation guarantees; every scenario must hold
+/// them on every seed.
+pub fn standard_scenarios(smoke: bool) -> Vec<ScenarioSpec> {
+    let mut scenarios = Vec::new();
+
+    // Straggler executors: durations stretch, nothing fails — tuning
+    // keeps converging on noisy measurements and the cache must keep
+    // serving (the only scenario with a real cache-recovery floor).
+    let mut s = ScenarioSpec::base("stragglers", 101, smoke);
+    s.faults.stragglers =
+        Some(StragglerFault { prob: 0.25, slowdown: 2.5 });
+    s.regret_bound = 2.5;
+    s.recovery_floor = 0.3;
+    scenarios.push(s);
+
+    // Preemption storm: containers die mid-job, some jobs fail outright
+    // and re-queue on a bounded budget. Probe jobs that die must feed
+    // failure (not silence) to the search sessions.
+    let mut s = ScenarioSpec::base("preemption_storm", 202, smoke);
+    s.faults.preemption = Some(PreemptionFault {
+        prob: 0.35,
+        kill_frac: 0.5,
+        restart_penalty: 1.3,
+        regrant_denied_prob: 0.3,
+    });
+    s.faults.max_requeues = 2;
+    s.regret_bound = 3.0;
+    scenarios.push(s);
+
+    // Noisy neighbor: a mid-run interference window shrinks every
+    // effective fleet; the poison detector must NOT blame stored
+    // optima for degraded-fleet runs (full-fleet gating).
+    let mut s = ScenarioSpec::base("noisy_neighbor", 303, smoke);
+    s.faults.noisy_neighbor = Some(NoisyNeighborFault {
+        from: 300.0,
+        until: 1800.0,
+        intensity: 0.4,
+    });
+    s.regret_bound = 3.0;
+    scenarios.push(s);
+
+    // Flash crowd + churn: new tenants burst in mid-run (staged in the
+    // oracle too — it is workload), while an existing tenant churns
+    // away with its queue and running job.
+    let mut s = ScenarioSpec::base("flash_crowd", 404, smoke);
+    s.faults.churn = vec![ChurnEvent { tenant: TenantId(0), at: 900.0 }];
+    s.steps.push(ScenarioStep {
+        name: "crowd_arrives",
+        at: 600.0,
+        action: StepAction::FlashCrowd {
+            tenants: 2,
+            jobs: if smoke { 3 } else { 5 },
+        },
+    });
+    s.regret_bound = 3.0;
+    scenarios.push(s);
+
+    // Coordinated drift storm: every tenant's features slide off their
+    // learned centroids on phase-shifted schedules — classification
+    // degrades to UNKNOWN/drift, decisions degrade to defaults, and
+    // the loop must neither wedge nor poison the DB.
+    let mut s = ScenarioSpec::base("drift_storm", 505, smoke);
+    s.faults.drift_storm = Some(DriftStorm {
+        from: 500.0,
+        rate: 0.004,
+        phase_shift: 150.0,
+    });
+    s.regret_bound = 3.0;
+    scenarios.push(s);
+
+    // Poisoned DB: no engine faults at all — the attack is on the
+    // knowledge plane itself (one semantic poisoning, one structural
+    // corruption). Guarantee: the poison is served at most
+    // `poison_strikes` times before quarantine, and the corrupt entry
+    // never survives an audit.
+    let mut s = ScenarioSpec::base("poisoned_db", 606, smoke);
+    s.steps.push(ScenarioStep {
+        name: "poison_optimum",
+        at: 400.0,
+        action: StepAction::PoisonOptimum,
+    });
+    s.steps.push(ScenarioStep {
+        name: "corrupt_entry",
+        at: 700.0,
+        action: StepAction::CorruptEntry,
+    });
+    s.regret_bound = 3.0;
+    scenarios.push(s);
+
+    for s in &mut scenarios {
+        s.apply_env();
+    }
+    scenarios
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_sweep_covers_the_taxonomy() {
+        let sweep = standard_scenarios(true);
+        let names: Vec<&str> = sweep.iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "stragglers",
+                "preemption_storm",
+                "noisy_neighbor",
+                "flash_crowd",
+                "drift_storm",
+                "poisoned_db"
+            ]
+        );
+        // every scenario actually injects something (faults or steps)
+        for s in &sweep {
+            assert!(
+                !s.faults.is_inert() || !s.steps.is_empty(),
+                "{} injects nothing",
+                s.name
+            );
+            assert!(s.regret_bound > 0.0);
+        }
+        // smoke is strictly smaller than full
+        let full = standard_scenarios(false);
+        assert!(sweep[0].jobs_per_tenant < full[0].jobs_per_tenant);
+    }
+}

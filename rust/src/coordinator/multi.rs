@@ -72,6 +72,11 @@ pub struct MultiTenantReport {
     /// Empty unless a tuning plane drove plug-ins during the run — the
     /// identification-only coordinator has no plug-ins to report on.
     pub tenant_stats: Vec<(TenantId, PluginStats)>,
+    /// Telemetry windows dropped by shard-log overflow (bounded-memory
+    /// back-pressure; durable counts survive the drop itself).
+    pub windows_dropped: u64,
+    /// Knowledge-plane entries quarantined by the integrity audit.
+    pub db_quarantined: usize,
 }
 
 impl MultiTenantReport {
@@ -146,6 +151,8 @@ pub struct MultiTenantCoordinator {
     /// windows (plus any adaptive early triggers), not once per tenant
     /// interval.
     pub offline_runs: usize,
+    /// Entries the knowledge-plane integrity audit has quarantined.
+    pub db_quarantined: usize,
 }
 
 impl MultiTenantCoordinator {
@@ -182,6 +189,7 @@ impl MultiTenantCoordinator {
             trained_forest: None,
             trained_transition: None,
             offline_runs: 0,
+            db_quarantined: 0,
         }
     }
 
@@ -320,8 +328,20 @@ impl MultiTenantCoordinator {
     /// shard. The DB write lock covers discovery + synthesis only — the
     /// expensive forest fits run lock-free so concurrent tenant plug-ins
     /// keep serving read-lock cache lookups throughout the cycle.
+    /// Sweep the knowledge plane for structurally corrupt entries and
+    /// quarantine them (see `WorkloadDb::audit_quarantine`). Returns the
+    /// labels quarantined by this sweep.
+    pub fn audit_knowledge(&mut self) -> Vec<u32> {
+        let bad = self.db.write().unwrap().audit_quarantine();
+        self.db_quarantined += bad.len();
+        bad
+    }
+
     pub fn run_offline(&mut self) {
         self.windows_since_offline = 0;
+        // integrity first: a corrupt entry (NaN centroid, off-grid
+        // config) must not poison this cycle's matching or synthesis
+        self.audit_knowledge();
         let total: usize = self.backlogs.values().map(|v| v.len()).sum();
         if total < 8 {
             // too little data to do anything: keep the adaptive-cadence
@@ -430,6 +450,8 @@ impl MultiTenantCoordinator {
             workloads_known: self.db.read().unwrap().len(),
             per_tenant,
             tenant_stats: Vec::new(),
+            windows_dropped: self.router.windows_dropped(),
+            db_quarantined: self.db_quarantined,
         }
     }
 }

@@ -1,0 +1,58 @@
+//! Chaos-lab experiment: run the standard fault-scenario sweep and
+//! score every graceful-degradation guarantee against its fault-free
+//! oracle. `benches/chaos.rs` prints the scoreboard and writes the
+//! deterministic JSON snapshots CI archives; under `KERMIT_SMOKE=1` it
+//! *asserts* every scenario passes (the blocking `rust-chaos-smoke`
+//! job).
+
+use crate::chaoslab::{run_scenario, standard_scenarios, ScenarioOutcome};
+
+/// Run the full standard sweep (smoke scale or full scale).
+pub fn run_all(smoke: bool) -> Vec<ScenarioOutcome> {
+    standard_scenarios(smoke)
+        .iter()
+        .map(run_scenario)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaoslab::ScenarioSpec;
+
+    fn scenario(name: &str) -> ScenarioSpec {
+        standard_scenarios(true)
+            .into_iter()
+            .find(|s| s.name == name)
+            .unwrap()
+    }
+
+    #[test]
+    fn straggler_scenario_is_deterministic_and_passes() {
+        let spec = scenario("stragglers");
+        let a = run_scenario(&spec);
+        let b = run_scenario(&spec);
+        // same seed → byte-identical JSON snapshot (the reproducibility
+        // contract the CI artifact relies on)
+        assert_eq!(a.to_json().encode(), b.to_json().encode());
+        // the faults really fired, and the guarantees held anyway
+        assert!(a.straggler_jobs > 0, "{a:?}");
+        assert!(a.pass, "failures: {:?}", a.failures);
+        assert_eq!(a.livelocked_sessions, 0);
+        assert_eq!(a.pending_decisions, 0);
+    }
+
+    #[test]
+    fn poisoned_db_scenario_contains_the_poison() {
+        let spec = scenario("poisoned_db");
+        let o = run_scenario(&spec);
+        // both knowledge-plane attacks were planted...
+        assert!(o.db_poisoned >= 1, "{o:?}");
+        assert!(o.db_corrupted >= 1, "{o:?}");
+        // ...and contained: no served poison left trusted, no corrupt
+        // entry surviving the audit, no wedged session
+        assert_eq!(o.unquarantined_poison, 0, "{o:?}");
+        assert!(o.pass, "failures: {:?}", o.failures);
+        assert_eq!(o.livelocked_sessions, 0);
+    }
+}

@@ -2,6 +2,7 @@
 //! produces the data series the paper reports; `rust/benches/*` print
 //! them (with timings) and EXPERIMENTS.md records paper-vs-measured.
 
+pub mod chaos;
 pub mod explorer_table;
 pub mod fig10;
 pub mod fig6;

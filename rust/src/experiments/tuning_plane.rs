@@ -81,7 +81,9 @@ pub fn schedules(
         .collect()
 }
 
-fn plane_config(seed: u64, budget: usize) -> TuningPlaneConfig {
+/// The experiment's plane configuration (shared with the chaos lab so
+/// faulted and fault-free runs tune under identical knobs).
+pub fn plane_config(seed: u64, budget: usize) -> TuningPlaneConfig {
     let mut cfg = TuningPlaneConfig::default();
     cfg.coordinator.seed = seed;
     cfg.coordinator.offline_interval_windows = 16;
@@ -98,7 +100,8 @@ fn plane_config(seed: u64, budget: usize) -> TuningPlaneConfig {
     cfg
 }
 
-fn sim_config() -> MultiEngineConfig {
+/// The experiment's simcluster configuration (shared with the chaos lab).
+pub fn sim_config() -> MultiEngineConfig {
     let mut sim = MultiEngineConfig::default();
     sim.engine.duration_noise = 0.01;
     // identification needs windows, not hours: cap each job's emitted

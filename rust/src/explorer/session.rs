@@ -20,6 +20,10 @@ pub enum SessionStep {
     Probe(ConfigIndex),
     /// Search finished: the final result.
     Done(SearchResult),
+    /// Search gave up — step cap exhausted or too many consecutive
+    /// failed measurements. Carries the best *finite* probe seen (if
+    /// any); it is advisory, never a trusted optimum.
+    Abandoned(Option<SearchResult>),
 }
 
 struct ChannelEvaluator {
@@ -39,12 +43,27 @@ impl ConfigEvaluator for ChannelEvaluator {
 }
 
 /// A paused Explorer search, advanced one probe per workload execution.
+///
+/// Two liveness guards (both off by default — `usize::MAX`) keep a
+/// session from livelocking on a faulty cluster: a *step cap* bounds
+/// the total probes it may ask for, and a *failed-streak cap* abandons
+/// the search after that many consecutive failed (non-finite)
+/// measurements. A tripped guard yields [`SessionStep::Abandoned`] and
+/// tears the explorer thread down.
 pub struct SearchSession {
     rx_cand: Receiver<ConfigIndex>,
     tx_meas: Sender<f64>,
     handle: Option<JoinHandle<SearchResult>>,
     outstanding: bool,
     finished: Option<SearchResult>,
+    steps: usize,
+    step_cap: usize,
+    failed_streak: usize,
+    max_failed_streak: usize,
+    last_probe: Option<ConfigIndex>,
+    /// Best finite measurement seen: (duration, config).
+    best_seen: Option<(f64, ConfigIndex)>,
+    abandoned: bool,
 }
 
 impl SearchSession {
@@ -75,7 +94,49 @@ impl SearchSession {
             handle: Some(handle),
             outstanding: false,
             finished: None,
+            steps: 0,
+            step_cap: usize::MAX,
+            failed_streak: 0,
+            max_failed_streak: usize::MAX,
+            last_probe: None,
+            best_seen: None,
+            abandoned: false,
         }
+    }
+
+    /// Bound the total probes this session may yield.
+    pub fn set_step_cap(&mut self, cap: usize) {
+        self.step_cap = cap.max(1);
+    }
+
+    /// Abandon after this many consecutive failed measurements.
+    pub fn set_max_failed_streak(&mut self, cap: usize) {
+        self.max_failed_streak = cap.max(1);
+    }
+
+    /// Probes yielded so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn is_abandoned(&self) -> bool {
+        self.abandoned
+    }
+
+    /// Tear the explorer thread down (the Drop mechanism, but keeping
+    /// the session queryable) and remember the best finite probe.
+    fn abandon(&mut self) -> SessionStep {
+        self.abandoned = true;
+        let (dead_tx, _) = channel();
+        self.tx_meas = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        SessionStep::Abandoned(self.best_seen.map(|(d, c)| SearchResult {
+            best: c,
+            best_duration: d,
+            probes: self.steps,
+        }))
     }
 
     /// Get the next step. Panics if a probe is outstanding (the caller
@@ -85,9 +146,21 @@ impl SearchSession {
         if let Some(r) = self.finished {
             return SessionStep::Done(r);
         }
+        if self.abandoned {
+            return SessionStep::Abandoned(self.best_seen.map(|(d, c)| {
+                SearchResult { best: c, best_duration: d, probes: self.steps }
+            }));
+        }
+        if self.steps >= self.step_cap
+            || self.failed_streak >= self.max_failed_streak
+        {
+            return self.abandon();
+        }
         match self.rx_cand.recv() {
             Ok(c) => {
                 self.outstanding = true;
+                self.steps += 1;
+                self.last_probe = Some(c);
                 SessionStep::Probe(c)
             }
             Err(_) => {
@@ -104,10 +177,22 @@ impl SearchSession {
         }
     }
 
-    /// Report the measured duration of the outstanding probe.
+    /// Report the measured duration of the outstanding probe. A
+    /// non-finite duration means the probe's execution died — it feeds
+    /// the failed-streak guard instead of the best-seen fold.
     pub fn report(&mut self, duration: f64) {
         assert!(self.outstanding, "no probe outstanding");
         self.outstanding = false;
+        if duration.is_finite() {
+            self.failed_streak = 0;
+            if let Some(c) = self.last_probe {
+                if self.best_seen.map(|(d, _)| duration < d).unwrap_or(true) {
+                    self.best_seen = Some((duration, c));
+                }
+            }
+        } else {
+            self.failed_streak += 1;
+        }
         // a send failure means the explorer finished early; harmless
         let _ = self.tx_meas.send(duration);
     }
@@ -150,6 +235,7 @@ mod tests {
                     s.report(job_duration(4, &c.to_config()))
                 }
                 SessionStep::Done(r) => break r,
+                SessionStep::Abandoned(_) => unreachable!("no caps set"),
             }
         };
         assert_eq!(result.best, direct.best);
@@ -170,6 +256,7 @@ mod tests {
                     s.report(job_duration(2, &c.to_config()));
                 }
                 SessionStep::Done(r) => break r,
+                SessionStep::Abandoned(_) => unreachable!("no caps set"),
             }
         };
         assert_eq!(probes, r.probes);
@@ -187,6 +274,7 @@ mod tests {
             match s.next() {
                 SessionStep::Probe(_) => s.report(1.0),
                 SessionStep::Done(r) => break r,
+                SessionStep::Abandoned(_) => unreachable!("no caps set"),
             }
         };
         assert_eq!(s.next(), SessionStep::Done(r1));
@@ -198,9 +286,74 @@ mod tests {
         let mut s = SearchSession::global(ExplorerConfig::default());
         match s.next() {
             SessionStep::Probe(_) => s.report(10.0),
-            SessionStep::Done(_) => {}
+            _ => {}
         }
         drop(s); // must not deadlock
+    }
+
+    #[test]
+    fn step_cap_abandons_instead_of_livelocking() {
+        let mut s = SearchSession::global(ExplorerConfig::default());
+        s.set_step_cap(5);
+        let mut probes = 0;
+        let step = loop {
+            match s.next() {
+                SessionStep::Probe(c) => {
+                    probes += 1;
+                    s.report(job_duration(3, &c.to_config()));
+                }
+                other => break other,
+            }
+        };
+        assert_eq!(probes, 5, "cap not enforced");
+        match step {
+            SessionStep::Abandoned(best) => {
+                let b = best.expect("finite probes seen but no best");
+                assert_eq!(b.probes, 5);
+                assert!(b.best_duration.is_finite());
+            }
+            other => panic!("expected Abandoned, got {other:?}"),
+        }
+        assert!(s.is_abandoned());
+        // abandonment is sticky and non-blocking
+        assert!(matches!(s.next(), SessionStep::Abandoned(_)));
+    }
+
+    #[test]
+    fn failed_streak_abandons_and_keeps_best_finite_probe() {
+        let mut s = SearchSession::global(ExplorerConfig::default());
+        s.set_max_failed_streak(3);
+        // one good measurement, then every probe dies
+        let mut reported = 0;
+        let step = loop {
+            match s.next() {
+                SessionStep::Probe(_) => {
+                    reported += 1;
+                    s.report(if reported == 1 { 42.0 } else { f64::INFINITY });
+                }
+                other => break other,
+            }
+        };
+        assert_eq!(reported, 4, "1 good + 3 failed before abandoning");
+        match step {
+            SessionStep::Abandoned(Some(b)) => {
+                assert_eq!(b.best_duration, 42.0);
+            }
+            other => panic!("expected Abandoned(Some), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn all_failed_probes_abandon_with_no_best() {
+        let mut s = SearchSession::global(ExplorerConfig::default());
+        s.set_max_failed_streak(2);
+        let step = loop {
+            match s.next() {
+                SessionStep::Probe(_) => s.report(f64::INFINITY),
+                other => break other,
+            }
+        };
+        assert_eq!(step, SessionStep::Abandoned(None));
     }
 
     #[test]

@@ -84,6 +84,15 @@ pub struct WorkloadEntry {
     pub synthetic: bool,
     /// For synthetic classes: the (pure, pure) parent pair.
     pub parents: Option<(u32, u32)>,
+    /// Poisoned/corrupt entry: its stored optimum must never be served
+    /// or used to seed a search until a fresh search re-earns trust.
+    /// The entry itself stays (labels are never deleted) so the same
+    /// workload re-heals in place instead of forking a new label.
+    pub quarantined: bool,
+    /// Measured duration of the stored optimum (when it came from a
+    /// finished search) — the baseline the poisoning detector compares
+    /// live cache-hit runs against.
+    pub best_duration: Option<f64>,
 }
 
 /// The database: label -> entry, with a monotone label counter.
@@ -163,6 +172,8 @@ impl WorkloadDb {
                 window_count,
                 synthetic,
                 parents,
+                quarantined: false,
+                best_duration: None,
             },
         );
         label
@@ -181,9 +192,12 @@ impl WorkloadDb {
     /// match in WorkloadDB" (via the ChangeDetector statistic) and by the
     /// on-line classifier's nearest-centroid fallback.
     pub fn nearest(&self, c: &Characterization) -> Option<(u32, f64)> {
+        // a corrupt (NaN) stored characterization must neither win the
+        // match nor panic the partial_cmp — skip non-finite distances
         self.entries
             .values()
             .map(|e| (e.label, e.characterization.mean_distance(c)))
+            .filter(|(_, d)| d.is_finite())
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
     }
 
@@ -197,16 +211,90 @@ impl WorkloadDb {
             .values()
             .filter(|e| !e.synthetic)
             .map(|e| (e.label, e.characterization.mean_distance(c)))
+            .filter(|(_, d)| d.is_finite())
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
     }
 
     /// Record the optimal configuration for a workload (Algorithm 1's
-    /// "Update WorkloadDB with J_i^o").
+    /// "Update WorkloadDB with J_i^o"). A completed search also lifts
+    /// any quarantine: the optimum was just re-earned.
     pub fn set_optimal_config(&mut self, label: u32, config: ConfigIndex) {
         let e = self.entries.get_mut(&label).expect("unknown label");
         e.config = Some(config);
         e.optimal_config_found = true;
         e.is_drifting = false;
+        e.quarantined = false;
+        e.best_duration = None;
+    }
+
+    /// Like [`set_optimal_config`](Self::set_optimal_config) but also
+    /// records the measured duration of the optimum, arming the
+    /// cache-poisoning detector for this label.
+    pub fn set_optimal_measured(
+        &mut self,
+        label: u32,
+        config: ConfigIndex,
+        duration: f64,
+    ) {
+        self.set_optimal_config(label, config);
+        let e = self.entries.get_mut(&label).expect("unknown label");
+        e.best_duration = duration.is_finite().then_some(duration);
+    }
+
+    /// Quarantine a poisoned entry: its stored optimum is untrusted and
+    /// must not be served, but the config is kept for forensics. Returns
+    /// false for unknown labels (quarantining is best-effort).
+    pub fn quarantine(&mut self, label: u32) -> bool {
+        match self.entries.get_mut(&label) {
+            Some(e) => {
+                e.quarantined = true;
+                // every "serve the stored optimum" path filters on this
+                // flag, so clearing it contains the poison immediately
+                e.optimal_config_found = false;
+                e.best_duration = None;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Labels currently under quarantine.
+    pub fn quarantined_labels(&self) -> Vec<u32> {
+        self.entries
+            .values()
+            .filter(|e| e.quarantined)
+            .map(|e| e.label)
+            .collect()
+    }
+
+    /// Integrity sweep: quarantine entries whose stored state is
+    /// structurally corrupt — non-finite centroid or characterization
+    /// statistics, or a stored config outside the tuning grid. Returns
+    /// the labels quarantined by *this* sweep. Run by the coordinator's
+    /// off-line phase so a corrupt write is contained within one cycle.
+    pub fn audit_quarantine(&mut self) -> Vec<u32> {
+        let bad: Vec<u32> = self
+            .entries
+            .values()
+            .filter(|e| !e.quarantined)
+            .filter(|e| {
+                let centroid_bad =
+                    e.centroid.iter().any(|v| !v.is_finite());
+                let char_bad = e
+                    .characterization
+                    .per_feature
+                    .iter()
+                    .any(|s| !s.mean.is_finite() || !s.std.is_finite());
+                let config_bad =
+                    e.config.map(|c| c.clamped() != c).unwrap_or(false);
+                centroid_bad || char_bad || config_bad
+            })
+            .map(|e| e.label)
+            .collect();
+        for &l in &bad {
+            self.quarantine(l);
+        }
+        bad
     }
 
     /// Mark drift: keeps the stale config but clears the optimal flag
@@ -250,6 +338,14 @@ impl WorkloadDb {
                 .set("is_drifting", Json::Bool(e.is_drifting))
                 .set("window_count", Json::Num(e.window_count as f64))
                 .set("synthetic", Json::Bool(e.synthetic))
+                .set("quarantined", Json::Bool(e.quarantined))
+                .set(
+                    "best_duration",
+                    match e.best_duration {
+                        Some(d) => Json::Num(d),
+                        None => Json::Null,
+                    },
+                )
                 .set("centroid", Json::from_f64_slice(&e.centroid))
                 .set(
                     "characterization",
@@ -340,6 +436,15 @@ impl WorkloadDb {
                     Some((v[0] as u32, v[1] as u32))
                 }
             };
+            // both absent in pre-chaos-lab snapshots: default to trusted
+            let quarantined = match w.get_opt("quarantined") {
+                None | Some(Json::Null) => false,
+                Some(b) => b.as_bool()?,
+            };
+            let best_duration = match w.get_opt("best_duration") {
+                None | Some(Json::Null) => None,
+                Some(n) => Some(n.as_f64()?),
+            };
             db.entries.insert(
                 label,
                 WorkloadEntry {
@@ -354,6 +459,8 @@ impl WorkloadDb {
                     window_count: w.get("window_count")?.as_usize()?,
                     synthetic: w.get("synthetic")?.as_bool()?,
                     parents,
+                    quarantined,
+                    best_duration,
                 },
             );
         }
@@ -456,6 +563,109 @@ mod tests {
         let back = WorkloadDb::load(&path).unwrap();
         assert_eq!(back.len(), 1);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quarantine_lifecycle_contains_and_heals() {
+        let mut db = WorkloadDb::new();
+        let l = db.insert_new(char_of(1.0, 4), vec![1.0, 2.0], 4, false);
+        db.set_optimal_measured(l, ConfigIndex([1, 2, 3, 4, 5, 0]), 42.0);
+        let e = db.get(l).unwrap();
+        assert!(e.optimal_config_found);
+        assert_eq!(e.best_duration, Some(42.0));
+
+        assert!(db.quarantine(l));
+        let e = db.get(l).unwrap();
+        assert!(e.quarantined);
+        assert!(!e.optimal_config_found, "quarantine must clear trust");
+        assert!(e.config.is_some(), "config kept for forensics");
+        assert_eq!(db.quarantined_labels(), vec![l]);
+        assert!(!db.quarantine(999), "unknown label is best-effort");
+
+        // a fresh search re-earns trust and lifts the quarantine
+        db.set_optimal_measured(l, ConfigIndex([2, 2, 2, 2, 2, 0]), 30.0);
+        let e = db.get(l).unwrap();
+        assert!(!e.quarantined && e.optimal_config_found);
+        assert!(db.quarantined_labels().is_empty());
+    }
+
+    #[test]
+    fn nearest_skips_nan_characterizations() {
+        let mut db = WorkloadDb::new();
+        let good = db.insert_new(char_of(1.0, 4), vec![1.0, 2.0], 4, false);
+        let bad = db.insert_new(char_of(9.0, 4), vec![9.0, 18.0], 4, false);
+        for s in &mut db.get_mut(bad).unwrap().characterization.per_feature
+        {
+            s.mean = f64::NAN;
+        }
+        // nearest must neither panic nor match the corrupt entry, even
+        // when the query sits right on top of it
+        let (l, d) = db.nearest(&char_of(9.0, 4)).unwrap();
+        assert_eq!(l, good);
+        assert!(d.is_finite());
+        let (l2, _) = db.nearest_observed(&char_of(9.0, 4)).unwrap();
+        assert_eq!(l2, good);
+    }
+
+    #[test]
+    fn audit_quarantines_corrupt_entries_once() {
+        let mut db = WorkloadDb::new();
+        let ok = db.insert_new(char_of(1.0, 4), vec![1.0, 2.0], 4, false);
+        let nan_centroid =
+            db.insert_new(char_of(2.0, 4), vec![f64::NAN, 4.0], 4, false);
+        let off_grid = db.insert_new(char_of(3.0, 4), vec![3.0, 6.0], 4, false);
+        db.get_mut(off_grid).unwrap().config =
+            Some(ConfigIndex([99, 0, 0, 0, 0, 0]));
+
+        let mut swept = db.audit_quarantine();
+        swept.sort_unstable();
+        assert_eq!(swept, vec![nan_centroid, off_grid]);
+        assert!(!db.get(ok).unwrap().quarantined);
+        // idempotent: already-quarantined entries are not re-reported
+        assert!(db.audit_quarantine().is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_keeps_quarantine_and_is_backward_compatible() {
+        let mut db = WorkloadDb::new();
+        let l0 = db.insert_new(char_of(1.0, 4), vec![1.0, 2.0], 4, false);
+        let l1 = db.insert_new(char_of(5.0, 4), vec![5.0, 10.0], 4, false);
+        db.set_optimal_measured(l0, ConfigIndex([1, 1, 1, 1, 1, 0]), 17.5);
+        db.quarantine(l1);
+        let back = WorkloadDb::from_json(&db.to_json()).unwrap();
+        assert_eq!(back.get(l0).unwrap().best_duration, Some(17.5));
+        assert!(back.get(l1).unwrap().quarantined);
+
+        // a snapshot written before the chaos lab lacks both keys
+        let mut j = db.to_json();
+        let pruned: Vec<Json> = j
+            .get("workloads")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|w| {
+                let mut o = Json::obj();
+                for k in [
+                    "label",
+                    "optimal_config_found",
+                    "is_drifting",
+                    "window_count",
+                    "synthetic",
+                    "centroid",
+                    "characterization",
+                    "config",
+                    "parents",
+                ] {
+                    o.set(k, w.get(k).unwrap().clone());
+                }
+                o
+            })
+            .collect();
+        j.set("workloads", Json::Arr(pruned));
+        let old = WorkloadDb::from_json(&j).unwrap();
+        assert!(!old.get(l0).unwrap().quarantined);
+        assert_eq!(old.get(l0).unwrap().best_duration, None);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! reproduced results.
 
 pub mod benchkit;
+pub mod chaoslab;
 pub mod clustering;
 pub mod coordinator;
 pub mod experiments;

@@ -16,7 +16,7 @@ pub use classifier::{
 };
 pub use context::{ContextBus, ContextStream, WorkloadContext, UNKNOWN};
 pub use pipeline::OnlinePipeline;
-pub use plugin::{ChoiceKind, KermitPlugin, PluginStats};
+pub use plugin::{ChoiceKind, KermitPlugin, PluginStats, ResiliencePolicy};
 pub use predictor::{
     sequence_accuracy, LabelPredictor, LastValuePredictor, MarkovPredictor,
 };

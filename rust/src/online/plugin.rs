@@ -50,6 +50,14 @@ pub struct PluginStats {
     /// plane persisted an optimum for the same label first (the
     /// cross-tenant search dedup — probes this tenant did NOT pay).
     pub searches_abandoned: usize,
+    /// Searches written off without a trusted optimum: step cap or
+    /// failed-measurement streak tripped, or every probe died.
+    pub searches_failed: usize,
+    /// Probe measurements that came back failed (job died / timed out).
+    pub probes_failed: usize,
+    /// Requests served the safe fallback because the label was inside a
+    /// failure-backoff window.
+    pub backoffs: usize,
 }
 
 impl PluginStats {
@@ -79,6 +87,32 @@ impl PluginStats {
     }
 }
 
+/// How the plug-in degrades when probes keep dying (fault hardening).
+/// Defaults are generous enough that healthy runs never hit them.
+#[derive(Debug, Clone)]
+pub struct ResiliencePolicy {
+    /// Bound on total probes per search session (0 = uncapped; the
+    /// Explorer's own budget then bounds the session).
+    pub session_step_cap: usize,
+    /// Consecutive failed measurements before a session abandons.
+    pub max_failed_streak: usize,
+    /// Requests to skip (serving the safe fallback) after a probe
+    /// failure; doubles per consecutive failure up to `backoff_cap`.
+    pub backoff_base: usize,
+    pub backoff_cap: usize,
+}
+
+impl Default for ResiliencePolicy {
+    fn default() -> Self {
+        ResiliencePolicy {
+            session_step_cap: 0,
+            max_failed_streak: 6,
+            backoff_base: 2,
+            backoff_cap: 16,
+        }
+    }
+}
+
 enum SessionKind {
     Global,
     Local,
@@ -94,10 +128,16 @@ pub struct KermitPlugin {
     /// Maximum age (seconds) of the latest context before it is
     /// considered out-of-sync (Algorithm 1's error path).
     pub max_context_age: f64,
+    pub resilience: ResiliencePolicy,
     default_config: ConfigIndex,
     sessions: BTreeMap<u32, (SessionKind, SearchSession)>,
     /// The label whose probe is outstanding, if any.
     outstanding: Option<u32>,
+    /// Per-label remaining backoff window (requests to serve the safe
+    /// fallback before probing the label again).
+    backoff: BTreeMap<u32, usize>,
+    /// Per-label consecutive probe-failure count (escalates backoff).
+    fail_count: BTreeMap<u32, u32>,
     pub stats: PluginStats,
 }
 
@@ -111,9 +151,12 @@ impl KermitPlugin {
             context,
             explorer_config: ExplorerConfig::default(),
             max_context_age: 120.0,
+            resilience: ResiliencePolicy::default(),
             default_config: default_config_index(),
             sessions: BTreeMap::new(),
             outstanding: None,
+            backoff: BTreeMap::new(),
+            fail_count: BTreeMap::new(),
             stats: PluginStats::default(),
         }
     }
@@ -154,6 +197,23 @@ impl KermitPlugin {
             self.stats.defaults += 1;
             return (self.default_config, ChoiceKind::Default);
         }
+        // a probe is still unresolved (its job has neither completed
+        // nor failed yet — possible only when a fault interleaved the
+        // streams): never advance or create sessions on top of it,
+        // serve the safe fallback until the plane resolves the probe
+        if self.outstanding.is_some() && self.outstanding != Some(label) {
+            return self.safe_fallback(label);
+        }
+        // a label inside its failure-backoff window is not probed:
+        // repeated dying measurements must not burn the whole budget
+        if let Some(rem) = self.backoff.get_mut(&label) {
+            if *rem > 0 {
+                *rem -= 1;
+                self.stats.backoffs += 1;
+                return self.safe_fallback(label);
+            }
+            self.backoff.remove(&label);
+        }
         // an existing session for this label takes priority — unless a
         // *different* plug-in sharing the knowledge plane persisted an
         // optimum for it while our search was in flight (the optimal
@@ -166,7 +226,7 @@ impl KermitPlugin {
                 let stored = {
                     let db = self.db.read().unwrap();
                     db.get(label)
-                        .filter(|e| e.optimal_config_found)
+                        .filter(|e| e.optimal_config_found && !e.quarantined)
                         .and_then(|e| e.config)
                 };
                 if let Some(cfg) = stored {
@@ -181,6 +241,11 @@ impl KermitPlugin {
         let (known, optimal, drifting, stored) = {
             let db = self.db.read().unwrap();
             match db.get(label) {
+                // a quarantined entry is known but its stored optimum
+                // is untrusted: force a fresh global search — never
+                // serve the poisoned config, never seed a local search
+                // from it
+                Some(e) if e.quarantined => (true, false, false, None),
                 Some(e) => {
                     (true, e.optimal_config_found, e.is_drifting, e.config)
                 }
@@ -197,7 +262,7 @@ impl KermitPlugin {
             return (stored.expect("optimal flag without config"), ChoiceKind::CacheHit);
         }
         // start the right kind of session
-        let (kind, session) = match (drifting, stored) {
+        let (kind, mut session) = match (drifting, stored) {
             (true, Some(start)) => (
                 SessionKind::Local,
                 SearchSession::local(self.explorer_config.clone(), start),
@@ -207,8 +272,40 @@ impl KermitPlugin {
                 SearchSession::global(self.explorer_config.clone()),
             ),
         };
+        if self.resilience.session_step_cap > 0 {
+            session.set_step_cap(self.resilience.session_step_cap);
+        }
+        session.set_max_failed_streak(self.resilience.max_failed_streak);
         self.sessions.insert(label, (kind, session));
         self.advance_session(label)
+    }
+
+    /// The degraded-mode choice: a stored, trusted optimum if one
+    /// exists (e.g. a peer converged while this label is backing off),
+    /// else the vendor default.
+    fn safe_fallback(&mut self, label: u32) -> (ConfigIndex, ChoiceKind) {
+        let stored = {
+            let db = self.db.read().unwrap();
+            db.get(label)
+                .filter(|e| e.optimal_config_found && !e.quarantined)
+                .and_then(|e| e.config)
+        };
+        self.stats.defaults += 1;
+        (stored.unwrap_or(self.default_config), ChoiceKind::Default)
+    }
+
+    /// Escalate the per-label failure backoff window.
+    fn note_failure(&mut self, label: u32) {
+        let c = self.fail_count.entry(label).or_insert(0);
+        *c += 1;
+        let skip = self
+            .resilience
+            .backoff_base
+            .saturating_mul(1usize << (*c - 1).min(8) as usize)
+            .min(self.resilience.backoff_cap);
+        if skip > 0 {
+            self.backoff.insert(label, skip);
+        }
     }
 
     fn advance_session(&mut self, label: u32) -> (ConfigIndex, ChoiceKind) {
@@ -232,34 +329,83 @@ impl KermitPlugin {
                 self.outstanding = Some(label);
                 (c, choice)
             }
-            SessionStep::Done(r) => {
+            SessionStep::Done(r) if r.best_duration.is_finite() => {
                 // search converged: persist and serve the optimum
                 self.sessions.remove(&label);
+                self.fail_count.remove(&label);
                 self.stats.searches_completed += 1;
                 self.stats.cache_hits += 1;
-                self.db
-                    .write()
-                    .unwrap()
-                    .set_optimal_config(label, r.best);
+                self.db.write().unwrap().set_optimal_measured(
+                    label,
+                    r.best,
+                    r.best_duration,
+                );
                 (r.best, ChoiceKind::CacheHit)
+            }
+            SessionStep::Done(_) | SessionStep::Abandoned(_) => {
+                // the search died (every probe failed) or abandoned
+                // itself (step cap / failure streak): nothing trusted
+                // was learned — never persist a garbage optimum
+                // cluster-wide, open a backoff window instead
+                self.sessions.remove(&label);
+                self.stats.searches_failed += 1;
+                self.note_failure(label);
+                self.stats.defaults += 1;
+                (self.default_config, ChoiceKind::Default)
             }
         }
     }
 
     /// Feed back the measured duration of the last probe for `label`.
-    /// No-op when no search is outstanding (cache hits / defaults).
+    /// No-op when no search is outstanding (cache hits / defaults). A
+    /// non-finite duration counts as a failed probe and escalates the
+    /// label's backoff.
     pub fn record_measurement(&mut self, label: u32, duration: f64) {
         if self.outstanding == Some(label) {
             if let Some((_, session)) = self.sessions.get_mut(&label) {
                 session.report(duration);
             }
             self.outstanding = None;
+            if duration.is_finite() {
+                self.fail_count.remove(&label);
+            } else {
+                self.stats.probes_failed += 1;
+                self.note_failure(label);
+            }
+        }
+    }
+
+    /// Write off the outstanding probe for `label`: its job died or the
+    /// decision timed out, and no measurement will ever arrive. The
+    /// session is fed a failure (driving its abandon guard) and the
+    /// label backs off. The per-tenant decide path can then never wedge
+    /// on a measurement that is not coming.
+    pub fn fail_probe(&mut self, label: u32) {
+        if self.outstanding == Some(label) {
+            self.record_measurement(label, f64::INFINITY);
         }
     }
 
     /// True while a search for `label` is in progress.
     pub fn searching(&self, label: u32) -> bool {
         self.sessions.contains_key(&label)
+    }
+
+    /// The label whose probe measurement is still pending, if any.
+    /// After a run fully drains, a `Some` here is a wedged session —
+    /// the chaos lab's livelock observable.
+    pub fn outstanding_label(&self) -> Option<u32> {
+        self.outstanding
+    }
+
+    /// Number of search sessions currently open.
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Is the label inside its failure-backoff window?
+    pub fn in_backoff(&self, label: u32) -> bool {
+        self.backoff.get(&label).map(|r| *r > 0).unwrap_or(false)
     }
 }
 
@@ -396,6 +542,129 @@ mod tests {
         assert_eq!(s.probes_paid(), 6);
         assert_eq!(s.count(ChoiceKind::CacheHit), 2);
         assert_eq!(s.count(ChoiceKind::GlobalProbe), 5);
+    }
+
+    #[test]
+    fn failed_probes_open_backoff_then_recovery_converges() {
+        let (db, ctx, label) = setup();
+        let mut p = KermitPlugin::new(db.clone(), ctx);
+        p.resilience.max_failed_streak = 2;
+        p.resilience.backoff_base = 2;
+        p.resilience.backoff_cap = 4;
+
+        // first probe dies: the label must enter a backoff window and
+        // the next requests get the safe fallback, not a probe
+        let (_, k) = p.choose_config_for_label(label);
+        assert_eq!(k, ChoiceKind::GlobalProbe);
+        p.record_measurement(label, f64::INFINITY);
+        assert_eq!(p.stats.probes_failed, 1);
+        assert!(p.in_backoff(label));
+        for _ in 0..2 {
+            let (_, k) = p.choose_config_for_label(label);
+            assert_eq!(k, ChoiceKind::Default);
+        }
+        assert_eq!(p.stats.backoffs, 2);
+        assert!(!p.in_backoff(label), "window must drain");
+
+        // window drained: probing resumes, and finite measurements
+        // drive the (still open) session to a normal convergence
+        let mut guard = 0;
+        loop {
+            let (c, k) = p.choose_config_for_label(label);
+            match k {
+                ChoiceKind::GlobalProbe => {
+                    guard += 1;
+                    assert!(guard < 1000, "never converged");
+                    p.record_measurement(
+                        label,
+                        job_duration(2, &c.to_config()),
+                    );
+                }
+                ChoiceKind::CacheHit => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(p.stats.searches_completed, 1);
+        assert_eq!(p.outstanding_label(), None);
+        assert_eq!(p.open_sessions(), 0);
+        let e = db.read().unwrap().get(label).cloned().unwrap();
+        assert!(e.optimal_config_found);
+        assert!(e.best_duration.is_some(), "measured optimum recorded");
+    }
+
+    #[test]
+    fn abandoned_session_never_persists_an_optimum() {
+        let (db, ctx, label) = setup();
+        let mut p = KermitPlugin::new(db.clone(), ctx);
+        p.resilience.max_failed_streak = 2;
+        // every probe dies until the session abandons; the request that
+        // observes the abandonment degrades to the default
+        let mut requests = 0;
+        loop {
+            requests += 1;
+            assert!(requests < 100, "abandon guard never tripped");
+            let (_, k) = p.choose_config_for_label(label);
+            match k {
+                ChoiceKind::GlobalProbe => {
+                    p.record_measurement(label, f64::INFINITY)
+                }
+                ChoiceKind::Default => {
+                    if p.stats.searches_failed > 0 {
+                        break;
+                    }
+                    // backoff-window fallback: keep going
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(p.stats.searches_failed, 1);
+        assert_eq!(p.open_sessions(), 0, "failed session must close");
+        assert_eq!(p.outstanding_label(), None, "no wedged probe");
+        assert!(
+            !db.read().unwrap().get(label).unwrap().optimal_config_found,
+            "a failed search persisted a garbage optimum"
+        );
+    }
+
+    #[test]
+    fn quarantined_entry_forces_fresh_global_search() {
+        let (db, ctx, label) = setup();
+        let mut p = KermitPlugin::new(db.clone(), ctx);
+        // converge once, then poison-quarantine the label
+        loop {
+            let (c, k) = p.choose_config_for_label(label);
+            match k {
+                ChoiceKind::GlobalProbe => {
+                    p.record_measurement(label, job_duration(2, &c.to_config()))
+                }
+                ChoiceKind::CacheHit => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        db.write().unwrap().quarantine(label);
+        // the poisoned optimum is never served — a fresh global search
+        // starts instead, and its convergence lifts the quarantine
+        let (c0, k0) = p.choose_config_for_label(label);
+        assert_eq!(k0, ChoiceKind::GlobalProbe, "served a poisoned optimum");
+        p.record_measurement(label, job_duration(2, &c0.to_config()));
+        let mut guard = 0;
+        loop {
+            let (c, k) = p.choose_config_for_label(label);
+            match k {
+                ChoiceKind::GlobalProbe => {
+                    guard += 1;
+                    assert!(guard < 2000, "re-search never converged");
+                    p.record_measurement(
+                        label,
+                        job_duration(2, &c.to_config()),
+                    );
+                }
+                ChoiceKind::CacheHit => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let e = db.read().unwrap().get(label).cloned().unwrap();
+        assert!(!e.quarantined && e.optimal_config_found);
     }
 
     #[test]

@@ -1,0 +1,422 @@
+//! Deterministic fault injection for the multi-tenant simcluster.
+//!
+//! The chaos lab (`crate::chaoslab`) drives [`MultiClusterEngine`] runs
+//! through a [`FaultPlan`]: a seeded, scripted description of everything
+//! that can go wrong on a real shared cluster — straggler executors,
+//! container preemption mid-job, noisy-neighbor interference, tenant
+//! churn, coordinated drift storms. The engine consults a [`FaultLayer`]
+//! (the plan plus its runtime state) at well-defined points of the
+//! event loop; an inert plan (the default) draws no random numbers and
+//! perturbs nothing, so fault-free runs stay bit-identical to the
+//! pre-chaos engine.
+//!
+//! [`MultiClusterEngine`]: crate::simcluster::MultiClusterEngine
+
+use crate::features::TenantId;
+use crate::util::rng::Rng;
+
+/// Straggler executors: each granted container independently runs slow
+/// with probability `prob`; a job's duration stretches by the straggler
+/// fraction of its fleet (tail latency is set by the slowest wave).
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerFault {
+    /// Per-container probability of being a straggler.
+    pub prob: f64,
+    /// Duration multiplier when the whole fleet straggles; a fleet with
+    /// straggler fraction f runs `1 + f * (slowdown - 1)` times longer.
+    pub slowdown: f64,
+}
+
+/// Container preemption mid-job: with probability `prob` per started
+/// job, a preemption event fires strictly inside the job's runtime,
+/// kills `kill_frac` of its containers, and asks the RM to re-grant
+/// replacements. The job finishes its remaining work on whatever fleet
+/// survives, paying `restart_penalty` on the remainder (lost shuffle
+/// state, task re-launch). A job that loses every container and gets
+/// nothing back from the RM fails outright.
+#[derive(Debug, Clone, Copy)]
+pub struct PreemptionFault {
+    /// Per-job probability of one preemption event.
+    pub prob: f64,
+    /// Fraction of the job's containers killed (at least one).
+    pub kill_frac: f64,
+    /// Multiplier on the remaining work after a survived preemption.
+    pub restart_penalty: f64,
+    /// Probability the RM has *nothing* to re-grant — the preempting
+    /// demand kept the freed capacity. (Freed containers would
+    /// otherwise be handed straight back, and a total loss could never
+    /// actually fail a job.)
+    pub regrant_denied_prob: f64,
+}
+
+/// Noisy-neighbor interference: inside the `[from, until)` window,
+/// co-located work steals an `intensity` fraction of every granted
+/// fleet's effective capacity. Containers are still held (the RM
+/// accounting is untouched); only the perf-model fleet shrinks.
+#[derive(Debug, Clone, Copy)]
+pub struct NoisyNeighborFault {
+    pub from: f64,
+    pub until: f64,
+    /// Fraction of effective executors lost, in [0, 1).
+    pub intensity: f64,
+}
+
+/// Tenant churn: at time `at` the tenant disconnects — its queue is
+/// cleared, its running job is killed (containers released, no record),
+/// and any decision-pending job fails so the tuning plane is told.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnEvent {
+    pub tenant: TenantId,
+    pub at: f64,
+}
+
+/// Coordinated drift storm: from `from + tenant_index * phase_shift`
+/// onward, every tenant's job samples drift — feature values scale by
+/// `1 + rate * seconds_into_storm` (capped) — so the classifiers see
+/// the same workload slide away from its learned centroid on every
+/// shard at once, phase-shifted like a rolling config push.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftStorm {
+    pub from: f64,
+    /// Per-second multiplicative drift rate on the feature vector.
+    pub rate: f64,
+    /// Per-tenant onset delay (tenant k starts at `from + k * phase_shift`).
+    pub phase_shift: f64,
+}
+
+/// A scripted description of what goes wrong during a run. `Default`
+/// is completely inert: no faults, no RNG draws, no behavior change.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub stragglers: Option<StragglerFault>,
+    pub preemption: Option<PreemptionFault>,
+    pub noisy_neighbor: Option<NoisyNeighborFault>,
+    pub churn: Vec<ChurnEvent>,
+    pub drift_storm: Option<DriftStorm>,
+    /// Per-tenant budget of job re-queues after a total-loss preemption
+    /// failure; past it the job is dropped (and counted).
+    pub max_requeues: u32,
+}
+
+impl FaultPlan {
+    pub fn is_inert(&self) -> bool {
+        self.stragglers.is_none()
+            && self.preemption.is_none()
+            && self.noisy_neighbor.is_none()
+            && self.churn.is_empty()
+            && self.drift_storm.is_none()
+    }
+}
+
+/// What the fault layer actually did during a run — the ground truth
+/// the chaos scoreboard diffs against plugin/plane-side observations.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultReport {
+    /// Jobs whose fleet contained at least one straggler.
+    pub straggler_jobs: usize,
+    /// Jobs whose effective fleet was shrunk by interference.
+    pub interference_jobs: usize,
+    /// Preemption events that fired.
+    pub preemptions: usize,
+    /// Containers killed by preemption.
+    pub containers_preempted: usize,
+    /// Replacement containers the RM re-granted after preemption.
+    pub regrants: usize,
+    /// Jobs that failed outright (total container loss, nothing back).
+    pub jobs_failed: usize,
+    /// Failed jobs re-queued for another attempt.
+    pub jobs_requeued: usize,
+    /// Jobs dropped: requeue budget exhausted or churned away.
+    pub jobs_dropped: usize,
+    /// Churn events that fired.
+    pub tenants_churned: usize,
+    /// Samples perturbed by the drift storm.
+    pub drifted_samples: usize,
+}
+
+/// Runtime state of a [`FaultPlan`] over one engine run: the seeded
+/// fault RNG, the churn schedule cursor, and per-tenant requeue budgets.
+#[derive(Debug, Clone)]
+pub struct FaultLayer {
+    plan: FaultPlan,
+    rng: Rng,
+    /// Churn events sorted by time; `churn_fired` marks consumed ones.
+    churn: Vec<ChurnEvent>,
+    churn_fired: Vec<bool>,
+    requeues_used: std::collections::BTreeMap<TenantId, u32>,
+    pub report: FaultReport,
+}
+
+impl FaultLayer {
+    /// An inert layer: injects nothing, draws nothing.
+    pub fn inert() -> FaultLayer {
+        FaultLayer::new(FaultPlan::default(), 0)
+    }
+
+    pub fn new(plan: FaultPlan, seed: u64) -> FaultLayer {
+        let mut churn = plan.churn.clone();
+        churn.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.tenant.0.cmp(&b.tenant.0))
+        });
+        let n = churn.len();
+        FaultLayer {
+            plan,
+            rng: Rng::new(seed ^ 0xC4A0_51AB_FA17_0000),
+            churn,
+            churn_fired: vec![false; n],
+            requeues_used: std::collections::BTreeMap::new(),
+            report: FaultReport::default(),
+        }
+    }
+
+    pub fn is_inert(&self) -> bool {
+        self.plan.is_inert()
+    }
+
+    /// Duration multiplier from straggler containers in an `n`-container
+    /// fleet. Draws one Bernoulli per container (deterministic in event
+    /// order); 1.0 and no draws when the fault is off.
+    pub fn straggler_slowdown(&mut self, n: usize) -> f64 {
+        let Some(f) = self.plan.stragglers else { return 1.0 };
+        let mut stragglers = 0usize;
+        for _ in 0..n {
+            if self.rng.chance(f.prob) {
+                stragglers += 1;
+            }
+        }
+        if stragglers == 0 || n == 0 {
+            return 1.0;
+        }
+        self.report.straggler_jobs += 1;
+        let frac = stragglers as f64 / n as f64;
+        1.0 + frac * (f.slowdown - 1.0).max(0.0)
+    }
+
+    /// Effective executor count after noisy-neighbor interference at
+    /// `now`: the perf model prices the shrunken fleet although the RM
+    /// still holds every container.
+    pub fn effective_executors(&mut self, now: f64, granted: u32) -> u32 {
+        let Some(f) = self.plan.noisy_neighbor else { return granted };
+        if now < f.from || now >= f.until || granted == 0 {
+            return granted;
+        }
+        let stolen = (granted as f64 * f.intensity).ceil() as u32;
+        let eff = granted.saturating_sub(stolen).max(1);
+        if eff < granted {
+            self.report.interference_jobs += 1;
+        }
+        eff
+    }
+
+    /// Schedule at most one preemption for a job spanning
+    /// `[start, end)`, strictly inside its runtime. None when the fault
+    /// is off or the draw misses.
+    pub fn schedule_preemption(&mut self, start: f64, end: f64) -> Option<f64> {
+        let f = self.plan.preemption?;
+        if end <= start || !self.rng.chance(f.prob) {
+            return None;
+        }
+        // strictly interior so the event fires before completion
+        Some(start + self.rng.range_f64(0.15, 0.85) * (end - start))
+    }
+
+    /// How many of `n` containers a firing preemption kills (>= 1).
+    pub fn preempt_kill_count(&self, n: usize) -> usize {
+        let frac =
+            self.plan.preemption.map(|f| f.kill_frac).unwrap_or(0.0);
+        ((n as f64 * frac).round() as usize).clamp(1, n)
+    }
+
+    /// Does the preempting demand keep the freed capacity? One draw
+    /// per firing preemption.
+    pub fn regrant_denied(&mut self) -> bool {
+        let Some(f) = self.plan.preemption else { return false };
+        self.rng.chance(f.regrant_denied_prob)
+    }
+
+    pub fn restart_penalty(&self) -> f64 {
+        self.plan
+            .preemption
+            .map(|f| f.restart_penalty.max(1.0))
+            .unwrap_or(1.0)
+    }
+
+    /// Earliest unfired churn event time, if any.
+    pub fn next_churn_at(&self) -> Option<f64> {
+        self.churn
+            .iter()
+            .zip(&self.churn_fired)
+            .find(|(_, fired)| !**fired)
+            .map(|(e, _)| e.at)
+    }
+
+    /// Pop every churn event due at or before `now` (fires each once).
+    pub fn due_churn(&mut self, now: f64) -> Vec<TenantId> {
+        let mut due = Vec::new();
+        for (i, e) in self.churn.iter().enumerate() {
+            if !self.churn_fired[i] && e.at <= now + 1e-9 {
+                self.churn_fired[i] = true;
+                due.push(e.tenant);
+            }
+        }
+        self.report.tenants_churned += due.len();
+        due
+    }
+
+    /// May tenant `t` requeue one more failed job? Consumes budget.
+    pub fn allow_requeue(&mut self, t: TenantId) -> bool {
+        let used = self.requeues_used.entry(t).or_insert(0);
+        if *used < self.plan.max_requeues {
+            *used += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Apply the drift storm to a tenant's emitted job samples in
+    /// place. Features scale by `1 + rate * seconds_into_storm`, capped
+    /// at 3x so the storm stays a drift, not an explosion.
+    pub fn transform_samples(
+        &mut self,
+        t: TenantId,
+        samples: &mut [crate::workloadgen::Sample],
+    ) {
+        let Some(f) = self.plan.drift_storm else { return };
+        let onset = f.from + t.0 as f64 * f.phase_shift.max(0.0);
+        for s in samples.iter_mut() {
+            if s.time < onset {
+                continue;
+            }
+            let scale =
+                (1.0 + f.rate * (s.time - onset)).clamp(1.0, 3.0);
+            if scale > 1.0 {
+                for v in s.features.iter_mut() {
+                    *v *= scale;
+                }
+                self.report.drifted_samples += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_layer_is_neutral_and_drawless() {
+        let mut layer = FaultLayer::inert();
+        let before = layer.rng.clone();
+        assert_eq!(layer.straggler_slowdown(8), 1.0);
+        assert_eq!(layer.effective_executors(100.0, 8), 8);
+        assert_eq!(layer.schedule_preemption(0.0, 100.0), None);
+        assert_eq!(layer.next_churn_at(), None);
+        assert!(layer.due_churn(1e9).is_empty());
+        // no RNG state advanced: fault-free runs stay bit-identical
+        let mut a = before;
+        assert_eq!(a.next_u64(), layer.rng.clone().next_u64());
+        assert_eq!(layer.report.straggler_jobs, 0);
+    }
+
+    #[test]
+    fn fault_draws_are_seed_deterministic() {
+        let plan = FaultPlan {
+            stragglers: Some(StragglerFault { prob: 0.3, slowdown: 3.0 }),
+            preemption: Some(PreemptionFault {
+                prob: 0.5,
+                kill_frac: 0.5,
+                restart_penalty: 1.2,
+                regrant_denied_prob: 0.5,
+            }),
+            ..Default::default()
+        };
+        let run = |seed: u64| {
+            let mut layer = FaultLayer::new(plan.clone(), seed);
+            let slows: Vec<f64> =
+                (0..10).map(|_| layer.straggler_slowdown(6)).collect();
+            let preempts: Vec<Option<f64>> = (0..10)
+                .map(|i| {
+                    layer.schedule_preemption(i as f64 * 50.0, i as f64 * 50.0 + 40.0)
+                })
+                .collect();
+            (slows, preempts)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8), "different seeds gave identical faults");
+    }
+
+    #[test]
+    fn noisy_neighbor_window_and_floor() {
+        let plan = FaultPlan {
+            noisy_neighbor: Some(NoisyNeighborFault {
+                from: 100.0,
+                until: 200.0,
+                intensity: 0.5,
+            }),
+            ..Default::default()
+        };
+        let mut layer = FaultLayer::new(plan, 1);
+        assert_eq!(layer.effective_executors(50.0, 8), 8, "before window");
+        assert_eq!(layer.effective_executors(150.0, 8), 4, "inside window");
+        assert_eq!(layer.effective_executors(150.0, 1), 1, "floor of one");
+        assert_eq!(layer.effective_executors(250.0, 8), 8, "after window");
+        assert_eq!(layer.report.interference_jobs, 1);
+    }
+
+    #[test]
+    fn churn_fires_once_in_time_order() {
+        let plan = FaultPlan {
+            churn: vec![
+                ChurnEvent { tenant: TenantId(2), at: 300.0 },
+                ChurnEvent { tenant: TenantId(0), at: 100.0 },
+            ],
+            ..Default::default()
+        };
+        let mut layer = FaultLayer::new(plan, 1);
+        assert_eq!(layer.next_churn_at(), Some(100.0));
+        assert_eq!(layer.due_churn(150.0), vec![TenantId(0)]);
+        assert_eq!(layer.next_churn_at(), Some(300.0));
+        assert_eq!(layer.due_churn(400.0), vec![TenantId(2)]);
+        assert!(layer.due_churn(500.0).is_empty(), "churn refired");
+        assert_eq!(layer.report.tenants_churned, 2);
+    }
+
+    #[test]
+    fn requeue_budget_is_per_tenant() {
+        let plan = FaultPlan { max_requeues: 2, ..Default::default() };
+        let mut layer = FaultLayer::new(plan, 1);
+        assert!(layer.allow_requeue(TenantId(0)));
+        assert!(layer.allow_requeue(TenantId(0)));
+        assert!(!layer.allow_requeue(TenantId(0)), "budget exceeded");
+        assert!(layer.allow_requeue(TenantId(1)), "budgets not shared");
+    }
+
+    #[test]
+    fn drift_storm_is_phase_shifted_and_capped() {
+        use crate::workloadgen::TruthTag;
+        let plan = FaultPlan {
+            drift_storm: Some(DriftStorm {
+                from: 100.0,
+                rate: 0.01,
+                phase_shift: 50.0,
+            }),
+            ..Default::default()
+        };
+        let mut layer = FaultLayer::new(plan, 1);
+        let mk = |t: f64| crate::workloadgen::Sample {
+            time: t,
+            features: [1.0; crate::features::NUM_FEATURES],
+            truth: TruthTag::Steady(0),
+        };
+        let mut s = vec![mk(50.0), mk(150.0), mk(100_000.0)];
+        layer.transform_samples(TenantId(1), &mut s);
+        // tenant 1's onset is 100 + 50 = 150: first two untouched
+        assert_eq!(s[0].features[0], 1.0);
+        assert_eq!(s[1].features[0], 1.0);
+        assert_eq!(s[2].features[0], 3.0, "cap at 3x");
+        assert_eq!(layer.report.drifted_samples, 1);
+    }
+}

@@ -7,12 +7,17 @@
 
 pub mod config_space;
 pub mod engine;
+pub mod fault;
 pub mod multi;
 pub mod perfmodel;
 pub mod rm;
 
 pub use config_space::{default_config_index, ConfigIndex, TuningConfig};
 pub use engine::{run_jobs, EngineConfig, JobRecord, JobSpec, SimResult};
+pub use fault::{
+    ChurnEvent, DriftStorm, FaultLayer, FaultPlan, FaultReport,
+    NoisyNeighborFault, PreemptionFault, StragglerFault,
+};
 pub use multi::{
     FixedConfigTenants, MultiClusterEngine, MultiEngineConfig,
     MultiSimResult, TenantRmPlugin, TenantSimLog,

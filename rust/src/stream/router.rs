@@ -109,6 +109,11 @@ pub struct TenantShard {
     /// so cursor-based consumers (the adaptive-cadence counters) never
     /// silently skip or double-count entries.
     pub contexts_published: u64,
+    /// Monotone count of log entries (contexts + observed windows) the
+    /// shard-log cap has dropped — the back-pressure observable: a
+    /// nonzero value means the off-line consumer fell behind and the
+    /// bounded logs shed telemetry to protect memory.
+    pub windows_dropped: u64,
     log_cap: usize,
 }
 
@@ -127,6 +132,7 @@ impl TenantShard {
             observed: Vec::new(),
             contexts: Vec::new(),
             contexts_published: 0,
+            windows_dropped: 0,
             log_cap: config.shard_log_cap.max(2),
         }
     }
@@ -144,8 +150,10 @@ impl TenantShard {
         // memory bound for long-running shards: both logs drop their
         // oldest half past the cap (take_observed normally drains
         // `observed` every tick, far below it)
-        cap_log(&mut self.contexts, self.log_cap);
-        cap_log(&mut self.observed, self.log_cap);
+        self.windows_dropped +=
+            cap_log(&mut self.contexts, self.log_cap) as u64;
+        self.windows_dropped +=
+            cap_log(&mut self.observed, self.log_cap) as u64;
         n
     }
 
@@ -161,11 +169,15 @@ impl TenantShard {
     }
 }
 
-/// Drop the oldest half of `log` once it exceeds `cap`.
-fn cap_log<T>(log: &mut Vec<T>, cap: usize) {
+/// Drop the oldest half of `log` once it exceeds `cap`; returns how
+/// many entries were dropped.
+fn cap_log<T>(log: &mut Vec<T>, cap: usize) -> usize {
     if log.len() > cap {
         let cut = log.len() - cap / 2;
         log.drain(..cut);
+        cut
+    } else {
+        0
     }
 }
 
@@ -322,6 +334,13 @@ impl StreamRouter {
     pub fn bus(&self) -> &ContextBus {
         &self.bus
     }
+
+    /// Total log entries dropped by shard-log overflow across every
+    /// shard — surfaced in `MultiTenantReport::windows_dropped` so
+    /// silent telemetry shedding is visible cluster-wide.
+    pub fn windows_dropped(&self) -> u64 {
+        self.shards.values().map(|s| s.windows_dropped).sum()
+    }
 }
 
 #[cfg(test)]
@@ -420,6 +439,15 @@ mod tests {
             "context log {} outside [8, 16]",
             shard.contexts.len()
         );
+        // the shedding is counted, not silent: every entry the cap
+        // dropped (from both logs, which grow in lockstep here) shows
+        // up in windows_dropped, reconcilable against the monotone
+        // published counter
+        let ctx_drops =
+            shard.contexts_published - shard.contexts.len() as u64;
+        assert!(ctx_drops > 0, "cap never bit");
+        assert_eq!(shard.windows_dropped, 2 * ctx_drops);
+        assert_eq!(router.windows_dropped(), 2 * ctx_drops);
         let taken = router.take_observed();
         assert!(taken[0].1.len() <= 16, "observed {}", taken[0].1.len());
     }

@@ -34,7 +34,9 @@ use crate::coordinator::{
     MultiTenantReport,
 };
 use crate::explorer::ExplorerConfig;
-use crate::online::{ChoiceKind, KermitPlugin, PluginStats, UNKNOWN};
+use crate::online::{
+    ChoiceKind, KermitPlugin, PluginStats, ResiliencePolicy, UNKNOWN,
+};
 use crate::simcluster::config_space::{ConfigIndex, TuningConfig};
 use crate::simcluster::multi::{
     MultiClusterEngine, MultiEngineConfig, MultiSimResult, TenantRmPlugin,
@@ -58,6 +60,8 @@ pub struct TuningPlaneConfig {
     /// triggers an early cycle instead of waiting out the fixed union
     /// interval.
     pub cadence: CadencePolicy,
+    /// Fault hardening knobs (defaults keep healthy runs unchanged).
+    pub resilience: TuningResilience,
 }
 
 impl Default for TuningPlaneConfig {
@@ -70,6 +74,37 @@ impl Default for TuningPlaneConfig {
                 unknown_rate: 0.7,
                 min_windows: 8,
             },
+            resilience: TuningResilience::default(),
+        }
+    }
+}
+
+/// How the tuning plane degrades under faults: decision timeouts keep
+/// the per-tenant pending app→label map from wedging on a measurement
+/// that will never arrive; the poison detector quarantines a stored
+/// optimum whose live cache-hit runs are wildly slower than the
+/// duration the search measured.
+#[derive(Debug, Clone)]
+pub struct TuningResilience {
+    /// A decision older than this (sim seconds) with no completion or
+    /// failure is written off as a failed probe.
+    pub decision_timeout: f64,
+    /// Per-plug-in hardening (session caps, probe-failure backoff).
+    pub plugin: ResiliencePolicy,
+    /// A full-fleet cache-hit run slower than `poison_factor` x the
+    /// stored measured optimum counts as one poisoning strike.
+    pub poison_factor: f64,
+    /// Strikes before the label is quarantined.
+    pub poison_strikes: u32,
+}
+
+impl Default for TuningResilience {
+    fn default() -> Self {
+        TuningResilience {
+            decision_timeout: 3600.0,
+            plugin: ResiliencePolicy::default(),
+            poison_factor: 4.0,
+            poison_strikes: 2,
         }
     }
 }
@@ -79,13 +114,35 @@ impl Default for TuningPlaneConfig {
 /// per-kind counts live in `PluginStats`).
 const CHOICE_LOG_CAP: usize = 4096;
 
+/// What a pending decision was (determines the completion edge).
+#[derive(Debug, Clone, Copy)]
+enum PendingKind {
+    /// The measurement at completion must feed exactly this label's
+    /// search session.
+    Probe { label: u32 },
+    /// A served optimum under observation by the poison detector;
+    /// `expected` is the duration the search measured for it.
+    CacheHit { label: u32, expected: Option<f64> },
+}
+
+/// One outstanding decision (app granted but not yet completed/failed).
+#[derive(Debug, Clone, Copy)]
+struct PendingDecision {
+    kind: PendingKind,
+    decided_at: f64,
+    /// Executors Algorithm 1 asked for vs. what the RM granted — the
+    /// poison detector only scores *full-fleet* runs (a degraded fleet
+    /// legitimately runs slow; blaming the stored optimum for it would
+    /// quarantine healthy entries).
+    asked: u32,
+    granted: u32,
+}
+
 /// One tenant's slice of the tuning plane.
 struct TenantTuning {
     plugin: KermitPlugin,
-    /// app_id -> label an outstanding probe decision was made for (the
-    /// measurement at completion must feed exactly that label's
-    /// session).
-    pending: BTreeMap<u64, u32>,
+    /// app_id -> the decision made for it, awaiting its outcome.
+    pending: BTreeMap<u64, PendingDecision>,
     /// Decision log in request order (telemetry + tests; capped at
     /// [`CHOICE_LOG_CAP`]).
     choices: Vec<ChoiceKind>,
@@ -104,6 +161,17 @@ pub struct TuningRunReport {
     pub probes_paid: usize,
     pub searches_completed: usize,
     pub searches_abandoned: usize,
+    /// Searches written off without a trusted optimum (fault hardening).
+    pub searches_failed: usize,
+    /// Probe decisions expired by the decision timeout.
+    pub probes_timed_out: usize,
+    /// Probe decisions whose job died before completing.
+    pub probe_jobs_failed: usize,
+    /// Labels quarantined by the cache-poisoning detector.
+    pub labels_quarantined: usize,
+    /// Plug-ins still waiting on a probe measurement after the run
+    /// fully drained — must be zero (the no-livelock guarantee).
+    pub livelocked_sessions: usize,
 }
 
 impl TuningRunReport {
@@ -130,6 +198,16 @@ pub struct TuningPlane {
     pub cross_tenant_hits: usize,
     /// Windows observed across all ticks driven by this plane.
     windows_observed: usize,
+    /// Fault-hardening knobs (copied into each tenant's plug-in).
+    pub resilience: TuningResilience,
+    /// label -> consecutive poisoning strikes.
+    strikes: BTreeMap<u32, u32>,
+    /// Probe decisions expired by the decision timeout.
+    pub probes_timed_out: usize,
+    /// Probe decisions whose job the fault layer killed.
+    pub probe_jobs_failed: usize,
+    /// Labels the poison detector quarantined.
+    pub labels_quarantined: usize,
 }
 
 impl TuningPlane {
@@ -144,6 +222,11 @@ impl TuningPlane {
             search_owner: BTreeMap::new(),
             cross_tenant_hits: 0,
             windows_observed: 0,
+            resilience: config.resilience,
+            strikes: BTreeMap::new(),
+            probes_timed_out: 0,
+            probe_jobs_failed: 0,
+            labels_quarantined: 0,
         }
     }
 
@@ -163,6 +246,7 @@ impl TuningPlane {
             let mut plugin = KermitPlugin::new(self.coord.db.clone(), ctx);
             plugin.explorer_config = self.explorer.clone();
             plugin.max_context_age = self.max_context_age;
+            plugin.resilience = self.resilience.plugin.clone();
             self.tenants.insert(
                 t,
                 TenantTuning {
@@ -199,6 +283,10 @@ impl TuningPlane {
         now: f64,
     ) -> (ConfigIndex, ChoiceKind) {
         self.ensure_tenant(t);
+        // first, write off any decision the cluster never answered —
+        // a faulted job must not wedge this tenant's pending map (and
+        // through it the plug-in's outstanding probe) forever
+        self.expire_stale(t, now);
         let tt = self.tenants.get_mut(&t).unwrap();
         let label = tt.plugin.current_label(now);
         let completed_before = tt.plugin.stats.searches_completed;
@@ -219,11 +307,40 @@ impl TuningPlane {
             {
                 self.cross_tenant_hits += 1;
             }
-            if matches!(
-                kind,
-                ChoiceKind::GlobalProbe | ChoiceKind::LocalProbe
-            ) {
-                tt.pending.insert(app_id, label);
+            let asked = config.to_config().num_executors;
+            match kind {
+                ChoiceKind::GlobalProbe | ChoiceKind::LocalProbe => {
+                    tt.pending.insert(
+                        app_id,
+                        PendingDecision {
+                            kind: PendingKind::Probe { label },
+                            decided_at: now,
+                            asked,
+                            granted: 0,
+                        },
+                    );
+                }
+                ChoiceKind::CacheHit => {
+                    // arm the poison detector: compare the live run
+                    // against the duration the search measured
+                    let expected = self
+                        .coord
+                        .db
+                        .read()
+                        .unwrap()
+                        .get(label)
+                        .and_then(|e| e.best_duration);
+                    tt.pending.insert(
+                        app_id,
+                        PendingDecision {
+                            kind: PendingKind::CacheHit { label, expected },
+                            decided_at: now,
+                            asked,
+                            granted: 0,
+                        },
+                    );
+                }
+                ChoiceKind::Default => {}
             }
         }
         tt.choices.push(kind);
@@ -235,11 +352,98 @@ impl TuningPlane {
 
     /// Completion feedback for tenant `t`'s application `app_id`.
     pub fn complete(&mut self, t: TenantId, app_id: u64, duration: f64) {
-        if let Some(tt) = self.tenants.get_mut(&t) {
-            if let Some(label) = tt.pending.remove(&app_id) {
+        let Some(tt) = self.tenants.get_mut(&t) else { return };
+        let Some(p) = tt.pending.remove(&app_id) else { return };
+        match p.kind {
+            PendingKind::Probe { label } => {
                 tt.plugin.record_measurement(label, duration);
             }
+            PendingKind::CacheHit { label, expected } => {
+                // poison detection: a full-fleet run of the stored
+                // optimum that is wildly slower than its measured
+                // duration means the entry cannot be trusted
+                let (Some(exp), true) = (expected, p.granted >= p.asked)
+                else {
+                    return;
+                };
+                if duration > self.resilience.poison_factor * exp.max(1e-9)
+                {
+                    let c = self.strikes.entry(label).or_insert(0);
+                    *c += 1;
+                    if *c >= self.resilience.poison_strikes {
+                        self.strikes.remove(&label);
+                        if self.coord.db.write().unwrap().quarantine(label)
+                        {
+                            self.labels_quarantined += 1;
+                        }
+                    }
+                } else {
+                    // a healthy full-fleet hit clears the streak
+                    self.strikes.remove(&label);
+                }
+            }
         }
+    }
+
+    /// Expire tenant `t`'s decisions older than the decision timeout.
+    /// An expired probe is fed to the plug-in as a failed measurement so
+    /// its session can never livelock waiting for one.
+    fn expire_stale(&mut self, t: TenantId, now: f64) {
+        let timeout = self.resilience.decision_timeout;
+        let Some(tt) = self.tenants.get_mut(&t) else { return };
+        let stale: Vec<u64> = tt
+            .pending
+            .iter()
+            .filter(|(_, p)| now - p.decided_at > timeout)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in stale {
+            let p = tt.pending.remove(&id).unwrap();
+            if let PendingKind::Probe { label } = p.kind {
+                tt.plugin.fail_probe(label);
+                self.probes_timed_out += 1;
+            }
+        }
+    }
+
+    /// Expire stale decisions across every tenant (end-of-run sweep —
+    /// pass a `now` beyond the makespan plus the timeout to flush
+    /// everything a faulted run left behind).
+    pub fn reconcile(&mut self, now: f64) {
+        let ids: Vec<TenantId> = self.tenants.keys().copied().collect();
+        for t in ids {
+            self.expire_stale(t, now);
+        }
+    }
+
+    /// Plug-ins still waiting on a probe measurement. After `reconcile`
+    /// this is the chaos lab's livelock observable and must be zero.
+    pub fn livelocked_sessions(&self) -> usize {
+        self.tenants
+            .values()
+            .filter(|tt| tt.plugin.outstanding_label().is_some())
+            .count()
+    }
+
+    /// Outstanding decisions across all tenants.
+    pub fn pending_decisions(&self) -> usize {
+        self.tenants.values().map(|tt| tt.pending.len()).sum()
+    }
+
+    /// Tenants the plane currently tracks.
+    pub fn tenant_ids(&self) -> Vec<TenantId> {
+        self.tenants.keys().copied().collect()
+    }
+
+    /// Flush window batches still pending in the router shards.
+    pub fn drain(&mut self) {
+        self.windows_observed += self.coord.tick();
+    }
+
+    /// Run the knowledge-plane integrity sweep (quarantines corrupt
+    /// entries); returns the labels quarantined by this sweep.
+    pub fn audit_knowledge(&mut self) -> Vec<u32> {
+        self.coord.audit_knowledge()
     }
 
     /// Drive per-tenant job schedules through the shared simcluster
@@ -261,8 +465,12 @@ impl TuningPlane {
             engine.push_jobs(*t, jobs);
         }
         let sim_result = engine.run(self);
-        // drain whatever is still pending in the shards
+        // drain whatever is still pending in the shards, then write off
+        // any decision a faulted run left dangling
         self.windows_observed += self.coord.tick();
+        self.reconcile(
+            sim_result.makespan + self.resilience.decision_timeout + 1.0,
+        );
         self.report(sim_result)
     }
 
@@ -274,16 +482,18 @@ impl TuningPlane {
             .iter()
             .map(|(t, tt)| (*t, tt.plugin.stats.clone()))
             .collect();
-        let (probes, completed, abandoned) = multi.tenant_stats.iter().fold(
-            (0, 0, 0),
-            |(p, c, a), (_, s)| {
-                (
-                    p + s.probes_paid(),
-                    c + s.searches_completed,
-                    a + s.searches_abandoned,
-                )
-            },
-        );
+        let (probes, completed, abandoned, failed) =
+            multi.tenant_stats.iter().fold(
+                (0, 0, 0, 0),
+                |(p, c, a, f), (_, s)| {
+                    (
+                        p + s.probes_paid(),
+                        c + s.searches_completed,
+                        a + s.searches_abandoned,
+                        f + s.searches_failed,
+                    )
+                },
+            );
         TuningRunReport {
             sim,
             multi,
@@ -291,6 +501,11 @@ impl TuningPlane {
             probes_paid: probes,
             searches_completed: completed,
             searches_abandoned: abandoned,
+            searches_failed: failed,
+            probes_timed_out: self.probes_timed_out,
+            probe_jobs_failed: self.probe_jobs_failed,
+            labels_quarantined: self.labels_quarantined,
+            livelocked_sessions: self.livelocked_sessions(),
         }
     }
 }
@@ -318,6 +533,28 @@ impl TenantRmPlugin for TuningPlane {
         _now: f64,
     ) {
         self.complete(t, app_id, duration);
+    }
+
+    fn on_grant(&mut self, t: TenantId, app_id: u64, granted: u32) {
+        if let Some(tt) = self.tenants.get_mut(&t) {
+            if let Some(p) = tt.pending.get_mut(&app_id) {
+                p.granted = granted;
+            }
+        }
+    }
+
+    fn on_app_fail(&mut self, t: TenantId, app_id: u64, _now: f64) {
+        // the job died (preemption without re-grant, or tenant churn):
+        // no measurement is coming — resolve the decision NOW so the
+        // plug-in's session sees a failed probe instead of wedging
+        if let Some(tt) = self.tenants.get_mut(&t) {
+            if let Some(p) = tt.pending.remove(&app_id) {
+                if let PendingKind::Probe { label } = p.kind {
+                    tt.plugin.fail_probe(label);
+                    self.probe_jobs_failed += 1;
+                }
+            }
+        }
     }
 }
 
@@ -499,6 +736,136 @@ mod tests {
         assert_eq!(b_stats.searches_abandoned, 1);
         assert_eq!(b_stats.probes_paid(), before);
         assert!(plane.cross_tenant_hits >= 1);
+    }
+
+    #[test]
+    fn probe_job_failure_unwedges_the_session() {
+        // a probe's job dies mid-run (preemption without re-grant): the
+        // failure edge must resolve the pending decision and feed the
+        // session a failed probe — the tenant keeps deciding normally
+        let mut plane = TuningPlane::new(TuningPlaneConfig::default());
+        let t = TenantId(0);
+        plane.ensure_tenant(t);
+        let label = insert_workload(&plane);
+        publish(&plane, t, label, 0.0);
+
+        let (_, kind) = plane.decide(t, 7, 1.0);
+        assert_eq!(kind, ChoiceKind::GlobalProbe);
+        assert_eq!(plane.pending_decisions(), 1);
+        assert_eq!(plane.livelocked_sessions(), 1);
+
+        plane.on_app_fail(t, 7, 2.0);
+        assert_eq!(plane.pending_decisions(), 0);
+        assert_eq!(plane.livelocked_sessions(), 0, "session wedged");
+        assert_eq!(plane.probe_jobs_failed, 1);
+        // the next decision must not panic (no outstanding probe) —
+        // it is either a fresh probe or a backoff fallback
+        let (_, kind2) = plane.decide(t, 8, 3.0);
+        assert!(matches!(
+            kind2,
+            ChoiceKind::GlobalProbe | ChoiceKind::Default
+        ));
+    }
+
+    #[test]
+    fn decision_timeout_expires_stale_probes() {
+        let mut plane = TuningPlane::new(TuningPlaneConfig {
+            resilience: TuningResilience {
+                decision_timeout: 10.0,
+                ..TuningResilience::default()
+            },
+            ..TuningPlaneConfig::default()
+        });
+        let t = TenantId(0);
+        plane.ensure_tenant(t);
+        let label = insert_workload(&plane);
+        publish(&plane, t, label, 0.0);
+
+        let (_, kind) = plane.decide(t, 1, 1.0);
+        assert_eq!(kind, ChoiceKind::GlobalProbe);
+        // far past the timeout, the next decision first expires the
+        // stale probe (fed to the session as a failure) — no wedge, no
+        // assert panic on the plug-in's outstanding guard
+        publish(&plane, t, label, 50.0);
+        let (_, kind2) = plane.decide(t, 2, 50.0);
+        assert!(matches!(
+            kind2,
+            ChoiceKind::GlobalProbe | ChoiceKind::Default
+        ));
+        assert_eq!(plane.probes_timed_out, 1);
+        let report = plane.report(MultiSimResult::default());
+        assert_eq!(report.probes_timed_out, 1);
+    }
+
+    #[test]
+    fn poisoned_cache_hit_quarantines_after_strikes() {
+        let mut plane = TuningPlane::new(TuningPlaneConfig::default());
+        let t = TenantId(0);
+        plane.ensure_tenant(t);
+        let label = insert_workload(&plane);
+        publish(&plane, t, label, 0.0);
+        // a stored optimum with a measured duration of 10.0...
+        let cfg = ConfigIndex([2, 2, 2, 2, 2, 0]);
+        plane
+            .coord
+            .db
+            .write()
+            .unwrap()
+            .set_optimal_measured(label, cfg, 10.0);
+
+        // ...served full-fleet but running 10x slower: two strikes
+        for app in 0..2u64 {
+            let (c, kind) = plane.decide(t, app, 1.0);
+            assert_eq!(kind, ChoiceKind::CacheHit);
+            assert_eq!(c, cfg);
+            plane.on_grant(t, app, 99); // granted >= asked
+            plane.complete(t, app, 100.0);
+        }
+        assert_eq!(plane.labels_quarantined, 1);
+        assert!(plane
+            .coord
+            .db
+            .read()
+            .unwrap()
+            .get(label)
+            .unwrap()
+            .quarantined);
+        // the poisoned optimum is no longer served — fresh search
+        let (_, kind) = plane.decide(t, 10, 2.0);
+        assert_eq!(kind, ChoiceKind::GlobalProbe);
+    }
+
+    #[test]
+    fn degraded_fleet_never_counts_as_poisoning() {
+        // same slow runs, but the RM granted less than asked: the slow
+        // duration is the cluster's fault, not the stored optimum's
+        let mut plane = TuningPlane::new(TuningPlaneConfig::default());
+        let t = TenantId(0);
+        plane.ensure_tenant(t);
+        let label = insert_workload(&plane);
+        publish(&plane, t, label, 0.0);
+        let cfg = ConfigIndex([2, 2, 2, 2, 2, 0]);
+        plane
+            .coord
+            .db
+            .write()
+            .unwrap()
+            .set_optimal_measured(label, cfg, 10.0);
+        for app in 0..4u64 {
+            let (_, kind) = plane.decide(t, app, 1.0);
+            assert_eq!(kind, ChoiceKind::CacheHit);
+            plane.on_grant(t, app, 1); // starved fleet
+            plane.complete(t, app, 500.0);
+        }
+        assert_eq!(plane.labels_quarantined, 0);
+        assert!(!plane
+            .coord
+            .db
+            .read()
+            .unwrap()
+            .get(label)
+            .unwrap()
+            .quarantined);
     }
 
     #[test]

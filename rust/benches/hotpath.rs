@@ -441,6 +441,60 @@ fn main() {
     ]);
     t.metric("tuning_plane_k4", ttp.median_ns);
 
+    // --- knowledge snapshot load: the warm-start cost of the durable
+    // knowledge plane — verify + decode + rebuild a ~200-entry binary
+    // snapshot, the price a restarted plane pays before its first job
+    let snap_entries = 200usize;
+    let snap_dir = std::env::temp_dir().join("kermit_hotpath_snapshot");
+    std::fs::remove_dir_all(&snap_dir).ok();
+    {
+        let mut db = kermit::knowledge::WorkloadDb::new();
+        let mut rng = Rng::new(99);
+        for _ in 0..snap_entries {
+            let rows: Vec<Vec<f64>> = (0..3)
+                .map(|_| {
+                    (0..8).map(|_| rng.range_f64(0.0, 10.0)).collect()
+                })
+                .collect();
+            let centroid: Vec<f64> =
+                (0..8).map(|_| rng.range_f64(0.0, 10.0)).collect();
+            let label = db.insert_new(
+                kermit::knowledge::Characterization::from_vec_rows(&rows),
+                centroid,
+                3,
+                false,
+            );
+            db.set_optimal_config(
+                label,
+                kermit::simcluster::default_config_index(),
+            );
+        }
+        let (mut store, _, _) = kermit::knowledge::KnowledgeStore::open(
+            &snap_dir,
+            Box::new(kermit::knowledge::BinaryCodec),
+        )
+        .unwrap();
+        store.snapshot(&db).unwrap();
+    }
+    let tsl = bench(5, 40, || {
+        let (_, db, _) = kermit::knowledge::KnowledgeStore::open(
+            &snap_dir,
+            Box::new(kermit::knowledge::BinaryCodec),
+        )
+        .unwrap();
+        std::hint::black_box(db.len());
+    });
+    t.row(&[
+        format!("knowledge_snapshot_load ({snap_entries} entries)"),
+        tsl.per_iter_str(),
+        format!(
+            "{:.0}k entries/s",
+            snap_entries as f64 / (tsl.median_ns / 1e9) / 1e3
+        ),
+    ]);
+    t.metric("knowledge_snapshot_load", tsl.median_ns);
+    std::fs::remove_dir_all(&snap_dir).ok();
+
     t.print();
 
     // --- PJRT artifact execution costs

@@ -1,0 +1,92 @@
+//! Durable-knowledge-plane runner: the crash/recovery scenario sweep
+//! (`crash_restart`, `corrupt_snapshot`) over a real tuning plane with
+//! seeded I/O fault injection. Scores the crash-consistency
+//! guarantees — zero learned-optimum loss up to the WAL tail,
+//! quarantine surviving restart, corrupt-snapshot fallback, warm
+//! cache hits from job one, bounded cold-start regret — and writes the
+//! deterministic per-scenario JSON snapshots to `PERSIST_outcomes.json`
+//! (the CI artifact — a failure reproduces locally from its seed via
+//! `KERMIT_CHAOS_SEED`).
+//!
+//! With `KERMIT_SMOKE=1` the sweep shrinks to toy sizes and *asserts*
+//! every scenario passes — the blocking `rust-persist-smoke` CI job.
+
+use kermit::benchkit::Table;
+use kermit::experiments::chaos;
+use kermit::util::json::Json;
+
+fn main() {
+    let smoke = matches!(
+        std::env::var("KERMIT_SMOKE").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    );
+
+    println!("\n== Durable knowledge plane (crash/recovery sweep) ==\n");
+    let t0 = std::time::Instant::now();
+    let outcomes = chaos::run_persistence(smoke);
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(&[
+        "scenario",
+        "gen",
+        "rejected",
+        "replayed",
+        "torn",
+        "optima (crash/rec)",
+        "lost",
+        "quarantine",
+        "warm",
+        "regret",
+        "verdict",
+    ]);
+    for o in &outcomes {
+        t.row(&[
+            o.name.clone(),
+            match o.generation_loaded {
+                Some(g) => format!("{g}"),
+                None => "-".into(),
+            },
+            format!("{}", o.snapshots_rejected),
+            format!("{}", o.wal_records_replayed),
+            if o.wal_torn_tail { "yes".into() } else { "no".into() },
+            format!("{}/{}", o.optima_at_crash, o.optima_recovered),
+            format!("{}", o.lost_optima),
+            format!(
+                "{}/{}",
+                o.quarantined_at_crash, o.quarantined_recovered
+            ),
+            format!("{}", o.warm_tenants),
+            format!("{:+.3}", o.cold_regret),
+            if o.pass { "pass".into() } else { "FAIL".into() },
+        ]);
+        for f in &o.failures {
+            println!("{}: FAIL — {f}", o.name);
+        }
+    }
+    t.print();
+    println!(
+        "\n{} scenarios, wall {:.1}s",
+        outcomes.len(),
+        wall.as_secs_f64()
+    );
+
+    // deterministic JSON snapshots: same seeds → same bytes
+    let snapshot =
+        Json::Arr(outcomes.iter().map(|o| o.to_json()).collect());
+    let path = "PERSIST_outcomes.json";
+    match std::fs::write(path, snapshot.encode_pretty()) {
+        Ok(()) => println!("snapshots written to {path}"),
+        Err(e) => println!("snapshot write failed ({path}): {e}"),
+    }
+
+    if smoke {
+        for o in &outcomes {
+            assert!(
+                o.pass,
+                "scenario {} violated its recovery guarantees: {:?}",
+                o.name, o.failures
+            );
+        }
+        println!("\npersist smoke OK");
+    }
+}

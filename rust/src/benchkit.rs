@@ -111,7 +111,10 @@ impl Table {
 
     /// Write the table (headers + rows) and the recorded
     /// `stage -> median_ns` map as pretty-printed JSON.
-    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+    ) -> crate::util::error::Result<()> {
         use crate::util::json::Json;
         let mut root = Json::obj();
         root.set(
@@ -143,7 +146,12 @@ impl Table {
             meta.set(k, Json::Str(v.clone()));
         }
         root.set("meta", meta);
-        std::fs::write(path, root.encode_pretty())
+        std::fs::write(path, root.encode_pretty()).map_err(|e| {
+            crate::util::error::Error::io(format!(
+                "writing bench table {}: {e}",
+                path.display()
+            ))
+        })
     }
 
     pub fn print(&self) {

@@ -1,0 +1,106 @@
+//! Chaos outcome differ: compares the freshly written
+//! `CHAOS_outcomes.json` (or `PERSIST_outcomes.json` — same shape)
+//! against a committed baseline and fails loudly when any scenario's
+//! deterministic snapshot drifted *under a matching sweep* (same
+//! scenario names + seeds). On sweep mismatch — a `KERMIT_CHAOS_SEED`
+//! override, a smoke run diffed against a full-scale baseline — or
+//! when either file is missing, it skips cleanly, exactly like
+//! `bench_diff`'s meta-mismatch contract.
+//!
+//! Usage:
+//!   chaos_diff [--baseline PATH] [--current PATH]
+//!
+//! Exit codes: 0 = ok or skipped, 1 = drift, 2 = bad input.
+//!
+//! Workflow: run `cargo bench --bench chaos` (writes
+//! CHAOS_outcomes.json), then `cargo run --bin chaos_diff`; to accept
+//! the current behaviour as the new baseline, copy CHAOS_outcomes.json
+//! to CHAOS_baseline.json and commit it.
+
+use kermit::chaoslab::{diff_outcome_sets, OutcomeDiff};
+use kermit::util::json::Json;
+
+fn load(path: &str) -> Option<Json> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("chaos_diff: {path} not found — skipping (ok)");
+            return None;
+        }
+    };
+    match Json::parse(&text) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            eprintln!("chaos_diff: {path} is not valid JSON: {e:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let mut baseline = "CHAOS_baseline.json".to_string();
+    let mut current = "CHAOS_outcomes.json".to_string();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let need_value = |i: usize| {
+            args.get(i + 1).cloned().unwrap_or_else(|| {
+                eprintln!("chaos_diff: {} needs a value", args[i]);
+                std::process::exit(2);
+            })
+        };
+        match args[i].as_str() {
+            "--baseline" => baseline = need_value(i),
+            "--current" => current = need_value(i),
+            other => {
+                eprintln!("chaos_diff: unknown argument {other}");
+                std::process::exit(2);
+            }
+        }
+        i += 2;
+    }
+
+    let (Some(base), Some(cur)) = (load(&baseline), load(&current)) else {
+        return; // missing file(s): skipped cleanly above
+    };
+    match diff_outcome_sets(&base, &cur) {
+        Ok(OutcomeDiff::MetaMismatch { scenarios }) => {
+            println!(
+                "chaos_diff: sweep mismatch — scenario/seed sets \
+                 differ, comparison skipped (ok)"
+            );
+            for (name, b, c) in &scenarios {
+                let show = |s: u64| {
+                    if s == u64::MAX {
+                        "absent".to_string()
+                    } else {
+                        format!("seed {s}")
+                    }
+                };
+                println!("  {name}: baseline {} vs current {}", show(*b), show(*c));
+            }
+        }
+        Ok(OutcomeDiff::Compared { unchanged, drifted }) => {
+            println!(
+                "chaos_diff: {unchanged} scenario(s) byte-identical to \
+                 baseline"
+            );
+            if drifted.is_empty() {
+                println!("chaos_diff: no drift");
+                return;
+            }
+            for (scenario, field, was, now) in &drifted {
+                println!("  DRIFT {scenario}.{field}: {was} -> {now}");
+            }
+            eprintln!(
+                "chaos_diff: {} field(s) drifted under a matching sweep",
+                drifted.len()
+            );
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("chaos_diff: malformed outcome JSON: {e:?}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -17,17 +17,26 @@
 //!   regret, zero livelocked sessions, poison containment, and cache
 //!   recovery;
 //! * [`outcome`] — [`ScenarioOutcome`]: the scoreboard, serializable
-//!   to deterministic JSON (same seed → same bytes) for CI artifacts.
+//!   to deterministic JSON (same seed → same bytes) for CI artifacts;
+//! * [`persistence`] — [`RecoveryOutcome`]: crash/recovery scenarios
+//!   for the durable knowledge plane (kill-and-restart, corrupt
+//!   snapshot + torn WAL tail), proving zero learned-optimum loss up
+//!   to the WAL tail and warm restarts.
 //!
 //! Everything is seeded through `util::rng::Rng` — a CI failure
 //! reproduces locally from the JSON snapshot's seed via
 //! `KERMIT_CHAOS_SEED` (see `ScenarioSpec::apply_env`).
 
 pub mod outcome;
+pub mod persistence;
 pub mod runner;
 pub mod scenario;
 
-pub use outcome::ScenarioOutcome;
+pub use outcome::{diff_outcome_sets, OutcomeDiff, ScenarioOutcome};
+pub use persistence::{
+    persistence_scenarios, run_persistence_scenario, PersistFault,
+    PersistSpec, RecoveryOutcome,
+};
 pub use runner::run_scenario;
 pub use scenario::{
     standard_scenarios, ScenarioSpec, ScenarioStep, StepAction,

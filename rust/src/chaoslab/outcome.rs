@@ -3,7 +3,7 @@
 //! objects are `BTreeMap`-backed, so same outcome → same bytes — the
 //! chaos smoke's reproducibility artifact).
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonError};
 
 /// The chaos scoreboard for one scenario.
 #[derive(Debug, Clone, Default)]
@@ -130,6 +130,114 @@ impl ScenarioOutcome {
     }
 }
 
+/// Result of diffing two outcome snapshots (the same contract as
+/// `benchkit::BaselineDiff`: compare only under a matching sweep,
+/// skip cleanly otherwise).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OutcomeDiff {
+    /// The two snapshots ran different sweeps (scenario names or seeds
+    /// differ — e.g. a `KERMIT_CHAOS_SEED` override, or a smoke run
+    /// diffed against a full-scale baseline). Comparing them would be
+    /// noise, so the differ skips.
+    MetaMismatch {
+        /// `(name, baseline seed, current seed)`; a missing side is
+        /// `u64::MAX`.
+        scenarios: Vec<(String, u64, u64)>,
+    },
+    /// Same sweep: per-scenario field-level comparison ran.
+    Compared {
+        /// Scenarios whose snapshots are byte-identical.
+        unchanged: usize,
+        /// `(scenario, field, baseline value, current value)` for every
+        /// field that drifted.
+        drifted: Vec<(String, String, String, String)>,
+    },
+}
+
+/// Diff two `CHAOS_outcomes.json`-shaped snapshots (arrays of
+/// [`ScenarioOutcome::to_json`] objects — `PERSIST_outcomes.json` has
+/// the same shape and diffs with the same function).
+///
+/// Mirrors `benchkit::diff_baselines`' skip-on-meta-mismatch idiom:
+/// the sweep identity (scenario name + seed set) plays the role of
+/// `meta`, and only matching sweeps are compared field by field. The
+/// outcomes are fully deterministic (same seed → same bytes), so ANY
+/// drift under a matching sweep is a real behaviour change and the
+/// differ reports every drifted field.
+pub fn diff_outcome_sets(
+    baseline: &Json,
+    current: &Json,
+) -> Result<OutcomeDiff, JsonError> {
+    fn index(
+        snapshot: &Json,
+    ) -> Result<Vec<(String, u64, &Json)>, JsonError> {
+        let mut out = Vec::new();
+        for o in snapshot.as_arr()? {
+            let name = o.get("name")?.as_str()?.to_string();
+            let seed = o.get("seed")?.as_f64()? as u64;
+            out.push((name, seed, o));
+        }
+        Ok(out)
+    }
+    let base = index(baseline)?;
+    let cur = index(current)?;
+
+    // sweep identity: same scenario names with the same seeds
+    let base_ids: Vec<(String, u64)> =
+        base.iter().map(|(n, s, _)| (n.clone(), *s)).collect();
+    let cur_ids: Vec<(String, u64)> =
+        cur.iter().map(|(n, s, _)| (n.clone(), *s)).collect();
+    if base_ids != cur_ids {
+        let names: std::collections::BTreeSet<String> = base_ids
+            .iter()
+            .chain(cur_ids.iter())
+            .map(|(n, _)| n.clone())
+            .collect();
+        let side = |ids: &[(String, u64)], n: &str| {
+            ids.iter()
+                .find(|(name, _)| name == n)
+                .map(|(_, s)| *s)
+                .unwrap_or(u64::MAX)
+        };
+        return Ok(OutcomeDiff::MetaMismatch {
+            scenarios: names
+                .into_iter()
+                .map(|n| {
+                    let b = side(&base_ids, &n);
+                    let c = side(&cur_ids, &n);
+                    (n, b, c)
+                })
+                .collect(),
+        });
+    }
+
+    let mut unchanged = 0usize;
+    let mut drifted = Vec::new();
+    for ((name, _, b), (_, _, c)) in base.iter().zip(cur.iter()) {
+        if b.encode() == c.encode() {
+            unchanged += 1;
+            continue;
+        }
+        let bo = b.as_obj()?;
+        let co = c.as_obj()?;
+        let keys: std::collections::BTreeSet<&String> =
+            bo.keys().chain(co.keys()).collect();
+        for k in keys {
+            let bv = bo.get(k).map(Json::encode);
+            let cv = co.get(k).map(Json::encode);
+            if bv != cv {
+                drifted.push((
+                    name.clone(),
+                    k.clone(),
+                    bv.unwrap_or_else(|| "<absent>".into()),
+                    cv.unwrap_or_else(|| "<absent>".into()),
+                ));
+            }
+        }
+    }
+    Ok(OutcomeDiff::Compared { unchanged, drifted })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +259,73 @@ mod tests {
         assert!(a.contains("\"regret\":0.25"), "{a}");
         assert!(a.contains("\"pass\":true"), "{a}");
         assert!(a.contains("\"failures\":[\"x\"]"), "{a}");
+    }
+
+    fn snapshot(pairs: &[(&str, u64, f64)]) -> Json {
+        Json::Arr(
+            pairs
+                .iter()
+                .map(|(n, s, r)| {
+                    let mut o = ScenarioOutcome::default();
+                    o.name = n.to_string();
+                    o.seed = *s;
+                    o.regret = *r;
+                    o.to_json()
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn matching_sweeps_diff_field_by_field() {
+        let base = snapshot(&[("a", 1, 0.1), ("b", 2, 0.2)]);
+        let same = snapshot(&[("a", 1, 0.1), ("b", 2, 0.2)]);
+        assert_eq!(
+            diff_outcome_sets(&base, &same).unwrap(),
+            OutcomeDiff::Compared { unchanged: 2, drifted: vec![] }
+        );
+        let moved = snapshot(&[("a", 1, 0.1), ("b", 2, 0.5)]);
+        let Ok(OutcomeDiff::Compared { unchanged, drifted }) =
+            diff_outcome_sets(&base, &moved)
+        else {
+            panic!("expected a comparison");
+        };
+        assert_eq!(unchanged, 1);
+        assert_eq!(drifted.len(), 1);
+        let (scenario, field, was, now) = &drifted[0];
+        assert_eq!((scenario.as_str(), field.as_str()), ("b", "regret"));
+        assert_eq!((was.as_str(), now.as_str()), ("0.2", "0.5"));
+    }
+
+    #[test]
+    fn different_sweeps_skip_as_meta_mismatch() {
+        let base = snapshot(&[("a", 1, 0.1)]);
+        // seed override: same scenario, different seed
+        let reseeded = snapshot(&[("a", 9, 0.1)]);
+        assert!(matches!(
+            diff_outcome_sets(&base, &reseeded).unwrap(),
+            OutcomeDiff::MetaMismatch { .. }
+        ));
+        // different scenario set entirely
+        let other = snapshot(&[("z", 1, 0.1)]);
+        let Ok(OutcomeDiff::MetaMismatch { scenarios }) =
+            diff_outcome_sets(&base, &other)
+        else {
+            panic!("expected a meta mismatch");
+        };
+        assert_eq!(scenarios.len(), 2);
+        assert!(scenarios.contains(&("a".into(), 1, u64::MAX)));
+        assert!(scenarios.contains(&("z".into(), u64::MAX, 1)));
+    }
+
+    #[test]
+    fn malformed_snapshots_are_an_error_not_a_panic() {
+        assert!(
+            diff_outcome_sets(&Json::Num(3.0), &Json::Arr(vec![])).is_err()
+        );
+        let missing_name = Json::Arr(vec![Json::obj()]);
+        assert!(
+            diff_outcome_sets(&missing_name, &missing_name).is_err()
+        );
     }
 }

@@ -1,0 +1,519 @@
+//! Persistence chaos: fault-injected crash/recovery scenarios for the
+//! durable knowledge plane (`knowledge::persist`), proving the
+//! crash-consistency guarantees end to end on the real tuning plane:
+//!
+//! * **`crash_restart`** — a full tuning run learns optima, snapshots,
+//!   quarantines an entry, flushes, and is killed. Guarantees: the
+//!   recovered durable state is byte-identical to the pre-crash digest
+//!   (zero learned-optimum loss up to the WAL tail), the quarantine
+//!   survives the restart, at least one tenant serves a CacheHit with
+//!   zero probes paid immediately after recovery (warm from job one),
+//!   and the restarted run's makespan holds a bounded cold-start
+//!   regret against a never-crashed oracle.
+//! * **`corrupt_snapshot`** — the newest snapshot generation is
+//!   bit-flipped on disk and the active WAL's tail is torn by the
+//!   crash. Guarantees: recovery rejects the corrupt generation (never
+//!   serving a checksum-corrupt entry), falls back one generation,
+//!   replays the surviving WAL records, truncates the torn tail, and
+//!   lands exactly on the last durable state.
+//!
+//! These scenarios are NOT part of [`super::standard_scenarios`] (that
+//! name list is pinned); `benches/persist.rs` and the
+//! `rust-persist-smoke` CI job drive them via
+//! [`persistence_scenarios`] + [`run_persistence_scenario`].
+
+use crate::experiments::tuning_plane::{
+    plane_config, schedules, sim_config,
+};
+use crate::knowledge::persist::{durable_digest, BinaryCodec};
+use crate::knowledge::Characterization;
+use crate::simcluster::config_space::ConfigIndex;
+use crate::tuning::TuningPlane;
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+/// Which fault script a persistence scenario runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PersistFault {
+    /// Kill after a snapshot + flushed WAL tail; recover; rerun.
+    CrashRestart,
+    /// Bit-flip the newest snapshot and tear the WAL tail; recover.
+    CorruptSnapshot,
+}
+
+/// A seeded persistence scenario.
+#[derive(Debug, Clone)]
+pub struct PersistSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    pub fault: PersistFault,
+    pub tenants: usize,
+    pub jobs_per_tenant: usize,
+    pub classes: Vec<u32>,
+    /// Explorer global budget (as in `ScenarioSpec`).
+    pub budget: usize,
+    /// Max allowed post-restart makespan regret vs the never-crashed
+    /// oracle (`crash_restart` only).
+    pub regret_bound: f64,
+}
+
+impl PersistSpec {
+    fn base(
+        name: &'static str,
+        seed: u64,
+        fault: PersistFault,
+        smoke: bool,
+    ) -> PersistSpec {
+        let (tenants, jobs, budget) =
+            if smoke { (3, 8, 10) } else { (4, 14, 14) };
+        PersistSpec {
+            name,
+            seed,
+            fault,
+            tenants,
+            jobs_per_tenant: jobs,
+            classes: vec![0, 5],
+            budget,
+            regret_bound: 2.0,
+        }
+    }
+
+    /// Same env overrides as `ScenarioSpec::apply_env` — reproduce a
+    /// CI failure locally from the artifact's seed.
+    pub fn apply_env(&mut self) {
+        fn env_parse<T: std::str::FromStr>(key: &str) -> Option<T> {
+            std::env::var(key).ok()?.parse().ok()
+        }
+        if let Some(s) = env_parse::<u64>("KERMIT_CHAOS_SEED") {
+            self.seed = s;
+        }
+        if let Some(t) = env_parse::<usize>("KERMIT_CHAOS_TENANTS") {
+            self.tenants = t.max(1);
+        }
+        if let Some(j) = env_parse::<usize>("KERMIT_CHAOS_JOBS") {
+            self.jobs_per_tenant = j.max(1);
+        }
+    }
+}
+
+/// The persistence sweep (one scenario per crash family).
+pub fn persistence_scenarios(smoke: bool) -> Vec<PersistSpec> {
+    let mut sweep = vec![
+        PersistSpec::base(
+            "crash_restart",
+            808,
+            PersistFault::CrashRestart,
+            smoke,
+        ),
+        PersistSpec::base(
+            "corrupt_snapshot",
+            909,
+            PersistFault::CorruptSnapshot,
+            smoke,
+        ),
+    ];
+    for s in &mut sweep {
+        s.apply_env();
+    }
+    sweep
+}
+
+/// The recovery scoreboard for one persistence scenario —
+/// deterministic JSON (same seed → same bytes), like
+/// `ScenarioOutcome`.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryOutcome {
+    pub name: String,
+    pub seed: u64,
+
+    // ---- what recovery reported ---------------------------------------
+    pub generation_loaded: Option<u64>,
+    pub snapshots_rejected: u64,
+    pub wal_records_replayed: u64,
+    pub wal_torn_tail: bool,
+
+    // ---- zero-loss guarantee ------------------------------------------
+    /// Trusted optima in the last durable state before the crash.
+    pub optima_at_crash: usize,
+    /// Trusted optima after recovery.
+    pub optima_recovered: usize,
+    /// Durable optima missing (or with a different config) after
+    /// recovery — MUST be zero.
+    pub lost_optima: usize,
+    /// Recovered durable state is byte-identical to the pre-crash
+    /// durable digest.
+    pub digest_match: bool,
+
+    // ---- quarantine survival ------------------------------------------
+    pub quarantined_at_crash: usize,
+    pub quarantined_recovered: usize,
+    pub quarantine_preserved: bool,
+
+    // ---- warm restart (crash_restart only) ----------------------------
+    /// Tenants that served at least one CacheHit with ZERO probes paid
+    /// in the post-restart run.
+    pub warm_tenants: usize,
+    /// Post-restart makespan vs the never-crashed oracle's, minus one.
+    pub cold_regret: f64,
+    pub regret_bound: f64,
+
+    // ---- hygiene ------------------------------------------------------
+    pub persist_errors: usize,
+
+    // ---- verdict ------------------------------------------------------
+    pub pass: bool,
+    pub failures: Vec<String>,
+}
+
+impl RecoveryOutcome {
+    pub fn to_json(&self) -> Json {
+        let n = |v: usize| Json::Num(v as f64);
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("seed", Json::Num(self.seed as f64))
+            .set(
+                "generation_loaded",
+                match self.generation_loaded {
+                    Some(g) => Json::Num(g as f64),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "snapshots_rejected",
+                Json::Num(self.snapshots_rejected as f64),
+            )
+            .set(
+                "wal_records_replayed",
+                Json::Num(self.wal_records_replayed as f64),
+            )
+            .set("wal_torn_tail", Json::Bool(self.wal_torn_tail))
+            .set("optima_at_crash", n(self.optima_at_crash))
+            .set("optima_recovered", n(self.optima_recovered))
+            .set("lost_optima", n(self.lost_optima))
+            .set("digest_match", Json::Bool(self.digest_match))
+            .set("quarantined_at_crash", n(self.quarantined_at_crash))
+            .set("quarantined_recovered", n(self.quarantined_recovered))
+            .set(
+                "quarantine_preserved",
+                Json::Bool(self.quarantine_preserved),
+            )
+            .set("warm_tenants", n(self.warm_tenants))
+            .set("cold_regret", Json::Num(self.cold_regret))
+            .set("regret_bound", Json::Num(self.regret_bound))
+            .set("persist_errors", n(self.persist_errors))
+            .set("pass", Json::Bool(self.pass))
+            .set(
+                "failures",
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|f| Json::Str(f.clone()))
+                        .collect(),
+                ),
+            );
+        j
+    }
+}
+
+fn store_dir(spec: &PersistSpec) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "kermit_chaos_persist_{}_{}",
+        spec.name, spec.seed
+    ))
+}
+
+/// Durable-state summary: (digest bytes, trusted-optimum labels with
+/// configs, quarantined labels).
+fn durable_state(
+    plane: &TuningPlane,
+) -> (String, Vec<(u32, ConfigIndex)>, BTreeSet<u32>) {
+    let db = plane.coord.db.read().unwrap();
+    let digest = durable_digest(&db).encode();
+    let optima = db
+        .entries()
+        .filter(|e| e.optimal_config_found)
+        .map(|e| (e.label, e.config.expect("optimal entry has config")))
+        .collect();
+    let quarantined = db.quarantined_labels().into_iter().collect();
+    (digest, optima, quarantined)
+}
+
+/// Execute one persistence scenario and score its guarantees.
+pub fn run_persistence_scenario(spec: &PersistSpec) -> RecoveryOutcome {
+    let dir = store_dir(spec);
+    std::fs::remove_dir_all(&dir).ok();
+    let mut o = RecoveryOutcome {
+        name: spec.name.to_string(),
+        seed: spec.seed,
+        regret_bound: spec.regret_bound,
+        ..RecoveryOutcome::default()
+    };
+    let fail = |o: &mut RecoveryOutcome, msg: String| {
+        o.failures.push(msg);
+    };
+
+    let phase1 = schedules(
+        spec.seed,
+        spec.tenants,
+        spec.jobs_per_tenant,
+        &spec.classes,
+    );
+    let phase2 = schedules(
+        spec.seed ^ 0xF00D,
+        spec.tenants,
+        spec.jobs_per_tenant,
+        &spec.classes,
+    );
+
+    // ---- phase 1: learn on a durable plane ----------------------------
+    let (mut plane, _) = TuningPlane::open_durable(
+        plane_config(spec.seed, spec.budget),
+        &dir,
+        Box::new(BinaryCodec),
+    )
+    .expect("fresh store opens");
+    plane.run_schedules(&phase1, sim_config(), spec.seed);
+    plane.persist_snapshot(); // generation 1 on disk
+
+    match spec.fault {
+        PersistFault::CrashRestart => {
+            // quarantine a *traffic-orphan* entry so the restart must
+            // carry the flag. Quarantining a label live jobs classify
+            // to would send every tenant on a fresh global search (a
+            // poisoned optimum is never served, and in-flight dedup
+            // only kicks in once some peer's re-search completes) —
+            // the warm-start guarantee below needs at least one tenant
+            // that pays zero probes, so the quarantined entry must be
+            // one phase 2 never routes to.
+            let target = {
+                let mut db = plane.coord.db.write().unwrap();
+                let dim = db
+                    .entries()
+                    .next()
+                    .map(|e| e.characterization.per_feature.len());
+                dim.map(|w| {
+                    // far enough that no live characterization ever
+                    // wins a nearest() match against a real entry;
+                    // synthetic, so offline discovery ignores it too
+                    let row = vec![1.0e6; w];
+                    let c = Characterization::from_vec_rows(&[row.clone()]);
+                    let l = db.insert_new(c, row, 1, true);
+                    // order matters: a completed search lifts
+                    // quarantine, so the optimum lands first
+                    db.set_optimal_measured(
+                        l,
+                        ConfigIndex([2, 1, 0, 2, 1, 0]),
+                        123.0,
+                    );
+                    db.quarantine(l);
+                    l
+                })
+            };
+            if target.is_none() {
+                fail(
+                    &mut o,
+                    "phase 1 discovered no entry to clone dims from".into(),
+                );
+            }
+            plane.persist_flush(); // the quarantine reaches the WAL tail
+        }
+        PersistFault::CorruptSnapshot => {
+            // a second learning phase lands records in the rotated WAL,
+            // then the snapshot that folds them is corrupted on disk
+            plane.run_schedules(&phase2, sim_config(), spec.seed ^ 1);
+            let flip = 11 + (spec.seed as usize % 97);
+            plane.store_mut().unwrap().faults.snapshot_bit_flip_at =
+                Some(flip);
+            plane.persist_snapshot(); // generation 2: corrupt payload
+        }
+    }
+
+    // the last DURABLE state: everything after this point is allowed to
+    // be lost to the torn WAL tail, nothing before it may be
+    o.persist_errors = plane.persist_errors;
+    let (digest, optima, quarantined) = durable_state(&plane);
+    o.optima_at_crash = optima.len();
+    o.quarantined_at_crash = quarantined.len();
+
+    if spec.fault == PersistFault::CorruptSnapshot {
+        // one last mutation whose WAL frame the crash tears mid-write:
+        // recovery must truncate it and land on the digest above
+        let victim = optima.first().map(|(l, _)| *l);
+        if let Some(l) = victim {
+            plane
+                .coord
+                .db
+                .write()
+                .unwrap()
+                .set_optimal_measured(l, ConfigIndex([0, 0, 0, 0, 0, 0]), 1.0);
+            plane.persist_flush();
+            plane.store_mut().unwrap().faults.wal_torn_tail_bytes =
+                Some(spec.seed % 8 + 1);
+        } else {
+            fail(&mut o, "no optimum to mutate for the torn tail".into());
+        }
+    }
+    plane.crash();
+
+    // ---- recovery -----------------------------------------------------
+    let (mut plane2, report) = TuningPlane::open_durable(
+        plane_config(spec.seed, spec.budget),
+        &dir,
+        Box::new(BinaryCodec),
+    )
+    .expect("recovery opens");
+    o.generation_loaded = report.generation_loaded;
+    o.snapshots_rejected = report.snapshots_rejected;
+    o.wal_records_replayed = report.wal_records_replayed;
+    o.wal_torn_tail = report.wal_torn_tail;
+
+    let (digest2, optima2, quarantined2) = durable_state(&plane2);
+    o.optima_recovered = optima2.len();
+    o.quarantined_recovered = quarantined2.len();
+    o.digest_match = digest2 == digest;
+    o.quarantine_preserved = quarantined2 == quarantined;
+    let recovered: std::collections::BTreeMap<u32, ConfigIndex> =
+        optima2.iter().copied().collect();
+    o.lost_optima = optima
+        .iter()
+        .filter(|(l, c)| recovered.get(l) != Some(c))
+        .count();
+
+    if !o.digest_match {
+        fail(&mut o, "durable digest changed across the crash".into());
+    }
+    if o.lost_optima > 0 {
+        fail(&mut o, format!("{} learned optima lost", o.lost_optima));
+    }
+    if !o.quarantine_preserved {
+        fail(&mut o, "quarantine set changed across the crash".into());
+    }
+
+    match spec.fault {
+        PersistFault::CrashRestart => {
+            if o.quarantined_at_crash == 0 {
+                fail(&mut o, "nothing was quarantined pre-crash".into());
+            }
+            if o.generation_loaded != Some(1) {
+                fail(
+                    &mut o,
+                    format!(
+                        "expected generation 1, loaded {:?}",
+                        o.generation_loaded
+                    ),
+                );
+            }
+            // ---- phase 2 on the recovered plane: warm from job one --
+            let report2 =
+                plane2.run_schedules(&phase2, sim_config(), spec.seed ^ 1);
+            o.warm_tenants = report2
+                .multi
+                .tenant_stats
+                .iter()
+                .filter(|(_, s)| s.cache_hits >= 1 && s.probes_paid() == 0)
+                .count();
+            if o.warm_tenants == 0 {
+                fail(
+                    &mut o,
+                    "no tenant served a zero-probe cache hit post-restart"
+                        .into(),
+                );
+            }
+            // ---- bounded cold-start regret vs a never-crashed oracle
+            let mut oracle = TuningPlane::new(plane_config(
+                spec.seed,
+                spec.budget,
+            ));
+            oracle.run_schedules(&phase1, sim_config(), spec.seed);
+            let oracle2 =
+                oracle.run_schedules(&phase2, sim_config(), spec.seed ^ 1);
+            o.cold_regret = if oracle2.sim.makespan > 0.0 {
+                report2.sim.makespan / oracle2.sim.makespan - 1.0
+            } else {
+                0.0
+            };
+            if o.cold_regret > o.regret_bound {
+                fail(
+                    &mut o,
+                    format!(
+                        "cold regret {:.3} over bound {:.3}",
+                        o.cold_regret, o.regret_bound
+                    ),
+                );
+            }
+        }
+        PersistFault::CorruptSnapshot => {
+            if o.snapshots_rejected < 1 {
+                fail(&mut o, "corrupt snapshot was not rejected".into());
+            }
+            if o.generation_loaded != Some(1) {
+                fail(
+                    &mut o,
+                    format!(
+                        "expected fallback to generation 1, loaded {:?}",
+                        o.generation_loaded
+                    ),
+                );
+            }
+            if !o.wal_torn_tail {
+                fail(&mut o, "torn WAL tail was not detected".into());
+            }
+        }
+    }
+    if o.optima_at_crash == 0 {
+        fail(&mut o, "phase 1 learned no optima (nothing proven)".into());
+    }
+    if o.persist_errors > 0 {
+        fail(&mut o, format!("{} persistence errors", o.persist_errors));
+    }
+
+    o.pass = o.failures.is_empty();
+    std::fs::remove_dir_all(&dir).ok();
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_both_crash_families() {
+        let sweep = persistence_scenarios(true);
+        let names: Vec<&str> = sweep.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["crash_restart", "corrupt_snapshot"]);
+        let full = persistence_scenarios(false);
+        assert!(sweep[0].jobs_per_tenant < full[0].jobs_per_tenant);
+    }
+
+    #[test]
+    fn crash_restart_recovers_everything_and_is_deterministic() {
+        let spec = persistence_scenarios(true)
+            .into_iter()
+            .find(|s| s.fault == PersistFault::CrashRestart)
+            .unwrap();
+        let a = run_persistence_scenario(&spec);
+        assert!(a.pass, "failures: {:?}", a.failures);
+        assert_eq!(a.lost_optima, 0);
+        assert!(a.digest_match && a.quarantine_preserved);
+        assert!(a.warm_tenants >= 1, "{a:?}");
+        // same seed → byte-identical artifact
+        let b = run_persistence_scenario(&spec);
+        assert_eq!(a.to_json().encode(), b.to_json().encode());
+    }
+
+    #[test]
+    fn corrupt_snapshot_falls_back_and_truncates_the_tail() {
+        let spec = persistence_scenarios(true)
+            .into_iter()
+            .find(|s| s.fault == PersistFault::CorruptSnapshot)
+            .unwrap();
+        let o = run_persistence_scenario(&spec);
+        assert!(o.pass, "failures: {:?}", o.failures);
+        assert!(o.snapshots_rejected >= 1);
+        assert_eq!(o.generation_loaded, Some(1));
+        assert!(o.wal_torn_tail);
+        assert_eq!(o.lost_optima, 0);
+        assert!(o.digest_match);
+    }
+}

@@ -33,7 +33,7 @@ use super::offline_cycle::OfflineCycle;
 use super::CoordinatorConfig;
 use crate::clustering::{DistanceProvider, NativeDistance};
 use crate::features::ObservationWindow;
-use crate::knowledge::{shared_db, SharedWorkloadDb};
+use crate::knowledge::{shared_db, SharedWorkloadDb, WorkloadDb};
 use crate::ml::forest::RandomForest;
 use crate::online::classifier::{GatedForestClassifier, WindowClassifier};
 use crate::online::{ForestWindowClassifier, PluginStats, UNKNOWN};
@@ -335,6 +335,15 @@ impl MultiTenantCoordinator {
         let bad = self.db.write().unwrap().audit_quarantine();
         self.db_quarantined += bad.len();
         bad
+    }
+
+    /// Replace the shared knowledge plane's contents with a recovered
+    /// (or imported) DB. Every holder of the shared `Arc` — plug-ins,
+    /// shards, classifiers — sees the restored state at once; this is
+    /// how a restarted deployment starts warm instead of relearning
+    /// from job one.
+    pub fn install_db(&mut self, db: WorkloadDb) {
+        *self.db.write().unwrap() = db;
     }
 
     pub fn run_offline(&mut self) {

@@ -5,13 +5,28 @@
 //! *asserts* every scenario passes (the blocking `rust-chaos-smoke`
 //! job).
 
-use crate::chaoslab::{run_scenario, standard_scenarios, ScenarioOutcome};
+use crate::chaoslab::{
+    persistence_scenarios, run_persistence_scenario, run_scenario,
+    standard_scenarios, RecoveryOutcome, ScenarioOutcome,
+};
 
 /// Run the full standard sweep (smoke scale or full scale).
 pub fn run_all(smoke: bool) -> Vec<ScenarioOutcome> {
     standard_scenarios(smoke)
         .iter()
         .map(run_scenario)
+        .collect()
+}
+
+/// Run the durable-knowledge-plane crash/recovery sweep
+/// (`crash_restart`, `corrupt_snapshot`). `benches/persist.rs` prints
+/// the scoreboard and writes `PERSIST_outcomes.json`; under
+/// `KERMIT_SMOKE=1` it asserts every scenario passes (the blocking
+/// `rust-persist-smoke` job).
+pub fn run_persistence(smoke: bool) -> Vec<RecoveryOutcome> {
+    persistence_scenarios(smoke)
+        .iter()
+        .map(run_persistence_scenario)
         .collect()
 }
 

@@ -2,9 +2,14 @@
 //! WorkloadDB with workload characterizations, configurations and flags,
 //! plus the landing/transformation/analytics zone layout.
 
+pub mod persist;
 pub mod workload_db;
 pub mod zones;
 
+pub use persist::{
+    BinaryCodec, IoFaultPlan, JsonCodec, KnowledgeStore, RecoveryReport,
+    SnapshotCodec,
+};
 pub use workload_db::{Characterization, WorkloadDb, WorkloadEntry};
 pub use zones::KnowledgeZones;
 

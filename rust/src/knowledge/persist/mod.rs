@@ -1,0 +1,78 @@
+//! Crash-safe durable knowledge plane (ROADMAP item 1): the paper's
+//! "long-term memory of workloads" made real across restarts.
+//!
+//! Layout on disk (one directory per knowledge store):
+//!
+//! ```text
+//! store/
+//!   snap-000001.kdb   oldest retained snapshot generation
+//!   snap-000002.kdb   ...
+//!   snap-000003.kdb   newest generation (loaded first at recovery)
+//!   wal-000001.log    records appended after snap-000001 was written
+//!   wal-000002.log    ...
+//!   wal-000003.log    the active WAL (open for append)
+//! ```
+//!
+//! * [`codec`] — pluggable [`SnapshotCodec`]: human-readable JSON for
+//!   debugging, a compact self-describing binary for speed. Both
+//!   encode the same deterministic `Json` tree, so the two formats are
+//!   interchangeable byte-for-byte at the payload level.
+//! * [`snapshot`] — the versioned envelope (magic, version, codec id,
+//!   length, FNV-1a checksum) with atomic write-temp + fsync + rename,
+//!   plus forward migration of old version headers and of legacy bare
+//!   `WorkloadDb::save` JSON files.
+//! * [`wal`] — the append-only log of insert / optimum / quarantine /
+//!   drift / measurement records between snapshots; framed with
+//!   per-record sequence numbers and checksums so a torn tail is
+//!   detected, truncated, and survived.
+//! * [`store`] — [`KnowledgeStore`]: generations + WAL + recovery
+//!   ([`RecoveryReport`]), the seeded [`IoFaultPlan`] the chaos lab
+//!   uses to prove the guarantees, and `export`/`import` so a fresh
+//!   cluster seeds its DB from a peer's (federated knowledge).
+//!
+//! The recovery contract (pinned by `chaoslab::persistence` and
+//! `tests/persistence.rs`): load the newest snapshot whose envelope
+//! verifies, falling back a generation on checksum/parse failure;
+//! replay every retained WAL record with a sequence number beyond the
+//! snapshot's high-water mark; truncate (never trust) a torn WAL tail;
+//! and never serve an entry from a snapshot that failed its checksum.
+
+pub mod codec;
+pub mod snapshot;
+pub mod store;
+pub mod wal;
+
+pub use codec::{codec_for, BinaryCodec, JsonCodec, SnapshotCodec};
+pub use snapshot::{read_snapshot, SNAPSHOT_VERSION};
+pub use store::{
+    durable_digest, IoFaultPlan, KnowledgeStore, PersistStats,
+    RecoveryReport,
+};
+pub use wal::WalRecord;
+
+/// FNV-1a 64-bit hash — the envelope and WAL-frame checksum. Not
+/// cryptographic; it detects torn writes and bit flips, which is the
+/// fault model here (a hostile disk is out of scope).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        let a = fnv1a64(b"kermit");
+        assert_eq!(a, fnv1a64(b"kermit"), "must be deterministic");
+        assert_ne!(a, fnv1a64(b"kermis"), "one byte must change the hash");
+        assert_ne!(a, fnv1a64(b"kermi"), "truncation must change the hash");
+        // pinned known vector so the on-disk format never silently shifts
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+    }
+}

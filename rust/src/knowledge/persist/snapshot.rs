@@ -1,0 +1,305 @@
+//! The versioned snapshot envelope and atomic writer.
+//!
+//! On-disk layout of one snapshot file (`snap-<gen>.kdb`):
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"KERMITKB"
+//!      8     4  version (u32 LE) — envelope schema, migrated forward
+//!     12     1  codec id (b'J' json / b'B' binary)
+//!     13     3  reserved (zero)
+//!     16     8  payload length (u64 LE)
+//!     24     8  FNV-1a-64 checksum of the payload
+//!     32     …  payload (codec-encoded shell)
+//! ```
+//!
+//! The payload shell at [`SNAPSHOT_VERSION`] is
+//! `{"schema": 2, "last_seq": N, "db": <WorkloadDb::to_json>}` — the
+//! `last_seq` high-water mark is what makes WAL replay idempotent
+//! (records already folded into the snapshot are skipped by sequence
+//! number, so a crash between snapshot rename and WAL rotation can
+//! never replay stale records over newer state).
+//!
+//! Migration: version 1 carried the bare `WorkloadDb` JSON with no
+//! shell (and no sequence high-water mark — treated as 0); a file with
+//! no magic at all is a legacy `WorkloadDb::save` text file (version
+//! 0). Both are wrapped forward into the current shell on read, so
+//! every pre-PR-7 DB file loads through this one code path.
+
+use super::codec::{codec_for, SnapshotCodec};
+use super::fnv1a64;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Current envelope version.
+pub const SNAPSHOT_VERSION: u32 = 2;
+
+const MAGIC: &[u8; 8] = b"KERMITKB";
+const HEADER_LEN: usize = 32;
+
+/// A decoded snapshot: the version it was written at, the sequence
+/// high-water mark, and the bare `WorkloadDb` JSON.
+#[derive(Debug, Clone)]
+pub struct SnapshotPayload {
+    /// Envelope version found on disk (before migration).
+    pub version: u32,
+    /// Highest WAL sequence number folded into this snapshot.
+    pub last_seq: u64,
+    /// The `WorkloadDb::to_json` tree.
+    pub db: Json,
+}
+
+/// Build the current-version payload shell.
+pub fn make_shell(db_json: Json, last_seq: u64) -> Json {
+    let mut shell = Json::obj();
+    shell
+        .set("schema", Json::Num(SNAPSHOT_VERSION as f64))
+        .set("last_seq", Json::Num(last_seq as f64))
+        .set("db", db_json);
+    shell
+}
+
+/// Path of generation `g` inside `dir`.
+pub fn snapshot_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("snap-{generation:06}.kdb"))
+}
+
+/// Path of the WAL that collects records written *after* snapshot `g`.
+pub fn wal_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("wal-{generation:06}.log"))
+}
+
+/// List snapshot generations present in `dir`, ascending.
+pub fn list_generations(dir: &Path) -> Vec<u64> {
+    let mut gens: Vec<u64> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let num = name
+                    .strip_prefix("snap-")?
+                    .strip_suffix(".kdb")?;
+                num.parse::<u64>().ok()
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    gens.sort_unstable();
+    gens
+}
+
+/// Serialize the envelope bytes for `shell` (no I/O).
+pub fn encode_snapshot(
+    codec: &dyn SnapshotCodec,
+    shell: &Json,
+) -> Vec<u8> {
+    let payload = codec.encode(shell);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    out.push(codec.id());
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Atomically write `bytes` to `path`: write `<path>.tmp`, fsync the
+/// file, rename over `path`, then fsync the directory (best-effort —
+/// not every platform lets a directory be fsynced). A reader never
+/// observes a half-written snapshot under a final name; a crash leaves
+/// at worst a stale `.tmp` that recovery ignores.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("kdb.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Parse snapshot `bytes` (any supported version, including legacy
+/// magic-less `WorkloadDb::save` JSON), verifying the checksum and
+/// migrating old shells forward. This is the ONLY entry point for
+/// reading persisted knowledge, so the version/migration guarantees
+/// hold for every caller.
+pub fn decode_snapshot(bytes: &[u8]) -> Result<SnapshotPayload> {
+    if bytes.len() < HEADER_LEN || &bytes[0..8] != MAGIC {
+        // legacy (version 0): a bare WorkloadDb::save JSON text file
+        let text = std::str::from_utf8(bytes).map_err(|_| {
+            Error::persist("no envelope magic and not utf-8 text")
+        })?;
+        let db = Json::parse(text).map_err(|e| {
+            Error::persist(format!("legacy snapshot unparsable: {e}"))
+        })?;
+        db.get("next_label").map_err(|_| {
+            Error::persist("legacy snapshot is not a WorkloadDb file")
+        })?;
+        return Ok(SnapshotPayload { version: 0, last_seq: 0, db });
+    }
+    let mut u32le = [0u8; 4];
+    u32le.copy_from_slice(&bytes[8..12]);
+    let version = u32::from_le_bytes(u32le);
+    if version == 0 || version > SNAPSHOT_VERSION {
+        return Err(Error::persist(format!(
+            "snapshot version {version} unsupported (max \
+             {SNAPSHOT_VERSION}) — refusing to guess"
+        )));
+    }
+    let codec_id = bytes[12];
+    let mut u64le = [0u8; 8];
+    u64le.copy_from_slice(&bytes[16..24]);
+    let payload_len = u64::from_le_bytes(u64le) as usize;
+    u64le.copy_from_slice(&bytes[24..32]);
+    let checksum = u64::from_le_bytes(u64le);
+    let end = HEADER_LEN.checked_add(payload_len).ok_or_else(|| {
+        Error::persist("snapshot header claims an absurd payload length")
+    })?;
+    let payload = bytes.get(HEADER_LEN..end).ok_or_else(|| {
+        Error::persist(format!(
+            "snapshot truncated: header claims {payload_len} \
+             payload bytes, {} present",
+            bytes.len() - HEADER_LEN
+        ))
+    })?;
+    if bytes.len() != end {
+        return Err(Error::persist("snapshot has trailing bytes"));
+    }
+    if fnv1a64(payload) != checksum {
+        return Err(Error::persist(
+            "snapshot checksum mismatch — refusing to serve corrupt \
+             entries",
+        ));
+    }
+    let codec = codec_for(codec_id).ok_or_else(|| {
+        Error::persist(format!("unknown snapshot codec 0x{codec_id:02x}"))
+    })?;
+    let shell = codec.decode(payload)?;
+    migrate(version, shell)
+}
+
+/// Read + decode one snapshot file.
+pub fn read_snapshot(path: &Path) -> Result<SnapshotPayload> {
+    let bytes = std::fs::read(path)?;
+    decode_snapshot(&bytes)
+}
+
+/// Migrate a decoded shell from `version` to the current schema.
+fn migrate(version: u32, shell: Json) -> Result<SnapshotPayload> {
+    match version {
+        // v1: bare WorkloadDb JSON, no shell, no sequence watermark
+        1 => Ok(SnapshotPayload { version, last_seq: 0, db: shell }),
+        2 => {
+            let last_seq = shell.get("last_seq")?.as_usize()? as u64;
+            let db = shell.get("db")?.clone();
+            Ok(SnapshotPayload { version, last_seq, db })
+        }
+        other => Err(Error::persist(format!(
+            "no migration path from snapshot version {other}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knowledge::persist::codec::{BinaryCodec, JsonCodec};
+    use crate::knowledge::{Characterization, WorkloadDb};
+    use crate::util::error::ErrorKind;
+
+    fn tiny_db() -> WorkloadDb {
+        let mut db = WorkloadDb::new();
+        let rows = vec![vec![1.0, 2.0], vec![1.2, 2.2]];
+        db.insert_new(
+            Characterization::from_vec_rows(&rows),
+            vec![1.1, 2.1],
+            2,
+            false,
+        );
+        db
+    }
+
+    #[test]
+    fn envelope_roundtrips_both_codecs() {
+        let db = tiny_db();
+        for codec in [
+            Box::new(JsonCodec) as Box<dyn SnapshotCodec>,
+            Box::new(BinaryCodec),
+        ] {
+            let shell = make_shell(db.to_json(), 41);
+            let bytes = encode_snapshot(codec.as_ref(), &shell);
+            let p = decode_snapshot(&bytes).unwrap();
+            assert_eq!(p.version, SNAPSHOT_VERSION);
+            assert_eq!(p.last_seq, 41);
+            let back = WorkloadDb::from_json(&p.db).unwrap();
+            assert_eq!(back.len(), 1);
+        }
+    }
+
+    #[test]
+    fn bit_flip_is_rejected_with_persist_kind() {
+        let shell = make_shell(tiny_db().to_json(), 0);
+        let mut bytes = encode_snapshot(&BinaryCodec, &shell);
+        let k = HEADER_LEN + bytes.len() / 2;
+        bytes[k] ^= 0x10;
+        let e = decode_snapshot(&bytes).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Persist);
+        assert!(e.to_string().contains("checksum"), "{e}");
+    }
+
+    #[test]
+    fn torn_write_is_rejected() {
+        let shell = make_shell(tiny_db().to_json(), 0);
+        let bytes = encode_snapshot(&JsonCodec, &shell);
+        // a torn header and a torn payload both fail loudly
+        assert!(decode_snapshot(&bytes[..16]).is_err());
+        let e = decode_snapshot(&bytes[..bytes.len() - 3]).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn future_versions_are_refused_not_guessed() {
+        let shell = make_shell(tiny_db().to_json(), 0);
+        let mut bytes = encode_snapshot(&BinaryCodec, &shell);
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let e = decode_snapshot(&bytes).unwrap_err();
+        assert!(e.to_string().contains("version 99"), "{e}");
+    }
+
+    #[test]
+    fn legacy_bare_json_migrates_forward() {
+        // a pre-PR-7 WorkloadDb::save file: no magic, no envelope
+        let text = tiny_db().to_json().encode_pretty();
+        let p = decode_snapshot(text.as_bytes()).unwrap();
+        assert_eq!(p.version, 0);
+        assert_eq!(p.last_seq, 0);
+        assert_eq!(WorkloadDb::from_json(&p.db).unwrap().len(), 1);
+        // but arbitrary JSON is not mistaken for a DB
+        assert!(decode_snapshot(b"{\"x\": 1}").is_err());
+        assert!(decode_snapshot(&[0xfe, 0xff, 0x00]).is_err());
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp_behind() {
+        let dir = std::env::temp_dir().join("kermit_snap_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = snapshot_path(&dir, 1);
+        let shell = make_shell(tiny_db().to_json(), 7);
+        let bytes = encode_snapshot(&BinaryCodec, &shell);
+        write_atomic(&path, &bytes).unwrap();
+        assert_eq!(read_snapshot(&path).unwrap().last_seq, 7);
+        assert!(!path.with_extension("kdb.tmp").exists());
+        assert_eq!(list_generations(&dir), vec![1]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

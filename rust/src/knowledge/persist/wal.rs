@@ -1,0 +1,386 @@
+//! Append-only write-ahead log of knowledge-plane mutations between
+//! snapshots.
+//!
+//! Frame layout (all little-endian):
+//!
+//! ```text
+//! [u32 payload_len][u64 seq][u64 checksum][payload bytes]
+//! ```
+//!
+//! `checksum = fnv1a64(seq_le ++ payload)` — a bit flip in either the
+//! sequence number or the record body is caught. The payload is the
+//! compact JSON encoding of one [`WalRecord`] (records are small and
+//! rare relative to measurements; debuggability wins over bytes here —
+//! snapshots carry the bulk and use the binary codec).
+//!
+//! Torn-tail contract: records are appended strictly sequentially, so
+//! the first frame that fails its length or checksum marks the end of
+//! trustworthy data — everything from that offset on is truncated and
+//! reported (`torn = true`). Recovery then continues with the valid
+//! prefix ("zero loss up to the WAL tail").
+
+use super::fnv1a64;
+use crate::knowledge::workload_db::{entry_from_json, entry_to_json};
+use crate::knowledge::WorkloadEntry;
+use crate::simcluster::config_space::ConfigIndex;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// One durable knowledge-plane mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// A workload discovered (or restored): the full entry.
+    Insert(Box<WorkloadEntry>),
+    /// An optimum stored for `label` (Algorithm 1's "Update WorkloadDB
+    /// with J_i^o"); `duration` present when the search measured it.
+    Optimum {
+        label: u32,
+        config: ConfigIndex,
+        duration: Option<f64>,
+    },
+    /// `label` quarantined (poison detector or integrity audit).
+    Quarantine { label: u32 },
+    /// `label` marked drifting: optimum trust revoked. The refreshed
+    /// characterization is NOT logged (it is derivable from live
+    /// traffic and only affects match distances); the trust flags are
+    /// what recovery must preserve.
+    Drift { label: u32 },
+    /// A probe measurement fed to `label`'s search session. Replay is
+    /// a state no-op (sessions are in-memory); logged so a restarted
+    /// plane's operator can account for every paid probe.
+    Measurement { label: u32, duration: f64 },
+}
+
+impl WalRecord {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            WalRecord::Insert(e) => {
+                j.set("t", Json::Str("insert".into()))
+                    .set("entry", entry_to_json(e));
+            }
+            WalRecord::Optimum { label, config, duration } => {
+                j.set("t", Json::Str("optimum".into()))
+                    .set("label", Json::Num(*label as f64))
+                    .set(
+                        "config",
+                        Json::Arr(
+                            config
+                                .0
+                                .iter()
+                                .map(|&i| Json::Num(i as f64))
+                                .collect(),
+                        ),
+                    )
+                    .set(
+                        "duration",
+                        match duration {
+                            Some(d) => Json::Num(*d),
+                            None => Json::Null,
+                        },
+                    );
+            }
+            WalRecord::Quarantine { label } => {
+                j.set("t", Json::Str("quarantine".into()))
+                    .set("label", Json::Num(*label as f64));
+            }
+            WalRecord::Drift { label } => {
+                j.set("t", Json::Str("drift".into()))
+                    .set("label", Json::Num(*label as f64));
+            }
+            WalRecord::Measurement { label, duration } => {
+                j.set("t", Json::Str("measurement".into()))
+                    .set("label", Json::Num(*label as f64))
+                    .set("duration", Json::Num(*duration));
+            }
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<WalRecord> {
+        let t = j.get("t")?.as_str()?;
+        let label = |j: &Json| -> Result<u32> {
+            Ok(j.get("label")?.as_usize()? as u32)
+        };
+        match t {
+            "insert" => {
+                let e = entry_from_json(j.get("entry")?)?;
+                Ok(WalRecord::Insert(Box::new(e)))
+            }
+            "optimum" => {
+                let v = j.get("config")?.f64s()?;
+                if v.len() != 6 {
+                    return Err(Error::persist(
+                        "optimum record config is not 6-dimensional",
+                    ));
+                }
+                let mut idx = [0usize; 6];
+                for (d, x) in v.iter().enumerate() {
+                    idx[d] = *x as usize;
+                }
+                let duration = match j.get("duration")? {
+                    Json::Null => None,
+                    n => Some(n.as_f64()?),
+                };
+                Ok(WalRecord::Optimum {
+                    label: label(j)?,
+                    config: ConfigIndex(idx),
+                    duration,
+                })
+            }
+            "quarantine" => Ok(WalRecord::Quarantine { label: label(j)? }),
+            "drift" => Ok(WalRecord::Drift { label: label(j)? }),
+            "measurement" => Ok(WalRecord::Measurement {
+                label: label(j)?,
+                duration: j.get("duration")?.as_f64()?,
+            }),
+            other => {
+                Err(Error::persist(format!("unknown WAL record '{other}'")))
+            }
+        }
+    }
+}
+
+const FRAME_HEADER: usize = 4 + 8 + 8;
+
+/// Serialize one frame.
+pub fn encode_frame(seq: u64, record: &WalRecord) -> Vec<u8> {
+    let payload = record.to_json().encode().into_bytes();
+    let seq_le = seq.to_le_bytes();
+    let mut hashed = Vec::with_capacity(8 + payload.len());
+    hashed.extend_from_slice(&seq_le);
+    hashed.extend_from_slice(&payload);
+    let mut out = Vec::with_capacity(FRAME_HEADER + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&seq_le);
+    out.extend_from_slice(&fnv1a64(&hashed).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Append one frame to the WAL file at `path`, fsyncing so the record
+/// survives a crash immediately after this call returns.
+pub fn append_frame(path: &Path, seq: u64, record: &WalRecord) -> Result<()> {
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    f.write_all(&encode_frame(seq, record))?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// Result of scanning one WAL file.
+#[derive(Debug, Clone, Default)]
+pub struct WalScan {
+    /// Valid records in append order, with their sequence numbers.
+    pub records: Vec<(u64, WalRecord)>,
+    /// Byte length of the valid prefix.
+    pub valid_bytes: usize,
+    /// True when the file ended in a torn / corrupt frame.
+    pub torn: bool,
+}
+
+/// Decode every valid frame in `bytes`, stopping at the first torn or
+/// checksum-failing frame (everything after it is untrustworthy — the
+/// log is strictly sequential).
+pub fn scan_frames(bytes: &[u8]) -> WalScan {
+    let mut out = WalScan::default();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let Some(header) = bytes.get(pos..pos + FRAME_HEADER) else {
+            out.torn = true;
+            break;
+        };
+        let mut u32le = [0u8; 4];
+        u32le.copy_from_slice(&header[0..4]);
+        let len = u32::from_le_bytes(u32le) as usize;
+        let mut u64le = [0u8; 8];
+        u64le.copy_from_slice(&header[4..12]);
+        let seq = u64::from_le_bytes(u64le);
+        u64le.copy_from_slice(&header[12..20]);
+        let checksum = u64::from_le_bytes(u64le);
+        let start = pos + FRAME_HEADER;
+        let Some(payload) = start
+            .checked_add(len)
+            .filter(|&e| e <= bytes.len())
+            .map(|e| &bytes[start..e])
+        else {
+            out.torn = true;
+            break;
+        };
+        let mut hashed = Vec::with_capacity(8 + len);
+        hashed.extend_from_slice(&seq.to_le_bytes());
+        hashed.extend_from_slice(payload);
+        if fnv1a64(&hashed) != checksum {
+            out.torn = true;
+            break;
+        }
+        let parsed = std::str::from_utf8(payload)
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+            .and_then(|j| WalRecord::from_json(&j).ok());
+        let Some(record) = parsed else {
+            out.torn = true;
+            break;
+        };
+        out.records.push((seq, record));
+        pos = start + len;
+        out.valid_bytes = pos;
+    }
+    out
+}
+
+/// Scan a WAL file; when the tail is torn, truncate the file in place
+/// to the valid prefix (the repair is what lets the *next* appends go
+/// to a clean log instead of hiding behind garbage forever).
+pub fn recover_wal(path: &Path) -> Result<WalScan> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(WalScan::default())
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let scan = scan_frames(&bytes);
+    if scan.torn {
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(scan.valid_bytes as u64)?;
+        f.sync_all()?;
+    }
+    Ok(scan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knowledge::{Characterization, WorkloadDb};
+
+    fn entry() -> WorkloadEntry {
+        let rows = vec![vec![1.0, 2.0], vec![1.5, 2.5]];
+        let mut db = WorkloadDb::new();
+        let l = db.insert_new(
+            Characterization::from_vec_rows(&rows),
+            vec![1.25, 2.25],
+            2,
+            false,
+        );
+        db.set_optimal_measured(l, ConfigIndex([1, 2, 3, 0, 1, 0]), 12.5);
+        db.get(l).unwrap().clone()
+    }
+
+    fn records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Insert(Box::new(entry())),
+            WalRecord::Optimum {
+                label: 0,
+                config: ConfigIndex([1, 2, 3, 0, 1, 0]),
+                duration: Some(12.5),
+            },
+            WalRecord::Optimum {
+                label: 3,
+                config: ConfigIndex([0, 0, 0, 0, 0, 0]),
+                duration: None,
+            },
+            WalRecord::Quarantine { label: 3 },
+            WalRecord::Drift { label: 0 },
+            WalRecord::Measurement { label: 0, duration: 99.25 },
+        ]
+    }
+
+    #[test]
+    fn records_roundtrip_json() {
+        for r in records() {
+            let back = WalRecord::from_json(&r.to_json()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_in_order() {
+        let mut bytes = Vec::new();
+        for (i, r) in records().iter().enumerate() {
+            bytes.extend_from_slice(&encode_frame(i as u64 + 10, r));
+        }
+        let scan = scan_frames(&bytes);
+        assert!(!scan.torn);
+        assert_eq!(scan.valid_bytes, bytes.len());
+        assert_eq!(scan.records.len(), records().len());
+        for (i, (seq, r)) in scan.records.iter().enumerate() {
+            assert_eq!(*seq, i as u64 + 10);
+            assert_eq!(r, &records()[i]);
+        }
+    }
+
+    #[test]
+    fn torn_tail_keeps_the_valid_prefix() {
+        let rs = records();
+        let mut bytes = Vec::new();
+        let mut cut_at = 0usize;
+        for (i, r) in rs.iter().enumerate() {
+            if i == rs.len() - 1 {
+                cut_at = bytes.len();
+            }
+            bytes.extend_from_slice(&encode_frame(i as u64, r));
+        }
+        // tear mid-way through the last frame
+        for torn_len in [cut_at + 1, cut_at + FRAME_HEADER + 2] {
+            let scan = scan_frames(&bytes[..torn_len]);
+            assert!(scan.torn, "torn at {torn_len}");
+            assert_eq!(scan.records.len(), rs.len() - 1);
+            assert_eq!(scan.valid_bytes, cut_at);
+        }
+    }
+
+    #[test]
+    fn mid_log_bit_flip_truncates_from_there() {
+        let rs = records();
+        let mut bytes = Vec::new();
+        let mut second_at = 0usize;
+        for (i, r) in rs.iter().enumerate() {
+            if i == 1 {
+                second_at = bytes.len();
+            }
+            bytes.extend_from_slice(&encode_frame(i as u64, r));
+        }
+        bytes[second_at + FRAME_HEADER + 3] ^= 0x40;
+        let scan = scan_frames(&bytes);
+        assert!(scan.torn);
+        // only the record before the corruption survives
+        assert_eq!(scan.records.len(), 1);
+        assert_eq!(scan.valid_bytes, second_at);
+    }
+
+    #[test]
+    fn recover_truncates_the_file_in_place() {
+        let dir = std::env::temp_dir().join("kermit_wal_recover_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wal-000001.log");
+        std::fs::remove_file(&path).ok();
+        for (i, r) in records().iter().enumerate() {
+            append_frame(&path, i as u64, r).unwrap();
+        }
+        let full = std::fs::metadata(&path).unwrap().len();
+        // tear 5 bytes off the tail
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 5).unwrap();
+        drop(f);
+        let scan = recover_wal(&path).unwrap();
+        assert!(scan.torn);
+        assert_eq!(scan.records.len(), records().len() - 1);
+        // repaired: a second scan is clean and appends continue
+        let scan2 = recover_wal(&path).unwrap();
+        assert!(!scan2.torn);
+        assert_eq!(scan2.records.len(), records().len() - 1);
+        append_frame(&path, 77, &records()[0]).unwrap();
+        let scan3 = recover_wal(&path).unwrap();
+        assert!(!scan3.torn);
+        assert_eq!(scan3.records.last().unwrap().0, 77);
+        // a missing file scans empty (fresh store)
+        let none = recover_wal(&dir.join("wal-000009.log")).unwrap();
+        assert!(none.records.is_empty() && !none.torn);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -13,6 +13,7 @@
 //! survives restarts and is human-inspectable.
 
 use crate::features::NUM_FEATURES;
+use crate::knowledge::persist::wal::WalRecord;
 use crate::linalg::Matrix;
 use crate::simcluster::config_space::ConfigIndex;
 use crate::stats::Summary;
@@ -100,11 +101,35 @@ pub struct WorkloadEntry {
 pub struct WorkloadDb {
     entries: BTreeMap<u32, WorkloadEntry>,
     next_label: u32,
+    /// Durable-plane journal: mutations since the last `take_journal`.
+    /// Empty (and never grows) unless journaling is enabled, so a DB
+    /// without an attached store pays nothing.
+    journal: Vec<WalRecord>,
+    journaling: bool,
 }
 
 impl WorkloadDb {
     pub fn new() -> WorkloadDb {
         WorkloadDb::default()
+    }
+
+    /// Start journaling mutations (a durable store is attached). WAL
+    /// replay during recovery runs *before* this, so replayed records
+    /// are never re-journaled.
+    pub fn enable_journal(&mut self) {
+        self.journaling = true;
+    }
+
+    /// Drain the journaled mutations; the caller appends them to the
+    /// WAL. Always empty when journaling is off.
+    pub fn take_journal(&mut self) -> Vec<WalRecord> {
+        std::mem::take(&mut self.journal)
+    }
+
+    fn record(&mut self, r: WalRecord) {
+        if self.journaling {
+            self.journal.push(r);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -160,23 +185,30 @@ impl WorkloadDb {
     ) -> u32 {
         let label = self.next_label;
         self.next_label += 1;
-        self.entries.insert(
+        let entry = WorkloadEntry {
             label,
-            WorkloadEntry {
-                label,
-                characterization,
-                centroid,
-                optimal_config_found: false,
-                is_drifting: false,
-                config: None,
-                window_count,
-                synthetic,
-                parents,
-                quarantined: false,
-                best_duration: None,
-            },
-        );
+            characterization,
+            centroid,
+            optimal_config_found: false,
+            is_drifting: false,
+            config: None,
+            window_count,
+            synthetic,
+            parents,
+            quarantined: false,
+            best_duration: None,
+        };
+        self.record(WalRecord::Insert(Box::new(entry.clone())));
+        self.entries.insert(label, entry);
         label
+    }
+
+    /// Reinstall an entry verbatim during WAL replay (recovery path).
+    /// Keeps the label counter monotone past every restored label; does
+    /// not journal — a replayed record is already durable.
+    pub fn restore_entry(&mut self, e: WorkloadEntry) {
+        self.next_label = self.next_label.max(e.label + 1);
+        self.entries.insert(e.label, e);
     }
 
     /// True if a synthetic class for this (unordered) parent pair exists.
@@ -219,12 +251,7 @@ impl WorkloadDb {
     /// "Update WorkloadDB with J_i^o"). A completed search also lifts
     /// any quarantine: the optimum was just re-earned.
     pub fn set_optimal_config(&mut self, label: u32, config: ConfigIndex) {
-        let e = self.entries.get_mut(&label).expect("unknown label");
-        e.config = Some(config);
-        e.optimal_config_found = true;
-        e.is_drifting = false;
-        e.quarantined = false;
-        e.best_duration = None;
+        self.apply_optimal(label, config, None);
     }
 
     /// Like [`set_optimal_config`](Self::set_optimal_config) but also
@@ -236,9 +263,28 @@ impl WorkloadDb {
         config: ConfigIndex,
         duration: f64,
     ) {
-        self.set_optimal_config(label, config);
+        self.apply_optimal(
+            label,
+            config,
+            duration.is_finite().then_some(duration),
+        );
+    }
+
+    /// Shared body of the two optimum setters: one mutation, one
+    /// journal record (never two for a measured optimum).
+    fn apply_optimal(
+        &mut self,
+        label: u32,
+        config: ConfigIndex,
+        duration: Option<f64>,
+    ) {
         let e = self.entries.get_mut(&label).expect("unknown label");
-        e.best_duration = duration.is_finite().then_some(duration);
+        e.config = Some(config);
+        e.optimal_config_found = true;
+        e.is_drifting = false;
+        e.quarantined = false;
+        e.best_duration = duration;
+        self.record(WalRecord::Optimum { label, config, duration });
     }
 
     /// Quarantine a poisoned entry: its stored optimum is untrusted and
@@ -252,6 +298,7 @@ impl WorkloadDb {
                 // flag, so clearing it contains the poison immediately
                 e.optimal_config_found = false;
                 e.best_duration = None;
+                self.record(WalRecord::Quarantine { label });
                 true
             }
             None => false,
@@ -312,6 +359,10 @@ impl WorkloadDb {
         e.characterization = new_characterization;
         e.centroid = new_centroid;
         e.window_count = window_count;
+        // only the trust flags are journaled; the refreshed
+        // characterization is derivable from live traffic after a
+        // restart and a stale one only inflates one match distance
+        self.record(WalRecord::Drift { label });
     }
 
     /// Refresh a matched (non-drifting) workload's characterization with
@@ -330,66 +381,8 @@ impl WorkloadDb {
     // ---- persistence -----------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        let mut workloads = Vec::new();
-        for e in self.entries.values() {
-            let mut o = Json::obj();
-            o.set("label", Json::Num(e.label as f64))
-                .set("optimal_config_found", Json::Bool(e.optimal_config_found))
-                .set("is_drifting", Json::Bool(e.is_drifting))
-                .set("window_count", Json::Num(e.window_count as f64))
-                .set("synthetic", Json::Bool(e.synthetic))
-                .set("quarantined", Json::Bool(e.quarantined))
-                .set(
-                    "best_duration",
-                    match e.best_duration {
-                        Some(d) => Json::Num(d),
-                        None => Json::Null,
-                    },
-                )
-                .set("centroid", Json::from_f64_slice(&e.centroid))
-                .set(
-                    "characterization",
-                    Json::Arr(
-                        e.characterization
-                            .per_feature
-                            .iter()
-                            .map(|s| {
-                                Json::from_f64_slice(&[
-                                    s.n as f64, s.mean, s.std, s.min,
-                                    s.max, s.p75, s.p90,
-                                ])
-                            })
-                            .collect(),
-                    ),
-                );
-            match e.config {
-                Some(ci) => {
-                    o.set(
-                        "config",
-                        Json::Arr(
-                            ci.0.iter()
-                                .map(|&i| Json::Num(i as f64))
-                                .collect(),
-                        ),
-                    );
-                }
-                None => {
-                    o.set("config", Json::Null);
-                }
-            }
-            match e.parents {
-                Some((a, b)) => {
-                    o.set(
-                        "parents",
-                        Json::from_f64_slice(&[a as f64, b as f64]),
-                    );
-                }
-                None => {
-                    o.set("parents", Json::Null);
-                }
-            }
-            workloads.push(o);
-        }
+        let workloads =
+            self.entries.values().map(entry_to_json).collect();
         let mut root = Json::obj();
         root.set("next_label", Json::Num(self.next_label as f64))
             .set("workloads", Json::Arr(workloads));
@@ -400,69 +393,8 @@ impl WorkloadDb {
         let mut db = WorkloadDb::new();
         db.next_label = j.get("next_label")?.as_usize()? as u32;
         for w in j.get("workloads")?.as_arr()? {
-            let label = w.get("label")?.as_usize()? as u32;
-            let per_feature = w
-                .get("characterization")?
-                .as_arr()?
-                .iter()
-                .map(|s| {
-                    let v = s.f64s()?;
-                    Ok(Summary {
-                        n: v[0] as usize,
-                        mean: v[1],
-                        std: v[2],
-                        min: v[3],
-                        max: v[4],
-                        p75: v[5],
-                        p90: v[6],
-                    })
-                })
-                .collect::<Result<Vec<_>, JsonError>>()?;
-            let config = match w.get("config")? {
-                Json::Null => None,
-                arr => {
-                    let v = arr.f64s()?;
-                    let mut idx = [0usize; 6];
-                    for (d, x) in v.iter().enumerate().take(6) {
-                        idx[d] = *x as usize;
-                    }
-                    Some(ConfigIndex(idx))
-                }
-            };
-            let parents = match w.get_opt("parents") {
-                None | Some(Json::Null) => None,
-                Some(arr) => {
-                    let v = arr.f64s()?;
-                    Some((v[0] as u32, v[1] as u32))
-                }
-            };
-            // both absent in pre-chaos-lab snapshots: default to trusted
-            let quarantined = match w.get_opt("quarantined") {
-                None | Some(Json::Null) => false,
-                Some(b) => b.as_bool()?,
-            };
-            let best_duration = match w.get_opt("best_duration") {
-                None | Some(Json::Null) => None,
-                Some(n) => Some(n.as_f64()?),
-            };
-            db.entries.insert(
-                label,
-                WorkloadEntry {
-                    label,
-                    characterization: Characterization { per_feature },
-                    centroid: w.get("centroid")?.f64s()?,
-                    optimal_config_found: w
-                        .get("optimal_config_found")?
-                        .as_bool()?,
-                    is_drifting: w.get("is_drifting")?.as_bool()?,
-                    config,
-                    window_count: w.get("window_count")?.as_usize()?,
-                    synthetic: w.get("synthetic")?.as_bool()?,
-                    parents,
-                    quarantined,
-                    best_duration,
-                },
-            );
+            let e = entry_from_json(w)?;
+            db.entries.insert(e.label, e);
         }
         Ok(db)
     }
@@ -475,6 +407,128 @@ impl WorkloadDb {
         let text = std::fs::read_to_string(path)?;
         Ok(WorkloadDb::from_json(&Json::parse(&text)?)?)
     }
+}
+
+/// Serialize one entry — the shared schema for `WorkloadDb::to_json`
+/// workload rows and WAL `insert` records (one schema, one migration
+/// story for both).
+pub fn entry_to_json(e: &WorkloadEntry) -> Json {
+    let mut o = Json::obj();
+    o.set("label", Json::Num(e.label as f64))
+        .set("optimal_config_found", Json::Bool(e.optimal_config_found))
+        .set("is_drifting", Json::Bool(e.is_drifting))
+        .set("window_count", Json::Num(e.window_count as f64))
+        .set("synthetic", Json::Bool(e.synthetic))
+        .set("quarantined", Json::Bool(e.quarantined))
+        .set(
+            "best_duration",
+            match e.best_duration {
+                Some(d) => Json::Num(d),
+                None => Json::Null,
+            },
+        )
+        .set("centroid", Json::from_f64_slice(&e.centroid))
+        .set(
+            "characterization",
+            Json::Arr(
+                e.characterization
+                    .per_feature
+                    .iter()
+                    .map(|s| {
+                        Json::from_f64_slice(&[
+                            s.n as f64, s.mean, s.std, s.min, s.max,
+                            s.p75, s.p90,
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+    match e.config {
+        Some(ci) => {
+            o.set(
+                "config",
+                Json::Arr(
+                    ci.0.iter().map(|&i| Json::Num(i as f64)).collect(),
+                ),
+            );
+        }
+        None => {
+            o.set("config", Json::Null);
+        }
+    }
+    match e.parents {
+        Some((a, b)) => {
+            o.set("parents", Json::from_f64_slice(&[a as f64, b as f64]));
+        }
+        None => {
+            o.set("parents", Json::Null);
+        }
+    }
+    o
+}
+
+/// Parse one entry. Tolerates pre-quarantine-era rows (no
+/// `quarantined` / `best_duration` keys — default to trusted) so every
+/// snapshot generation ever written still loads.
+pub fn entry_from_json(w: &Json) -> Result<WorkloadEntry, JsonError> {
+    let label = w.get("label")?.as_usize()? as u32;
+    let per_feature = w
+        .get("characterization")?
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            let v = s.f64s()?;
+            Ok(Summary {
+                n: v[0] as usize,
+                mean: v[1],
+                std: v[2],
+                min: v[3],
+                max: v[4],
+                p75: v[5],
+                p90: v[6],
+            })
+        })
+        .collect::<Result<Vec<_>, JsonError>>()?;
+    let config = match w.get("config")? {
+        Json::Null => None,
+        arr => {
+            let v = arr.f64s()?;
+            let mut idx = [0usize; 6];
+            for (d, x) in v.iter().enumerate().take(6) {
+                idx[d] = *x as usize;
+            }
+            Some(ConfigIndex(idx))
+        }
+    };
+    let parents = match w.get_opt("parents") {
+        None | Some(Json::Null) => None,
+        Some(arr) => {
+            let v = arr.f64s()?;
+            Some((v[0] as u32, v[1] as u32))
+        }
+    };
+    // both absent in pre-chaos-lab snapshots: default to trusted
+    let quarantined = match w.get_opt("quarantined") {
+        None | Some(Json::Null) => false,
+        Some(b) => b.as_bool()?,
+    };
+    let best_duration = match w.get_opt("best_duration") {
+        None | Some(Json::Null) => None,
+        Some(n) => Some(n.as_f64()?),
+    };
+    Ok(WorkloadEntry {
+        label,
+        characterization: Characterization { per_feature },
+        centroid: w.get("centroid")?.f64s()?,
+        optimal_config_found: w.get("optimal_config_found")?.as_bool()?,
+        is_drifting: w.get("is_drifting")?.as_bool()?,
+        config,
+        window_count: w.get("window_count")?.as_usize()?,
+        synthetic: w.get("synthetic")?.as_bool()?,
+        parents,
+        quarantined,
+        best_duration,
+    })
 }
 
 /// Helper: characterization width for raw observation windows.
@@ -666,6 +720,56 @@ mod tests {
         let old = WorkloadDb::from_json(&j).unwrap();
         assert!(!old.get(l0).unwrap().quarantined);
         assert_eq!(old.get(l0).unwrap().best_duration, None);
+    }
+
+    #[test]
+    fn journal_captures_each_mutation_exactly_once() {
+        let mut db = WorkloadDb::new();
+        // journaling off: nothing accumulates
+        let l0 = db.insert_new(char_of(1.0, 4), vec![1.0, 2.0], 4, false);
+        assert!(db.take_journal().is_empty());
+
+        db.enable_journal();
+        let l1 = db.insert_new(char_of(5.0, 4), vec![5.0, 10.0], 4, false);
+        db.set_optimal_measured(l1, ConfigIndex([1, 1, 1, 1, 1, 0]), 20.0);
+        db.set_optimal_config(l0, ConfigIndex([2, 2, 2, 2, 2, 0]));
+        db.quarantine(l0);
+        db.quarantine(999); // unknown: no record
+        db.mark_drifting(l1, char_of(6.0, 4), vec![6.0, 12.0], 4);
+        db.refresh(l1, char_of(6.5, 4), 2); // refresh is NOT journaled
+
+        let j = db.take_journal();
+        assert_eq!(j.len(), 5);
+        assert!(matches!(&j[0], WalRecord::Insert(e) if e.label == l1));
+        // a measured optimum journals ONE record carrying the duration
+        assert!(matches!(
+            j[1],
+            WalRecord::Optimum { label, duration: Some(d), .. }
+                if label == l1 && d == 20.0
+        ));
+        assert!(matches!(
+            j[2],
+            WalRecord::Optimum { label, duration: None, .. }
+                if label == l0
+        ));
+        assert!(matches!(j[3], WalRecord::Quarantine { label } if label == l0));
+        assert!(matches!(j[4], WalRecord::Drift { label } if label == l1));
+        // drained: a second take is empty
+        assert!(db.take_journal().is_empty());
+    }
+
+    #[test]
+    fn restore_entry_keeps_labels_monotone() {
+        let mut db = WorkloadDb::new();
+        let mut src = WorkloadDb::new();
+        let l = src.insert_new(char_of(3.0, 4), vec![3.0, 6.0], 4, false);
+        src.set_optimal_measured(l, ConfigIndex([0, 1, 0, 1, 0, 1]), 9.5);
+        let e = src.get(l).unwrap().clone();
+        db.restore_entry(e);
+        assert_eq!(db.get(l).unwrap().best_duration, Some(9.5));
+        // the counter moved past the restored label: no reuse
+        let next = db.insert_new(char_of(8.0, 4), vec![8.0, 16.0], 4, false);
+        assert_eq!(next, l + 1);
     }
 
     #[test]

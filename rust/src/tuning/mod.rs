@@ -34,6 +34,9 @@ use crate::coordinator::{
     MultiTenantReport,
 };
 use crate::explorer::ExplorerConfig;
+use crate::knowledge::persist::{
+    KnowledgeStore, RecoveryReport, SnapshotCodec, WalRecord,
+};
 use crate::online::{
     ChoiceKind, KermitPlugin, PluginStats, ResiliencePolicy, UNKNOWN,
 };
@@ -113,6 +116,27 @@ impl Default for TuningResilience {
 /// on overflow, like the stream layer's shard logs — the durable
 /// per-kind counts live in `PluginStats`).
 const CHOICE_LOG_CAP: usize = 4096;
+
+/// Cadence of the durable knowledge plane when a store is attached:
+/// the mutation journal is flushed to the WAL every
+/// `flush_every_decisions` Algorithm-1 events (decisions +
+/// completions), and every `snapshot_every_flushes` flushes the DB is
+/// folded into a new snapshot generation. Smaller numbers shrink the
+/// crash-loss window at the cost of more fsyncs.
+#[derive(Debug, Clone, Copy)]
+pub struct PersistencePolicy {
+    pub flush_every_decisions: u32,
+    pub snapshot_every_flushes: u32,
+}
+
+impl Default for PersistencePolicy {
+    fn default() -> Self {
+        PersistencePolicy {
+            flush_every_decisions: 8,
+            snapshot_every_flushes: 16,
+        }
+    }
+}
 
 /// What a pending decision was (determines the completion edge).
 #[derive(Debug, Clone, Copy)]
@@ -208,6 +232,16 @@ pub struct TuningPlane {
     pub probe_jobs_failed: usize,
     /// Labels the poison detector quarantined.
     pub labels_quarantined: usize,
+    /// Attached durable knowledge store (None: in-memory only — every
+    /// pre-existing caller pays nothing).
+    store: Option<KnowledgeStore>,
+    /// Flush / snapshot cadence when a store is attached.
+    pub persistence: PersistencePolicy,
+    events_since_flush: u32,
+    flushes_since_snapshot: u32,
+    /// Persistence failures absorbed (full disk, EPERM): the plane
+    /// degrades to in-memory behaviour, it never panics mid-decision.
+    pub persist_errors: usize,
 }
 
 impl TuningPlane {
@@ -227,6 +261,111 @@ impl TuningPlane {
             probes_timed_out: 0,
             probe_jobs_failed: 0,
             labels_quarantined: 0,
+            store: None,
+            persistence: PersistencePolicy::default(),
+            events_since_flush: 0,
+            flushes_since_snapshot: 0,
+            persist_errors: 0,
+        }
+    }
+
+    /// Open a tuning plane on a durable knowledge store: recover the
+    /// DB (newest verifying snapshot + WAL replay), install it as the
+    /// shared knowledge plane, and attach the store so every further
+    /// mutation is journaled. A restarted deployment serves recovered
+    /// optima as cache hits from job one — zero probes re-paid for
+    /// anything already learned.
+    pub fn open_durable(
+        config: TuningPlaneConfig,
+        dir: &std::path::Path,
+        codec: Box<dyn SnapshotCodec>,
+    ) -> crate::util::error::Result<(TuningPlane, RecoveryReport)> {
+        let (store, db, report) = KnowledgeStore::open(dir, codec)?;
+        let mut plane = TuningPlane::new(config);
+        plane.coord.install_db(db);
+        plane.attach_store(store);
+        Ok((plane, report))
+    }
+
+    /// Attach an opened store and start journaling DB mutations.
+    pub fn attach_store(&mut self, store: KnowledgeStore) {
+        self.coord.db.write().unwrap().enable_journal();
+        self.store = Some(store);
+    }
+
+    /// The attached store (chaos scenarios arm faults through this).
+    pub fn store_mut(&mut self) -> Option<&mut KnowledgeStore> {
+        self.store.as_mut()
+    }
+
+    pub fn store(&self) -> Option<&KnowledgeStore> {
+        self.store.as_ref()
+    }
+
+    /// Drain the DB journal into the WAL (fsynced). Errors are counted
+    /// in `persist_errors`, never raised: losing durability degrades,
+    /// it must not take the decision path down with it.
+    pub fn persist_flush(&mut self) {
+        self.events_since_flush = 0;
+        if self.store.is_none() {
+            return;
+        }
+        let journal = self.coord.db.write().unwrap().take_journal();
+        if journal.is_empty() {
+            return;
+        }
+        let store = self.store.as_mut().unwrap();
+        if store.append_all(&journal).is_err() {
+            self.persist_errors += 1;
+        }
+    }
+
+    /// Flush, then fold the DB into a new snapshot generation.
+    pub fn persist_snapshot(&mut self) {
+        self.persist_flush();
+        self.flushes_since_snapshot = 0;
+        let Some(store) = self.store.as_mut() else { return };
+        let failed = {
+            let db = self.coord.db.read().unwrap();
+            store.snapshot(&db).is_err()
+        };
+        if failed {
+            self.persist_errors += 1;
+        }
+    }
+
+    /// Cadenced persistence, called once per Algorithm-1 event.
+    fn persist_tick(&mut self) {
+        if self.store.is_none() {
+            return;
+        }
+        self.events_since_flush += 1;
+        if self.events_since_flush
+            >= self.persistence.flush_every_decisions
+        {
+            self.persist_flush();
+            self.flushes_since_snapshot += 1;
+            if self.flushes_since_snapshot
+                >= self.persistence.snapshot_every_flushes
+            {
+                self.persist_snapshot();
+            }
+        }
+    }
+
+    /// Clean shutdown: flush the journal and write a final snapshot.
+    pub fn shutdown(&mut self) {
+        if self.store.is_some() {
+            self.persist_snapshot();
+        }
+    }
+
+    /// Kill the plane the way a crash would: no final flush, no
+    /// snapshot — un-journaled mutations are lost, exactly what a real
+    /// crash loses. Armed WAL-tail faults fire on the way down.
+    pub fn crash(mut self) {
+        if let Some(store) = self.store.take() {
+            store.simulate_crash();
         }
     }
 
@@ -347,6 +486,7 @@ impl TuningPlane {
         if tt.choices.len() > CHOICE_LOG_CAP {
             tt.choices.drain(..CHOICE_LOG_CAP / 2);
         }
+        self.persist_tick();
         (config, kind)
     }
 
@@ -354,35 +494,58 @@ impl TuningPlane {
     pub fn complete(&mut self, t: TenantId, app_id: u64, duration: f64) {
         let Some(tt) = self.tenants.get_mut(&t) else { return };
         let Some(p) = tt.pending.remove(&app_id) else { return };
+        let mut measured = None;
         match p.kind {
             PendingKind::Probe { label } => {
                 tt.plugin.record_measurement(label, duration);
+                measured = Some(label);
             }
             PendingKind::CacheHit { label, expected } => {
                 // poison detection: a full-fleet run of the stored
                 // optimum that is wildly slower than its measured
                 // duration means the entry cannot be trusted
-                let (Some(exp), true) = (expected, p.granted >= p.asked)
-                else {
-                    return;
-                };
-                if duration > self.resilience.poison_factor * exp.max(1e-9)
+                if let (Some(exp), true) =
+                    (expected, p.granted >= p.asked)
                 {
-                    let c = self.strikes.entry(label).or_insert(0);
-                    *c += 1;
-                    if *c >= self.resilience.poison_strikes {
-                        self.strikes.remove(&label);
-                        if self.coord.db.write().unwrap().quarantine(label)
-                        {
-                            self.labels_quarantined += 1;
+                    if duration
+                        > self.resilience.poison_factor * exp.max(1e-9)
+                    {
+                        let c = self.strikes.entry(label).or_insert(0);
+                        *c += 1;
+                        if *c >= self.resilience.poison_strikes {
+                            self.strikes.remove(&label);
+                            if self
+                                .coord
+                                .db
+                                .write()
+                                .unwrap()
+                                .quarantine(label)
+                            {
+                                self.labels_quarantined += 1;
+                            }
                         }
+                    } else {
+                        // a healthy full-fleet hit clears the streak
+                        self.strikes.remove(&label);
                     }
-                } else {
-                    // a healthy full-fleet hit clears the streak
-                    self.strikes.remove(&label);
                 }
             }
         }
+        if let Some(label) = measured {
+            // paid probes go to the WAL as an audit trail (replay is a
+            // state no-op — sessions are in-memory); appended directly
+            // so the record carries the measurement even if the journal
+            // is between flushes
+            if let Some(store) = self.store.as_mut() {
+                if store
+                    .append(&WalRecord::Measurement { label, duration })
+                    .is_err()
+                {
+                    self.persist_errors += 1;
+                }
+            }
+        }
+        self.persist_tick();
     }
 
     /// Expire tenant `t`'s decisions older than the decision timeout.
@@ -471,6 +634,8 @@ impl TuningPlane {
         self.reconcile(
             sim_result.makespan + self.resilience.decision_timeout + 1.0,
         );
+        // a finished run's learnings are durable even between snapshots
+        self.persist_flush();
         self.report(sim_result)
     }
 
@@ -866,6 +1031,57 @@ mod tests {
             .get(label)
             .unwrap()
             .quarantined);
+    }
+
+    #[test]
+    fn durable_plane_recovers_optima_across_restart() {
+        use crate::knowledge::persist::BinaryCodec;
+        let dir = std::env::temp_dir().join("kermit_tuning_durable_test");
+        std::fs::remove_dir_all(&dir).ok();
+
+        let (mut plane, report) = TuningPlane::open_durable(
+            TuningPlaneConfig::default(),
+            &dir,
+            Box::new(BinaryCodec),
+        )
+        .unwrap();
+        assert_eq!(report.generation_loaded, None);
+        let t = TenantId(0);
+        plane.ensure_tenant(t);
+        let label = insert_workload(&plane);
+        publish(&plane, t, label, 0.0);
+        let mut app = 0u64;
+        loop {
+            let (c, kind) = plane.decide(t, app, 1.0);
+            match kind {
+                ChoiceKind::GlobalProbe => {
+                    plane.complete(t, app, job_duration(2, &c.to_config()))
+                }
+                ChoiceKind::CacheHit => break,
+                other => panic!("unexpected {other:?}"),
+            }
+            app += 1;
+        }
+        assert_eq!(plane.persist_errors, 0);
+        plane.shutdown();
+        drop(plane);
+
+        // restart: the recovered plane serves the learned optimum as a
+        // cache hit on its FIRST request — zero probes re-paid
+        let (mut plane2, report) = TuningPlane::open_durable(
+            TuningPlaneConfig::default(),
+            &dir,
+            Box::new(BinaryCodec),
+        )
+        .unwrap();
+        assert_eq!(report.generation_loaded, Some(1));
+        plane2.ensure_tenant(t);
+        publish(&plane2, t, label, 10.0);
+        let (_, kind) = plane2.decide(t, 500, 10.5);
+        assert_eq!(kind, ChoiceKind::CacheHit, "warm from job one");
+        assert_eq!(plane2.stats(t).unwrap().probes_paid(), 0);
+        assert_eq!(plane2.persist_errors, 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -2,19 +2,57 @@
 //! thiserror): a message-carrying error with `From` impls for the
 //! error types that cross module boundaries, so `?` composes through
 //! the CLI, persistence, and runtime layers without external crates.
+//!
+//! Errors carry an [`ErrorKind`] so callers can branch on the failure
+//! class (an I/O failure on a bench JSON write degrades the run; a
+//! persistence-envelope failure triggers generation fallback) without
+//! string-matching messages.
 
 use std::fmt;
 
-/// A boxed-free, message-only error. Construct with [`Error::msg`] or
-/// via the `From` impls.
+/// Coarse failure class. `Display` stays message-only so existing
+/// call sites and tests keep their output; the kind is for branching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Filesystem / OS I/O failure (full disk, missing path, EPERM).
+    Io,
+    /// Durable-knowledge-plane envelope failure: bad magic, checksum
+    /// mismatch, unsupported version, undecodable payload.
+    Persist,
+    /// Text / structure parsing failure (JSON, CLI).
+    Parse,
+    /// Anything else.
+    Other,
+}
+
+/// A boxed-free error: a message plus a coarse [`ErrorKind`].
+/// Construct with [`Error::msg`] / [`Error::io`] / [`Error::persist`]
+/// or via the `From` impls.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Error {
+    kind: ErrorKind,
     msg: String,
 }
 
 impl Error {
     pub fn msg(m: impl fmt::Display) -> Error {
-        Error { msg: m.to_string() }
+        Error { kind: ErrorKind::Other, msg: m.to_string() }
+    }
+
+    pub fn io(m: impl fmt::Display) -> Error {
+        Error { kind: ErrorKind::Io, msg: m.to_string() }
+    }
+
+    pub fn persist(m: impl fmt::Display) -> Error {
+        Error { kind: ErrorKind::Persist, msg: m.to_string() }
+    }
+
+    pub fn parse(m: impl fmt::Display) -> Error {
+        Error { kind: ErrorKind::Parse, msg: m.to_string() }
+    }
+
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
     }
 }
 
@@ -28,31 +66,31 @@ impl std::error::Error for Error {}
 
 impl From<String> for Error {
     fn from(s: String) -> Error {
-        Error { msg: s }
+        Error { kind: ErrorKind::Other, msg: s }
     }
 }
 
 impl From<&str> for Error {
     fn from(s: &str) -> Error {
-        Error { msg: s.to_string() }
+        Error { kind: ErrorKind::Other, msg: s.to_string() }
     }
 }
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Error {
-        Error::msg(e)
+        Error::io(e)
     }
 }
 
 impl From<crate::util::json::JsonError> for Error {
     fn from(e: crate::util::json::JsonError) -> Error {
-        Error::msg(e)
+        Error::parse(e)
     }
 }
 
 impl From<crate::util::cli::CliError> for Error {
     fn from(e: crate::util::cli::CliError) -> Error {
-        Error::msg(e)
+        Error::parse(e)
     }
 }
 
@@ -66,6 +104,7 @@ mod tests {
     fn displays_message() {
         let e = Error::msg(format!("bad thing {}", 7));
         assert_eq!(e.to_string(), "bad thing 7");
+        assert_eq!(e.kind(), ErrorKind::Other);
     }
 
     #[test]
@@ -74,6 +113,17 @@ mod tests {
             let _ = std::fs::read_to_string("/definitely/not/a/path/xyz")?;
             Ok(())
         }
-        assert!(inner().is_err());
+        let e = inner().unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Io);
+    }
+
+    #[test]
+    fn kinds_route_through_from_impls() {
+        let p: Error = crate::util::json::Json::parse("{").unwrap_err().into();
+        assert_eq!(p.kind(), ErrorKind::Parse);
+        let s: Error = "plain".into();
+        assert_eq!(s.kind(), ErrorKind::Other);
+        assert_eq!(Error::persist("torn").kind(), ErrorKind::Persist);
+        assert_eq!(Error::io("disk full").kind(), ErrorKind::Io);
     }
 }

@@ -1,0 +1,184 @@
+//! Durable knowledge plane: cross-version compatibility and
+//! byte-stability contracts for the snapshot path.
+//!
+//! Every WorkloadDB JSON shape this repo has ever written must keep
+//! loading through the versioned codec path:
+//!
+//! * pre-chaos-lab rows (no `quarantined` / `best_duration` keys) —
+//!   written by `WorkloadDb::save` before the poisoning detector
+//!   existed;
+//! * chaos-lab-era rows (quarantine fields present) — still bare
+//!   magic-less JSON, before the envelope;
+//! * current enveloped snapshots (magic + version + checksum).
+//!
+//! And the snapshot cycle must be a fixpoint: snapshot → recover →
+//! snapshot yields byte-identical files, so repeated clean restarts
+//! never churn the on-disk state.
+
+use kermit::knowledge::persist::{
+    read_snapshot, BinaryCodec, JsonCodec, KnowledgeStore, WalRecord,
+    SNAPSHOT_VERSION,
+};
+use kermit::knowledge::workload_db::entry_to_json;
+use kermit::knowledge::{Characterization, WorkloadDb};
+use kermit::simcluster::config_space::ConfigIndex;
+use kermit::util::json::Json;
+use std::path::PathBuf;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("kermit_persist_it_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sample_db() -> WorkloadDb {
+    let mut db = WorkloadDb::new();
+    let rows: Vec<Vec<f64>> = vec![vec![1.0, 2.0, 3.0], vec![2.0, 3.0, 4.0]];
+    let a = db.insert_new(
+        Characterization::from_vec_rows(&rows),
+        vec![1.5, 2.5, 3.5],
+        2,
+        false,
+    );
+    let rows2: Vec<Vec<f64>> = vec![vec![9.0, 8.0, 7.0], vec![8.0, 7.0, 6.0]];
+    let b = db.insert_new(
+        Characterization::from_vec_rows(&rows2),
+        vec![8.5, 7.5, 6.5],
+        2,
+        false,
+    );
+    db.set_optimal_measured(a, ConfigIndex([1, 2, 0, 1, 0, 2]), 41.5);
+    db.set_optimal_config(b, ConfigIndex([0, 1, 1, 0, 2, 1]));
+    db.quarantine(b);
+    db
+}
+
+/// A pre-chaos-lab `WorkloadDb::save` file: bare JSON, no envelope,
+/// and no `quarantined` / `best_duration` keys on any row.
+fn legacy_pre_quarantine_json(db: &WorkloadDb) -> String {
+    let workloads: Vec<Json> = db
+        .entries()
+        .map(|e| {
+            let mut row = entry_to_json(e);
+            let map = match &mut row {
+                Json::Obj(m) => m,
+                _ => unreachable!("entry rows are objects"),
+            };
+            map.remove("quarantined");
+            map.remove("best_duration");
+            row
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("next_label", Json::Num(db.entries().count() as f64))
+        .set("workloads", Json::Arr(workloads));
+    root.encode_pretty()
+}
+
+#[test]
+fn pre_quarantine_era_json_loads_through_the_codec_path() {
+    let dir = temp_dir("legacy_v0");
+    let db = sample_db();
+    let path = dir.join("peer.kdb");
+    std::fs::write(&path, legacy_pre_quarantine_json(&db)).unwrap();
+
+    let payload = read_snapshot(&path).unwrap();
+    assert_eq!(payload.version, 0, "magic-less files are version 0");
+    assert_eq!(payload.last_seq, 0);
+    let loaded = KnowledgeStore::import(&path).unwrap();
+    assert_eq!(loaded.entries().count(), 2);
+    for e in loaded.entries() {
+        // absent fields default to trusted / unmeasured
+        assert!(!e.quarantined);
+        assert_eq!(e.best_duration, None);
+    }
+    let a = loaded.get(0).unwrap();
+    assert!(a.optimal_config_found);
+    assert_eq!(a.config, Some(ConfigIndex([1, 2, 0, 1, 0, 2])));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quarantine_era_bare_json_loads_with_fields_intact() {
+    let dir = temp_dir("legacy_v0_quarantine");
+    let db = sample_db();
+    let path = dir.join("peer.kdb");
+    // chaos-lab era: full current row schema, still bare magic-less JSON
+    std::fs::write(&path, db.to_json().encode_pretty()).unwrap();
+
+    let loaded = KnowledgeStore::import(&path).unwrap();
+    assert_eq!(loaded.entries().count(), 2);
+    let b = loaded.get(1).unwrap();
+    assert!(b.quarantined, "quarantine flag must survive the load");
+    let a = loaded.get(0).unwrap();
+    assert_eq!(a.best_duration, Some(41.5));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn export_files_carry_the_current_envelope_version() {
+    let dir = temp_dir("export_version");
+    let db = sample_db();
+    for codec in [
+        Box::new(JsonCodec) as Box<dyn kermit::knowledge::SnapshotCodec>,
+        Box::new(BinaryCodec),
+    ] {
+        let path = dir.join(format!("export_{}.kdb", codec.name()));
+        KnowledgeStore::export(&db, &path, codec.as_ref()).unwrap();
+        let payload = read_snapshot(&path).unwrap();
+        assert_eq!(payload.version, SNAPSHOT_VERSION);
+        let loaded = KnowledgeStore::import(&path).unwrap();
+        assert_eq!(
+            loaded.to_json().encode(),
+            db.to_json().encode(),
+            "export/import must be lossless for {}",
+            codec.name()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_recover_snapshot_is_byte_stable() {
+    for (name, codec) in [
+        ("json", Box::new(JsonCodec) as Box<dyn kermit::knowledge::SnapshotCodec>),
+        ("binary", Box::new(BinaryCodec)),
+    ] {
+        let dir = temp_dir(&format!("byte_stable_{name}"));
+        let reopen_codec: Box<dyn kermit::knowledge::SnapshotCodec> =
+            if name == "json" {
+                Box::new(JsonCodec)
+            } else {
+                Box::new(BinaryCodec)
+            };
+
+        // generation 1: a DB built through the journaled mutation path
+        let (mut store, mut db, _) =
+            KnowledgeStore::open(&dir, codec).unwrap();
+        let seeded = sample_db();
+        for e in seeded.entries() {
+            db.restore_entry(e.clone());
+            store
+                .append(&WalRecord::Insert(Box::new(e.clone())))
+                .unwrap();
+        }
+        let gen1 = store.snapshot(&db).unwrap();
+        let bytes1 =
+            std::fs::read(dir.join(format!("snap-{gen1:06}.kdb"))).unwrap();
+
+        // clean recovery, then snapshot again: the file must not churn
+        let (mut store2, db2, report) =
+            KnowledgeStore::open(&dir, reopen_codec).unwrap();
+        assert_eq!(report.generation_loaded, Some(gen1));
+        assert_eq!(report.wal_records_replayed, 0);
+        let gen2 = store2.snapshot(&db2).unwrap();
+        let bytes2 =
+            std::fs::read(dir.join(format!("snap-{gen2:06}.kdb"))).unwrap();
+        assert_eq!(
+            bytes1, bytes2,
+            "snapshot → recover → snapshot must be byte-stable ({name})"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

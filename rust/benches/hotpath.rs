@@ -554,7 +554,7 @@ fn main() {
     // environment metadata so successive PRs diff baselines
     // apples-to-apples (a 2-thread run is not a 16-thread run)
     t.meta("engine_threads", &eng.threads().to_string());
-    t.meta("engine_pool", "persistent");
+    t.meta("engine_pool", "work-stealing");
     t.meta("simd_feature", if cfg!(feature = "simd") { "on" } else { "off" });
     t.meta(
         "simd_fast_feature",

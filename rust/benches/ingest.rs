@@ -1,0 +1,280 @@
+//! Ingest front-end stress bench: heavy-tailed multi-tenant load
+//! against the event-driven [`kermit::stream::IngestFrontEnd`].
+//!
+//! Drives a Zipf-popularity, bursty-arrival sample stream (10k tenants
+//! in the full run) from several producer threads into bounded
+//! per-tenant queues while the main thread pumps batches through a
+//! [`kermit::stream::StreamRouter`], once per backpressure policy.
+//! Records windows/sec, enqueue-latency percentiles, shed counts, and
+//! the work-stealing executor's self-metrics (steals, parks, spawn
+//! latency) into `BENCH_ingest.json`.
+//!
+//! `KERMIT_SMOKE=1` shrinks the load for CI and turns on the zero-
+//! silent-loss assertions: per-tenant
+//! `accepted + shed + resident == submitted` for every policy, zero
+//! shed under `Block`, full sample-to-window reconciliation, and the
+//! executor demonstrably fanning out when the engine is multi-threaded.
+
+use std::time::{Duration, Instant};
+
+use kermit::benchkit::{fmt_ns, Table};
+use kermit::linalg::engine::{self, Engine};
+use kermit::monitor::MonitorConfig;
+use kermit::stream::{
+    IngestConfig, IngestFrontEnd, RouterConfig, ShedPolicy, StreamRouter,
+    TenantId,
+};
+use kermit::workloadgen::{heavy_tailed_stream, Sample};
+
+struct StageOutcome {
+    wall_ns: f64,
+    windows: u64,
+    submitted: u64,
+    accepted: u64,
+    shed: u64,
+    p50_ns: u64,
+    p99_ns: u64,
+    steals: u64,
+    parks: u64,
+    executed: u64,
+}
+
+/// One full stress pass under `policy`: `nprod` producer threads
+/// submitting the event stream through cloned [`IngestHandle`]s while
+/// the calling thread pumps the front-end into a fresh router until the
+/// producers finish and the queues drain dry.
+///
+/// [`IngestHandle`]: kermit::stream::IngestHandle
+fn run_stage(
+    label: &str,
+    policy: ShedPolicy,
+    events: &[(TenantId, Sample)],
+    wsize: usize,
+    qcap: usize,
+    nprod: usize,
+    eng: Engine,
+) -> StageOutcome {
+    let monitor = MonitorConfig { window_size: wsize };
+    let mut fe = IngestFrontEnd::new(IngestConfig {
+        queue_cap: qcap,
+        policy,
+        monitor: monitor.clone(),
+        drain_max: 0,
+        engine: eng,
+    });
+    let mut router = StreamRouter::new(RouterConfig {
+        monitor,
+        engine: eng,
+        ..RouterConfig::default()
+    });
+    let handle = fe.handle();
+
+    let p0 = engine::pool_stats();
+    let mut windows = 0u64;
+    let t0 = Instant::now();
+    let mut lat: Vec<u64> = std::thread::scope(|s| {
+        let producers: Vec<_> = (0..nprod)
+            .map(|p| {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let mut lats =
+                        Vec::with_capacity(events.len() / nprod + 1);
+                    for (t, sample) in events.iter().skip(p).step_by(nprod)
+                    {
+                        let q0 = Instant::now();
+                        h.submit(*t, sample.clone());
+                        lats.push(q0.elapsed().as_nanos() as u64);
+                    }
+                    lats
+                })
+            })
+            .collect();
+        loop {
+            let st = fe.pump(&mut router);
+            windows += st.windows;
+            // Keep the observed-window backlog drained like a real
+            // off-line consumer so shard logs never hit their cap.
+            router.take_observed();
+            let done = producers.iter().all(|p| p.is_finished());
+            if done && fe.resident() == 0 {
+                break;
+            }
+            if st.drained == 0 {
+                fe.wait_for_samples(Duration::from_millis(1));
+            }
+        }
+        producers.into_iter().flat_map(|p| p.join().unwrap()).collect()
+    });
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    let p1 = engine::pool_stats();
+
+    // Zero-silent-loss reconciliation: cheap enough to run in every
+    // mode, and the whole point of the explicit shed policy.
+    for (t, st) in handle.stats() {
+        assert_eq!(
+            st.accepted + st.shed + st.resident,
+            st.submitted,
+            "{label}: tenant {t:?} leaked samples"
+        );
+        assert_eq!(
+            st.resident, 0,
+            "{label}: tenant {t:?} still resident after final drain"
+        );
+    }
+    let totals = handle.totals();
+    assert_eq!(
+        totals.submitted,
+        events.len() as u64,
+        "{label}: submit count does not match the event stream"
+    );
+    assert_eq!(
+        windows * wsize as u64 + fe.open_samples() as u64,
+        totals.accepted,
+        "{label}: accepted samples do not reconcile with windows built"
+    );
+    if policy == ShedPolicy::Block {
+        assert_eq!(totals.shed, 0, "{label}: Block must never shed");
+    }
+
+    lat.sort_unstable();
+    let p50 = lat[lat.len() / 2];
+    let p99 = lat[(lat.len() * 99 / 100).min(lat.len() - 1)];
+    StageOutcome {
+        wall_ns,
+        windows,
+        submitted: totals.submitted,
+        accepted: totals.accepted,
+        shed: totals.shed,
+        p50_ns: p50,
+        p99_ns: p99,
+        steals: p1.steals - p0.steals,
+        parks: p1.parks - p0.parks,
+        executed: p1.tasks_executed - p0.tasks_executed,
+    }
+}
+
+fn main() {
+    let smoke = matches!(std::env::var("KERMIT_SMOKE").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0");
+    let (tenants, n_events) =
+        if smoke { (200, 2_000) } else { (10_000, 60_000) };
+    let (wsize, qcap) = (8usize, 64usize);
+    let nprod = if smoke { 2 } else { 4 };
+    let eng = Engine::auto();
+
+    println!(
+        "ingest stress: {tenants} tenants, {n_events} events \
+         (zipf s=1.1, mean burst 4), window {wsize}, queue cap {qcap}, \
+         {nprod} producers, {} engine threads{}",
+        eng.threads(),
+        if smoke { " [smoke]" } else { "" },
+    );
+    let events =
+        heavy_tailed_stream(0xBEEF, tenants, n_events, 1.1, 4, &[0, 2, 5]);
+
+    let mut t = Table::new(&[
+        "stage",
+        "wall",
+        "windows/s",
+        "p50 enqueue",
+        "p99 enqueue",
+        "submitted",
+        "accepted",
+        "shed",
+        "steals",
+        "parks",
+    ]);
+    let stages = [
+        ("block", ShedPolicy::Block),
+        ("shed_oldest", ShedPolicy::ShedOldest),
+        ("shed_newest", ShedPolicy::ShedNewest),
+    ];
+    for (label, policy) in stages {
+        let o = run_stage(label, policy, &events, wsize, qcap, nprod, eng);
+        let rate = o.windows as f64 / (o.wall_ns / 1e9);
+        t.metric(&format!("{label}_wall_ns"), o.wall_ns);
+        t.metric(&format!("{label}_p50_enqueue_ns"), o.p50_ns as f64);
+        t.metric(&format!("{label}_p99_enqueue_ns"), o.p99_ns as f64);
+        t.row(&[
+            label.into(),
+            fmt_ns(o.wall_ns),
+            format!("{rate:.0}"),
+            fmt_ns(o.p50_ns as f64),
+            fmt_ns(o.p99_ns as f64),
+            o.submitted.to_string(),
+            o.accepted.to_string(),
+            o.shed.to_string(),
+            o.steals.to_string(),
+            format!("{} ({} tasks)", o.parks, o.executed),
+        ]);
+    }
+    println!();
+    t.print();
+
+    // Smoke gate for CI: with a multi-threaded engine the executor must
+    // demonstrably fan out. The stress stages almost always exercise it
+    // already; if the caller happened to claim every chunk first, a
+    // bounded nudge loop of wide dispatches gives workers time to win a
+    // few claims before we assert.
+    if smoke && eng.threads() > 1 {
+        let eng1 = eng.with_min_items(1);
+        let mut spins = 0;
+        while engine::pool_stats().tasks_executed == 0 && spins < 500 {
+            let mut items = vec![0u64; 64];
+            eng1.for_rows(&mut items, 1, |_, chunk| {
+                for v in chunk.iter_mut() {
+                    let mut acc = 1u64;
+                    for k in 0..2_000u64 {
+                        acc = acc
+                            .wrapping_mul(6364136223846793005)
+                            .wrapping_add(k);
+                    }
+                    *v = acc;
+                }
+            });
+            std::hint::black_box(&items);
+            spins += 1;
+        }
+        let ps = engine::pool_stats();
+        assert!(ps.workers >= 1, "executor never spawned a worker");
+        assert!(
+            ps.tasks_executed > 0,
+            "fan-out never engaged: workers executed no tasks"
+        );
+    }
+
+    let ps = engine::pool_stats();
+    println!(
+        "\npool: {} workers, {} jobs, {} tasks injected / {} executed \
+         by workers / {} by callers, {} steals ({} tasks), {} parks, \
+         spawn latency mean {} max {}",
+        ps.workers,
+        ps.jobs,
+        ps.tasks_injected,
+        ps.tasks_executed,
+        ps.caller_chunks,
+        ps.steals,
+        ps.stolen_tasks,
+        ps.parks,
+        fmt_ns(ps.spawn_latency_mean_ns as f64),
+        fmt_ns(ps.spawn_latency_max_ns as f64),
+    );
+    t.metric("pool_spawn_latency_mean_ns", ps.spawn_latency_mean_ns as f64);
+    t.metric("pool_spawn_latency_max_ns", ps.spawn_latency_max_ns as f64);
+
+    t.meta("engine_threads", &eng.threads().to_string());
+    t.meta("engine_pool", "work-stealing");
+    t.meta("simd_tier", engine::simd_tier());
+    t.meta("smoke", if smoke { "1" } else { "0" });
+    t.meta("tenants", &tenants.to_string());
+    t.meta("events", &n_events.to_string());
+    t.meta("window_size", &wsize.to_string());
+    t.meta("queue_cap", &qcap.to_string());
+    t.meta("producers", &nprod.to_string());
+
+    let out = std::path::Path::new("BENCH_ingest.json");
+    match t.write_json(out) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => println!("\nfailed to write {}: {e}", out.display()),
+    }
+}

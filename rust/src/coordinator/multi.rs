@@ -38,8 +38,8 @@ use crate::ml::forest::RandomForest;
 use crate::online::classifier::{GatedForestClassifier, WindowClassifier};
 use crate::online::{ForestWindowClassifier, PluginStats, UNKNOWN};
 use crate::stream::{
-    interleave_round_robin, RouterConfig, StreamRouter, TenantId,
-    TenantSample,
+    interleave_round_robin, IngestConfig, IngestFrontEnd, IngestHandle,
+    PumpStats, RouterConfig, StreamRouter, TenantId, TenantSample,
 };
 use crate::util::rng::Rng;
 use crate::workloadgen::{Sample, Trace};
@@ -153,6 +153,10 @@ pub struct MultiTenantCoordinator {
     pub offline_runs: usize,
     /// Entries the knowledge-plane integrity audit has quarantined.
     pub db_quarantined: usize,
+    /// Optional event-driven ingest front-end (see
+    /// [`MultiTenantCoordinator::attach_ingest`]). `None` means
+    /// producers call [`MultiTenantCoordinator::ingest`] directly.
+    ingest: Option<IngestFrontEnd>,
 }
 
 impl MultiTenantCoordinator {
@@ -190,7 +194,47 @@ impl MultiTenantCoordinator {
             trained_transition: None,
             offline_runs: 0,
             db_quarantined: 0,
+            ingest: None,
         }
+    }
+
+    /// Attach an event-driven ingest front-end and return a producer
+    /// handle. The front-end's monitor config and engine are overridden
+    /// with the coordinator's own, so (a) windows batched off-thread
+    /// are bit-identical to direct [`MultiTenantCoordinator::ingest`]
+    /// and (b) batching, router ticks, and offline cycles all share the
+    /// one work-stealing executor instead of competing.
+    pub fn attach_ingest(&mut self, mut config: IngestConfig) -> IngestHandle {
+        config.monitor = self.config.monitor.clone();
+        config.engine = self.router.config.engine;
+        let fe = IngestFrontEnd::new(config);
+        let handle = fe.handle();
+        self.ingest = Some(fe);
+        handle
+    }
+
+    /// A fresh producer handle for the attached front-end (`None` if
+    /// [`MultiTenantCoordinator::attach_ingest`] was never called).
+    pub fn ingest_handle(&self) -> Option<IngestHandle> {
+        self.ingest.as_ref().map(|fe| fe.handle())
+    }
+
+    /// Drain the attached front-end's queues through the batchers into
+    /// the router, then run one [`MultiTenantCoordinator::tick`] (so
+    /// the offline cadence advances exactly as with direct ingest).
+    /// Returns the pump stats plus the tick's observed-window count;
+    /// `None` if no front-end is attached.
+    pub fn pump_ingest(&mut self) -> Option<(PumpStats, usize)> {
+        let mut fe = self.ingest.take()?;
+        // shards must exist (with the current shared model installed)
+        // before their first windows land — same contract as ingest()
+        for t in fe.tenant_ids() {
+            self.ensure_tenant(t);
+        }
+        let stats = fe.drain_into(&mut self.router);
+        self.ingest = Some(fe);
+        let n = self.tick();
+        Some((stats, n))
     }
 
     pub fn router(&self) -> &StreamRouter {

@@ -42,21 +42,26 @@
 //! kernel; the features are no-ops rather than build errors. The
 //! AVX-512 intrinsics need Rust ≥ 1.89 (they stabilised there).
 //!
-//! # Persistent worker pool
+//! # Persistent work-stealing executor
 //!
 //! [`Engine`] is a tiny `Copy` handle — thread count, sequential-
 //! fallback threshold, chunk alignment — that callers pick **once at
 //! construction** ([`Engine::sequential`], [`Engine::auto`],
 //! [`Engine::with_threads`]) and thread through the clustering / ML /
 //! discovery APIs. Parallel calls no longer spawn scoped threads; they
-//! publish a job descriptor to the process-wide persistent pool
-//! ([`crate::linalg::pool`]) whose workers are started lazily on the
-//! first parallel call and then parked on a condvar between calls. The
-//! calling thread always claims chunks itself, so every call makes
+//! push one task per chunk onto the process-wide work-stealing executor
+//! ([`crate::linalg::pool`]): lazily-started workers pop their own
+//! deques LIFO, refill from a global injector, and steal from each
+//! other when their local work runs dry, so skewed chunk costs (one
+//! hot tenant shard among thousands of idle ones) redistribute instead
+//! of serializing on a straggler. The calling thread always claims
+//! chunks itself through the per-chunk claim flags, so every call makes
 //! progress even under pool contention or shutdown, and a
 //! 1000-small-call loop (per-merge agglomerative scans, per-tick router
 //! dispatch) pays parking-lot wakeups instead of thread spawns — see
-//! the `spawn_amortization` stage of `benches/hotpath.rs`.
+//! the `spawn_amortization` stage of `benches/hotpath.rs`. The executor
+//! exports self-metrics (steals, parks, pending tasks, spawn latency)
+//! via [`pool_stats`].
 //!
 //! Batches smaller than `min_items` (default [`MIN_PAR_ITEMS`]) run
 //! sequentially on the calling thread: below roughly that many rows
@@ -81,11 +86,15 @@
 //! most the one line straddling each boundary (none when the
 //! allocation happens to be line-aligned; `Vec` guarantees only
 //! element alignment), instead of a line per misplaced split.
-//! Alignment changes *where* chunks split, never what is computed. Nothing in this module uses work stealing below chunk
-//! granularity or atomics on the data path, so there is no scheduling
-//! nondeterminism to begin with.
+//! Alignment changes *where* chunks split, never what is computed.
+//! Work stealing operates strictly **at** chunk granularity — a steal
+//! moves whole not-yet-claimed chunks between workers, never splits
+//! one — and results land in per-chunk slots reduced in chunk order,
+//! so which thread ran a chunk (stolen or not) never reaches the data
+//! path and there is no scheduling nondeterminism to observe.
 
 use super::pool;
+pub use super::pool::{stats as pool_stats, PoolStats};
 use std::ops::Range;
 
 /// Below this many items a parallel call runs sequentially (see the

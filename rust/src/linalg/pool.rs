@@ -1,67 +1,98 @@
-//! The persistent worker pool behind [`crate::linalg::engine::Engine`].
+//! The persistent work-stealing executor behind
+//! [`crate::linalg::engine::Engine`].
 //!
 //! PR 2's engine fanned every call out with `std::thread::scope`, which
-//! pays a full spawn + join per call — fine for one 600-row discovery
-//! pass, ruinous for the per-merge scans of agglomerative clustering and
-//! the per-tick dispatch of `stream::StreamRouter` (thousands of small
-//! calls). This module replaces that with **one process-wide pool of
-//! long-lived workers parked on a condvar**:
+//! pays a full spawn + join per call. PR 4 replaced that with one
+//! process-wide pool of long-lived workers pulling whole jobs off a
+//! FIFO queue — but workers claimed *fixed* chunks from a shared
+//! counter, so a job with skewed chunk costs left every worker that
+//! drew a cheap chunk idle while one straggler finished. This module
+//! evolves the pool into a **work-stealing executor**:
 //!
-//! * Workers are started **lazily** on the first parallel dispatch and
-//!   grown by the *shortfall* between a job's useful helper count (the
-//!   smaller of the engine's `threads - 1` and the job's `chunks - 1`)
-//!   and the workers not currently busy, capped at [`MAX_WORKERS`] —
-//!   so one caller's back-to-back dispatches reuse the same parked
-//!   workers while concurrent callers each provision their own. A
-//!   program that only ever uses sequential engines never starts a
-//!   thread.
-//! * A call publishes one **job descriptor** — a lifetime-erased pointer
-//!   to its chunk-runner closure plus an atomic chunk-claim counter and
-//!   a completion latch — onto a FIFO queue and wakes the workers. The
-//!   **calling thread claims chunks too**, so a job always makes
-//!   progress even if every worker is busy with another caller's job
-//!   (or the pool is shutting down), and the fast path for a 2-chunk
-//!   job is "caller takes one, first awake worker takes the other".
-//! * Chunk *contents* are fixed by the submitting `Engine` (contiguous
-//!   index ranges); workers only race on **which** chunk they claim.
-//!   Each chunk writes results into its own pre-allocated slot, and the
-//!   caller reduces the slots in chunk order after [`Job::wait`], so
-//!   execution order never leaks into results — the pool preserves the
-//!   engine's bit-identical-to-sequential guarantee.
+//! * Every dispatched chunk becomes one [`Task`] pushed onto a global
+//!   **injector** queue. Workers keep **per-worker deques**: they pop
+//!   their own deque LIFO (hot caches), refill in batches from the
+//!   injector FIFO, and when both are empty **steal the front half** of
+//!   a random-start round-robin victim's deque — so a straggling
+//!   worker's backlog is redistributed instead of waiting on it.
+//! * Idle workers **park** on a condvar and are woken by submits; the
+//!   pending-task gauge is re-checked under the same mutex that submits
+//!   publish under, so a wakeup can never be lost.
+//! * The executor keeps **self-metrics** ([`PoolStats`] via [`stats`]):
+//!   jobs/tasks submitted, worker-executed vs caller-executed chunks,
+//!   steal + stolen-task counts, park count, pruned (stale) tasks,
+//!   pending-task gauge + peak, and spawn latency (submit → first
+//!   worker-side pickup, mean + max).
+//! * Workers are still started **lazily** and grown by the *shortfall*
+//!   between a job's useful helper count and the workers not currently
+//!   busy, capped at [`MAX_WORKERS`]. A program that only ever uses
+//!   sequential engines never starts a thread.
+//!
+//! # Exactly-once, bit-identical
+//!
+//! The single source of truth for "who runs chunk `ci`" is a per-chunk
+//! **claim flag** (`AtomicBool::swap`): the submitting caller linearly
+//! scans and claims chunks itself (so a job always makes progress even
+//! if every worker is busy or the pool is shutting down), workers claim
+//! through the tasks they pop or steal, and whoever loses the swap
+//! drops the chunk. A task whose chunk was already claimed is *stale*
+//! and is pruned, never run. Chunk *contents* are fixed by the
+//! submitting `Engine` (contiguous index ranges); each chunk writes
+//! results into its own pre-allocated slot and the caller reduces the
+//! slots in chunk order after [`Job::wait`] — so scheduling (including
+//! stealing) never leaks into results, and the engine's
+//! bit-identical-to-sequential guarantee survives unchanged.
+//!
 //! * A panic inside a chunk is caught on the worker, parked in the job,
 //!   and **resumed on the caller** once the job has fully drained. The
 //!   worker survives and the pool keeps serving subsequent calls (no
 //!   poisoning — pinned by `tests/engine_equivalence.rs`).
 //! * [`shutdown`] drains the pool (workers exit, the global handle
 //!   resets); the next parallel dispatch re-initializes it. In-flight
-//!   callers are never stranded: they drain their own jobs.
+//!   callers are never stranded: they drain their own jobs through the
+//!   claim scan.
 //!
 //! # Why the lifetime erasure is sound
 //!
 //! A job's closure borrows the caller's stack (`thread::scope`-style,
-//! no `'static` bound). The raw pointer in the descriptor erases that
+//! no `'static` bound). The raw pointer in the job erases that
 //! lifetime, which is sound because (a) [`dispatch`] does not return
 //! until every chunk has completed, so the borrow outlives every
-//! dereference, and (b) a worker only dereferences the pointer for
-//! chunk indices it claimed *below* `chunks`, and all claims happen
-//! before the caller's completion latch releases.
+//! dereference, and (b) the closure is only dereferenced for chunk
+//! indices whose claim flag was won, and every claim happens before the
+//! caller's completion latch releases. A *stale* task outliving its job
+//! (still sitting in a deque after the caller returned) holds an `Arc`
+//! to the job, so the claim flags it consults stay alive — and its
+//! claim always fails, so the erased pointer is never dereferenced.
 //!
-//! Memory visibility: the job travels caller → worker through the pool
-//! mutex (queue push / queue pop), and results travel worker → caller
-//! through the job's state mutex (chunk-done increment / completion
-//! wait), so every side effect of a chunk happens-before the caller's
-//! return from [`dispatch`].
+//! Memory visibility: results travel worker → caller through the job's
+//! state mutex (chunk-done increment / completion wait), so every side
+//! effect of a chunk happens-before the caller's return from
+//! [`dispatch`].
+//!
+//! # Lock order
+//!
+//! `Pool::shared` < `Pool::injector` < `Pool::slots` < any `Slot::deque`
+//! — every acquisition path follows this order (at most one deque is
+//! ever locked at a time), so the executor cannot deadlock on its own
+//! locks.
 
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Instant;
 
 /// Hard cap on pool size: above this, extra requested helpers just
 /// share the existing workers. Far beyond any sane `Engine::auto` and
 /// merely a guard against `Engine::with_threads(huge)`.
 pub const MAX_WORKERS: usize = 512;
+
+/// Most tasks a worker moves from the injector to its own deque in one
+/// refill. Bounds the latency penalty a burst of tiny jobs pays when
+/// one worker grabs a batch just before parked workers wake.
+const REFILL_MAX: usize = 32;
 
 /// Lifetime-erased chunk runner. Only dereferenced for claimed chunk
 /// indices while the submitting caller is blocked in [`Job::wait`].
@@ -73,14 +104,18 @@ struct RunPtr(*const (dyn Fn(usize) + Sync));
 unsafe impl Send for RunPtr {}
 unsafe impl Sync for RunPtr {}
 
-/// One dispatched call: closure pointer, chunk-claim counter, and the
+/// One dispatched call: closure pointer, per-chunk claim flags, and the
 /// completion latch the caller blocks on.
 struct Job {
     run: RunPtr,
     chunks: usize,
-    /// Next unclaimed chunk index (claims may exceed `chunks`; a claim
-    /// `>= chunks` means "nothing left for you").
-    next: AtomicUsize,
+    /// Per-chunk claim flags — the single source of exactly-once truth.
+    /// Caller scan and worker tasks both claim through these.
+    claimed: Box<[AtomicBool]>,
+    /// Set by the first *worker-side* claim; gates the spawn-latency
+    /// sample so each job contributes at most one.
+    started: AtomicBool,
+    submitted: Instant,
     state: Mutex<JobState>,
     done_cv: Condvar,
 }
@@ -105,41 +140,50 @@ impl Job {
         Arc::new(Job {
             run,
             chunks,
-            next: AtomicUsize::new(0),
+            claimed: (0..chunks).map(|_| AtomicBool::new(false)).collect(),
+            started: AtomicBool::new(false),
+            submitted: Instant::now(),
             state: Mutex::new(JobState { done: 0, panic: None }),
             done_cv: Condvar::new(),
         })
     }
 
-    /// Claim and run chunks until none are left. Called by workers and
-    /// by the submitting caller alike; panics in the closure are caught
-    /// and parked so the claimer (possibly a pool worker) survives.
-    fn help(&self) {
-        loop {
-            let ci = self.next.fetch_add(1, Ordering::Relaxed);
-            if ci >= self.chunks {
-                return;
+    /// Try to win chunk `ci`. Exactly one claimer ever sees `true`.
+    fn claim(&self, ci: usize) -> bool {
+        !self.claimed[ci].swap(true, Ordering::AcqRel)
+    }
+
+    /// Run a *claimed* chunk. Panics in the closure are caught and
+    /// parked so the claimer (possibly a pool worker) survives.
+    fn run_chunk(&self, ci: usize) {
+        // SAFETY: the claim on ci succeeded, so the caller is still
+        // blocked in `wait` and the closure borrow is alive (module
+        // docs).
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*self.run.0)(ci) }));
+        let mut st = self.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
             }
-            // SAFETY: ci < chunks, so the caller is still blocked in
-            // `wait` and the closure borrow is alive (module docs).
-            let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*self.run.0)(ci) }));
-            let mut st = self.state.lock().unwrap();
-            if let Err(payload) = result {
-                if st.panic.is_none() {
-                    st.panic = Some(payload);
-                }
-            }
-            st.done += 1;
-            if st.done == self.chunks {
-                self.done_cv.notify_all();
-            }
+        }
+        st.done += 1;
+        if st.done == self.chunks {
+            self.done_cv.notify_all();
         }
     }
 
-    /// Every chunk claimed (not necessarily finished)? Workers use this
-    /// to drop drained jobs off the queue front.
-    fn exhausted(&self) -> bool {
-        self.next.load(Ordering::Relaxed) >= self.chunks
+    /// The submitting caller's claim scan: linearly claim and run every
+    /// chunk the workers haven't taken yet. Guarantees forward progress
+    /// with zero live workers. Returns how many chunks this thread ran.
+    fn help(&self) -> u64 {
+        let mut ran = 0u64;
+        for ci in 0..self.chunks {
+            if self.claim(ci) {
+                self.run_chunk(ci);
+                ran += 1;
+            }
+        }
+        ran
     }
 
     /// Block until every chunk has finished, then re-raise the first
@@ -157,43 +201,146 @@ impl Job {
     }
 }
 
+/// One schedulable unit: chunk `chunk` of `job`. Stale once anyone
+/// else claims the chunk; stale tasks are pruned, never run.
+struct Task {
+    job: Arc<Job>,
+    chunk: usize,
+}
+
+impl Task {
+    fn dead(&self) -> bool {
+        self.job.claimed[self.chunk].load(Ordering::Acquire)
+    }
+
+    /// Claim and run the chunk; a lost claim (caller or another task
+    /// got there first) is counted as pruned.
+    fn execute(&self, pool: &Pool) {
+        if !self.job.claim(self.chunk) {
+            pool.metrics.tasks_pruned.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if !self.job.started.swap(true, Ordering::Relaxed) {
+            let ns = self.job.submitted.elapsed().as_nanos() as u64;
+            pool.metrics.spawn_lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
+            pool.metrics.spawn_lat_count.fetch_add(1, Ordering::Relaxed);
+            pool.metrics.spawn_lat_max_ns.fetch_max(ns, Ordering::Relaxed);
+        }
+        self.job.run_chunk(self.chunk);
+        pool.metrics.tasks_executed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One worker's deque. Owned LIFO pops, front-half FIFO steals.
+#[derive(Default)]
+struct Slot {
+    deque: Mutex<VecDeque<Task>>,
+}
+
+/// Executor self-metrics. All counters are monotonic over the life of
+/// the current pool (reset by [`shutdown`] + lazy re-init);
+/// `pending_tasks` is a gauge counting tasks currently resident in the
+/// injector or any deque — including stale tasks not yet pruned.
+#[derive(Default)]
+struct Metrics {
+    jobs: AtomicU64,
+    tasks_injected: AtomicU64,
+    tasks_executed: AtomicU64,
+    caller_chunks: AtomicU64,
+    steals: AtomicU64,
+    stolen_tasks: AtomicU64,
+    parks: AtomicU64,
+    tasks_pruned: AtomicU64,
+    pending: AtomicU64,
+    pending_peak: AtomicU64,
+    spawn_lat_sum_ns: AtomicU64,
+    spawn_lat_count: AtomicU64,
+    spawn_lat_max_ns: AtomicU64,
+}
+
+/// A point-in-time snapshot of the executor's self-metrics. See
+/// [`stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Live worker threads.
+    pub workers: usize,
+    /// Jobs submitted to the pool (inline dispatches excluded).
+    pub jobs: u64,
+    /// Chunk tasks pushed onto the injector.
+    pub tasks_injected: u64,
+    /// Chunks executed by workers (via popped or stolen tasks).
+    pub tasks_executed: u64,
+    /// Chunks executed by submitting callers through their claim scan.
+    pub caller_chunks: u64,
+    /// Successful steal operations (at least one live task moved).
+    pub steals: u64,
+    /// Live tasks moved by those steals (≥ `steals`).
+    pub stolen_tasks: u64,
+    /// Times a worker parked on the condvar.
+    pub parks: u64,
+    /// Stale tasks discarded without running (chunk already claimed).
+    pub tasks_pruned: u64,
+    /// Tasks currently resident in the injector or a worker deque
+    /// (gauge; includes stale tasks not yet pruned).
+    pub pending_tasks: u64,
+    /// High-water mark of `pending_tasks`.
+    pub pending_peak: u64,
+    /// Mean submit → first-worker-pickup latency (0 if no job was ever
+    /// picked up by a worker).
+    pub spawn_latency_mean_ns: u64,
+    /// Max submit → first-worker-pickup latency.
+    pub spawn_latency_max_ns: u64,
+}
+
 struct Pool {
     shared: Mutex<Shared>,
     /// Workers park here; [`shutdown`] also waits here for the worker
     /// count to reach zero.
     work_cv: Condvar,
+    /// Global FIFO all submits push to; workers refill from it in
+    /// batches.
+    injector: Mutex<VecDeque<Task>>,
+    /// One slot per spawned worker, in spawn order. Grows only (workers
+    /// exit only at shutdown, which discards the whole pool).
+    slots: RwLock<Vec<Arc<Slot>>>,
+    /// Workers currently executing a task. The growth heuristic in
+    /// [`Pool::submit`] keys off `workers - busy` so concurrent callers
+    /// each get their own helpers while back-to-back calls from one
+    /// caller reuse the same workers. May transiently over-count
+    /// (bounded over-spawn, see `submit`).
+    busy: AtomicUsize,
+    /// Fast shutdown flag checked at the top of every worker iteration.
+    stop: AtomicBool,
+    metrics: Metrics,
 }
 
 struct Shared {
-    queue: VecDeque<Arc<Job>>,
     workers: usize,
-    /// Workers currently inside [`Job::help`]. `workers - busy` are
-    /// available (parked, or in transit back to the queue check) —
-    /// the growth heuristic in [`Pool::submit`] keys off this so
-    /// concurrent callers each get their own helpers while
-    /// back-to-back calls from one caller reuse the same workers.
-    busy: usize,
+    /// Workers currently blocked in `work_cv.wait` — submit wakes at
+    /// most this many.
+    sleepers: usize,
     shutting_down: bool,
 }
 
 impl Pool {
     fn new() -> Arc<Pool> {
         Arc::new(Pool {
-            shared: Mutex::new(Shared {
-                queue: VecDeque::new(),
-                workers: 0,
-                busy: 0,
-                shutting_down: false,
-            }),
+            shared: Mutex::new(Shared { workers: 0, sleepers: 0, shutting_down: false }),
             work_cv: Condvar::new(),
+            injector: Mutex::new(VecDeque::new()),
+            slots: RwLock::new(Vec::new()),
+            busy: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            metrics: Metrics::default(),
         })
     }
 
-    /// Queue `job`, growing the pool to however many workers the job
-    /// can actually use (capped). On a pool already shutting down this
-    /// is a no-op: the submitting caller drains the job itself via
+    /// Push one task per chunk of `job` onto the injector, growing the
+    /// pool to however many workers the job can actually use (capped)
+    /// and waking that many sleepers. On a pool already shutting down
+    /// this is a no-op: the submitting caller drains the job itself via
     /// [`Job::help`].
-    fn submit(self: &Arc<Pool>, job: Arc<Job>, helpers: usize) {
+    fn submit(self: &Arc<Pool>, job: &Arc<Job>, helpers: usize) {
         let mut sh = self.shared.lock().unwrap();
         if sh.shutting_down {
             return;
@@ -204,86 +351,219 @@ impl Pool {
         // a 64-thread engine grows/wakes one worker, not 63;
         // back-to-back calls from one caller reuse the same workers;
         // and a second concurrent caller (whose rival's workers are all
-        // `busy`) grows its own helpers instead of sharing an
+        // busy) grows its own helpers instead of sharing an
         // under-provisioned pool.
         let useful = helpers.min(job.chunks.saturating_sub(1));
-        let available = sh.workers - sh.busy;
+        let busy = self.busy.load(Ordering::Relaxed).min(sh.workers);
+        let available = sh.workers - busy;
         let mut grow = useful.saturating_sub(available);
         // `busy` can transiently over-count: a worker that just ran a
         // job's last chunk (caller already released) stays "busy" until
-        // it re-acquires this mutex. The demand-justified cap below
+        // its decrement lands. The demand-justified cap below
         // (`busy + useful` total workers) bounds the resulting
         // over-spawn to that stale count, and extra workers park and
         // raise `available` for every later submit, so growth stops
         // instead of ratcheting.
-        let cap = (sh.busy + useful).min(MAX_WORKERS);
+        let cap = (busy + useful).min(MAX_WORKERS);
         while grow > 0 && sh.workers < cap {
+            let slot = Arc::new(Slot::default());
+            let me = {
+                let mut slots = self.slots.write().unwrap();
+                slots.push(Arc::clone(&slot));
+                slots.len() - 1
+            };
             let pool = Arc::clone(self);
             let spawned = std::thread::Builder::new()
                 .name("kermit-engine".into())
-                .spawn(move || worker_loop(&pool));
+                .spawn(move || worker_loop(&pool, &slot, me));
             match spawned {
                 Ok(_) => {
                     sh.workers += 1;
                     grow -= 1;
                 }
-                // transient spawn failure (thread limit, OOM): degrade
-                // to however many workers exist — the caller and the
-                // surviving workers still drain every job, and a later
-                // submit retries the growth. Panicking here would
-                // poison the process-wide pool mutex forever.
-                Err(_) => break,
+                // transient spawn failure (thread limit, OOM): drop the
+                // unused slot and degrade to however many workers exist
+                // — the caller and the surviving workers still drain
+                // every job, and a later submit retries the growth.
+                // Panicking here would poison the process-wide pool
+                // mutex forever.
+                Err(_) => {
+                    self.slots.write().unwrap().pop();
+                    break;
+                }
             }
         }
         if sh.workers == 0 {
             // nothing could be spawned: don't queue — no worker exists
-            // to ever pop the descriptor, and the caller drains every
-            // chunk itself anyway.
+            // to ever pop a task, and the caller drains every chunk
+            // itself anyway.
             return;
         }
-        // prune drained descriptors here too, not just in worker_loop:
-        // with every worker pinned inside a long chunk, a caller
-        // looping tiny self-drained dispatches would otherwise grow the
-        // queue without bound. Retain (not front-only pruning) because
-        // a long-running unexhausted front job would shield thousands
-        // of dead descriptors queued behind it. An exhausted job is
-        // always safe to drop: its submitter holds its own Arc and its
-        // own claim loop.
-        sh.queue.retain(|j| !j.exhausted());
-        sh.queue.push_back(job);
-        // wake only as many workers as can usefully claim a chunk.
+        {
+            // prune stale tasks before pushing: with every worker
+            // pinned inside a long chunk, a caller looping tiny
+            // self-drained dispatches would otherwise grow the injector
+            // without bound.
+            let mut inj = self.injector.lock().unwrap();
+            let mut pruned = 0u64;
+            inj.retain(|t| {
+                if t.dead() {
+                    pruned += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            if pruned > 0 {
+                self.metrics.tasks_pruned.fetch_add(pruned, Ordering::Relaxed);
+                self.metrics.pending.fetch_sub(pruned, Ordering::Relaxed);
+            }
+            for ci in 0..job.chunks {
+                inj.push_back(Task { job: Arc::clone(job), chunk: ci });
+            }
+            self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+            self.metrics.tasks_injected.fetch_add(job.chunks as u64, Ordering::Relaxed);
+            // publish the pending increment while still holding the
+            // shared mutex: a worker deciding to park re-checks pending
+            // under that mutex, so it either sees these tasks or is
+            // counted in `sleepers` and woken below — no lost wakeup.
+            let pending = self.metrics.pending.fetch_add(job.chunks as u64, Ordering::Relaxed)
+                + job.chunks as u64;
+            self.metrics.pending_peak.fetch_max(pending, Ordering::Relaxed);
+        }
+        // wake only as many sleepers as can usefully claim a chunk.
         // Under-waking can't strand the job: busy workers re-check the
-        // queue between jobs, and the caller always drains its own.
-        for _ in 0..useful.min(sh.workers - sh.busy) {
+        // queues between tasks, and the caller always drains its own.
+        for _ in 0..useful.min(sh.sleepers) {
             self.work_cv.notify_one();
         }
     }
+
+    /// Pop the newest task off this worker's own deque (LIFO — the
+    /// data it most recently touched), discarding stale ones.
+    fn pop_local(&self, slot: &Slot) -> Option<Task> {
+        let mut dq = slot.deque.lock().unwrap();
+        while let Some(t) = dq.pop_back() {
+            self.metrics.pending.fetch_sub(1, Ordering::Relaxed);
+            if t.dead() {
+                self.metrics.tasks_pruned.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            return Some(t);
+        }
+        None
+    }
+
+    /// Move a fair batch from the injector front into this worker's
+    /// deque, returning the first live task to run now. Tasks moved to
+    /// the deque stay "pending"; only the returned and the stale ones
+    /// leave the gauge.
+    fn refill(&self, slot: &Slot) -> Option<Task> {
+        let nworkers = self.slots.read().unwrap().len().max(1);
+        let grabbed: Vec<Task> = {
+            let mut inj = self.injector.lock().unwrap();
+            if inj.is_empty() {
+                return None;
+            }
+            let take = inj.len().div_ceil(nworkers).clamp(1, REFILL_MAX).min(inj.len());
+            inj.drain(..take).collect()
+        };
+        self.absorb(slot, grabbed)
+    }
+
+    /// Steal the front half (oldest — FIFO end) of a victim's deque,
+    /// round-robin from `rr`. Returns the first live stolen task.
+    fn steal(&self, slot: &Slot, me: usize, rr: &mut usize) -> Option<Task> {
+        let slots = self.slots.read().unwrap();
+        let n = slots.len();
+        if n <= 1 {
+            return None;
+        }
+        for k in 0..n {
+            let v = (*rr + k) % n;
+            if v == me {
+                continue;
+            }
+            let grabbed: Vec<Task> = {
+                let mut dq = slots[v].deque.lock().unwrap();
+                if dq.is_empty() {
+                    continue;
+                }
+                let take = dq.len().div_ceil(2);
+                dq.drain(..take).collect()
+            };
+            *rr = (v + 1) % n;
+            let live = grabbed.iter().filter(|t| !t.dead()).count() as u64;
+            if live > 0 {
+                self.metrics.steals.fetch_add(1, Ordering::Relaxed);
+                self.metrics.stolen_tasks.fetch_add(live, Ordering::Relaxed);
+            }
+            if let Some(first) = self.absorb(slot, grabbed) {
+                return Some(first);
+            }
+            // everything stolen was stale — keep scanning victims
+        }
+        None
+    }
+
+    /// File a batch of tasks grabbed from elsewhere: discard stale
+    /// ones, keep the first live one out to run immediately, queue the
+    /// rest on this worker's own deque.
+    fn absorb(&self, slot: &Slot, grabbed: Vec<Task>) -> Option<Task> {
+        let mut first = None;
+        let mut dq = slot.deque.lock().unwrap();
+        for t in grabbed {
+            if t.dead() {
+                self.metrics.pending.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.tasks_pruned.fetch_add(1, Ordering::Relaxed);
+            } else if first.is_none() {
+                self.metrics.pending.fetch_sub(1, Ordering::Relaxed);
+                first = Some(t);
+            } else {
+                dq.push_back(t);
+            }
+        }
+        first
+    }
+
+    /// Park until a submit signals new work. The pending gauge is
+    /// re-checked under the shared mutex (where submits publish it), so
+    /// the sleep can't miss a wakeup.
+    fn park(&self) {
+        let mut sh = self.shared.lock().unwrap();
+        if sh.shutting_down || self.metrics.pending.load(Ordering::Relaxed) > 0 {
+            return;
+        }
+        self.metrics.parks.fetch_add(1, Ordering::Relaxed);
+        sh.sleepers += 1;
+        sh = self.work_cv.wait(sh).unwrap();
+        sh.sleepers -= 1;
+        drop(sh);
+    }
 }
 
-fn worker_loop(pool: &Pool) {
-    let mut sh = pool.shared.lock().unwrap();
+fn worker_loop(pool: &Arc<Pool>, slot: &Arc<Slot>, me: usize) {
+    let mut rr = (me + 1) % MAX_WORKERS.max(1);
     loop {
-        if sh.shutting_down {
+        if pool.stop.load(Ordering::Acquire) {
+            let mut sh = pool.shared.lock().unwrap();
             sh.workers -= 1;
             // wake the shutdown waiter (and fellow workers) so the
             // count re-check runs
             pool.work_cv.notify_all();
             return;
         }
-        // drop fully-claimed jobs off the front so later callers'
-        // jobs become visible
-        while sh.queue.front().is_some_and(|j| j.exhausted()) {
-            sh.queue.pop_front();
-        }
-        match sh.queue.front().cloned() {
-            Some(job) => {
-                sh.busy += 1;
-                drop(sh);
-                job.help();
-                sh = pool.shared.lock().unwrap();
-                sh.busy -= 1;
+        let task = pool
+            .pop_local(slot)
+            .or_else(|| pool.refill(slot))
+            .or_else(|| pool.steal(slot, me, &mut rr));
+        match task {
+            Some(t) => {
+                pool.busy.fetch_add(1, Ordering::Relaxed);
+                t.execute(pool);
+                pool.busy.fetch_sub(1, Ordering::Relaxed);
             }
-            None => sh = pool.work_cv.wait(sh).unwrap(),
+            None => pool.park(),
         }
     }
 }
@@ -326,20 +606,23 @@ pub(crate) fn dispatch(chunks: usize, helpers: usize, run: &(dyn Fn(usize) + Syn
     // has completed, so `run` outlives every dereference of the erased
     // pointer.
     let job = unsafe { Job::new(run, chunks) };
-    handle().submit(Arc::clone(&job), helpers);
-    job.help();
+    let pool = handle();
+    pool.submit(&job, helpers);
+    let mine = job.help();
+    pool.metrics.caller_chunks.fetch_add(mine, Ordering::Relaxed);
     job.wait();
 }
 
 /// Tear the pool down: workers exit, the global handle resets, and the
-/// next parallel dispatch lazily re-initializes a fresh pool. In-flight
-/// jobs are drained by their submitting callers (which always hold a
-/// claim loop of their own), so this never strands a caller — but it
-/// does busy-drain through them, so prefer calling it at quiesce points
-/// (process teardown, between test cases).
+/// next parallel dispatch lazily re-initializes a fresh pool (with
+/// fresh metrics). In-flight jobs are drained by their submitting
+/// callers (which always run their own claim scan), so this never
+/// strands a caller — but it does busy-drain through them, so prefer
+/// calling it at quiesce points (process teardown, between test cases).
 pub fn shutdown() {
     let pool = GLOBAL.write().unwrap().take();
     let Some(pool) = pool else { return };
+    pool.stop.store(true, Ordering::Release);
     let mut sh = pool.shared.lock().unwrap();
     sh.shutting_down = true;
     pool.work_cv.notify_all();
@@ -356,6 +639,36 @@ pub fn worker_count() -> usize {
         .unwrap()
         .as_ref()
         .map_or(0, |p| p.shared.lock().unwrap().workers)
+}
+
+/// Snapshot the executor's self-metrics. All zeros before the first
+/// parallel dispatch and after [`shutdown`]. Counters are process-
+/// global: concurrent dispatchers all add to the same snapshot, so
+/// consumers should diff two snapshots around the region they care
+/// about rather than assert absolute values.
+pub fn stats() -> PoolStats {
+    let g = GLOBAL.read().unwrap();
+    let Some(p) = g.as_ref() else {
+        return PoolStats::default();
+    };
+    let m = &p.metrics;
+    let count = m.spawn_lat_count.load(Ordering::Relaxed);
+    let sum = m.spawn_lat_sum_ns.load(Ordering::Relaxed);
+    PoolStats {
+        workers: p.shared.lock().unwrap().workers,
+        jobs: m.jobs.load(Ordering::Relaxed),
+        tasks_injected: m.tasks_injected.load(Ordering::Relaxed),
+        tasks_executed: m.tasks_executed.load(Ordering::Relaxed),
+        caller_chunks: m.caller_chunks.load(Ordering::Relaxed),
+        steals: m.steals.load(Ordering::Relaxed),
+        stolen_tasks: m.stolen_tasks.load(Ordering::Relaxed),
+        parks: m.parks.load(Ordering::Relaxed),
+        tasks_pruned: m.tasks_pruned.load(Ordering::Relaxed),
+        pending_tasks: m.pending.load(Ordering::Relaxed),
+        pending_peak: m.pending_peak.load(Ordering::Relaxed),
+        spawn_latency_mean_ns: if count == 0 { 0 } else { sum / count },
+        spawn_latency_max_ns: m.spawn_lat_max_ns.load(Ordering::Relaxed),
+    }
 }
 
 #[cfg(test)]
@@ -398,5 +711,41 @@ mod tests {
         // lazily started, then persistent: the 200 calls share workers
         assert!(worker_count() >= 1, "no persistent worker left");
         assert!(worker_count() <= MAX_WORKERS);
+    }
+
+    #[test]
+    fn skewed_chunks_run_exactly_once_and_metrics_stay_consistent() {
+        // Heavy head chunk + cheap tail chunks: the worker that draws
+        // chunk 0 builds a stealable backlog. Assertions stick to
+        // invariants that hold under any interleaving (metrics are
+        // process-global and sibling tests dispatch concurrently).
+        for _ in 0..50 {
+            let hits: Vec<AtomicU64> = (0..17).map(|_| AtomicU64::new(0)).collect();
+            dispatch(17, 3, &|ci| {
+                let spins: u64 = if ci == 0 { 20_000 } else { 50 };
+                let mut acc = 0u64;
+                for i in 0..spins {
+                    acc = acc.wrapping_mul(31).wrapping_add(i);
+                }
+                std::hint::black_box(acc);
+                hits[ci].fetch_add(1, Ordering::Relaxed);
+            });
+            for (ci, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {ci}");
+            }
+        }
+        let st = stats();
+        assert!(st.workers >= 1, "pool should be live after 50 parallel dispatches");
+        assert!(st.jobs >= 50);
+        assert!(st.tasks_injected >= st.jobs, "every job injects >= 1 task");
+        assert!(
+            st.stolen_tasks >= st.steals,
+            "each counted steal moves >= 1 live task: {st:?}"
+        );
+        assert!(
+            st.spawn_latency_max_ns >= st.spawn_latency_mean_ns,
+            "max below mean: {st:?}"
+        );
+        assert!(st.pending_peak >= st.pending_tasks, "peak is a high-water mark: {st:?}");
     }
 }

@@ -1,0 +1,641 @@
+//! Event-driven ingest front-end: bounded per-tenant sample queues, an
+//! off-caller-thread batcher, and explicit backpressure — the entry
+//! point for "heavy traffic from millions of users".
+//!
+//! # Why not call `StreamRouter::ingest` directly?
+//!
+//! The router is a *consumer-side* structure: ingesting into it takes
+//! `&mut self`, so every producer serializes on the owner of the
+//! router, and a slow tick stalls the producers themselves. This module
+//! splits the two roles:
+//!
+//! * **Producers** hold a cheap, cloneable [`IngestHandle`] and call
+//!   [`IngestHandle::submit`] — one short per-tenant mutex hold, no
+//!   aggregation, no router access. Any number of producer threads can
+//!   submit concurrently.
+//! * The **consumer** owns the [`IngestFrontEnd`] (and the router) and
+//!   drives [`IngestFrontEnd::pump`]: drain every tenant queue, coalesce
+//!   samples into `ObservationWindow`s through per-tenant
+//!   [`WindowAggregator`]s (fanned across the engine's work-stealing
+//!   executor — the same executor router ticks, offline cycles, and
+//!   tuning probes run on), enqueue the windows on the router, and
+//!   tick it.
+//!
+//! The front-end is **event-driven**: producers signal the consumer's
+//! condvar on the empty→non-empty edge, so an idle consumer sleeps in
+//! [`IngestFrontEnd::wait_for_samples`] instead of spinning, and a busy
+//! one never pays more than one atomic check per pump.
+//!
+//! # Backpressure is explicit, shedding is never silent
+//!
+//! Every queue is bounded at `queue_cap`. What happens on overflow is
+//! the [`ShedPolicy`] picked at construction:
+//!
+//! | policy | producer sees | queue keeps | counted in |
+//! |--------|---------------|-------------|------------|
+//! | [`ShedPolicy::Block`] | blocks until space | everything | `blocked` (waits), never sheds |
+//! | [`ShedPolicy::ShedOldest`] | returns immediately | newest `queue_cap` | `shed` (the evicted oldest) |
+//! | [`ShedPolicy::ShedNewest`] | returns immediately | oldest `queue_cap` | `shed` (the rejected newcomer) |
+//!
+//! Per tenant, at every quiesce point (queue drained):
+//! `accepted + shed == submitted` — and at any instant
+//! `accepted + shed + resident == submitted`, where `accepted` counts
+//! samples handed to the batcher and `resident` counts samples still
+//! queued. `tests/ingest.rs` pins the invariant under every policy and
+//! under concurrent producers.
+//!
+//! Shedding decisions are **deterministic**: they are a pure function
+//! of the queue state at submit time, so a seeded single-threaded
+//! replay produces the identical outcome sequence (also pinned).
+
+use super::router::StreamRouter;
+use super::tenant::TenantId;
+use crate::features::ObservationWindow;
+use crate::linalg::engine::Engine;
+use crate::monitor::{MonitorConfig, WindowAggregator};
+use crate::workloadgen::Sample;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// What a full per-tenant queue does with the next sample.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Block the producer until the consumer drains space. Lossless;
+    /// couples producer latency to consumer health. A blocked producer
+    /// relies on a live consumer — only use where one is guaranteed.
+    Block,
+    /// Evict the oldest queued sample to admit the new one (keep the
+    /// freshest data — right for monitoring, where stale samples decay
+    /// in value). The evicted sample is counted, never silently lost.
+    ShedOldest,
+    /// Reject the incoming sample (keep the oldest — right when windows
+    /// must stay contiguous from their start). Counted, never silent.
+    ShedNewest,
+}
+
+/// Front-end configuration.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Per-tenant queue bound (clamped to ≥ 1).
+    pub queue_cap: usize,
+    /// Overflow behaviour for every queue.
+    pub policy: ShedPolicy,
+    /// Window aggregation config for the batchers. Must match the
+    /// router's monitor config for windows to be bit-identical to
+    /// direct `StreamRouter::ingest` (the coordinator's
+    /// `attach_ingest` enforces this).
+    pub monitor: MonitorConfig,
+    /// Max samples drained per tenant per pump (0 = drain everything).
+    /// A bound smooths one bursty tenant's latency impact on the rest.
+    pub drain_max: usize,
+    /// Engine the batching fans out on — share the coordinator's so
+    /// batching, ticks, and offline cycles use one executor.
+    pub engine: Engine,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            queue_cap: 1024,
+            policy: ShedPolicy::Block,
+            monitor: MonitorConfig::default(),
+            drain_max: 0,
+            engine: Engine::sequential(),
+        }
+    }
+}
+
+/// What happened to one submitted sample.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Queued with space to spare.
+    Accepted,
+    /// Queued after blocking for the consumer to drain space
+    /// ([`ShedPolicy::Block`] only).
+    AcceptedAfterBlock,
+    /// Queued; the oldest resident sample was evicted and counted shed.
+    ShedOldest,
+    /// Rejected and counted shed; the queue is unchanged.
+    ShedNewest,
+}
+
+/// Per-tenant accounting snapshot. Invariant (always):
+/// `accepted + shed + resident == submitted`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantIngestStats {
+    /// Samples ever submitted for this tenant.
+    pub submitted: u64,
+    /// Samples drained into the batcher (on their way to windows).
+    pub accepted: u64,
+    /// Samples shed by the overflow policy — every one counted here.
+    pub shed: u64,
+    /// Samples currently queued.
+    pub resident: u64,
+    /// Times a producer blocked on this queue ([`ShedPolicy::Block`]).
+    pub blocked: u64,
+    /// High-water mark of `resident`.
+    pub peak_resident: u64,
+}
+
+impl TenantIngestStats {
+    fn absorb(&mut self, o: &TenantIngestStats) {
+        self.submitted += o.submitted;
+        self.accepted += o.accepted;
+        self.shed += o.shed;
+        self.resident += o.resident;
+        self.blocked += o.blocked;
+        self.peak_resident = self.peak_resident.max(o.peak_resident);
+    }
+}
+
+/// One pump's work. `observed` is what the router tick processed —
+/// windows enqueued by *this* pump plus any backlog from earlier ones.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PumpStats {
+    /// Samples drained out of the queues.
+    pub drained: u64,
+    /// Windows the batchers closed and enqueued on the router.
+    pub windows: u64,
+    /// Windows the router tick observed.
+    pub observed: u64,
+}
+
+struct QueueState {
+    buf: VecDeque<Sample>,
+    submitted: u64,
+    accepted: u64,
+    shed: u64,
+    blocked: u64,
+    peak: u64,
+}
+
+struct TenantQueue {
+    state: Mutex<QueueState>,
+    /// Signaled by the consumer after draining; blocked producers wait
+    /// here.
+    space: Condvar,
+}
+
+impl TenantQueue {
+    fn new() -> Arc<TenantQueue> {
+        Arc::new(TenantQueue {
+            state: Mutex::new(QueueState {
+                buf: VecDeque::new(),
+                submitted: 0,
+                accepted: 0,
+                shed: 0,
+                blocked: 0,
+                peak: 0,
+            }),
+            space: Condvar::new(),
+        })
+    }
+
+    fn stats(&self) -> TenantIngestStats {
+        let st = self.state.lock().unwrap();
+        TenantIngestStats {
+            submitted: st.submitted,
+            accepted: st.accepted,
+            shed: st.shed,
+            resident: st.buf.len() as u64,
+            blocked: st.blocked,
+            peak_resident: st.peak,
+        }
+    }
+}
+
+struct IngestShared {
+    queue_cap: usize,
+    policy: ShedPolicy,
+    queues: RwLock<BTreeMap<TenantId, Arc<TenantQueue>>>,
+    /// Samples resident across all queues — the consumer's one-atomic
+    /// idle check.
+    resident: AtomicU64,
+    /// Producers notify here on the empty→non-empty edge;
+    /// [`IngestFrontEnd::wait_for_samples`] sleeps here.
+    wake: Mutex<()>,
+    wake_cv: Condvar,
+}
+
+/// Cheap, cloneable producer handle. Any number of threads can hold
+/// clones and [`submit`](IngestHandle::submit) concurrently.
+#[derive(Clone)]
+pub struct IngestHandle {
+    shared: Arc<IngestShared>,
+}
+
+impl IngestHandle {
+    fn queue(&self, t: TenantId) -> Arc<TenantQueue> {
+        if let Some(q) = self.shared.queues.read().unwrap().get(&t) {
+            return Arc::clone(q);
+        }
+        let mut qs = self.shared.queues.write().unwrap();
+        Arc::clone(qs.entry(t).or_insert_with(TenantQueue::new))
+    }
+
+    /// Submit one sample for tenant `t`. Never loses a sample silently:
+    /// the returned outcome says what happened, and the per-tenant
+    /// counters account for it either way.
+    pub fn submit(&self, t: TenantId, s: Sample) -> SubmitOutcome {
+        let q = self.queue(t);
+        let cap = self.shared.queue_cap;
+        let mut st = q.state.lock().unwrap();
+        let outcome = if st.buf.len() < cap {
+            st.buf.push_back(s);
+            SubmitOutcome::Accepted
+        } else {
+            match self.shared.policy {
+                ShedPolicy::Block => {
+                    st.blocked += 1;
+                    while st.buf.len() >= cap {
+                        st = q.space.wait(st).unwrap();
+                    }
+                    st.buf.push_back(s);
+                    SubmitOutcome::AcceptedAfterBlock
+                }
+                ShedPolicy::ShedOldest => {
+                    st.buf.pop_front();
+                    st.shed += 1;
+                    st.buf.push_back(s);
+                    SubmitOutcome::ShedOldest
+                }
+                ShedPolicy::ShedNewest => {
+                    st.shed += 1;
+                    SubmitOutcome::ShedNewest
+                }
+            }
+        };
+        // counted only once the sample's fate is decided (queued or
+        // shed), under the same lock hold — so the conservation
+        // invariant `accepted + shed + resident == submitted` is exact
+        // at every instant, even with a producer parked mid-Block.
+        st.submitted += 1;
+        st.peak = st.peak.max(st.buf.len() as u64);
+        drop(st);
+        // global resident delta: +1 when a sample entered the queue
+        // without evicting one. ShedOldest swaps (net 0), ShedNewest
+        // adds nothing.
+        if matches!(
+            outcome,
+            SubmitOutcome::Accepted | SubmitOutcome::AcceptedAfterBlock
+        ) && self.shared.resident.fetch_add(1, Ordering::AcqRel) == 0
+        {
+            // empty→non-empty edge: wake the consumer. Taking the wake
+            // mutex orders this notify against a consumer that just
+            // re-checked `resident` and is about to sleep.
+            let _g = self.shared.wake.lock().unwrap();
+            self.shared.wake_cv.notify_all();
+        }
+        outcome
+    }
+
+    /// Accounting snapshot for one tenant (None if it never submitted).
+    pub fn tenant_stats(&self, t: TenantId) -> Option<TenantIngestStats> {
+        self.shared.queues.read().unwrap().get(&t).map(|q| q.stats())
+    }
+
+    /// Accounting snapshot for every tenant.
+    pub fn stats(&self) -> BTreeMap<TenantId, TenantIngestStats> {
+        let qs = self.shared.queues.read().unwrap();
+        qs.iter().map(|(t, q)| (*t, q.stats())).collect()
+    }
+
+    /// Cross-tenant totals (peak_resident is the max single-tenant
+    /// peak, not a sum).
+    pub fn totals(&self) -> TenantIngestStats {
+        let mut acc = TenantIngestStats::default();
+        for st in self.stats().values() {
+            acc.absorb(st);
+        }
+        acc
+    }
+
+    /// Samples currently queued across all tenants.
+    pub fn resident(&self) -> u64 {
+        self.shared.resident.load(Ordering::Acquire)
+    }
+}
+
+/// One tenant's drain-and-batch work item for the executor fan-out.
+struct Lane<'a> {
+    tenant: TenantId,
+    queue: Arc<TenantQueue>,
+    agg: &'a mut WindowAggregator,
+    windows: Vec<ObservationWindow>,
+    drained: u64,
+}
+
+/// The consumer side: owns the per-tenant batchers and drives
+/// queue-drain → window-batch → router-enqueue → tick.
+pub struct IngestFrontEnd {
+    shared: Arc<IngestShared>,
+    config: IngestConfig,
+    batchers: BTreeMap<TenantId, WindowAggregator>,
+}
+
+impl IngestFrontEnd {
+    pub fn new(config: IngestConfig) -> IngestFrontEnd {
+        IngestFrontEnd {
+            shared: Arc::new(IngestShared {
+                queue_cap: config.queue_cap.max(1),
+                policy: config.policy,
+                queues: RwLock::new(BTreeMap::new()),
+                resident: AtomicU64::new(0),
+                wake: Mutex::new(()),
+                wake_cv: Condvar::new(),
+            }),
+            config,
+            batchers: BTreeMap::new(),
+        }
+    }
+
+    /// A producer handle (clone freely across threads).
+    pub fn handle(&self) -> IngestHandle {
+        IngestHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Every tenant that has ever submitted, in id order.
+    pub fn tenant_ids(&self) -> Vec<TenantId> {
+        self.shared.queues.read().unwrap().keys().copied().collect()
+    }
+
+    /// Samples accepted into batchers but not yet closed into a window
+    /// (the partial tail of each tenant's current window).
+    pub fn open_samples(&self) -> usize {
+        self.batchers.values().map(|a| a.pending_samples()).sum()
+    }
+
+    /// Samples currently queued across all tenants.
+    pub fn resident(&self) -> u64 {
+        self.shared.resident.load(Ordering::Acquire)
+    }
+
+    /// Sleep until at least one sample is queued, or `timeout` passes.
+    /// Returns whether samples are waiting. Never misses the producer
+    /// edge-notify: the resident check is repeated under the wake
+    /// mutex producers notify through.
+    pub fn wait_for_samples(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        if self.resident() > 0 {
+            return true;
+        }
+        let mut g = self.shared.wake.lock().unwrap();
+        loop {
+            if self.shared.resident.load(Ordering::Acquire) > 0 {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _res) = self
+                .shared
+                .wake_cv
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = guard;
+        }
+    }
+
+    /// Drain every tenant queue into its batcher (fanned across the
+    /// engine) and enqueue the closed windows on `router` — without
+    /// ticking it. Each lane is drained FIFO by exactly one worker and
+    /// windows are enqueued in tenant order on the calling thread, so
+    /// the result is bit-identical to a sequential drain regardless of
+    /// engine threads.
+    pub fn drain_into(&mut self, router: &mut StreamRouter) -> PumpStats {
+        let snapshot: Vec<(TenantId, Arc<TenantQueue>)> = {
+            let qs = self.shared.queues.read().unwrap();
+            qs.iter().map(|(t, q)| (*t, Arc::clone(q))).collect()
+        };
+        let monitor = self.config.monitor.clone();
+        for (t, _) in &snapshot {
+            self.batchers
+                .entry(*t)
+                .or_insert_with(|| WindowAggregator::new(monitor.clone(), 0));
+        }
+        let queues: BTreeMap<TenantId, Arc<TenantQueue>> =
+            snapshot.into_iter().collect();
+        let mut lanes: Vec<Lane> = self
+            .batchers
+            .iter_mut()
+            .filter_map(|(t, agg)| {
+                queues.get(t).map(|q| Lane {
+                    tenant: *t,
+                    queue: Arc::clone(q),
+                    agg,
+                    windows: Vec::new(),
+                    drained: 0,
+                })
+            })
+            .collect();
+        let drain_max = self.config.drain_max;
+        let shared = &self.shared;
+        // one work item = one tenant's drain+batch; costs are as skewed
+        // as the traffic (that's the point of the work-stealing
+        // executor), so every lane is its own stealable chunk
+        let engine = self.config.engine.with_min_items(1);
+        engine.for_rows(&mut lanes, 1, |_, chunk| {
+            for lane in chunk.iter_mut() {
+                let drained: Vec<Sample> = {
+                    let mut st = lane.queue.state.lock().unwrap();
+                    let n = if drain_max == 0 {
+                        st.buf.len()
+                    } else {
+                        st.buf.len().min(drain_max)
+                    };
+                    st.accepted += n as u64;
+                    st.buf.drain(..n).collect()
+                };
+                if drained.is_empty() {
+                    continue;
+                }
+                // space freed: release blocked producers, then retire
+                // the residents globally
+                lane.queue.space.notify_all();
+                shared
+                    .resident
+                    .fetch_sub(drained.len() as u64, Ordering::AcqRel);
+                lane.drained = drained.len() as u64;
+                for s in drained {
+                    if let Some(w) = lane.agg.push(s) {
+                        lane.windows.push(w);
+                    }
+                }
+            }
+        });
+        let mut stats = PumpStats::default();
+        for lane in &lanes {
+            stats.drained += lane.drained;
+            stats.windows += lane.windows.len() as u64;
+            if !lane.windows.is_empty() {
+                router.enqueue_windows(lane.tenant, &lane.windows);
+            }
+        }
+        stats
+    }
+
+    /// One full pump: drain + batch + enqueue, then tick the router.
+    pub fn pump(&mut self, router: &mut StreamRouter) -> PumpStats {
+        let mut stats = self.drain_into(router);
+        stats.observed = router.tick() as u64;
+        stats
+    }
+
+    /// Event-driven pump: sleep until samples arrive (or `timeout`),
+    /// then pump. `None` means the wait timed out with nothing queued.
+    pub fn pump_when_ready(
+        &mut self,
+        router: &mut StreamRouter,
+        timeout: Duration,
+    ) -> Option<PumpStats> {
+        if self.wait_for_samples(timeout) {
+            Some(self.pump(router))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::aggregate_samples;
+    use crate::stream::router::RouterConfig;
+    use crate::workloadgen::{tour_schedule, Generator};
+
+    fn samples(seed: u64, classes: &[u32]) -> Vec<Sample> {
+        let mut g = Generator::with_default_config(seed);
+        g.generate(&tour_schedule(40, classes)).samples
+    }
+
+    fn front_end(cap: usize, policy: ShedPolicy) -> IngestFrontEnd {
+        IngestFrontEnd::new(IngestConfig {
+            queue_cap: cap,
+            policy,
+            monitor: MonitorConfig { window_size: 10 },
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn shed_oldest_keeps_newest_and_counts_evictions() {
+        let fe = front_end(4, ShedPolicy::ShedOldest);
+        let h = fe.handle();
+        let t = TenantId(0);
+        let ss = samples(1, &[0]);
+        for (i, s) in ss.iter().take(10).enumerate() {
+            let out = h.submit(t, s.clone());
+            if i < 4 {
+                assert_eq!(out, SubmitOutcome::Accepted);
+            } else {
+                assert_eq!(out, SubmitOutcome::ShedOldest);
+            }
+        }
+        let st = h.tenant_stats(t).unwrap();
+        assert_eq!(st.submitted, 10);
+        assert_eq!(st.shed, 6);
+        assert_eq!(st.resident, 4);
+        assert_eq!(st.accepted, 0, "nothing drained yet");
+        assert_eq!(st.accepted + st.shed + st.resident, st.submitted);
+        assert_eq!(st.peak_resident, 4);
+        assert_eq!(h.resident(), 4);
+    }
+
+    #[test]
+    fn shed_newest_keeps_oldest_and_counts_rejections() {
+        let fe = front_end(4, ShedPolicy::ShedNewest);
+        let h = fe.handle();
+        let t = TenantId(3);
+        let ss = samples(2, &[1]);
+        for (i, s) in ss.iter().take(10).enumerate() {
+            let out = h.submit(t, s.clone());
+            if i < 4 {
+                assert_eq!(out, SubmitOutcome::Accepted);
+            } else {
+                assert_eq!(out, SubmitOutcome::ShedNewest);
+            }
+        }
+        let st = h.tenant_stats(t).unwrap();
+        assert_eq!(st.submitted, 10);
+        assert_eq!(st.shed, 6);
+        assert_eq!(st.resident, 4);
+        assert_eq!(st.accepted + st.shed + st.resident, st.submitted);
+    }
+
+    #[test]
+    fn pump_batches_windows_bit_identical_to_offline_aggregation() {
+        let mcfg = MonitorConfig { window_size: 10 };
+        let mut fe = front_end(1 << 16, ShedPolicy::Block);
+        let h = fe.handle();
+        let mut router = StreamRouter::new(RouterConfig {
+            monitor: mcfg.clone(),
+            ..Default::default()
+        });
+        let ss = samples(3, &[0, 2]);
+        let t = TenantId(7);
+        for s in &ss {
+            assert_eq!(h.submit(t, s.clone()), SubmitOutcome::Accepted);
+        }
+        let st = fe.pump(&mut router);
+        let expect = aggregate_samples(&ss, &mcfg);
+        assert_eq!(st.drained, ss.len() as u64);
+        assert_eq!(st.windows, expect.len() as u64);
+        assert_eq!(st.observed, expect.len() as u64);
+        assert_eq!(fe.open_samples(), ss.len() % 10);
+        // the windows the router observed are bit-identical to offline
+        // aggregation of the same sample stream
+        let taken = router.take_observed();
+        assert_eq!(taken.len(), 1);
+        assert_eq!(taken[0].0, t);
+        assert_eq!(taken[0].1, expect);
+        // drained == accepted, conservation holds at quiesce
+        let ts = h.tenant_stats(t).unwrap();
+        assert_eq!(ts.accepted, ss.len() as u64);
+        assert_eq!(ts.resident, 0);
+        assert_eq!(ts.shed, 0);
+    }
+
+    #[test]
+    fn wait_for_samples_times_out_empty_and_wakes_on_submit() {
+        let fe = front_end(8, ShedPolicy::Block);
+        assert!(!fe.wait_for_samples(Duration::from_millis(1)));
+        let h = fe.handle();
+        let s = samples(4, &[0])[0].clone();
+        h.submit(TenantId(1), s);
+        assert!(fe.wait_for_samples(Duration::from_millis(1)));
+        // still true on a zero timeout once samples are resident
+        assert!(fe.wait_for_samples(Duration::ZERO));
+    }
+
+    #[test]
+    fn drain_max_smooths_a_burst_across_pumps() {
+        let mcfg = MonitorConfig { window_size: 10 };
+        let mut fe = IngestFrontEnd::new(IngestConfig {
+            queue_cap: 1 << 16,
+            policy: ShedPolicy::Block,
+            monitor: mcfg.clone(),
+            drain_max: 25,
+            ..Default::default()
+        });
+        let h = fe.handle();
+        let mut router = StreamRouter::new(RouterConfig {
+            monitor: mcfg,
+            ..Default::default()
+        });
+        let ss = samples(5, &[2]);
+        assert!(ss.len() > 25);
+        for s in &ss {
+            h.submit(TenantId(0), s.clone());
+        }
+        let st1 = fe.pump(&mut router);
+        assert_eq!(st1.drained, 25);
+        let mut total = st1.drained;
+        while fe.resident() > 0 {
+            total += fe.pump(&mut router).drained;
+        }
+        assert_eq!(total, ss.len() as u64);
+    }
+}

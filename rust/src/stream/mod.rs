@@ -6,6 +6,11 @@
 //! Topology (see docs/ARCHITECTURE.md for the full diagram):
 //!
 //! ```text
+//!   producers ──▶ ingest::IngestFrontEnd ─▶ bounded per-tenant queues
+//!   (any thread,   (event-driven batcher:     + explicit ShedPolicy
+//!    IngestHandle)  samples → windows off the caller's thread)
+//!                        │ pump()
+//!                        ▼
 //!   tenant streams ──▶ StreamRouter ──▶ one TenantShard per tenant
 //!                        │                ├─ monitor::WindowAggregator
 //!                        │                ├─ online::OnlinePipeline
@@ -26,8 +31,13 @@
 //! alone through a sequential [`crate::online::OnlinePipeline`] — pinned
 //! by `tests/stream_equivalence.rs`.
 
+pub mod ingest;
 pub mod router;
 pub mod tenant;
 
+pub use ingest::{
+    IngestConfig, IngestFrontEnd, IngestHandle, PumpStats, ShedPolicy,
+    SubmitOutcome, TenantIngestStats,
+};
 pub use router::{RouterConfig, StreamRouter, TenantShard, TickDispatch};
 pub use tenant::{interleave_round_robin, TenantId, TenantSample};

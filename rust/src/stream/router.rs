@@ -72,6 +72,14 @@ pub struct RouterConfig {
     /// Off-line consumers drain `take_observed` every tick — far below
     /// this — so the cap only bites router-only users and runaway logs.
     pub shard_log_cap: usize,
+    /// Per-shard cap on closed-but-unobserved *pending* windows (the
+    /// queue [`StreamRouter::tick`] drains). Without it a stalled tick
+    /// — a consumer that ingests but never ticks — grows pending
+    /// without bound, the one shard buffer `shard_log_cap` did not
+    /// cover. Overflow drops the oldest half (same policy as the logs)
+    /// and counts every dropped window in the shard's
+    /// `pending_dropped`, never silently.
+    pub pending_cap: usize,
 }
 
 impl Default for RouterConfig {
@@ -82,6 +90,7 @@ impl Default for RouterConfig {
             engine: Engine::sequential(),
             dispatch: TickDispatch::default(),
             shard_log_cap: 65_536,
+            pending_cap: 65_536,
         }
     }
 }
@@ -114,7 +123,14 @@ pub struct TenantShard {
     /// nonzero value means the off-line consumer fell behind and the
     /// bounded logs shed telemetry to protect memory.
     pub windows_dropped: u64,
+    /// Monotone count of *pending* (closed-but-unobserved) windows the
+    /// pending cap has dropped — nonzero means the tick loop stalled
+    /// while ingest kept running, and the shard shed its oldest
+    /// backlog to protect memory. Kept separate from `windows_dropped`
+    /// (log overflow) so the two failure modes stay distinguishable.
+    pub pending_dropped: u64,
     log_cap: usize,
+    pending_cap: usize,
 }
 
 impl TenantShard {
@@ -133,7 +149,9 @@ impl TenantShard {
             contexts: Vec::new(),
             contexts_published: 0,
             windows_dropped: 0,
+            pending_dropped: 0,
             log_cap: config.shard_log_cap.max(2),
+            pending_cap: config.pending_cap.max(2),
         }
     }
 
@@ -214,6 +232,8 @@ impl StreamRouter {
                 shard.pending.push(w);
             }
         }
+        shard.pending_dropped +=
+            cap_log(&mut shard.pending, shard.pending_cap) as u64;
     }
 
     /// Ingest one tenant-tagged sample from a multiplexed stream.
@@ -221,6 +241,8 @@ impl StreamRouter {
         let shard = self.add_tenant(ts.tenant);
         if let Some(w) = shard.agg.push(ts.sample.clone()) {
             shard.pending.push(w);
+            shard.pending_dropped +=
+                cap_log(&mut shard.pending, shard.pending_cap) as u64;
         }
     }
 
@@ -229,6 +251,8 @@ impl StreamRouter {
     pub fn enqueue_windows(&mut self, t: TenantId, ws: &[ObservationWindow]) {
         let shard = self.add_tenant(t);
         shard.pending.extend(ws.iter().cloned());
+        shard.pending_dropped +=
+            cap_log(&mut shard.pending, shard.pending_cap) as u64;
     }
 
     /// One router tick: drain every shard's pending windows through its
@@ -341,6 +365,13 @@ impl StreamRouter {
     pub fn windows_dropped(&self) -> u64 {
         self.shards.values().map(|s| s.windows_dropped).sum()
     }
+
+    /// Total *pending* windows dropped by the per-shard pending cap
+    /// across every shard (stalled-tick back-pressure; see
+    /// [`RouterConfig::pending_cap`]).
+    pub fn pending_dropped(&self) -> u64 {
+        self.shards.values().map(|s| s.pending_dropped).sum()
+    }
 }
 
 #[cfg(test)]
@@ -450,6 +481,44 @@ mod tests {
         assert_eq!(router.windows_dropped(), 2 * ctx_drops);
         let taken = router.take_observed();
         assert!(taken[0].1.len() <= 16, "observed {}", taken[0].1.len());
+    }
+
+    #[test]
+    fn pending_window_cap_bounds_a_stalled_tick() {
+        // a producer that ingests while the tick loop is stalled: the
+        // pending queue must stay bounded, every dropped window must be
+        // counted, and the eventual tick must observe exactly the
+        // survivors (the cap sheds on enqueue, never inside tick)
+        let mut router = StreamRouter::new(RouterConfig {
+            monitor: MonitorConfig { window_size: 10 },
+            pending_cap: 8,
+            ..Default::default()
+        });
+        let tr = trace_for(11, &[1]);
+        let ws = aggregate_samples(
+            &tr.samples,
+            &MonitorConfig { window_size: 10 },
+        );
+        let mut submitted = 0u64;
+        for _ in 0..10 {
+            router.enqueue_windows(TenantId(0), &ws);
+            submitted += ws.len() as u64;
+        }
+        let shard = router.shard(TenantId(0)).unwrap();
+        assert!(
+            shard.pending_windows() <= 8,
+            "pending {} above cap",
+            shard.pending_windows()
+        );
+        let dropped = shard.pending_dropped;
+        assert!(dropped > 0, "cap never bit");
+        assert_eq!(router.pending_dropped(), dropped);
+        // log-overflow accounting stays untouched by pending shedding
+        assert_eq!(router.windows_dropped(), 0);
+        let observed = router.tick() as u64;
+        assert_eq!(observed + dropped, submitted, "a window went missing");
+        let shard = router.shard(TenantId(0)).unwrap();
+        assert_eq!(shard.pending_dropped, dropped, "tick itself shed");
     }
 
     #[test]

@@ -46,7 +46,7 @@ use crate::simcluster::multi::{
 };
 use crate::simcluster::rm::{ResourceManager, ResourceRequest};
 use crate::simcluster::JobSpec;
-use crate::stream::TenantId;
+use crate::stream::{IngestConfig, IngestHandle, PumpStats, TenantId};
 use crate::workloadgen::Sample;
 use std::collections::BTreeMap;
 
@@ -601,6 +601,25 @@ impl TuningPlane {
     /// Flush window batches still pending in the router shards.
     pub fn drain(&mut self) {
         self.windows_observed += self.coord.tick();
+    }
+
+    /// Attach an event-driven ingest front-end to the coordinator and
+    /// return a producer handle (see
+    /// [`MultiTenantCoordinator::attach_ingest`]). Front-end batching,
+    /// router ticks, offline cycles, and tuning probes then all run on
+    /// the one work-stealing executor.
+    pub fn attach_ingest(&mut self, config: IngestConfig) -> IngestHandle {
+        self.coord.attach_ingest(config)
+    }
+
+    /// Pump the attached front-end (drain queues → batch windows →
+    /// tick), folding the tick's windows into this plane's observed
+    /// count so reports and the offline cadence see front-end traffic
+    /// exactly like direct ingest. `None` if nothing is attached.
+    pub fn pump_ingest(&mut self) -> Option<PumpStats> {
+        let (stats, n) = self.coord.pump_ingest()?;
+        self.windows_observed += n;
+        Some(stats)
     }
 
     /// Run the knowledge-plane integrity sweep (quarantines corrupt

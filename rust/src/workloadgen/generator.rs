@@ -6,7 +6,7 @@
 
 use super::archetypes::{catalog, Mix, WorkloadClass};
 use super::trace::{Sample, Segment, Trace, TruthTag};
-use crate::features::{FeatureVec, NUM_FEATURES};
+use crate::features::{FeatureVec, TenantId, NUM_FEATURES};
 use crate::util::rng::Rng;
 
 /// One scheduled steady-state period.
@@ -334,6 +334,97 @@ pub fn tenant_traces(
         .collect()
 }
 
+/// Seedable Zipf sampler over `0..n`: rank `k` is drawn with
+/// probability proportional to `1/(k+1)^s`. Built once (O(n) CDF
+/// precompute), sampled in O(log n) — cheap enough to drive a
+/// 10k-tenant popularity distribution inside a bench's timed loop.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    /// Normalized cumulative distribution; `cdf[k]` = P(rank ≤ k).
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    /// `n` ranks with exponent `s` (s = 0 is uniform; s ≈ 1 is the
+    /// classic web-traffic tail). Panics if `n == 0`.
+    pub fn new(n: usize, s: f64) -> ZipfSampler {
+        assert!(n > 0, "ZipfSampler over an empty domain");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Draw one rank in `0..n`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf
+            .partition_point(|&c| c <= u)
+            .min(self.cdf.len() - 1)
+    }
+}
+
+/// A heavy-tailed multi-tenant sample stream for ingest stress: tenant
+/// popularity is Zipf(`zipf_s`) over `tenants`, arrivals are bursty
+/// (geometric run lengths with mean `mean_burst`, capped at 8× to keep
+/// the tail bounded), and each tenant cycles its class's template trace
+/// at its own cursor — so two tenants of one class emit the same
+/// *marginal* signal but interleave differently, like real co-tenants.
+/// Tenant `t` runs class `classes[t % classes.len()]`. Deterministic
+/// per seed.
+pub fn heavy_tailed_stream(
+    seed: u64,
+    tenants: usize,
+    events: usize,
+    zipf_s: f64,
+    mean_burst: usize,
+    classes: &[u32],
+) -> Vec<(TenantId, Sample)> {
+    assert!(tenants > 0 && !classes.is_empty());
+    let mean_burst = mean_burst.max(1);
+    // one template trace per class, long enough to cycle without
+    // obvious periodicity at window granularity
+    let templates: Vec<Trace> = classes
+        .iter()
+        .map(|&c| {
+            let mut g = Generator::with_default_config(
+                seed ^ (0xC1A5 + c as u64),
+            );
+            g.generate(&[ScheduleEntry { mix: Mix::Pure(c), duration: 512 }])
+        })
+        .collect();
+    let zipf = ZipfSampler::new(tenants, zipf_s);
+    let mut rng = Rng::new(seed ^ 0xB0257);
+    let mut cursors = vec![0usize; tenants];
+    let mut out = Vec::with_capacity(events);
+    let continue_p = 1.0 - 1.0 / mean_burst as f64;
+    while out.len() < events {
+        let t = zipf.sample(&mut rng);
+        let template = &templates[t % classes.len()];
+        // geometric burst from one tenant (bursty arrival process)
+        let mut burst = 1;
+        while burst < mean_burst * 8 && rng.chance(continue_p) {
+            burst += 1;
+        }
+        for _ in 0..burst {
+            if out.len() >= events {
+                break;
+            }
+            let s = template.samples[cursors[t] % template.len()].clone();
+            cursors[t] += 1;
+            out.push((TenantId(t as u32), s));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -531,5 +622,56 @@ mod tests {
                 "self-transition in schedule"
             );
         }
+    }
+
+    #[test]
+    fn zipf_sampler_is_head_skewed_and_in_range() {
+        let zipf = ZipfSampler::new(100, 1.1);
+        let mut rng = Rng::new(21);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            let k = zipf.sample(&mut rng);
+            assert!(k < 100);
+            counts[k] += 1;
+        }
+        // rank 0 dominates any deep-tail rank by a wide margin, and the
+        // top decile carries most of the mass — the heavy-tail shape
+        // the ingest stress relies on
+        assert!(counts[0] > counts[50] * 5, "{} vs {}", counts[0], counts[50]);
+        let head: usize = counts[..10].iter().sum();
+        assert!(head > 10_000, "head mass only {head}/20000");
+        // uniform corner: s = 0 must not collapse onto one rank
+        let flat = ZipfSampler::new(10, 0.0);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[flat.sample(&mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "s=0 missed a rank");
+    }
+
+    #[test]
+    fn heavy_tailed_stream_is_deterministic_and_heavy_tailed() {
+        let a = heavy_tailed_stream(5, 50, 3000, 1.1, 4, &[0, 2, 5]);
+        let b = heavy_tailed_stream(5, 50, 3000, 1.1, 4, &[0, 2, 5]);
+        assert_eq!(a.len(), 3000);
+        assert_eq!(a.len(), b.len());
+        for ((ta, sa), (tb, sb)) in a.iter().zip(&b) {
+            assert_eq!(ta, tb);
+            assert_eq!(sa.features, sb.features);
+        }
+        let mut per_tenant = vec![0usize; 50];
+        for (t, _) in &a {
+            per_tenant[t.0 as usize] += 1;
+        }
+        let max = *per_tenant.iter().max().unwrap();
+        let median = {
+            let mut c = per_tenant.clone();
+            c.sort_unstable();
+            c[25]
+        };
+        assert!(
+            max > median.max(1) * 4,
+            "no skew: max {max}, median {median}"
+        );
     }
 }

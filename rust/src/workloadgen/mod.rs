@@ -14,7 +14,8 @@ pub mod trace;
 
 pub use archetypes::{catalog, num_pure_classes, ClassId, Mix, WorkloadClass};
 pub use generator::{
-    daily_schedule, multi_user_schedule, random_schedule, tenant_schedules,
-    tenant_traces, tour_schedule, GenConfig, Generator, ScheduleEntry,
+    daily_schedule, heavy_tailed_stream, multi_user_schedule,
+    random_schedule, tenant_schedules, tenant_traces, tour_schedule,
+    GenConfig, Generator, ScheduleEntry, ZipfSampler,
 };
 pub use trace::{Sample, Segment, Trace, TruthTag};

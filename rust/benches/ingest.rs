@@ -61,6 +61,7 @@ fn run_stage(
         monitor: monitor.clone(),
         drain_max: 0,
         engine: eng,
+        ..IngestConfig::default()
     });
     let mut router = StreamRouter::new(RouterConfig {
         monitor,

@@ -1,0 +1,92 @@
+//! Transport-chaos runner: the ingest path under a faulty link
+//! (partition + heal, lossy/laggy transport, duplicate storm, stalled
+//! consumer), each scenario scored against its fault-free oracle for
+//! the supervision guarantees (bounded regret, exactly-once window
+//! accounting, injected ≥ observed counter reconciliation, zero
+//! permanently-degraded tenants). Writes the deterministic
+//! per-scenario JSON snapshots to `TRANSPORT_outcomes.json` (the CI
+//! artifact — a failure reproduces locally from its seed via
+//! `KERMIT_CHAOS_SEED`).
+//!
+//! With `KERMIT_SMOKE=1` the sweep shrinks to toy sizes and *asserts*
+//! every scenario passes — the blocking `rust-transport-chaos` CI job.
+
+use kermit::benchkit::Table;
+use kermit::experiments::chaos;
+use kermit::util::json::Json;
+
+fn main() {
+    let smoke = matches!(
+        std::env::var("KERMIT_SMOKE").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    );
+
+    println!(
+        "\n== Transport chaos (faulty ingest link vs fault-free oracle) ==\n"
+    );
+    let t0 = std::time::Instant::now();
+    let outcomes = chaos::run_transport(smoke);
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(&[
+        "scenario",
+        "regret",
+        "bound",
+        "sent",
+        "dropped",
+        "dup/dedup",
+        "gaps",
+        "dbl-count",
+        "degraded",
+        "tail hit (o/f)",
+        "verdict",
+    ]);
+    for o in &outcomes {
+        t.row(&[
+            o.name.clone(),
+            format!("{:+.3}", o.regret),
+            format!("{:.2}", o.regret_bound),
+            format!("{}", o.samples_sent),
+            format!("{}", o.samples_dropped + o.samples_partitioned),
+            format!("{}/{}", o.samples_duplicated, o.deduped),
+            format!("{}", o.gaps_skipped),
+            format!("{}", o.double_counted_windows),
+            format!("{}/{}", o.degraded_events, o.degraded_final),
+            format!(
+                "{:.0}%/{:.0}%",
+                100.0 * o.oracle_tail_hit_ratio,
+                100.0 * o.faulted_tail_hit_ratio
+            ),
+            if o.pass { "pass".into() } else { "FAIL".into() },
+        ]);
+        for f in &o.failures {
+            println!("{}: FAIL — {f}", o.name);
+        }
+    }
+    t.print();
+    println!(
+        "\n{} scenarios, wall {:.1}s",
+        outcomes.len(),
+        wall.as_secs_f64()
+    );
+
+    // deterministic JSON snapshots: same seeds → same bytes
+    let snapshot =
+        Json::Arr(outcomes.iter().map(|o| o.to_json()).collect());
+    let path = "TRANSPORT_outcomes.json";
+    match std::fs::write(path, snapshot.encode_pretty()) {
+        Ok(()) => println!("snapshots written to {path}"),
+        Err(e) => println!("snapshot write failed ({path}): {e}"),
+    }
+
+    if smoke {
+        for o in &outcomes {
+            assert!(
+                o.pass,
+                "scenario {} violated its transport guarantees: {:?}",
+                o.name, o.failures
+            );
+        }
+        println!("\ntransport chaos smoke OK");
+    }
+}

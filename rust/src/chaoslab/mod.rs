@@ -21,7 +21,12 @@
 //! * [`persistence`] — [`RecoveryOutcome`]: crash/recovery scenarios
 //!   for the durable knowledge plane (kill-and-restart, corrupt
 //!   snapshot + torn WAL tail), proving zero learned-optimum loss up
-//!   to the WAL tail and warm restarts.
+//!   to the WAL tail and warm restarts;
+//! * [`transport`] — [`TransportOutcome`]: transport-chaos scenarios
+//!   for the ingest path (lossy/laggy/duplicating link, per-tenant
+//!   partitions with heal times, stalled pump, wedged lanes), proving
+//!   exactly-once window accounting, bounded regret, and full
+//!   supervisor re-arm after heal + reconcile.
 //!
 //! Everything is seeded through `util::rng::Rng` — a CI failure
 //! reproduces locally from the JSON snapshot's seed via
@@ -31,6 +36,7 @@ pub mod outcome;
 pub mod persistence;
 pub mod runner;
 pub mod scenario;
+pub mod transport;
 
 pub use outcome::{diff_outcome_sets, OutcomeDiff, ScenarioOutcome};
 pub use persistence::{
@@ -40,4 +46,8 @@ pub use persistence::{
 pub use runner::run_scenario;
 pub use scenario::{
     standard_scenarios, ScenarioSpec, ScenarioStep, StepAction,
+};
+pub use transport::{
+    run_transport_scenario, transport_scenarios, TransportOutcome,
+    TransportScenarioSpec,
 };

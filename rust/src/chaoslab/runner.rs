@@ -194,7 +194,7 @@ struct RunArtifacts {
 /// Pooled cache-hit ratio over the last `window` decisions of every
 /// tenant — the recovery observable (did the loop get back to serving
 /// optima after the faults, or is it still flailing on defaults?).
-fn tail_hit_ratio(plane: &TuningPlane, window: usize) -> f64 {
+pub(crate) fn tail_hit_ratio(plane: &TuningPlane, window: usize) -> f64 {
     let mut hits = 0usize;
     let mut total = 0usize;
     for t in plane.tenant_ids() {

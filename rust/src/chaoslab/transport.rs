@@ -1,0 +1,795 @@
+//! Transport-chaos scenarios: the ingest path under a faulty link.
+//!
+//! `runner` chaos-tests the *executor* side of the MAPE-K loop (jobs
+//! straggle, containers die); this module chaos-tests the *transport*
+//! between tenant producers and the tuning plane's ingest front-end —
+//! samples dropped, delayed/reordered, duplicated, or cut off by a
+//! per-tenant partition, plus consumer-side faults (a stalled pump, a
+//! wedged lane worker). Every run drives the full closed loop through
+//! a [`TransportLayer`] into an attached [`IngestFrontEnd`] with the
+//! supervision stack live (sequence-numbered dedup/reorder, per-tenant
+//! watchdogs, retry backoff, degraded mode), and is scored against a
+//! fault-free oracle:
+//!
+//! * **bounded regret** — per-completed-job makespan within the spec's
+//!   bound of the oracle, despite the lossy/laggy link;
+//! * **zero double-counted windows** — at-least-once delivery never
+//!   inflates the label timeline: per tenant, published windows never
+//!   exceed `accepted / window_size`, and the sequence-fate accounting
+//!   (`accepted + gaps_skipped + shed + closed_rejects ≤ sent`, exact
+//!   for lossless plans) proves no sequence was delivered twice;
+//! * **injected ≥ observed** — the transport's ground-truth fault
+//!   report reconciles with the consumer-side counters (dedup hits
+//!   bounded by duplicates + late releases, write-offs bounded by
+//!   drops + partitions + delays, delivery totals exact);
+//! * **no wedged lanes, no permanently-degraded tenants** — after heal
+//!   + `reconcile_ingest`, every queue is empty and every tenant is
+//!   back to `TenantHealth::Healthy`;
+//! * **label-timeline convergence** — where the spec asserts a
+//!   recovery floor, the faulted run's tail cache-hit ratio holds it
+//!   relative to the oracle (label-renaming-agnostic: ratios, never
+//!   label ids, which are per-run discovery order).
+
+use super::runner::tail_hit_ratio;
+use crate::experiments::tuning_plane::{plane_config, schedules, sim_config};
+use crate::simcluster::config_space::TuningConfig;
+use crate::simcluster::multi::{MultiClusterEngine, TenantRmPlugin};
+use crate::simcluster::rm::{ResourceManager, ResourceRequest};
+use crate::stream::{
+    IngestConfig, IngestHandle, ShedPolicy, TenantId, TenantIngestStats,
+    TransportFaultPlan, TransportFaultReport, TransportLayer,
+};
+use crate::tuning::{TuningPlane, TuningRunReport};
+use crate::util::json::Json;
+use crate::workloadgen::Sample;
+
+/// One transport-chaos scenario: workload scale, the transport fault
+/// plan, the watchdog deadline, and the degradation bounds the faulted
+/// run must satisfy against its fault-free oracle.
+#[derive(Debug, Clone)]
+pub struct TransportScenarioSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    pub tenants: usize,
+    pub jobs_per_tenant: usize,
+    pub classes: Vec<u32>,
+    /// Explorer global budget (local budget derives from it).
+    pub budget: usize,
+    pub transport: TransportFaultPlan,
+    /// Watchdog no-progress deadline (sim time a tenant's delivery
+    /// watermark may lag the cluster frontier before the supervisor
+    /// demotes it). Finite here — the scenarios opt in to the silence
+    /// watchdog that production defaults leave off.
+    pub silence_after: f64,
+    /// Max allowed per-completed-job makespan regret vs the oracle.
+    pub regret_bound: f64,
+    /// Tail window (decisions per tenant) the recovery check pools.
+    pub recovery_window: usize,
+    /// Faulted tail cache-hit ratio must be ≥ this fraction of the
+    /// oracle's (0 disables — containment-only scenarios).
+    pub recovery_floor: f64,
+}
+
+impl TransportScenarioSpec {
+    /// Baseline spec at the standard chaos scale (same as
+    /// [`super::ScenarioSpec::base`]): smoke runs 3 tenants x 8 jobs,
+    /// full runs 4 x 14.
+    pub fn base(
+        name: &'static str,
+        seed: u64,
+        smoke: bool,
+    ) -> TransportScenarioSpec {
+        let (tenants, jobs, budget) =
+            if smoke { (3, 8, 10) } else { (4, 14, 14) };
+        TransportScenarioSpec {
+            name,
+            seed,
+            tenants,
+            jobs_per_tenant: jobs,
+            classes: vec![0, 5],
+            budget,
+            transport: TransportFaultPlan::default(),
+            silence_after: 450.0,
+            regret_bound: 2.5,
+            recovery_window: 6,
+            recovery_floor: 0.0,
+        }
+    }
+
+    /// Same env overrides as `ScenarioSpec::apply_env` — the
+    /// reproduce-my-CI-failure knob.
+    pub fn apply_env(&mut self) {
+        fn env_parse<T: std::str::FromStr>(key: &str) -> Option<T> {
+            std::env::var(key).ok()?.parse().ok()
+        }
+        if let Some(s) = env_parse::<u64>("KERMIT_CHAOS_SEED") {
+            self.seed = s;
+        }
+        if let Some(t) = env_parse::<usize>("KERMIT_CHAOS_TENANTS") {
+            self.tenants = t.max(1);
+        }
+        if let Some(j) = env_parse::<usize>("KERMIT_CHAOS_JOBS") {
+            self.jobs_per_tenant = j.max(1);
+        }
+    }
+
+    /// A plan with no loss channel at all (no drops, no partitions):
+    /// after the end-of-run flush every sent sequence must be accounted
+    /// for *exactly* — duplication, delay, stalls and wedges shuffle
+    /// samples around but never destroy them.
+    fn lossless(&self) -> bool {
+        self.transport.loss.is_none() && self.transport.partitions.is_empty()
+    }
+}
+
+/// The transport-chaos scoreboard for one scenario, serializable to
+/// deterministic JSON. Carries the same `name` + `seed` identity keys
+/// as [`super::ScenarioOutcome`], so `super::outcome::diff_outcome_sets`
+/// diffs `TRANSPORT_outcomes.json` snapshots unchanged.
+#[derive(Debug, Clone, Default)]
+pub struct TransportOutcome {
+    pub name: String,
+    pub seed: u64,
+
+    // ---- workload + makespans -----------------------------------------
+    pub oracle_makespan: f64,
+    pub faulted_makespan: f64,
+    pub oracle_jobs: usize,
+    pub faulted_jobs: usize,
+    pub regret: f64,
+    pub regret_bound: f64,
+
+    // ---- no-livelock guarantee ----------------------------------------
+    pub livelocked_sessions: usize,
+    pub pending_decisions: usize,
+
+    // ---- transport ground truth (faulted run) -------------------------
+    pub samples_sent: u64,
+    pub samples_dropped: usize,
+    pub samples_partitioned: usize,
+    pub samples_delayed: usize,
+    pub samples_duplicated: usize,
+    pub pump_stalls: usize,
+    pub lane_wedges: usize,
+    pub partitions_healed: usize,
+
+    // ---- consumer-side observation (faulted run) ----------------------
+    pub submitted: u64,
+    pub accepted: u64,
+    pub shed: u64,
+    pub deduped: u64,
+    pub gaps_skipped: u64,
+    pub closed_rejects: u64,
+    /// Samples still queued/parked after reconcile — must be zero.
+    pub resident_after: u64,
+
+    // ---- exactly-once window accounting -------------------------------
+    pub oracle_windows: u64,
+    pub faulted_windows: u64,
+    /// Σ per tenant `published - accepted/window_size` overshoot — any
+    /// nonzero value means a duplicate reached the label timeline.
+    pub double_counted_windows: u64,
+    /// Σ per tenant overshoot of
+    /// `accepted + gaps_skipped + shed + closed_rejects` beyond `sent`
+    /// (plus, for lossless plans, any deficit) — must be zero.
+    pub seq_accounting_violation: u64,
+
+    // ---- supervision / degraded mode (faulted run) --------------------
+    pub delivery_retries: u64,
+    pub degraded_events: u64,
+    pub degraded_decisions: usize,
+    pub healed: u64,
+    /// Tenants not back to Healthy after heal + reconcile — must be 0.
+    pub degraded_final: usize,
+
+    // ---- label-timeline convergence -----------------------------------
+    pub oracle_tail_hit_ratio: f64,
+    pub faulted_tail_hit_ratio: f64,
+    pub recovery_floor: f64,
+    pub oracle_known_fraction: f64,
+    pub faulted_known_fraction: f64,
+
+    // ---- verdict ------------------------------------------------------
+    pub pass: bool,
+    pub failures: Vec<String>,
+}
+
+impl TransportOutcome {
+    /// Deterministic JSON snapshot (same scenario + seed → same bytes).
+    pub fn to_json(&self) -> Json {
+        let n = |v: usize| Json::Num(v as f64);
+        let u = |v: u64| Json::Num(v as f64);
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("oracle_makespan", Json::Num(self.oracle_makespan))
+            .set("faulted_makespan", Json::Num(self.faulted_makespan))
+            .set("oracle_jobs", n(self.oracle_jobs))
+            .set("faulted_jobs", n(self.faulted_jobs))
+            .set("regret", Json::Num(self.regret))
+            .set("regret_bound", Json::Num(self.regret_bound))
+            .set("livelocked_sessions", n(self.livelocked_sessions))
+            .set("pending_decisions", n(self.pending_decisions))
+            .set("samples_sent", u(self.samples_sent))
+            .set("samples_dropped", n(self.samples_dropped))
+            .set("samples_partitioned", n(self.samples_partitioned))
+            .set("samples_delayed", n(self.samples_delayed))
+            .set("samples_duplicated", n(self.samples_duplicated))
+            .set("pump_stalls", n(self.pump_stalls))
+            .set("lane_wedges", n(self.lane_wedges))
+            .set("partitions_healed", n(self.partitions_healed))
+            .set("submitted", u(self.submitted))
+            .set("accepted", u(self.accepted))
+            .set("shed", u(self.shed))
+            .set("deduped", u(self.deduped))
+            .set("gaps_skipped", u(self.gaps_skipped))
+            .set("closed_rejects", u(self.closed_rejects))
+            .set("resident_after", u(self.resident_after))
+            .set("oracle_windows", u(self.oracle_windows))
+            .set("faulted_windows", u(self.faulted_windows))
+            .set(
+                "double_counted_windows",
+                u(self.double_counted_windows),
+            )
+            .set(
+                "seq_accounting_violation",
+                u(self.seq_accounting_violation),
+            )
+            .set("delivery_retries", u(self.delivery_retries))
+            .set("degraded_events", u(self.degraded_events))
+            .set("degraded_decisions", n(self.degraded_decisions))
+            .set("healed", u(self.healed))
+            .set("degraded_final", n(self.degraded_final))
+            .set(
+                "oracle_tail_hit_ratio",
+                Json::Num(self.oracle_tail_hit_ratio),
+            )
+            .set(
+                "faulted_tail_hit_ratio",
+                Json::Num(self.faulted_tail_hit_ratio),
+            )
+            .set("recovery_floor", Json::Num(self.recovery_floor))
+            .set(
+                "oracle_known_fraction",
+                Json::Num(self.oracle_known_fraction),
+            )
+            .set(
+                "faulted_known_fraction",
+                Json::Num(self.faulted_known_fraction),
+            )
+            .set("pass", Json::Bool(self.pass))
+            .set(
+                "failures",
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|f| Json::Str(f.clone()))
+                        .collect(),
+                ),
+            );
+        j
+    }
+}
+
+/// Wraps the tuning plane as the engine's plug-in hub, with every
+/// emitted sample routed through the (possibly faulty) transport into
+/// the attached ingest front-end, and the pump gated by the
+/// consumer-side faults (stall windows skip the pump entirely, wedged
+/// lanes are skipped inside it).
+struct TransportHub {
+    plane: TuningPlane,
+    handle: IngestHandle,
+    transport: TransportLayer,
+}
+
+impl TransportHub {
+    /// One supervised pump at sim time `now`, honouring the scripted
+    /// consumer faults. Skipped entirely while the pump is stalled —
+    /// the bounded queues (and the shed policy) are what protect the
+    /// producers in that window.
+    fn pump(&mut self, now: f64) {
+        if self.transport.pump_stalled(now) {
+            return;
+        }
+        let wedged = self.transport.wedged_tenants(now);
+        self.plane.pump_ingest_wedged(&wedged);
+    }
+}
+
+impl TenantRmPlugin for TransportHub {
+    fn on_samples(&mut self, t: TenantId, samples: &[Sample]) {
+        let Some(last) = samples.last() else { return };
+        let now = last.time;
+        for s in samples {
+            self.transport.send(&self.handle, t, s.clone());
+        }
+        self.pump(now);
+    }
+
+    fn on_resource_request(
+        &mut self,
+        t: TenantId,
+        req: &ResourceRequest,
+    ) -> TuningConfig {
+        // pump first so the decision sees the freshest labels the
+        // transport let through (degraded tenants short-circuit to
+        // their last known label inside `decide`)
+        self.pump(req.time);
+        let (config, _kind) = self.plane.decide(t, req.app_id, req.time);
+        config.to_config()
+    }
+
+    fn on_app_complete(
+        &mut self,
+        t: TenantId,
+        app_id: u64,
+        duration: f64,
+        now: f64,
+    ) {
+        self.pump(now);
+        self.plane.complete(t, app_id, duration);
+    }
+
+    fn on_grant(&mut self, t: TenantId, app_id: u64, granted: u32) {
+        self.plane.on_grant(t, app_id, granted);
+    }
+
+    fn on_app_fail(&mut self, t: TenantId, app_id: u64, now: f64) {
+        self.pump(now);
+        self.plane.on_app_fail(t, app_id, now);
+    }
+}
+
+/// Everything one run (oracle or faulted) contributes to the score.
+struct RunArtifacts {
+    report: TuningRunReport,
+    jobs_completed: usize,
+    pending_decisions: usize,
+    tail_hit_ratio: f64,
+    transport_report: TransportFaultReport,
+    samples_sent: u64,
+    totals: TenantIngestStats,
+    windows_published: u64,
+    double_counted: u64,
+    seq_violation: u64,
+    degraded_final: usize,
+    degraded_decisions: usize,
+    healed: u64,
+}
+
+fn run_one_transport(
+    spec: &TransportScenarioSpec,
+    with_faults: bool,
+) -> RunArtifacts {
+    let mut plane = TuningPlane::new(plane_config(spec.seed, spec.budget));
+    // Producer and pump share the engine thread here, so Block would
+    // deadlock on a full queue — shed-oldest with a deep queue keeps
+    // the stall windows lossless at this scale while staying safe.
+    let handle = plane.attach_ingest(IngestConfig {
+        queue_cap: 1 << 15,
+        policy: ShedPolicy::ShedOldest,
+        // generous write-off patience: a held sample is released within
+        // `max_hold` sends, well inside 8 pumps — gaps written off are
+        // real losses, not still-in-flight delays
+        gap_patience: 8,
+        reorder_cap: 256,
+        ..Default::default()
+    });
+    // the scenarios opt in to the silence watchdog (off by default —
+    // benign idleness is indistinguishable from a partition without a
+    // deadline tuned to the workload)
+    plane.coord.supervisor.config.silence_after = spec.silence_after;
+
+    let scheds = schedules(
+        spec.seed,
+        spec.tenants,
+        spec.jobs_per_tenant,
+        &spec.classes,
+    );
+    let mut engine = MultiClusterEngine::new(
+        ResourceManager::default_cluster(),
+        sim_config(),
+        spec.seed,
+    );
+    for (t, jobs) in &scheds {
+        plane.ensure_tenant(*t);
+        engine.push_jobs(*t, jobs);
+    }
+    let transport = if with_faults {
+        TransportLayer::new(spec.transport.clone(), spec.seed)
+    } else {
+        TransportLayer::inert()
+    };
+    let mut hub = TransportHub { plane, handle, transport };
+    let sim = engine.run(&mut hub);
+
+    // settle: deliver everything the link still holds, pump it through,
+    // write off the true losses + re-arm demoted tenants, then drain
+    // the shards and expire dangling decisions
+    hub.transport.flush(&hub.handle);
+    hub.plane.pump_ingest_wedged(&[]);
+    hub.plane.reconcile_ingest();
+    hub.plane.drain();
+    let timeout = hub.plane.resilience.decision_timeout;
+    hub.plane.reconcile(sim.makespan + timeout + 1.0);
+    hub.plane.audit_knowledge();
+
+    let jobs_completed =
+        sim.per_tenant.values().map(|l| l.jobs.len()).sum();
+    let pending_decisions = hub.plane.pending_decisions();
+    let tail = tail_hit_ratio(&hub.plane, spec.recovery_window);
+
+    // per-tenant sequence-fate + window accounting (the zero-double-
+    // count observables — all within-run, so they stay sound even
+    // though fault-induced decision divergence changes how many
+    // samples the two runs emit)
+    let window_size =
+        hub.plane.coord.config.monitor.window_size.max(1) as u64;
+    let stats = hub.handle.stats();
+    let mut windows_published = 0u64;
+    let mut double_counted = 0u64;
+    let mut seq_violation = 0u64;
+    for t in hub.plane.tenant_ids() {
+        let st = stats.get(&t).copied().unwrap_or_default();
+        let sent = hub.transport.sent(t);
+        let fates =
+            st.accepted + st.gaps_skipped + st.shed + st.closed_rejects;
+        // every sequence lands in at most one fate bucket; a second
+        // delivery of the same sequence would overshoot `sent`
+        seq_violation += fates.saturating_sub(sent);
+        if spec.lossless() {
+            // nothing can destroy a sequence: exact accounting
+            seq_violation += sent.saturating_sub(fates);
+        }
+        let published = hub
+            .plane
+            .coord
+            .router()
+            .shard(t)
+            .map(|s| s.contexts_published)
+            .unwrap_or(0);
+        windows_published += published;
+        double_counted +=
+            published.saturating_sub(st.accepted / window_size);
+    }
+    let degraded_final = hub.plane.coord.supervisor.impaired().len();
+    let healed = hub.plane.coord.supervisor.healed;
+    let degraded_decisions = hub.plane.degraded_decisions;
+    let totals = hub.handle.totals();
+    let samples_sent = hub.transport.sent_total();
+    let transport_report = hub.transport.report;
+    RunArtifacts {
+        report: hub.plane.report(sim),
+        jobs_completed,
+        pending_decisions,
+        tail_hit_ratio: tail,
+        transport_report,
+        samples_sent,
+        totals,
+        windows_published,
+        double_counted,
+        seq_violation,
+        degraded_final,
+        degraded_decisions,
+        healed,
+    }
+}
+
+/// Run one transport scenario: oracle first (inert link, identical
+/// workload and supervision), then the faulted run, then score.
+pub fn run_transport_scenario(
+    spec: &TransportScenarioSpec,
+) -> TransportOutcome {
+    let oracle = run_one_transport(spec, false);
+    let faulted = run_one_transport(spec, true);
+
+    let per_job = |makespan: f64, jobs: usize| makespan / jobs.max(1) as f64;
+    let oracle_per_job =
+        per_job(oracle.report.makespan(), oracle.jobs_completed).max(1e-9);
+    let faulted_per_job =
+        per_job(faulted.report.makespan(), faulted.jobs_completed);
+    let regret = faulted_per_job / oracle_per_job - 1.0;
+
+    let fr = faulted.transport_report;
+    let ft = faulted.totals;
+    let mut failures = Vec::new();
+    if !(regret <= spec.regret_bound) {
+        failures.push(format!(
+            "regret {regret:.3} exceeds bound {:.3}",
+            spec.regret_bound
+        ));
+    }
+    if faulted.report.livelocked_sessions != 0 {
+        failures.push(format!(
+            "{} sessions livelocked after drain",
+            faulted.report.livelocked_sessions
+        ));
+    }
+    if faulted.pending_decisions != 0 {
+        failures.push(format!(
+            "{} decisions still pending after reconcile",
+            faulted.pending_decisions
+        ));
+    }
+    if ft.resident != 0 {
+        failures.push(format!(
+            "{} samples still queued/parked after reconcile",
+            ft.resident
+        ));
+    }
+    // conservation: every submitted sample is accounted for
+    let conserved =
+        ft.accepted + ft.shed + ft.deduped + ft.closed_rejects + ft.resident;
+    if conserved != ft.submitted {
+        failures.push(format!(
+            "conservation broken: {} accounted vs {} submitted",
+            conserved, ft.submitted
+        ));
+    }
+    // ground-truth delivery accounting: every sent sample is submitted
+    // exactly once unless the link destroyed it, plus one per duplicate
+    let expect_submitted = faulted.samples_sent
+        - fr.samples_dropped as u64
+        - fr.samples_partitioned as u64
+        + fr.samples_duplicated as u64;
+    if ft.submitted != expect_submitted {
+        failures.push(format!(
+            "delivery accounting drift: {} submitted vs {} expected",
+            ft.submitted, expect_submitted
+        ));
+    }
+    // injected ≥ observed: the consumer never reports more faults than
+    // the transport injected
+    if ft.deduped
+        > (fr.samples_duplicated + fr.samples_delayed) as u64
+    {
+        failures.push(format!(
+            "dedup hits {} exceed injected duplicates {} + delays {}",
+            ft.deduped, fr.samples_duplicated, fr.samples_delayed
+        ));
+    }
+    if ft.gaps_skipped
+        > (fr.samples_dropped
+            + fr.samples_partitioned
+            + fr.samples_delayed) as u64
+    {
+        failures.push(format!(
+            "gap write-offs {} exceed injected losses {}",
+            ft.gaps_skipped,
+            fr.samples_dropped + fr.samples_partitioned + fr.samples_delayed
+        ));
+    }
+    if faulted.seq_accounting_violation != 0 {
+        failures.push(format!(
+            "sequence-fate accounting violated for {} sequences",
+            faulted.seq_accounting_violation
+        ));
+    }
+    if faulted.double_counted != 0 {
+        failures.push(format!(
+            "{} windows double-counted",
+            faulted.double_counted
+        ));
+    }
+    if faulted.degraded_final != 0 {
+        failures.push(format!(
+            "{} tenants still degraded after heal + reconcile",
+            faulted.degraded_final
+        ));
+    }
+    if fr.samples_partitioned > 0 && fr.partitions_healed == 0 {
+        failures.push(
+            "partition swallowed samples but never healed".to_string(),
+        );
+    }
+    if spec.recovery_floor > 0.0
+        && faulted.tail_hit_ratio + 1e-9
+            < spec.recovery_floor * oracle.tail_hit_ratio
+    {
+        failures.push(format!(
+            "tail cache-hit ratio {:.3} below {:.2}x oracle ({:.3})",
+            faulted.tail_hit_ratio,
+            spec.recovery_floor,
+            oracle.tail_hit_ratio
+        ));
+    }
+
+    TransportOutcome {
+        name: spec.name.to_string(),
+        seed: spec.seed,
+        oracle_makespan: oracle.report.makespan(),
+        faulted_makespan: faulted.report.makespan(),
+        oracle_jobs: oracle.jobs_completed,
+        faulted_jobs: faulted.jobs_completed,
+        regret,
+        regret_bound: spec.regret_bound,
+        livelocked_sessions: faulted.report.livelocked_sessions,
+        pending_decisions: faulted.pending_decisions,
+        samples_sent: faulted.samples_sent,
+        samples_dropped: fr.samples_dropped,
+        samples_partitioned: fr.samples_partitioned,
+        samples_delayed: fr.samples_delayed,
+        samples_duplicated: fr.samples_duplicated,
+        pump_stalls: fr.pump_stalls,
+        lane_wedges: fr.lane_wedges,
+        partitions_healed: fr.partitions_healed,
+        submitted: ft.submitted,
+        accepted: ft.accepted,
+        shed: ft.shed,
+        deduped: ft.deduped,
+        gaps_skipped: ft.gaps_skipped,
+        closed_rejects: ft.closed_rejects,
+        resident_after: ft.resident,
+        oracle_windows: oracle.windows_published,
+        faulted_windows: faulted.windows_published,
+        double_counted_windows: faulted.double_counted,
+        seq_accounting_violation: faulted.seq_accounting_violation,
+        delivery_retries: faulted.report.multi.delivery_retries,
+        degraded_events: faulted.report.multi.degraded_events,
+        degraded_decisions: faulted.degraded_decisions,
+        healed: faulted.healed,
+        degraded_final: faulted.degraded_final,
+        oracle_tail_hit_ratio: oracle.tail_hit_ratio,
+        faulted_tail_hit_ratio: faulted.tail_hit_ratio,
+        recovery_floor: spec.recovery_floor,
+        oracle_known_fraction: oracle.report.multi.known_fraction(),
+        faulted_known_fraction: faulted.report.multi.known_fraction(),
+        pass: failures.is_empty(),
+        failures,
+    }
+}
+
+/// The standard transport-chaos sweep — one scenario per transport
+/// fault family in the taxonomy (docs/ARCHITECTURE.md "Chaos lab").
+pub fn transport_scenarios(smoke: bool) -> Vec<TransportScenarioSpec> {
+    use crate::stream::fault::{
+        Partition, PumpStall, SampleDelay, SampleDup, SampleLoss,
+        WedgedLane,
+    };
+    let mut scenarios = Vec::new();
+
+    // Full partition with a heal time: tenant 0 goes silent mid-run,
+    // the watchdog demotes it (degraded mode: last-known label, probes
+    // suspended), traffic returns, and the label timeline must
+    // converge back — the only scenario with a real recovery floor.
+    let mut s = TransportScenarioSpec::base("partition_heal", 707, smoke);
+    s.transport.partitions = vec![Partition {
+        tenant: TenantId(0),
+        from: 200.0,
+        until: 1000.0,
+    }];
+    s.recovery_floor = 0.3;
+    scenarios.push(s);
+
+    // Lossy + laggy link: independent drops leave sequence gaps the
+    // reorder buffer must write off; delays genuinely reorder.
+    let mut s = TransportScenarioSpec::base("lossy_transport", 808, smoke);
+    s.transport.loss = Some(SampleLoss { prob: 0.15 });
+    s.transport.delay = Some(SampleDelay { prob: 0.25, max_hold: 3 });
+    scenarios.push(s);
+
+    // At-least-once storm: half of everything arrives twice, a fifth
+    // arrives late and out of order — and the window accounting must
+    // stay *exactly* once (lossless plan → exact sequence fates).
+    let mut s = TransportScenarioSpec::base("duplicate_storm", 909, smoke);
+    s.transport.duplication = Some(SampleDup { prob: 0.5 });
+    s.transport.delay = Some(SampleDelay { prob: 0.2, max_hold: 2 });
+    scenarios.push(s);
+
+    // Consumer-side faults: the whole pump stalls for a window (queues
+    // absorb the burst), then one tenant's lane wedges for a long
+    // stretch (watchdog → retry backoff → degraded → heal).
+    let mut s = TransportScenarioSpec::base("stalled_consumer", 1010, smoke);
+    s.transport.stalls = vec![PumpStall { from: 300.0, until: 900.0 }];
+    s.transport.wedges = vec![WedgedLane {
+        tenant: TenantId(1),
+        from: 600.0,
+        until: 1600.0,
+    }];
+    scenarios.push(s);
+
+    for s in &mut scenarios {
+        s.apply_env();
+    }
+    scenarios
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::fault::{Partition, SampleDelay, SampleDup};
+
+    /// Tiny spec so unit tests stay fast; experiments::chaos runs the
+    /// standard sweep.
+    fn tiny(name: &'static str, seed: u64) -> TransportScenarioSpec {
+        let mut s = TransportScenarioSpec::base(name, seed, true);
+        s.tenants = 2;
+        s.jobs_per_tenant = 5;
+        s.budget = 8;
+        s
+    }
+
+    #[test]
+    fn oracle_equals_inert_transport_run() {
+        // no faults: the "faulted" run IS the oracle (the transport
+        // layer draws zero RNG), so regret is ~0 and every transport
+        // guarantee holds trivially
+        let spec = tiny("inert", 41);
+        let o = run_transport_scenario(&spec);
+        assert!(o.pass, "failures: {:?}", o.failures);
+        assert!(o.regret.abs() < 1e-9, "regret {}", o.regret);
+        assert_eq!(o.oracle_makespan, o.faulted_makespan);
+        assert_eq!(o.oracle_windows, o.faulted_windows);
+        assert_eq!(o.samples_dropped + o.samples_duplicated, 0);
+        assert_eq!(o.deduped + o.gaps_skipped, 0);
+        assert_eq!(o.double_counted_windows, 0);
+        assert_eq!(o.resident_after, 0);
+    }
+
+    #[test]
+    fn duplicate_storm_never_double_counts() {
+        let mut spec = tiny("mini_dup_storm", 42);
+        spec.transport.duplication = Some(SampleDup { prob: 0.5 });
+        spec.transport.delay =
+            Some(SampleDelay { prob: 0.2, max_hold: 2 });
+        let o = run_transport_scenario(&spec);
+        // the link really duplicated traffic...
+        assert!(o.samples_duplicated > 0, "{o:?}");
+        assert!(o.deduped > 0, "dedup never fired: {o:?}");
+        // ...and not one duplicate reached the label timeline
+        assert_eq!(o.double_counted_windows, 0, "{o:?}");
+        assert_eq!(o.seq_accounting_violation, 0, "{o:?}");
+        assert!(o.pass, "failures: {:?}", o.failures);
+    }
+
+    #[test]
+    fn partitioned_tenant_degrades_heals_and_reconverges() {
+        let mut spec = tiny("mini_partition", 43);
+        // early, short window so even the tiny run extends well past
+        // the heal time
+        spec.transport.partitions = vec![Partition {
+            tenant: TenantId(0),
+            from: 30.0,
+            until: 120.0,
+        }];
+        spec.silence_after = 40.0;
+        let o = run_transport_scenario(&spec);
+        assert!(o.samples_partitioned > 0, "{o:?}");
+        // whatever the watchdog did mid-run, nobody stays degraded and
+        // nothing stays parked after heal + reconcile
+        assert_eq!(o.degraded_final, 0, "{o:?}");
+        assert_eq!(o.resident_after, 0, "{o:?}");
+        assert!(o.pass, "failures: {:?}", o.failures);
+    }
+
+    #[test]
+    fn transport_outcomes_are_deterministic() {
+        let mut spec = tiny("mini_det", 44);
+        spec.transport.duplication = Some(SampleDup { prob: 0.3 });
+        let a = run_transport_scenario(&spec);
+        let b = run_transport_scenario(&spec);
+        assert_eq!(a.to_json().encode(), b.to_json().encode());
+    }
+
+    #[test]
+    fn sweep_covers_the_transport_taxonomy() {
+        let sweep = transport_scenarios(true);
+        let names: Vec<&str> = sweep.iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "partition_heal",
+                "lossy_transport",
+                "duplicate_storm",
+                "stalled_consumer"
+            ]
+        );
+        for s in &sweep {
+            assert!(!s.transport.is_inert(), "{} injects nothing", s.name);
+            assert!(s.regret_bound > 0.0);
+            assert!(s.silence_after.is_finite());
+        }
+        let full = transport_scenarios(false);
+        assert!(sweep[0].jobs_per_tenant < full[0].jobs_per_tenant);
+    }
+}

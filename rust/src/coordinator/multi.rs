@@ -39,7 +39,8 @@ use crate::online::classifier::{GatedForestClassifier, WindowClassifier};
 use crate::online::{ForestWindowClassifier, PluginStats, UNKNOWN};
 use crate::stream::{
     interleave_round_robin, IngestConfig, IngestFrontEnd, IngestHandle,
-    PumpStats, RouterConfig, StreamRouter, TenantId, TenantSample,
+    IngestSupervisor, PumpStats, RouterConfig, StreamRouter,
+    SupervisorConfig, TenantHealth, TenantId, TenantSample,
 };
 use crate::util::rng::Rng;
 use crate::workloadgen::{Sample, Trace};
@@ -77,6 +78,21 @@ pub struct MultiTenantReport {
     pub windows_dropped: u64,
     /// Knowledge-plane entries quarantined by the integrity audit.
     pub db_quarantined: usize,
+    /// Per tenant per known label: mean L2 residual between the
+    /// tenant's observed window means and the label's stored
+    /// characterization. The drift-vs-new-tenant discriminator: a
+    /// *drifting* tenant keeps matching a label while its residual
+    /// climbs; a *new* tenant publishes UNKNOWN (no residual at all) —
+    /// so `CadencePolicy::Adaptive` consumers can tell the two apart
+    /// instead of treating all UNKNOWN pressure the same.
+    pub tenant_residuals: Vec<(TenantId, u32, f64)>,
+    /// Ingest-path health per supervised tenant (empty without an
+    /// attached front-end, or before the first supervised pump).
+    pub tenant_health: Vec<(TenantId, TenantHealth)>,
+    /// No-progress drains the ingest supervisor retried with backoff.
+    pub delivery_retries: u64,
+    /// Healthy→Degraded transitions the supervisor recorded.
+    pub degraded_events: u64,
 }
 
 impl MultiTenantReport {
@@ -157,6 +173,12 @@ pub struct MultiTenantCoordinator {
     /// [`MultiTenantCoordinator::attach_ingest`]). `None` means
     /// producers call [`MultiTenantCoordinator::ingest`] directly.
     ingest: Option<IngestFrontEnd>,
+    /// Ingest-path watchdogs (only fed by the supervised pump paths, so
+    /// coordinators without an attached front-end never consult it).
+    pub supervisor: IngestSupervisor,
+    /// Per tenant per label: (summed L2 residual, window count) of
+    /// observed window means against the stored characterization.
+    residuals: BTreeMap<TenantId, BTreeMap<u32, (f64, u64)>>,
 }
 
 impl MultiTenantCoordinator {
@@ -195,6 +217,8 @@ impl MultiTenantCoordinator {
             offline_runs: 0,
             db_quarantined: 0,
             ingest: None,
+            supervisor: IngestSupervisor::new(SupervisorConfig::default()),
+            residuals: BTreeMap::new(),
         }
     }
 
@@ -225,16 +249,69 @@ impl MultiTenantCoordinator {
     /// Returns the pump stats plus the tick's observed-window count;
     /// `None` if no front-end is attached.
     pub fn pump_ingest(&mut self) -> Option<(PumpStats, usize)> {
+        self.pump_ingest_supervised(&[])
+    }
+
+    /// [`pump_ingest`](MultiTenantCoordinator::pump_ingest) with the
+    /// supervision layer in the loop: lanes in `wedged` (a consumer
+    /// fault — see `stream::fault::WedgedLane`) and lanes the
+    /// supervisor's retry backoff parked are skipped this pump, and
+    /// every lane's outcome is scored by the per-tenant watchdogs.
+    /// With no wedged lanes and a healthy run this is behaviour-
+    /// identical to the plain pump (nothing is skipped, every lane
+    /// scores healthy).
+    pub fn pump_ingest_supervised(
+        &mut self,
+        wedged: &[TenantId],
+    ) -> Option<(PumpStats, usize)> {
         let mut fe = self.ingest.take()?;
         // shards must exist (with the current shared model installed)
         // before their first windows land — same contract as ingest()
         for t in fe.tenant_ids() {
             self.ensure_tenant(t);
         }
-        let stats = fe.drain_into(&mut self.router);
+        let mut skip: Vec<TenantId> = wedged.to_vec();
+        for t in self.supervisor.backed_off() {
+            if !skip.contains(&t) {
+                skip.push(t);
+            }
+        }
+        let (stats, lanes) = fe.drain_gated(&mut self.router, &skip);
+        self.supervisor.observe(&lanes);
         self.ingest = Some(fe);
         let n = self.tick();
         Some((stats, n))
+    }
+
+    /// Transport reconcile: clear every retry backoff, drain the
+    /// queues, write off all outstanding sequence gaps (releasing
+    /// parked samples), tick, and re-arm every tenant the supervisor
+    /// had demoted. After this no lane is wedged and no tenant stays
+    /// degraded — the heal-time settlement the chaos scenarios assert.
+    pub fn reconcile_ingest(&mut self) -> Option<(PumpStats, usize)> {
+        let mut fe = self.ingest.take()?;
+        for t in fe.tenant_ids() {
+            self.ensure_tenant(t);
+        }
+        self.supervisor.reset_backoffs();
+        let stats = fe.flush_transport(&mut self.router);
+        self.ingest = Some(fe);
+        let n = self.tick();
+        self.supervisor.settle();
+        Some((stats, n))
+    }
+
+    /// Is `t`'s ingest path impaired (Degraded or Healing)? Always
+    /// false without an attached front-end — direct ingest has no
+    /// transport to supervise.
+    pub fn ingest_impaired(&self, t: TenantId) -> bool {
+        self.ingest.is_some() && self.supervisor.is_impaired(t)
+    }
+
+    /// Most recent known label tenant `t` published (the stale-but-safe
+    /// label served while the tenant's transport is impaired).
+    pub fn last_known_label(&self, t: TenantId) -> Option<u32> {
+        self.router.shard(t).and_then(|s| s.last_known_label())
     }
 
     pub fn router(&self) -> &StreamRouter {
@@ -305,6 +382,7 @@ impl MultiTenantCoordinator {
     pub fn tick(&mut self) -> usize {
         let n = self.router.tick();
         for (t, ws) in self.router.take_observed() {
+            self.note_residuals(t, &ws);
             self.backlogs.entry(t).or_default().extend(ws);
         }
         self.update_cadence_counters();
@@ -315,6 +393,55 @@ impl MultiTenantCoordinator {
             self.run_offline();
         }
         n
+    }
+
+    /// Accumulate per-label residual distances for one tenant's freshly
+    /// observed windows: how far each window's feature mean sits from
+    /// the stored characterization of the label the shard assigned it.
+    /// Contexts and observed windows are published 1:1 in observe
+    /// order, so the shard's context-log tail aligns with the window
+    /// batch (truncated bursts just lose their oldest pairs).
+    fn note_residuals(&mut self, t: TenantId, ws: &[ObservationWindow]) {
+        let Some(shard) = self.router.shard(t) else { return };
+        let ctxs = &shard.contexts;
+        let k = ws.len().min(ctxs.len());
+        if k == 0 {
+            return;
+        }
+        let db = self.db.read().unwrap();
+        let pairs =
+            ctxs[ctxs.len() - k..].iter().zip(ws[ws.len() - k..].iter());
+        let mut hits: Vec<(u32, f64)> = Vec::new();
+        for (c, w) in pairs {
+            if !c.is_known() {
+                continue;
+            }
+            let Some(e) = db.get(c.current_label) else { continue };
+            // compare over the window-mean features (a characterization
+            // over analytic windows carries extra width; zip stops at
+            // the shared prefix, which is exactly the means)
+            let d = w
+                .mean
+                .iter()
+                .zip(e.characterization.mean_vector().iter())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            if d.is_finite() {
+                hits.push((c.current_label, d));
+            }
+        }
+        drop(db);
+        for (label, d) in hits {
+            let slot = self
+                .residuals
+                .entry(t)
+                .or_default()
+                .entry(label)
+                .or_insert((0.0, 0));
+            slot.0 += d;
+            slot.1 += 1;
+        }
     }
 
     /// Fold newly published contexts into the per-tenant UNKNOWN
@@ -497,6 +624,15 @@ impl MultiTenantCoordinator {
                 (t, known, log.len())
             })
             .collect();
+        let tenant_residuals = self
+            .residuals
+            .iter()
+            .flat_map(|(t, by_label)| {
+                by_label.iter().map(|(label, (sum, n))| {
+                    (*t, *label, sum / (*n).max(1) as f64)
+                })
+            })
+            .collect();
         MultiTenantReport {
             windows_observed,
             offline_runs: self.offline_runs,
@@ -505,6 +641,10 @@ impl MultiTenantCoordinator {
             tenant_stats: Vec::new(),
             windows_dropped: self.router.windows_dropped(),
             db_quarantined: self.db_quarantined,
+            tenant_residuals,
+            tenant_health: self.supervisor.healths(),
+            delivery_retries: self.supervisor.delivery_retries,
+            degraded_events: self.supervisor.degraded_events,
         }
     }
 }

@@ -7,7 +7,8 @@
 
 use crate::chaoslab::{
     persistence_scenarios, run_persistence_scenario, run_scenario,
-    standard_scenarios, RecoveryOutcome, ScenarioOutcome,
+    run_transport_scenario, standard_scenarios, transport_scenarios,
+    RecoveryOutcome, ScenarioOutcome, TransportOutcome,
 };
 
 /// Run the full standard sweep (smoke scale or full scale).
@@ -27,6 +28,19 @@ pub fn run_persistence(smoke: bool) -> Vec<RecoveryOutcome> {
     persistence_scenarios(smoke)
         .iter()
         .map(run_persistence_scenario)
+        .collect()
+}
+
+/// Run the transport-chaos sweep (`partition_heal`, `lossy_transport`,
+/// `duplicate_storm`, `stalled_consumer`) — the ingest path under a
+/// faulty link, scored against a fault-free oracle.
+/// `benches/transport_chaos.rs` prints the scoreboard and writes
+/// `TRANSPORT_outcomes.json`; under `KERMIT_SMOKE=1` it asserts every
+/// scenario passes (the blocking `rust-transport-chaos` job).
+pub fn run_transport(smoke: bool) -> Vec<TransportOutcome> {
+    transport_scenarios(smoke)
+        .iter()
+        .map(run_transport_scenario)
         .collect()
 }
 
@@ -55,6 +69,26 @@ mod tests {
         assert!(a.pass, "failures: {:?}", a.failures);
         assert_eq!(a.livelocked_sessions, 0);
         assert_eq!(a.pending_decisions, 0);
+    }
+
+    #[test]
+    fn lossy_transport_scenario_holds_its_guarantees() {
+        let spec = transport_scenarios(true)
+            .into_iter()
+            .find(|s| s.name == "lossy_transport")
+            .unwrap();
+        let a = run_transport_scenario(&spec);
+        // the link really dropped traffic, gaps were written off, and
+        // every guarantee held anyway
+        assert!(a.samples_dropped > 0, "{a:?}");
+        assert!(a.gaps_skipped > 0, "{a:?}");
+        assert!(a.pass, "failures: {:?}", a.failures);
+        assert_eq!(a.double_counted_windows, 0);
+        assert_eq!(a.resident_after, 0);
+        assert_eq!(a.degraded_final, 0);
+        // same seed → byte-identical snapshot (the CI artifact contract)
+        let b = run_transport_scenario(&spec);
+        assert_eq!(a.to_json().encode(), b.to_json().encode());
     }
 
     #[test]

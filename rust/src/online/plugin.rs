@@ -280,6 +280,21 @@ impl KermitPlugin {
         self.advance_session(label)
     }
 
+    /// Decision path for a tenant whose *ingest transport* is impaired
+    /// (partitioned / wedged — see `stream::supervisor`): serve the
+    /// stale-but-safe choice for the last-known label without opening
+    /// sessions, advancing probes, or touching backoff state. Re-arming
+    /// is the caller's job once the supervisor scores the tenant
+    /// healthy again.
+    pub fn degraded_choice(&mut self, label: u32) -> (ConfigIndex, ChoiceKind) {
+        self.stats.requests += 1;
+        if label == UNKNOWN {
+            self.stats.defaults += 1;
+            return (self.default_config, ChoiceKind::Default);
+        }
+        self.safe_fallback(label)
+    }
+
     /// The degraded-mode choice: a stored, trusted optimum if one
     /// exists (e.g. a peer converged while this label is backing off),
     /// else the vendor default.

@@ -1,0 +1,487 @@
+//! Deterministic transport fault injection for the ingest path.
+//!
+//! `simcluster::fault` chaos-tests the *executor* side of the loop;
+//! this module chaos-tests the *transport* between tenant producers and
+//! the tuner's ingest front-end: samples can be dropped, delayed and
+//! reordered, duplicated, or cut off entirely by a per-tenant partition
+//! with a heal time — and the consumer itself can misbehave (a stalled
+//! pump, a wedged lane worker). The chaos lab
+//! (`crate::chaoslab::transport`) drives runs through a
+//! [`TransportFaultPlan`]; the supervision layer in
+//! `stream::ingest`/`stream::supervisor` is what has to absorb it.
+//!
+//! The contract mirrors [`crate::simcluster::fault::FaultLayer`]
+//! exactly: an inert plan (the default) draws **zero** random numbers
+//! and perturbs nothing, so fault-free runs through a
+//! [`TransportLayer`] stay bit-identical to submitting straight into
+//! the [`IngestHandle`] — pinned by `inert_layer_is_neutral_and_drawless`.
+
+use super::ingest::{IngestHandle, SubmitOutcome};
+use super::tenant::TenantId;
+use crate::util::rng::Rng;
+use crate::workloadgen::Sample;
+use std::collections::BTreeMap;
+
+/// Lossy link: each sample is independently dropped in transit with
+/// probability `prob`. Dropped samples leave a sequence gap the
+/// consumer-side reorder buffer must eventually write off.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleLoss {
+    pub prob: f64,
+}
+
+/// Laggy link: each sample is independently held back with probability
+/// `prob` and released after between 1 and `max_hold` subsequent sends
+/// of the same tenant — genuine reordering, not just latency.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleDelay {
+    pub prob: f64,
+    /// Max sends of the same tenant a held sample can be overtaken by
+    /// (clamped to ≥ 1).
+    pub max_hold: usize,
+}
+
+/// Duplicating link: each sample is independently delivered twice (same
+/// sequence number) with probability `prob` — at-least-once transport,
+/// which the dedup buffer must collapse back to exactly-once windows.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleDup {
+    pub prob: f64,
+}
+
+/// Full partition: every sample of `tenant` with
+/// `from <= time < until` is lost in transit. Heals by itself at
+/// `until` — the supervision layer must notice the silence (degraded
+/// mode) and re-arm when traffic returns.
+#[derive(Debug, Clone, Copy)]
+pub struct Partition {
+    pub tenant: TenantId,
+    pub from: f64,
+    pub until: f64,
+}
+
+/// Consumer-side burst stall: the whole pump is down for
+/// `from <= now < until` — no queue drains at all, so backpressure
+/// (and the shed policy) is what protects the producers.
+#[derive(Debug, Clone, Copy)]
+pub struct PumpStall {
+    pub from: f64,
+    pub until: f64,
+}
+
+/// Consumer-side wedged lane worker: `tenant`'s lane does not drain
+/// for `from <= now < until` while every other lane keeps flowing —
+/// the per-tenant watchdog + retry/backoff case.
+#[derive(Debug, Clone, Copy)]
+pub struct WedgedLane {
+    pub tenant: TenantId,
+    pub from: f64,
+    pub until: f64,
+}
+
+/// A scripted description of what goes wrong on the ingest transport.
+/// `Default` is completely inert: no faults, no RNG draws, no behavior
+/// change.
+#[derive(Debug, Clone, Default)]
+pub struct TransportFaultPlan {
+    pub loss: Option<SampleLoss>,
+    pub delay: Option<SampleDelay>,
+    pub duplication: Option<SampleDup>,
+    pub partitions: Vec<Partition>,
+    pub stalls: Vec<PumpStall>,
+    pub wedges: Vec<WedgedLane>,
+}
+
+impl TransportFaultPlan {
+    pub fn is_inert(&self) -> bool {
+        self.loss.is_none()
+            && self.delay.is_none()
+            && self.duplication.is_none()
+            && self.partitions.is_empty()
+            && self.stalls.is_empty()
+            && self.wedges.is_empty()
+    }
+}
+
+/// What the transport layer actually did — the ground truth the chaos
+/// scoreboard reconciles against the consumer-side counters
+/// (`TenantIngestStats::deduped`, `gaps_skipped`): injected ≥ observed,
+/// always.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransportFaultReport {
+    /// Samples dropped by the lossy link.
+    pub samples_dropped: usize,
+    /// Samples swallowed by an active partition.
+    pub samples_partitioned: usize,
+    /// Samples held back (and later released) by the laggy link.
+    pub samples_delayed: usize,
+    /// Extra deliveries injected by the duplicating link.
+    pub samples_duplicated: usize,
+    /// Times the pump gate reported the consumer stalled.
+    pub pump_stalls: usize,
+    /// Times a lane gate reported a tenant's lane wedged.
+    pub lane_wedges: usize,
+    /// Partitions that swallowed at least one sample and then healed
+    /// (traffic seen at/after `until`).
+    pub partitions_healed: usize,
+}
+
+/// Runtime state of a [`TransportFaultPlan`] between producers and an
+/// [`IngestHandle`]: the seeded fault RNG, per-tenant sequence
+/// counters (assigned *before* the faults, so drops leave gaps,
+/// duplicates repeat a number, and delays scramble the order — exactly
+/// what the consumer-side supervision has to untangle), and the
+/// held-back sample buffer.
+#[derive(Debug, Clone)]
+pub struct TransportLayer {
+    plan: TransportFaultPlan,
+    rng: Rng,
+    /// Next sequence number per tenant (pre-fault).
+    seqs: BTreeMap<TenantId, u64>,
+    /// Sends processed per tenant (the delay-release clock).
+    sends: BTreeMap<TenantId, u64>,
+    /// Held-back samples: (release at send count, seq, sample), kept in
+    /// release order per tenant.
+    held: BTreeMap<TenantId, Vec<(u64, u64, Sample)>>,
+    /// Which partitions swallowed ≥ 1 sample / already healed.
+    partition_hit: Vec<bool>,
+    partition_done: Vec<bool>,
+    pub report: TransportFaultReport,
+}
+
+impl TransportLayer {
+    /// An inert layer: injects nothing, draws nothing — submitting
+    /// through it is bit-identical to submitting directly.
+    pub fn inert() -> TransportLayer {
+        TransportLayer::new(TransportFaultPlan::default(), 0)
+    }
+
+    pub fn new(plan: TransportFaultPlan, seed: u64) -> TransportLayer {
+        let n = plan.partitions.len();
+        TransportLayer {
+            plan,
+            rng: Rng::new(seed ^ 0xBAD1_114C_FA17_0001),
+            seqs: BTreeMap::new(),
+            sends: BTreeMap::new(),
+            held: BTreeMap::new(),
+            partition_hit: vec![false; n],
+            partition_done: vec![false; n],
+            report: TransportFaultReport::default(),
+        }
+    }
+
+    pub fn is_inert(&self) -> bool {
+        self.plan.is_inert()
+    }
+
+    /// Sequence numbers assigned to tenant `t` so far — the
+    /// producer-side ground truth of how many samples were *sent*,
+    /// whatever the faults did to them afterwards.
+    pub fn sent(&self, t: TenantId) -> u64 {
+        self.seqs.get(&t).copied().unwrap_or(0)
+    }
+
+    /// Total samples sent across all tenants.
+    pub fn sent_total(&self) -> u64 {
+        self.seqs.values().sum()
+    }
+
+    /// Send one sample for tenant `t` through the (possibly faulty)
+    /// transport into `handle`. Sequence numbers are assigned here,
+    /// before any fault fires, so whatever arrives carries the
+    /// producer-side ordering truth the dedup/reorder buffer needs.
+    pub fn send(
+        &mut self,
+        handle: &IngestHandle,
+        t: TenantId,
+        s: Sample,
+    ) -> Option<SubmitOutcome> {
+        let seq = {
+            let c = self.seqs.entry(t).or_insert(0);
+            let seq = *c;
+            *c += 1;
+            seq
+        };
+        let send_idx = {
+            let c = self.sends.entry(t).or_insert(0);
+            *c += 1;
+            *c
+        };
+        let mut outcome = None;
+        if let Some(p) = self.partition_index(t, s.time) {
+            // lost in transit: the consumer sees only silence
+            self.partition_hit[p] = true;
+            self.report.samples_partitioned += 1;
+        } else if self
+            .plan
+            .loss
+            .is_some_and(|f| self.rng.chance(f.prob))
+        {
+            self.report.samples_dropped += 1;
+        } else {
+            let dup = self
+                .plan
+                .duplication
+                .is_some_and(|f| self.rng.chance(f.prob));
+            let delayed = match self.plan.delay {
+                Some(f) if self.rng.chance(f.prob) => {
+                    let hold =
+                        1 + self.rng.below(f.max_hold.max(1) as u64);
+                    self.held.entry(t).or_default().push((
+                        send_idx + hold,
+                        seq,
+                        s.clone(),
+                    ));
+                    self.report.samples_delayed += 1;
+                    true
+                }
+                _ => false,
+            };
+            if !delayed {
+                outcome = Some(handle.submit_sequenced(t, seq, s.clone()));
+            }
+            if dup {
+                // the duplicate travels the fast path even when the
+                // original was held back — duplication + reorder at once
+                self.report.samples_duplicated += 1;
+                let o = handle.submit_sequenced(t, seq, s);
+                if outcome.is_none() {
+                    outcome = Some(o);
+                }
+            }
+        }
+        self.release_due(handle, t, send_idx);
+        outcome
+    }
+
+    /// Deliver every still-held sample (end of run / link flush), in
+    /// (tenant, seq) order.
+    pub fn flush(&mut self, handle: &IngestHandle) {
+        let held = std::mem::take(&mut self.held);
+        for (t, mut v) in held {
+            v.sort_by_key(|(_, seq, _)| *seq);
+            for (_, seq, s) in v {
+                handle.submit_sequenced(t, seq, s);
+            }
+        }
+    }
+
+    /// Is the consumer pump down at sim time `now`? (No RNG; counts
+    /// the stall events it reports.)
+    pub fn pump_stalled(&mut self, now: f64) -> bool {
+        let stalled = self
+            .plan
+            .stalls
+            .iter()
+            .any(|w| now >= w.from && now < w.until);
+        if stalled {
+            self.report.pump_stalls += 1;
+        }
+        stalled
+    }
+
+    /// Tenants whose lane worker is wedged at sim time `now`.
+    pub fn wedged_tenants(&mut self, now: f64) -> Vec<TenantId> {
+        let mut out: Vec<TenantId> = self
+            .plan
+            .wedges
+            .iter()
+            .filter(|w| now >= w.from && now < w.until)
+            .map(|w| w.tenant)
+            .collect();
+        out.sort_by_key(|t| t.0);
+        out.dedup();
+        self.report.lane_wedges += out.len();
+        out
+    }
+
+    /// Index of the partition swallowing tenant `t`'s sample at `time`,
+    /// if any. Also scores heals: a partition that swallowed traffic
+    /// counts healed the first time the tenant sends at/after `until`.
+    fn partition_index(&mut self, t: TenantId, time: f64) -> Option<usize> {
+        let mut hit = None;
+        for (i, p) in self.plan.partitions.iter().enumerate() {
+            if p.tenant != t {
+                continue;
+            }
+            if time >= p.from && time < p.until {
+                hit = Some(i);
+            } else if time >= p.until
+                && self.partition_hit[i]
+                && !self.partition_done[i]
+            {
+                self.partition_done[i] = true;
+                self.report.partitions_healed += 1;
+            }
+        }
+        hit
+    }
+
+    /// Deliver held samples whose release clock has come.
+    fn release_due(
+        &mut self,
+        handle: &IngestHandle,
+        t: TenantId,
+        send_idx: u64,
+    ) {
+        let Some(v) = self.held.get_mut(&t) else { return };
+        let mut due: Vec<(u64, Sample)> = Vec::new();
+        v.retain(|(release, seq, s)| {
+            if *release <= send_idx {
+                due.push((*seq, s.clone()));
+                false
+            } else {
+                true
+            }
+        });
+        if v.is_empty() {
+            self.held.remove(&t);
+        }
+        due.sort_by_key(|(seq, _)| *seq);
+        for (seq, s) in due {
+            handle.submit_sequenced(t, seq, s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::MonitorConfig;
+    use crate::stream::ingest::{IngestConfig, IngestFrontEnd, ShedPolicy};
+    use crate::workloadgen::TruthTag;
+
+    fn mk(t: f64) -> Sample {
+        Sample {
+            time: t,
+            features: [1.0; crate::features::NUM_FEATURES],
+            truth: TruthTag::Steady(0),
+        }
+    }
+
+    fn front_end() -> IngestFrontEnd {
+        IngestFrontEnd::new(IngestConfig {
+            queue_cap: 1 << 14,
+            policy: ShedPolicy::ShedOldest,
+            monitor: MonitorConfig { window_size: 10 },
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn inert_layer_is_neutral_and_drawless() {
+        let fe = front_end();
+        let h = fe.handle();
+        let mut layer = TransportLayer::inert();
+        let before = layer.rng.clone();
+        for i in 0..20 {
+            let out = layer.send(&h, TenantId(0), mk(i as f64));
+            assert_eq!(out, Some(SubmitOutcome::Accepted));
+        }
+        assert!(!layer.pump_stalled(5.0));
+        assert!(layer.wedged_tenants(5.0).is_empty());
+        layer.flush(&h);
+        // no RNG state advanced: fault-free runs stay bit-identical
+        let mut a = before;
+        assert_eq!(a.next_u64(), layer.rng.clone().next_u64());
+        // every sample arrived, in order, exactly once
+        let st = h.tenant_stats(TenantId(0)).unwrap();
+        assert_eq!(st.submitted, 20);
+        assert_eq!(st.resident, 20);
+        let r = layer.report;
+        assert_eq!(r.samples_dropped + r.samples_duplicated, 0);
+        assert_eq!(r.samples_delayed + r.samples_partitioned, 0);
+    }
+
+    #[test]
+    fn fault_draws_are_seed_deterministic() {
+        let plan = TransportFaultPlan {
+            loss: Some(SampleLoss { prob: 0.3 }),
+            delay: Some(SampleDelay { prob: 0.3, max_hold: 3 }),
+            duplication: Some(SampleDup { prob: 0.3 }),
+            ..Default::default()
+        };
+        let run = |seed: u64| {
+            let fe = front_end();
+            let h = fe.handle();
+            let mut layer = TransportLayer::new(plan.clone(), seed);
+            for i in 0..60 {
+                layer.send(&h, TenantId(1), mk(i as f64));
+            }
+            layer.flush(&h);
+            let st = h.tenant_stats(TenantId(1)).unwrap();
+            (st.submitted, layer.report.samples_dropped)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8), "different seeds gave identical faults");
+    }
+
+    #[test]
+    fn partition_swallows_window_and_scores_heal() {
+        let plan = TransportFaultPlan {
+            partitions: vec![Partition {
+                tenant: TenantId(0),
+                from: 10.0,
+                until: 20.0,
+            }],
+            ..Default::default()
+        };
+        let fe = front_end();
+        let h = fe.handle();
+        let mut layer = TransportLayer::new(plan, 1);
+        let before = layer.rng.clone();
+        for i in 0..30 {
+            layer.send(&h, TenantId(0), mk(i as f64));
+            layer.send(&h, TenantId(1), mk(i as f64));
+        }
+        // partitions are time-scripted: still zero RNG draws
+        let mut a = before;
+        assert_eq!(a.next_u64(), layer.rng.clone().next_u64());
+        assert_eq!(layer.report.samples_partitioned, 10);
+        assert_eq!(layer.report.partitions_healed, 1);
+        let st0 = h.tenant_stats(TenantId(0)).unwrap();
+        let st1 = h.tenant_stats(TenantId(1)).unwrap();
+        assert_eq!(st0.submitted, 20, "10 swallowed in transit");
+        assert_eq!(st1.submitted, 30, "other tenant untouched");
+    }
+
+    #[test]
+    fn consumer_gates_follow_their_windows() {
+        let plan = TransportFaultPlan {
+            stalls: vec![PumpStall { from: 5.0, until: 10.0 }],
+            wedges: vec![WedgedLane {
+                tenant: TenantId(2),
+                from: 8.0,
+                until: 12.0,
+            }],
+            ..Default::default()
+        };
+        let mut layer = TransportLayer::new(plan, 1);
+        assert!(!layer.pump_stalled(4.0));
+        assert!(layer.pump_stalled(5.0));
+        assert!(!layer.pump_stalled(10.0));
+        assert!(layer.wedged_tenants(7.0).is_empty());
+        assert_eq!(layer.wedged_tenants(9.0), vec![TenantId(2)]);
+        assert!(layer.wedged_tenants(12.0).is_empty());
+        assert_eq!(layer.report.pump_stalls, 1);
+        assert_eq!(layer.report.lane_wedges, 1);
+    }
+
+    #[test]
+    fn delayed_samples_arrive_reordered_then_flush_completes() {
+        let plan = TransportFaultPlan {
+            delay: Some(SampleDelay { prob: 0.5, max_hold: 4 }),
+            ..Default::default()
+        };
+        let fe = front_end();
+        let h = fe.handle();
+        let mut layer = TransportLayer::new(plan, 3);
+        for i in 0..40 {
+            layer.send(&h, TenantId(0), mk(i as f64));
+        }
+        assert!(layer.report.samples_delayed > 0, "delay never fired");
+        layer.flush(&h);
+        let st = h.tenant_stats(TenantId(0)).unwrap();
+        assert_eq!(st.submitted, 40, "flush delivered every held sample");
+    }
+}

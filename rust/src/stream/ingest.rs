@@ -37,16 +37,44 @@
 //! | [`ShedPolicy::ShedOldest`] | returns immediately | newest `queue_cap` | `shed` (the evicted oldest) |
 //! | [`ShedPolicy::ShedNewest`] | returns immediately | oldest `queue_cap` | `shed` (the rejected newcomer) |
 //!
-//! Per tenant, at every quiesce point (queue drained):
-//! `accepted + shed == submitted` — and at any instant
-//! `accepted + shed + resident == submitted`, where `accepted` counts
-//! samples handed to the batcher and `resident` counts samples still
-//! queued. `tests/ingest.rs` pins the invariant under every policy and
-//! under concurrent producers.
+//! Per tenant, at every quiesce point (queue drained, reorder buffer
+//! empty): `accepted + shed + deduped + closed_rejects == submitted` —
+//! and at any instant
+//! `accepted + shed + deduped + closed_rejects + resident == submitted`,
+//! where `accepted` counts samples handed to the batcher and `resident`
+//! counts samples still queued or parked in the reorder buffer.
+//! `tests/ingest.rs` pins the invariant under every policy and under
+//! concurrent producers. Fault-free the new terms are identically zero
+//! and the PR 8 form `accepted + shed + resident == submitted` holds
+//! unchanged.
 //!
 //! Shedding decisions are **deterministic**: they are a pure function
 //! of the queue state at submit time, so a seeded single-threaded
 //! replay produces the identical outcome sequence (also pinned).
+//!
+//! # Sequence numbers: surviving at-least-once, out-of-order transport
+//!
+//! Every submitted sample carries a per-tenant sequence number —
+//! assigned under the queue lock for plain [`IngestHandle::submit`], or
+//! supplied by the transport for
+//! [`IngestHandle::submit_sequenced`] (see `stream::fault`, which
+//! numbers samples *before* dropping/delaying/duplicating them). On
+//! drain, each lane runs its samples through a per-tenant
+//! [`ReorderBuffer`] that releases them to the batcher in sequence
+//! order, collapses duplicates (`deduped`), and writes off sequence
+//! numbers that will never arrive: shed samples are marked known-lost
+//! at shed time, unknown transport gaps are skipped after
+//! `gap_patience` pumps or when more than `reorder_cap` samples are
+//! parked behind the gap (`gaps_skipped`). Fault-free the buffer is
+//! pure pass-through — sequences arrive contiguous, nothing is parked,
+//! windows are bit-identical to PR 8.
+//!
+//! # Close is loud, never a hang
+//!
+//! [`IngestFrontEnd::close`] marks the front-end closed and wakes every
+//! producer parked in a [`ShedPolicy::Block`] wait; they return
+//! [`SubmitOutcome::Closed`] (counted in `closed_rejects`) instead of
+//! hanging on a consumer that will never drain again.
 
 use super::router::StreamRouter;
 use super::tenant::TenantId;
@@ -54,8 +82,8 @@ use crate::features::ObservationWindow;
 use crate::linalg::engine::Engine;
 use crate::monitor::{MonitorConfig, WindowAggregator};
 use crate::workloadgen::Sample;
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -65,6 +93,8 @@ pub enum ShedPolicy {
     /// Block the producer until the consumer drains space. Lossless;
     /// couples producer latency to consumer health. A blocked producer
     /// relies on a live consumer — only use where one is guaranteed.
+    /// If the front-end closes while a producer is parked here, the
+    /// wait ends with [`SubmitOutcome::Closed`] — never a hang.
     Block,
     /// Evict the oldest queued sample to admit the new one (keep the
     /// freshest data — right for monitoring, where stale samples decay
@@ -93,6 +123,12 @@ pub struct IngestConfig {
     /// Engine the batching fans out on — share the coordinator's so
     /// batching, ticks, and offline cycles use one executor.
     pub engine: Engine,
+    /// Max samples the reorder buffer parks behind a sequence gap
+    /// before writing the gap off (clamped to ≥ 1).
+    pub reorder_cap: usize,
+    /// Pumps a sequence gap may stay open (waiting for a late sample)
+    /// before it is written off as lost in transit (clamped to ≥ 1).
+    pub gap_patience: u32,
 }
 
 impl Default for IngestConfig {
@@ -103,6 +139,8 @@ impl Default for IngestConfig {
             monitor: MonitorConfig::default(),
             drain_max: 0,
             engine: Engine::sequential(),
+            reorder_cap: 64,
+            gap_patience: 2,
         }
     }
 }
@@ -119,10 +157,14 @@ pub enum SubmitOutcome {
     ShedOldest,
     /// Rejected and counted shed; the queue is unchanged.
     ShedNewest,
+    /// Rejected because the front-end closed (possibly while this
+    /// producer was blocked waiting for space). Counted in
+    /// `closed_rejects`; the queue is unchanged.
+    Closed,
 }
 
 /// Per-tenant accounting snapshot. Invariant (always):
-/// `accepted + shed + resident == submitted`.
+/// `accepted + shed + deduped + closed_rejects + resident == submitted`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TenantIngestStats {
     /// Samples ever submitted for this tenant.
@@ -131,12 +173,20 @@ pub struct TenantIngestStats {
     pub accepted: u64,
     /// Samples shed by the overflow policy — every one counted here.
     pub shed: u64,
-    /// Samples currently queued.
+    /// Samples currently queued or parked in the reorder buffer.
     pub resident: u64,
     /// Times a producer blocked on this queue ([`ShedPolicy::Block`]).
     pub blocked: u64,
-    /// High-water mark of `resident`.
+    /// High-water mark of queued samples.
     pub peak_resident: u64,
+    /// Duplicate deliveries collapsed by the reorder buffer (same
+    /// sequence number seen more than once — at-least-once transport).
+    pub deduped: u64,
+    /// Sequence numbers written off as lost in transit (never
+    /// submitted, never shed — a transport drop or partition ate them).
+    pub gaps_skipped: u64,
+    /// Samples rejected because the front-end was closed.
+    pub closed_rejects: u64,
 }
 
 impl TenantIngestStats {
@@ -147,6 +197,9 @@ impl TenantIngestStats {
         self.resident += o.resident;
         self.blocked += o.blocked;
         self.peak_resident = self.peak_resident.max(o.peak_resident);
+        self.deduped += o.deduped;
+        self.gaps_skipped += o.gaps_skipped;
+        self.closed_rejects += o.closed_rejects;
     }
 }
 
@@ -162,19 +215,46 @@ pub struct PumpStats {
     pub observed: u64,
 }
 
+/// What one tenant's lane did during a gated drain — the watchdog
+/// signal the `stream::supervisor` scores for progress/no-progress.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneOutcome {
+    pub tenant: TenantId,
+    /// Samples popped off the tenant queue this drain (0 when skipped).
+    pub drained: u64,
+    /// Samples released through the reorder buffer into the batcher.
+    pub delivered: u64,
+    /// Samples still queued + parked in the reorder buffer afterwards.
+    pub resident_after: u64,
+    /// Max sample time ever delivered for this tenant
+    /// (`f64::NEG_INFINITY` before the first delivery).
+    pub watermark: f64,
+}
+
 struct QueueState {
-    buf: VecDeque<Sample>,
+    buf: VecDeque<(u64, Sample)>,
+    /// Next sequence number handed to a plain `submit`.
+    seq_next: u64,
+    /// Sequence numbers whose sample was shed (or rejected at close) —
+    /// known-lost marks the drain feeds the reorder buffer so it never
+    /// waits for them.
+    lost: Vec<u64>,
     submitted: u64,
     accepted: u64,
     shed: u64,
     blocked: u64,
     peak: u64,
+    // written back by the drain (mirrors of the reorder buffer)
+    deduped: u64,
+    gaps: u64,
+    held: u64,
+    closed_rejects: u64,
 }
 
 struct TenantQueue {
     state: Mutex<QueueState>,
-    /// Signaled by the consumer after draining; blocked producers wait
-    /// here.
+    /// Signaled by the consumer after draining (and by `close`);
+    /// blocked producers wait here.
     space: Condvar,
 }
 
@@ -183,11 +263,17 @@ impl TenantQueue {
         Arc::new(TenantQueue {
             state: Mutex::new(QueueState {
                 buf: VecDeque::new(),
+                seq_next: 0,
+                lost: Vec::new(),
                 submitted: 0,
                 accepted: 0,
                 shed: 0,
                 blocked: 0,
                 peak: 0,
+                deduped: 0,
+                gaps: 0,
+                held: 0,
+                closed_rejects: 0,
             }),
             space: Condvar::new(),
         })
@@ -199,9 +285,12 @@ impl TenantQueue {
             submitted: st.submitted,
             accepted: st.accepted,
             shed: st.shed,
-            resident: st.buf.len() as u64,
+            resident: st.buf.len() as u64 + st.held,
             blocked: st.blocked,
             peak_resident: st.peak,
+            deduped: st.deduped,
+            gaps_skipped: st.gaps,
+            closed_rejects: st.closed_rejects,
         }
     }
 }
@@ -213,6 +302,9 @@ struct IngestShared {
     /// Samples resident across all queues — the consumer's one-atomic
     /// idle check.
     resident: AtomicU64,
+    /// Set by `close`; submits turn into `Closed` rejects and blocked
+    /// producers wake.
+    closed: AtomicBool,
     /// Producers notify here on the empty→non-empty edge;
     /// [`IngestFrontEnd::wait_for_samples`] sleeps here.
     wake: Mutex<()>,
@@ -237,31 +329,91 @@ impl IngestHandle {
 
     /// Submit one sample for tenant `t`. Never loses a sample silently:
     /// the returned outcome says what happened, and the per-tenant
-    /// counters account for it either way.
+    /// counters account for it either way. The sample's sequence number
+    /// is assigned here, under the queue lock.
     pub fn submit(&self, t: TenantId, s: Sample) -> SubmitOutcome {
+        self.submit_with(t, s, None)
+    }
+
+    /// Submit a sample whose sequence number was assigned upstream (by
+    /// the transport — see `stream::fault::TransportLayer`). The same
+    /// `seq` may arrive more than once (duplication) and out of order
+    /// (delay); the drain-side reorder buffer restores exactly-once,
+    /// in-order delivery to the batcher.
+    pub fn submit_sequenced(
+        &self,
+        t: TenantId,
+        seq: u64,
+        s: Sample,
+    ) -> SubmitOutcome {
+        self.submit_with(t, s, Some(seq))
+    }
+
+    fn submit_with(
+        &self,
+        t: TenantId,
+        s: Sample,
+        seq: Option<u64>,
+    ) -> SubmitOutcome {
         let q = self.queue(t);
         let cap = self.shared.queue_cap;
         let mut st = q.state.lock().unwrap();
+        if self.shared.closed.load(Ordering::Acquire) {
+            // a transport-assigned seq must still be written off, or a
+            // draining flush would wait for a sample that never comes
+            if let Some(seq) = seq {
+                st.lost.push(seq);
+                st.seq_next = st.seq_next.max(seq + 1);
+            }
+            st.submitted += 1;
+            st.closed_rejects += 1;
+            return SubmitOutcome::Closed;
+        }
+        let seq = match seq {
+            Some(seq) => {
+                st.seq_next = st.seq_next.max(seq + 1);
+                seq
+            }
+            None => {
+                let v = st.seq_next;
+                st.seq_next += 1;
+                v
+            }
+        };
         let outcome = if st.buf.len() < cap {
-            st.buf.push_back(s);
+            st.buf.push_back((seq, s));
             SubmitOutcome::Accepted
         } else {
             match self.shared.policy {
                 ShedPolicy::Block => {
                     st.blocked += 1;
-                    while st.buf.len() >= cap {
+                    loop {
+                        if self.shared.closed.load(Ordering::Acquire) {
+                            // woken by close, not by space: reject
+                            // loudly instead of hanging forever
+                            st.lost.push(seq);
+                            st.submitted += 1;
+                            st.closed_rejects += 1;
+                            return SubmitOutcome::Closed;
+                        }
+                        if st.buf.len() < cap {
+                            break;
+                        }
                         st = q.space.wait(st).unwrap();
                     }
-                    st.buf.push_back(s);
+                    st.buf.push_back((seq, s));
                     SubmitOutcome::AcceptedAfterBlock
                 }
                 ShedPolicy::ShedOldest => {
-                    st.buf.pop_front();
+                    if let Some((old_seq, _)) = st.buf.pop_front() {
+                        st.lost.push(old_seq);
+                    }
                     st.shed += 1;
-                    st.buf.push_back(s);
+                    st.buf.push_back((seq, s));
                     SubmitOutcome::ShedOldest
                 }
                 ShedPolicy::ShedNewest => {
+                    st.lost.push(seq);
                     st.shed += 1;
                     SubmitOutcome::ShedNewest
                 }
@@ -269,8 +421,9 @@ impl IngestHandle {
         };
         // counted only once the sample's fate is decided (queued or
         // shed), under the same lock hold — so the conservation
-        // invariant `accepted + shed + resident == submitted` is exact
-        // at every instant, even with a producer parked mid-Block.
+        // invariant `accepted + shed + deduped + closed_rejects +
+        // resident == submitted` is exact at every instant, even with a
+        // producer parked mid-Block.
         st.submitted += 1;
         st.peak = st.peak.max(st.buf.len() as u64);
         drop(st);
@@ -316,6 +469,122 @@ impl IngestHandle {
     pub fn resident(&self) -> u64 {
         self.shared.resident.load(Ordering::Acquire)
     }
+
+    /// Whether the front-end has been closed.
+    pub fn is_closed(&self) -> bool {
+        self.shared.closed.load(Ordering::Acquire)
+    }
+}
+
+/// Consumer-side dedup/reorder stage: releases samples to the batcher
+/// in sequence order exactly once, no matter how the transport
+/// duplicated, delayed, or dropped them. Fault-free it is pure
+/// pass-through (sequences arrive contiguous; nothing is ever parked).
+#[derive(Debug, Default)]
+struct ReorderBuffer {
+    /// Next sequence number owed to the batcher.
+    next: u64,
+    /// Out-of-order arrivals parked until their turn.
+    held: BTreeMap<u64, Sample>,
+    /// Known-lost sequence numbers (shed / rejected-at-close) — skipped
+    /// without waiting when their turn comes.
+    lost: BTreeSet<u64>,
+    /// Drains survived with an open unknown gap at the head.
+    gap_age: u32,
+    /// Duplicate deliveries collapsed (cumulative).
+    deduped: u64,
+    /// Unknown sequence numbers written off (cumulative).
+    gaps: u64,
+}
+
+impl ReorderBuffer {
+    fn pending(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Record that `seq`'s sample will never arrive through the queue.
+    fn mark_lost(&mut self, seq: u64, out: &mut Vec<Sample>) {
+        if seq < self.next || self.held.contains_key(&seq) {
+            return;
+        }
+        self.lost.insert(seq);
+        if seq == self.next {
+            self.release_ready(out);
+        }
+    }
+
+    /// Offer one drained `(seq, sample)`; contiguous runs land in
+    /// `out`, duplicates are collapsed, gaps park the sample.
+    fn offer(&mut self, seq: u64, s: Sample, out: &mut Vec<Sample>) {
+        if seq < self.next
+            || self.held.contains_key(&seq)
+            || self.lost.contains(&seq)
+        {
+            self.deduped += 1;
+            return;
+        }
+        if seq == self.next {
+            out.push(s);
+            self.next += 1;
+            self.release_ready(out);
+        } else {
+            self.held.insert(seq, s);
+        }
+    }
+
+    /// Release the contiguous run now sitting at `next`.
+    fn release_ready(&mut self, out: &mut Vec<Sample>) {
+        loop {
+            if let Some(s) = self.held.remove(&self.next) {
+                out.push(s);
+                self.next += 1;
+            } else if self.lost.remove(&self.next) {
+                self.next += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// End-of-drain bookkeeping: age any unknown head gap and write it
+    /// off once it outlives `patience` drains or parks more than `cap`
+    /// samples behind it — the dropped/partitioned sample is never
+    /// coming, and the parked ones must not starve the windows.
+    fn end_drain(&mut self, patience: u32, cap: usize, out: &mut Vec<Sample>) {
+        if self.held.is_empty() && self.lost.is_empty() {
+            self.gap_age = 0;
+            return;
+        }
+        self.gap_age += 1;
+        if self.gap_age >= patience.max(1) || self.held.len() > cap.max(1) {
+            self.skip_gap(out);
+            self.gap_age = 0;
+        }
+    }
+
+    /// Write off the unknown gap at the head and release what it was
+    /// blocking.
+    fn skip_gap(&mut self, out: &mut Vec<Sample>) {
+        let lowest = match (self.held.keys().next(), self.lost.iter().next())
+        {
+            (Some(&a), Some(&b)) => a.min(b),
+            (Some(&a), None) => a,
+            (None, Some(&b)) => b,
+            (None, None) => return,
+        };
+        self.gaps += lowest - self.next;
+        self.next = lowest;
+        self.release_ready(out);
+    }
+
+    /// Write off every outstanding gap and release everything parked —
+    /// the reconcile/shutdown path.
+    fn flush_all(&mut self, out: &mut Vec<Sample>) {
+        while !(self.held.is_empty() && self.lost.is_empty()) {
+            self.skip_gap(out);
+        }
+        self.gap_age = 0;
+    }
 }
 
 /// One tenant's drain-and-batch work item for the executor fan-out.
@@ -323,16 +592,24 @@ struct Lane<'a> {
     tenant: TenantId,
     queue: Arc<TenantQueue>,
     agg: &'a mut WindowAggregator,
+    buf: &'a mut ReorderBuffer,
     windows: Vec<ObservationWindow>,
     drained: u64,
+    delivered: u64,
+    resident_after: u64,
+    watermark: f64,
 }
 
 /// The consumer side: owns the per-tenant batchers and drives
-/// queue-drain → window-batch → router-enqueue → tick.
+/// queue-drain → reorder/dedup → window-batch → router-enqueue → tick.
 pub struct IngestFrontEnd {
     shared: Arc<IngestShared>,
     config: IngestConfig,
     batchers: BTreeMap<TenantId, WindowAggregator>,
+    reorders: BTreeMap<TenantId, ReorderBuffer>,
+    /// Max sample time ever delivered per tenant — the progress
+    /// watermark the supervisor compares across tenants.
+    delivered_until: BTreeMap<TenantId, f64>,
 }
 
 impl IngestFrontEnd {
@@ -343,11 +620,14 @@ impl IngestFrontEnd {
                 policy: config.policy,
                 queues: RwLock::new(BTreeMap::new()),
                 resident: AtomicU64::new(0),
+                closed: AtomicBool::new(false),
                 wake: Mutex::new(()),
                 wake_cv: Condvar::new(),
             }),
             config,
             batchers: BTreeMap::new(),
+            reorders: BTreeMap::new(),
+            delivered_until: BTreeMap::new(),
         }
     }
 
@@ -370,6 +650,27 @@ impl IngestFrontEnd {
     /// Samples currently queued across all tenants.
     pub fn resident(&self) -> u64 {
         self.shared.resident.load(Ordering::Acquire)
+    }
+
+    /// Close the front-end: all further submits return
+    /// [`SubmitOutcome::Closed`], and every producer parked in a
+    /// [`ShedPolicy::Block`] wait wakes immediately with the same
+    /// outcome. Draining/pumping still works, so a shutdown can close
+    /// first and flush the backlog after.
+    pub fn close(&self) {
+        self.shared.closed.store(true, Ordering::Release);
+        let qs = self.shared.queues.read().unwrap();
+        for q in qs.values() {
+            // take the queue lock so the store above cannot interleave
+            // between a producer's closed-check and its wait()
+            let _st = q.state.lock().unwrap();
+            q.space.notify_all();
+        }
+    }
+
+    /// Whether [`close`](IngestFrontEnd::close) has been called.
+    pub fn is_closed(&self) -> bool {
+        self.shared.closed.load(Ordering::Acquire)
     }
 
     /// Sleep until at least one sample is queued, or `timeout` passes.
@@ -406,6 +707,19 @@ impl IngestFrontEnd {
     /// the result is bit-identical to a sequential drain regardless of
     /// engine threads.
     pub fn drain_into(&mut self, router: &mut StreamRouter) -> PumpStats {
+        self.drain_gated(router, &[]).0
+    }
+
+    /// [`drain_into`](IngestFrontEnd::drain_into) with a lane gate:
+    /// tenants in `skip` are left untouched this pump (a wedged lane
+    /// worker, or a supervisor backoff). Returns per-lane outcomes —
+    /// including the skipped lanes, with `drained == 0` — for the
+    /// supervisor's watchdogs.
+    pub fn drain_gated(
+        &mut self,
+        router: &mut StreamRouter,
+        skip: &[TenantId],
+    ) -> (PumpStats, Vec<LaneOutcome>) {
         let snapshot: Vec<(TenantId, Arc<TenantQueue>)> = {
             let qs = self.shared.queues.read().unwrap();
             qs.iter().map(|(t, q)| (*t, Arc::clone(q))).collect()
@@ -415,23 +729,45 @@ impl IngestFrontEnd {
             self.batchers
                 .entry(*t)
                 .or_insert_with(|| WindowAggregator::new(monitor.clone(), 0));
+            self.reorders.entry(*t).or_insert_with(ReorderBuffer::default);
         }
         let queues: BTreeMap<TenantId, Arc<TenantQueue>> =
             snapshot.into_iter().collect();
+        let mut skipped: Vec<LaneOutcome> = Vec::new();
+        let mut bufs: BTreeMap<TenantId, &mut ReorderBuffer> =
+            self.reorders.iter_mut().map(|(t, b)| (*t, b)).collect();
         let mut lanes: Vec<Lane> = self
             .batchers
             .iter_mut()
             .filter_map(|(t, agg)| {
-                queues.get(t).map(|q| Lane {
+                let q = queues.get(t)?;
+                if skip.contains(t) {
+                    skipped.push(LaneOutcome {
+                        tenant: *t,
+                        drained: 0,
+                        delivered: 0,
+                        resident_after: q.stats().resident,
+                        watermark: f64::NEG_INFINITY,
+                    });
+                    return None;
+                }
+                let buf = bufs.remove(t)?;
+                Some(Lane {
                     tenant: *t,
                     queue: Arc::clone(q),
                     agg,
+                    buf,
                     windows: Vec::new(),
                     drained: 0,
+                    delivered: 0,
+                    resident_after: 0,
+                    watermark: f64::NEG_INFINITY,
                 })
             })
             .collect();
         let drain_max = self.config.drain_max;
+        let patience = self.config.gap_patience;
+        let reorder_cap = self.config.reorder_cap;
         let shared = &self.shared;
         // one work item = one tenant's drain+batch; costs are as skewed
         // as the traffic (that's the point of the work-stealing
@@ -439,42 +775,145 @@ impl IngestFrontEnd {
         let engine = self.config.engine.with_min_items(1);
         engine.for_rows(&mut lanes, 1, |_, chunk| {
             for lane in chunk.iter_mut() {
-                let drained: Vec<Sample> = {
+                let (popped, lost_marks): (Vec<(u64, Sample)>, Vec<u64>) = {
                     let mut st = lane.queue.state.lock().unwrap();
                     let n = if drain_max == 0 {
                         st.buf.len()
                     } else {
                         st.buf.len().min(drain_max)
                     };
-                    st.accepted += n as u64;
-                    st.buf.drain(..n).collect()
+                    (st.buf.drain(..n).collect(), std::mem::take(&mut st.lost))
                 };
-                if drained.is_empty() {
-                    continue;
+                if !popped.is_empty() {
+                    // space freed: release blocked producers, then
+                    // retire the residents globally
+                    lane.queue.space.notify_all();
+                    shared
+                        .resident
+                        .fetch_sub(popped.len() as u64, Ordering::AcqRel);
+                    lane.drained = popped.len() as u64;
                 }
-                // space freed: release blocked producers, then retire
-                // the residents globally
-                lane.queue.space.notify_all();
-                shared
-                    .resident
-                    .fetch_sub(drained.len() as u64, Ordering::AcqRel);
-                lane.drained = drained.len() as u64;
-                for s in drained {
+                let before =
+                    (lane.buf.deduped, lane.buf.gaps, lane.buf.pending());
+                let mut out: Vec<Sample> = Vec::with_capacity(popped.len());
+                for seq in &lost_marks {
+                    lane.buf.mark_lost(*seq, &mut out);
+                }
+                for (seq, s) in popped {
+                    lane.buf.offer(seq, s, &mut out);
+                }
+                lane.buf.end_drain(patience, reorder_cap, &mut out);
+                lane.delivered = out.len() as u64;
+                for s in out {
+                    if s.time > lane.watermark {
+                        lane.watermark = s.time;
+                    }
                     if let Some(w) = lane.agg.push(s) {
                         lane.windows.push(w);
                     }
                 }
+                let after =
+                    (lane.buf.deduped, lane.buf.gaps, lane.buf.pending());
+                let mut st = lane.queue.state.lock().unwrap();
+                if lane.drained > 0
+                    || lane.delivered > 0
+                    || !lost_marks.is_empty()
+                    || before != after
+                {
+                    st.accepted += lane.delivered;
+                    st.deduped = after.0;
+                    st.gaps = after.1;
+                    st.held = after.2 as u64;
+                }
+                lane.resident_after = st.buf.len() as u64 + st.held;
             }
         });
         let mut stats = PumpStats::default();
+        let mut outcomes = skipped;
+        for o in outcomes.iter_mut() {
+            if let Some(wm) = self.delivered_until.get(&o.tenant) {
+                o.watermark = *wm;
+            }
+        }
         for lane in &lanes {
             stats.drained += lane.drained;
             stats.windows += lane.windows.len() as u64;
             if !lane.windows.is_empty() {
                 router.enqueue_windows(lane.tenant, &lane.windows);
             }
+            let wm = self
+                .delivered_until
+                .entry(lane.tenant)
+                .or_insert(f64::NEG_INFINITY);
+            if lane.watermark > *wm {
+                *wm = lane.watermark;
+            }
+            outcomes.push(LaneOutcome {
+                tenant: lane.tenant,
+                drained: lane.drained,
+                delivered: lane.delivered,
+                resident_after: lane.resident_after,
+                watermark: *wm,
+            });
+        }
+        drop(lanes);
+        outcomes.sort_by_key(|o| o.tenant.0);
+        (stats, outcomes)
+    }
+
+    /// Reconcile the transport: drain everything, then write off every
+    /// outstanding sequence gap and release all parked samples into the
+    /// batchers — the "link healed / run over" settlement that
+    /// guarantees no lane stays wedged on a sample that will never
+    /// arrive. Windows closed by the settlement are enqueued on
+    /// `router` (not ticked).
+    pub fn flush_transport(&mut self, router: &mut StreamRouter) -> PumpStats {
+        let mut stats = self.drain_into(router);
+        let monitor = self.config.monitor.clone();
+        let queues: BTreeMap<TenantId, Arc<TenantQueue>> = {
+            let qs = self.shared.queues.read().unwrap();
+            qs.iter().map(|(t, q)| (*t, Arc::clone(q))).collect()
+        };
+        for (t, buf) in self.reorders.iter_mut() {
+            if buf.held.is_empty() && buf.lost.is_empty() {
+                continue;
+            }
+            let mut out: Vec<Sample> = Vec::new();
+            buf.flush_all(&mut out);
+            let agg = self
+                .batchers
+                .entry(*t)
+                .or_insert_with(|| WindowAggregator::new(monitor.clone(), 0));
+            let mut windows: Vec<ObservationWindow> = Vec::new();
+            let delivered = out.len() as u64;
+            for s in out {
+                let wm =
+                    self.delivered_until.entry(*t).or_insert(f64::NEG_INFINITY);
+                if s.time > *wm {
+                    *wm = s.time;
+                }
+                if let Some(w) = agg.push(s) {
+                    windows.push(w);
+                }
+            }
+            stats.windows += windows.len() as u64;
+            if !windows.is_empty() {
+                router.enqueue_windows(*t, &windows);
+            }
+            if let Some(q) = queues.get(t) {
+                let mut st = q.state.lock().unwrap();
+                st.accepted += delivered;
+                st.deduped = buf.deduped;
+                st.gaps = buf.gaps;
+                st.held = buf.pending() as u64;
+            }
         }
         stats
+    }
+
+    /// Delivery watermark for one tenant (max delivered sample time).
+    pub fn watermark(&self, t: TenantId) -> Option<f64> {
+        self.delivered_until.get(&t).copied()
     }
 
     /// One full pump: drain + batch + enqueue, then tick the router.
@@ -596,6 +1035,8 @@ mod tests {
         assert_eq!(ts.accepted, ss.len() as u64);
         assert_eq!(ts.resident, 0);
         assert_eq!(ts.shed, 0);
+        assert_eq!(ts.deduped, 0);
+        assert_eq!(ts.gaps_skipped, 0);
     }
 
     #[test]
@@ -637,5 +1078,150 @@ mod tests {
             total += fe.pump(&mut router).drained;
         }
         assert_eq!(total, ss.len() as u64);
+    }
+
+    #[test]
+    fn duplicate_and_reordered_seqs_collapse_to_inorder_exactly_once() {
+        let mcfg = MonitorConfig { window_size: 10 };
+        let mut fe = front_end(1 << 16, ShedPolicy::ShedOldest);
+        let h = fe.handle();
+        let mut router = StreamRouter::new(RouterConfig {
+            monitor: mcfg.clone(),
+            ..Default::default()
+        });
+        let ss = samples(6, &[0, 2]);
+        let t = TenantId(2);
+        // deliver every adjacent pair swapped, and duplicate every
+        // sample at an even index divisible by 3
+        let mut dups = 0u64;
+        let mut i = 0usize;
+        while i < ss.len() {
+            if i + 1 < ss.len() {
+                h.submit_sequenced(t, (i + 1) as u64, ss[i + 1].clone());
+            }
+            h.submit_sequenced(t, i as u64, ss[i].clone());
+            if i % 3 == 0 {
+                h.submit_sequenced(t, i as u64, ss[i].clone());
+                dups += 1;
+            }
+            i += 2;
+        }
+        let st = fe.pump(&mut router);
+        assert_eq!(st.drained as usize, ss.len() + dups as usize);
+        // windows are bit-identical to clean in-order aggregation
+        let expect = aggregate_samples(&ss, &mcfg);
+        assert_eq!(st.windows, expect.len() as u64);
+        let taken = router.take_observed();
+        assert_eq!(taken[0].1, expect, "reorder buffer broke the stream");
+        let ts = h.tenant_stats(t).unwrap();
+        assert_eq!(ts.deduped, dups);
+        assert_eq!(ts.gaps_skipped, 0);
+        assert_eq!(
+            ts.accepted + ts.shed + ts.deduped + ts.closed_rejects,
+            ts.submitted - ts.resident
+        );
+    }
+
+    #[test]
+    fn transport_gap_is_written_off_after_patience_pumps() {
+        let mcfg = MonitorConfig { window_size: 5 };
+        let mut fe = IngestFrontEnd::new(IngestConfig {
+            queue_cap: 1 << 16,
+            policy: ShedPolicy::ShedOldest,
+            monitor: mcfg.clone(),
+            gap_patience: 2,
+            ..Default::default()
+        });
+        let h = fe.handle();
+        let mut router = StreamRouter::new(RouterConfig {
+            monitor: mcfg,
+            ..Default::default()
+        });
+        let ss = samples(7, &[1]);
+        let t = TenantId(4);
+        // seq 3 is dropped in transit: 0,1,2 then 4..12
+        for (i, s) in ss.iter().take(13).enumerate() {
+            if i == 3 {
+                continue;
+            }
+            h.submit_sequenced(t, i as u64, s.clone());
+        }
+        let st1 = fe.pump(&mut router);
+        // 0..=2 released; 4.. parked behind the gap
+        assert_eq!(st1.drained, 12);
+        let ts = h.tenant_stats(t).unwrap();
+        assert_eq!(ts.accepted, 3);
+        assert!(ts.resident > 0, "parked samples count as resident");
+        // second pump: gap outlives patience, written off, rest flows
+        let _ = fe.pump(&mut router);
+        let ts = h.tenant_stats(t).unwrap();
+        assert_eq!(ts.gaps_skipped, 1);
+        assert_eq!(ts.accepted, 12);
+        assert_eq!(ts.resident, 0);
+    }
+
+    #[test]
+    fn close_wakes_blocked_producer_with_closed_outcome() {
+        let fe = front_end(2, ShedPolicy::Block);
+        let h = fe.handle();
+        let t = TenantId(0);
+        let ss = samples(8, &[0]);
+        h.submit(t, ss[0].clone());
+        h.submit(t, ss[1].clone());
+        let h2 = fe.handle();
+        let s2 = ss[2].clone();
+        let blocked = std::thread::spawn(move || h2.submit(t, s2));
+        // wait until the producer is parked in the Block wait
+        while h.tenant_stats(t).unwrap().blocked == 0 {
+            std::thread::yield_now();
+        }
+        fe.close();
+        let out = blocked.join().expect("blocked producer never woke");
+        assert_eq!(out, SubmitOutcome::Closed);
+        // submits after close are rejected loudly too
+        assert_eq!(h.submit(t, ss[3].clone()), SubmitOutcome::Closed);
+        let st = h.tenant_stats(t).unwrap();
+        assert_eq!(st.closed_rejects, 2);
+        assert_eq!(
+            st.accepted + st.shed + st.deduped + st.closed_rejects
+                + st.resident,
+            st.submitted
+        );
+        assert!(h.is_closed());
+    }
+
+    #[test]
+    fn flush_transport_releases_parked_samples_and_clears_gaps() {
+        let mcfg = MonitorConfig { window_size: 5 };
+        let mut fe = IngestFrontEnd::new(IngestConfig {
+            queue_cap: 1 << 16,
+            policy: ShedPolicy::ShedOldest,
+            monitor: mcfg.clone(),
+            gap_patience: 1000, // never written off by patience
+            ..Default::default()
+        });
+        let h = fe.handle();
+        let mut router = StreamRouter::new(RouterConfig {
+            monitor: mcfg,
+            ..Default::default()
+        });
+        let ss = samples(9, &[2]);
+        let t = TenantId(1);
+        // seqs 0 and 5 never arrive
+        for (i, s) in ss.iter().take(10).enumerate() {
+            if i == 0 || i == 5 {
+                continue;
+            }
+            h.submit_sequenced(t, i as u64, s.clone());
+        }
+        let _ = fe.pump(&mut router);
+        let ts = h.tenant_stats(t).unwrap();
+        assert_eq!(ts.accepted, 0, "everything parked behind seq 0");
+        let _ = fe.flush_transport(&mut router);
+        router.tick();
+        let ts = h.tenant_stats(t).unwrap();
+        assert_eq!(ts.gaps_skipped, 2);
+        assert_eq!(ts.accepted, 8);
+        assert_eq!(ts.resident, 0, "no lane left wedged after reconcile");
     }
 }

@@ -31,13 +31,17 @@
 //! alone through a sequential [`crate::online::OnlinePipeline`] — pinned
 //! by `tests/stream_equivalence.rs`.
 
+pub mod fault;
 pub mod ingest;
 pub mod router;
+pub mod supervisor;
 pub mod tenant;
 
+pub use fault::{TransportFaultPlan, TransportFaultReport, TransportLayer};
 pub use ingest::{
-    IngestConfig, IngestFrontEnd, IngestHandle, PumpStats, ShedPolicy,
-    SubmitOutcome, TenantIngestStats,
+    IngestConfig, IngestFrontEnd, IngestHandle, LaneOutcome, PumpStats,
+    ShedPolicy, SubmitOutcome, TenantIngestStats,
 };
+pub use supervisor::{IngestSupervisor, SupervisorConfig, TenantHealth};
 pub use router::{RouterConfig, StreamRouter, TenantShard, TickDispatch};
 pub use tenant::{interleave_round_robin, TenantId, TenantSample};

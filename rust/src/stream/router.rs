@@ -185,6 +185,17 @@ impl TenantShard {
     pub fn label_log(&self) -> Vec<u32> {
         self.contexts.iter().map(|c| c.current_label).collect()
     }
+
+    /// Most recent *known* label this shard published, if any — what a
+    /// degraded tenant keeps being served while its ingest path is
+    /// partitioned (the supervisor's stale-but-safe fallback).
+    pub fn last_known_label(&self) -> Option<u32> {
+        self.contexts
+            .iter()
+            .rev()
+            .find(|c| c.is_known())
+            .map(|c| c.current_label)
+    }
 }
 
 /// Drop the oldest half of `log` once it exceeds `cap`; returns how

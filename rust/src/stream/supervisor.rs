@@ -1,0 +1,425 @@
+//! Per-tenant ingest watchdogs and the degraded-mode state machine.
+//!
+//! The transport between tenants and the tuner can drop, delay,
+//! duplicate, or completely partition traffic (`stream::fault`), and
+//! the consumer itself can wedge. The loop's autonomic claim says no
+//! human intervenes — so *something* has to notice a lane that stopped
+//! making progress, stop wasting probes on it, and re-arm when it
+//! heals. That something is the [`IngestSupervisor`].
+//!
+//! It is deliberately dumb and deterministic: it looks only at the
+//! [`LaneOutcome`]s each gated drain produces (samples drained,
+//! samples delivered, samples still resident, delivery watermark) and
+//! counts pumps — no wall clock, no RNG. Runs without faults score
+//! every lane healthy on every pump and never mutate a decision, so
+//! attaching a supervisor to a clean run is behaviour-neutral by
+//! construction (pinned in `chaoslab::transport`).
+//!
+//! # State machine (per tenant)
+//!
+//! ```text
+//!            no-progress deadline / retry budget exhausted
+//!   Healthy ────────────────────────────────────────────► Degraded
+//!      ▲                                                     │
+//!      │ `heal_confirm` consecutive                          │ first
+//!      │ healthy pumps                                       │ healthy pump
+//!      │                                                     ▼
+//!      └─────────────────────────────────────────────── Healing
+//! ```
+//!
+//! While a tenant is **Degraded** or **Healing** ("impaired"), the
+//! tuning plane serves its last-known label with the safe fallback
+//! config and suspends probes (`TuningPlane::decide`); the state is
+//! surfaced in `MultiTenantReport::tenant_health`.
+//!
+//! A lane that drains nothing while samples sit resident is *retried
+//! with exponential backoff*: the supervisor asks the pump to skip the
+//! lane for `backoff_base << (failures-1)` pumps (capped) before the
+//! next attempt, so a wedged lane worker is not hammered every pump.
+//! `max_retries` consecutive failures demote the tenant to Degraded
+//! (the retries keep going — Degraded is a *decision* mode, not a
+//! stop). A lane that is silent (nothing resident, nothing delivered)
+//! only degrades once its delivery watermark lags the most advanced
+//! tenant by more than `silence_after` sim-seconds — the partition
+//! case, where the queue looks idle because nothing gets through.
+
+use super::ingest::LaneOutcome;
+use super::tenant::TenantId;
+use std::collections::BTreeMap;
+
+/// Per-tenant ingest-path health.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantHealth {
+    /// Lane makes progress (or is idle and current).
+    Healthy,
+    /// No-progress deadline or retry budget blown: decisions fall back
+    /// to last-known label + safe config, probes are suspended.
+    Degraded,
+    /// Progress again after Degraded; confirming before re-arming.
+    Healing,
+}
+
+/// Watchdog thresholds. Pump-count and sim-time based — never wall
+/// clock — so supervised runs stay deterministic.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorConfig {
+    /// Max sim-seconds a silent tenant's delivery watermark may lag the
+    /// most advanced tenant before it is declared partitioned. Default
+    /// `f64::INFINITY` — **off** — because silence alone cannot be told
+    /// apart from a tenant that legitimately went quiet; deployments
+    /// with a known traffic cadence (the chaos scenarios) opt in with a
+    /// finite deadline.
+    pub silence_after: f64,
+    /// Consecutive no-progress drains (with samples resident) before a
+    /// tenant is demoted to Degraded.
+    pub max_retries: u32,
+    /// Backoff after the n-th consecutive failure is
+    /// `backoff_base << (n-1)` pumps, capped at `backoff_cap`.
+    pub backoff_base: u32,
+    pub backoff_cap: u32,
+    /// Consecutive healthy pumps a Healing tenant needs to re-arm.
+    pub heal_confirm: u32,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            silence_after: f64::INFINITY,
+            max_retries: 6,
+            backoff_base: 1,
+            backoff_cap: 8,
+            heal_confirm: 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TenantWatch {
+    health: TenantHealth,
+    /// Consecutive no-progress drains.
+    failures: u32,
+    /// Pump index before which the lane should not be retried.
+    next_attempt: u64,
+    /// Consecutive healthy pumps while Healing.
+    confirm: u32,
+    last_watermark: f64,
+    /// Has this tenant ever delivered a sample?
+    seen: bool,
+}
+
+impl TenantWatch {
+    fn new() -> TenantWatch {
+        TenantWatch {
+            health: TenantHealth::Healthy,
+            failures: 0,
+            next_attempt: 0,
+            confirm: 0,
+            last_watermark: f64::NEG_INFINITY,
+            seen: false,
+        }
+    }
+}
+
+/// Watches [`LaneOutcome`]s, tracks per-tenant health, and schedules
+/// retry backoffs. Owned by the coordinator; fed by every supervised
+/// pump.
+#[derive(Debug, Clone)]
+pub struct IngestSupervisor {
+    pub config: SupervisorConfig,
+    /// Pumps observed (the backoff clock).
+    pump: u64,
+    watches: BTreeMap<TenantId, TenantWatch>,
+    /// No-progress drains that triggered a scheduled retry.
+    pub delivery_retries: u64,
+    /// Healthy→Degraded transitions.
+    pub degraded_events: u64,
+    /// Healing→Healthy transitions (full recoveries).
+    pub healed: u64,
+}
+
+impl IngestSupervisor {
+    pub fn new(config: SupervisorConfig) -> IngestSupervisor {
+        IngestSupervisor {
+            config,
+            pump: 0,
+            watches: BTreeMap::new(),
+            delivery_retries: 0,
+            degraded_events: 0,
+            healed: 0,
+        }
+    }
+
+    /// Tenants whose retry backoff says "skip this pump".
+    pub fn backed_off(&self) -> Vec<TenantId> {
+        self.watches
+            .iter()
+            .filter(|(_, w)| w.failures > 0 && self.pump < w.next_attempt)
+            .map(|(t, _)| *t)
+            .collect()
+    }
+
+    /// Score one supervised pump's lane outcomes.
+    pub fn observe(&mut self, outcomes: &[LaneOutcome]) {
+        self.pump += 1;
+        // the progress frontier: how far the healthiest lane has gotten
+        let frontier = outcomes
+            .iter()
+            .map(|o| o.watermark)
+            .fold(f64::NEG_INFINITY, f64::max);
+        for o in outcomes {
+            let w = self.watches.entry(o.tenant).or_insert_with(TenantWatch::new);
+            if o.delivered > 0 {
+                w.seen = true;
+                w.last_watermark = o.watermark;
+            }
+            let seen = w.seen;
+            if w.failures > 0 && self.pump <= w.next_attempt && o.drained == 0
+            {
+                // skipped by our own backoff gate: not evidence either way
+                continue;
+            }
+            let lag = if o.watermark == f64::NEG_INFINITY {
+                f64::INFINITY
+            } else {
+                frontier - o.watermark
+            };
+            let progressed = o.delivered > 0;
+            let idle_and_current =
+                o.resident_after == 0 && lag <= self.config.silence_after;
+            if progressed || (!seen && o.resident_after == 0) {
+                // progress — or a tenant that never sent anything yet
+                self.score_healthy(o.tenant);
+            } else if o.resident_after > 0 {
+                // samples waiting, none delivered: the lane is stuck
+                self.score_failure(o.tenant);
+            } else if idle_and_current {
+                self.score_healthy(o.tenant);
+            } else {
+                // silent and far behind the frontier: partitioned
+                self.demote(o.tenant);
+            }
+        }
+    }
+
+    fn score_healthy(&mut self, t: TenantId) {
+        let c = self.config;
+        let w = self.watches.entry(t).or_insert_with(TenantWatch::new);
+        w.failures = 0;
+        w.next_attempt = 0;
+        match w.health {
+            TenantHealth::Healthy => {}
+            TenantHealth::Degraded => {
+                w.health = TenantHealth::Healing;
+                w.confirm = 1;
+            }
+            TenantHealth::Healing => {
+                w.confirm += 1;
+                if w.confirm >= c.heal_confirm {
+                    w.health = TenantHealth::Healthy;
+                    w.confirm = 0;
+                    self.healed += 1;
+                }
+            }
+        }
+    }
+
+    fn score_failure(&mut self, t: TenantId) {
+        let c = self.config;
+        let w = self.watches.entry(t).or_insert_with(TenantWatch::new);
+        w.failures += 1;
+        let exp = w.failures.saturating_sub(1).min(31);
+        let delay = c
+            .backoff_base
+            .saturating_mul(1u32.checked_shl(exp).unwrap_or(u32::MAX))
+            .min(c.backoff_cap)
+            .max(1);
+        w.next_attempt = self.pump + delay as u64;
+        self.delivery_retries += 1;
+        if w.failures > c.max_retries {
+            self.demote(t);
+        } else if w.health == TenantHealth::Healing {
+            // relapse while confirming
+            w.health = TenantHealth::Degraded;
+            w.confirm = 0;
+        }
+    }
+
+    fn demote(&mut self, t: TenantId) {
+        let w = self.watches.entry(t).or_insert_with(TenantWatch::new);
+        if w.health != TenantHealth::Degraded {
+            if w.health == TenantHealth::Healthy {
+                self.degraded_events += 1;
+            }
+            w.health = TenantHealth::Degraded;
+            w.confirm = 0;
+        }
+    }
+
+    /// Current health for one tenant (Healthy if never watched).
+    pub fn health(&self, t: TenantId) -> TenantHealth {
+        self.watches.get(&t).map(|w| w.health).unwrap_or(TenantHealth::Healthy)
+    }
+
+    /// Degraded or Healing: decisions should use the safe degraded
+    /// path and probes stay suspended.
+    pub fn is_impaired(&self, t: TenantId) -> bool {
+        matches!(
+            self.health(t),
+            TenantHealth::Degraded | TenantHealth::Healing
+        )
+    }
+
+    /// Every tenant currently not Healthy, in id order.
+    pub fn impaired(&self) -> Vec<(TenantId, TenantHealth)> {
+        self.watches
+            .iter()
+            .filter(|(_, w)| w.health != TenantHealth::Healthy)
+            .map(|(t, w)| (*t, w.health))
+            .collect()
+    }
+
+    /// Health of every watched tenant, in id order.
+    pub fn healths(&self) -> Vec<(TenantId, TenantHealth)> {
+        self.watches.iter().map(|(t, w)| (*t, w.health)).collect()
+    }
+
+    /// Clear all retry backoffs (reconcile: give every lane one more
+    /// immediate chance).
+    pub fn reset_backoffs(&mut self) {
+        for w in self.watches.values_mut() {
+            w.failures = 0;
+            w.next_attempt = 0;
+        }
+    }
+
+    /// Final settlement after a reconcile drain: any tenant still
+    /// marked impaired whose backlog was flushed is re-armed. Call
+    /// *after* `flush_transport` + a tick has emptied the lanes — the
+    /// chaos scenarios assert no tenant stays degraded past this.
+    pub fn settle(&mut self) {
+        for w in self.watches.values_mut() {
+            if w.health != TenantHealth::Healthy {
+                w.health = TenantHealth::Healthy;
+                w.confirm = 0;
+                self.healed += 1;
+            }
+            w.failures = 0;
+            w.next_attempt = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(
+        t: u32,
+        drained: u64,
+        delivered: u64,
+        resident_after: u64,
+        watermark: f64,
+    ) -> LaneOutcome {
+        LaneOutcome {
+            tenant: TenantId(t),
+            drained,
+            delivered,
+            resident_after,
+            watermark,
+        }
+    }
+
+    #[test]
+    fn healthy_traffic_never_changes_state() {
+        let mut sup = IngestSupervisor::new(SupervisorConfig::default());
+        for i in 0..50 {
+            let tm = i as f64 * 10.0;
+            sup.observe(&[
+                outcome(0, 5, 5, 0, tm),
+                outcome(1, 3, 3, 0, tm),
+            ]);
+        }
+        assert_eq!(sup.health(TenantId(0)), TenantHealth::Healthy);
+        assert_eq!(sup.health(TenantId(1)), TenantHealth::Healthy);
+        assert_eq!(sup.delivery_retries, 0);
+        assert_eq!(sup.degraded_events, 0);
+        assert!(sup.backed_off().is_empty());
+    }
+
+    #[test]
+    fn stuck_lane_backs_off_exponentially_then_degrades() {
+        let cfg = SupervisorConfig {
+            max_retries: 3,
+            backoff_base: 1,
+            backoff_cap: 4,
+            ..Default::default()
+        };
+        let mut sup = IngestSupervisor::new(cfg);
+        let mut pumps_to_degrade = 0;
+        while sup.health(TenantId(0)) != TenantHealth::Degraded {
+            // tenant 1 keeps flowing; tenant 0 has resident samples but
+            // its lane delivers nothing (wedged worker) — pumps the
+            // backoff gate skips are scored as no evidence
+            sup.observe(&[
+                outcome(0, 0, 0, 8, f64::NEG_INFINITY),
+                outcome(1, 2, 2, 0, pumps_to_degrade as f64),
+            ]);
+            pumps_to_degrade += 1;
+            assert!(pumps_to_degrade < 100, "never degraded");
+        }
+        // backoff gaps mean strictly more pumps than failures
+        assert!(pumps_to_degrade > 4, "no backoff between retries");
+        assert!(sup.delivery_retries >= 4);
+        assert_eq!(sup.degraded_events, 1);
+        assert!(sup.is_impaired(TenantId(0)));
+        assert!(!sup.is_impaired(TenantId(1)));
+    }
+
+    #[test]
+    fn silent_partitioned_tenant_degrades_then_heals_on_traffic() {
+        let cfg = SupervisorConfig {
+            silence_after: 50.0,
+            heal_confirm: 2,
+            ..Default::default()
+        };
+        let mut sup = IngestSupervisor::new(cfg);
+        // both healthy first
+        sup.observe(&[outcome(0, 2, 2, 0, 10.0), outcome(1, 2, 2, 0, 10.0)]);
+        // tenant 0 goes silent (partition swallows its samples) while
+        // tenant 1 advances past the silence threshold
+        let mut tm = 10.0;
+        while sup.health(TenantId(0)) == TenantHealth::Healthy {
+            tm += 20.0;
+            sup.observe(&[outcome(0, 0, 0, 0, 10.0), outcome(1, 2, 2, 0, tm)]);
+            assert!(tm < 1e4, "silent tenant never degraded");
+        }
+        assert_eq!(sup.health(TenantId(0)), TenantHealth::Degraded);
+        // partition heals: traffic flows again → Healing → Healthy
+        sup.observe(&[outcome(0, 4, 4, 0, tm), outcome(1, 2, 2, 0, tm)]);
+        assert_eq!(sup.health(TenantId(0)), TenantHealth::Healing);
+        assert!(sup.is_impaired(TenantId(0)), "healing still impaired");
+        sup.observe(&[outcome(0, 4, 4, 0, tm), outcome(1, 2, 2, 0, tm)]);
+        assert_eq!(sup.health(TenantId(0)), TenantHealth::Healthy);
+        assert_eq!(sup.healed, 1);
+    }
+
+    #[test]
+    fn settle_rearms_every_tenant() {
+        let cfg = SupervisorConfig {
+            silence_after: 1.0,
+            ..Default::default()
+        };
+        let mut sup = IngestSupervisor::new(cfg);
+        sup.observe(&[outcome(0, 1, 1, 0, 5.0), outcome(1, 1, 1, 0, 5.0)]);
+        for _ in 0..20 {
+            sup.observe(&[
+                outcome(0, 0, 0, 0, 5.0),
+                outcome(1, 2, 2, 0, 500.0),
+            ]);
+        }
+        assert!(sup.is_impaired(TenantId(0)));
+        sup.settle();
+        assert!(sup.impaired().is_empty());
+        assert!(sup.backed_off().is_empty());
+    }
+}

@@ -232,6 +232,9 @@ pub struct TuningPlane {
     pub probe_jobs_failed: usize,
     /// Labels the poison detector quarantined.
     pub labels_quarantined: usize,
+    /// Decisions served through the degraded path (transport-impaired
+    /// tenant: last-known label, safe config, no probe).
+    pub degraded_decisions: usize,
     /// Attached durable knowledge store (None: in-memory only — every
     /// pre-existing caller pays nothing).
     store: Option<KnowledgeStore>,
@@ -261,6 +264,7 @@ impl TuningPlane {
             probes_timed_out: 0,
             probe_jobs_failed: 0,
             labels_quarantined: 0,
+            degraded_decisions: 0,
             store: None,
             persistence: PersistencePolicy::default(),
             events_since_flush: 0,
@@ -426,6 +430,24 @@ impl TuningPlane {
         // a faulted job must not wedge this tenant's pending map (and
         // through it the plug-in's outstanding probe) forever
         self.expire_stale(t, now);
+        // a tenant whose ingest transport is impaired (partitioned /
+        // wedged — the supervisor's verdict) gets the stale-but-safe
+        // path: last-known label, trusted config or default, and NO
+        // probes — a probe measured through a broken transport would
+        // poison the knowledge plane. Probing re-arms by itself once
+        // the supervisor scores the tenant healthy again.
+        if self.coord.ingest_impaired(t) {
+            let label = self.coord.last_known_label(t).unwrap_or(UNKNOWN);
+            self.degraded_decisions += 1;
+            let tt = self.tenants.get_mut(&t).unwrap();
+            let (config, kind) = tt.plugin.degraded_choice(label);
+            tt.choices.push(kind);
+            if tt.choices.len() > CHOICE_LOG_CAP {
+                tt.choices.drain(..CHOICE_LOG_CAP / 2);
+            }
+            self.persist_tick();
+            return (config, kind);
+        }
         let tt = self.tenants.get_mut(&t).unwrap();
         let label = tt.plugin.current_label(now);
         let completed_before = tt.plugin.stats.searches_completed;
@@ -618,6 +640,29 @@ impl TuningPlane {
     /// exactly like direct ingest. `None` if nothing is attached.
     pub fn pump_ingest(&mut self) -> Option<PumpStats> {
         let (stats, n) = self.coord.pump_ingest()?;
+        self.windows_observed += n;
+        Some(stats)
+    }
+
+    /// Supervised pump with consumer-side faults in the loop: `wedged`
+    /// lanes are skipped this pump (and the supervisor's retry backoff
+    /// may skip more). See
+    /// [`MultiTenantCoordinator::pump_ingest_supervised`].
+    pub fn pump_ingest_wedged(
+        &mut self,
+        wedged: &[TenantId],
+    ) -> Option<PumpStats> {
+        let (stats, n) = self.coord.pump_ingest_supervised(wedged)?;
+        self.windows_observed += n;
+        Some(stats)
+    }
+
+    /// Transport reconcile: flush every sequence gap and parked sample,
+    /// tick, and re-arm all demoted tenants (see
+    /// [`MultiTenantCoordinator::reconcile_ingest`]). Call at heal /
+    /// end-of-run, before [`TuningPlane::reconcile`].
+    pub fn reconcile_ingest(&mut self) -> Option<PumpStats> {
+        let (stats, n) = self.coord.reconcile_ingest()?;
         self.windows_observed += n;
         Some(stats)
     }

@@ -7,9 +7,11 @@ use std::time::Duration;
 
 use kermit::linalg::engine::Engine;
 use kermit::monitor::MonitorConfig;
+use kermit::stream::fault::{SampleDelay, SampleDup, SampleLoss};
 use kermit::stream::{
     IngestConfig, IngestFrontEnd, RouterConfig, ShedPolicy, StreamRouter,
-    TenantId, TenantSample,
+    SubmitOutcome, TenantId, TenantSample, TransportFaultPlan,
+    TransportLayer,
 };
 use kermit::workloadgen::{heavy_tailed_stream, Sample};
 
@@ -24,6 +26,7 @@ fn front_end(cap: usize, policy: ShedPolicy, wsize: usize) -> IngestFrontEnd {
         monitor: MonitorConfig { window_size: wsize },
         drain_max: 0,
         engine: Engine::sequential(),
+        ..IngestConfig::default()
     })
 }
 
@@ -214,4 +217,179 @@ fn front_end_path_matches_direct_router_ingest() {
         let b = direct.shard(t).unwrap();
         assert_eq!(a.contexts, b.contexts, "tenant {t:?} contexts diverged");
     }
+}
+
+/// Closing the front-end wakes producers parked under `Block` with an
+/// explicit [`SubmitOutcome::Closed`] — never a hang, never a silent
+/// loss: the rejected samples are counted in `closed_rejects` and the
+/// conservation invariant still reconciles exactly.
+#[test]
+fn close_while_blocked_reports_closed_not_hang() {
+    let events = stream(3, 1, 8);
+    let mut fe = front_end(2, ShedPolicy::Block, 4);
+    let h = fe.handle();
+    let (t0, s0) = events[0].clone();
+    // fill the tiny queue, then park a producer on the third submit
+    assert_eq!(h.submit(t0, s0.clone()), SubmitOutcome::Accepted);
+    assert_eq!(h.submit(t0, s0.clone()), SubmitOutcome::Accepted);
+    let blocked = {
+        let h = h.clone();
+        let s = s0.clone();
+        std::thread::spawn(move || h.submit(t0, s))
+    };
+    while h.totals().blocked == 0 {
+        std::thread::yield_now();
+    }
+    fe.close();
+    assert_eq!(
+        blocked.join().unwrap(),
+        SubmitOutcome::Closed,
+        "a blocked producer must wake with an explicit Closed"
+    );
+    // post-close submits are rejected the same way, not dropped silently
+    assert_eq!(h.submit(t0, s0), SubmitOutcome::Closed);
+    let st = h.totals();
+    assert_eq!(st.closed_rejects, 2);
+    assert_eq!(
+        st.accepted + st.shed + st.deduped + st.closed_rejects + st.resident,
+        st.submitted,
+        "conservation must hold through close"
+    );
+}
+
+/// Duplicated and reordered transport collapses back to exactly-once,
+/// in-order delivery: the faulted path publishes contexts identical to
+/// an in-order run of the same events, and every extra delivery lands
+/// in `deduped` — the window accounting never double-counts.
+#[test]
+fn duplicated_reordered_transport_matches_in_order_ingest() {
+    let wsize = 5;
+    let events = stream(19, 4, 500);
+
+    // in-order oracle through the same front-end machinery
+    let mut fe_a = front_end(1 << 14, ShedPolicy::ShedOldest, wsize);
+    let mut r_a = router(wsize);
+    let h_a = fe_a.handle();
+    for (i, (t, s)) in events.iter().enumerate() {
+        h_a.submit(*t, s.clone());
+        if i % 16 == 15 {
+            fe_a.pump(&mut r_a);
+        }
+    }
+    fe_a.pump(&mut r_a);
+
+    // duplicating + delaying link (no loss), parked gaps never written
+    // off so nothing can be mistaken for a transport drop mid-run
+    let mut fe_b = IngestFrontEnd::new(IngestConfig {
+        queue_cap: 1 << 14,
+        policy: ShedPolicy::ShedOldest,
+        monitor: MonitorConfig { window_size: wsize },
+        gap_patience: 1_000,
+        reorder_cap: 1 << 14,
+        ..IngestConfig::default()
+    });
+    let mut r_b = router(wsize);
+    let h_b = fe_b.handle();
+    let mut link = TransportLayer::new(
+        TransportFaultPlan {
+            duplication: Some(SampleDup { prob: 0.4 }),
+            delay: Some(SampleDelay { prob: 0.3, max_hold: 3 }),
+            ..TransportFaultPlan::default()
+        },
+        99,
+    );
+    for (i, (t, s)) in events.iter().enumerate() {
+        link.send(&h_b, *t, s.clone());
+        if i % 16 == 15 {
+            fe_b.pump(&mut r_b);
+        }
+    }
+    link.flush(&h_b);
+    fe_b.flush_transport(&mut r_b);
+    fe_b.pump(&mut r_b); // tick the windows the settlement enqueued
+
+    let dups = link.report.samples_duplicated as u64;
+    assert!(dups > 0, "the link never duplicated anything");
+    assert!(link.report.samples_delayed > 0, "the link never reordered");
+    let st = h_b.totals();
+    assert_eq!(st.deduped, dups, "every duplicate collapsed exactly once");
+    assert_eq!(st.gaps_skipped, 0, "no real loss, so no write-offs");
+    assert_eq!(st.submitted, events.len() as u64 + dups);
+    assert_eq!(
+        st.accepted + st.shed + st.deduped + st.closed_rejects + st.resident,
+        st.submitted
+    );
+    // the label timeline is bit-identical to the in-order run
+    assert_eq!(r_b.tenants(), r_a.tenants());
+    for t in r_b.tenants() {
+        assert_eq!(
+            r_b.shard(t).unwrap().contexts,
+            r_a.shard(t).unwrap().contexts,
+            "tenant {t:?} contexts diverged under duplication/reorder"
+        );
+    }
+}
+
+/// The transport layer's ground-truth fault report reconciles with the
+/// consumer-side counters: injected ≥ observed, delivery totals exact,
+/// and nothing stays resident after the end-of-run flush.
+#[test]
+fn transport_ground_truth_reconciles_with_consumer_counters() {
+    let wsize = 5;
+    let events = stream(29, 4, 600);
+    let mut fe = front_end(1 << 14, ShedPolicy::ShedOldest, wsize);
+    let mut r = router(wsize);
+    let h = fe.handle();
+    let mut link = TransportLayer::new(
+        TransportFaultPlan {
+            loss: Some(SampleLoss { prob: 0.2 }),
+            delay: Some(SampleDelay { prob: 0.3, max_hold: 4 }),
+            duplication: Some(SampleDup { prob: 0.3 }),
+            ..TransportFaultPlan::default()
+        },
+        7,
+    );
+    for (i, (t, s)) in events.iter().enumerate() {
+        link.send(&h, *t, s.clone());
+        if i % 8 == 7 {
+            fe.pump(&mut r);
+        }
+    }
+    link.flush(&h);
+    fe.flush_transport(&mut r);
+
+    let rep = link.report;
+    assert!(rep.samples_dropped > 0, "the lossy link never dropped");
+    let st = h.totals();
+    // exact: every sent sample arrives exactly once unless dropped,
+    // plus one extra submission per duplicate
+    assert_eq!(
+        st.submitted,
+        link.sent_total() - rep.samples_dropped as u64
+            + rep.samples_duplicated as u64
+    );
+    // injected ≥ observed: the consumer never reports more faults than
+    // the link injected
+    assert!(
+        st.deduped
+            <= (rep.samples_duplicated + rep.samples_delayed) as u64,
+        "dedup hits {} vs injected {} dups + {} delays",
+        st.deduped,
+        rep.samples_duplicated,
+        rep.samples_delayed
+    );
+    assert!(
+        st.gaps_skipped
+            <= (rep.samples_dropped + rep.samples_delayed) as u64,
+        "write-offs {} vs injected {} drops + {} delays",
+        st.gaps_skipped,
+        rep.samples_dropped,
+        rep.samples_delayed
+    );
+    assert!(st.gaps_skipped > 0, "drops must surface as gap write-offs");
+    assert_eq!(st.resident, 0, "flush_transport left samples parked");
+    assert_eq!(
+        st.accepted + st.shed + st.deduped + st.closed_rejects + st.resident,
+        st.submitted
+    );
 }

@@ -108,6 +108,35 @@ fn main() {
         tp,
     );
 
+    // --- same observe path with telemetry installed: ObserveMetrics
+    // adds at most three relaxed atomic increments per window, so the
+    // instrumented stage must stay within ~3% of the one above
+    let obs_reg = kermit::obs::Registry::new();
+    let obs_ctx = Arc::new(Mutex::new(ContextStream::new(64)));
+    let mut pipe_obs = OnlinePipeline::new(obs_ctx);
+    pipe_obs.set_classifier(Box::new(ForestWindowClassifier::new(
+        forest.clone(),
+        0.5,
+    )));
+    pipe_obs.set_observe_metrics(kermit::obs::ObserveMetrics::register(
+        &obs_reg, "0",
+    ));
+    let mut io = 0usize;
+    let tpo = bench(50, 2000, || {
+        std::hint::black_box(pipe_obs.observe(&windows[io % windows.len()]));
+        io += 1;
+    });
+    t.row(&[
+        "observe_instrumented".into(),
+        tpo.per_iter_str(),
+        format!(
+            "{:+.1}% vs uninstrumented",
+            (tpo.median_ns / tp.median_ns - 1.0) * 100.0
+        ),
+    ]);
+    t.metric("observe_uninstrumented", tp.median_ns);
+    t.metric("observe_instrumented", tpo.median_ns);
+
     // --- forest inference alone
     let probe = AnalyticWindow::from_observation(&windows[0]).features;
     let tf = bench(50, 2000, || {

@@ -1,0 +1,153 @@
+//! Telemetry-plane smoke runner: drives a multi-tenant tuning-plane
+//! run with telemetry and decision tracing enabled, scrapes the
+//! registry, validates the Prometheus exposition with the strict
+//! parser, exercises the pool epoch-delta API, and runs the three
+//! alert-bearing chaos scenarios to prove the loop-health rules fire
+//! under their fault and clear after recovery — while the fault-free
+//! oracles stay silent. Writes `OBS_snapshot.json` (registry snapshot,
+//! decision-trace timeline, per-scenario alert verdicts — the CI
+//! artifact).
+//!
+//! With `KERMIT_SMOKE=1` everything shrinks to toy sizes and the
+//! guarantees are *asserted* — the blocking `rust-obs-smoke` CI job.
+
+use kermit::benchkit::Table;
+use kermit::chaoslab::{run_scenario, standard_scenarios};
+use kermit::experiments::tuning_plane::{plane_config, schedules, sim_config};
+use kermit::linalg::engine::{pool_stats, pool_stats_delta};
+use kermit::obs::{parse_prometheus, render_prometheus, snapshot_json, Registry};
+use kermit::simcluster::multi::MultiClusterEngine;
+use kermit::simcluster::rm::ResourceManager;
+use kermit::tuning::TuningPlane;
+use kermit::util::json::Json;
+
+fn main() {
+    let smoke = matches!(
+        std::env::var("KERMIT_SMOKE").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    );
+    let (tenants, jobs, budget) = if smoke { (3, 8, 8) } else { (4, 12, 14) };
+    let seed = 11;
+
+    println!("\n== Telemetry plane (scrape, exposition, alerts, tracing) ==\n");
+
+    // ---- instrumented multi-tenant run --------------------------------
+    let mut epoch = pool_stats(); // pool counters are process-global
+    let mut plane = TuningPlane::new(plane_config(seed, budget));
+    let reg = Registry::new();
+    plane.enable_telemetry(&reg);
+    plane.enable_tracing(1024);
+    let scheds = schedules(seed, tenants, jobs, &[0, 5]);
+    let mut engine = MultiClusterEngine::new(
+        ResourceManager::default_cluster(),
+        sim_config(),
+        seed,
+    );
+    for (t, js) in &scheds {
+        plane.ensure_tenant(*t);
+        engine.push_jobs(*t, js);
+    }
+    let t0 = std::time::Instant::now();
+    let sim = engine.run(&mut plane);
+    plane.drain();
+    plane.reconcile(sim.makespan + plane.resilience.decision_timeout + 1.0);
+    plane.scrape(&reg);
+    // the pool's epoch delta covers exactly this run's executor work
+    let pool_delta = pool_stats_delta(&mut epoch);
+    pool_delta.export_metrics(&reg);
+    let wall_run = t0.elapsed();
+
+    // ---- strict exposition validation ---------------------------------
+    let text = render_prometheus(&reg);
+    let fams = match parse_prometheus(&text) {
+        Ok(f) => f,
+        Err(e) => panic!("exposition failed strict parsing: {e}\n{text}"),
+    };
+    let samples: usize = fams.iter().map(|f| f.samples).sum();
+    println!(
+        "exposition: {} families, {} samples, strict parse OK \
+         (run wall {:.1}s)",
+        fams.len(),
+        samples,
+        wall_run.as_secs_f64()
+    );
+    for prefix in [
+        "kermit_stream_",
+        "kermit_plugin_",
+        "kermit_tuning_",
+        "kermit_coordinator_",
+        "kermit_pool_",
+    ] {
+        assert!(
+            fams.iter().any(|f| f.name.starts_with(prefix)),
+            "no {prefix} family in the exposition"
+        );
+    }
+    let trace = plane.decision_trace().expect("tracing enabled");
+    assert_eq!(trace.open_spans(), 0, "spans left open after reconcile");
+
+    // ---- alert-bearing chaos scenarios --------------------------------
+    let mut t = Table::new(&[
+        "scenario",
+        "expected alerts",
+        "fired",
+        "cleared",
+        "oracle",
+        "verdict",
+    ]);
+    let sweep = standard_scenarios(smoke);
+    let mut scenario_snaps = Vec::new();
+    let mut all_pass = true;
+    for spec in sweep.iter().filter(|s| !s.expect_alerts.is_empty()) {
+        let o = run_scenario(spec);
+        t.row(&[
+            o.name.clone(),
+            spec.expect_alerts.join(","),
+            o.alerts_fired.join(","),
+            o.alerts_cleared.join(","),
+            format!("{}", o.oracle_alerts),
+            if o.pass { "pass".into() } else { "FAIL".into() },
+        ]);
+        for f in &o.failures {
+            println!("{}: FAIL — {f}", o.name);
+        }
+        all_pass &= o.pass;
+        if smoke {
+            for a in &spec.expect_alerts {
+                assert!(
+                    o.alerts_fired.iter().any(|x| x == a),
+                    "{}: expected alert {a} never fired",
+                    o.name
+                );
+                assert!(
+                    o.alerts_cleared.iter().any(|x| x == a),
+                    "{}: alert {a} did not clear",
+                    o.name
+                );
+            }
+            assert_eq!(
+                o.oracle_alerts, 0,
+                "{}: fault-free oracle fired alerts",
+                o.name
+            );
+        }
+        scenario_snaps.push(o.to_json());
+    }
+    t.print();
+
+    // ---- CI artifact ---------------------------------------------------
+    let mut snap = Json::obj();
+    snap.set("registry", snapshot_json(&reg))
+        .set("decision_trace", trace.timeline_json())
+        .set("scenarios", Json::Arr(scenario_snaps));
+    let path = "OBS_snapshot.json";
+    match std::fs::write(path, snap.encode_pretty()) {
+        Ok(()) => println!("\nsnapshot written to {path}"),
+        Err(e) => println!("\nsnapshot write failed ({path}): {e}"),
+    }
+
+    if smoke {
+        assert!(all_pass, "an alert-bearing chaos scenario failed");
+        println!("\nobs smoke OK");
+    }
+}

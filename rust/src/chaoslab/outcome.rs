@@ -65,6 +65,14 @@ pub struct ScenarioOutcome {
     pub drifted_samples: usize,
     pub windows_dropped: u64,
 
+    // ---- loop-health alerts (faulted run) -----------------------------
+    /// Alert rules that fired during the faulted run (sorted names).
+    pub alerts_fired: Vec<String>,
+    /// Alert rules that cleared by the end of the settle evaluations.
+    pub alerts_cleared: Vec<String>,
+    /// Alerts the fault-free oracle fired — must be zero to pass.
+    pub oracle_alerts: usize,
+
     // ---- verdict ------------------------------------------------------
     pub pass: bool,
     pub failures: Vec<String>,
@@ -116,6 +124,25 @@ impl ScenarioOutcome {
             .set("tenants_churned", n(self.tenants_churned))
             .set("drifted_samples", n(self.drifted_samples))
             .set("windows_dropped", Json::Num(self.windows_dropped as f64))
+            .set(
+                "alerts_fired",
+                Json::Arr(
+                    self.alerts_fired
+                        .iter()
+                        .map(|a| Json::Str(a.clone()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "alerts_cleared",
+                Json::Arr(
+                    self.alerts_cleared
+                        .iter()
+                        .map(|a| Json::Str(a.clone()))
+                        .collect(),
+                ),
+            )
+            .set("oracle_alerts", n(self.oracle_alerts))
             .set("pass", Json::Bool(self.pass))
             .set(
                 "failures",

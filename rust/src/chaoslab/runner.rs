@@ -16,6 +16,7 @@
 use super::outcome::ScenarioOutcome;
 use super::scenario::{ScenarioSpec, ScenarioStep, StepAction};
 use crate::experiments::tuning_plane::{plane_config, schedules, sim_config};
+use crate::obs::{chaos_rules, AlertEngine, AlertEvent, AlertState, Registry};
 use crate::online::ChoiceKind;
 use crate::simcluster::config_space::{ConfigIndex, TuningConfig};
 use crate::simcluster::fault::FaultReport;
@@ -32,6 +33,13 @@ fn poison_config() -> ConfigIndex {
     ConfigIndex([0, 0, 0, 0, 0, 0])
 }
 
+/// First alert evaluation (sim seconds). Late enough that the oracle
+/// is past its all-UNKNOWN cold start and the knowledge guard on the
+/// UNKNOWN-rate rule has real data behind it.
+const ALERT_EVAL_START: f64 = 600.0;
+/// Evaluation cadence (sim seconds) after the first evaluation.
+const ALERT_EVAL_CADENCE: f64 = 200.0;
+
 /// Wraps the tuning plane as the engine's plug-in hub and fires the
 /// scenario's scripted knowledge-plane steps once sim time crosses
 /// their `at` (checked on every callback edge).
@@ -45,10 +53,22 @@ struct ChaosHub {
     corrupted: Vec<u32>,
     /// Cache hits that served a poisoned optimum after planting.
     poison_servings: usize,
+    /// Scrape target for the loop-health alert rules.
+    telemetry: Registry,
+    /// The chaos rule set, evaluated on the sim-time cadence.
+    alerts: AlertEngine,
+    /// Every fire/clear transition the run produced, in order.
+    alert_events: Vec<AlertEvent>,
+    /// Next sim time an alert evaluation is due.
+    next_eval: f64,
 }
 
 impl ChaosHub {
-    fn new(plane: TuningPlane, steps: Vec<ScenarioStep>) -> ChaosHub {
+    fn new(
+        plane: TuningPlane,
+        steps: Vec<ScenarioStep>,
+        telemetry: Registry,
+    ) -> ChaosHub {
         ChaosHub {
             plane,
             steps,
@@ -56,11 +76,39 @@ impl ChaosHub {
             poisoned: Vec::new(),
             corrupted: Vec::new(),
             poison_servings: 0,
+            telemetry,
+            alerts: AlertEngine::new(chaos_rules()),
+            alert_events: Vec::new(),
+            next_eval: ALERT_EVAL_START,
         }
+    }
+
+    /// Run ONE alert evaluation if a grid point has been crossed, then
+    /// skip the grid past `now` — a long gap between callbacks must
+    /// not replay stale evaluations (zero-delta catch-ups would reset
+    /// breach streaks and clear alerts spuriously).
+    fn eval_alerts_due(&mut self, now: f64) {
+        if !now.is_finite() || self.next_eval > now {
+            return;
+        }
+        let at = self.next_eval;
+        while self.next_eval <= now {
+            self.next_eval += ALERT_EVAL_CADENCE;
+        }
+        self.plane.scrape(&self.telemetry);
+        self.alert_events.extend(self.alerts.eval(&self.telemetry, at));
+    }
+
+    /// Forced post-run evaluation (the settle passes after drain /
+    /// reconcile / audit): scrape and evaluate unconditionally.
+    fn settle_eval(&mut self, at: f64) {
+        self.plane.scrape(&self.telemetry);
+        self.alert_events.extend(self.alerts.eval(&self.telemetry, at));
     }
 
     /// Fire every scripted step whose time has come.
     fn fire_due(&mut self, now: f64) {
+        self.eval_alerts_due(now);
         while self.next_step < self.steps.len()
             && self.steps[self.next_step].at <= now
         {
@@ -189,6 +237,10 @@ struct RunArtifacts {
     unquarantined_poison: usize,
     unquarantined_corrupt: usize,
     audit_quarantined: usize,
+    /// Alert rules that fired at least once (sorted, deduped).
+    alerts_fired: Vec<String>,
+    /// Alert rules that cleared at least once (sorted, deduped).
+    alerts_cleared: Vec<String>,
 }
 
 /// Pooled cache-hit ratio over the last `window` decisions of every
@@ -207,11 +259,7 @@ pub(crate) fn tail_hit_ratio(plane: &TuningPlane, window: usize) -> f64 {
                 .count();
         }
     }
-    if total == 0 {
-        0.0
-    } else {
-        hits as f64 / total as f64
-    }
+    crate::obs::ratio(hits as f64, total as f64)
 }
 
 fn run_one(spec: &ScenarioSpec, with_faults: bool) -> RunArtifacts {
@@ -257,9 +305,13 @@ fn run_one(spec: &ScenarioSpec, with_faults: bool) -> RunArtifacts {
             crowd_base += tenants as u32;
         }
     }
-    // knowledge-plane attacks only fire in the faulted run
+    // knowledge-plane attacks only fire in the faulted run; the alert
+    // engine runs in BOTH runs — the oracle must stay silent, which is
+    // exactly what makes a faulted-run alert a signal
+    let telemetry = Registry::default();
+    plane.enable_telemetry(&telemetry);
     let steps = if with_faults { spec.steps.clone() } else { Vec::new() };
-    let mut hub = ChaosHub::new(plane, steps);
+    let mut hub = ChaosHub::new(plane, steps, telemetry);
     let sim = engine.run(&mut hub);
     let fault_report = *engine.fault_report();
 
@@ -271,6 +323,13 @@ fn run_one(spec: &ScenarioSpec, with_faults: bool) -> RunArtifacts {
     let timeout = hub.plane.resilience.decision_timeout;
     hub.plane.reconcile(sim.makespan + timeout + 1.0);
     let audit_quarantined = hub.plane.audit_knowledge().len();
+    // settle evaluations: the first lands every post-run delta (the
+    // final audit's quarantines, late probe write-offs) so burst rules
+    // get their last chance to fire; the second sees a quiescent
+    // registry, so everything still active must clear
+    let settle_at = sim.makespan.max(hub.next_eval);
+    hub.settle_eval(settle_at);
+    hub.settle_eval(settle_at + ALERT_EVAL_CADENCE);
 
     let jobs_completed =
         sim.per_tenant.values().map(|l| l.jobs.len()).sum();
@@ -306,6 +365,19 @@ fn run_one(spec: &ScenarioSpec, with_faults: bool) -> RunArtifacts {
             .count();
         (poison, corrupt)
     };
+    let collect_alerts = |want: AlertState| {
+        let mut names: Vec<String> = hub
+            .alert_events
+            .iter()
+            .filter(|e| e.state == want)
+            .map(|e| e.rule.clone())
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    };
+    let alerts_fired = collect_alerts(AlertState::Fired);
+    let alerts_cleared = collect_alerts(AlertState::Cleared);
     RunArtifacts {
         report: hub.plane.report(sim),
         fault_report,
@@ -318,6 +390,8 @@ fn run_one(spec: &ScenarioSpec, with_faults: bool) -> RunArtifacts {
         unquarantined_poison,
         unquarantined_corrupt,
         audit_quarantined,
+        alerts_fired,
+        alerts_cleared,
     }
 }
 
@@ -363,6 +437,23 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioOutcome {
             "{} corrupt entries survived the audit",
             faulted.unquarantined_corrupt
         ));
+    }
+    // loop-health alerts: the fault-free oracle must never page, and
+    // every alert the spec expects must both fire while faulted and
+    // clear by the end of the settle evaluations
+    if !oracle.alerts_fired.is_empty() {
+        failures.push(format!(
+            "oracle fired alerts: {}",
+            oracle.alerts_fired.join(", ")
+        ));
+    }
+    for a in &spec.expect_alerts {
+        if !faulted.alerts_fired.iter().any(|f| f == a) {
+            failures.push(format!("expected alert {a} never fired"));
+        }
+        if !faulted.alerts_cleared.iter().any(|f| f == a) {
+            failures.push(format!("alert {a} did not clear by run end"));
+        }
     }
     if spec.recovery_floor > 0.0
         && faulted.tail_hit_ratio + 1e-9
@@ -411,6 +502,9 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioOutcome {
         tenants_churned: fr.tenants_churned,
         drifted_samples: fr.drifted_samples,
         windows_dropped: faulted.report.multi.windows_dropped,
+        alerts_fired: faulted.alerts_fired,
+        alerts_cleared: faulted.alerts_cleared,
+        oracle_alerts: oracle.alerts_fired.len(),
         pass: failures.is_empty(),
         failures,
     }

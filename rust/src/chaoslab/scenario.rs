@@ -57,6 +57,11 @@ pub struct ScenarioSpec {
     /// fraction of the oracle's (0 disables the check for scenarios
     /// whose guarantee is containment, not cache recovery).
     pub recovery_floor: f64,
+    /// Alert rules (`crate::obs::chaos_rules` names) the faulted run
+    /// must both FIRE while the fault is active and CLEAR by the end
+    /// of the settle evaluations. The oracle run must fire none,
+    /// regardless of this list.
+    pub expect_alerts: Vec<&'static str>,
 }
 
 impl ScenarioSpec {
@@ -77,6 +82,7 @@ impl ScenarioSpec {
             regret_bound: 2.5,
             recovery_window: 6,
             recovery_floor: 0.0,
+            expect_alerts: Vec::new(),
         }
     }
 
@@ -128,6 +134,7 @@ pub fn standard_scenarios(smoke: bool) -> Vec<ScenarioSpec> {
     });
     s.faults.max_requeues = 2;
     s.regret_bound = 3.0;
+    s.expect_alerts = vec!["probe_failure_burst"];
     scenarios.push(s);
 
     // Noisy neighbor: a mid-run interference window shrinks every
@@ -169,6 +176,7 @@ pub fn standard_scenarios(smoke: bool) -> Vec<ScenarioSpec> {
         phase_shift: 150.0,
     });
     s.regret_bound = 3.0;
+    s.expect_alerts = vec!["unknown_rate_spike"];
     scenarios.push(s);
 
     // Poisoned DB: no engine faults at all — the attack is on the
@@ -188,6 +196,7 @@ pub fn standard_scenarios(smoke: bool) -> Vec<ScenarioSpec> {
         action: StepAction::CorruptEntry,
     });
     s.regret_bound = 3.0;
+    s.expect_alerts = vec!["knowledge_quarantine"];
     scenarios.push(s);
 
     for s in &mut scenarios {
@@ -227,5 +236,30 @@ mod tests {
         // smoke is strictly smaller than full
         let full = standard_scenarios(false);
         assert!(sweep[0].jobs_per_tenant < full[0].jobs_per_tenant);
+    }
+
+    #[test]
+    fn expected_alerts_name_real_chaos_rules() {
+        let known: Vec<String> = crate::obs::chaos_rules()
+            .iter()
+            .map(|r| r.name.clone())
+            .collect();
+        let sweep = standard_scenarios(true);
+        let expecting: Vec<&ScenarioSpec> = sweep
+            .iter()
+            .filter(|s| !s.expect_alerts.is_empty())
+            .collect();
+        // the fire-and-clear guarantee is exercised by at least three
+        // distinct fault families
+        assert!(expecting.len() >= 3, "only {} expect alerts", expecting.len());
+        for s in expecting {
+            for a in &s.expect_alerts {
+                assert!(
+                    known.iter().any(|k| k == a),
+                    "{}: unknown alert rule {a}",
+                    s.name
+                );
+            }
+        }
     }
 }

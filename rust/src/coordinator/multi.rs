@@ -35,6 +35,7 @@ use crate::clustering::{DistanceProvider, NativeDistance};
 use crate::features::ObservationWindow;
 use crate::knowledge::{shared_db, SharedWorkloadDb, WorkloadDb};
 use crate::ml::forest::RandomForest;
+use crate::obs::Registry;
 use crate::online::classifier::{GatedForestClassifier, WindowClassifier};
 use crate::online::{ForestWindowClassifier, PluginStats, UNKNOWN};
 use crate::stream::{
@@ -104,11 +105,7 @@ impl MultiTenantReport {
             .fold((0usize, 0usize), |(k, t), &(_, wk, wt)| {
                 (k + wk, t + wt)
             });
-        if total == 0 {
-            0.0
-        } else {
-            known as f64 / total as f64
-        }
+        crate::obs::ratio(known as f64, total as f64)
     }
 
     /// Cluster-wide cache-hit ratio: cache hits over all tenants'
@@ -120,11 +117,7 @@ impl MultiTenantReport {
             .fold((0usize, 0usize), |(h, r), (_, s)| {
                 (h + s.cache_hits, r + s.requests)
             });
-        if reqs == 0 {
-            0.0
-        } else {
-            hits as f64 / reqs as f64
-        }
+        crate::obs::ratio(hits as f64, reqs as f64)
     }
 }
 
@@ -179,6 +172,10 @@ pub struct MultiTenantCoordinator {
     /// Per tenant per label: (summed L2 residual, window count) of
     /// observed window means against the stored characterization.
     residuals: BTreeMap<TenantId, BTreeMap<u32, (f64, u64)>>,
+    /// Telemetry registry, when enabled: the router's shards carry
+    /// per-tenant observe counters and `run_offline` records
+    /// wall-clock cycle durations here.
+    telemetry: Option<Registry>,
 }
 
 impl MultiTenantCoordinator {
@@ -219,6 +216,63 @@ impl MultiTenantCoordinator {
             ingest: None,
             supervisor: IngestSupervisor::new(SupervisorConfig::default()),
             residuals: BTreeMap::new(),
+            telemetry: None,
+        }
+    }
+
+    /// Enable telemetry: instrument every pipeline shard (current and
+    /// future) with per-tenant observe counters and record off-line
+    /// cycle durations into `reg`. Telemetry never changes what the
+    /// loop decides or publishes.
+    pub fn enable_telemetry(&mut self, reg: &Registry) {
+        self.router.enable_telemetry(reg);
+        self.telemetry = Some(reg.clone());
+    }
+
+    /// Bridge the coordinator's loop-health counters into `reg`:
+    /// off-line cycle count, knowledge-plane size, window drops, the
+    /// supervisor's health states, per-tenant ingest stats (when a
+    /// front-end is attached) and per-tenant per-label residual-drift
+    /// gauges.
+    pub fn export_metrics(&self, reg: &Registry) {
+        reg.counter(
+            "kermit_coordinator_offline_runs_total",
+            "Consolidated off-line cycles executed.",
+            &[],
+        )
+        .set_total(self.offline_runs as u64);
+        reg.counter(
+            "kermit_stream_windows_dropped_total",
+            "Windows dropped by capped shard logs.",
+            &[],
+        )
+        .set_total(self.router.windows_dropped());
+        reg.gauge(
+            "kermit_knowledge_workloads_known",
+            "Workload classes currently held by the knowledge plane.",
+            &[],
+        )
+        .set(self.db.read().unwrap().len() as f64);
+        self.supervisor.export_metrics(reg);
+        if let Some(h) = self.ingest_handle() {
+            for (t, st) in h.stats() {
+                st.export_metrics(reg, &t.0.to_string());
+            }
+        }
+        for (t, by_label) in &self.residuals {
+            let tenant = t.0.to_string();
+            for (label, (sum, n)) in by_label {
+                reg.gauge(
+                    "kermit_coordinator_residual",
+                    "Mean L2 residual of observed window means against \
+                     the stored characterization.",
+                    &[
+                        ("tenant", tenant.as_str()),
+                        ("label", label.to_string().as_str()),
+                    ],
+                )
+                .set(sum / (*n).max(1) as f64);
+            }
         }
     }
 
@@ -518,6 +572,12 @@ impl MultiTenantCoordinator {
     }
 
     pub fn run_offline(&mut self) {
+        // wall-clock only ever feeds the telemetry histogram — never a
+        // decision, so determinism is untouched
+        let cycle_start = self
+            .telemetry
+            .is_some()
+            .then(std::time::Instant::now);
         self.windows_since_offline = 0;
         // integrity first: a corrupt entry (NaN centroid, off-grid
         // config) must not poison this cycle's matching or synthesis
@@ -528,6 +588,7 @@ impl MultiTenantCoordinator {
             // pressure counters so the trigger re-fires once the union
             // backlog is big enough, instead of making a pressured
             // tenant re-earn min_windows from scratch
+            self.record_cycle_duration(cycle_start);
             return;
         }
         self.since_offline.clear();
@@ -586,6 +647,19 @@ impl MultiTenantCoordinator {
                 let cut = ws.len() - keep;
                 ws.drain(..cut);
             }
+        }
+        self.record_cycle_duration(cycle_start);
+    }
+
+    fn record_cycle_duration(&self, start: Option<std::time::Instant>) {
+        if let (Some(reg), Some(t0)) = (&self.telemetry, start) {
+            reg.histogram(
+                "kermit_coordinator_offline_cycle_seconds",
+                "Wall-clock duration of off-line analyze/train cycles.",
+                &[],
+                &[0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0],
+            )
+            .observe(t0.elapsed().as_secs_f64());
         }
     }
 

@@ -69,6 +69,36 @@ pub struct PersistStats {
     pub wal_bytes: u64,
 }
 
+impl PersistStats {
+    /// Bridge the persistence counters into a telemetry registry under
+    /// `kermit_persist_*`.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry) {
+        let c = |name: &str, help: &str, v: u64| {
+            reg.counter(name, help, &[]).set_total(v);
+        };
+        c(
+            "kermit_persist_snapshots_written_total",
+            "Knowledge snapshots rotated to disk.",
+            self.snapshots_written,
+        );
+        c(
+            "kermit_persist_snapshot_bytes_total",
+            "Bytes written across all snapshots.",
+            self.snapshot_bytes,
+        );
+        c(
+            "kermit_persist_wal_records_total",
+            "Records appended to the write-ahead log.",
+            self.wal_records_appended,
+        );
+        c(
+            "kermit_persist_wal_bytes_total",
+            "Bytes appended to the write-ahead log.",
+            self.wal_bytes,
+        );
+    }
+}
+
 /// What recovery did — every decision auditable, and the numbers the
 /// chaos-lab guarantees are asserted against.
 #[derive(Debug, Clone, Default)]
@@ -93,6 +123,29 @@ pub struct RecoveryReport {
 }
 
 impl RecoveryReport {
+    /// Bridge the recovery decisions into a telemetry registry under
+    /// `kermit_persist_recovery_*` (how the last open fell back).
+    pub fn export_metrics(&self, reg: &crate::obs::Registry) {
+        reg.counter(
+            "kermit_persist_recovery_snapshots_rejected_total",
+            "Snapshot files rejected while falling back on recovery.",
+            &[],
+        )
+        .set_total(self.snapshots_rejected);
+        reg.counter(
+            "kermit_persist_recovery_wal_replayed_total",
+            "WAL records applied on top of the recovered snapshot.",
+            &[],
+        )
+        .set_total(self.wal_records_replayed);
+        reg.gauge(
+            "kermit_persist_recovery_torn_tail",
+            "1 when the last recovery truncated a torn WAL tail.",
+            &[],
+        )
+        .set(if self.wal_torn_tail { 1.0 } else { 0.0 });
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set(

@@ -22,6 +22,7 @@ pub mod knowledge;
 pub mod linalg;
 pub mod ml;
 pub mod monitor;
+pub mod obs;
 pub mod offline;
 pub mod online;
 pub mod runtime;

@@ -94,7 +94,10 @@
 //! path and there is no scheduling nondeterminism to observe.
 
 use super::pool;
-pub use super::pool::{stats as pool_stats, PoolStats};
+pub use super::pool::{
+    stats as pool_stats, stats_delta as pool_stats_delta, PoolStats,
+    SPAWN_LATENCY_BOUNDS_NS,
+};
 use std::ops::Range;
 
 /// Below this many items a parallel call runs sequentially (see the

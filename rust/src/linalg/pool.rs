@@ -225,6 +225,13 @@ impl Task {
             pool.metrics.spawn_lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
             pool.metrics.spawn_lat_count.fetch_add(1, Ordering::Relaxed);
             pool.metrics.spawn_lat_max_ns.fetch_max(ns, Ordering::Relaxed);
+            for (i, bound) in SPAWN_LATENCY_BOUNDS_NS.iter().enumerate() {
+                if ns <= *bound {
+                    pool.metrics.spawn_lat_buckets[i]
+                        .fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
         }
         self.job.run_chunk(self.chunk);
         pool.metrics.tasks_executed.fetch_add(1, Ordering::Relaxed);
@@ -256,7 +263,14 @@ struct Metrics {
     spawn_lat_sum_ns: AtomicU64,
     spawn_lat_count: AtomicU64,
     spawn_lat_max_ns: AtomicU64,
+    spawn_lat_buckets: [AtomicU64; SPAWN_LATENCY_BOUNDS_NS.len()],
 }
+
+/// Upper bounds (ns, inclusive) of the spawn-latency histogram
+/// buckets: 1µs, 10µs, 100µs, 1ms, 10ms. Latencies beyond the last
+/// bound land only in the implicit +Inf bucket (`spawn_latency_count`).
+pub const SPAWN_LATENCY_BOUNDS_NS: [u64; 5] =
+    [1_000, 10_000, 100_000, 1_000_000, 10_000_000];
 
 /// A point-in-time snapshot of the executor's self-metrics. See
 /// [`stats`].
@@ -290,6 +304,140 @@ pub struct PoolStats {
     pub spawn_latency_mean_ns: u64,
     /// Max submit → first-worker-pickup latency.
     pub spawn_latency_max_ns: u64,
+    /// Jobs whose spawn latency was recorded (first worker pickup).
+    pub spawn_latency_count: u64,
+    /// Sum of recorded spawn latencies, ns.
+    pub spawn_latency_sum_ns: u64,
+    /// Non-cumulative spawn-latency bucket counts, one per
+    /// [`SPAWN_LATENCY_BOUNDS_NS`] bound.
+    pub spawn_latency_buckets: [u64; SPAWN_LATENCY_BOUNDS_NS.len()],
+}
+
+impl PoolStats {
+    /// Counters accumulate for the life of the pool; this subtracts an
+    /// epoch snapshot so benches and alert rules see per-interval
+    /// values, not lifetime totals. Gauges (`workers`,
+    /// `pending_tasks`, `pending_peak`, the latency mean/max) keep
+    /// their current values. Saturating, so a pool restart between
+    /// snapshots yields zeros rather than wrapping.
+    pub fn delta_since(&self, epoch: &PoolStats) -> PoolStats {
+        let mut buckets = [0u64; SPAWN_LATENCY_BOUNDS_NS.len()];
+        for (i, out) in buckets.iter_mut().enumerate() {
+            *out = self.spawn_latency_buckets[i]
+                .saturating_sub(epoch.spawn_latency_buckets[i]);
+        }
+        let count =
+            self.spawn_latency_count.saturating_sub(epoch.spawn_latency_count);
+        let sum = self
+            .spawn_latency_sum_ns
+            .saturating_sub(epoch.spawn_latency_sum_ns);
+        PoolStats {
+            workers: self.workers,
+            jobs: self.jobs.saturating_sub(epoch.jobs),
+            tasks_injected: self
+                .tasks_injected
+                .saturating_sub(epoch.tasks_injected),
+            tasks_executed: self
+                .tasks_executed
+                .saturating_sub(epoch.tasks_executed),
+            caller_chunks: self
+                .caller_chunks
+                .saturating_sub(epoch.caller_chunks),
+            steals: self.steals.saturating_sub(epoch.steals),
+            stolen_tasks: self.stolen_tasks.saturating_sub(epoch.stolen_tasks),
+            parks: self.parks.saturating_sub(epoch.parks),
+            tasks_pruned: self.tasks_pruned.saturating_sub(epoch.tasks_pruned),
+            pending_tasks: self.pending_tasks,
+            pending_peak: self.pending_peak,
+            spawn_latency_mean_ns: if count == 0 { 0 } else { sum / count },
+            spawn_latency_max_ns: self.spawn_latency_max_ns,
+            spawn_latency_count: count,
+            spawn_latency_sum_ns: sum,
+            spawn_latency_buckets: buckets,
+        }
+    }
+
+    /// Bridge this snapshot into a telemetry registry under
+    /// `kermit_pool_*`. Pool counters are process-global (every
+    /// dispatcher in the process shares them), so this is a caller
+    /// decision — `TuningPlane::scrape` deliberately does not export
+    /// them, keeping chaos-scenario registries sim-deterministic.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry) {
+        let c = |name: &str, help: &str, v: u64| {
+            reg.counter(name, help, &[]).set_total(v);
+        };
+        c(
+            "kermit_pool_jobs_total",
+            "Jobs submitted to the work-stealing pool.",
+            self.jobs,
+        );
+        c(
+            "kermit_pool_tasks_injected_total",
+            "Chunk tasks pushed onto the pool injector.",
+            self.tasks_injected,
+        );
+        c(
+            "kermit_pool_tasks_executed_total",
+            "Chunks executed by pool workers.",
+            self.tasks_executed,
+        );
+        c(
+            "kermit_pool_caller_chunks_total",
+            "Chunks executed inline by submitting callers.",
+            self.caller_chunks,
+        );
+        c(
+            "kermit_pool_steals_total",
+            "Successful steal operations.",
+            self.steals,
+        );
+        c(
+            "kermit_pool_stolen_tasks_total",
+            "Live tasks moved by steals.",
+            self.stolen_tasks,
+        );
+        c(
+            "kermit_pool_parks_total",
+            "Times a worker parked on the condvar.",
+            self.parks,
+        );
+        c(
+            "kermit_pool_tasks_pruned_total",
+            "Stale tasks discarded without running.",
+            self.tasks_pruned,
+        );
+        reg.gauge(
+            "kermit_pool_workers",
+            "Live pool worker threads.",
+            &[],
+        )
+        .set(self.workers as f64);
+        reg.gauge(
+            "kermit_pool_pending_tasks",
+            "Tasks resident in the injector or a worker deque.",
+            &[],
+        )
+        .set(self.pending_tasks as f64);
+        reg.gauge(
+            "kermit_pool_pending_peak",
+            "High-water mark of pending tasks.",
+            &[],
+        )
+        .set(self.pending_peak as f64);
+        let bounds: Vec<f64> =
+            SPAWN_LATENCY_BOUNDS_NS.iter().map(|b| *b as f64).collect();
+        reg.histogram(
+            "kermit_pool_spawn_latency_ns",
+            "Submit to first-worker-pickup latency, ns.",
+            &[],
+            &bounds,
+        )
+        .set_totals(
+            &self.spawn_latency_buckets,
+            self.spawn_latency_count,
+            self.spawn_latency_sum_ns as f64,
+        );
+    }
 }
 
 struct Pool {
@@ -654,6 +802,10 @@ pub fn stats() -> PoolStats {
     let m = &p.metrics;
     let count = m.spawn_lat_count.load(Ordering::Relaxed);
     let sum = m.spawn_lat_sum_ns.load(Ordering::Relaxed);
+    let mut buckets = [0u64; SPAWN_LATENCY_BOUNDS_NS.len()];
+    for (i, out) in buckets.iter_mut().enumerate() {
+        *out = m.spawn_lat_buckets[i].load(Ordering::Relaxed);
+    }
     PoolStats {
         workers: p.shared.lock().unwrap().workers,
         jobs: m.jobs.load(Ordering::Relaxed),
@@ -668,13 +820,61 @@ pub fn stats() -> PoolStats {
         pending_peak: m.pending_peak.load(Ordering::Relaxed),
         spawn_latency_mean_ns: if count == 0 { 0 } else { sum / count },
         spawn_latency_max_ns: m.spawn_lat_max_ns.load(Ordering::Relaxed),
+        spawn_latency_count: count,
+        spawn_latency_sum_ns: sum,
+        spawn_latency_buckets: buckets,
     }
+}
+
+/// Epoch-diffing wrapper around [`stats`]: returns the counter deltas
+/// since `epoch` and advances `epoch` to the current snapshot, so each
+/// call yields the activity of the interval it closes. Start from
+/// `PoolStats::default()` to make the first interval span the pool's
+/// whole life.
+pub fn stats_delta(epoch: &mut PoolStats) -> PoolStats {
+    let now = stats();
+    let delta = now.delta_since(epoch);
+    *epoch = now;
+    delta
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn delta_since_subtracts_counters_and_keeps_gauges() {
+        let mut epoch = PoolStats {
+            jobs: 10,
+            steals: 4,
+            spawn_latency_count: 2,
+            spawn_latency_sum_ns: 2_000,
+            spawn_latency_buckets: [2, 0, 0, 0, 0],
+            ..PoolStats::default()
+        };
+        let now = PoolStats {
+            workers: 3,
+            jobs: 15,
+            steals: 9,
+            pending_tasks: 7,
+            spawn_latency_count: 4,
+            spawn_latency_sum_ns: 8_000,
+            spawn_latency_buckets: [2, 2, 0, 0, 0],
+            ..PoolStats::default()
+        };
+        let d = now.delta_since(&epoch);
+        assert_eq!(d.jobs, 5);
+        assert_eq!(d.steals, 5);
+        assert_eq!(d.workers, 3, "gauge keeps current value");
+        assert_eq!(d.pending_tasks, 7, "gauge keeps current value");
+        assert_eq!(d.spawn_latency_count, 2);
+        assert_eq!(d.spawn_latency_mean_ns, 3_000);
+        assert_eq!(d.spawn_latency_buckets, [0, 2, 0, 0, 0]);
+        // a restarted pool (counters below epoch) saturates to zero
+        epoch.jobs = 100;
+        assert_eq!(now.delta_since(&epoch).jobs, 0);
+    }
 
     #[test]
     fn dispatch_runs_every_chunk_exactly_once() {

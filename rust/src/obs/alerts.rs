@@ -1,0 +1,432 @@
+//! Loop-health alert rules evaluated on a cadence over registry
+//! samples.
+//!
+//! Rules come in three shapes:
+//!
+//! * [`RuleExpr::GaugeAbove`] — instantaneous threshold on a family
+//!   total (queue depth, degraded-tenant count);
+//! * [`RuleExpr::DeltaAbove`] — per-evaluation-interval increase of a
+//!   counter total (persist-error burst, probe-failure burst);
+//! * [`RuleExpr::DeltaRatioAbove`] — ratio of two counter deltas with
+//!   a minimum-denominator guard (UNKNOWN-rate spike).
+//!
+//! Delta rules self-baseline: the first evaluation only records the
+//! current totals and can never fire, so attaching the engine to a
+//! registry mid-run is safe. A rule fires after `fire_after`
+//! consecutive breaching evaluations and clears on the first clean
+//! one, emitting deterministic [`AlertEvent`]s either way — that
+//! fire-then-clear sequence is exactly what the chaos scenarios
+//! assert on (and the fault-free oracle must stay silent).
+//!
+//! An optional `guard` suppresses a rule until some other family
+//! total reaches a floor — e.g. the UNKNOWN-rate rule stays quiet
+//! until the knowledge base knows at least one workload, so cold
+//! starts (where *everything* is UNKNOWN by construction) don't page.
+
+use super::registry::Registry;
+
+/// The comparison a rule applies each evaluation.
+#[derive(Debug, Clone)]
+pub enum RuleExpr {
+    /// Family total is above `threshold` right now.
+    GaugeAbove { metric: String, threshold: f64 },
+    /// Family total grew by more than `threshold` since the previous
+    /// evaluation.
+    DeltaAbove { metric: String, threshold: f64 },
+    /// `delta(num) / delta(den)` exceeds `threshold`, evaluated only
+    /// when `delta(den) >= min_den`.
+    DeltaRatioAbove {
+        num: String,
+        den: String,
+        threshold: f64,
+        min_den: f64,
+    },
+}
+
+/// One alert rule.
+#[derive(Debug, Clone)]
+pub struct AlertRule {
+    pub name: String,
+    pub expr: RuleExpr,
+    /// Consecutive breaching evaluations required before firing.
+    pub fire_after: u32,
+    /// Suppress the rule until `metric`'s family total is at least
+    /// this floor.
+    pub guard: Option<(String, f64)>,
+}
+
+impl AlertRule {
+    pub fn new(name: &str, expr: RuleExpr) -> AlertRule {
+        AlertRule {
+            name: name.to_string(),
+            expr,
+            fire_after: 1,
+            guard: None,
+        }
+    }
+
+    pub fn fire_after(mut self, n: u32) -> AlertRule {
+        self.fire_after = n.max(1);
+        self
+    }
+
+    pub fn guarded_by(mut self, metric: &str, floor: f64) -> AlertRule {
+        self.guard = Some((metric.to_string(), floor));
+        self
+    }
+}
+
+/// Fired or cleared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Fired,
+    Cleared,
+}
+
+/// A deterministic alert transition.
+#[derive(Debug, Clone)]
+pub struct AlertEvent {
+    /// Evaluation timestamp (sim seconds in chaos runs).
+    pub at: f64,
+    pub rule: String,
+    pub state: AlertState,
+    /// The value that breached (or the value at clear time).
+    pub value: f64,
+}
+
+#[derive(Default)]
+struct RuleState {
+    prev_num: Option<f64>,
+    prev_den: f64,
+    breaches: u32,
+    active: bool,
+}
+
+/// Evaluates a rule set against a registry on whatever cadence the
+/// caller drives it at.
+pub struct AlertEngine {
+    rules: Vec<AlertRule>,
+    states: Vec<RuleState>,
+}
+
+impl AlertEngine {
+    pub fn new(rules: Vec<AlertRule>) -> AlertEngine {
+        let states = rules.iter().map(|_| RuleState::default()).collect();
+        AlertEngine { rules, states }
+    }
+
+    pub fn rules(&self) -> &[AlertRule] {
+        &self.rules
+    }
+
+    /// Names of rules currently in the fired state.
+    pub fn active(&self) -> Vec<String> {
+        self.rules
+            .iter()
+            .zip(&self.states)
+            .filter(|(_, s)| s.active)
+            .map(|(r, _)| r.name.clone())
+            .collect()
+    }
+
+    /// Run one evaluation pass; returns the transitions it produced,
+    /// in rule order.
+    pub fn eval(&mut self, reg: &Registry, now: f64) -> Vec<AlertEvent> {
+        let mut events = Vec::new();
+        for (rule, state) in self.rules.iter().zip(self.states.iter_mut()) {
+            let guard_ok = match &rule.guard {
+                Some((metric, floor)) => {
+                    reg.total(metric).unwrap_or(0.0) >= *floor
+                }
+                None => true,
+            };
+            let (breach, value) = match &rule.expr {
+                RuleExpr::GaugeAbove { metric, threshold } => {
+                    let v = reg.total(metric).unwrap_or(0.0);
+                    (v > *threshold, v)
+                }
+                RuleExpr::DeltaAbove { metric, threshold } => {
+                    let v = reg.total(metric).unwrap_or(0.0);
+                    let out = match state.prev_num {
+                        Some(prev) => {
+                            let d = v - prev;
+                            (d > *threshold, d)
+                        }
+                        None => (false, 0.0),
+                    };
+                    state.prev_num = Some(v);
+                    out
+                }
+                RuleExpr::DeltaRatioAbove {
+                    num,
+                    den,
+                    threshold,
+                    min_den,
+                } => {
+                    let nv = reg.total(num).unwrap_or(0.0);
+                    let dv = reg.total(den).unwrap_or(0.0);
+                    let out = match state.prev_num {
+                        Some(prev_n) => {
+                            let dn = nv - prev_n;
+                            let dd = dv - state.prev_den;
+                            let r = super::ratio(dn, dd);
+                            (dd >= *min_den && r > *threshold, r)
+                        }
+                        None => (false, 0.0),
+                    };
+                    state.prev_num = Some(nv);
+                    state.prev_den = dv;
+                    out
+                }
+            };
+            let breach = breach && guard_ok;
+            if breach {
+                state.breaches += 1;
+                if !state.active && state.breaches >= rule.fire_after {
+                    state.active = true;
+                    events.push(AlertEvent {
+                        at: now,
+                        rule: rule.name.clone(),
+                        state: AlertState::Fired,
+                        value,
+                    });
+                }
+            } else {
+                state.breaches = 0;
+                if state.active {
+                    state.active = false;
+                    events.push(AlertEvent {
+                        at: now,
+                        rule: rule.name.clone(),
+                        state: AlertState::Cleared,
+                        value,
+                    });
+                }
+            }
+        }
+        events
+    }
+}
+
+/// The rules chaos scenarios evaluate. Every input here is driven by
+/// the deterministic sim (plugin/tuning/knowledge counters scraped
+/// from the plane), so oracle runs are reproducibly silent.
+pub fn chaos_rules() -> Vec<AlertRule> {
+    vec![
+        // Sustained UNKNOWN-rate spike on the observe path. Guarded
+        // by the knowledge base knowing at least one workload so the
+        // all-UNKNOWN cold start can't page; needs two consecutive
+        // breaching evaluations with a real window flow.
+        AlertRule::new(
+            "unknown_rate_spike",
+            RuleExpr::DeltaRatioAbove {
+                num: "kermit_stream_unknown_windows_total".to_string(),
+                den: "kermit_stream_windows_observed_total".to_string(),
+                threshold: 0.8,
+                min_den: 8.0,
+            },
+        )
+        .fire_after(2)
+        .guarded_by("kermit_knowledge_workloads_known", 1.0),
+        // Probe measurements dying (preempted jobs, timeouts).
+        AlertRule::new(
+            "probe_failure_burst",
+            RuleExpr::DeltaAbove {
+                metric: "kermit_plugin_probes_failed_total".to_string(),
+                threshold: 0.5,
+            },
+        ),
+        // The poison detector or offline audit quarantining entries.
+        AlertRule::new(
+            "knowledge_quarantine",
+            RuleExpr::DeltaAbove {
+                metric: "kermit_knowledge_quarantines_total".to_string(),
+                threshold: 0.5,
+            },
+        ),
+        // Durable-store writes failing.
+        AlertRule::new(
+            "persist_error_burst",
+            RuleExpr::DeltaAbove {
+                metric: "kermit_persist_errors_total".to_string(),
+                threshold: 0.5,
+            },
+        ),
+        // Ingest supervisor holding tenants in Degraded/Healing.
+        AlertRule::new(
+            "tenant_degraded",
+            RuleExpr::GaugeAbove {
+                metric: "kermit_stream_tenants_degraded".to_string(),
+                threshold: 0.5,
+            },
+        ),
+    ]
+}
+
+/// The full catalog: the chaos rules plus rules whose inputs are not
+/// sim-deterministic (process-global pool gauges, scale-sensitive
+/// abandon counts) — fine for a live scrape loop, excluded from chaos
+/// assertions.
+pub fn standard_rules() -> Vec<AlertRule> {
+    let mut rules = chaos_rules();
+    rules.push(AlertRule::new(
+        "abandoned_search_storm",
+        RuleExpr::DeltaAbove {
+            metric: "kermit_plugin_searches_abandoned_total".to_string(),
+            threshold: 7.5,
+        },
+    ));
+    rules.push(AlertRule::new(
+        "pool_queue_depth",
+        RuleExpr::GaugeAbove {
+            metric: "kermit_pool_pending_tasks".to_string(),
+            threshold: 1024.0,
+        },
+    ));
+    rules
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg_with_counter(name: &str, v: u64) -> Registry {
+        let reg = Registry::new();
+        reg.counter(name, "t", &[]).add(v);
+        reg
+    }
+
+    #[test]
+    fn delta_rule_baselines_then_fires_then_clears() {
+        let reg = Registry::new();
+        let c = reg.counter("kermit_errs_total", "t", &[]);
+        let mut eng = AlertEngine::new(vec![AlertRule::new(
+            "err_burst",
+            RuleExpr::DeltaAbove {
+                metric: "kermit_errs_total".to_string(),
+                threshold: 0.5,
+            },
+        )]);
+        c.add(100); // pre-existing total must not fire on first eval
+        assert!(eng.eval(&reg, 1.0).is_empty(), "first eval baselines");
+        c.add(3);
+        let ev = eng.eval(&reg, 2.0);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].state, AlertState::Fired);
+        assert_eq!(ev[0].value, 3.0);
+        assert_eq!(eng.active(), vec!["err_burst".to_string()]);
+        // still breaching: no duplicate fire
+        c.add(2);
+        assert!(eng.eval(&reg, 3.0).is_empty());
+        // quiet interval clears
+        let ev = eng.eval(&reg, 4.0);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].state, AlertState::Cleared);
+        assert!(eng.active().is_empty());
+    }
+
+    #[test]
+    fn gauge_rule_fires_and_clears_immediately() {
+        let reg = Registry::new();
+        let g = reg.gauge("kermit_depth", "t", &[]);
+        let mut eng = AlertEngine::new(vec![AlertRule::new(
+            "deep",
+            RuleExpr::GaugeAbove {
+                metric: "kermit_depth".to_string(),
+                threshold: 10.0,
+            },
+        )]);
+        g.set(5.0);
+        assert!(eng.eval(&reg, 1.0).is_empty());
+        g.set(11.0);
+        assert_eq!(eng.eval(&reg, 2.0)[0].state, AlertState::Fired);
+        g.set(0.0);
+        assert_eq!(eng.eval(&reg, 3.0)[0].state, AlertState::Cleared);
+    }
+
+    #[test]
+    fn ratio_rule_respects_min_denominator_and_fire_after() {
+        let reg = Registry::new();
+        let num = reg.counter("kermit_u_total", "t", &[]);
+        let den = reg.counter("kermit_w_total", "t", &[]);
+        let mut eng = AlertEngine::new(vec![AlertRule::new(
+            "spike",
+            RuleExpr::DeltaRatioAbove {
+                num: "kermit_u_total".to_string(),
+                den: "kermit_w_total".to_string(),
+                threshold: 0.8,
+                min_den: 8.0,
+            },
+        )
+        .fire_after(2)]);
+        assert!(eng.eval(&reg, 0.0).is_empty()); // baseline
+        num.add(5);
+        den.add(5); // ratio 1.0 but den delta below min
+        assert!(eng.eval(&reg, 1.0).is_empty());
+        num.add(10);
+        den.add(10); // first breach — fire_after 2 holds it
+        assert!(eng.eval(&reg, 2.0).is_empty());
+        num.add(10);
+        den.add(10); // second consecutive breach fires
+        let ev = eng.eval(&reg, 3.0);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].state, AlertState::Fired);
+        assert_eq!(ev[0].value, 1.0);
+    }
+
+    #[test]
+    fn guard_suppresses_until_floor() {
+        let reg = reg_with_counter("kermit_bad_total", 0);
+        let bad = reg.counter("kermit_bad_total", "t", &[]);
+        let mut eng = AlertEngine::new(vec![AlertRule::new(
+            "g",
+            RuleExpr::DeltaAbove {
+                metric: "kermit_bad_total".to_string(),
+                threshold: 0.5,
+            },
+        )
+        .guarded_by("kermit_ready", 1.0)]);
+        eng.eval(&reg, 0.0);
+        bad.add(5);
+        assert!(eng.eval(&reg, 1.0).is_empty(), "guard metric absent");
+        reg.gauge("kermit_ready", "t", &[]).set(1.0);
+        bad.add(5);
+        assert_eq!(eng.eval(&reg, 2.0)[0].state, AlertState::Fired);
+    }
+
+    #[test]
+    fn missing_metric_is_zero_not_error() {
+        let reg = Registry::new();
+        let mut eng = AlertEngine::new(standard_rules());
+        assert!(eng.eval(&reg, 0.0).is_empty());
+        assert!(eng.eval(&reg, 1.0).is_empty());
+    }
+
+    #[test]
+    fn catalogs_are_consistent() {
+        let chaos = chaos_rules();
+        let standard = standard_rules();
+        assert!(standard.len() > chaos.len());
+        for r in &chaos {
+            assert!(standard.iter().any(|s| s.name == r.name));
+        }
+        // chaos rules never watch the process-global pool
+        for r in &chaos {
+            let metric_names: Vec<&str> = match &r.expr {
+                RuleExpr::GaugeAbove { metric, .. }
+                | RuleExpr::DeltaAbove { metric, .. } => vec![metric],
+                RuleExpr::DeltaRatioAbove { num, den, .. } => {
+                    vec![num, den]
+                }
+            }
+            .into_iter()
+            .map(|s| s.as_str())
+            .collect();
+            assert!(
+                metric_names.iter().all(|m| !m.contains("pool")),
+                "{} watches a pool metric",
+                r.name
+            );
+        }
+    }
+}

@@ -1,0 +1,569 @@
+//! Exposition: Prometheus text format, a deterministic JSON snapshot,
+//! and a strict parser used by the CI smoke to validate what we render.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::registry::{MetricKind, Registry, SeriesValue};
+
+/// Format a sample value the way Prometheus text format expects:
+/// integers without a decimal point, everything else via shortest
+/// round-trip `Display`, and the special values spelled `+Inf`,
+/// `-Inf`, `NaN`.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        return "NaN".to_string();
+    }
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf" } else { "-Inf" }.to_string();
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        return format!("{}", v as i64);
+    }
+    format!("{v}")
+}
+
+/// Escape a label value: backslash, double quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a HELP text: backslash and newline (quotes are fine there).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Render the registry in Prometheus text exposition format. Families
+/// appear in name order, series in sorted-label order, so the output
+/// is byte-for-byte deterministic for a given registry state.
+pub fn render_prometheus(reg: &Registry) -> String {
+    let mut out = String::new();
+    for fam in reg.gather() {
+        out.push_str(&format!(
+            "# HELP {} {}\n",
+            fam.name,
+            escape_help(&fam.help)
+        ));
+        out.push_str(&format!("# TYPE {} {}\n", fam.name, fam.kind.as_str()));
+        for (labels, value) in &fam.series {
+            match value {
+                SeriesValue::Counter(v) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        fam.name,
+                        label_block(labels, None),
+                        fmt_value(*v as f64)
+                    ));
+                }
+                SeriesValue::Gauge(v) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        fam.name,
+                        label_block(labels, None),
+                        fmt_value(*v)
+                    ));
+                }
+                SeriesValue::Histogram {
+                    bounds,
+                    buckets,
+                    count,
+                    sum,
+                } => {
+                    for (b, cum) in bounds.iter().zip(buckets.iter()) {
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            fam.name,
+                            label_block(labels, Some(("le", &fmt_value(*b)))),
+                            cum
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        fam.name,
+                        label_block(labels, Some(("le", "+Inf"))),
+                        count
+                    ));
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        fam.name,
+                        label_block(labels, None),
+                        fmt_value(*sum)
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        fam.name,
+                        label_block(labels, None),
+                        count
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic JSON snapshot of the registry, for test pinning and
+/// the `OBS_snapshot.json` CI artifact. Families and series keep the
+/// registry's canonical order (the codec sorts object keys anyway).
+pub fn snapshot_json(reg: &Registry) -> Json {
+    let mut root = Json::obj();
+    for fam in reg.gather() {
+        let mut f = Json::obj();
+        f.set("kind", Json::Str(fam.kind.as_str().to_string()))
+            .set("help", Json::Str(fam.help.clone()));
+        let series = fam
+            .series
+            .iter()
+            .map(|(labels, value)| {
+                let mut s = Json::obj();
+                let mut lj = Json::obj();
+                for (k, v) in labels {
+                    lj.set(k, Json::Str(v.clone()));
+                }
+                s.set("labels", lj);
+                match value {
+                    SeriesValue::Counter(v) => {
+                        s.set("value", Json::Num(*v as f64));
+                    }
+                    SeriesValue::Gauge(v) => {
+                        s.set("value", Json::Num(*v));
+                    }
+                    SeriesValue::Histogram {
+                        bounds,
+                        buckets,
+                        count,
+                        sum,
+                    } => {
+                        let bs = bounds
+                            .iter()
+                            .zip(buckets.iter())
+                            .map(|(b, c)| {
+                                let mut e = Json::obj();
+                                e.set("le", Json::Num(*b))
+                                    .set("n", Json::Num(*c as f64));
+                                e
+                            })
+                            .collect();
+                        s.set("buckets", Json::Arr(bs))
+                            .set("count", Json::Num(*count as f64))
+                            .set("sum", Json::Num(*sum));
+                    }
+                }
+                s
+            })
+            .collect();
+        f.set("series", Json::Arr(series));
+        root.set(&fam.name, f);
+    }
+    root
+}
+
+/// One family as seen by the strict parser.
+#[derive(Debug, Clone)]
+pub struct ParsedFamily {
+    pub name: String,
+    pub kind: String,
+    pub samples: usize,
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().map_or(false, |c| {
+            c.is_ascii_alphabetic() || c == '_' || c == ':'
+        })
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .next()
+            .map_or(false, |c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_sample_value(s: &str) -> Result<f64, String> {
+    match s {
+        "+Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        other => other
+            .parse::<f64>()
+            .map_err(|_| format!("bad sample value {other:?}")),
+    }
+}
+
+/// Split `name{labels} value` into parts, validating label syntax and
+/// unescaping values. Returns (metric_name, labels, value).
+fn parse_sample_line(
+    line: &str,
+) -> Result<(String, Vec<(String, String)>, f64), String> {
+    let (name_part, rest) = match line.find('{') {
+        Some(i) => {
+            let close = line
+                .rfind('}')
+                .ok_or_else(|| format!("unclosed label block: {line:?}"))?;
+            if close < i {
+                return Err(format!("malformed label block: {line:?}"));
+            }
+            (&line[..i], Some((&line[i + 1..close], &line[close + 1..])))
+        }
+        None => ("", None),
+    };
+    let (name, labels, value_part) = match rest {
+        Some((label_src, tail)) => {
+            let mut labels = Vec::new();
+            let mut src = label_src;
+            while !src.is_empty() {
+                let eq = src
+                    .find('=')
+                    .ok_or_else(|| format!("label missing '=': {src:?}"))?;
+                let key = &src[..eq];
+                if !valid_label_name(key) {
+                    return Err(format!("bad label name {key:?}"));
+                }
+                let after = &src[eq + 1..];
+                if !after.starts_with('"') {
+                    return Err(format!("label value not quoted: {src:?}"));
+                }
+                // walk the quoted value honoring escapes
+                let mut val = String::new();
+                let mut chars = after[1..].char_indices();
+                let mut end = None;
+                while let Some((i, c)) = chars.next() {
+                    match c {
+                        '\\' => match chars.next() {
+                            Some((_, 'n')) => val.push('\n'),
+                            Some((_, '\\')) => val.push('\\'),
+                            Some((_, '"')) => val.push('"'),
+                            other => {
+                                return Err(format!(
+                                    "bad escape {other:?} in label value"
+                                ))
+                            }
+                        },
+                        '"' => {
+                            end = Some(i);
+                            break;
+                        }
+                        c => val.push(c),
+                    }
+                }
+                let end = end
+                    .ok_or_else(|| format!("unterminated label value: {src:?}"))?;
+                labels.push((key.to_string(), val));
+                src = &after[1 + end + 1..];
+                if let Some(stripped) = src.strip_prefix(',') {
+                    src = stripped;
+                } else if !src.is_empty() {
+                    return Err(format!("junk after label value: {src:?}"));
+                }
+            }
+            (name_part.to_string(), labels, tail.trim())
+        }
+        None => {
+            let mut it = line.splitn(2, ' ');
+            let name = it.next().unwrap_or("").to_string();
+            let tail = it.next().unwrap_or("").trim();
+            (name, Vec::new(), tail)
+        }
+    };
+    if !valid_metric_name(&name) {
+        return Err(format!("bad metric name {name:?}"));
+    }
+    let value = parse_sample_value(value_part)?;
+    Ok((name, labels, value))
+}
+
+/// Strict parser over Prometheus text exposition. Beyond syntax, it
+/// enforces what the renderer promises: a TYPE line precedes every
+/// sample of its family, no sample belongs to an undeclared family,
+/// no duplicate series, histogram buckets are cumulative and end with
+/// an `+Inf` bucket equal to `_count`. Used by the CI smoke to keep
+/// the renderer honest.
+pub fn parse_prometheus(text: &str) -> Result<Vec<ParsedFamily>, String> {
+    struct FamState {
+        kind: String,
+        samples: usize,
+        // histogram per-series accounting keyed by non-le labels
+        hist: BTreeMap<String, HistState>,
+    }
+    #[derive(Default)]
+    struct HistState {
+        last_le: Option<f64>,
+        last_cum: Option<f64>,
+        saw_inf: bool,
+        inf_value: f64,
+        count: Option<f64>,
+        saw_sum: bool,
+    }
+
+    let mut fams: BTreeMap<String, FamState> = BTreeMap::new();
+    let mut order: Vec<String> = Vec::new();
+    let mut seen_series: BTreeMap<String, ()> = BTreeMap::new();
+
+    let owner_of = |name: &str, fams: &BTreeMap<String, FamState>| -> Option<String> {
+        if fams.contains_key(name) {
+            return Some(name.to_string());
+        }
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = name.strip_suffix(suffix) {
+                if let Some(f) = fams.get(base) {
+                    if f.kind == "histogram" {
+                        return Some(base.to_string());
+                    }
+                }
+            }
+        }
+        None
+    };
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: String| format!("line {}: {}", lineno + 1, msg);
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("").trim();
+            if !valid_metric_name(name) {
+                return Err(err(format!("bad metric name {name:?}")));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram") {
+                return Err(err(format!("bad TYPE {kind:?}")));
+            }
+            if fams.contains_key(name) {
+                return Err(err(format!("duplicate TYPE for {name}")));
+            }
+            fams.insert(
+                name.to_string(),
+                FamState {
+                    kind: kind.to_string(),
+                    samples: 0,
+                    hist: BTreeMap::new(),
+                },
+            );
+            order.push(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP and comments
+        }
+        let (name, labels, value) =
+            parse_sample_line(line).map_err(err)?;
+        let owner = owner_of(&name, &fams).ok_or_else(|| {
+            err(format!("sample {name} has no preceding TYPE"))
+        })?;
+        let series_key = format!("{name}|{labels:?}");
+        if seen_series.insert(series_key, ()).is_some() {
+            return Err(err(format!("duplicate series for {name}")));
+        }
+        let fam = fams.get_mut(&owner).expect("owner resolved above");
+        fam.samples += 1;
+        if fam.kind == "histogram" {
+            let base_labels: Vec<&(String, String)> =
+                labels.iter().filter(|(k, _)| k != "le").collect();
+            let hist_key = format!("{base_labels:?}");
+            let st = fam.hist.entry(hist_key).or_default();
+            if name.ends_with("_bucket") {
+                let le = labels
+                    .iter()
+                    .find(|(k, _)| k == "le")
+                    .map(|(_, v)| v.as_str())
+                    .ok_or_else(|| err("bucket without le".to_string()))?;
+                let le = parse_sample_value(le).map_err(err)?;
+                if le.is_infinite() {
+                    st.saw_inf = true;
+                    st.inf_value = value;
+                } else if st.saw_inf {
+                    return Err(err("bucket after +Inf".to_string()));
+                }
+                if let Some(prev) = st.last_le {
+                    if le <= prev {
+                        return Err(err("le not increasing".to_string()));
+                    }
+                }
+                if let Some(prev) = st.last_cum {
+                    if value < prev {
+                        return Err(err(
+                            "bucket counts not cumulative".to_string()
+                        ));
+                    }
+                }
+                st.last_le = Some(le);
+                st.last_cum = Some(value);
+            } else if name.ends_with("_count") {
+                st.count = Some(value);
+            } else if name.ends_with("_sum") {
+                st.saw_sum = true;
+            } else {
+                return Err(err(format!(
+                    "bare sample {name} on histogram family"
+                )));
+            }
+        }
+    }
+
+    for (name, fam) in &fams {
+        if fam.kind == "histogram" {
+            for st in fam.hist.values() {
+                if !st.saw_inf {
+                    return Err(format!("{name}: missing +Inf bucket"));
+                }
+                if !st.saw_sum {
+                    return Err(format!("{name}: missing _sum"));
+                }
+                match st.count {
+                    Some(c) if c == st.inf_value => {}
+                    Some(_) => {
+                        return Err(format!(
+                            "{name}: +Inf bucket != _count"
+                        ))
+                    }
+                    None => return Err(format!("{name}: missing _count")),
+                }
+            }
+        }
+    }
+
+    Ok(order
+        .into_iter()
+        .map(|name| {
+            let fam = &fams[&name];
+            ParsedFamily {
+                name: name.clone(),
+                kind: fam.kind.clone(),
+                samples: fam.samples,
+            }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_registry() -> Registry {
+        let reg = Registry::new();
+        reg.counter("kermit_demo_requests_total", "Requests served.", &[("tenant", "0")])
+            .add(3);
+        reg.counter("kermit_demo_requests_total", "Requests served.", &[("tenant", "1")])
+            .add(5);
+        reg.gauge("kermit_demo_pending", "Pending items.", &[]).set(2.5);
+        let h = reg.histogram(
+            "kermit_demo_latency_seconds",
+            "Latency.",
+            &[],
+            &[1.0, 5.0, 25.0],
+        );
+        h.observe(0.5);
+        h.observe(3.0);
+        h.observe(50.0);
+        reg
+    }
+
+    #[test]
+    fn render_is_deterministic_and_ordered() {
+        let a = render_prometheus(&demo_registry());
+        let b = render_prometheus(&demo_registry());
+        assert_eq!(a, b);
+        let pending = a.find("kermit_demo_pending").unwrap();
+        let latency = a.find("kermit_demo_latency_seconds").unwrap();
+        let requests = a.find("kermit_demo_requests_total").unwrap();
+        assert!(latency < pending && pending < requests);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.counter("kermit_esc_total", "e", &[("path", "a\"b\\c\nd")])
+            .inc();
+        let text = render_prometheus(&reg);
+        assert!(text.contains("path=\"a\\\"b\\\\c\\nd\""), "{text}");
+        // and the strict parser round-trips it
+        parse_prometheus(&text).expect("escaped output parses");
+    }
+
+    #[test]
+    fn parser_accepts_renderer_output() {
+        let text = render_prometheus(&demo_registry());
+        let fams = parse_prometheus(&text).expect("valid exposition");
+        assert_eq!(fams.len(), 3);
+        let hist = fams.iter().find(|f| f.kind == "histogram").unwrap();
+        assert_eq!(hist.name, "kermit_demo_latency_seconds");
+        // 4 buckets + sum + count
+        assert_eq!(hist.samples, 6);
+    }
+
+    #[test]
+    fn parser_rejects_non_cumulative_buckets() {
+        let bad = "# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 5\n\
+                   h_bucket{le=\"2\"} 3\n\
+                   h_bucket{le=\"+Inf\"} 5\n\
+                   h_sum 1\n\
+                   h_count 5\n";
+        assert!(parse_prometheus(bad)
+            .unwrap_err()
+            .contains("cumulative"));
+    }
+
+    #[test]
+    fn parser_rejects_samples_without_type() {
+        assert!(parse_prometheus("orphan_total 3\n")
+            .unwrap_err()
+            .contains("no preceding TYPE"));
+    }
+
+    #[test]
+    fn parser_rejects_inf_count_mismatch() {
+        let bad = "# TYPE h histogram\n\
+                   h_bucket{le=\"+Inf\"} 4\n\
+                   h_sum 1\n\
+                   h_count 5\n";
+        assert!(parse_prometheus(bad).unwrap_err().contains("+Inf"));
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic() {
+        let a = snapshot_json(&demo_registry()).encode_pretty();
+        let b = snapshot_json(&demo_registry()).encode_pretty();
+        assert_eq!(a, b);
+        assert!(a.contains("kermit_demo_requests_total"));
+    }
+}

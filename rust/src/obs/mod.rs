@@ -1,0 +1,154 @@
+//! The telemetry plane: the loop that monitors workloads finally
+//! monitors *itself*.
+//!
+//! KERMIT's MAPE-K loop produces plenty of numbers — `PoolStats`,
+//! `PluginStats`, `TenantIngestStats`, `MultiTenantReport` — but until
+//! this module they were report-scoped: polled ad hoc at run end and
+//! invisible between reports, so UNKNOWN-rate spikes, abandoned-search
+//! storms and executor queue buildup were only discoverable after the
+//! fact. The `obs` plane closes that gap with four std-only pieces:
+//!
+//! * [`registry`] — a lock-light metrics registry (`Counter` / `Gauge`
+//!   / `Histogram` on atomics). Handles are registered once and held;
+//!   a hot-path increment is a single relaxed atomic op. Label sets
+//!   are sorted, families live in a `BTreeMap`, so every export is
+//!   deterministic.
+//! * [`expo`] — Prometheus text exposition ([`render_prometheus`]),
+//!   a deterministic JSON snapshot for test pinning, and a *strict*
+//!   parser ([`parse_prometheus`]) the CI smoke validates the
+//!   exposition with.
+//! * [`alerts`] — threshold / rate-of-change rules evaluated on a
+//!   cadence over registry samples, producing deterministic
+//!   [`AlertEvent`]s the chaos scenarios assert on (fire while
+//!   faulted, clear after heal).
+//! * [`trace`] — ring-buffered spans for the decide → probe → measure
+//!   → persist path per tenant, exportable as JSON timelines.
+//!
+//! Instrumentation follows two idioms, both driven by the layer that
+//! owns the numbers:
+//!
+//! 1. **direct handles** where the hot path is concurrent — the
+//!    [`ObserveMetrics`] counters the stream router installs on every
+//!    pipeline shard (incremented from pool workers during a fanned-out
+//!    tick);
+//! 2. **scrape exporters** (`export_metrics` methods on the owning
+//!    stats types, orchestrated by `TuningPlane::scrape`) where
+//!    counters already exist — bridged into the registry as monotone
+//!    totals on every scrape.
+//!
+//! Telemetry must never change results: every hook is `Option`-gated
+//! and the parallel==sequential equivalence suites run with and
+//! without it unchanged.
+
+pub mod alerts;
+pub mod expo;
+pub mod registry;
+pub mod trace;
+
+pub use alerts::{
+    chaos_rules, standard_rules, AlertEngine, AlertEvent, AlertRule,
+    AlertState, RuleExpr,
+};
+pub use expo::{parse_prometheus, render_prometheus, snapshot_json};
+pub use registry::{
+    Counter, Gauge, Histogram, MetricKind, Registry, SeriesValue,
+};
+pub use trace::{DecisionTrace, TraceSpan};
+
+use registry::Registry as Reg;
+
+/// The one NaN-safe ratio helper every layer shares (`cache_hit_ratio`,
+/// `known_fraction`, tail-hit ratios, alert-rule delta ratios): returns
+/// `num / den` when the denominator is positive and both sides are
+/// finite, `0.0` otherwise — never NaN, never ±Inf.
+pub fn ratio(num: f64, den: f64) -> f64 {
+    if num.is_finite() && den.is_finite() && den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Static-registration handles for the on-line observe hot path: one
+/// set per pipeline shard, registered once when telemetry is enabled,
+/// then incremented with single relaxed atomic ops from whichever pool
+/// worker drains the shard that tick.
+#[derive(Clone)]
+pub struct ObserveMetrics {
+    /// Windows observed (`kermit_stream_windows_observed_total`).
+    pub windows: Counter,
+    /// Windows published as UNKNOWN
+    /// (`kermit_stream_unknown_windows_total`).
+    pub unknown: Counter,
+    /// Windows the change detector flagged as transitions
+    /// (`kermit_stream_transition_windows_total`).
+    pub transitions: Counter,
+}
+
+impl ObserveMetrics {
+    /// Register the observe-path counters for one tenant.
+    pub fn register(reg: &Reg, tenant: &str) -> ObserveMetrics {
+        let labels = [("tenant", tenant)];
+        ObserveMetrics {
+            windows: reg.counter(
+                "kermit_stream_windows_observed_total",
+                "Observation windows the on-line pipeline observed.",
+                &labels,
+            ),
+            unknown: reg.counter(
+                "kermit_stream_unknown_windows_total",
+                "Observed windows published with the UNKNOWN label.",
+                &labels,
+            ),
+            transitions: reg.counter(
+                "kermit_stream_transition_windows_total",
+                "Observed windows the change detector flagged as \
+                 transitions.",
+                &labels,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_is_nan_safe() {
+        assert_eq!(ratio(1.0, 2.0), 0.5);
+        assert_eq!(ratio(0.0, 2.0), 0.0);
+        assert_eq!(ratio(1.0, 0.0), 0.0);
+        assert_eq!(ratio(1.0, -3.0), 0.0);
+        assert_eq!(ratio(f64::NAN, 2.0), 0.0);
+        assert_eq!(ratio(1.0, f64::NAN), 0.0);
+        assert_eq!(ratio(f64::INFINITY, 2.0), 0.0);
+        assert_eq!(ratio(1.0, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn observe_metrics_register_per_tenant_series() {
+        let reg = Registry::new();
+        let m0 = ObserveMetrics::register(&reg, "0");
+        let m1 = ObserveMetrics::register(&reg, "1");
+        m0.windows.inc();
+        m0.windows.inc();
+        m1.windows.inc();
+        m0.unknown.inc();
+        assert_eq!(
+            reg.total("kermit_stream_windows_observed_total"),
+            Some(3.0)
+        );
+        assert_eq!(
+            reg.total("kermit_stream_unknown_windows_total"),
+            Some(1.0)
+        );
+        // re-registering the same tenant returns the same cell
+        let again = ObserveMetrics::register(&reg, "0");
+        again.windows.inc();
+        assert_eq!(
+            reg.total("kermit_stream_windows_observed_total"),
+            Some(4.0)
+        );
+    }
+}

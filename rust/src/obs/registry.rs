@@ -1,0 +1,456 @@
+//! Lock-light metrics registry.
+//!
+//! Design: registration is the slow path (one mutex, two `BTreeMap`
+//! lookups) and happens once per series; the returned handle wraps an
+//! `Arc<AtomicU64>` (or a small bundle of them for histograms), so the
+//! hot path — `Counter::inc`, `Gauge::set`, `Histogram::observe` — is
+//! lock-free and a handle clone is just an `Arc` clone. Handles stay
+//! valid for the registry's lifetime; scrapers re-enter through the
+//! same mutex and read everything with relaxed loads.
+//!
+//! Determinism: families are keyed by name in a `BTreeMap`, series by
+//! their sorted label set in a nested `BTreeMap`, so [`Registry::gather`]
+//! (and everything layered on it — exposition, JSON snapshot, alert
+//! evaluation) walks samples in one canonical order.
+//!
+//! Two write idioms coexist:
+//!
+//! * **owned counters** incremented on the hot path (`inc`/`add`);
+//! * **bridged counters** mirroring a plain `u64` an existing layer
+//!   already maintains — [`Counter::set_total`] uses `fetch_max`, so
+//!   repeated scrapes keep the series monotone even if exporters race.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// What a metric family is, for TYPE lines and snapshot kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// A monotone counter. `inc`/`add` are single relaxed atomic ops.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+
+    /// Bridge-exporter entry point: mirror an externally maintained
+    /// total into this series. Uses `fetch_max`, so the series never
+    /// goes backwards even if two scrapers race or the source resets.
+    pub fn set_total(&self, total: u64) {
+        self.cell.fetch_max(total, Ordering::Relaxed);
+    }
+}
+
+/// A gauge: an `f64` stored as bits in an `AtomicU64`.
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.cell.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.cell.load(Ordering::Relaxed))
+    }
+}
+
+struct HistogramCore {
+    /// Upper bounds (exclusive of +Inf, which is implicit).
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) observation counts; one per bound.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum of observed values as f64 bits, updated by CAS.
+    sum_bits: AtomicU64,
+}
+
+/// A fixed-bound histogram. `observe` is a linear bucket scan plus
+/// three atomic ops — fine for the latency-class bucket counts we use
+/// (≤ 8 bounds).
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistogramCore>,
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        for (i, b) in self.core.bounds.iter().enumerate() {
+            if v <= *b {
+                self.core.buckets[i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+        self.core.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.core.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.core.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Bridge-exporter entry point: overwrite the histogram with
+    /// externally maintained totals. `per_bucket` is non-cumulative,
+    /// one entry per bound; anything beyond the last bound only shows
+    /// up in `count`. Don't mix with `observe` on the same series.
+    pub fn set_totals(&self, per_bucket: &[u64], count: u64, sum: f64) {
+        for (i, cell) in self.core.buckets.iter().enumerate() {
+            let v = per_bucket.get(i).copied().unwrap_or(0);
+            cell.store(v, Ordering::Relaxed);
+        }
+        self.core.count.store(count, Ordering::Relaxed);
+        self.core.sum_bits.store(sum.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.count.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time reading of one series, as produced by
+/// [`Registry::gather`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SeriesValue {
+    Counter(u64),
+    Gauge(f64),
+    /// `buckets` are cumulative counts per bound (the +Inf bucket is
+    /// `count`); `sum` is the running sum of observations.
+    Histogram {
+        bounds: Vec<f64>,
+        buckets: Vec<u64>,
+        count: u64,
+        sum: f64,
+    },
+}
+
+/// A gathered family: name, help, kind and every series in canonical
+/// (sorted-label) order.
+#[derive(Debug, Clone)]
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    pub series: Vec<(Vec<(String, String)>, SeriesValue)>,
+}
+
+enum Cell {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<HistogramCore>),
+}
+
+struct Family {
+    help: String,
+    kind: MetricKind,
+    /// Histogram families share one bound vector, fixed at first
+    /// registration.
+    bounds: Vec<f64>,
+    series: BTreeMap<Vec<(String, String)>, Cell>,
+}
+
+/// The registry. Cheap to clone (shared interior); every layer that
+/// exports metrics takes `&Registry`.
+#[derive(Clone)]
+pub struct Registry {
+    inner: Arc<Mutex<BTreeMap<String, Family>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+fn canonical_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut out: BTreeMap<String, String> = BTreeMap::new();
+    for (k, v) in labels {
+        out.insert((*k).to_string(), (*v).to_string());
+    }
+    out.into_iter().collect()
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            inner: Arc::new(Mutex::new(BTreeMap::new())),
+        }
+    }
+
+    fn family_cell(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Cell {
+        let mut fams = self.inner.lock().expect("obs registry poisoned");
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            bounds: bounds.to_vec(),
+            series: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric {name} registered as {} and {}",
+            fam.kind.as_str(),
+            kind.as_str()
+        );
+        let key = canonical_labels(labels);
+        let cell = fam.series.entry(key).or_insert_with(|| match kind {
+            MetricKind::Counter => Cell::Counter(Arc::new(AtomicU64::new(0))),
+            MetricKind::Gauge => {
+                Cell::Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+            }
+            MetricKind::Histogram => {
+                let n = fam.bounds.len();
+                Cell::Histogram(Arc::new(HistogramCore {
+                    bounds: fam.bounds.clone(),
+                    buckets: (0..n).map(|_| AtomicU64::new(0)).collect(),
+                    count: AtomicU64::new(0),
+                    sum_bits: AtomicU64::new(0f64.to_bits()),
+                }))
+            }
+        });
+        match cell {
+            Cell::Counter(c) => Cell::Counter(Arc::clone(c)),
+            Cell::Gauge(g) => Cell::Gauge(Arc::clone(g)),
+            Cell::Histogram(h) => Cell::Histogram(Arc::clone(h)),
+        }
+    }
+
+    /// Register (or look up) a counter series. Idempotent: the same
+    /// `(name, labels)` always returns a handle onto the same cell.
+    pub fn counter(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Counter {
+        match self.family_cell(name, help, MetricKind::Counter, labels, &[]) {
+            Cell::Counter(cell) => Counter { cell },
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) a gauge series.
+    pub fn gauge(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Gauge {
+        match self.family_cell(name, help, MetricKind::Gauge, labels, &[]) {
+            Cell::Gauge(cell) => Gauge { cell },
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) a histogram series. `bounds` must be
+    /// strictly increasing; the family's bounds are fixed by the first
+    /// registration.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram {name} bounds must be strictly increasing"
+        );
+        match self.family_cell(name, help, MetricKind::Histogram, labels, bounds)
+        {
+            Cell::Histogram(core) => Histogram { core },
+            _ => unreachable!(),
+        }
+    }
+
+    /// Snapshot every family in canonical order.
+    pub fn gather(&self) -> Vec<FamilySnapshot> {
+        let fams = self.inner.lock().expect("obs registry poisoned");
+        fams.iter()
+            .map(|(name, fam)| FamilySnapshot {
+                name: name.clone(),
+                help: fam.help.clone(),
+                kind: fam.kind,
+                series: fam
+                    .series
+                    .iter()
+                    .map(|(labels, cell)| {
+                        (labels.clone(), read_cell(cell))
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Sum a family across all its series, as the alert engine sees
+    /// it: counters and gauges sum their values, histograms sum their
+    /// observation counts. `None` if the family was never registered.
+    pub fn total(&self, name: &str) -> Option<f64> {
+        let fams = self.inner.lock().expect("obs registry poisoned");
+        let fam = fams.get(name)?;
+        let mut sum = 0.0;
+        for cell in fam.series.values() {
+            sum += match read_cell(cell) {
+                SeriesValue::Counter(v) => v as f64,
+                SeriesValue::Gauge(v) => v,
+                SeriesValue::Histogram { count, .. } => count as f64,
+            };
+        }
+        Some(sum)
+    }
+}
+
+fn read_cell(cell: &Cell) -> SeriesValue {
+    match cell {
+        Cell::Counter(c) => SeriesValue::Counter(c.load(Ordering::Relaxed)),
+        Cell::Gauge(g) => {
+            SeriesValue::Gauge(f64::from_bits(g.load(Ordering::Relaxed)))
+        }
+        Cell::Histogram(h) => {
+            let mut cum = 0u64;
+            let buckets = h
+                .buckets
+                .iter()
+                .map(|b| {
+                    cum += b.load(Ordering::Relaxed);
+                    cum
+                })
+                .collect();
+            SeriesValue::Histogram {
+                bounds: h.bounds.clone(),
+                buckets,
+                count: h.count.load(Ordering::Relaxed),
+                sum: f64::from_bits(h.sum_bits.load(Ordering::Relaxed)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_one_cell() {
+        let reg = Registry::new();
+        let a = reg.counter("kermit_t_total", "t", &[("tenant", "0")]);
+        let b = reg.counter("kermit_t_total", "t", &[("tenant", "0")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(reg.total("kermit_t_total"), Some(3.0));
+    }
+
+    #[test]
+    fn set_total_is_monotone() {
+        let reg = Registry::new();
+        let c = reg.counter("kermit_bridge_total", "b", &[]);
+        c.set_total(10);
+        c.set_total(7); // stale writer loses
+        assert_eq!(c.get(), 10);
+        c.set_total(12);
+        assert_eq!(c.get(), 12);
+    }
+
+    #[test]
+    fn labels_canonicalize_regardless_of_order() {
+        let reg = Registry::new();
+        let a = reg.counter("kermit_l_total", "l", &[("b", "2"), ("a", "1")]);
+        let b = reg.counter("kermit_l_total", "l", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        b.inc();
+        let fams = reg.gather();
+        assert_eq!(fams.len(), 1);
+        assert_eq!(fams[0].series.len(), 1);
+        assert_eq!(
+            fams[0].series[0].0,
+            vec![
+                ("a".to_string(), "1".to_string()),
+                ("b".to_string(), "2".to_string())
+            ]
+        );
+        assert_eq!(fams[0].series[0].1, SeriesValue::Counter(2));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_gather() {
+        let reg = Registry::new();
+        let h = reg.histogram("kermit_h", "h", &[], &[1.0, 5.0, 25.0]);
+        h.observe(0.5);
+        h.observe(3.0);
+        h.observe(50.0); // beyond last bound: only count/sum
+        match &reg.gather()[0].series[0].1 {
+            SeriesValue::Histogram {
+                buckets,
+                count,
+                sum,
+                ..
+            } => {
+                assert_eq!(buckets, &vec![1, 2, 2]);
+                assert_eq!(*count, 3);
+                assert_eq!(*sum, 53.5);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gauge_round_trips_f64() {
+        let reg = Registry::new();
+        let g = reg.gauge("kermit_g", "g", &[]);
+        g.set(-2.25);
+        assert_eq!(g.get(), -2.25);
+        assert_eq!(reg.total("kermit_g"), Some(-2.25));
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_conflict_panics() {
+        let reg = Registry::new();
+        reg.counter("kermit_k", "k", &[]);
+        reg.gauge("kermit_k", "k", &[]);
+    }
+}

@@ -1,0 +1,259 @@
+//! Decision tracing: ring-buffered spans for the decide → probe →
+//! measure → persist path, per tenant.
+//!
+//! The tuning plane opens a span when it makes a decision for an app
+//! (kind + label + sim time), closes it when the measurement lands
+//! (`measured`), dies (`failed`) or times out (`timed_out`), and
+//! appends persist notes when the knowledge plane flushes. Each tenant
+//! gets a bounded ring, so a long-running plane keeps the most recent
+//! `cap` spans per tenant and the memory bill stays flat.
+//!
+//! [`DecisionTrace::timeline_json`] exports the rings as deterministic
+//! JSON timelines — the per-tenant dashboard of label transitions,
+//! cache hits and probe spend.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use crate::util::json::Json;
+
+/// One decide→outcome span.
+#[derive(Debug, Clone)]
+pub struct TraceSpan {
+    pub tenant: u32,
+    pub app_id: u64,
+    /// Sim time the decision was made.
+    pub decided_at: f64,
+    /// Decision kind (`default` / `cache_hit` / `global_probe` /
+    /// `local_probe` / `degraded`).
+    pub kind: String,
+    /// Workload label the decision was made under.
+    pub label: String,
+    /// Sim time the span closed; `None` while in flight.
+    pub closed_at: Option<f64>,
+    /// `measured` / `failed` / `timed_out`; `None` while in flight.
+    pub outcome: Option<String>,
+    /// Measured duration, when one landed.
+    pub measured: Option<f64>,
+}
+
+/// Persist-side note (WAL flush, snapshot rotation), global to the
+/// plane rather than per tenant.
+#[derive(Debug, Clone)]
+pub struct PersistNote {
+    pub at: f64,
+    pub kind: String,
+    pub records: u64,
+}
+
+/// Per-tenant span rings plus a persist-note ring.
+pub struct DecisionTrace {
+    cap: usize,
+    tenants: BTreeMap<u32, VecDeque<TraceSpan>>,
+    persist: VecDeque<PersistNote>,
+}
+
+impl DecisionTrace {
+    /// `cap` bounds spans kept per tenant (and persist notes kept
+    /// overall); clamped to at least 1.
+    pub fn new(cap: usize) -> DecisionTrace {
+        DecisionTrace {
+            cap: cap.max(1),
+            tenants: BTreeMap::new(),
+            persist: VecDeque::new(),
+        }
+    }
+
+    /// Open a span for `(tenant, app_id)`. If the ring is full the
+    /// oldest span falls off.
+    pub fn open(
+        &mut self,
+        tenant: u32,
+        app_id: u64,
+        at: f64,
+        kind: &str,
+        label: &str,
+    ) {
+        let ring = self.tenants.entry(tenant).or_default();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(TraceSpan {
+            tenant,
+            app_id,
+            decided_at: at,
+            kind: kind.to_string(),
+            label: label.to_string(),
+            closed_at: None,
+            outcome: None,
+            measured: None,
+        });
+    }
+
+    /// Close the most recent open span for `(tenant, app_id)`. Spans
+    /// that already fell off the ring close silently — tracing never
+    /// errors into the decision path.
+    pub fn close(
+        &mut self,
+        tenant: u32,
+        app_id: u64,
+        at: f64,
+        outcome: &str,
+        measured: Option<f64>,
+    ) {
+        if let Some(ring) = self.tenants.get_mut(&tenant) {
+            if let Some(span) = ring
+                .iter_mut()
+                .rev()
+                .find(|s| s.app_id == app_id && s.outcome.is_none())
+            {
+                span.closed_at = Some(at);
+                span.outcome = Some(outcome.to_string());
+                span.measured = measured;
+            }
+        }
+    }
+
+    /// Record a persist-side event (WAL flush, snapshot rotation).
+    pub fn note_persist(&mut self, at: f64, kind: &str, records: u64) {
+        if self.persist.len() == self.cap {
+            self.persist.pop_front();
+        }
+        self.persist.push_back(PersistNote {
+            at,
+            kind: kind.to_string(),
+            records,
+        });
+    }
+
+    /// Spans currently held for one tenant, oldest first.
+    pub fn spans(&self, tenant: u32) -> Vec<&TraceSpan> {
+        self.tenants
+            .get(&tenant)
+            .map(|r| r.iter().collect())
+            .unwrap_or_default()
+    }
+
+    /// Count of open (unclosed) spans across all tenants.
+    pub fn open_spans(&self) -> usize {
+        self.tenants
+            .values()
+            .flat_map(|r| r.iter())
+            .filter(|s| s.outcome.is_none())
+            .count()
+    }
+
+    /// Export every ring as a deterministic JSON timeline:
+    /// `{"tenants": {"0": [span...]}, "persist": [note...]}`.
+    pub fn timeline_json(&self) -> Json {
+        let mut tenants = Json::obj();
+        for (t, ring) in &self.tenants {
+            let spans = ring
+                .iter()
+                .map(|s| {
+                    let mut j = Json::obj();
+                    j.set("app_id", Json::Num(s.app_id as f64))
+                        .set("decided_at", Json::Num(s.decided_at))
+                        .set("kind", Json::Str(s.kind.clone()))
+                        .set("label", Json::Str(s.label.clone()));
+                    if let Some(at) = s.closed_at {
+                        j.set("closed_at", Json::Num(at));
+                    }
+                    if let Some(o) = &s.outcome {
+                        j.set("outcome", Json::Str(o.clone()));
+                    }
+                    if let Some(m) = s.measured {
+                        j.set("measured", Json::Num(m));
+                    }
+                    j
+                })
+                .collect();
+            tenants.set(&t.to_string(), Json::Arr(spans));
+        }
+        let persist = self
+            .persist
+            .iter()
+            .map(|n| {
+                let mut j = Json::obj();
+                j.set("at", Json::Num(n.at))
+                    .set("kind", Json::Str(n.kind.clone()))
+                    .set("records", Json::Num(n.records as f64));
+                j
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("tenants", tenants).set("persist", Json::Arr(persist));
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_open_close_and_export() {
+        let mut tr = DecisionTrace::new(8);
+        tr.open(0, 1, 10.0, "global_probe", "w3");
+        tr.open(0, 2, 11.0, "cache_hit", "w3");
+        tr.close(0, 1, 25.0, "measured", Some(15.0));
+        tr.close(0, 2, 26.0, "failed", None);
+        let spans = tr.spans(0);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].outcome.as_deref(), Some("measured"));
+        assert_eq!(spans[0].measured, Some(15.0));
+        assert_eq!(spans[1].outcome.as_deref(), Some("failed"));
+        assert_eq!(tr.open_spans(), 0);
+        let j = tr.timeline_json().encode_pretty();
+        assert!(j.contains("global_probe"));
+        assert!(j.contains("\"w3\""));
+    }
+
+    #[test]
+    fn ring_is_bounded_per_tenant() {
+        let mut tr = DecisionTrace::new(3);
+        for app in 0..10u64 {
+            tr.open(1, app, app as f64, "default", "w0");
+        }
+        let spans = tr.spans(1);
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].app_id, 7);
+        // closing an evicted span is a no-op, not an error
+        tr.close(1, 0, 99.0, "measured", None);
+        assert_eq!(tr.open_spans(), 3);
+    }
+
+    #[test]
+    fn close_matches_latest_open_span_for_app() {
+        let mut tr = DecisionTrace::new(8);
+        tr.open(2, 7, 1.0, "global_probe", "w1");
+        tr.open(2, 7, 2.0, "local_probe", "w1"); // re-decided
+        tr.close(2, 7, 3.0, "measured", Some(1.5));
+        let spans = tr.spans(2);
+        assert!(spans[0].outcome.is_none(), "older span stays open");
+        assert_eq!(spans[1].outcome.as_deref(), Some("measured"));
+    }
+
+    #[test]
+    fn persist_notes_are_bounded_and_exported() {
+        let mut tr = DecisionTrace::new(2);
+        tr.note_persist(1.0, "wal_flush", 4);
+        tr.note_persist(2.0, "snapshot", 9);
+        tr.note_persist(3.0, "wal_flush", 2);
+        let j = tr.timeline_json().encode();
+        assert!(!j.contains("\"records\": 4") && !j.contains("\"records\":4"));
+        assert!(j.contains("snapshot"));
+    }
+
+    #[test]
+    fn timeline_is_deterministic() {
+        let build = || {
+            let mut tr = DecisionTrace::new(4);
+            tr.open(0, 1, 1.0, "default", "w0");
+            tr.open(3, 2, 2.0, "cache_hit", "w1");
+            tr.close(3, 2, 4.0, "measured", Some(2.0));
+            tr.timeline_json().encode_pretty()
+        };
+        assert_eq!(build(), build());
+    }
+}

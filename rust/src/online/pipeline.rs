@@ -13,6 +13,7 @@ use super::classifier::{UnknownClassifier, WindowClassifier};
 use super::context::{ContextStream, WorkloadContext, UNKNOWN};
 use super::predictor::{LabelPredictor, MarkovPredictor};
 use crate::features::{zero_analytic, AnalyticVec, ObservationWindow, ANALYTIC_WIDTH};
+use crate::obs::ObserveMetrics;
 use std::sync::{Arc, Mutex};
 
 /// The trait objects are `+ Send` so a whole pipeline can move to (or
@@ -46,6 +47,9 @@ pub struct OnlinePipeline {
     pub context: Arc<Mutex<ContextStream>>,
     /// cap on history length (memory bound)
     max_history: usize,
+    /// Telemetry handles (None when the plane runs uninstrumented;
+    /// each hit is a single relaxed atomic increment).
+    obs: Option<ObserveMetrics>,
 }
 
 impl OnlinePipeline {
@@ -64,7 +68,15 @@ impl OnlinePipeline {
             transition_log: Vec::new(),
             context,
             max_history: 4096,
+            obs: None,
         }
+    }
+
+    /// Install telemetry counters for the observe path (windows /
+    /// UNKNOWN / transition tallies). Counting never affects what the
+    /// pipeline publishes.
+    pub fn set_observe_metrics(&mut self, m: ObserveMetrics) {
+        self.obs = Some(m);
     }
 
     /// Install a trained TransitionClassifier (rate-of-change features).
@@ -135,6 +147,15 @@ impl OnlinePipeline {
         } else {
             self.classifier.classify(&self.cur_analytic)
         };
+        if let Some(m) = &self.obs {
+            m.windows.inc();
+            if changed {
+                m.transitions.inc();
+            }
+            if label == UNKNOWN {
+                m.unknown.inc();
+            }
+        }
         self.prev_analytic = self.cur_analytic;
         self.has_prev = true;
         if label != UNKNOWN

@@ -64,11 +64,7 @@ impl PluginStats {
     /// Cache hits as a fraction of all requests (0 when idle) — the
     /// recurring-workload economics observable.
     pub fn cache_hit_ratio(&self) -> f64 {
-        if self.requests == 0 {
-            0.0
-        } else {
-            self.cache_hits as f64 / self.requests as f64
-        }
+        crate::obs::ratio(self.cache_hits as f64, self.requests as f64)
     }
 
     /// Probes actually paid (global + local).
@@ -84,6 +80,65 @@ impl PluginStats {
             ChoiceKind::GlobalProbe => self.global_probes,
             ChoiceKind::LocalProbe => self.local_probes,
         }
+    }
+
+    /// Bridge this tenant's plug-in counters into a telemetry registry
+    /// under `kermit_plugin_*{tenant=...}`.
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, tenant: &str) {
+        let labels = [("tenant", tenant)];
+        let c = |name: &str, help: &str, v: usize| {
+            reg.counter(name, help, &labels).set_total(v as u64);
+        };
+        c(
+            "kermit_plugin_requests_total",
+            "Resource requests the plug-in served.",
+            self.requests,
+        );
+        c(
+            "kermit_plugin_defaults_total",
+            "Requests served the vendor-default configuration.",
+            self.defaults,
+        );
+        c(
+            "kermit_plugin_cache_hits_total",
+            "Requests served a WorkloadDB optimum (cache hit).",
+            self.cache_hits,
+        );
+        c(
+            "kermit_plugin_global_probes_total",
+            "Probes paid to global Explorer searches.",
+            self.global_probes,
+        );
+        c(
+            "kermit_plugin_local_probes_total",
+            "Probes paid to local (drift) Explorer searches.",
+            self.local_probes,
+        );
+        c(
+            "kermit_plugin_searches_completed_total",
+            "Search sessions that converged to an optimum.",
+            self.searches_completed,
+        );
+        c(
+            "kermit_plugin_searches_abandoned_total",
+            "Searches abandoned to the cross-tenant dedup.",
+            self.searches_abandoned,
+        );
+        c(
+            "kermit_plugin_searches_failed_total",
+            "Searches written off without a trusted optimum.",
+            self.searches_failed,
+        );
+        c(
+            "kermit_plugin_probes_failed_total",
+            "Probe measurements that came back failed.",
+            self.probes_failed,
+        );
+        c(
+            "kermit_plugin_backoffs_total",
+            "Requests served the safe fallback inside a backoff window.",
+            self.backoffs,
+        );
     }
 }
 

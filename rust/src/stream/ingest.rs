@@ -190,6 +190,63 @@ pub struct TenantIngestStats {
 }
 
 impl TenantIngestStats {
+    /// Bridge this tenant's ingest counters into a telemetry registry
+    /// under `kermit_ingest_*{tenant=...}` (`resident` and
+    /// `peak_resident` export as gauges, the rest as counters).
+    pub fn export_metrics(&self, reg: &crate::obs::Registry, tenant: &str) {
+        let labels = [("tenant", tenant)];
+        let c = |name: &str, help: &str, v: u64| {
+            reg.counter(name, help, &labels).set_total(v);
+        };
+        c(
+            "kermit_ingest_submitted_total",
+            "Samples submitted to the ingest front-end.",
+            self.submitted,
+        );
+        c(
+            "kermit_ingest_accepted_total",
+            "Samples drained into the batcher.",
+            self.accepted,
+        );
+        c(
+            "kermit_ingest_shed_total",
+            "Samples shed by the overflow policy.",
+            self.shed,
+        );
+        c(
+            "kermit_ingest_blocked_total",
+            "Times a producer blocked on a full queue.",
+            self.blocked,
+        );
+        c(
+            "kermit_ingest_deduped_total",
+            "Duplicate deliveries collapsed by the reorder buffer.",
+            self.deduped,
+        );
+        c(
+            "kermit_ingest_gaps_skipped_total",
+            "Sequence numbers written off as lost in transit.",
+            self.gaps_skipped,
+        );
+        c(
+            "kermit_ingest_closed_rejects_total",
+            "Samples rejected because the front-end was closed.",
+            self.closed_rejects,
+        );
+        reg.gauge(
+            "kermit_ingest_resident",
+            "Samples currently queued or parked in the reorder buffer.",
+            &labels,
+        )
+        .set(self.resident as f64);
+        reg.gauge(
+            "kermit_ingest_peak_resident",
+            "High-water mark of queued samples.",
+            &labels,
+        )
+        .set(self.peak_resident as f64);
+    }
+
     fn absorb(&mut self, o: &TenantIngestStats) {
         self.submitted += o.submitted;
         self.accepted += o.accepted;

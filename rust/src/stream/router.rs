@@ -31,6 +31,7 @@ use crate::linalg::engine::Engine;
 use crate::monitor::{MonitorConfig, WindowAggregator};
 use crate::online::classifier::WindowClassifier;
 use crate::online::context::{ContextBus, ContextStream, WorkloadContext};
+use crate::obs::{ObserveMetrics, Registry};
 use crate::online::OnlinePipeline;
 use crate::workloadgen::Sample;
 use std::collections::BTreeMap;
@@ -215,19 +216,48 @@ pub struct StreamRouter {
     pub config: RouterConfig,
     shards: BTreeMap<TenantId, TenantShard>,
     bus: ContextBus,
+    /// When set, every shard's pipeline carries per-tenant
+    /// [`ObserveMetrics`] registered here (shards added later are
+    /// instrumented on creation).
+    telemetry: Option<Registry>,
 }
 
 impl StreamRouter {
     pub fn new(config: RouterConfig) -> StreamRouter {
         let bus = ContextBus::new(config.context_cap);
-        StreamRouter { config, shards: BTreeMap::new(), bus }
+        StreamRouter {
+            config,
+            shards: BTreeMap::new(),
+            bus,
+            telemetry: None,
+        }
+    }
+
+    /// Instrument every pipeline shard (current and future) with
+    /// per-tenant observe counters in `reg`. The handles are plain
+    /// atomics, safe to bump from pool workers during a fanned-out
+    /// tick; observing never changes what shards publish.
+    pub fn enable_telemetry(&mut self, reg: &Registry) {
+        for (t, shard) in self.shards.iter_mut() {
+            shard
+                .pipeline
+                .set_observe_metrics(ObserveMetrics::register(reg, &t.0.to_string()));
+        }
+        self.telemetry = Some(reg.clone());
     }
 
     /// Ensure tenant `t` has a shard (idempotent) and return it.
     pub fn add_tenant(&mut self, t: TenantId) -> &mut TenantShard {
         if !self.shards.contains_key(&t) {
             let ctx = self.bus.stream(t);
-            self.shards.insert(t, TenantShard::new(t, &self.config, ctx));
+            let mut shard = TenantShard::new(t, &self.config, ctx);
+            if let Some(reg) = &self.telemetry {
+                shard.pipeline.set_observe_metrics(ObserveMetrics::register(
+                    reg,
+                    &t.0.to_string(),
+                ));
+            }
+            self.shards.insert(t, shard);
         }
         self.shards.get_mut(&t).unwrap()
     }

@@ -269,6 +269,51 @@ impl IngestSupervisor {
         )
     }
 
+    /// Bridge supervisor health into a telemetry registry:
+    /// transition counters plus instantaneous Degraded / Healing
+    /// tenant-count gauges (what the `tenant_degraded` alert watches).
+    pub fn export_metrics(&self, reg: &crate::obs::Registry) {
+        reg.counter(
+            "kermit_stream_delivery_retries_total",
+            "No-progress drains that triggered a scheduled retry.",
+            &[],
+        )
+        .set_total(self.delivery_retries);
+        reg.counter(
+            "kermit_stream_degraded_events_total",
+            "Healthy-to-Degraded tenant transitions.",
+            &[],
+        )
+        .set_total(self.degraded_events);
+        reg.counter(
+            "kermit_stream_healed_total",
+            "Healing-to-Healthy tenant transitions (full recoveries).",
+            &[],
+        )
+        .set_total(self.healed);
+        let mut degraded = 0u64;
+        let mut healing = 0u64;
+        for (_, h) in self.healths() {
+            match h {
+                TenantHealth::Degraded => degraded += 1,
+                TenantHealth::Healing => healing += 1,
+                TenantHealth::Healthy => {}
+            }
+        }
+        reg.gauge(
+            "kermit_stream_tenants_degraded",
+            "Tenants currently held in the Degraded state.",
+            &[],
+        )
+        .set(degraded as f64);
+        reg.gauge(
+            "kermit_stream_tenants_healing",
+            "Tenants currently held in the Healing state.",
+            &[],
+        )
+        .set(healing as f64);
+    }
+
     /// Every tenant currently not Healthy, in id order.
     pub fn impaired(&self) -> Vec<(TenantId, TenantHealth)> {
         self.watches

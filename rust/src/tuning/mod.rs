@@ -37,6 +37,7 @@ use crate::explorer::ExplorerConfig;
 use crate::knowledge::persist::{
     KnowledgeStore, RecoveryReport, SnapshotCodec, WalRecord,
 };
+use crate::obs::{DecisionTrace, Registry};
 use crate::online::{
     ChoiceKind, KermitPlugin, PluginStats, ResiliencePolicy, UNKNOWN,
 };
@@ -245,6 +246,31 @@ pub struct TuningPlane {
     /// Persistence failures absorbed (full disk, EPERM): the plane
     /// degrades to in-memory behaviour, it never panics mid-decision.
     pub persist_errors: usize,
+    /// Decision tracing (None = off, zero overhead). Spans cover the
+    /// decide → probe → measure path per tenant; persist flushes are
+    /// noted globally.
+    trace: Option<DecisionTrace>,
+    /// Last decision time seen — the timestamp persist notes carry
+    /// (persistence entry points have no sim clock of their own).
+    trace_clock: f64,
+}
+
+/// Stable span-kind names for decision tracing.
+fn choice_kind_str(kind: ChoiceKind) -> &'static str {
+    match kind {
+        ChoiceKind::Default => "default",
+        ChoiceKind::CacheHit => "cache_hit",
+        ChoiceKind::GlobalProbe => "global_probe",
+        ChoiceKind::LocalProbe => "local_probe",
+    }
+}
+
+fn label_str(label: u32) -> String {
+    if label == UNKNOWN {
+        "UNKNOWN".to_string()
+    } else {
+        label.to_string()
+    }
 }
 
 impl TuningPlane {
@@ -270,6 +296,90 @@ impl TuningPlane {
             events_since_flush: 0,
             flushes_since_snapshot: 0,
             persist_errors: 0,
+            trace: None,
+            trace_clock: 0.0,
+        }
+    }
+
+    /// Enable telemetry: the coordinator's router shards get
+    /// per-tenant observe counters registered in `reg`, and
+    /// [`TuningPlane::scrape`] bridges everything else on demand.
+    /// Counting never changes a decision.
+    pub fn enable_telemetry(&mut self, reg: &Registry) {
+        self.coord.enable_telemetry(reg);
+    }
+
+    /// Enable decision tracing with a per-tenant ring of `cap` spans.
+    pub fn enable_tracing(&mut self, cap: usize) {
+        self.trace = Some(DecisionTrace::new(cap));
+    }
+
+    /// The decision trace, when tracing is enabled.
+    pub fn decision_trace(&self) -> Option<&DecisionTrace> {
+        self.trace.as_ref()
+    }
+
+    /// Bridge the plane's counters — per-tenant plug-in stats, tuning
+    /// loop-health counters, the coordinator/supervisor/ingest layers
+    /// underneath, and the durable store when attached — into `reg`.
+    /// Everything exported here is driven by the deterministic sim, so
+    /// chaos scenarios can evaluate alert rules over it reproducibly.
+    /// Deliberately NOT exported: `linalg::pool` stats, which are
+    /// process-global — bridge them with `PoolStats::export_metrics`
+    /// at whatever scope makes sense for the caller.
+    pub fn scrape(&self, reg: &Registry) {
+        for (t, tt) in &self.tenants {
+            tt.plugin.stats.export_metrics(reg, &t.0.to_string());
+        }
+        let c = |name: &str, help: &str, v: usize| {
+            reg.counter(name, help, &[]).set_total(v as u64);
+        };
+        c(
+            "kermit_tuning_cross_tenant_hits_total",
+            "Cache hits served with an optimum another tenant paid for.",
+            self.cross_tenant_hits,
+        );
+        c(
+            "kermit_tuning_windows_observed_total",
+            "Windows observed across all ticks driven by this plane.",
+            self.windows_observed,
+        );
+        c(
+            "kermit_tuning_probes_timed_out_total",
+            "Probe decisions expired by the decision timeout.",
+            self.probes_timed_out,
+        );
+        c(
+            "kermit_tuning_probe_jobs_failed_total",
+            "Probe decisions whose job died before completing.",
+            self.probe_jobs_failed,
+        );
+        c(
+            "kermit_tuning_degraded_decisions_total",
+            "Decisions served through the degraded (impaired-ingest) path.",
+            self.degraded_decisions,
+        );
+        c(
+            "kermit_persist_errors_total",
+            "Persistence failures absorbed (store kept degraded, not down).",
+            self.persist_errors,
+        );
+        // one quarantine ledger across both quarantine paths: the live
+        // poison detector and the off-line integrity audit
+        c(
+            "kermit_knowledge_quarantines_total",
+            "Knowledge-plane entries quarantined (poison detector + audit).",
+            self.labels_quarantined + self.coord.db_quarantined,
+        );
+        reg.gauge(
+            "kermit_tuning_pending_decisions",
+            "Decisions awaiting completion across all tenants.",
+            &[],
+        )
+        .set(self.pending_decisions() as f64);
+        self.coord.export_metrics(reg);
+        if let Some(store) = &self.store {
+            store.stats.export_metrics(reg);
         }
     }
 
@@ -318,6 +428,9 @@ impl TuningPlane {
         if journal.is_empty() {
             return;
         }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.note_persist(self.trace_clock, "wal_flush", journal.len() as u64);
+        }
         let store = self.store.as_mut().unwrap();
         if store.append_all(&journal).is_err() {
             self.persist_errors += 1;
@@ -329,12 +442,15 @@ impl TuningPlane {
         self.persist_flush();
         self.flushes_since_snapshot = 0;
         let Some(store) = self.store.as_mut() else { return };
-        let failed = {
+        let (failed, entries) = {
             let db = self.coord.db.read().unwrap();
-            store.snapshot(&db).is_err()
+            (store.snapshot(&db).is_err(), db.len() as u64)
         };
         if failed {
             self.persist_errors += 1;
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.note_persist(self.trace_clock, "snapshot", entries);
         }
     }
 
@@ -436,6 +552,7 @@ impl TuningPlane {
         // probes — a probe measured through a broken transport would
         // poison the knowledge plane. Probing re-arms by itself once
         // the supervisor scores the tenant healthy again.
+        self.trace_clock = now;
         if self.coord.ingest_impaired(t) {
             let label = self.coord.last_known_label(t).unwrap_or(UNKNOWN);
             self.degraded_decisions += 1;
@@ -444,6 +561,12 @@ impl TuningPlane {
             tt.choices.push(kind);
             if tt.choices.len() > CHOICE_LOG_CAP {
                 tt.choices.drain(..CHOICE_LOG_CAP / 2);
+            }
+            if let Some(tr) = self.trace.as_mut() {
+                // no measurement is coming back on this path: the span
+                // opens and closes at the decision edge
+                tr.open(t.0, app_id, now, "degraded", &label_str(label));
+                tr.close(t.0, app_id, now, "served_stale", None);
             }
             self.persist_tick();
             return (config, kind);
@@ -508,6 +631,13 @@ impl TuningPlane {
         if tt.choices.len() > CHOICE_LOG_CAP {
             tt.choices.drain(..CHOICE_LOG_CAP / 2);
         }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.open(t.0, app_id, now, choice_kind_str(kind), &label_str(label));
+            if matches!(kind, ChoiceKind::Default) {
+                // defaults never get a completion edge routed back
+                tr.close(t.0, app_id, now, "served", None);
+            }
+        }
         self.persist_tick();
         (config, kind)
     }
@@ -553,6 +683,17 @@ impl TuningPlane {
                 }
             }
         }
+        if let Some(tr) = self.trace.as_mut() {
+            // the sim clock isn't on this edge; decide-time plus the
+            // measured duration is the deterministic completion stamp
+            tr.close(
+                t.0,
+                app_id,
+                p.decided_at + duration,
+                "measured",
+                Some(duration),
+            );
+        }
         if let Some(label) = measured {
             // paid probes go to the WAL as an audit trail (replay is a
             // state no-op — sessions are in-memory); appended directly
@@ -587,6 +728,9 @@ impl TuningPlane {
             if let PendingKind::Probe { label } = p.kind {
                 tt.plugin.fail_probe(label);
                 self.probes_timed_out += 1;
+            }
+            if let Some(tr) = self.trace.as_mut() {
+                tr.close(t.0, id, now, "timed_out", None);
             }
         }
     }
@@ -772,7 +916,7 @@ impl TenantRmPlugin for TuningPlane {
         }
     }
 
-    fn on_app_fail(&mut self, t: TenantId, app_id: u64, _now: f64) {
+    fn on_app_fail(&mut self, t: TenantId, app_id: u64, now: f64) {
         // the job died (preemption without re-grant, or tenant churn):
         // no measurement is coming — resolve the decision NOW so the
         // plug-in's session sees a failed probe instead of wedging
@@ -781,6 +925,9 @@ impl TenantRmPlugin for TuningPlane {
                 if let PendingKind::Probe { label } = p.kind {
                     tt.plugin.fail_probe(label);
                     self.probe_jobs_failed += 1;
+                }
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.close(t.0, app_id, now, "failed", None);
                 }
             }
         }

@@ -1,0 +1,194 @@
+//! Integration pins for the telemetry plane:
+//!
+//! 1. the Prometheus renderer is pinned byte-for-byte against a golden
+//!    exposition file (ordering, escaping, histogram layout — any
+//!    format drift fails loudly instead of breaking scrapers quietly);
+//! 2. rendering is deterministic and sorted regardless of
+//!    registration order;
+//! 3. histogram buckets render cumulatively and the `+Inf` bucket
+//!    equals `_count`;
+//! 4. the shared NaN-safe ratio helper backs every hit-ratio surface;
+//! 5. end to end: a real multi-tenant tuning-plane run with telemetry
+//!    and tracing enabled scrapes into a registry whose exposition the
+//!    strict parser accepts, with live series from every layer — and
+//!    the chaos alert catalog stays silent on the healthy run.
+
+use kermit::experiments::tuning_plane::{plane_config, schedules, sim_config};
+use kermit::obs::{
+    chaos_rules, parse_prometheus, ratio, render_prometheus, snapshot_json,
+    AlertEngine, Registry,
+};
+use kermit::online::PluginStats;
+use kermit::simcluster::multi::MultiClusterEngine;
+use kermit::simcluster::rm::ResourceManager;
+use kermit::tuning::TuningPlane;
+
+/// The registry the golden file pins. Values are chosen to be exact in
+/// binary floating point so the rendering is stable everywhere.
+fn golden_registry() -> Registry {
+    let reg = Registry::new();
+    reg.counter("kermit_demo_requests_total", "Requests served.", &[("tenant", "0")])
+        .add(3);
+    reg.counter("kermit_demo_requests_total", "Requests served.", &[("tenant", "1")])
+        .add(5);
+    reg.gauge("kermit_demo_pending", "Pending items.", &[]).set(2.5);
+    let h = reg.histogram(
+        "kermit_demo_latency_seconds",
+        "Latency.",
+        &[],
+        &[1.0, 5.0, 25.0],
+    );
+    h.observe(0.5);
+    h.observe(3.0);
+    h.observe(50.0);
+    reg.counter("kermit_demo_weird_total", "Weird labels.", &[("path", "a\"b\\c\nd")])
+        .inc();
+    reg
+}
+
+#[test]
+fn exposition_matches_the_golden_file() {
+    let rendered = render_prometheus(&golden_registry());
+    let golden = include_str!("golden/exposition.prom");
+    assert_eq!(
+        rendered, golden,
+        "render_prometheus drifted from tests/golden/exposition.prom; \
+         if the format change is intentional, update the golden file"
+    );
+}
+
+#[test]
+fn families_and_series_render_sorted_regardless_of_registration_order() {
+    // register in reverse name order, series in reverse label order
+    let reg = Registry::new();
+    reg.counter("kermit_z_total", "z", &[]).inc();
+    reg.counter("kermit_a_total", "a", &[("tenant", "9")]).inc();
+    reg.counter("kermit_a_total", "a", &[("tenant", "1")]).inc();
+    let text = render_prometheus(&reg);
+    let a = text.find("# TYPE kermit_a_total").unwrap();
+    let z = text.find("# TYPE kermit_z_total").unwrap();
+    assert!(a < z, "families not name-sorted:\n{text}");
+    let t1 = text.find("tenant=\"1\"").unwrap();
+    let t9 = text.find("tenant=\"9\"").unwrap();
+    assert!(t1 < t9, "series not label-sorted:\n{text}");
+    // and twice in a row is byte-identical
+    assert_eq!(text, render_prometheus(&reg));
+}
+
+#[test]
+fn histogram_buckets_are_cumulative_and_inf_equals_count() {
+    let text = render_prometheus(&golden_registry());
+    let bucket_of = |le: &str| -> f64 {
+        let needle = format!("kermit_demo_latency_seconds_bucket{{le=\"{le}\"}} ");
+        let line = text
+            .lines()
+            .find(|l| l.starts_with(&needle))
+            .unwrap_or_else(|| panic!("no bucket le={le}:\n{text}"));
+        line.rsplit(' ').next().unwrap().parse().unwrap()
+    };
+    let (b1, b5, b25, binf) = (
+        bucket_of("1"),
+        bucket_of("5"),
+        bucket_of("25"),
+        bucket_of("+Inf"),
+    );
+    assert!(b1 <= b5 && b5 <= b25 && b25 <= binf, "not cumulative");
+    assert_eq!((b1, b5, b25, binf), (1.0, 2.0, 2.0, 3.0));
+    let count_line = text
+        .lines()
+        .find(|l| l.starts_with("kermit_demo_latency_seconds_count "))
+        .unwrap();
+    let count: f64 = count_line.rsplit(' ').next().unwrap().parse().unwrap();
+    assert_eq!(binf, count, "+Inf bucket != _count");
+    // the strict parser agrees
+    parse_prometheus(&text).expect("golden exposition parses strictly");
+}
+
+#[test]
+fn hit_ratios_share_the_nan_safe_helper() {
+    assert_eq!(ratio(0.0, 0.0), 0.0);
+    assert_eq!(ratio(3.0, 4.0), 0.75);
+    assert_eq!(ratio(1.0, f64::NAN), 0.0);
+    assert_eq!(ratio(f64::INFINITY, 2.0), 0.0);
+    // the zero-request plug-in reports 0.0, not NaN
+    let stats = PluginStats::default();
+    assert_eq!(stats.cache_hit_ratio(), 0.0);
+}
+
+/// End to end: telemetry and tracing on a real (small) multi-tenant
+/// run. The scrape must produce a strictly valid exposition with live
+/// series from the stream, plug-in, tuning and coordinator layers;
+/// the decision trace must hold closed spans; the chaos alert catalog
+/// must stay silent; and none of it may disturb the run itself.
+#[test]
+fn telemetry_scrapes_a_live_plane_into_valid_exposition() {
+    let seed = 11;
+    let mut plane = TuningPlane::new(plane_config(seed, 8));
+    let reg = Registry::new();
+    plane.enable_telemetry(&reg);
+    plane.enable_tracing(256);
+
+    let scheds = schedules(seed, 3, 8, &[0, 5]);
+    let mut engine = MultiClusterEngine::new(
+        ResourceManager::default_cluster(),
+        sim_config(),
+        seed,
+    );
+    let mut jobs_total = 0;
+    for (t, jobs) in &scheds {
+        plane.ensure_tenant(*t);
+        engine.push_jobs(*t, jobs);
+        jobs_total += jobs.len();
+    }
+    let sim = engine.run(&mut plane);
+    plane.drain();
+    plane.reconcile(sim.makespan + plane.resilience.decision_timeout + 1.0);
+    plane.scrape(&reg);
+
+    // the exposition is strictly valid and carries every layer
+    let text = render_prometheus(&reg);
+    let fams = parse_prometheus(&text).expect("live exposition parses");
+    for prefix in ["kermit_stream_", "kermit_plugin_", "kermit_tuning_", "kermit_coordinator_"] {
+        assert!(
+            fams.iter().any(|f| f.name.starts_with(prefix)),
+            "no {prefix} family in:\n{text}"
+        );
+    }
+    // Algorithm-1 requests: one per job, summed over tenants
+    assert_eq!(
+        reg.total("kermit_plugin_requests_total"),
+        Some(jobs_total as f64),
+        "plug-in request counter diverged from the workload"
+    );
+    // the observe hot path really counted windows
+    let windows = reg.total("kermit_stream_windows_observed_total").unwrap();
+    assert!(windows > 0.0, "no windows counted:\n{text}");
+
+    // scraping is idempotent: a second scrape changes nothing, so the
+    // JSON snapshot is deterministic
+    let snap_a = snapshot_json(&reg).encode_pretty();
+    plane.scrape(&reg);
+    let snap_b = snapshot_json(&reg).encode_pretty();
+    assert_eq!(snap_a, snap_b, "scrape is not idempotent");
+
+    // decision tracing captured the loop: spans opened, and completed
+    // decisions closed with a measurement
+    let trace = plane.decision_trace().expect("tracing enabled");
+    assert_eq!(trace.open_spans(), 0, "spans left open after reconcile");
+    let timeline = trace.timeline_json().encode();
+    assert!(timeline.contains("\"tenants\""), "{timeline}");
+    let measured = scheds.iter().any(|(t, _)| {
+        trace
+            .spans(t.0)
+            .iter()
+            .any(|s| s.outcome.as_deref() == Some("measured"))
+    });
+    assert!(measured, "no measured span in any tenant timeline");
+
+    // a healthy run never pages: two alert evaluations over the final
+    // registry state produce no events
+    let mut alerts = AlertEngine::new(chaos_rules());
+    assert!(alerts.eval(&reg, 1.0).is_empty());
+    assert!(alerts.eval(&reg, 2.0).is_empty());
+    assert!(alerts.active().is_empty());
+}
